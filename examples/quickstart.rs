@@ -1,0 +1,40 @@
+//! Quickstart: one frame through the full Opto-ViT stack.
+//!
+//! ```bash
+//! make artifacts            # once: lower the models to HLO artifacts
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! The flow mirrors the library README: synthesize a sensor frame, run
+//! MGNet to get a patch mask, prune, run the backbone on the pruned
+//! sequence, and ask the architecture model what the frame costs on the
+//! photonic accelerator.
+
+use optovit::coordinator::pipeline::{Pipeline, PipelineConfig};
+use optovit::sensor::VideoSource;
+use optovit::util::table::{si_energy, si_time};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A synthetic near-sensor video feed (96x96 RGB, moving shapes).
+    let mut sensor = VideoSource::new(96, 2, 7);
+
+    // 2. The serving pipeline: MGNet -> RoI mask -> bucket router -> ViT.
+    let mut pipeline = Pipeline::new(PipelineConfig::tiny_96(), "artifacts")?;
+    println!("compiling artifacts (one-time)...");
+    pipeline.warmup()?;
+
+    // 3. One frame, end to end.
+    let frame = sensor.next_frame();
+    let gt = frame.gt_mask(16);
+    let result = pipeline.process_frame(&frame)?;
+
+    println!("\nframe {}:", result.frame_index);
+    println!("  kept patches      {} / 36 (bucket {})", result.mask.kept(), result.bucket);
+    println!("  pixel skip        {:.0}%", result.mask.skip_ratio() * 100.0);
+    println!("  mask IoU vs GT    {:.3}", result.mask.iou(&gt));
+    println!("  predicted class   {} (label {})", result.predicted_class(), frame.label);
+    println!("  host latency      {}", si_time(result.latency_s));
+    println!("  modeled energy    {}/frame on the photonic core", si_energy(result.modeled_energy_j));
+    println!("  modeled KFPS/W    {:.1}", 1.0 / result.modeled_energy_j / 1000.0);
+    Ok(())
+}

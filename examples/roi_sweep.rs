@@ -1,0 +1,41 @@
+//! RoI threshold sweep: how the MGNet sigmoid threshold `t_reg` trades
+//! mask quality (IoU vs ground truth), pixel skip ratio, accelerator
+//! energy, and end-to-end accuracy — the serving-time knob the paper
+//! leaves to the deployment.
+//!
+//! ```bash
+//! make artifacts
+//! cargo run --release --example roi_sweep -- [frames]
+//! ```
+
+use optovit::coordinator::pipeline::{serve, Pipeline, PipelineConfig};
+use optovit::util::table::{si_energy, Table};
+
+fn main() -> anyhow::Result<()> {
+    let frames: u64 =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(60);
+
+    println!("== t_reg sweep ({frames} frames each) ==\n");
+    let mut t = Table::new(vec![
+        "t_reg", "kept/36", "skip%", "mask IoU", "top-1", "energy/frame", "KFPS/W",
+    ]);
+    for thr in [0.3f32, 0.4, 0.5, 0.6, 0.7, 0.8] {
+        let mut cfg = PipelineConfig::tiny_96();
+        cfg.region_threshold = thr;
+        let mut pipeline = Pipeline::new(cfg, "artifacts")?;
+        let r = serve(&mut pipeline, 1234, 2, frames, 4)?;
+        t.row(vec![
+            format!("{thr:.1}"),
+            format!("{:.1}", r.mean_kept_patches),
+            format!("{:.0}%", (1.0 - r.mean_kept_patches / 36.0) * 100.0),
+            format!("{:.3}", r.mean_mask_iou),
+            format!("{:.3}", r.top1_accuracy),
+            si_energy(r.mean_energy_j),
+            format!("{:.1}", r.modeled_kfps_per_watt),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\nhigher t_reg -> more aggressive pruning -> more energy saved, until the");
+    println!("mask starts eating object patches and accuracy falls off.");
+    Ok(())
+}

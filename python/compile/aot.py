@@ -1,0 +1,125 @@
+"""AOT export: lower the L2 models to HLO-text artifacts for the rust runtime.
+
+Interchange is **HLO text** — not ``lowered.compile()`` nor a serialized
+``HloModuleProto``: jax ≥ 0.5 emits protos with 64-bit instruction ids that
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser on the rust side reassigns ids (see /opt/xla-example/README.md).
+
+Exports (artifact names are the contract with
+``rust/src/coordinator/pipeline.rs``):
+
+- ``mgnet_96``                    — MGNet region scorer, briefly trained on
+                                    the synthetic moving-shapes workload.
+- ``vit_tiny_96_n{9,18,27,36}``   — QAT backbone at each RoI bucket size,
+                                    briefly trained on the same workload.
+- ``vit_tiny_96_photonic_n36``    — backbone with every linear routed
+                                    through the L1 pallas optical-core
+                                    kernel (crosstalk + ADC readout).
+
+Trained parameters are also saved to ``<out>/params_*.npz`` so the
+Table I-III experiment analogues reuse them.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--no-train] [--quick]``
+"""
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+from .kernels import PhotonicSpec, crosstalk_matrix
+
+BUCKETS_96 = (9, 18, 27, 36)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side unwraps with to_tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export(fn, example_args, path):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)/1e6:.2f} MB)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--no-train", action="store_true",
+                    help="export with random weights (fast; serving metrics "
+                    "like mask IoU become meaningless)")
+    ap.add_argument("--quick", action="store_true",
+                    help="shorter training (CI-sized)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    t0 = time.time()
+
+    steps_mg = 0 if args.no_train else (120 if args.quick else 400)
+    steps_bb = 0 if args.no_train else (120 if args.quick else 400)
+
+    # ---------------- MGNet ----------------
+    mg_cfg = M.mgnet_config(96)
+    if steps_mg:
+        print(f"training MGNet ({steps_mg} steps)...")
+        mg_params = T.train_mgnet(mg_cfg, steps=steps_mg, seed=args.seed)
+        miou = T.mgnet_miou(mg_params, mg_cfg)
+        print(f"  MGNet mIoU vs GT masks: {miou:.3f}")
+    else:
+        mg_params = M.init_mgnet(jax.random.PRNGKey(args.seed), mg_cfg)
+    M.save_params(os.path.join(args.out_dir, "params_mgnet_96.npz"), mg_params)
+
+    patches_spec = jax.ShapeDtypeStruct((mg_cfg["num_patches"], mg_cfg["patch_dim"]), jnp.float32)
+    export(M.make_mgnet_fn(mg_params, mg_cfg, mode="quant"), (patches_spec,),
+           os.path.join(args.out_dir, "mgnet_96.hlo.txt"))
+
+    # ---------------- Backbone (tiny @ 96) ----------------
+    bb_cfg = M.vit_config("tiny", 96, 10)
+    if steps_bb:
+        print(f"training ViT-Tiny backbone ({steps_bb} steps, QAT)...")
+        bb_params = T.train_backbone(bb_cfg, steps=steps_bb, seed=args.seed)
+        acc = T.backbone_accuracy(bb_params, bb_cfg, frames=64)
+        print(f"  backbone top-1 (synthetic shapes): {acc:.3f}")
+    else:
+        bb_params = M.init_vit(jax.random.PRNGKey(args.seed + 1), bb_cfg)
+    M.save_params(os.path.join(args.out_dir, "params_vit_tiny_96.npz"), bb_params)
+
+    for bucket in BUCKETS_96:
+        specs = (
+            jax.ShapeDtypeStruct((bucket, bb_cfg["patch_dim"]), jnp.float32),
+            jax.ShapeDtypeStruct((bucket,), jnp.float32),
+            jax.ShapeDtypeStruct((bucket,), jnp.float32),
+        )
+        export(M.make_backbone_fn(bb_params, bb_cfg, mode="quant"), specs,
+               os.path.join(args.out_dir, f"vit_tiny_96_n{bucket}.hlo.txt"))
+
+    # ---------------- Photonic-kernel flavor (full bucket) ----------------
+    spec = PhotonicSpec(crosstalk=crosstalk_matrix())
+    full = bb_cfg["num_patches"]
+    specs = (
+        jax.ShapeDtypeStruct((full, bb_cfg["patch_dim"]), jnp.float32),
+        jax.ShapeDtypeStruct((full,), jnp.float32),
+        jax.ShapeDtypeStruct((full,), jnp.float32),
+    )
+    export(M.make_backbone_fn(bb_params, bb_cfg, mode="photonic", spec=spec), specs,
+           os.path.join(args.out_dir, f"vit_tiny_96_photonic_n{full}.hlo.txt"))
+
+    print(f"artifacts complete in {time.time()-t0:.0f}s -> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

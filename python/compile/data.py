@@ -1,0 +1,158 @@
+"""Synthetic vision workloads (python mirror of ``rust/src/sensor.rs``).
+
+Scenes of moving geometric shapes over low-frequency backgrounds with exact
+ground-truth boxes. Used at build time to (briefly) train MGNet and the
+QAT backbone, and by the Table I-III experiment analogues. The distribution
+matches the rust sensor (same shape vocabulary, size ranges, noise level),
+so weights trained here are meaningful for frames generated there.
+"""
+
+import numpy as np
+
+SHAPES = ("square", "disc", "cross")
+NUM_CLASSES = len(SHAPES)
+
+
+def _cover_mask(shape, size, cx, cy, half):
+    """Boolean (size, size) coverage mask for one object."""
+    yy, xx = np.mgrid[0:size, 0:size]
+    dx = xx - cx
+    dy = yy - cy
+    if shape == "square":
+        return (np.abs(dx) <= half) & (np.abs(dy) <= half)
+    if shape == "disc":
+        return dx * dx + dy * dy <= half * half
+    # cross
+    return ((np.abs(dx) <= half / 3.0) & (np.abs(dy) <= half)) | (
+        (np.abs(dy) <= half / 3.0) & (np.abs(dx) <= half)
+    )
+
+
+class Scene:
+    """One scene of moving objects; renders frames with ground truth."""
+
+    def __init__(self, size, num_objects, rng):
+        self.size = size
+        self.rng = rng
+        self.objects = []
+        for _ in range(num_objects):
+            half = rng.uniform(size * 0.12, size * 0.24)
+            shape_idx = int(rng.integers(0, 3))
+            # Class-correlated hue + jitter (mirrors rust/src/sensor.rs):
+            # each class has a dominant channel, so the classification task
+            # carries both shape and color cues — learnable within the
+            # few-hundred-step build-time budget (DESIGN.md §Deviations).
+            color = rng.uniform(0.05, 0.35, size=3).astype(np.float32)
+            color[shape_idx] = rng.uniform(0.7, 1.0)
+            self.objects.append(
+                dict(
+                    shape=SHAPES[shape_idx],
+                    cx=rng.uniform(half, size - half),
+                    cy=rng.uniform(half, size - half),
+                    half=half,
+                    vx=rng.uniform(-2.5, 2.5),
+                    vy=rng.uniform(-2.5, 2.5),
+                    color=color,
+                )
+            )
+        gx, gy = rng.uniform(0.0, 0.15, size=2)
+        yy, xx = np.mgrid[0:size, 0:size]
+        bg = (0.1 + gx * xx / size + gy * yy / size).astype(np.float32)
+        self.background = np.stack([bg, bg, bg])  # (3, H, W)
+
+    def step(self):
+        """Advance the physics one frame (ballistic motion, edge bounce)."""
+        s = self.size
+        for o in self.objects:
+            o["cx"] += o["vx"]
+            o["cy"] += o["vy"]
+            if not (o["half"] <= o["cx"] <= s - o["half"]):
+                o["vx"] = -o["vx"]
+                o["cx"] = np.clip(o["cx"], o["half"], s - o["half"])
+            if not (o["half"] <= o["cy"] <= s - o["half"]):
+                o["vy"] = -o["vy"]
+                o["cy"] = np.clip(o["cy"], o["half"], s - o["half"])
+
+    def render(self, noise_sigma=0.01):
+        """Render the current state.
+
+        Returns ``(pixels (3,H,W) float32, boxes [(x0,y0,x1,y1)], label)``
+        where ``label`` is the class of the largest object (as in the rust
+        sensor).
+        """
+        s = self.size
+        pixels = self.background.copy()
+        boxes = []
+        for o in self.objects:
+            m = _cover_mask(o["shape"], s, o["cx"], o["cy"], o["half"])
+            for c in range(3):
+                pixels[c][m] = o["color"][c]
+            x0 = int(max(o["cx"] - o["half"], 0))
+            y0 = int(max(o["cy"] - o["half"], 0))
+            x1 = int(min(o["cx"] + o["half"], s - 1))
+            y1 = int(min(o["cy"] + o["half"], s - 1))
+            boxes.append((x0, y0, max(x1, x0 + 1), max(y1, y0 + 1)))
+        if noise_sigma > 0:
+            pixels = pixels + self.rng.normal(0.0, noise_sigma, pixels.shape).astype(
+                np.float32
+            )
+        pixels = np.clip(pixels, 0.0, 1.0).astype(np.float32)
+        largest = max(self.objects, key=lambda o: o["half"])
+        label = SHAPES.index(largest["shape"])
+        return pixels, boxes, label
+
+
+def patchify(pixels, patch):
+    """(3,H,W) -> (n_patches, patch*patch*3), channels-last within a patch
+    (must match ``Frame::patchify`` in rust/src/sensor.rs)."""
+    _, h, w = pixels.shape
+    side = h // patch
+    # (3, side, p, side, p) -> (side, side, p, p, 3)
+    x = pixels.reshape(3, side, patch, side, patch)
+    x = x.transpose(1, 3, 2, 4, 0)
+    return x.reshape(side * side, patch * patch * 3)
+
+
+def patch_labels(boxes, size, patch):
+    """Binary per-patch labels: 1 if the patch overlaps any box (the paper's
+    MGNet ground-truth rule)."""
+    side = size // patch
+    lab = np.zeros(side * side, dtype=np.float32)
+    for (x0, y0, x1, y1) in boxes:
+        px0, py0 = x0 // patch, y0 // patch
+        px1 = min((x1 - 1) // patch, side - 1)
+        py1 = min((y1 - 1) // patch, side - 1)
+        for py in range(py0, py1 + 1):
+            for px in range(px0, px1 + 1):
+                lab[py * side + px] = 1.0
+    return lab
+
+
+def classification_batch(rng, batch, size=96, patch=16, num_objects=1):
+    """A batch for classification training.
+
+    Returns ``patches (B, n, p*p*3)``, ``labels (B,)`` int, and patch-level
+    masks ``(B, n)``.
+    """
+    xs, ys, ms = [], [], []
+    for _ in range(batch):
+        scene = Scene(size, num_objects, rng)
+        scene.step()
+        pixels, boxes, label = scene.render()
+        xs.append(patchify(pixels, patch))
+        ys.append(label)
+        ms.append(patch_labels(boxes, size, patch))
+    return np.stack(xs), np.array(ys, dtype=np.int32), np.stack(ms)
+
+
+def video_sequence(rng, frames, size=96, patch=16, num_objects=2):
+    """A video sequence: list of (patches, boxes, patch_labels, label)."""
+    scene = Scene(size, num_objects, rng)
+    out = []
+    for _ in range(frames):
+        scene.step()
+        pixels, boxes, label = scene.render()
+        out.append(
+            (patchify(pixels, patch), boxes, patch_labels(boxes, size, patch), label)
+        )
+    return out

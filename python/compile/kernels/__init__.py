@@ -1,0 +1,4 @@
+"""Layer-1 Pallas kernels emulating the Opto-ViT optical core."""
+
+from .attention import decomposed_attention_head  # noqa: F401
+from .photonic_matmul import PhotonicSpec, crosstalk_matrix, photonic_matmul  # noqa: F401

@@ -1,0 +1,51 @@
+"""L1 Pallas kernel: decomposed attention head (Eq. 2 / Fig. 5 dataflow).
+
+``Q·K^T = (Q·W_K^T)·X^T`` — all stationary operands (W_K^T, X^T) are known
+at kernel start, so K is never materialized in HBM. The whole head runs as a
+single VMEM-resident block (sequence lengths after RoI masking are small:
+n ≤ 197), mirroring how the five-core pipeline keeps the head's operands
+resident across C1..C5 without buffering intermediates.
+
+The 1/sqrt(dk) scaling is folded into the stationary W_K^T operand before
+the kernel — exactly the paper's trick of tuning the bank with
+``W_K^T / sqrt(dk)`` to avoid a division step.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _head_kernel(q_ref, wkt_ref, xt_ref, v_ref, valid_ref, o_ref):
+    # C1 output Q streams in; C2: A1 = Q @ W_K^T (W_K^T pre-scaled).
+    a1 = q_ref[...] @ wkt_ref[...]
+    # C3: S = A1 @ X^T.
+    s = a1 @ xt_ref[...]
+    # Mask out padded (invalid) key slots before the softmax.
+    s = s + (1.0 - valid_ref[...]) * -1e9
+    # EPU: row softmax (numerically stabilized).
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    # C4/C5: O = P @ V.
+    o_ref[...] = p @ v_ref[...]
+
+
+def decomposed_attention_head(q, w_k, x, v, valid=None):
+    """One attention head via the decomposed dataflow.
+
+    q: (n, dk); w_k: (d, dk); x: (n, d); v: (n, dk); valid: (n,) 1/0 mask
+    over key slots (None = all valid). Returns (n, dk).
+    """
+    n, dk = q.shape
+    if valid is None:
+        valid = jnp.ones((n,), q.dtype)
+    # Fold the attention scale into the stationary operand (paper §III-B).
+    wkt = (w_k / jnp.sqrt(jnp.asarray(dk, q.dtype))).T  # (dk, d)
+    xt = x.T  # (d, n)
+    valid_row = valid.reshape(1, n)
+    return pl.pallas_call(
+        _head_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, dk), q.dtype),
+        interpret=True,
+    )(q, wkt, xt, v, valid_row)

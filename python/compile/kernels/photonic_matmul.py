@@ -1,0 +1,147 @@
+"""L1 Pallas kernel: the photonic WDM matrix-multiply core (Fig. 4 / Fig. 6).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's 32-VCSEL ×
+64-arm chunked VVM maps onto a Pallas grid over (row-tile, col-tile, k-chunk)
+with a 32×64 weight block resident per step — the MR bank — and an f32
+accumulator standing in for the per-arm BPD charge. The physical effects are
+carried along:
+
+- **DAC quantization** of activations and weights (8-bit symmetric) happens
+  *outside* the kernel (the wrapper), like the real DACs ahead of the
+  VCSELs/tuning circuits.
+- **Wavelength crosstalk**: each 32-wide input chunk is mixed by the 32×32
+  matrix ``M`` (``M[i][j] = phi(i,j)``, the same operator as
+  ``rust/src/photonics/crosstalk.rs``) before meeting the weights.
+- **ADC quantization** of each 64-wide chunk partial sum (the per-cycle BPD
+  readout) with a fixed full-scale, then exact digital accumulation.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; numerics are validated against ``ref.py``.
+"""
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ..quant import fake_quant, fake_quant_fixed
+
+# Optical core geometry (paper §III): 32 wavelength channels × 64 arms.
+WAVELENGTHS = 32
+ARMS = 64
+
+
+@dataclass(frozen=True)
+class PhotonicSpec:
+    """Physical-effect configuration for the emulated optical core."""
+
+    #: bit width of the DAC/weight-bank/ADC grids
+    bits: int = 8
+    #: quantize operands (DAC) before the optical product
+    quantize_operands: bool = True
+    #: quantize each chunk partial sum (ADC readout). The full-scale is
+    #: sized for worst-case int8 dot products over a 32-chunk.
+    quantize_readout: bool = True
+    #: 32×32 crosstalk mixing matrix (None = ideal optics). Build one with
+    #: :func:`crosstalk_matrix`.
+    crosstalk: Optional[np.ndarray] = None
+
+
+def crosstalk_matrix(q_factor: float = 5000.0, spacing_nm: float = 1.2,
+                     center_nm: float = 1550.0, n: int = WAVELENGTHS) -> np.ndarray:
+    """The WDM crosstalk operator: ``M[i][j] = phi(i,j)``, ``M[i][i] = 1``.
+
+    Must match ``CrosstalkModel::mixing_matrix`` in
+    ``rust/src/photonics/crosstalk.rs`` (squared-Lorentzian kernel, C-band
+    plan). The kernel applies ``x_chunk @ M.T`` so that output channel i
+    collects ``sum_j phi(i,j) x_j``.
+    """
+    lam = center_nm + spacing_nm * (np.arange(n) - (n - 1) / 2.0)
+    delta = lam / (2.0 * q_factor)
+    m = np.zeros((n, n))
+    for i in range(n):
+        for j in range(n):
+            if i == j:
+                m[i, j] = 1.0
+            else:
+                l1 = delta[i] ** 2 / ((lam[i] - lam[j]) ** 2 + delta[i] ** 2)
+                m[i, j] = l1 * l1
+    return m.astype(np.float32)
+
+
+def _adc_scale(x_scale, w_scale, bits):
+    """ADC full-scale for a 32-element chunk dot product, sized at 1/16 of
+    the absolute worst case — the programmable-gain operating point that
+    minimizes quantization+clipping error for zero-mean activations (the
+    full-scale sweep lives in EXPERIMENTS.md; Opto-ViT calibrates the BPD
+    TIA gain per tensor the same way)."""
+    qm = (1 << (bits - 1)) - 1
+    worst = WAVELENGTHS * (qm * x_scale) * (qm * w_scale)
+    return worst / 16.0 / qm
+
+
+def _kernel(x_ref, w_ref, mix_ref, scale_ref, o_ref, *, bits, quantize_readout):
+    """Pallas body: one (row-tile × 64-col) output block accumulated over
+    k-chunks. Grid = (m_tiles, n_tiles, k_chunks); k is the innermost,
+    sequential dimension, mirroring the per-cycle chunk schedule."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Wavelength mixing: channel i of the effective input collects
+    # phi(i, j) * x_j  (M.T multiply; M == I for ideal optics).
+    xe = x_ref[...] @ mix_ref[...].T
+    partial = xe @ w_ref[...]
+    if quantize_readout:
+        partial = fake_quant_fixed(partial, scale_ref[0, 0], bits)
+    o_ref[...] += partial
+
+
+def photonic_matmul(x, w, spec: PhotonicSpec = PhotonicSpec(), row_tile: int = 8):
+    """``x @ w`` through the emulated optical core.
+
+    x: (m, k) activations; w: (k, n) weights. Shapes are padded to the
+    32/64 chunk grid, exactly like the zero-padded slots of Fig. 6.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+
+    if spec.quantize_operands:
+        x = fake_quant(x, spec.bits)
+        w = fake_quant(w, spec.bits)
+
+    x_scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / ((1 << (spec.bits - 1)) - 1)
+    w_scale = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8) / ((1 << (spec.bits - 1)) - 1)
+    adc = _adc_scale(x_scale, w_scale, spec.bits).reshape(1, 1)
+
+    mix = spec.crosstalk if spec.crosstalk is not None else np.eye(WAVELENGTHS, dtype=np.float32)
+    mix = jnp.asarray(mix, dtype=x.dtype)
+
+    # Pad to the chunk grid.
+    row_tile = min(row_tile, max(m, 1))
+    mp = -(-m // row_tile) * row_tile
+    kp = -(-k // WAVELENGTHS) * WAVELENGTHS
+    np_ = -(-n // ARMS) * ARMS
+    xq = jnp.zeros((mp, kp), x.dtype).at[:m, :k].set(x)
+    wq = jnp.zeros((kp, np_), w.dtype).at[:k, :n].set(w)
+
+    grid = (mp // row_tile, np_ // ARMS, kp // WAVELENGTHS)
+    out = pl.pallas_call(
+        partial(_kernel, bits=spec.bits, quantize_readout=spec.quantize_readout),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_tile, WAVELENGTHS), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((WAVELENGTHS, ARMS), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((WAVELENGTHS, WAVELENGTHS), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_tile, ARMS), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xq, wq, mix, adc)
+    return out[:m, :n]

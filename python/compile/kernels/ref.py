@@ -1,0 +1,67 @@
+"""Pure-jnp correctness oracles for the L1 kernels.
+
+Each oracle re-implements the kernel semantics with explicit python loops /
+dense jnp ops — no pallas — so pytest can assert the kernels bit-match their
+specification, and so accuracy experiments can run the same physics without
+the pallas interpreter overhead.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..quant import fake_quant, fake_quant_fixed
+from .photonic_matmul import ARMS, WAVELENGTHS, PhotonicSpec, _adc_scale
+
+
+def ideal_matmul(x, w):
+    """The mathematical ground truth (fp32 ``x @ w``)."""
+    return x @ w
+
+
+def photonic_matmul_ref(x, w, spec: PhotonicSpec = PhotonicSpec()):
+    """Chunked WDM matmul oracle: identical physics to the pallas kernel,
+    expressed as an explicit loop over k-chunks and column tiles."""
+    m, k = x.shape
+    _, n = w.shape
+    if spec.quantize_operands:
+        x = fake_quant(x, spec.bits)
+        w = fake_quant(w, spec.bits)
+    x_scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / ((1 << (spec.bits - 1)) - 1)
+    w_scale = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8) / ((1 << (spec.bits - 1)) - 1)
+    adc = _adc_scale(x_scale, w_scale, spec.bits)
+
+    mix = spec.crosstalk if spec.crosstalk is not None else np.eye(WAVELENGTHS, dtype=np.float32)
+    mix = jnp.asarray(mix, dtype=x.dtype)
+
+    kp = -(-k // WAVELENGTHS) * WAVELENGTHS
+    np_ = -(-n // ARMS) * ARMS
+    xq = jnp.zeros((m, kp), x.dtype).at[:, :k].set(x)
+    wq = jnp.zeros((kp, np_), w.dtype).at[:k, :n].set(w)
+
+    out = jnp.zeros((m, np_), x.dtype)
+    for kc in range(kp // WAVELENGTHS):
+        xc = xq[:, kc * WAVELENGTHS:(kc + 1) * WAVELENGTHS]
+        xe = xc @ mix.T  # wavelength crosstalk
+        for ct in range(np_ // ARMS):
+            wc = wq[kc * WAVELENGTHS:(kc + 1) * WAVELENGTHS, ct * ARMS:(ct + 1) * ARMS]
+            partial = xe @ wc  # per-arm BPD accumulation
+            if spec.quantize_readout:
+                partial = fake_quant_fixed(partial, adc, spec.bits)  # ADC
+            out = out.at[:, ct * ARMS:(ct + 1) * ARMS].add(partial)
+    return out[:, :n]
+
+
+def attention_head_ref(q, w_k, x, v, valid=None):
+    """Direct-flow attention oracle for one head (fp32):
+    ``K = X @ W_k``; ``S = Q K^T / sqrt(dk)``; ``P = softmax(S)``;
+    ``O = P V``. The decomposed kernel must match this exactly — Eq. 2 is
+    an algebraic identity.
+    """
+    dk = q.shape[-1]
+    k_mat = x @ w_k
+    s = (q @ k_mat.T) / jnp.sqrt(jnp.asarray(dk, q.dtype))
+    if valid is not None:
+        s = s + (1.0 - valid)[None, :] * -1e9
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return p @ v

@@ -1,0 +1,287 @@
+"""L2: the Opto-ViT JAX models — ViT backbone (T/S/B/L) and MGNet.
+
+Pure-jax pytrees (no flax): params are nested dicts, forwards are plain
+functions, so `jax.jit(...).lower()` produces one fused HLO per variant for
+the rust runtime. The backbone consumes a *pruned* patch sequence —
+`(n_kept, p*p*3)` patches + positional indices + validity mask — the RoI
+contract with the L3 coordinator (masked patches never reach the model,
+giving the paper's linear compute savings).
+
+Three numerics modes:
+- ``mode="fp32"``  — full-precision reference (Table I left columns).
+- ``mode="quant"`` — 8-bit QAT fake-quant on weights & activations of the
+  patch-embedding, MHSA and FFN modules (the paper's quantization scope).
+- ``mode="photonic"`` — linear layers routed through the L1 pallas kernel
+  (chunked WDM matmul with ADC readout quantization and optional
+  crosstalk) — the full optical-core emulation.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import PhotonicSpec, photonic_matmul
+from .quant import fake_quant
+
+# ---------------------------------------------------------------------------
+# Configs (must mirror rust/src/vit/config.rs)
+# ---------------------------------------------------------------------------
+
+VIT_VARIANTS = {
+    "tiny": dict(embed_dim=192, num_heads=3, depth=12),
+    "small": dict(embed_dim=384, num_heads=6, depth=12),
+    "base": dict(embed_dim=768, num_heads=12, depth=12),
+    "large": dict(embed_dim=1024, num_heads=16, depth=24),
+}
+
+
+def vit_config(variant, image_size, num_classes, patch_size=16, mlp_ratio=4, depth=None):
+    v = dict(VIT_VARIANTS[variant])
+    if depth is not None:
+        v["depth"] = depth
+    n_side = image_size // patch_size
+    return dict(
+        variant=variant,
+        image_size=image_size,
+        patch_size=patch_size,
+        num_classes=num_classes,
+        mlp_ratio=mlp_ratio,
+        num_patches=n_side * n_side,
+        patch_dim=patch_size * patch_size * 3,
+        **v,
+    )
+
+
+def mgnet_config(image_size, embed_dim=192, num_heads=3, patch_size=16):
+    """MGNet (§IV): one transformer block + cls-attention scorer + linear
+    per-patch logits. embed 192/heads 3 for classification; 384/6 for
+    detection."""
+    n_side = image_size // patch_size
+    return dict(
+        image_size=image_size,
+        patch_size=patch_size,
+        embed_dim=embed_dim,
+        num_heads=num_heads,
+        num_patches=n_side * n_side,
+        patch_dim=patch_size * patch_size * 3,
+        mlp_ratio=4,
+        depth=1,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, fan_in, fan_out):
+    w = jax.random.normal(key, (fan_in, fan_out), jnp.float32) * (2.0 / (fan_in + fan_out)) ** 0.5
+    return {"w": w, "b": jnp.zeros((fan_out,), jnp.float32)}
+
+
+def _block_init(key, d, mlp_ratio):
+    ks = jax.random.split(key, 6)
+    return {
+        "ln1": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+        "qkv": _dense_init(ks[0], d, 3 * d),
+        "proj": _dense_init(ks[1], d, d),
+        "ln2": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+        "fc1": _dense_init(ks[2], d, mlp_ratio * d),
+        "fc2": _dense_init(ks[3], mlp_ratio * d, d),
+    }
+
+
+def init_vit(key, cfg):
+    """Initialize a ViT parameter pytree."""
+    d = cfg["embed_dim"]
+    ks = jax.random.split(key, cfg["depth"] + 4)
+    return {
+        "embed": _dense_init(ks[0], cfg["patch_dim"], d),
+        "cls": jax.random.normal(ks[1], (1, d), jnp.float32) * 0.02,
+        "pos": jax.random.normal(ks[2], (cfg["num_patches"] + 1, d), jnp.float32) * 0.02,
+        "blocks": [_block_init(ks[3 + i], d, cfg["mlp_ratio"]) for i in range(cfg["depth"])],
+        "ln_f": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+        "head": _dense_init(ks[-1], d, cfg["num_classes"]),
+    }
+
+
+def init_mgnet(key, cfg):
+    """MGNet params: a 1-block ViT trunk + per-patch score head (Eq. 3)."""
+    d = cfg["embed_dim"]
+    ks = jax.random.split(key, 7)
+    return {
+        "embed": _dense_init(ks[0], cfg["patch_dim"], d),
+        "cls": jax.random.normal(ks[1], (1, d), jnp.float32) * 0.02,
+        "pos": jax.random.normal(ks[2], (cfg["num_patches"] + 1, d), jnp.float32) * 0.02,
+        "block": _block_init(ks[3], d, cfg["mlp_ratio"]),
+        # the extra self-attention scoring layer: its own W_Q / W_K
+        "score_q": _dense_init(ks[4], d, d),
+        "score_k": _dense_init(ks[5], d, d),
+        # linear projection from cls-attention scores to per-patch logits
+        "region": _dense_init(ks[6], cfg["num_patches"], cfg["num_patches"]),
+        "ln_f": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _layernorm(x, p, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * p["g"] + p["b"]
+
+
+def _matmul(x, w, mode, spec):
+    if mode == "photonic":
+        return photonic_matmul(x, w, spec)
+    if mode == "quant":
+        return fake_quant(x, spec.bits) @ fake_quant(w, spec.bits)
+    return x @ w
+
+
+def _dense(x, p, mode, spec):
+    return _matmul(x, p["w"], mode, spec) + p["b"]
+
+
+def _attention(x, p, num_heads, valid, mode, spec):
+    """MHSA over a (n, d) sequence with a key-side validity mask."""
+    n, d = x.shape
+    dk = d // num_heads
+    qkv = _dense(x, p["qkv"], mode, spec)  # (n, 3d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(n, num_heads, dk).transpose(1, 0, 2)  # (h, n, dk)
+    k = k.reshape(n, num_heads, dk).transpose(1, 0, 2)
+    v = v.reshape(n, num_heads, dk).transpose(1, 0, 2)
+    s = jnp.einsum("hnd,hmd->hnm", q, k) / jnp.sqrt(jnp.asarray(dk, x.dtype))
+    s = s + (1.0 - valid)[None, None, :] * -1e9
+    p_attn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("hnm,hmd->hnd", p_attn, v)  # (h, n, dk)
+    o = o.transpose(1, 0, 2).reshape(n, d)
+    return _dense(o, p["proj"], mode, spec)
+
+
+def _encoder_block(x, p, num_heads, valid, mode, spec):
+    x = x + _attention(_layernorm(x, p["ln1"]), p, num_heads, valid, mode, spec)
+    h = _dense(_layernorm(x, p["ln2"]), p["fc1"], mode, spec)
+    h = jax.nn.gelu(h)
+    return x + _dense(h, p["fc2"], mode, spec)
+
+
+def vit_forward(params, cfg, patches, pos_idx, valid, mode="quant",
+                spec: PhotonicSpec = PhotonicSpec()):
+    """Backbone forward on a pruned patch sequence.
+
+    patches: (n_kept, patch_dim) — RoI-surviving patches only.
+    pos_idx: (n_kept,) float — original patch indices (for pos-embedding).
+    valid:   (n_kept,) float — 1 for real patches, 0 for bucket padding.
+    Returns logits (num_classes,).
+    """
+    tok = _dense(patches, params["embed"], mode, spec)  # (n_kept, d)
+    pos = jnp.take(params["pos"], pos_idx.astype(jnp.int32) + 1, axis=0)
+    tok = tok + pos
+    cls = params["cls"] + params["pos"][0:1]
+    x = jnp.concatenate([cls, tok], axis=0)  # (1 + n_kept, d)
+    v = jnp.concatenate([jnp.ones((1,), valid.dtype), valid])
+    # Zero padded token embeddings so they carry no content even pre-mask.
+    x = x * v[:, None]
+    for blk in params["blocks"]:
+        x = _encoder_block(x, blk, cfg["num_heads"], v, mode, spec)
+    x = _layernorm(x, params["ln_f"])
+    if cfg.get("readout", "mean") == "cls":
+        pooled = x[0:1]
+    else:
+        # Masked mean-pool over valid tokens: the readout that trains from
+        # scratch in a few hundred steps (cls-token readout needs the
+        # ImageNet-21k pretraining the paper starts from, which the offline
+        # substitution cannot — see DESIGN.md §Deviations).
+        pooled = jnp.sum(x * v[:, None], axis=0, keepdims=True) / jnp.sum(v)
+    return _dense(pooled, params["head"], mode, spec)[0]
+
+
+def mgnet_forward(params, cfg, patches, mode="quant",
+                  spec: PhotonicSpec = PhotonicSpec()):
+    """MGNet forward: full-frame patches -> per-patch region logits.
+
+    Implements §IV exactly: one encoder block, then the cls-attention score
+    ``S_cls = q_class K^T / sqrt(d)`` (Eq. 3), then a linear layer mapping
+    the n attention scores to n per-patch logits. Thresholding happens in
+    the coordinator (rust) so `t_reg` stays a serving-time knob.
+    """
+    n = cfg["num_patches"]
+    tok = _dense(patches, params["embed"], mode, spec)
+    tok = tok + params["pos"][1:]
+    cls = params["cls"] + params["pos"][0:1]
+    x = jnp.concatenate([cls, tok], axis=0)
+    valid = jnp.ones((n + 1,), x.dtype)
+    x = _encoder_block(x, params["block"], cfg["num_heads"], valid, mode, spec)
+    x = _layernorm(x, params["ln_f"])
+    # Eq. 3: q from the cls token, K from the patch tokens.
+    q_cls = _dense(x[0:1], params["score_q"], mode, spec)  # (1, d)
+    k_pat = _dense(x[1:], params["score_k"], mode, spec)  # (n, d)
+    s_cls = (q_cls @ k_pat.T)[0] / jnp.sqrt(jnp.asarray(cfg["embed_dim"], x.dtype))
+    # Linear projection to region scores (output dim = num patches).
+    return s_cls @ params["region"]["w"] + params["region"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# Export entry points (closed over trained/initialized params by aot.py)
+# ---------------------------------------------------------------------------
+
+
+def make_backbone_fn(params, cfg, mode="quant", spec=None):
+    """Returns f(patches, pos_idx, valid) -> (logits,) for jit/lowering."""
+    spec = spec or PhotonicSpec()
+
+    def fn(patches, pos_idx, valid):
+        return (vit_forward(params, cfg, patches, pos_idx, valid, mode, spec),)
+
+    return fn
+
+
+def make_mgnet_fn(params, cfg, mode="quant", spec=None):
+    """Returns f(patches) -> (scores,) for jit/lowering."""
+    spec = spec or PhotonicSpec()
+
+    def fn(patches):
+        return (mgnet_forward(params, cfg, patches, mode, spec),)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Parameter (de)serialization — flat .npz so experiments can reload
+# ---------------------------------------------------------------------------
+
+
+def flatten_params(params, prefix=""):
+    out = {}
+    if isinstance(params, dict):
+        for k, v in params.items():
+            out.update(flatten_params(v, f"{prefix}{k}/"))
+    elif isinstance(params, (list, tuple)):
+        for i, v in enumerate(params):
+            out.update(flatten_params(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(params)
+    return out
+
+
+def save_params(path, params):
+    np.savez(path, **flatten_params(params))
+
+
+def load_params(path, template):
+    """Reload params into the same pytree structure as `template`."""
+    flat = dict(np.load(path))
+
+    def rebuild(t, prefix=""):
+        if isinstance(t, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in t.items()}
+        if isinstance(t, (list, tuple)):
+            return [rebuild(v, f"{prefix}{i}/") for i, v in enumerate(t)]
+        return jnp.asarray(flat[prefix[:-1]])
+
+    return rebuild(template)

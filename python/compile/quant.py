@@ -1,0 +1,64 @@
+"""Symmetric uniform quantization with straight-through-estimator QAT.
+
+Paper §IV "Accuracy Analysis": 8-bit symmetric uniform quantization [45] of
+weights and activations, quantization-aware training [43] with the STE [44],
+and dynamic (max-abs) range calibration. Mirrors ``rust/src/quant.rs``.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.custom_vjp
+def ste_round(x):
+    """round() whose gradient is identity (straight-through estimator)."""
+    return jnp.round(x)
+
+
+def _ste_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_bwd(_, g):
+    return (g,)
+
+
+ste_round.defvjp(_ste_fwd, _ste_bwd)
+
+
+def qmax(bits: int) -> int:
+    """Largest positive integer level of a symmetric ``bits``-bit grid."""
+    return (1 << (bits - 1)) - 1
+
+
+def calibrate_scale(x, bits: int = 8, eps: float = 1e-8):
+    """Max-abs (dynamic) scale: ``real = scale * int``."""
+    m = jnp.max(jnp.abs(x))
+    return jnp.maximum(m, eps) / qmax(bits)
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def fake_quant(x, bits: int = 8):
+    """Quantize-dequantize with per-tensor dynamic scale and STE gradient.
+
+    This is the QAT forward used in training and the exact numeric applied
+    at inference (the photonic weight banks / ADC / DAC all operate on the
+    same 8-bit grid).
+    """
+    scale = calibrate_scale(x, bits)
+    q = jnp.clip(ste_round(x / scale), -qmax(bits), qmax(bits))
+    return q * scale
+
+
+def fake_quant_fixed(x, scale, bits: int = 8):
+    """Quantize-dequantize with an externally supplied scale (e.g. the ADC
+    full-scale range of a BPD readout chain)."""
+    q = jnp.clip(ste_round(x / scale), -qmax(bits), qmax(bits))
+    return q * scale
+
+
+def quant_error_bound(x, bits: int = 8):
+    """Worst-case |fake_quant(x) - x| = scale / 2 (half an LSB)."""
+    return calibrate_scale(x, bits) / 2.0

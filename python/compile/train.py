@@ -1,0 +1,192 @@
+"""Hand-rolled training utilities (optax is unavailable offline).
+
+Provides Adam, the QAT losses, and short build-time training loops for
+MGNet (BCE on box-derived patch labels — the paper's §IV recipe) and the
+classification backbone (cross-entropy with QAT fake-quant in the forward).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import model as M
+
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_step(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t)
+    vhat_scale = 1.0 / (1 - b2 ** t)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def bce_with_logits(logits, labels):
+    """Binary cross-entropy on logits (MGNet's region loss, §IV)."""
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def softmax_xent(logits, label):
+    logz = jax.nn.logsumexp(logits)
+    return logz - logits[label]
+
+
+# ---------------------------------------------------------------------------
+# MGNet training (build-time; a few hundred steps suffice on the synthetic
+# moving-shapes distribution)
+# ---------------------------------------------------------------------------
+
+
+def train_mgnet(cfg, steps=300, batch=8, lr=1e-3, seed=0, mode="quant", verbose=True):
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    params = M.init_mgnet(key, cfg)
+
+    def loss_fn(p, xs, labs):
+        def one(x, lab):
+            return bce_with_logits(M.mgnet_forward(p, cfg, x, mode=mode), lab)
+
+        return jnp.mean(jax.vmap(one)(xs, labs))
+
+    @jax.jit
+    def step(p, opt, xs, labs):
+        l, g = jax.value_and_grad(loss_fn)(p, xs, labs)
+        p, opt = adam_step(p, g, opt, lr=lr)
+        return p, opt, l
+
+    opt = adam_init(params)
+    t0 = time.time()
+    for i in range(steps):
+        xs, _, masks = D.classification_batch(
+            rng, batch, size=cfg["image_size"], patch=cfg["patch_size"],
+            num_objects=int(rng.integers(1, 4)))
+        params, opt, loss = step(params, opt, jnp.asarray(xs), jnp.asarray(masks))
+        if verbose and (i % 50 == 0 or i == steps - 1):
+            print(f"  mgnet step {i:4d} loss {float(loss):.4f} ({time.time()-t0:.0f}s)")
+    return params
+
+
+def mgnet_miou(params, cfg, frames=64, threshold=0.5, seed=1, mode="quant"):
+    """Mask quality: mean IoU of thresholded scores vs GT patch labels."""
+    rng = np.random.default_rng(seed)
+    fwd = jax.jit(lambda x: M.mgnet_forward(params, cfg, x, mode=mode))
+    ious = []
+    for _ in range(frames):
+        xs, _, masks = D.classification_batch(
+            rng, 1, size=cfg["image_size"], patch=cfg["patch_size"],
+            num_objects=int(rng.integers(1, 4)))
+        scores = np.asarray(fwd(jnp.asarray(xs[0])))
+        pred = 1.0 / (1.0 + np.exp(-scores)) > threshold
+        gt = masks[0] > 0.5
+        inter = np.logical_and(pred, gt).sum()
+        union = np.logical_or(pred, gt).sum()
+        ious.append(1.0 if union == 0 else inter / union)
+    return float(np.mean(ious))
+
+
+# ---------------------------------------------------------------------------
+# Backbone training (classification on the synthetic shapes distribution)
+# ---------------------------------------------------------------------------
+
+
+def clip_by_global_norm(grads, max_norm=1.0):
+    gn = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree_util.tree_leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+
+def train_backbone(cfg, steps=300, batch=16, lr=1e-3, seed=0, mode="quant",
+                   verbose=True, warmup=30, num_objects=1):
+    """From-scratch QAT training: linear warmup + global-norm clipping +
+    mean-pool readout (see model.vit_forward) — the recipe that converges
+    within a few hundred CPU steps on the synthetic workload."""
+    rng = np.random.default_rng(seed + 100)
+    key = jax.random.PRNGKey(seed + 100)
+    params = M.init_vit(key, cfg)
+    n = cfg["num_patches"]
+    pos_idx = jnp.arange(n, dtype=jnp.float32)
+    valid = jnp.ones((n,), jnp.float32)
+
+    def loss_fn(p, xs, ys):
+        def one(x, y):
+            logits = M.vit_forward(p, cfg, x, pos_idx, valid, mode=mode)
+            return softmax_xent(logits, y)
+
+        return jnp.mean(jax.vmap(one)(xs, ys))
+
+    @jax.jit
+    def step(p, opt, xs, ys, lr_t):
+        l, g = jax.value_and_grad(loss_fn)(p, xs, ys)
+        g = clip_by_global_norm(g)
+        p, opt = adam_step(p, g, opt, lr=lr_t)
+        return p, opt, l
+
+    opt = adam_init(params)
+    t0 = time.time()
+    for i in range(steps):
+        lr_t = lr * min(1.0, (i + 1) / warmup)
+        xs, ys, _ = D.classification_batch(
+            rng, batch, size=cfg["image_size"], patch=cfg["patch_size"],
+            num_objects=num_objects if isinstance(num_objects, int) else int(rng.integers(*num_objects)))
+        params, opt, loss = step(params, opt, jnp.asarray(xs), jnp.asarray(ys), lr_t)
+        if verbose and (i % 50 == 0 or i == steps - 1):
+            print(f"  backbone step {i:4d} loss {float(loss):.4f} ({time.time()-t0:.0f}s)")
+    return params
+
+
+def backbone_accuracy(params, cfg, frames=128, seed=7, mode="quant", keep_mask=None,
+                      num_objects=1):
+    """Top-1 accuracy on held-out synthetic frames. `keep_mask` optionally
+    simulates RoI pruning: a callable (patch_labels -> kept bool array)."""
+    rng = np.random.default_rng(seed)
+    n = cfg["num_patches"]
+
+    fwd = jax.jit(lambda x, pi, v: M.vit_forward(params, cfg, x, pi, v, mode=mode))
+    correct = 0
+    for _ in range(frames):
+        xs, ys, masks = D.classification_batch(
+            rng, 1, size=cfg["image_size"], patch=cfg["patch_size"],
+            num_objects=num_objects if isinstance(num_objects, int) else int(rng.integers(*num_objects)))
+        x = xs[0]
+        if keep_mask is not None:
+            kept = keep_mask(masks[0])
+            idx = np.flatnonzero(kept)
+            if len(idx) == 0:
+                idx = np.array([int(np.argmax(masks[0]))])
+            xk = np.zeros_like(x)
+            pi = np.zeros((n,), np.float32)
+            v = np.zeros((n,), np.float32)
+            xk[: len(idx)] = x[idx]
+            pi[: len(idx)] = idx
+            v[: len(idx)] = 1.0
+            x, pos, val = xk, pi, v
+        else:
+            pos = np.arange(n, dtype=np.float32)
+            val = np.ones((n,), np.float32)
+        logits = np.asarray(fwd(jnp.asarray(x), jnp.asarray(pos), jnp.asarray(val)))
+        correct += int(np.argmax(logits) == ys[0])
+    return correct / frames

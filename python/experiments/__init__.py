@@ -1,0 +1,4 @@
+"""Build-time accuracy experiments: Table I/II/III analogues on the
+synthetic moving-shapes workload (see DESIGN.md for the substitution
+rationale — the paper's claims are *relative* FP-vs-INT8 and
+mask-vs-no-mask deltas, which reproduce at small scale)."""

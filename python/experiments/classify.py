@@ -1,0 +1,81 @@
+"""Table I analogue: classification accuracy, full-precision ViT vs 8-bit
+Opto-ViT, across model scales, plus the RoI-masked row.
+
+The paper's claim (Table I): 8-bit QAT stays within ~0.2-1.6% of the FP32
+baseline across Tiny/Small/Base/Large, and input masking trades a further
+small drop for a ~67% pixel skip. Scales here are depth/width-reduced
+analogues sized for CPU build-time training; the *relative* FP-vs-INT8 and
+mask-vs-no-mask deltas are the reproduced quantities (DESIGN.md).
+
+Run: ``python -m experiments.classify [--steps N] [--eval-frames N]``
+"""
+
+import argparse
+
+import numpy as np
+
+from compile import model as M
+from compile import train as T
+from .common import print_table, save_table
+
+# Scale ladder: (name, embed_dim, heads, depth) — reduced analogues of the
+# paper's T/S/B/L ladder (same widening/deepening direction).
+SCALES = [
+    ("Tiny*", 96, 3, 2),
+    ("Small*", 144, 3, 3),
+    ("Base*", 192, 6, 4),
+]
+
+
+def run(steps=300, eval_frames=160, seed=0):
+    rows = []
+    for name, d, h, depth in SCALES:
+        cfg = M.vit_config("tiny", 96, 10)  # base dict, then override scale
+        cfg.update(embed_dim=d, num_heads=h, depth=depth)
+        print(f"\n--- scale {name} (d={d}, h={h}, L={depth}) ---")
+        print("fp32 training:")
+        p_fp = T.train_backbone(cfg, steps=steps, mode="fp32", seed=seed, num_objects=(1, 4))
+        acc_fp = T.backbone_accuracy(p_fp, cfg, frames=eval_frames, mode="fp32", num_objects=(1, 4))
+        print("8-bit QAT training:")
+        p_q = T.train_backbone(cfg, steps=steps, mode="quant", seed=seed, num_objects=(1, 4))
+        acc_q = T.backbone_accuracy(p_q, cfg, frames=eval_frames, mode="quant", num_objects=(1, 4))
+        rows.append([name, "96x96", "-", f"{acc_fp*100:.2f}%", f"{acc_q*100:.2f}%",
+                     f"{(acc_fp-acc_q)*100:+.2f}%"])
+        print(f"  {name}: fp32 {acc_fp:.4f}  int8 {acc_q:.4f}")
+
+        if name == "Base*":
+            # Masked row (Table I "Base Mask"): GT-box-derived patch pruning,
+            # mirroring the paper's MGNet-mask operating point.
+            def keep(patch_labels):
+                return patch_labels > 0.5
+
+            acc_m = T.backbone_accuracy(p_q, cfg, frames=eval_frames, mode="quant",
+                                        keep_mask=keep, num_objects=(1, 4))
+            # measure the skip ratio on the same distribution
+            rng = np.random.default_rng(99)
+            from compile import data as D
+            skips = []
+            for _ in range(64):
+                _, _, masks = D.classification_batch(rng, 1, size=96, patch=16, num_objects=1)
+                skips.append(1.0 - masks[0].mean())
+            rows.append([f"{name} Mask", "96x96", f"{np.mean(skips):.2f}",
+                         "-", f"{acc_m*100:.2f}%", f"{(acc_q-acc_m)*100:+.2f}% vs int8"])
+            print(f"  {name} Mask: int8+mask {acc_m:.4f} (skip {np.mean(skips):.2f})")
+
+    header = ["Model", "Resolution", "skip%", "Acc. FP32", "Acc. 8-bit", "delta"]
+    print_table("Table I analogue — classification, FP32 vs 8-bit Opto-ViT", header, rows)
+    save_table("table1", "Table I analogue (synthetic shapes)", header, rows)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--eval-frames", type=int, default=160)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(args.steps, args.eval_frames, args.seed)
+
+
+if __name__ == "__main__":
+    main()

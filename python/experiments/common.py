@@ -1,0 +1,137 @@
+"""Shared infrastructure for the Table I-III experiment analogues."""
+
+import os
+
+import numpy as np
+
+
+def results_dir():
+    d = os.environ.get("OPTOVIT_RESULTS", os.path.join(os.path.dirname(__file__), "..", "..", "results"))
+    os.makedirs(d, exist_ok=True)
+    return d
+
+
+def print_table(title, header, rows):
+    widths = [max(len(str(h)), max((len(str(r[i])) for r in rows), default=0)) for i, h in enumerate(header)]
+    line = "  ".join(f"{h:<{w}}" for h, w in zip(header, widths))
+    print(f"\n== {title} ==")
+    print(line)
+    print("-" * len(line))
+    for r in rows:
+        print("  ".join(f"{str(c):<{w}}" for c, w in zip(r, widths)))
+
+
+def save_table(name, title, header, rows):
+    """Persist as tab-separated text for EXPERIMENTS.md."""
+    path = os.path.join(results_dir(), f"{name}.tsv")
+    with open(path, "w") as f:
+        f.write(f"# {title}\n")
+        f.write("\t".join(map(str, header)) + "\n")
+        for r in rows:
+            f.write("\t".join(map(str, r)) + "\n")
+    print(f"saved {path}")
+
+
+# ---------------------------------------------------------------------------
+# Detection-style scoring (Tables II/III analogues)
+# ---------------------------------------------------------------------------
+
+
+def average_precision(scores, labels):
+    """AP over per-patch objectness: area under the precision/recall curve
+    (all-points interpolation)."""
+    order = np.argsort(-np.asarray(scores))
+    labels = np.asarray(labels)[order]
+    tp = np.cumsum(labels)
+    fp = np.cumsum(1 - labels)
+    npos = labels.sum()
+    if npos == 0:
+        return 0.0
+    recall = tp / npos
+    precision = tp / np.maximum(tp + fp, 1e-9)
+    # monotone precision envelope
+    for i in range(len(precision) - 2, -1, -1):
+        precision[i] = max(precision[i], precision[i + 1])
+    ap = 0.0
+    prev_r = 0.0
+    for p, r in zip(precision, recall):
+        ap += p * (r - prev_r)
+        prev_r = r
+    return float(ap)
+
+
+def boxes_from_mask(mask2d, patch_px):
+    """Connected components of a binary patch mask -> pixel boxes
+    (4-connectivity flood fill)."""
+    side = mask2d.shape[0]
+    seen = np.zeros_like(mask2d, dtype=bool)
+    boxes = []
+    for sy in range(side):
+        for sx in range(side):
+            if mask2d[sy, sx] and not seen[sy, sx]:
+                stack = [(sy, sx)]
+                seen[sy, sx] = True
+                ys, xs = [], []
+                while stack:
+                    y, x = stack.pop()
+                    ys.append(y)
+                    xs.append(x)
+                    for dy, dx in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+                        ny, nx = y + dy, x + dx
+                        if 0 <= ny < side and 0 <= nx < side and mask2d[ny, nx] and not seen[ny, nx]:
+                            seen[ny, nx] = True
+                            stack.append((ny, nx))
+                boxes.append(
+                    (min(xs) * patch_px, min(ys) * patch_px,
+                     (max(xs) + 1) * patch_px, (max(ys) + 1) * patch_px)
+                )
+    return boxes
+
+
+def box_iou(a, b):
+    ix0, iy0 = max(a[0], b[0]), max(a[1], b[1])
+    ix1, iy1 = min(a[2], b[2]), min(a[3], b[3])
+    if ix1 <= ix0 or iy1 <= iy0:
+        return 0.0
+    inter = (ix1 - ix0) * (iy1 - iy0)
+    ar_a = (a[2] - a[0]) * (a[3] - a[1])
+    ar_b = (b[2] - b[0]) * (b[3] - b[1])
+    return inter / (ar_a + ar_b - inter)
+
+
+def box_map(pred_boxes_scores, gt_boxes, iou_thr):
+    """Single-class mAP at an IoU threshold: greedy matching of ranked
+    predicted boxes to ground truth (COCO-style, one GT match each)."""
+    preds = sorted(pred_boxes_scores, key=lambda bs: -bs[1])
+    matched = [False] * len(gt_boxes)
+    labels = []
+    for box, _ in preds:
+        hit = 0
+        for gi, g in enumerate(gt_boxes):
+            if not matched[gi] and box_iou(box, g) >= iou_thr:
+                matched[gi] = True
+                hit = 1
+                break
+        labels.append(hit)
+    if not preds:
+        return 0.0
+    scores = [s for _, s in preds]
+    # pad recall denominator with unmatched GT
+    labels_arr = np.array(labels, dtype=float)
+    npos = len(gt_boxes)
+    if npos == 0:
+        return 0.0
+    order = np.argsort(-np.asarray(scores))
+    labels_arr = labels_arr[order]
+    tp = np.cumsum(labels_arr)
+    fp = np.cumsum(1 - labels_arr)
+    recall = tp / npos
+    precision = tp / np.maximum(tp + fp, 1e-9)
+    for i in range(len(precision) - 2, -1, -1):
+        precision[i] = max(precision[i], precision[i + 1])
+    ap = 0.0
+    prev_r = 0.0
+    for p, r in zip(precision, recall):
+        ap += p * (r - prev_r)
+        prev_r = r
+    return float(ap)

@@ -1,0 +1,153 @@
+"""Patch-level detector used by the Table II/III analogues.
+
+A ViTDet-style reduction: the ViT trunk runs on all (or RoI-kept) patches
+and a linear head predicts per-patch objectness. Boxes are decoded from the
+thresholded objectness map by connected components (common.boxes_from_mask)
+— the single-class stand-in for the paper's Mask R-CNN head, with the same
+property under study: only the *backbone* is quantized (the head stays
+fp32, as in §IV-2).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data as D
+from compile import model as M
+from compile.quant import fake_quant
+from compile.train import adam_init, adam_step, bce_with_logits
+
+
+def det_config(d=128, h=4, depth=3, size=96):
+    cfg = M.vit_config("tiny", size, 10)
+    cfg.update(embed_dim=d, num_heads=h, depth=depth)
+    return cfg
+
+
+def init_detector(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "trunk": M.init_vit(k1, cfg),
+        # objectness head (kept fp32 — electronic domain, §IV-2)
+        "obj": M._dense_init(k2, cfg["embed_dim"], 1),
+    }
+
+
+def detector_forward(params, cfg, patches, pos_idx, valid, mode="quant"):
+    """Per-patch objectness logits (n_kept,). The trunk mirrors
+    vit_forward but reads out patch tokens instead of the cls token."""
+    spec = M.PhotonicSpec() if hasattr(M, "PhotonicSpec") else None
+    from compile.kernels import PhotonicSpec
+
+    spec = PhotonicSpec()
+    t = params["trunk"]
+    tok = M._dense(patches, t["embed"], mode, spec)
+    pos = jnp.take(t["pos"], pos_idx.astype(jnp.int32) + 1, axis=0)
+    tok = tok + pos
+    cls = t["cls"] + t["pos"][0:1]
+    x = jnp.concatenate([cls, tok], axis=0)
+    v = jnp.concatenate([jnp.ones((1,), valid.dtype), valid])
+    x = x * v[:, None]
+    for blk in t["blocks"]:
+        x = M._encoder_block(x, blk, cfg["num_heads"], v, mode, spec)
+    x = M._layernorm(x, t["ln_f"])
+    # fp32 head on patch tokens:
+    return (x[1:] @ params["obj"]["w"] + params["obj"]["b"])[:, 0]
+
+
+def train_detector(cfg, steps=300, batch=8, lr=1e-3, seed=0, mode="quant", verbose=True):
+    rng = np.random.default_rng(seed + 500)
+    params = init_detector(jax.random.PRNGKey(seed + 500), cfg)
+    n = cfg["num_patches"]
+    pos_idx = jnp.arange(n, dtype=jnp.float32)
+    valid = jnp.ones((n,), jnp.float32)
+
+    def loss_fn(p, xs, ms):
+        def one(x, m):
+            return bce_with_logits(detector_forward(p, cfg, x, pos_idx, valid, mode), m)
+
+        return jnp.mean(jax.vmap(one)(xs, ms))
+
+    @jax.jit
+    def step(p, opt, xs, ms):
+        l, g = jax.value_and_grad(loss_fn)(p, xs, ms)
+        p, opt = adam_step(p, g, opt, lr=lr)
+        return p, opt, l
+
+    opt = adam_init(params)
+    for i in range(steps):
+        xs, _, ms = D.classification_batch(
+            rng, batch, size=cfg["image_size"], patch=cfg["patch_size"],
+            num_objects=int(rng.integers(1, 4)))
+        params, opt, loss = step(params, opt, jnp.asarray(xs), jnp.asarray(ms))
+        if verbose and (i % 50 == 0 or i == steps - 1):
+            print(f"  detector step {i:4d} loss {float(loss):.4f}")
+    return params
+
+
+def eval_frames(params, cfg, frames, mode="quant", roi_mask=False, seed=123,
+                video=False, num_objects=(1, 4)):
+    """Yield (scores(n,), gt_patch_labels(n,), gt_boxes, skip) per frame."""
+    rng = np.random.default_rng(seed)
+    n = cfg["num_patches"]
+    fwd = jax.jit(lambda x, pi, v: detector_forward(params, cfg, x, pi, v, mode))
+    out = []
+
+    def frame_iter():
+        if video:
+            per_seq = 16
+            for _ in range(frames // per_seq + 1):
+                seq = D.video_sequence(rng, per_seq, size=cfg["image_size"],
+                                       patch=cfg["patch_size"],
+                                       num_objects=int(rng.integers(*num_objects)))
+                for item in seq:
+                    yield item
+        else:
+            while True:
+                xs, _, ms = D.classification_batch(
+                    rng, 1, size=cfg["image_size"], patch=cfg["patch_size"],
+                    num_objects=int(rng.integers(*num_objects)))
+                scene = None
+                # classification_batch has no boxes; regenerate with Scene for boxes
+                yield xs[0], None, ms[0], None
+
+    count = 0
+    for item in frame_iter():
+        if video:
+            patches, boxes, labels, _ = item
+        else:
+            patches, boxes, labels, _ = item[0], None, item[2], None
+        if roi_mask:
+            # RoI pruning from (slightly dilated) GT labels — the trained-
+            # MGNet operating point without entangling MGNet error here.
+            side = int(np.sqrt(len(labels)))
+            m2 = labels.reshape(side, side) > 0.5
+            dil = m2.copy()
+            dil[1:, :] |= m2[:-1, :]
+            dil[:-1, :] |= m2[1:, :]
+            dil[:, 1:] |= m2[:, :-1]
+            dil[:, :-1] |= m2[:, 1:]
+            kept_idx = np.flatnonzero(dil.reshape(-1))
+            if len(kept_idx) == 0:
+                kept_idx = np.array([0])
+            skip = 1.0 - len(kept_idx) / len(labels)
+            n_full = len(labels)
+            xk = np.zeros((n_full, patches.shape[-1]), np.float32)
+            pi = np.zeros((n_full,), np.float32)
+            v = np.zeros((n_full,), np.float32)
+            xk[: len(kept_idx)] = patches[kept_idx]
+            pi[: len(kept_idx)] = kept_idx
+            v[: len(kept_idx)] = 1.0
+            s_k = np.asarray(fwd(jnp.asarray(xk), jnp.asarray(pi), jnp.asarray(v)))
+            scores = np.full((n_full,), -20.0, np.float32)  # pruned = background
+            scores[kept_idx] = s_k[: len(kept_idx)]
+        else:
+            skip = 0.0
+            pos = np.arange(len(labels), dtype=np.float32)
+            v = np.ones((len(labels),), np.float32)
+            scores = np.asarray(fwd(jnp.asarray(patches), jnp.asarray(pos), jnp.asarray(v)))
+        out.append((scores, labels, boxes, skip))
+        count += 1
+        if count >= frames:
+            break
+    return out

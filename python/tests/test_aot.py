@@ -1,0 +1,60 @@
+"""AOT export tests: the HLO-text artifacts must be complete (no elided
+constants) and structurally what the rust runtime expects."""
+
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    # --no-train keeps this fast; export structure is identical.
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--no-train"],
+        check=True,
+        capture_output=True,
+    )
+    return out
+
+
+def test_all_artifacts_present(artifacts):
+    names = {p.name for p in artifacts.glob("*.hlo.txt")}
+    expected = {
+        "mgnet_96.hlo.txt",
+        "vit_tiny_96_n9.hlo.txt",
+        "vit_tiny_96_n18.hlo.txt",
+        "vit_tiny_96_n27.hlo.txt",
+        "vit_tiny_96_n36.hlo.txt",
+        "vit_tiny_96_photonic_n36.hlo.txt",
+    }
+    assert expected <= names, names
+
+
+def test_no_elided_constants(artifacts):
+    # The silent failure mode: as_hlo_text() without print_large_constants
+    # renders weights as `{...}` which the rust parser reads as zeros.
+    for p in artifacts.glob("*.hlo.txt"):
+        text = p.read_text()
+        assert "{...}" not in text, f"{p.name} has elided constants"
+
+
+def test_entry_layouts(artifacts):
+    mg = (artifacts / "mgnet_96.hlo.txt").read_text()
+    assert "f32[36,768]" in mg.splitlines()[0], "MGNet entry must take (36,768) patches"
+    bb = (artifacts / "vit_tiny_96_n18.hlo.txt").read_text()
+    head = bb.splitlines()[0]
+    assert "f32[18,768]" in head and "f32[18]" in head
+    assert "->(f32[10]" in head.replace(" ", ""), head
+
+
+def test_params_saved(artifacts):
+    assert (artifacts / "params_mgnet_96.npz").exists()
+    assert (artifacts / "params_vit_tiny_96.npz").exists()
+
+
+def test_outputs_are_tuples(artifacts):
+    # return_tuple=True => ROOT is a tuple; rust unwraps with to_tuple().
+    text = (artifacts / "mgnet_96.hlo.txt").read_text()
+    assert "ROOT" in text and "tuple(" in text

@@ -1,0 +1,65 @@
+"""Synthetic-data generator tests (must mirror rust/src/sensor.rs)."""
+
+import numpy as np
+
+from compile import data as D
+
+
+def test_classification_batch_shapes():
+    rng = np.random.default_rng(0)
+    xs, ys, ms = D.classification_batch(rng, 4, size=96, patch=16)
+    assert xs.shape == (4, 36, 768)
+    assert ys.shape == (4,) and ms.shape == (4, 36)
+    assert xs.dtype == np.float32
+    assert np.all((xs >= 0) & (xs <= 1))
+    assert np.all((ys >= 0) & (ys < D.NUM_CLASSES))
+
+
+def test_patchify_layout_matches_rust():
+    # Channel-last within a patch: element 0..2 of patch 0 are the RGB of
+    # pixel (0,0) — same as Frame::patchify in rust/src/sensor.rs.
+    pixels = np.zeros((3, 32, 32), np.float32)
+    pixels[0, 0, 0] = 0.1
+    pixels[1, 0, 0] = 0.2
+    pixels[2, 0, 0] = 0.3
+    pixels[0, 0, 16] = 0.9  # first pixel of patch 1
+    p = D.patchify(pixels, 16)
+    assert p.shape == (4, 768)
+    np.testing.assert_allclose(p[0, :3], [0.1, 0.2, 0.3])
+    np.testing.assert_allclose(p[1, 0], 0.9)
+
+
+def test_patch_labels_mark_overlaps():
+    boxes = [(20, 20, 40, 40)]
+    lab = D.patch_labels(boxes, 96, 16)
+    side = 6
+    assert lab[1 * side + 1] == 1.0 and lab[2 * side + 2] == 1.0
+    assert lab[0] == 0.0
+    assert 1 <= lab.sum() <= 16
+
+
+def test_video_sequence_motion():
+    rng = np.random.default_rng(1)
+    seq = D.video_sequence(rng, 5, size=96)
+    assert len(seq) == 5
+    p0, _, _, _ = seq[0]
+    p4, _, _, _ = seq[4]
+    assert not np.allclose(p0, p4), "objects must move"
+
+
+def test_scene_objects_stay_in_bounds():
+    rng = np.random.default_rng(2)
+    scene = D.Scene(96, 3, rng)
+    for _ in range(100):
+        scene.step()
+        _, boxes, _ = scene.render(noise_sigma=0.0)
+        for (x0, y0, x1, y1) in boxes:
+            assert 0 <= x0 < x1 <= 96 and 0 <= y0 < y1 <= 96
+
+
+def test_label_is_largest_object_class():
+    rng = np.random.default_rng(3)
+    scene = D.Scene(96, 3, rng)
+    _, _, label = scene.render()
+    largest = max(scene.objects, key=lambda o: o["half"])
+    assert label == D.SHAPES.index(largest["shape"])

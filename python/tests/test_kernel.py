@@ -1,0 +1,164 @@
+"""L1 kernel tests: pallas photonic matmul + decomposed attention vs the
+pure-jnp oracles — the core correctness signal of the build path."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import (
+    PhotonicSpec,
+    crosstalk_matrix,
+    decomposed_attention_head,
+    photonic_matmul,
+)
+from compile.kernels.ref import attention_head_ref, ideal_matmul, photonic_matmul_ref
+
+
+def _rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# photonic matmul vs oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 32, 64),     # exactly one chunk
+        (8, 64, 128),    # exact tiles
+        (7, 100, 70),    # ragged both dims
+        (37, 192, 192),  # ViT-Tiny projection shape
+        (5, 33, 65),     # just past tile edges
+        (13, 768, 192),  # FFN-down shape at masked n
+    ],
+)
+def test_kernel_matches_ref(m, k, n):
+    rng = np.random.default_rng(m * 1000 + k + n)
+    x = _rand(rng, m, k)
+    w = _rand(rng, k, n, scale=0.1)
+    spec = PhotonicSpec()
+    got = photonic_matmul(x, w, spec)
+    want = photonic_matmul_ref(x, w, spec)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+def test_kernel_with_crosstalk_matches_ref():
+    rng = np.random.default_rng(42)
+    x = _rand(rng, 9, 96)
+    w = _rand(rng, 96, 130, scale=0.1)
+    spec = PhotonicSpec(crosstalk=crosstalk_matrix())
+    got = photonic_matmul(x, w, spec)
+    want = photonic_matmul_ref(x, w, spec)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+def test_ideal_spec_recovers_exact_matmul():
+    # With all physical effects off, the chunked kernel is exact fp32.
+    rng = np.random.default_rng(7)
+    x = _rand(rng, 11, 100)
+    w = _rand(rng, 100, 70, scale=0.1)
+    spec = PhotonicSpec(quantize_operands=False, quantize_readout=False)
+    got = photonic_matmul(x, w, spec)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ideal_matmul(x, w)), atol=1e-4)
+
+
+def test_quantized_error_small_but_nonzero():
+    rng = np.random.default_rng(11)
+    x = _rand(rng, 37, 192)
+    w = _rand(rng, 192, 192, scale=0.08)
+    out = photonic_matmul_ref(x, w, PhotonicSpec())
+    ideal = ideal_matmul(x, w)
+    rel = float(jnp.sqrt(jnp.mean((out - ideal) ** 2)) / jnp.std(ideal))
+    assert 0.0 < rel < 0.05, f"rel rmse {rel}"
+
+
+def test_crosstalk_degrades_with_lower_q():
+    # Lower Q -> broader resonances -> more inter-channel leakage -> larger
+    # deviation from the ideal product (the §IV resolution story).
+    rng = np.random.default_rng(13)
+    x = _rand(rng, 16, 64)
+    w = _rand(rng, 64, 64, scale=0.1)
+    ideal = ideal_matmul(x, w)
+
+    def err(q):
+        spec = PhotonicSpec(crosstalk=crosstalk_matrix(q_factor=q))
+        out = photonic_matmul_ref(x, w, spec)
+        return float(jnp.sqrt(jnp.mean((out - ideal) ** 2)))
+
+    assert err(1000) > err(5000) > 0
+
+
+def test_crosstalk_matrix_properties():
+    m = crosstalk_matrix()
+    assert m.shape == (32, 32)
+    np.testing.assert_allclose(np.diag(m), 1.0)
+    assert np.all(m >= 0) and np.all(m[~np.eye(32, dtype=bool)] < 0.01)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=20),
+    st.integers(min_value=1, max_value=100),
+    st.integers(min_value=1, max_value=100),
+)
+def test_hypothesis_shapes(m, k, n):
+    rng = np.random.default_rng(m + 31 * k + 977 * n)
+    x = _rand(rng, m, k)
+    w = _rand(rng, k, n, scale=0.2)
+    spec = PhotonicSpec()
+    got = photonic_matmul(x, w, spec)
+    want = photonic_matmul_ref(x, w, spec)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# decomposed attention vs direct oracle (Eq. 2 identity)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,d,dk", [(13, 192, 64), (37, 192, 64), (5, 128, 64)])
+def test_decomposed_attention_identity(n, d, dk):
+    rng = np.random.default_rng(n + d)
+    q = _rand(rng, n, dk)
+    w_k = _rand(rng, d, dk, scale=0.05)
+    x = _rand(rng, n, d)
+    v = _rand(rng, n, dk)
+    got = decomposed_attention_head(q, w_k, x, v)
+    want = attention_head_ref(q, w_k, x, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+def test_decomposed_attention_respects_mask():
+    rng = np.random.default_rng(3)
+    n, d, dk = 9, 128, 64
+    q = _rand(rng, n, dk)
+    w_k = _rand(rng, d, dk, scale=0.05)
+    x = _rand(rng, n, d)
+    v = _rand(rng, n, dk)
+    valid = jnp.asarray([1, 1, 1, 1, 1, 0, 0, 0, 0], jnp.float32)
+    got = decomposed_attention_head(q, w_k, x, v, valid)
+    want = attention_head_ref(q, w_k, x, v, valid)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+    # Changing a masked key/value must not change the output rows.
+    v2 = v.at[6].set(99.0)
+    x2 = x.at[6].set(-99.0)
+    got2 = decomposed_attention_head(q, w_k, x2, v2, valid)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(got2), atol=1e-3)
+
+
+def test_softmax_rows_sum_via_uniform_v():
+    # With V = all-ones, the attention output must be exactly 1 in every
+    # coordinate (softmax rows sum to 1).
+    rng = np.random.default_rng(5)
+    n, d, dk = 7, 64, 32
+    q = _rand(rng, n, dk)
+    w_k = _rand(rng, d, dk, scale=0.05)
+    x = _rand(rng, n, d)
+    v = jnp.ones((n, dk), jnp.float32)
+    got = decomposed_attention_head(q, w_k, x, v)
+    np.testing.assert_allclose(np.asarray(got), 1.0, atol=1e-5)

@@ -1,0 +1,138 @@
+"""L2 model tests: shapes, masking semantics, numerics-mode behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import PhotonicSpec, crosstalk_matrix
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = M.vit_config("tiny", 96, 10, depth=2)  # shallow for test speed
+    params = M.init_vit(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def mg():
+    cfg = M.mgnet_config(96)
+    params = M.init_mgnet(jax.random.PRNGKey(1), cfg)
+    return cfg, params
+
+
+def _inputs(cfg, n_kept, rng):
+    patches = jnp.asarray(rng.normal(size=(n_kept, cfg["patch_dim"])).astype(np.float32))
+    pos = jnp.arange(n_kept, dtype=jnp.float32)
+    valid = jnp.ones((n_kept,), jnp.float32)
+    return patches, pos, valid
+
+
+def test_backbone_output_shape(tiny):
+    cfg, params = tiny
+    rng = np.random.default_rng(0)
+    logits = M.vit_forward(params, cfg, *_inputs(cfg, 18, rng))
+    assert logits.shape == (10,)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_variant_table_matches_rust():
+    # Hyperparameters must mirror rust/src/vit/config.rs exactly.
+    assert M.VIT_VARIANTS["tiny"] == dict(embed_dim=192, num_heads=3, depth=12)
+    assert M.VIT_VARIANTS["small"] == dict(embed_dim=384, num_heads=6, depth=12)
+    assert M.VIT_VARIANTS["base"] == dict(embed_dim=768, num_heads=12, depth=12)
+    assert M.VIT_VARIANTS["large"] == dict(embed_dim=1024, num_heads=16, depth=24)
+    cfg = M.vit_config("tiny", 96, 10)
+    assert cfg["num_patches"] == 36 and cfg["patch_dim"] == 768
+
+
+def test_padding_invariance_fp32(tiny):
+    # Bucket padding (zeroed, invalid slots) must not change the logits in
+    # fp32 mode — the RoI bucket-routing contract.
+    cfg, params = tiny
+    rng = np.random.default_rng(1)
+    patches, pos, valid = _inputs(cfg, 9, rng)
+    base = M.vit_forward(params, cfg, patches, pos, valid, mode="fp32")
+    pad = 9
+    patches_p = jnp.concatenate([patches, jnp.full((pad, cfg["patch_dim"]), 7.7, jnp.float32)])
+    pos_p = jnp.concatenate([pos, jnp.zeros((pad,), jnp.float32)])
+    valid_p = jnp.concatenate([valid, jnp.zeros((pad,), jnp.float32)])
+    padded = M.vit_forward(params, cfg, patches_p, pos_p, valid_p, mode="fp32")
+    np.testing.assert_allclose(np.asarray(base), np.asarray(padded), atol=1e-4)
+
+
+def test_padding_near_invariance_quant(tiny):
+    # In quant mode the per-tensor scales see the padded rows, so allow a
+    # small tolerance (the serving pipeline relies on this being tight).
+    cfg, params = tiny
+    rng = np.random.default_rng(2)
+    patches, pos, valid = _inputs(cfg, 9, rng)
+    base = M.vit_forward(params, cfg, patches, pos, valid, mode="quant")
+    patches_p = jnp.concatenate([patches, jnp.zeros((9, cfg["patch_dim"]), jnp.float32)])
+    pos_p = jnp.concatenate([pos, jnp.zeros((9,), jnp.float32)])
+    valid_p = jnp.concatenate([valid, jnp.zeros((9,), jnp.float32)])
+    padded = M.vit_forward(params, cfg, patches_p, pos_p, valid_p, mode="quant")
+    assert np.argmax(np.asarray(base)) == np.argmax(np.asarray(padded))
+    np.testing.assert_allclose(np.asarray(base), np.asarray(padded), atol=0.15)
+
+
+def test_quant_close_to_fp32(tiny):
+    # 8-bit QAT numerics track fp32 closely (the Table-I premise).
+    cfg, params = tiny
+    rng = np.random.default_rng(3)
+    args = _inputs(cfg, 36, rng)
+    fp = M.vit_forward(params, cfg, *args, mode="fp32")
+    q = M.vit_forward(params, cfg, *args, mode="quant")
+    rel = float(jnp.max(jnp.abs(fp - q)) / (jnp.max(jnp.abs(fp)) + 1e-9))
+    assert rel < 0.25, f"rel {rel}"
+
+
+def test_photonic_mode_runs_and_tracks_quant(tiny):
+    cfg, params = tiny
+    rng = np.random.default_rng(4)
+    args = _inputs(cfg, 9, rng)
+    q = M.vit_forward(params, cfg, *args, mode="quant")
+    spec = PhotonicSpec(crosstalk=crosstalk_matrix())
+    ph = M.vit_forward(params, cfg, *args, mode="photonic", spec=spec)
+    assert np.all(np.isfinite(np.asarray(ph)))
+    # The optical path adds ADC/crosstalk noise but stays in the same regime.
+    rel = float(jnp.max(jnp.abs(ph - q)) / (jnp.max(jnp.abs(q)) + 1e-9))
+    assert rel < 1.0, f"rel {rel}"
+
+
+def test_mgnet_scores_shape(mg):
+    cfg, params = mg
+    rng = np.random.default_rng(5)
+    patches = jnp.asarray(rng.normal(size=(cfg["num_patches"], cfg["patch_dim"])).astype(np.float32))
+    scores = M.mgnet_forward(params, cfg, patches)
+    assert scores.shape == (36,)
+    assert np.all(np.isfinite(np.asarray(scores)))
+
+
+def test_mgnet_detection_config():
+    cfg = M.mgnet_config(224, embed_dim=384, num_heads=6)
+    assert cfg["num_patches"] == 196
+    assert cfg["embed_dim"] == 384 and cfg["num_heads"] == 6
+
+
+def test_params_roundtrip(tmp_path, tiny):
+    cfg, params = tiny
+    path = tmp_path / "p.npz"
+    M.save_params(path, params)
+    loaded = M.load_params(path, params)
+    a = M.flatten_params(params)
+    b = M.flatten_params(loaded)
+    assert a.keys() == b.keys()
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_param_count_matches_rust(tiny):
+    # flattened parameter element count == rust VitConfig::param_count()
+    cfg = M.vit_config("tiny", 224, 1000)
+    params = M.init_vit(jax.random.PRNGKey(0), cfg)
+    total = sum(int(np.prod(v.shape)) for v in M.flatten_params(params).values())
+    # rust: 5_717_416 for tiny@224 with 1000 classes (asserted 5-7M there).
+    assert 5_000_000 < total < 7_000_000

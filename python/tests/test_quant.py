@@ -1,0 +1,94 @@
+"""Tests for the QAT quantization primitives."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.quant import calibrate_scale, fake_quant, fake_quant_fixed, qmax, ste_round
+
+
+def test_qmax():
+    assert qmax(8) == 127
+    assert qmax(4) == 7
+
+
+def test_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(256,)).astype(np.float32))
+    scale = calibrate_scale(x, 8)
+    err = jnp.max(jnp.abs(fake_quant(x, 8) - x))
+    assert float(err) <= float(scale) / 2 + 1e-7
+
+
+def test_idempotent():
+    x = jnp.asarray([0.5, -1.25, 2.0, 0.0], jnp.float32)
+    once = fake_quant(x, 8)
+    # A fixed-scale requantization of an already-quantized tensor is exact.
+    scale = calibrate_scale(x, 8)
+    again = fake_quant_fixed(once, scale, 8)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(again), atol=1e-7)
+
+
+def test_ste_gradient_is_identity():
+    g = jax.grad(lambda x: jnp.sum(ste_round(x) * 3.0))(jnp.asarray([0.3, 1.7]))
+    np.testing.assert_allclose(np.asarray(g), [3.0, 3.0])
+
+
+def test_fake_quant_gradient_flows():
+    # QAT requirement: gradients pass through the quantizer.
+    g = jax.grad(lambda x: jnp.sum(fake_quant(x, 8) ** 2))(jnp.asarray([0.5, -0.25]))
+    assert np.all(np.isfinite(np.asarray(g)))
+    assert float(jnp.max(jnp.abs(g))) > 0
+
+
+def test_zero_tensor_safe():
+    x = jnp.zeros((16,), jnp.float32)
+    out = fake_quant(x, 8)
+    assert np.all(np.asarray(out) == 0)
+
+
+def test_fixed_scale_clips():
+    x = jnp.asarray([100.0, -100.0], jnp.float32)
+    out = fake_quant_fixed(x, 0.01, 8)
+    np.testing.assert_allclose(np.asarray(out), [1.27, -1.27], atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=2, max_value=8),
+    st.lists(st.floats(min_value=-50, max_value=50, allow_nan=False), min_size=1, max_size=64),
+)
+def test_hypothesis_error_bound(bits, values):
+    x = jnp.asarray(np.array(values, dtype=np.float32))
+    scale = calibrate_scale(x, bits)
+    err = jnp.max(jnp.abs(fake_quant(x, bits) - x))
+    assert float(err) <= float(scale) / 2 + 1e-5
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=3, max_value=8))
+def test_hypothesis_levels_used(bits):
+    # The extreme values must map to the extreme grid points.
+    x = jnp.asarray([1.0, -1.0, 0.0], jnp.float32)
+    out = np.asarray(fake_quant(x, bits))
+    np.testing.assert_allclose(out[0], 1.0, atol=1e-6)
+    np.testing.assert_allclose(out[1], -1.0, atol=1e-6)
+
+
+def test_more_bits_less_error():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(512,)).astype(np.float32))
+    e4 = float(jnp.mean(jnp.abs(fake_quant(x, 4) - x)))
+    e8 = float(jnp.mean(jnp.abs(fake_quant(x, 8) - x)))
+    assert e8 < e4 / 4
+
+
+@pytest.mark.parametrize("bits", [4, 6, 8])
+def test_quant_grid_size(bits):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(2048,)).astype(np.float32))
+    levels = np.unique(np.asarray(fake_quant(x, bits)))
+    assert len(levels) <= 2 ** bits

@@ -1,0 +1,86 @@
+//! Eq. 2 ablation: the matrix-decomposed attention dataflow vs the direct
+//! (naive Q·K^T) flow, swept over token count and tuning latency.
+//!
+//! Reproduction finding (EXPERIMENTS.md): the decomposition removes the
+//! K^T tuning stall and the K buffer round-trip, but costs h× more optical
+//! MACs on the score MatMul. It wins in the paper's regime — slow tuning
+//! and RoI-masked (small) token counts — and *loses* at large n with fast
+//! tuning. This bench prints the full regime map plus the buffer-traffic
+//! savings, which hold everywhere.
+
+use optovit::arch::core::CoreParams;
+use optovit::arch::scheduler::AttentionSchedule;
+use optovit::arch::workload::Workload;
+use optovit::util::bench::time_fn;
+use optovit::util::table::Table;
+use optovit::vit::{VitConfig, VitVariant};
+
+fn main() {
+    let cfg = VitConfig::variant(VitVariant::Tiny, 96, 10);
+
+    println!("== Eq. 2 regime map: attention-phase makespan, decomposed vs direct ==");
+    println!("(cells: decomposed/direct makespan ratio; <1 = decomposition wins)\n");
+    let tokens = [5usize, 9, 13, 19, 37];
+    let tunes = [40.0, 100.0, 250.0, 500.0, 1000.0];
+    let mut t = Table::new(
+        std::iter::once("tune_ns \\ n".to_string())
+            .chain(tokens.iter().map(|n| n.to_string()))
+            .collect::<Vec<_>>(),
+    );
+    for &tune in &tunes {
+        let p = CoreParams { tune_ns: tune, ..CoreParams::default() };
+        let mut row = vec![format!("{tune:.0}")];
+        for &n in &tokens {
+            let d = AttentionSchedule::attention_only(&cfg, n, p, 1, false).schedule(5).1;
+            let dc = AttentionSchedule::attention_only(&cfg, n, p, 1, true).schedule(5).1;
+            row.push(format!("{:.3}", dc.makespan_ns / d.makespan_ns));
+        }
+        t.row(row);
+    }
+    print!("{}", t.render());
+
+    println!("\n== exposed tuning time per frame (n = 13, RoI-masked) ==");
+    let mut t = Table::new(vec!["tune_ns", "direct (us)", "decomposed (us)"]);
+    for &tune in &tunes {
+        let p = CoreParams { tune_ns: tune, ..CoreParams::default() };
+        let d = AttentionSchedule::attention_only(&cfg, 13, p, 1, false).schedule(5).1;
+        let dc = AttentionSchedule::attention_only(&cfg, 13, p, 1, true).schedule(5).1;
+        t.row(vec![
+            format!("{tune:.0}"),
+            format!("{:.2}", d.exposed_tune_ns / 1000.0),
+            format!("{:.2}", dc.exposed_tune_ns / 1000.0),
+        ]);
+    }
+    print!("{}", t.render());
+
+    println!("\n== MAC and buffering cost (whole network, Tiny-96) ==");
+    let direct = Workload::vit(&cfg, cfg.num_patches(), false);
+    let decomp = Workload::vit(&cfg, cfg.num_patches(), true);
+    let mut t = Table::new(vec!["flow", "total MACs", "intermediate tunings", "K buffered?"]);
+    t.row(vec![
+        "direct".to_string(),
+        direct.total_macs().to_string(),
+        direct.intermediate_tunings().to_string(),
+        "yes (h*n*dk per block)".to_string(),
+    ]);
+    t.row(vec![
+        "decomposed (Eq. 2)".to_string(),
+        decomp.total_macs().to_string(),
+        decomp.intermediate_tunings().to_string(),
+        "no".to_string(),
+    ]);
+    print!("{}", t.render());
+    println!(
+        "\ndecomposition MAC overhead: {:+.1}%; intermediate tunings removed: {}",
+        (decomp.total_macs() as f64 / direct.total_macs() as f64 - 1.0) * 100.0,
+        direct.intermediate_tunings() - decomp.intermediate_tunings()
+    );
+
+    let p = CoreParams::default();
+    let timing = time_fn("regime map cell (schedule pair)", 1, 10, || {
+        let d = AttentionSchedule::attention_only(&cfg, 13, p, 1, false).schedule(5).1;
+        let dc = AttentionSchedule::attention_only(&cfg, 13, p, 1, true).schedule(5).1;
+        d.makespan_ns + dc.makespan_ns
+    });
+    println!("\n{}", timing.summary());
+}

@@ -1,0 +1,54 @@
+//! Fig. 10 reproduction: energy with and without the MGNet RoI front end
+//! for the baseline (Base) backbone at 224² and 96², across RoI keep
+//! ratios — energy savings scale with the number of skipped patches.
+
+use optovit::energy::AcceleratorModel;
+use optovit::util::bench::time_fn;
+use optovit::util::table::{si_energy, Table};
+use optovit::vit::{MgnetConfig, VitConfig, VitVariant};
+
+fn main() {
+    let m = AcceleratorModel::default();
+    println!("== Fig. 10: baseline ViT energy, with vs without MGNet RoI ==\n");
+    for res in [224usize, 96] {
+        let cfg = VitConfig::variant(VitVariant::Base, res, 1000);
+        let mg = MgnetConfig::classification(res);
+        let full = m.frame_energy(&cfg, cfg.num_patches(), true);
+        println!("-- input {res}x{res} ({} patches) --", cfg.num_patches());
+        let mut t = Table::new(vec![
+            "operating point", "kept patches", "skip% (pixel)", "energy/frame", "saving %",
+        ]);
+        t.row(vec![
+            "no MGNet (all patches)".to_string(),
+            cfg.num_patches().to_string(),
+            "0.00".to_string(),
+            si_energy(full.total_j()),
+            "ref".to_string(),
+        ]);
+        for keep in [0.75, 0.50, 0.33, 0.25, 0.15] {
+            let kept = ((cfg.num_patches() as f64) * keep).round().max(1.0) as usize;
+            let r = m.masked_energy(&cfg, &mg, kept);
+            let sav = (1.0 - r.total_j() / full.total_j()) * 100.0;
+            t.row(vec![
+                format!("MGNet keep {:.0}%", keep * 100.0),
+                kept.to_string(),
+                format!("{:.2}", 1.0 - kept as f64 / cfg.num_patches() as f64),
+                si_energy(r.total_j()),
+                format!("{sav:.1}"),
+            ]);
+        }
+        print!("{}", t.render());
+        let best = m.masked_energy(&cfg, &mg, ((cfg.num_patches() as f64) * 0.15) as usize);
+        println!(
+            "max saving at this resolution: {:.1}% (paper: up to 84% across operating points)\n",
+            (1.0 - best.total_j() / full.total_j()) * 100.0
+        );
+    }
+
+    let cfg = VitConfig::variant(VitVariant::Base, 224, 1000);
+    let mg = MgnetConfig::classification(224);
+    let timing = time_fn("masked_energy (Base-224)", 1, 50, || {
+        m.masked_energy(&cfg, &mg, 65).total_j()
+    });
+    println!("{}", timing.summary());
+}

@@ -1,0 +1,48 @@
+//! Fig. 11 reproduction: processing latency with and without MGNet RoI
+//! selection, same grid as Fig. 10 — latency reduction tracks (and
+//! slightly exceeds) the energy reduction, per the paper.
+
+use optovit::energy::AcceleratorModel;
+use optovit::util::bench::time_fn;
+use optovit::util::table::{si_time, Table};
+use optovit::vit::{MgnetConfig, VitConfig, VitVariant};
+
+fn main() {
+    let m = AcceleratorModel::default();
+    println!("== Fig. 11: baseline ViT latency, with vs without MGNet RoI ==\n");
+    for res in [224usize, 96] {
+        let cfg = VitConfig::variant(VitVariant::Base, res, 1000);
+        let mg = MgnetConfig::classification(res);
+        let full = m.frame_report("full", &cfg, cfg.num_patches(), true);
+        println!("-- input {res}x{res} --");
+        let mut t = Table::new(vec![
+            "operating point", "kept", "latency/frame", "reduction %",
+        ]);
+        t.row(vec![
+            "no MGNet".to_string(),
+            cfg.num_patches().to_string(),
+            si_time(full.delay.total_s()),
+            "ref".to_string(),
+        ]);
+        for keep in [0.75, 0.50, 0.33, 0.25, 0.15] {
+            let kept = ((cfg.num_patches() as f64) * keep).round().max(1.0) as usize;
+            let r = m.masked_report("mask", &cfg, &mg, kept);
+            let red = (1.0 - r.delay.total_s() / full.delay.total_s()) * 100.0;
+            t.row(vec![
+                format!("MGNet keep {:.0}%", keep * 100.0),
+                kept.to_string(),
+                si_time(r.delay.total_s()),
+                format!("{red:.1}"),
+            ]);
+        }
+        print!("{}", t.render());
+        println!();
+    }
+
+    let cfg = VitConfig::variant(VitVariant::Base, 96, 1000);
+    let mg = MgnetConfig::classification(96);
+    let timing = time_fn("masked delay report (Base-96)", 1, 5, || {
+        m.masked_report("x", &cfg, &mg, 12).delay.total_s()
+    });
+    println!("{}", timing.summary());
+}

@@ -1,0 +1,79 @@
+//! Fig. 5 ablation: the five-core pipelined flow vs a single-core serial
+//! execution, and core-count scaling — quantifying how much the pipeline
+//! (tuning hidden behind compute, heads overlapped across cores) buys.
+
+use optovit::arch::core::{CoreParams, OpticalCore};
+use optovit::arch::scheduler::AttentionSchedule;
+use optovit::arch::workload::Workload;
+use optovit::util::bench::time_fn;
+use optovit::util::table::{si_time, Table};
+use optovit::vit::{VitConfig, VitVariant};
+
+fn main() {
+    let cfg = VitConfig::variant(VitVariant::Tiny, 96, 10);
+    let n = cfg.seq_len();
+
+    println!("== Fig. 5 ablation: pipelined 5-core flow vs serial baseline ==\n");
+    let params = CoreParams::default();
+    let core = OpticalCore::new(params);
+
+    // Serial lower bound: all matmuls on one core, every tuning event
+    // exposed (no ping-pong, no overlap).
+    let w = Workload::vit(&cfg, cfg.num_patches(), true);
+    let serial_ns = core.serial_time_ns(&core.workload_cost(&w));
+
+    let single_frame =
+        AttentionSchedule::decomposed(&cfg, n, params, 1).schedule(params.num_cores).1;
+    let steady = AttentionSchedule::steady_state_frame_ns(&cfg, n, params, true);
+
+    let mut t = Table::new(vec!["configuration", "per-frame time", "speedup vs serial"]);
+    t.row(vec![
+        "serial, 1 core, exposed tuning".to_string(),
+        si_time(serial_ns * 1e-9),
+        "1.00x".to_string(),
+    ]);
+    t.row(vec![
+        "5-core pipeline, single frame".to_string(),
+        si_time(single_frame.makespan_ns * 1e-9),
+        format!("{:.2}x", serial_ns / single_frame.makespan_ns),
+    ]);
+    t.row(vec![
+        "5-core pipeline, steady state".to_string(),
+        si_time(steady * 1e-9),
+        format!("{:.2}x", serial_ns / steady),
+    ]);
+    print!("{}", t.render());
+
+    println!("\n== core-count scaling (steady-state frame time, Tiny-96) ==");
+    let mut t = Table::new(vec!["cores", "frame time", "mean core util"]);
+    for cores in [5usize, 6, 8, 10] {
+        let p = CoreParams { num_cores: cores, ..params };
+        let st = AttentionSchedule::decomposed(&cfg, n, p, 2).schedule(cores).1;
+        let frame = AttentionSchedule::steady_state_frame_ns(&cfg, n, p, true);
+        t.row(vec![
+            cores.to_string(),
+            si_time(frame * 1e-9),
+            format!("{:.2}", st.mean_core_utilization),
+        ]);
+    }
+    print!("{}", t.render());
+
+    println!("\n== tuning-time sensitivity (steady state, 5 cores) ==");
+    let mut t = Table::new(vec!["tune_ns", "frame time", "exposed tuning/frame"]);
+    for tune in [40.0, 100.0, 250.0, 500.0, 1000.0] {
+        let p = CoreParams { tune_ns: tune, ..params };
+        let frame = AttentionSchedule::steady_state_frame_ns(&cfg, n, p, true);
+        let st = AttentionSchedule::decomposed(&cfg, n, p, 1).schedule(5).1;
+        t.row(vec![
+            format!("{tune:.0}"),
+            si_time(frame * 1e-9),
+            si_time(st.exposed_tune_ns * 1e-9),
+        ]);
+    }
+    print!("{}", t.render());
+
+    let timing = time_fn("schedule build+run (Tiny-96, 1 frame)", 1, 10, || {
+        AttentionSchedule::decomposed(&cfg, n, params, 1).schedule(5).1.makespan_ns
+    });
+    println!("\n{}", timing.summary());
+}

@@ -1,0 +1,30 @@
+//! §IV "Performance Comparison Vs. Common Computing Platforms": Opto-ViT
+//! vs Xilinx VCK190 and NVIDIA A100 (INT8), per the configurations of [54].
+
+use optovit::baselines;
+use optovit::util::bench::time_fn;
+use optovit::util::table::Table;
+
+fn main() {
+    println!("== platform comparison (same ViT, INT8 everywhere) ==\n");
+    let ours = baselines::optovit_kfps_per_watt();
+    let mut t = Table::new(vec!["platform", "KFPS/W", "Opto-ViT advantage"]);
+    t.row(vec!["Opto-ViT (this work)".to_string(), format!("{ours:.2}"), "ref".to_string()]);
+    for p in baselines::reference_platforms() {
+        t.row(vec![
+            p.name.to_string(),
+            format!("{:.2}", p.kfps_per_watt),
+            format!("{:.0}x", ours / p.kfps_per_watt),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "\npaper: 100.4 vs 1.42 (VCK190) and 0.86 (A100) KFPS/W — two to three orders \
+         of magnitude; measured advantage: {:.0}x / {:.0}x",
+        ours / 1.42,
+        ours / 0.86
+    );
+
+    let timing = time_fn("platform table", 2, 50, || baselines::optovit_kfps_per_watt());
+    println!("\n{}", timing.summary());
+}

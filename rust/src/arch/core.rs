@@ -1,0 +1,259 @@
+//! Optical processing core cycle/cost model (§III, Fig. 3(b) & Fig. 4).
+//!
+//! One core = 32 VCSEL wavelength channels × 64 waveguide arms, a BPD per
+//! arm, DACs feeding the MR tuning circuits and VCSEL drivers, ADCs reading
+//! the BPDs. Per cycle it performs a 32-input × 64-column chunk of a VVM;
+//! a full `(m×k)·(k×n)` MatMul is swept over `m · ceil(k/32) · ceil(n/64)`
+//! cycles with electronic partial-sum accumulation across k-chunks (Fig. 6).
+
+use super::workload::{MatMulOp, Workload};
+
+/// Dimensions and clocks of one optical core.
+#[derive(Debug, Clone, Copy)]
+pub struct CoreParams {
+    /// WDM input channels (VCSELs) — 32 in the paper.
+    pub wavelengths: usize,
+    /// Waveguide arms (output columns) — 64 = d_k in the paper.
+    pub arms: usize,
+    /// Compute cycle time (ns): bounded by the ADC sample rate, not the
+    /// optics (photodetection runs >100 GHz; the 1 GS/s ADC is the wall).
+    pub cycle_ns: f64,
+    /// Time to (re)tune one full 32×64 MR bank (ns). All MRs in a bank tune
+    /// in parallel off their own DACs (DAC settle + ring
+    /// electro-optic relaxation). Cores carry **double-buffered (ping-pong)
+    /// bank pairs**: the tuning engine loads one bank while the other
+    /// computes — the reading of Fig. 5's "utilizes idle periods for
+    /// tuning" under which the Fig. 9 delay breakdown stays compute-bound.
+    pub tune_ns: f64,
+    /// Number of optical cores in the accelerator (5 in the paper).
+    pub num_cores: usize,
+}
+
+impl Default for CoreParams {
+    fn default() -> Self {
+        CoreParams { wavelengths: 32, arms: 64, cycle_ns: 1.0, tune_ns: 250.0, num_cores: 5 }
+    }
+}
+
+impl CoreParams {
+    /// MRs per bank (one weight element per MR).
+    pub fn mrs_per_bank(&self) -> usize {
+        self.wavelengths * self.arms
+    }
+
+    /// Peak MACs per cycle per core.
+    pub fn macs_per_cycle(&self) -> u64 {
+        (self.wavelengths * self.arms) as u64
+    }
+}
+
+/// Cost of running one MatMul on one core.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MatMulCost {
+    /// Compute cycles (each = one 32×64 chunk VVM).
+    pub cycles: u64,
+    /// MR-bank re-tuning events (each loads 32×64 weights).
+    pub tune_events: u64,
+    /// VCSEL symbols emitted (input-side DAC conversions too).
+    pub vcsel_symbols: u64,
+    /// BPD samples == ADC conversions (one per arm per cycle).
+    pub adc_conversions: u64,
+    /// Weight-side DAC conversions (MR tuning values).
+    pub weight_dac_conversions: u64,
+    /// Electronic partial-sum additions across k-chunks.
+    pub partial_sum_adds: u64,
+    /// Useful (unpadded) MACs.
+    pub macs: u64,
+    /// Padded MAC slots (utilization denominator).
+    pub mac_slots: u64,
+    /// Bytes moved: stationary weights loaded once per tuning event.
+    pub weight_bytes: u64,
+    /// Bytes moved: streamed input chunks.
+    pub input_bytes: u64,
+    /// Bytes moved: result write-back.
+    pub output_bytes: u64,
+}
+
+impl MatMulCost {
+    pub fn add(&mut self, o: &MatMulCost) {
+        self.cycles += o.cycles;
+        self.tune_events += o.tune_events;
+        self.vcsel_symbols += o.vcsel_symbols;
+        self.adc_conversions += o.adc_conversions;
+        self.weight_dac_conversions += o.weight_dac_conversions;
+        self.partial_sum_adds += o.partial_sum_adds;
+        self.macs += o.macs;
+        self.mac_slots += o.mac_slots;
+        self.weight_bytes += o.weight_bytes;
+        self.input_bytes += o.input_bytes;
+        self.output_bytes += o.output_bytes;
+    }
+
+    /// Fraction of MAC slots doing useful work (padding loss).
+    pub fn utilization(&self) -> f64 {
+        if self.mac_slots == 0 {
+            0.0
+        } else {
+            self.macs as f64 / self.mac_slots as f64
+        }
+    }
+}
+
+/// The cycle/cost model of a single optical core.
+#[derive(Debug, Clone, Copy)]
+pub struct OpticalCore {
+    pub params: CoreParams,
+}
+
+impl OpticalCore {
+    pub fn new(params: CoreParams) -> Self {
+        OpticalCore { params }
+    }
+
+    /// Cost of a `(m×k)·(k×n)` MatMul (single instance).
+    ///
+    /// Weight-stationary sweep: for each of `ceil(n/64)` column tiles and
+    /// `ceil(k/32)` k-chunks, tune the bank once and stream all `m` rows
+    /// through it (Fig. 6's color-coded schedule). Partial sums accumulate
+    /// in the electronic unit's 64-wide register file across k-chunks — no
+    /// memory round-trip (the buffering the decomposition avoids is for
+    /// *intermediate matrices*, not these in-flight partials).
+    pub fn matmul_cost(&self, m: usize, k: usize, n: usize) -> MatMulCost {
+        let w = self.params.wavelengths;
+        let a = self.params.arms;
+        let k_chunks = k.div_ceil(w) as u64;
+        let col_tiles = n.div_ceil(a) as u64;
+        let m64 = m as u64;
+
+        let tune_events = k_chunks * col_tiles;
+        let cycles = m64 * k_chunks * col_tiles;
+        let vcsel_symbols = cycles * w as u64;
+        let adc_conversions = cycles * a as u64;
+        let weight_dac_conversions = tune_events * self.params.mrs_per_bank() as u64;
+        // Each output element accumulates k_chunks partials => k_chunks-1 adds.
+        let partial_sum_adds = m64 * (n as u64) * (k_chunks - 1);
+        let macs = (m * k * n) as u64;
+        let mac_slots = cycles * self.params.macs_per_cycle();
+        MatMulCost {
+            cycles,
+            tune_events,
+            vcsel_symbols,
+            adc_conversions,
+            weight_dac_conversions,
+            partial_sum_adds,
+            macs,
+            mac_slots,
+            weight_bytes: tune_events * self.params.mrs_per_bank() as u64, // 8-bit weights
+            input_bytes: m64 * k_chunks * w as u64, // 8-bit inputs, re-read per col tile? buffered in driver
+            output_bytes: m64 * n as u64,           // 8-bit outputs
+        }
+    }
+
+    /// Cost for a [`MatMulOp`] (multiplies by its instance count).
+    pub fn op_cost(&self, op: &MatMulOp) -> MatMulCost {
+        let unit = self.matmul_cost(op.m, op.k, op.n);
+        let c = op.count as u64;
+        MatMulCost {
+            cycles: unit.cycles * c,
+            tune_events: unit.tune_events * c,
+            vcsel_symbols: unit.vcsel_symbols * c,
+            adc_conversions: unit.adc_conversions * c,
+            weight_dac_conversions: unit.weight_dac_conversions * c,
+            partial_sum_adds: unit.partial_sum_adds * c,
+            macs: unit.macs * c,
+            mac_slots: unit.mac_slots * c,
+            weight_bytes: unit.weight_bytes * c,
+            input_bytes: unit.input_bytes * c,
+            output_bytes: unit.output_bytes * c,
+        }
+    }
+
+    /// Aggregate cost of an entire workload on one core (no parallelism).
+    pub fn workload_cost(&self, w: &Workload) -> MatMulCost {
+        let mut total = MatMulCost::default();
+        for op in &w.matmuls {
+            total.add(&self.op_cost(op));
+        }
+        total
+    }
+
+    /// Serial (un-pipelined) execution time of a cost on one core (ns).
+    pub fn serial_time_ns(&self, c: &MatMulCost) -> f64 {
+        c.tune_events as f64 * self.params.tune_ns + c.cycles as f64 * self.params.cycle_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vit::{VitConfig, VitVariant};
+
+    fn core() -> OpticalCore {
+        OpticalCore::new(CoreParams::default())
+    }
+
+    #[test]
+    fn exact_tile_fit_has_full_utilization() {
+        // (8 × 64)·(64 × 128): k = 2 chunks, n = 2 tiles, no padding.
+        let c = core().matmul_cost(8, 64, 128);
+        assert_eq!(c.cycles, 8 * 2 * 2);
+        assert_eq!(c.tune_events, 4);
+        assert!((c.utilization() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn padding_lowers_utilization() {
+        let c = core().matmul_cost(5, 33, 65); // both dims just past a tile edge
+        assert!(c.utilization() < 0.5, "util {}", c.utilization());
+    }
+
+    #[test]
+    fn adc_conversions_per_cycle_equal_arms() {
+        let c = core().matmul_cost(10, 32, 64);
+        assert_eq!(c.adc_conversions, c.cycles * 64);
+        assert_eq!(c.vcsel_symbols, c.cycles * 32);
+    }
+
+    #[test]
+    fn partial_sum_adds_counted() {
+        let c = core().matmul_cost(4, 96, 64); // 3 k-chunks
+        assert_eq!(c.partial_sum_adds, 4 * 64 * 2);
+    }
+
+    #[test]
+    fn weight_dacs_match_bank_loads() {
+        let c = core().matmul_cost(4, 96, 64);
+        assert_eq!(c.weight_dac_conversions, c.tune_events * 2048);
+    }
+
+    #[test]
+    fn tiny96_cycle_count_magnitude() {
+        let cfg = VitConfig::variant(VitVariant::Tiny, 96, 10);
+        let w = Workload::vit(&cfg, cfg.num_patches(), true);
+        let c = core().workload_cost(&w);
+        // ~0.2 GMACs over a 2048-MAC/cycle core with padding: ~100-200 k cycles.
+        assert!((80_000..260_000).contains(&c.cycles), "cycles {}", c.cycles);
+        // ADC dominates conversions.
+        assert!(c.adc_conversions > c.tune_events * 100);
+    }
+
+    #[test]
+    fn serial_time_includes_tuning() {
+        let oc = core();
+        let c = oc.matmul_cost(1, 32, 64);
+        let t = oc.serial_time_ns(&c);
+        let expected = oc.params.tune_ns + oc.params.cycle_ns;
+        assert!((t - expected).abs() < 1e-9, "t {t}");
+    }
+
+    #[test]
+    fn cost_addition_is_componentwise() {
+        let oc = core();
+        let a = oc.matmul_cost(8, 64, 128);
+        let b = oc.matmul_cost(5, 33, 65);
+        let mut s = a;
+        s.add(&b);
+        assert_eq!(s.cycles, a.cycles + b.cycles);
+        assert_eq!(s.macs, a.macs + b.macs);
+    }
+}

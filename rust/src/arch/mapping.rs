@@ -1,0 +1,193 @@
+//! Matrix splitting and hardware mapping (Fig. 6).
+//!
+//! Produces the explicit chunk schedule for a MatMul: which 32-element input
+//! segment meets which 32×64 weight block in which time slot, and how the
+//! partial sums recombine. The serving runtime uses this plan to drive the
+//! emulated optical core; the property tests verify every (row, k, col)
+//! element is covered exactly once — the invariant behind Fig. 6's
+//! color-coded schedule.
+
+use super::core::CoreParams;
+
+/// One scheduled chunk: input segment `k_range` of row `row` hits weight
+/// block (`k_range` × `col_range`) on core `core` in slot `slot`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkPlan {
+    pub row: usize,
+    /// Start (inclusive) of the k segment.
+    pub k_start: usize,
+    /// End (exclusive) of the k segment.
+    pub k_end: usize,
+    /// Start (inclusive) of the output-column tile.
+    pub col_start: usize,
+    /// End (exclusive) of the output-column tile.
+    pub col_end: usize,
+    /// Which optical core executes this chunk.
+    pub core: usize,
+    /// Time slot index on that core (each slot = one cycle).
+    pub slot: u64,
+    /// Whether a bank re-tune precedes this chunk on its core.
+    pub retune: bool,
+}
+
+/// Complete mapping of a `(m×k)·(k×n)` MatMul onto `num_cores` cores.
+#[derive(Debug, Clone)]
+pub struct MappingPlan {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub chunks: Vec<ChunkPlan>,
+    pub params: CoreParams,
+}
+
+impl MappingPlan {
+    /// Weight-stationary plan: column tiles are distributed round-robin
+    /// across cores; within a core, for each (col_tile, k_chunk) the bank is
+    /// tuned once and all `m` rows stream through (Fig. 6).
+    pub fn weight_stationary(m: usize, k: usize, n: usize, params: CoreParams) -> Self {
+        assert!(m > 0 && k > 0 && n > 0, "degenerate matmul {m}x{k}x{n}");
+        let w = params.wavelengths;
+        let a = params.arms;
+        let k_chunks = k.div_ceil(w);
+        let col_tiles = n.div_ceil(a);
+        let mut chunks = Vec::with_capacity(m * k_chunks * col_tiles);
+        let mut next_slot = vec![0u64; params.num_cores];
+        for ct in 0..col_tiles {
+            let core = ct % params.num_cores;
+            let col_start = ct * a;
+            let col_end = n.min(col_start + a);
+            for kc in 0..k_chunks {
+                let k_start = kc * w;
+                let k_end = k.min(k_start + w);
+                for row in 0..m {
+                    let slot = next_slot[core];
+                    next_slot[core] += 1;
+                    chunks.push(ChunkPlan {
+                        row,
+                        k_start,
+                        k_end,
+                        col_start,
+                        col_end,
+                        core,
+                        slot,
+                        retune: row == 0, // bank re-tuned at the start of each (ct, kc) sweep
+                    });
+                }
+            }
+        }
+        MappingPlan { m, k, n, chunks, params }
+    }
+
+    /// Number of tuning events in the plan.
+    pub fn tune_events(&self) -> usize {
+        self.chunks.iter().filter(|c| c.retune).count()
+    }
+
+    /// Makespan in slots across cores (ignoring tuning overlap).
+    pub fn makespan_slots(&self) -> u64 {
+        let mut per_core = vec![0u64; self.params.num_cores];
+        for c in &self.chunks {
+            per_core[c.core] = per_core[c.core].max(c.slot + 1);
+        }
+        per_core.into_iter().max().unwrap_or(0)
+    }
+
+    /// Verify the plan covers every (row, k, col) cell exactly once.
+    /// Returns the first violation description, if any.
+    pub fn validate_coverage(&self) -> Option<String> {
+        // Count coverage with a dense grid over (row, k_chunk, col_tile):
+        // chunk boundaries are aligned so cell-level coverage reduces to
+        // chunk-level coverage × range checks.
+        let w = self.params.wavelengths;
+        let a = self.params.arms;
+        let k_chunks = self.k.div_ceil(w);
+        let col_tiles = self.n.div_ceil(a);
+        let mut seen = vec![0u32; self.m * k_chunks * col_tiles];
+        for c in &self.chunks {
+            if c.k_end <= c.k_start || c.col_end <= c.col_start {
+                return Some(format!("empty chunk {c:?}"));
+            }
+            if c.k_end > self.k || c.col_end > self.n || c.row >= self.m {
+                return Some(format!("chunk out of bounds {c:?}"));
+            }
+            if c.k_start % w != 0 || c.col_start % a != 0 {
+                return Some(format!("misaligned chunk {c:?}"));
+            }
+            let kc = c.k_start / w;
+            let ct = c.col_start / a;
+            let idx = (c.row * k_chunks + kc) * col_tiles + ct;
+            seen[idx] += 1;
+        }
+        for (idx, &cnt) in seen.iter().enumerate() {
+            if cnt != 1 {
+                return Some(format!("cell {idx} covered {cnt} times"));
+            }
+        }
+        // No two chunks may share (core, slot).
+        let mut occupancy = std::collections::HashSet::new();
+        for c in &self.chunks {
+            if !occupancy.insert((c.core, c.slot)) {
+                return Some(format!("slot collision at core {} slot {}", c.core, c.slot));
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> CoreParams {
+        CoreParams::default()
+    }
+
+    #[test]
+    fn plan_covers_exact_fit() {
+        let p = MappingPlan::weight_stationary(8, 64, 128, params());
+        assert!(p.validate_coverage().is_none());
+        assert_eq!(p.chunks.len(), 8 * 2 * 2);
+        assert_eq!(p.tune_events(), 4);
+    }
+
+    #[test]
+    fn plan_covers_ragged_dims() {
+        let p = MappingPlan::weight_stationary(7, 100, 70, params());
+        assert!(p.validate_coverage().is_none(), "{:?}", p.validate_coverage());
+        // 4 k-chunks (100/32), 2 col tiles (70/64).
+        assert_eq!(p.tune_events(), 8);
+    }
+
+    #[test]
+    fn multi_core_distributes_col_tiles() {
+        let p = MappingPlan::weight_stationary(4, 32, 64 * 5, params());
+        let cores_used: std::collections::HashSet<usize> =
+            p.chunks.iter().map(|c| c.core).collect();
+        assert_eq!(cores_used.len(), 5);
+        // Perfect balance: makespan = per-core slots.
+        assert_eq!(p.makespan_slots(), 4);
+    }
+
+    #[test]
+    fn retune_first_row_only() {
+        let p = MappingPlan::weight_stationary(5, 32, 64, params());
+        let retunes: Vec<_> = p.chunks.iter().filter(|c| c.retune).collect();
+        assert_eq!(retunes.len(), 1);
+        assert_eq!(retunes[0].row, 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn degenerate_matmul_panics() {
+        MappingPlan::weight_stationary(0, 32, 64, params());
+    }
+
+    #[test]
+    fn makespan_matches_single_core_cycles() {
+        let mut prm = params();
+        prm.num_cores = 1;
+        let p = MappingPlan::weight_stationary(7, 100, 70, prm);
+        // All chunks on one core => makespan == chunk count.
+        assert_eq!(p.makespan_slots(), p.chunks.len() as u64);
+    }
+}

@@ -1,0 +1,22 @@
+//! Architecture-level simulation of the Opto-ViT accelerator (§III).
+//!
+//! - [`workload`] — the MatMul/elementwise inventory of a ViT forward pass,
+//!   parameterized by the post-RoI patch count (what the optics must do).
+//! - [`core`] — the optical processing core cycle model: 32 wavelength
+//!   channels × 64 arms, chunked VVM (Fig. 4/6).
+//! - [`mapping`] — matrix splitting onto cores: chunk schedules and
+//!   partial-sum plans (Fig. 6).
+//! - [`scheduler`] — the five-core matrix-decompositional pipeline of
+//!   Fig. 5, as a discrete-event simulation.
+
+pub mod area;
+pub mod core;
+pub mod mapping;
+pub mod scheduler;
+pub mod workload;
+
+pub use area::{AreaModel, Floorplan};
+pub use core::{CoreParams, MatMulCost, OpticalCore};
+pub use mapping::{ChunkPlan, MappingPlan};
+pub use scheduler::{AttentionSchedule, PipelineScheduler, ScheduleStats};
+pub use workload::{ElementwiseOps, MatMulOp, MatMulKind, Workload};

@@ -1,0 +1,296 @@
+//! ViT compute-workload inventory.
+//!
+//! Enumerates every MatMul and elementwise operation of a ViT forward pass
+//! as the accelerator sees it — parameterized by the *post-RoI* sequence
+//! length, since masked patches are skipped before the first encoder block
+//! and never touch the optics (§IV, "Region of Interest Selection").
+//!
+//! Two attention dataflows are modelled:
+//!
+//! - `direct`: `K = X·W_K`, then `S = Q·K^T` — needs a tuning step *after*
+//!   K materializes, plus buffering of K.
+//! - `decomposed` (Eq. 2): `S = (Q·W_K^T)·X^T` — all MR-bank operands are
+//!   available at operation start, removing a tuning stall and the
+//!   intermediate buffer at the cost of extra optical MACs.
+
+use crate::vit::VitConfig;
+
+/// Role of a MatMul in the network (drives scheduling + buffering rules).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MatMulKind {
+    /// Patch embedding projection.
+    Embed,
+    /// Q projection `X·W_Q`.
+    QProj,
+    /// K projection `X·W_K` (direct flow only).
+    KProj,
+    /// V projection `X·W_V`.
+    VProj,
+    /// Attention scores `Q·K^T` (direct flow only).
+    Scores,
+    /// Decomposed stage 1: `A1 = Q·W_K^T` (per head).
+    DecompQWk,
+    /// Decomposed stage 2: `S = A1·X^T` (per head).
+    DecompAxT,
+    /// `softmax(S)·V` (per head).
+    AttnV,
+    /// MHSA output projection.
+    OutProj,
+    /// FFN first linear (d -> 4d).
+    Ffn1,
+    /// FFN second linear (4d -> d).
+    Ffn2,
+    /// Classifier head.
+    Head,
+}
+
+impl MatMulKind {
+    /// Whether the *stationary* (MR-tuned) operand is an intermediate
+    /// activation rather than a pre-known value — such MatMuls stall the
+    /// pipeline until their operand materializes (the cost Eq. 2 removes).
+    /// `Scores` tunes `K^T` (produced by `KProj`); `AttnV` tunes the softmax
+    /// output (both flows). `DecompAxT` tunes `X^T`, which is known at
+    /// operation start, so it does *not* stall.
+    pub fn tunes_intermediate(&self) -> bool {
+        matches!(self, MatMulKind::Scores | MatMulKind::AttnV)
+    }
+}
+
+/// One matrix-matrix multiply `(m × k) · (k × n)`; the `k × n` operand is
+/// the MR-tuned (stationary) side.
+#[derive(Debug, Clone)]
+pub struct MatMulOp {
+    pub kind: MatMulKind,
+    /// Human-readable site, e.g. "block3.ffn1".
+    pub site: String,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// How many identical instances (e.g. per-head ops share dims).
+    pub count: usize,
+}
+
+impl MatMulOp {
+    pub fn macs(&self) -> u64 {
+        (self.m as u64) * (self.k as u64) * (self.n as u64) * self.count as u64
+    }
+}
+
+/// Elementwise / non-MatMul op counts (executed by the electronic unit).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ElementwiseOps {
+    /// Softmax input elements (h · n² per block).
+    pub softmax_elems: u64,
+    /// GELU activations (n · 4d per block).
+    pub gelu_elems: u64,
+    /// LayerNorm elements (2 · n · d per block + final).
+    pub layernorm_elems: u64,
+    /// Residual additions (2 · n · d per block).
+    pub residual_elems: u64,
+}
+
+impl ElementwiseOps {
+    pub fn total(&self) -> u64 {
+        self.softmax_elems + self.gelu_elems + self.layernorm_elems + self.residual_elems
+    }
+}
+
+/// The full inventory for one forward pass.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    pub matmuls: Vec<MatMulOp>,
+    pub elementwise: ElementwiseOps,
+    /// Sequence length the workload was built for (post-RoI, incl. cls).
+    pub seq_len: usize,
+    /// Whether the decomposed (Eq. 2) attention dataflow is used.
+    pub decomposed: bool,
+}
+
+impl Workload {
+    /// Build the inventory for `cfg` with `kept_patches` surviving the RoI
+    /// mask (use `cfg.num_patches()` for unmasked operation).
+    pub fn vit(cfg: &VitConfig, kept_patches: usize, decomposed: bool) -> Self {
+        assert!(kept_patches <= cfg.num_patches(), "cannot keep more patches than exist");
+        let n = kept_patches + 1; // + cls token
+        let d = cfg.embed_dim;
+        let dk = cfg.head_dim();
+        let h = cfg.num_heads;
+        let f = cfg.ffn_dim();
+        let mut matmuls = Vec::new();
+
+        // Patch embedding: only kept patches are embedded (linear savings).
+        matmuls.push(MatMulOp {
+            kind: MatMulKind::Embed,
+            site: "embed".into(),
+            m: kept_patches,
+            k: cfg.patch_dim(),
+            n: d,
+            count: 1,
+        });
+
+        for b in 0..cfg.depth {
+            let site = |s: &str| format!("block{b}.{s}");
+            // Q and V projections always happen.
+            matmuls.push(MatMulOp { kind: MatMulKind::QProj, site: site("wq"), m: n, k: d, n: d, count: 1 });
+            matmuls.push(MatMulOp { kind: MatMulKind::VProj, site: site("wv"), m: n, k: d, n: d, count: 1 });
+            if decomposed {
+                // Eq. 2: S = (Q·W_K^T)·X^T per head.
+                matmuls.push(MatMulOp {
+                    kind: MatMulKind::DecompQWk,
+                    site: site("q_wkT"),
+                    m: n,
+                    k: dk,
+                    n: d,
+                    count: h,
+                });
+                matmuls.push(MatMulOp {
+                    kind: MatMulKind::DecompAxT,
+                    site: site("a1_xT"),
+                    m: n,
+                    k: d,
+                    n: n,
+                    count: h,
+                });
+            } else {
+                matmuls.push(MatMulOp { kind: MatMulKind::KProj, site: site("wk"), m: n, k: d, n: d, count: 1 });
+                matmuls.push(MatMulOp {
+                    kind: MatMulKind::Scores,
+                    site: site("qkT"),
+                    m: n,
+                    k: dk,
+                    n: n,
+                    count: h,
+                });
+            }
+            matmuls.push(MatMulOp {
+                kind: MatMulKind::AttnV,
+                site: site("attn_v"),
+                m: n,
+                k: n,
+                n: dk,
+                count: h,
+            });
+            matmuls.push(MatMulOp { kind: MatMulKind::OutProj, site: site("proj"), m: n, k: d, n: d, count: 1 });
+            matmuls.push(MatMulOp { kind: MatMulKind::Ffn1, site: site("ffn1"), m: n, k: d, n: f, count: 1 });
+            matmuls.push(MatMulOp { kind: MatMulKind::Ffn2, site: site("ffn2"), m: n, k: f, n: d, count: 1 });
+        }
+        matmuls.push(MatMulOp {
+            kind: MatMulKind::Head,
+            site: "head".into(),
+            m: 1,
+            k: d,
+            n: cfg.num_classes,
+            count: 1,
+        });
+
+        let depth = cfg.depth as u64;
+        let n64 = n as u64;
+        let elementwise = ElementwiseOps {
+            softmax_elems: depth * (h as u64) * n64 * n64,
+            gelu_elems: depth * n64 * f as u64,
+            layernorm_elems: (2 * depth + 1) * n64 * d as u64,
+            residual_elems: 2 * depth * n64 * d as u64,
+        };
+        Workload {
+            name: format!("{}@{}(n={})", cfg.embed_dim, cfg.image_size, kept_patches),
+            matmuls,
+            elementwise,
+            seq_len: n,
+            decomposed,
+        }
+    }
+
+    /// Total multiply-accumulate count.
+    pub fn total_macs(&self) -> u64 {
+        self.matmuls.iter().map(|m| m.macs()).sum()
+    }
+
+    /// Total stationary-operand bytes (8-bit weights/operands tuned on MRs).
+    pub fn stationary_bytes(&self) -> u64 {
+        self.matmuls.iter().map(|m| (m.k * m.n * m.count) as u64).sum()
+    }
+
+    /// Number of MatMuls whose stationary operand is an intermediate result
+    /// (pipeline stalls in the direct flow; zero in the decomposed flow
+    /// except AttnV which both flows share).
+    pub fn intermediate_tunings(&self) -> usize {
+        self.matmuls.iter().filter(|m| m.kind.tunes_intermediate()).map(|m| m.count).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vit::{VitConfig, VitVariant};
+
+    fn tiny96() -> VitConfig {
+        VitConfig::variant(VitVariant::Tiny, 96, 10)
+    }
+
+    #[test]
+    fn tiny_96_mac_count_magnitude() {
+        let cfg = tiny96();
+        let w = Workload::vit(&cfg, cfg.num_patches(), true);
+        let macs = w.total_macs();
+        // ViT-Tiny at 96x96 (37 tokens) is ~0.2 GMACs.
+        assert!((150_000_000..300_000_000).contains(&macs), "macs {macs}");
+    }
+
+    #[test]
+    fn decomposed_costs_more_macs_than_direct() {
+        // Eq. 2 trades extra optical MACs (h·n²·d vs n²·d for scores) for
+        // the removed tuning stall — the paper's explicit trade.
+        let cfg = tiny96();
+        let direct = Workload::vit(&cfg, cfg.num_patches(), false);
+        let decomp = Workload::vit(&cfg, cfg.num_patches(), true);
+        assert!(decomp.total_macs() > direct.total_macs());
+    }
+
+    #[test]
+    fn direct_flow_has_intermediate_tunings() {
+        let cfg = tiny96();
+        let direct = Workload::vit(&cfg, cfg.num_patches(), false);
+        let decomp = Workload::vit(&cfg, cfg.num_patches(), true);
+        // direct: Scores (h per block) + AttnV (h per block) tune intermediates;
+        // decomposed: only AttnV does.
+        assert_eq!(direct.intermediate_tunings(), 2 * cfg.num_heads * cfg.depth);
+        assert_eq!(decomp.intermediate_tunings(), cfg.num_heads * cfg.depth);
+    }
+
+    #[test]
+    fn masking_reduces_work_linearly_in_projections() {
+        let cfg = tiny96();
+        let full = Workload::vit(&cfg, 36, true);
+        let half = Workload::vit(&cfg, 18, true);
+        let ratio = half.total_macs() as f64 / full.total_macs() as f64;
+        // Projection/FFN terms scale with n, attention with n²; with n=37
+        // vs 19 the overall ratio lands slightly above 19/37 but well below 1.
+        assert!(ratio > 0.40 && ratio < 0.60, "ratio {ratio}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_many_kept_patches_panics() {
+        let cfg = tiny96();
+        Workload::vit(&cfg, 37, true);
+    }
+
+    #[test]
+    fn elementwise_counts_scale_with_depth() {
+        let t = Workload::vit(&tiny96(), 36, true);
+        let l = Workload::vit(&VitConfig::variant(VitVariant::Large, 96, 10), 36, true);
+        assert!(l.elementwise.total() > t.elementwise.total());
+    }
+
+    #[test]
+    fn head_dim_matmuls_match_arm_count() {
+        let cfg = tiny96();
+        let w = Workload::vit(&cfg, 36, true);
+        for m in &w.matmuls {
+            if m.kind == MatMulKind::AttnV {
+                assert_eq!(m.n, 64, "AttnV output width must equal d_k = 64 arms");
+            }
+        }
+    }
+}

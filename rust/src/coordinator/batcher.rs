@@ -1,0 +1,147 @@
+//! Frame queueing and bucket routing.
+//!
+//! RoI masking makes the backbone's sequence length data-dependent, but HLO
+//! artifacts are fixed-shape. The coordinator therefore compiles the
+//! backbone at a small set of *kept-patch buckets* and routes each frame to
+//! the smallest bucket that fits, padding the remainder with zeroed,
+//! validity-masked patch slots. This is the same shape-bucketing strategy
+//! production LLM routers use for dynamic sequence lengths.
+
+use crate::sensor::Frame;
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::time::Duration;
+
+/// Routes a kept-patch count to a compiled bucket size.
+#[derive(Debug, Clone)]
+pub struct BucketRouter {
+    /// Ascending bucket sizes; the last is the full patch count.
+    buckets: Vec<usize>,
+}
+
+impl BucketRouter {
+    pub fn new(mut buckets: Vec<usize>) -> Self {
+        assert!(!buckets.is_empty(), "need at least one bucket");
+        buckets.sort_unstable();
+        buckets.dedup();
+        BucketRouter { buckets }
+    }
+
+    /// Evenly spaced buckets up to `full` (e.g. full=36, steps=4 →
+    /// [9, 18, 27, 36]).
+    pub fn even(full: usize, steps: usize) -> Self {
+        assert!(steps >= 1 && full >= steps);
+        let buckets = (1..=steps).map(|i| full * i / steps).collect();
+        Self::new(buckets)
+    }
+
+    pub fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    /// Smallest bucket that holds `kept` patches. Counts above the largest
+    /// bucket clamp to it (callers then drop the lowest-score patches —
+    /// cannot happen when the largest bucket is the full patch count).
+    pub fn route(&self, kept: usize) -> usize {
+        for &b in &self.buckets {
+            if kept <= b {
+                return b;
+            }
+        }
+        *self.buckets.last().unwrap()
+    }
+
+    /// Padding waste ratio for a kept count (padded slots / bucket).
+    pub fn waste(&self, kept: usize) -> f64 {
+        let b = self.route(kept);
+        if b == 0 {
+            0.0
+        } else {
+            (b.saturating_sub(kept)) as f64 / b as f64
+        }
+    }
+}
+
+/// Bounded frame queue between the sensor thread and the inference thread.
+/// `try_push` drops the frame when full (sensor backpressure: a saturated
+/// near-sensor pipeline drops frames rather than buffering stale ones).
+#[derive(Debug)]
+pub struct FrameQueue {
+    tx: SyncSender<Frame>,
+}
+
+impl FrameQueue {
+    /// Create the queue; returns (producer handle, consumer receiver).
+    pub fn bounded(depth: usize) -> (FrameQueue, Receiver<Frame>) {
+        let (tx, rx) = sync_channel(depth);
+        (FrameQueue { tx }, rx)
+    }
+
+    /// Non-blocking push; returns false if the frame was dropped (queue
+    /// full) or the consumer hung up.
+    pub fn try_push(&self, frame: Frame) -> bool {
+        !matches!(self.tx.try_send(frame), Err(TrySendError::Full(_) | TrySendError::Disconnected(_)))
+    }
+
+    /// Blocking push (used by paced sensors that must not drop).
+    pub fn push(&self, frame: Frame) -> bool {
+        self.tx.send(frame).is_ok()
+    }
+}
+
+/// Receive with timeout helper for the inference loop.
+pub fn recv_frame(rx: &Receiver<Frame>, timeout: Duration) -> Option<Frame> {
+    match rx.recv_timeout(timeout) {
+        Ok(f) => Some(f),
+        Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sensor::VideoSource;
+
+    #[test]
+    fn router_picks_smallest_fitting() {
+        let r = BucketRouter::even(36, 4);
+        assert_eq!(r.buckets(), &[9, 18, 27, 36]);
+        assert_eq!(r.route(1), 9);
+        assert_eq!(r.route(9), 9);
+        assert_eq!(r.route(10), 18);
+        assert_eq!(r.route(36), 36);
+        assert_eq!(r.route(50), 36); // clamp
+    }
+
+    #[test]
+    fn waste_bounded_below_bucket_gap() {
+        let r = BucketRouter::even(36, 4);
+        for kept in 1..=36 {
+            assert!(r.waste(kept) < 1.0);
+            let b = r.route(kept);
+            assert!(b >= kept || b == 36);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_buckets_panic() {
+        BucketRouter::new(vec![]);
+    }
+
+    #[test]
+    fn queue_backpressure_drops_when_full() {
+        let (q, rx) = FrameQueue::bounded(1);
+        let mut src = VideoSource::new(32, 1, 1);
+        assert!(q.try_push(src.next_frame()));
+        assert!(!q.try_push(src.next_frame()), "second push must drop");
+        let got = recv_frame(&rx, Duration::from_millis(10)).unwrap();
+        assert_eq!(got.index, 0);
+        assert!(q.try_push(src.next_frame()));
+    }
+
+    #[test]
+    fn recv_times_out_cleanly() {
+        let (_q, rx) = FrameQueue::bounded(1);
+        assert!(recv_frame(&rx, Duration::from_millis(5)).is_none());
+    }
+}

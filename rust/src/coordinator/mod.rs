@@ -1,0 +1,24 @@
+//! The L3 near-sensor serving coordinator — Opto-ViT's request path.
+//!
+//! ```text
+//! sensor thread ──frames──▶ bounded queue ──▶ inference thread
+//!                                              │  MGNet (PJRT)
+//!                                              │  threshold → PatchMask
+//!                                              │  gather kept patches
+//!                                              │  bucket router (pad to bucket)
+//!                                              │  ViT backbone (PJRT)
+//!                                              ▼  logits + metrics
+//! ```
+//!
+//! Python never appears here: both model stages execute pre-compiled HLO
+//! artifacts through [`crate::runtime::Runtime`]. Because `PjRtClient` is
+//! not `Send`, the runtime lives on the inference thread; the sensor runs
+//! on its own thread with a bounded `sync_channel` providing backpressure.
+
+pub mod batcher;
+pub mod pipeline;
+pub mod stats;
+
+pub use batcher::{BucketRouter, FrameQueue};
+pub use pipeline::{FrameResult, Pipeline, PipelineConfig, ServeReport};
+pub use stats::StageMetrics;

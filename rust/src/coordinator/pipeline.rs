@@ -1,0 +1,348 @@
+//! The frame-serving pipeline: MGNet → RoI mask → bucket routing → backbone.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::batcher::{recv_frame, BucketRouter, FrameQueue};
+use super::stats::StageMetrics;
+use crate::energy::AcceleratorModel;
+use crate::roi::PatchMask;
+use crate::runtime::{Runtime, Tensor};
+use crate::sensor::{Frame, VideoSource};
+use crate::vit::{MgnetConfig, VitConfig, VitVariant};
+
+/// Configuration of one serving pipeline instance.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub variant: VitVariant,
+    pub image_size: usize,
+    pub num_classes: usize,
+    /// Kept-patch buckets the backbone was AOT-compiled at (ascending;
+    /// must include the full patch count).
+    pub buckets: Vec<usize>,
+    /// MGNet sigmoid threshold `t_reg`.
+    pub region_threshold: f32,
+    /// Disable to run the unmasked baseline (all patches).
+    pub use_mask: bool,
+}
+
+impl PipelineConfig {
+    /// Default Tiny@96 pipeline matching `python/compile/aot.py` exports.
+    pub fn tiny_96() -> Self {
+        PipelineConfig {
+            variant: VitVariant::Tiny,
+            image_size: 96,
+            num_classes: 10,
+            buckets: vec![9, 18, 27, 36],
+            region_threshold: 0.5,
+            use_mask: true,
+        }
+    }
+
+    pub fn vit_config(&self) -> VitConfig {
+        VitConfig::variant(self.variant, self.image_size, self.num_classes)
+    }
+
+    pub fn mgnet_config(&self) -> MgnetConfig {
+        MgnetConfig::classification(self.image_size)
+    }
+
+    /// Artifact name for the MGNet stage.
+    pub fn mgnet_artifact(&self) -> String {
+        format!("mgnet_{}", self.image_size)
+    }
+
+    /// Artifact name for the backbone at a bucket size.
+    pub fn backbone_artifact(&self, bucket: usize) -> String {
+        format!(
+            "vit_{}_{}_n{}",
+            self.variant.name().to_lowercase(),
+            self.image_size,
+            bucket
+        )
+    }
+}
+
+/// Per-frame output.
+#[derive(Debug, Clone)]
+pub struct FrameResult {
+    pub frame_index: u64,
+    pub logits: Vec<f32>,
+    pub mask: PatchMask,
+    /// Bucket the frame was routed to.
+    pub bucket: usize,
+    /// Modeled accelerator energy for this frame (J).
+    pub modeled_energy_j: f64,
+    /// Host wall-clock latency (s) for the full pipeline.
+    pub latency_s: f64,
+}
+
+impl FrameResult {
+    pub fn predicted_class(&self) -> usize {
+        self.logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// The pipeline; owns the (non-`Send`) PJRT runtime, so it is constructed
+/// and driven on one thread.
+pub struct Pipeline {
+    cfg: PipelineConfig,
+    runtime: Runtime,
+    router: BucketRouter,
+    model: AcceleratorModel,
+    pub metrics: StageMetrics,
+}
+
+impl Pipeline {
+    pub fn new(cfg: PipelineConfig, artifact_dir: &str) -> Result<Self> {
+        let router = BucketRouter::new(cfg.buckets.clone());
+        let full = cfg.vit_config().num_patches();
+        anyhow::ensure!(
+            router.buckets().last() == Some(&full),
+            "largest bucket {:?} must equal the full patch count {}",
+            router.buckets().last(),
+            full
+        );
+        Ok(Pipeline {
+            cfg,
+            runtime: Runtime::new(artifact_dir)?,
+            router,
+            model: AcceleratorModel::default(),
+            metrics: StageMetrics::new(),
+        })
+    }
+
+    pub fn config(&self) -> &PipelineConfig {
+        &self.cfg
+    }
+
+    /// Pre-compile all artifacts (avoids compile jitter on the first frames).
+    pub fn warmup(&mut self) -> Result<()> {
+        if self.cfg.use_mask {
+            let name = self.cfg.mgnet_artifact();
+            self.runtime.load(&name)?;
+        }
+        for &b in self.router.buckets().to_vec().iter() {
+            let name = self.cfg.backbone_artifact(b);
+            self.runtime.load(&name)?;
+        }
+        Ok(())
+    }
+
+    /// Process one frame end-to-end.
+    pub fn process_frame(&mut self, frame: &Frame) -> Result<FrameResult> {
+        let t_start = Instant::now();
+        let vit_cfg = self.cfg.vit_config();
+        let patch_px = vit_cfg.patch_size;
+        let side = frame.size / patch_px;
+        let n_full = side * side;
+        let patch_dim = vit_cfg.patch_dim();
+
+        // 1. Patchify (the sensor→accelerator interface).
+        let t0 = Instant::now();
+        let patches = frame.patchify(patch_px);
+        self.metrics.record_stage("patchify", t0.elapsed().as_secs_f64());
+
+        // 2. MGNet scores → binary mask (Eq. 3 + sigmoid threshold).
+        let (mask, scores) = if self.cfg.use_mask {
+            let t0 = Instant::now();
+            let scores = self
+                .runtime
+                .execute1(
+                    &self.cfg.mgnet_artifact(),
+                    &[Tensor::new(patches.clone(), vec![n_full as i64, patch_dim as i64])],
+                )
+                .context("MGNet stage")?;
+            self.metrics.record_stage("mgnet", t0.elapsed().as_secs_f64());
+            let mask = PatchMask::from_scores(side, &scores, self.cfg.region_threshold);
+            (mask, scores)
+        } else {
+            (PatchMask::full(side), vec![1.0f32; n_full])
+        };
+
+        // 3. Route to a bucket; select top-score patches if over-full,
+        //    otherwise pad with zeroed invalid slots.
+        let t0 = Instant::now();
+        let mut kept = mask.kept_indices();
+        if kept.is_empty() {
+            // Always process at least the highest-score patch.
+            let best = scores
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            kept.push(best);
+        }
+        let bucket = self.router.route(kept.len());
+        if kept.len() > bucket {
+            kept.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+            kept.truncate(bucket);
+            kept.sort_unstable();
+        }
+        let mut bucket_patches = vec![0.0f32; bucket * patch_dim];
+        let mut pos_idx = vec![0.0f32; bucket];
+        let mut valid = vec![0.0f32; bucket];
+        for (slot, &pidx) in kept.iter().enumerate() {
+            bucket_patches[slot * patch_dim..(slot + 1) * patch_dim]
+                .copy_from_slice(&patches[pidx * patch_dim..(pidx + 1) * patch_dim]);
+            pos_idx[slot] = pidx as f32;
+            valid[slot] = 1.0;
+        }
+        self.metrics.record_stage("route", t0.elapsed().as_secs_f64());
+
+        // 4. Backbone on the pruned sequence.
+        let t0 = Instant::now();
+        let logits = self
+            .runtime
+            .execute1(
+                &self.cfg.backbone_artifact(bucket),
+                &[
+                    Tensor::new(bucket_patches, vec![bucket as i64, patch_dim as i64]),
+                    Tensor::new(pos_idx, vec![bucket as i64]),
+                    Tensor::new(valid, vec![bucket as i64]),
+                ],
+            )
+            .context("backbone stage")?;
+        self.metrics.record_stage("backbone", t0.elapsed().as_secs_f64());
+
+        // 5. Modeled accelerator energy at this kept count.
+        let energy_j = if self.cfg.use_mask {
+            self.model.masked_energy(&vit_cfg, &self.cfg.mgnet_config(), kept.len()).total_j()
+        } else {
+            self.model.frame_energy(&vit_cfg, vit_cfg.num_patches(), true).total_j()
+        };
+        let latency = t_start.elapsed().as_secs_f64();
+        self.metrics.record_stage("total", latency);
+        self.metrics.record_frame(energy_j, kept.len());
+
+        Ok(FrameResult {
+            frame_index: frame.index,
+            logits,
+            mask,
+            bucket,
+            modeled_energy_j: energy_j,
+            latency_s: latency,
+        })
+    }
+}
+
+/// Summary of a serving run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub frames: u64,
+    pub dropped: u64,
+    pub wall_fps: f64,
+    pub mean_latency_s: f64,
+    pub mean_energy_j: f64,
+    pub modeled_kfps_per_watt: f64,
+    pub mean_kept_patches: f64,
+    /// Mean IoU of the MGNet mask vs. the sensor ground truth.
+    pub mean_mask_iou: f64,
+    /// Top-1 agreement with the synthetic class labels (meaningful only
+    /// when the backbone artifact embeds trained weights).
+    pub top1_accuracy: f64,
+}
+
+/// Drive a pipeline from a live sensor thread for `num_frames` frames.
+/// The sensor produces frames as fast as the queue accepts them; a full
+/// queue drops frames (real near-sensor backpressure).
+pub fn serve(
+    pipeline: &mut Pipeline,
+    sensor_seed: u64,
+    num_objects: usize,
+    num_frames: u64,
+    queue_depth: usize,
+) -> Result<ServeReport> {
+    let size = pipeline.cfg.image_size;
+    let (queue, rx) = FrameQueue::bounded(queue_depth);
+    let produced = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let produced_t = produced.clone();
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let stop_t = stop.clone();
+    let sensor = std::thread::spawn(move || {
+        let mut src = VideoSource::new(size, num_objects, sensor_seed);
+        while !stop_t.load(std::sync::atomic::Ordering::Relaxed) {
+            let f = src.next_frame();
+            produced_t.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            // try_push drops on full queue; yield briefly to let the
+            // consumer drain.
+            if !queue.try_push(f) {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+    });
+
+    pipeline.warmup()?;
+    pipeline.metrics.start_run();
+    let patch_px = pipeline.cfg.vit_config().patch_size;
+    let mut iou_sum = 0.0f64;
+    let mut correct = 0u64;
+    let mut done = 0u64;
+    while done < num_frames {
+        let Some(frame) = recv_frame(&rx, Duration::from_secs(5)) else {
+            break;
+        };
+        let gt = frame.gt_mask(patch_px);
+        let label = frame.label;
+        let r = pipeline.process_frame(&frame)?;
+        iou_sum += r.mask.iou(&gt);
+        correct += (r.predicted_class() == label) as u64;
+        done += 1;
+    }
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    // Drain so the sensor thread unblocks, then join.
+    while rx.try_recv().is_ok() {}
+    sensor.join().ok();
+
+    let m = &pipeline.metrics;
+    Ok(ServeReport {
+        frames: done,
+        dropped: produced.load(std::sync::atomic::Ordering::Relaxed).saturating_sub(done),
+        wall_fps: m.wall_fps(),
+        mean_latency_s: m.stage_mean_s("total"),
+        mean_energy_j: m.mean_energy_j(),
+        modeled_kfps_per_watt: m.modeled_kfps_per_watt(),
+        mean_kept_patches: m.mean_kept_patches(),
+        mean_mask_iou: if done > 0 { iou_sum / done as f64 } else { 0.0 },
+        top1_accuracy: if done > 0 { correct as f64 / done as f64 } else { 0.0 },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_artifact_names() {
+        let c = PipelineConfig::tiny_96();
+        assert_eq!(c.mgnet_artifact(), "mgnet_96");
+        assert_eq!(c.backbone_artifact(36), "vit_tiny_96_n36");
+    }
+
+    #[test]
+    fn pipeline_requires_full_bucket() {
+        let mut c = PipelineConfig::tiny_96();
+        c.buckets = vec![9, 18]; // missing 36
+        assert!(Pipeline::new(c, "/tmp").is_err());
+    }
+
+    #[test]
+    fn frame_result_argmax() {
+        let r = FrameResult {
+            frame_index: 0,
+            logits: vec![0.1, 0.9, 0.3],
+            mask: PatchMask::full(6),
+            bucket: 36,
+            modeled_energy_j: 1e-5,
+            latency_s: 0.01,
+        };
+        assert_eq!(r.predicted_class(), 1);
+    }
+}

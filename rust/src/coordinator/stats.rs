@@ -1,0 +1,112 @@
+//! Per-stage latency/throughput/energy metrics for the serving pipeline.
+
+use crate::util::stats::Accumulator;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Latency metrics for the named pipeline stages plus modeled energy.
+#[derive(Debug, Default)]
+pub struct StageMetrics {
+    stages: BTreeMap<String, Accumulator>,
+    /// Modeled accelerator energy per frame (J).
+    energy: Accumulator,
+    /// Kept-patch counts.
+    kept: Accumulator,
+    start: Option<Instant>,
+    frames: u64,
+}
+
+impl StageMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mark the start of the serving run (for wall-clock throughput).
+    pub fn start_run(&mut self) {
+        self.start = Some(Instant::now());
+    }
+
+    /// Record a stage latency in seconds.
+    pub fn record_stage(&mut self, stage: &str, seconds: f64) {
+        self.stages.entry(stage.to_string()).or_default().push(seconds);
+    }
+
+    /// Record one completed frame with its modeled energy and kept patches.
+    pub fn record_frame(&mut self, energy_j: f64, kept_patches: usize) {
+        self.energy.push(energy_j);
+        self.kept.push(kept_patches as f64);
+        self.frames += 1;
+    }
+
+    pub fn frames(&self) -> u64 {
+        self.frames
+    }
+
+    /// Wall-clock frames/s since `start_run`.
+    pub fn wall_fps(&self) -> f64 {
+        match self.start {
+            Some(t0) if self.frames > 0 => self.frames as f64 / t0.elapsed().as_secs_f64(),
+            _ => 0.0,
+        }
+    }
+
+    /// Mean modeled energy per frame (J).
+    pub fn mean_energy_j(&self) -> f64 {
+        self.energy.mean()
+    }
+
+    /// Modeled KFPS/W from the mean frame energy.
+    pub fn modeled_kfps_per_watt(&self) -> f64 {
+        let e = self.mean_energy_j();
+        if e <= 0.0 {
+            0.0
+        } else {
+            1.0 / e / 1000.0
+        }
+    }
+
+    pub fn mean_kept_patches(&self) -> f64 {
+        self.kept.mean()
+    }
+
+    /// Mean latency of one stage (seconds).
+    pub fn stage_mean_s(&self, stage: &str) -> f64 {
+        self.stages.get(stage).map(|a| a.mean()).unwrap_or(0.0)
+    }
+
+    /// `(stage, mean_s, max_s, count)` rows for reporting.
+    pub fn stage_rows(&self) -> Vec<(String, f64, f64, u64)> {
+        self.stages
+            .iter()
+            .map(|(k, a)| (k.clone(), a.mean(), a.max(), a.count()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let mut m = StageMetrics::new();
+        m.record_stage("mgnet", 0.002);
+        m.record_stage("mgnet", 0.004);
+        m.record_stage("backbone", 0.010);
+        m.record_frame(1e-5, 12);
+        m.record_frame(2e-5, 14);
+        assert_eq!(m.frames(), 2);
+        assert!((m.stage_mean_s("mgnet") - 0.003).abs() < 1e-12);
+        assert!((m.mean_energy_j() - 1.5e-5).abs() < 1e-12);
+        assert!((m.mean_kept_patches() - 13.0).abs() < 1e-12);
+        assert!((m.modeled_kfps_per_watt() - 1.0 / 1.5e-5 / 1000.0).abs() < 1e-6);
+        assert_eq!(m.stage_rows().len(), 2);
+    }
+
+    #[test]
+    fn unknown_stage_is_zero() {
+        let m = StageMetrics::new();
+        assert_eq!(m.stage_mean_s("nope"), 0.0);
+        assert_eq!(m.modeled_kfps_per_watt(), 0.0);
+    }
+}

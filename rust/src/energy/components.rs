@@ -1,0 +1,142 @@
+//! Per-component energy/delay constants.
+//!
+//! The paper characterizes these with fabricated-MR measurements co-simulated
+//! against 45 nm CMOS interface circuits (NCSU FreePDK45 + Cadence Spectre +
+//! Synopsys DC). Offline we pin each component to representative published
+//! 45 nm-class numbers; the *relative* structure (ADC-dominated energy,
+//! optics-dominated delay, memory > EPU latency) is what Figs. 8-9 assert,
+//! and it emerges from op counts × these constants.
+
+use crate::photonics::bpd::Bpd;
+use crate::photonics::Vcsel;
+
+/// A data converter (ADC or DAC).
+#[derive(Debug, Clone, Copy)]
+pub struct Converter {
+    pub bits: u32,
+    /// Energy per conversion (pJ).
+    pub energy_pj: f64,
+    /// Conversion latency (ns) — also sets the sample period at 1 GS/s.
+    pub delay_ns: f64,
+}
+
+/// MR tuning circuit (electro-optic, per-MR DAC-driven).
+#[derive(Debug, Clone, Copy)]
+pub struct TuningModel {
+    /// Energy to retune one MR to a new weight (pJ).
+    pub energy_pj_per_mr: f64,
+    /// Bank retune latency (ns) — all MRs in a bank tune in parallel.
+    pub bank_tune_ns: f64,
+    /// Static hold power per MR while computing (uW) — small for
+    /// electro-optic tuning, dominant if thermo-optic is selected.
+    pub hold_uw_per_mr: f64,
+}
+
+/// Buffer memory (on-chip SRAM).
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryModel {
+    /// Access energy per byte (pJ/B) — 45 nm SRAM ~0.16-0.25 pJ/B.
+    pub energy_pj_per_byte: f64,
+    /// Sustained bandwidth (bytes/ns = GB/s).
+    pub bandwidth_bytes_per_ns: f64,
+    /// Fixed access latency per burst (ns).
+    pub burst_latency_ns: f64,
+}
+
+/// Electronic processing unit: the Softmax-GELU reuse unit of [38] plus the
+/// partial-sum adders.
+#[derive(Debug, Clone, Copy)]
+pub struct EpuModel {
+    /// Energy per processed element (pJ) for softmax/GELU/norm.
+    pub energy_pj_per_elem: f64,
+    /// Energy per partial-sum addition (pJ).
+    pub energy_pj_per_add: f64,
+    /// Throughput (elements per ns) — 8 lanes at 1 GHz by default. Must
+    /// match `arch::scheduler::EPU_ELEMS_PER_NS`.
+    pub elems_per_ns: f64,
+}
+
+/// The full component set.
+#[derive(Debug, Clone, Copy)]
+pub struct ComponentModels {
+    pub adc: Converter,
+    pub dac: Converter,
+    pub vcsel: Vcsel,
+    pub bpd: Bpd,
+    pub tuning: TuningModel,
+    pub memory: MemoryModel,
+    pub epu: EpuModel,
+}
+
+impl Default for ComponentModels {
+    fn default() -> Self {
+        ComponentModels {
+            // 8-bit 1 GS/s SAR ADC, 45 nm class: ~1.0 pJ/conversion
+            // (Murmann ADC survey envelope for that node/speed).
+            adc: Converter { bits: 8, energy_pj: 0.95, delay_ns: 1.0 },
+            // 8-bit current-steering DAC: ~0.2 pJ/conversion.
+            dac: Converter { bits: 8, energy_pj: 0.2, delay_ns: 0.5 },
+            vcsel: Vcsel::default(),
+            bpd: Bpd::default(),
+            // Electro-optic (carrier-depletion) ring tuning: ~0.05 pJ per
+            // retune (ring modulators switch at tens of fJ/bit; the weight
+            // DAC + driver dominate), 250 ns bank settle (DAC settling +
+            // ring relaxation, thermal trim assist; must match `CoreParams::tune_ns`),
+            // negligible hold power.
+            tuning: TuningModel { energy_pj_per_mr: 0.05, bank_tune_ns: 250.0, hold_uw_per_mr: 0.5 },
+            memory: MemoryModel {
+                energy_pj_per_byte: 0.17,
+                bandwidth_bytes_per_ns: 80.0,
+                burst_latency_ns: 2.0,
+            },
+            epu: EpuModel { energy_pj_per_elem: 0.8, energy_pj_per_add: 0.05, elems_per_ns: 8.0 },
+        }
+    }
+}
+
+impl ComponentModels {
+    /// Thermo-optic variant: slow microsecond tuning with milliwatt hold
+    /// power — the design point the paper's VCSEL-input choice avoids.
+    pub fn thermo_optic() -> Self {
+        let mut m = Self::default();
+        m.tuning = TuningModel {
+            energy_pj_per_mr: 90.0,
+            bank_tune_ns: 4_000.0,
+            hold_uw_per_mr: 1_000.0, // 1 mW/MR heater hold
+        };
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adc_costs_more_than_dac() {
+        let m = ComponentModels::default();
+        assert!(m.adc.energy_pj > m.dac.energy_pj);
+    }
+
+    #[test]
+    fn tuning_slower_than_cycle() {
+        // The architecture rests on tuning being the slow step worth hiding.
+        let m = ComponentModels::default();
+        assert!(m.tuning.bank_tune_ns > m.adc.delay_ns);
+    }
+
+    #[test]
+    fn thermo_optic_is_much_worse() {
+        let eo = ComponentModels::default();
+        let to = ComponentModels::thermo_optic();
+        assert!(to.tuning.bank_tune_ns > 10.0 * eo.tuning.bank_tune_ns);
+        assert!(to.tuning.hold_uw_per_mr > 100.0 * eo.tuning.hold_uw_per_mr);
+    }
+
+    #[test]
+    fn epu_rate_matches_scheduler_constant() {
+        // scheduler.rs uses a literal 8.0 elements/ns; keep them in lock-step.
+        let m = ComponentModels::default();
+        assert_eq!(m.epu.elems_per_ns, 8.0);
+    }
+}

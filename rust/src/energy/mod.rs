@@ -1,0 +1,16 @@
+//! Energy and latency accounting (the circuit level of Fig. 7's bottom-up
+//! framework, standing in for the paper's Cadence Spectre / Design Compiler
+//! characterization).
+//!
+//! - [`components`] — per-event energy/delay constants for every component
+//!   in the Fig. 8 breakdown: MR tuning, VCSEL, BPD, ADC, DAC, buffer
+//!   memory, and the electronic processing unit.
+//! - [`model`] — combines the [`crate::arch`] cost model with the component
+//!   constants into per-network energy (Fig. 8/10) and delay (Fig. 9/11)
+//!   breakdowns.
+
+pub mod components;
+pub mod model;
+
+pub use components::ComponentModels;
+pub use model::{AcceleratorModel, DelayBreakdown, EnergyBreakdown, FrameReport};

@@ -1,0 +1,390 @@
+//! The accelerator-level energy/delay model: Figs. 8, 9, 10, 11.
+//!
+//! Combines the optical-core cost model ([`crate::arch::core`]), the Fig. 5
+//! scheduler, and the component constants into the per-frame breakdowns the
+//! paper reports. The Fig. 8/9 grid is `{Tiny, Small, Base, Large} ×
+//! {224², 96²}`; Figs. 10/11 add the MGNet + RoI-masked operating points.
+
+use super::components::ComponentModels;
+use crate::arch::core::{CoreParams, MatMulCost, OpticalCore};
+use crate::arch::scheduler::AttentionSchedule;
+use crate::arch::workload::Workload;
+use crate::vit::{MgnetConfig, VitConfig};
+
+/// Per-component energy for one forward pass (joules).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub tuning_j: f64,
+    pub vcsel_j: f64,
+    pub bpd_j: f64,
+    pub adc_j: f64,
+    pub dac_j: f64,
+    pub memory_j: f64,
+    pub epu_j: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_j(&self) -> f64 {
+        self.tuning_j + self.vcsel_j + self.bpd_j + self.adc_j + self.dac_j + self.memory_j
+            + self.epu_j
+    }
+
+    pub fn add(&mut self, o: &EnergyBreakdown) {
+        self.tuning_j += o.tuning_j;
+        self.vcsel_j += o.vcsel_j;
+        self.bpd_j += o.bpd_j;
+        self.adc_j += o.adc_j;
+        self.dac_j += o.dac_j;
+        self.memory_j += o.memory_j;
+        self.epu_j += o.epu_j;
+    }
+
+    /// `(component, fraction)` pairs — the Fig. 8 pie chart.
+    pub fn shares(&self) -> Vec<(&'static str, f64)> {
+        let t = self.total_j();
+        if t <= 0.0 {
+            return Vec::new();
+        }
+        vec![
+            ("Tuning", self.tuning_j / t),
+            ("VCSEL", self.vcsel_j / t),
+            ("BPD", self.bpd_j / t),
+            ("ADC", self.adc_j / t),
+            ("DAC", self.dac_j / t),
+            ("Memory", self.memory_j / t),
+            ("EPU", self.epu_j / t),
+        ]
+    }
+}
+
+/// Per-stage delay for one forward pass (seconds). The paper groups ADC/DAC
+/// delay into the optical stage (Fig. 9 caption).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DelayBreakdown {
+    /// Optical processing incl. ADC/DAC and (exposed) tuning.
+    pub optical_s: f64,
+    /// Electronic processing unit (softmax/GELU/norm/adds).
+    pub epu_s: f64,
+    /// Buffer-memory transfer time.
+    pub memory_s: f64,
+}
+
+impl DelayBreakdown {
+    pub fn total_s(&self) -> f64 {
+        self.optical_s + self.epu_s + self.memory_s
+    }
+
+    pub fn add(&mut self, o: &DelayBreakdown) {
+        self.optical_s += o.optical_s;
+        self.epu_s += o.epu_s;
+        self.memory_s += o.memory_s;
+    }
+
+    pub fn shares(&self) -> Vec<(&'static str, f64)> {
+        let t = self.total_s();
+        if t <= 0.0 {
+            return Vec::new();
+        }
+        vec![
+            ("Optical(+ADC/DAC)", self.optical_s / t),
+            ("EPU", self.epu_s / t),
+            ("Memory", self.memory_s / t),
+        ]
+    }
+}
+
+/// Full per-frame report.
+#[derive(Debug, Clone)]
+pub struct FrameReport {
+    pub label: String,
+    pub energy: EnergyBreakdown,
+    pub delay: DelayBreakdown,
+    /// Kept-patch count the report was evaluated at.
+    pub kept_patches: usize,
+    pub total_patches: usize,
+}
+
+impl FrameReport {
+    /// Frames per second per watt — the paper's headline metric.
+    /// `KFPS/W = 1 / (J/frame) / 1000`.
+    pub fn kfps_per_watt(&self) -> f64 {
+        1.0 / self.energy.total_j() / 1000.0
+    }
+
+    /// Throughput at the modeled latency (frames/s), single frame in flight.
+    pub fn fps(&self) -> f64 {
+        1.0 / self.delay.total_s()
+    }
+
+    pub fn pixel_skip_ratio(&self) -> f64 {
+        1.0 - self.kept_patches as f64 / self.total_patches as f64
+    }
+}
+
+/// The Opto-ViT accelerator model: five optical cores + EPU + buffers.
+#[derive(Debug, Clone, Copy)]
+pub struct AcceleratorModel {
+    pub cores: CoreParams,
+    pub components: ComponentModels,
+}
+
+impl Default for AcceleratorModel {
+    fn default() -> Self {
+        AcceleratorModel { cores: CoreParams::default(), components: ComponentModels::default() }
+    }
+}
+
+impl AcceleratorModel {
+    /// Energy of a raw cost bundle (workload already mapped to cores).
+    pub fn energy_of_cost(&self, c: &MatMulCost, elementwise_elems: u64) -> EnergyBreakdown {
+        let m = &self.components;
+        let cycle_ns = self.cores.cycle_ns;
+        // Tuning: per-MR retune energy + hold power over the compute time.
+        let hold_j = m.tuning.hold_uw_per_mr * 1e-6 // W per MR
+            * (self.cores.mrs_per_bank() * self.cores.num_cores) as f64
+            * (c.cycles as f64 * cycle_ns * 1e-9);
+        let tuning_j =
+            c.weight_dac_conversions as f64 * m.tuning.energy_pj_per_mr * 1e-12 + hold_j;
+        // VCSEL symbols: mean activation drive over one cycle.
+        let vcsel_j =
+            c.vcsel_symbols as f64 * m.vcsel.mean_symbol_energy_pj(cycle_ns) * 1e-12;
+        let bpd_j = c.adc_conversions as f64 * m.bpd.sample_energy_pj * 1e-12;
+        let adc_j = c.adc_conversions as f64 * m.adc.energy_pj * 1e-12;
+        // DACs: weight-side (tuning values) + input-side (VCSEL drive).
+        let dac_j = (c.weight_dac_conversions + c.vcsel_symbols) as f64 * m.dac.energy_pj * 1e-12;
+        let memory_j = (c.weight_bytes + c.input_bytes + c.output_bytes) as f64
+            * m.memory.energy_pj_per_byte
+            * 1e-12;
+        let epu_j = elementwise_elems as f64 * m.epu.energy_pj_per_elem * 1e-12
+            + c.partial_sum_adds as f64 * m.epu.energy_pj_per_add * 1e-12;
+        EnergyBreakdown { tuning_j, vcsel_j, bpd_j, adc_j, dac_j, memory_j, epu_j }
+    }
+
+    /// Energy breakdown for a [`Workload`] (Fig. 8 engine).
+    pub fn energy(&self, w: &Workload) -> EnergyBreakdown {
+        let core = OpticalCore::new(self.cores);
+        let cost = core.workload_cost(w);
+        self.energy_of_cost(&cost, w.elementwise.total())
+    }
+
+    /// Delay breakdown for a [`Workload`] (Fig. 9 engine).
+    ///
+    /// Optical time comes from the Fig. 5 pipeline schedule (steady-state,
+    /// tuning overlapped); EPU and memory time are modeled as partially
+    /// hidden behind optics — the paper reports them as the *exposed*
+    /// serial fractions.
+    pub fn delay(&self, cfg: &VitConfig, w: &Workload) -> DelayBreakdown {
+        let optical_ns =
+            AttentionSchedule::steady_state_frame_ns(cfg, w.seq_len, self.cores, w.decomposed);
+        let m = &self.components;
+        let core = OpticalCore::new(self.cores);
+        let cost = core.workload_cost(w);
+        // EPU work not on the schedule's critical path is the GELU/norm
+        // stream; count its full serial time (the schedule already overlaps
+        // softmax, so this is conservative but matches Fig. 9's grouping).
+        // Partial-sum accumulation runs in per-arm accumulator registers at
+        // ADC line rate — pipelined with the optical stage, so it costs
+        // energy (see `energy_of_cost`) but no additional latency.
+        let epu_ns = w.elementwise.total() as f64 / m.epu.elems_per_ns;
+        let bytes = (cost.weight_bytes + cost.input_bytes + cost.output_bytes) as f64;
+        let memory_ns = bytes / m.memory.bandwidth_bytes_per_ns
+            + w.matmuls.len() as f64 * m.memory.burst_latency_ns;
+        DelayBreakdown {
+            optical_s: optical_ns * 1e-9,
+            epu_s: epu_ns * 1e-9,
+            memory_s: memory_ns * 1e-9,
+        }
+    }
+
+    /// Full report for a backbone at a kept-patch count (Figs. 8-11 rows).
+    pub fn frame_report(
+        &self,
+        label: &str,
+        cfg: &VitConfig,
+        kept_patches: usize,
+        decomposed: bool,
+    ) -> FrameReport {
+        let w = Workload::vit(cfg, kept_patches, decomposed);
+        FrameReport {
+            label: label.to_string(),
+            energy: self.energy(&w),
+            delay: self.delay(cfg, &w),
+            kept_patches,
+            total_patches: cfg.num_patches(),
+        }
+    }
+
+    /// Energy-only variant of [`Self::frame_report`]: skips the (orders of
+    /// magnitude more expensive) discrete-event delay schedule. Use this on
+    /// hot paths that only need joules (Fig. 8/10 engines, Table IV,
+    /// per-frame serving accounting) — see EXPERIMENTS.md §Perf.
+    pub fn frame_energy(&self, cfg: &VitConfig, kept_patches: usize, decomposed: bool) -> EnergyBreakdown {
+        let w = Workload::vit(cfg, kept_patches, decomposed);
+        self.energy(&w)
+    }
+
+    /// Energy-only variant of [`Self::masked_report`].
+    pub fn masked_energy(
+        &self,
+        backbone: &VitConfig,
+        mgnet: &MgnetConfig,
+        kept_patches: usize,
+    ) -> EnergyBreakdown {
+        let mg_cfg = mgnet.as_vit();
+        let mut e = self.frame_energy(&mg_cfg, mg_cfg.num_patches(), true);
+        e.add(&self.frame_energy(backbone, kept_patches, true));
+        e
+    }
+
+    /// Report for backbone + MGNet front end at a given RoI keep count
+    /// (the Figs. 10/11 "with MGNet" series): MGNet always sees the full
+    /// frame; the backbone sees only kept patches.
+    pub fn masked_report(
+        &self,
+        label: &str,
+        backbone: &VitConfig,
+        mgnet: &MgnetConfig,
+        kept_patches: usize,
+    ) -> FrameReport {
+        let mg_cfg = mgnet.as_vit();
+        let mg_w = Workload::vit(&mg_cfg, mg_cfg.num_patches(), true);
+        let bb = self.frame_report(label, backbone, kept_patches, true);
+        let mut energy = self.energy(&mg_w);
+        energy.add(&bb.energy);
+        let mut delay = self.delay(&mg_cfg, &mg_w);
+        delay.add(&bb.delay);
+        FrameReport {
+            label: label.to_string(),
+            energy,
+            delay,
+            kept_patches,
+            total_patches: backbone.num_patches(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vit::{VitVariant};
+
+    fn model() -> AcceleratorModel {
+        AcceleratorModel::default()
+    }
+
+    fn report(v: VitVariant, res: usize, kept: Option<usize>) -> FrameReport {
+        let cfg = VitConfig::variant(v, res, 10);
+        let k = kept.unwrap_or(cfg.num_patches());
+        model().frame_report(&format!("{v}-{res}"), &cfg, k, true)
+    }
+
+    #[test]
+    fn adc_is_largest_energy_component() {
+        // Fig. 8 pie (Tiny-96): ADC dominates despite analog compute.
+        let r = report(VitVariant::Tiny, 96, None);
+        let shares = r.energy.shares();
+        let adc = shares.iter().find(|(n, _)| *n == "ADC").unwrap().1;
+        for (name, s) in &shares {
+            if *name != "ADC" {
+                assert!(adc > *s, "ADC {adc} <= {name} {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn optical_is_largest_delay_component() {
+        // Fig. 9 pie (Tiny-96): optical stage dominates latency...
+        let r = report(VitVariant::Tiny, 96, None);
+        let d = r.delay;
+        assert!(d.optical_s > d.epu_s && d.optical_s > d.memory_s, "{d:?}");
+        // ...and memory latency exceeds the EPU's.
+        assert!(d.memory_s > d.epu_s, "{d:?}");
+    }
+
+    #[test]
+    fn energy_ordering_across_models_and_sizes() {
+        // Fig. 8 trend: smaller network and smaller input → less energy.
+        let order = [
+            report(VitVariant::Tiny, 96, None).energy.total_j(),
+            report(VitVariant::Small, 96, None).energy.total_j(),
+            report(VitVariant::Base, 96, None).energy.total_j(),
+            report(VitVariant::Large, 96, None).energy.total_j(),
+        ];
+        for w in order.windows(2) {
+            assert!(w[0] < w[1], "{order:?}");
+        }
+        assert!(
+            report(VitVariant::Base, 96, None).energy.total_j()
+                < report(VitVariant::Base, 224, None).energy.total_j()
+        );
+    }
+
+    #[test]
+    fn energy_magnitudes_sane() {
+        // Tiny-96 in the tens of uJ; Large-224 in the mJ range (log-scale
+        // spread of Fig. 8).
+        let t = report(VitVariant::Tiny, 96, None).energy.total_j();
+        let l = report(VitVariant::Large, 224, None).energy.total_j();
+        assert!((5e-6..8e-5).contains(&t), "tiny-96 {t} J");
+        assert!((5e-4..3e-2).contains(&l), "large-224 {l} J");
+        assert!(l / t > 50.0, "spread {}", l / t);
+    }
+
+    #[test]
+    fn masking_saves_energy_despite_mgnet_overhead() {
+        // Fig. 10: MGNet adds overhead but net energy drops. 67% pixel skip.
+        let m = model();
+        let cfg = VitConfig::variant(VitVariant::Base, 224, 1000);
+        let mg = MgnetConfig::classification(224);
+        let full = m.frame_report("full", &cfg, cfg.num_patches(), true);
+        let kept = (cfg.num_patches() as f64 * 0.33).round() as usize;
+        let masked = m.masked_report("masked", &cfg, &mg, kept);
+        assert!(masked.energy.total_j() < full.energy.total_j());
+        let savings = 1.0 - masked.energy.total_j() / full.energy.total_j();
+        assert!(savings > 0.3, "savings {savings}");
+    }
+
+    #[test]
+    fn masking_reduces_latency() {
+        // Fig. 11 mirror of the energy test.
+        let m = model();
+        let cfg = VitConfig::variant(VitVariant::Base, 224, 1000);
+        let mg = MgnetConfig::classification(224);
+        let full = m.frame_report("full", &cfg, cfg.num_patches(), true);
+        let kept = (cfg.num_patches() as f64 * 0.33).round() as usize;
+        let masked = m.masked_report("masked", &cfg, &mg, kept);
+        assert!(masked.delay.total_s() < full.delay.total_s());
+    }
+
+    #[test]
+    fn kfps_per_watt_headline_magnitude() {
+        // The paper's reference point is 100.4 KFPS/W (Tiny-96-class
+        // operation with RoI masking). Require the same order of magnitude;
+        // exact calibration is recorded in EXPERIMENTS.md.
+        let m = model();
+        let cfg = VitConfig::variant(VitVariant::Tiny, 96, 10);
+        let mg = MgnetConfig::classification(96);
+        let kept = (cfg.num_patches() as f64 * 0.33).round() as usize;
+        let r = m.masked_report("tiny-96-masked", &cfg, &mg, kept);
+        let kfpsw = r.kfps_per_watt();
+        assert!((30.0..300.0).contains(&kfpsw), "KFPS/W {kfpsw}");
+    }
+
+    #[test]
+    fn thermo_optic_tuning_dominates_if_selected() {
+        let mut m = model();
+        m.components = ComponentModels::thermo_optic();
+        let cfg = VitConfig::variant(VitVariant::Tiny, 96, 10);
+        let w = Workload::vit(&cfg, cfg.num_patches(), true);
+        let e = m.energy(&w);
+        // With heater hold power the tuning share must exceed the ADC share —
+        // the design-space point the paper's VCSEL-input choice argues against.
+        assert!(e.tuning_j > e.adc_j, "{e:?}");
+    }
+
+    #[test]
+    fn pixel_skip_ratio() {
+        let r = report(VitVariant::Base, 224, Some(65));
+        assert!((r.pixel_skip_ratio() - (1.0 - 65.0 / 196.0)).abs() < 1e-12);
+    }
+}

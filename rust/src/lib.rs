@@ -1,0 +1,54 @@
+//! # Opto-ViT
+//!
+//! Full-stack reproduction of *"Opto-ViT: Architecting a Near-Sensor Region of
+//! Interest-Aware Vision Transformer Accelerator with Silicon Photonics"*
+//! (CS.AR 2025).
+//!
+//! The crate is the **Layer-3 Rust coordinator** of a three-layer stack:
+//!
+//! - **L1** — Pallas kernels (`python/compile/kernels/`) emulating the
+//!   photonic optical core (32-wavelength × 64-arm WDM matmul, 8-bit
+//!   quantization, microring crosstalk), lowered at build time.
+//! - **L2** — JAX ViT + MGNet models (`python/compile/model.py`), lowered once
+//!   to HLO-text artifacts by `python/compile/aot.py`.
+//! - **L3** — this crate: the near-sensor serving pipeline (sensor → MGNet →
+//!   RoI mask → patch pruning → ViT backbone over PJRT) plus the architecture
+//!   simulator the paper's evaluation is built on — photonic device models,
+//!   component energy/latency models, the five-core matrix-decompositional
+//!   pipeline scheduler, and analytic models of competing SiPh accelerators.
+//!
+//! Python never runs on the request path: after `make artifacts` the rust
+//! binary is self-contained.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`photonics`] | microring, crosstalk, FPV, VCSEL, BPD device models |
+//! | [`energy`] | per-component energy/delay constants + accounting engine |
+//! | [`arch`] | optical core cycle model, chunk mapping, 5-core scheduler, ViT workload inventory |
+//! | [`vit`] | ViT-T/S/B/L and MGNet configurations |
+//! | [`quant`] | int8 symmetric quantization |
+//! | [`roi`] | patch masks and skip-ratio accounting |
+//! | [`sensor`] | synthetic CMOS sensor / video workload generator |
+//! | [`runtime`] | PJRT client wrapper: load + execute HLO artifacts |
+//! | [`coordinator`] | the serving pipeline: batching, routing, metrics |
+//! | [`baselines`] | Table-IV competitor accelerator models + platform refs |
+//! | [`cli`] | dependency-free argument parsing |
+//! | [`util`] | PRNG, stats, table formatting, property-test helpers |
+
+pub mod arch;
+pub mod baselines;
+pub mod cli;
+pub mod coordinator;
+pub mod energy;
+pub mod photonics;
+pub mod quant;
+pub mod roi;
+pub mod runtime;
+pub mod sensor;
+pub mod util;
+pub mod vit;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

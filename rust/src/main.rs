@@ -1,0 +1,189 @@
+//! Opto-ViT leader binary: CLI over the serving pipeline and the
+//! architecture-simulation reports.
+//!
+//! ```text
+//! optovit serve   [--frames N] [--size 96] [--no-mask] [--seed S] [--objects K]
+//! optovit report  [--decomposed true]        # Fig. 8/9 energy+delay grid
+//! optovit roi     [--size 96|224]            # Fig. 10/11 operating points
+//! optovit table4                              # SiPh accelerator comparison
+//! optovit resolution [--channels 32]          # §IV MR resolution analysis
+//! optovit info                                 # list compiled artifacts
+//! ```
+
+use optovit::baselines;
+use optovit::cli::Args;
+use optovit::coordinator::pipeline::{serve, Pipeline, PipelineConfig};
+use optovit::energy::AcceleratorModel;
+use optovit::photonics::fpv::FpvModel;
+use optovit::photonics::MrGeometry;
+use optovit::util::table::{si_energy, si_time, Table};
+use optovit::vit::{MgnetConfig, VitConfig, VitVariant};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("report") => cmd_report(&args),
+        Some("roi") => cmd_roi(&args),
+        Some("table4") => cmd_table4(),
+        Some("resolution") => cmd_resolution(&args),
+        Some("info") => cmd_info(&args),
+        other => {
+            eprintln!("unknown command {other:?}");
+            eprintln!("commands: serve | report | roi | table4 | resolution | info");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let frames = args.get_u64("frames", 50).map_err(anyhow::Error::msg)?;
+    let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
+    let objects = args.get_usize("objects", 2).map_err(anyhow::Error::msg)?;
+    let artifact_dir = args.get_or("artifacts", "artifacts").to_string();
+    let mut cfg = PipelineConfig::tiny_96();
+    cfg.use_mask = !args.get_bool("no-mask");
+    let mut p = Pipeline::new(cfg, &artifact_dir)?;
+    println!("warming up (compiling artifacts)...");
+    let r = serve(&mut p, seed, objects, frames, 4)?;
+    println!("\n== serve report ==");
+    println!("frames processed     {}", r.frames);
+    println!("frames dropped       {}", r.dropped);
+    println!("wall throughput      {:.1} fps", r.wall_fps);
+    println!("mean latency         {}", si_time(r.mean_latency_s));
+    println!("mean modeled energy  {}/frame", si_energy(r.mean_energy_j));
+    println!("modeled efficiency   {:.1} KFPS/W", r.modeled_kfps_per_watt);
+    println!("mean kept patches    {:.1} / 36", r.mean_kept_patches);
+    println!("mask IoU vs GT       {:.3}", r.mean_mask_iou);
+    println!("top-1 vs synth label {:.3}", r.top1_accuracy);
+    println!("\nper-stage latency:");
+    let mut t = Table::new(vec!["stage", "mean", "max", "count"]);
+    for (s, mean, max, n) in p.metrics.stage_rows() {
+        t.row(vec![s, si_time(mean), si_time(max), n.to_string()]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> anyhow::Result<()> {
+    let decomposed = args.get_or("decomposed", "true") == "true";
+    let m = AcceleratorModel::default();
+    let mut t = Table::new(vec![
+        "model", "res", "energy", "E:ADC%", "E:tune%", "delay", "D:optical%",
+    ]);
+    for v in VitVariant::ALL {
+        for res in [224usize, 96] {
+            let cfg = VitConfig::variant(v, res, 1000);
+            let r = m.frame_report(&format!("{v}-{res}"), &cfg, cfg.num_patches(), decomposed);
+            let adc = r.energy.adc_j / r.energy.total_j() * 100.0;
+            let tune = r.energy.tuning_j / r.energy.total_j() * 100.0;
+            let opt = r.delay.optical_s / r.delay.total_s() * 100.0;
+            t.row(vec![
+                v.name().to_string(),
+                res.to_string(),
+                si_energy(r.energy.total_j()),
+                format!("{adc:.1}"),
+                format!("{tune:.1}"),
+                si_time(r.delay.total_s()),
+                format!("{opt:.1}"),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_roi(args: &Args) -> anyhow::Result<()> {
+    let size = args.get_usize("size", 224).map_err(anyhow::Error::msg)?;
+    let m = AcceleratorModel::default();
+    let cfg = VitConfig::variant(VitVariant::Base, size, 1000);
+    let mg = MgnetConfig::classification(size);
+    let full = m.frame_report("full", &cfg, cfg.num_patches(), true);
+    let mut t = Table::new(vec!["operating point", "kept", "energy", "latency", "saving%"]);
+    t.row(vec![
+        "baseline (no MGNet)".to_string(),
+        cfg.num_patches().to_string(),
+        si_energy(full.energy.total_j()),
+        si_time(full.delay.total_s()),
+        "0.0".to_string(),
+    ]);
+    for frac in [0.75, 0.5, 0.33, 0.25] {
+        let kept = ((cfg.num_patches() as f64) * frac).round() as usize;
+        let r = m.masked_report("masked", &cfg, &mg, kept);
+        let sav = (1.0 - r.energy.total_j() / full.energy.total_j()) * 100.0;
+        t.row(vec![
+            format!("MGNet keep {:.0}%", frac * 100.0),
+            kept.to_string(),
+            si_energy(r.energy.total_j()),
+            si_time(r.delay.total_s()),
+            format!("{sav:.1}"),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_table4() -> anyhow::Result<()> {
+    let mut t = Table::new(vec!["design", "node(nm)", "KFPS/W", "improv. of Opto-ViT"]);
+    for r in baselines::table_iv() {
+        let imp = if r.name == "Opto-ViT" {
+            "ref".to_string()
+        } else {
+            format!("{:+.1}%", r.improvement_pct)
+        };
+        t.row(vec![r.name, r.node, format!("{:.2}", r.kfps_per_watt), imp]);
+    }
+    for p in baselines::reference_platforms() {
+        t.row(vec![
+            p.name.to_string(),
+            "-".to_string(),
+            format!("{:.2}", p.kfps_per_watt),
+            format!("{:+.0}x", baselines::optovit_kfps_per_watt() / p.kfps_per_watt),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_resolution(args: &Args) -> anyhow::Result<()> {
+    let channels = args.get_usize("channels", 32).map_err(anyhow::Error::msg)?;
+    let fpv = FpvModel::default();
+    let qs: Vec<f64> = (1..=20).map(|k| k as f64 * 1000.0).collect();
+    let rows = fpv.q_sweep(MrGeometry::default(), channels, &qs);
+    let mut t = Table::new(vec!["Q", "crosstalk bits", "FPV bits", "effective bits"]);
+    for r in rows {
+        t.row(vec![
+            format!("{:.0}", r.q_factor),
+            format!("{:.2}", r.crosstalk_bits),
+            format!("{:.2}", r.fpv_bits),
+            format!("{:.2}", r.effective_bits),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let artifact_dir = args.get_or("artifacts", "artifacts").to_string();
+    let rt = optovit::runtime::Runtime::new(&artifact_dir)?;
+    let names = rt.available();
+    if names.is_empty() {
+        println!("no artifacts in '{artifact_dir}' — run `make artifacts`");
+    } else {
+        println!("artifacts in '{artifact_dir}':");
+        for n in names {
+            println!("  {n}");
+        }
+    }
+    Ok(())
+}

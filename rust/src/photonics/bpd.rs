@@ -1,0 +1,102 @@
+//! Balanced photodetector (BPD) accumulation model.
+//!
+//! At the end of each waveguide arm a BPD sums the optical power across all
+//! wavelength channels — the analog accumulate of the optical MAC (§II,
+//! Fig. 4). Balanced detection lets a signed weight be represented as the
+//! difference between two rails.
+
+/// A balanced photodetector at the end of one arm.
+#[derive(Debug, Clone, Copy)]
+pub struct Bpd {
+    /// Responsivity (A/W) at 1550 nm.
+    pub responsivity_a_per_w: f64,
+    /// 3-dB bandwidth (GHz) — photodetection is never the bottleneck
+    /// (the paper cites >100 GHz detection rates).
+    pub bandwidth_ghz: f64,
+    /// Dark current (nA), sets the noise/precision floor together with the
+    /// TIA that follows.
+    pub dark_current_na: f64,
+    /// Energy per accumulate-and-sample event (pJ), including the TIA.
+    pub sample_energy_pj: f64,
+}
+
+impl Default for Bpd {
+    fn default() -> Self {
+        Bpd {
+            responsivity_a_per_w: 1.0,
+            bandwidth_ghz: 100.0,
+            dark_current_na: 10.0,
+            sample_energy_pj: 0.2,
+        }
+    }
+}
+
+impl Bpd {
+    /// Photocurrent (mA) for total incident optical power (mW) on the
+    /// positive rail minus the negative rail.
+    pub fn photocurrent_ma(&self, p_plus_mw: f64, p_minus_mw: f64) -> f64 {
+        self.responsivity_a_per_w * (p_plus_mw - p_minus_mw)
+    }
+
+    /// Accumulate per-channel powers (the optical dot product): the BPD sums
+    /// incoherently across wavelengths.
+    pub fn accumulate(&self, channel_powers_mw: &[f64]) -> f64 {
+        let total: f64 = channel_powers_mw.iter().sum();
+        self.photocurrent_ma(total, 0.0)
+    }
+
+    /// Minimum integration time (ns) per sample given bandwidth.
+    pub fn min_sample_ns(&self) -> f64 {
+        1.0 / self.bandwidth_ghz
+    }
+
+    /// Shot-noise-limited SNR for mean photocurrent `i_ma` over integration
+    /// time `t_ns` (for the precision analysis: must exceed the 8-bit
+    /// requirement of ~48 dB + margin).
+    pub fn shot_noise_snr_db(&self, i_ma: f64, t_ns: f64) -> f64 {
+        const Q_E: f64 = 1.602e-19;
+        let i = i_ma * 1e-3;
+        let t = t_ns * 1e-9;
+        if i <= 0.0 {
+            return 0.0;
+        }
+        // SNR = I*t / sqrt(2 q I t) in electron counts
+        let electrons = i * t / Q_E;
+        let snr = electrons / (2.0 * electrons).sqrt();
+        20.0 * snr.log10()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_subtraction() {
+        let b = Bpd::default();
+        assert!(b.photocurrent_ma(2.0, 0.5) > 0.0);
+        assert!(b.photocurrent_ma(0.5, 2.0) < 0.0);
+        assert_eq!(b.photocurrent_ma(1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn accumulate_sums_channels() {
+        let b = Bpd::default();
+        let i = b.accumulate(&[0.1; 32]);
+        assert!((i - b.photocurrent_ma(3.2, 0.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snr_supports_8_bits_at_1ghz() {
+        let b = Bpd::default();
+        // 1 mA photocurrent, 1 ns integration: SNR must clear 8-bit ~50 dB.
+        let snr = b.shot_noise_snr_db(1.0, 1.0);
+        assert!(snr > 50.0, "snr {snr} dB");
+    }
+
+    #[test]
+    fn faster_than_electronics() {
+        let b = Bpd::default();
+        assert!(b.min_sample_ns() < 0.1);
+    }
+}

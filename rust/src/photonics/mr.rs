@@ -1,0 +1,210 @@
+//! Microring resonator (MR) device model.
+//!
+//! An all-pass microring weight cell: a ring of radius `r` coupled to a bus
+//! waveguide. Near a resonance the through-port transmission is a Lorentzian
+//! dip. Imprinting a weight means thermally/electro-optically detuning the
+//! resonance so the transmission at the (fixed) signal wavelength equals the
+//! desired weight — exactly the mechanism of the paper's Fig. 2(a).
+//!
+//! Geometry defaults follow §IV: input waveguide 400 nm, ring waveguide
+//! 760 nm, radius 5 um, Q ≈ 5000, C-band operation.
+
+/// Physical geometry of a fabricated MR (paper §IV values by default).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MrGeometry {
+    /// Ring radius in micrometres.
+    pub radius_um: f64,
+    /// Ring waveguide width in nanometres.
+    pub ring_width_nm: f64,
+    /// Input (bus) waveguide width in nanometres.
+    pub input_width_nm: f64,
+    /// Effective refractive index of the ring mode.
+    pub n_eff: f64,
+    /// Group index (for FSR and thermo-optic shift).
+    pub n_group: f64,
+}
+
+impl Default for MrGeometry {
+    fn default() -> Self {
+        // Paper §IV: 400 nm input waveguide, 760 nm ring waveguide, r = 5 um.
+        // n_eff/n_group typical for a 760-nm-wide silicon rib waveguide at
+        // 1550 nm (Bogaerts et al., "Silicon microring resonators").
+        MrGeometry {
+            radius_um: 5.0,
+            ring_width_nm: 760.0,
+            input_width_nm: 400.0,
+            n_eff: 2.36,
+            n_group: 4.2,
+        }
+    }
+}
+
+impl MrGeometry {
+    /// Ring circumference in micrometres.
+    pub fn circumference_um(&self) -> f64 {
+        2.0 * std::f64::consts::PI * self.radius_um
+    }
+
+    /// Resonant wavelength (nm) for mode order `m`:
+    /// `lambda_res = n_eff * L / m` (paper §II).
+    pub fn resonant_wavelength_nm(&self, mode_order: u32) -> f64 {
+        self.n_eff * self.circumference_um() * 1000.0 / mode_order as f64
+    }
+
+    /// Mode order whose resonance lands closest to `target_nm`.
+    pub fn mode_order_near(&self, target_nm: f64) -> u32 {
+        let m = self.n_eff * self.circumference_um() * 1000.0 / target_nm;
+        m.round().max(1.0) as u32
+    }
+
+    /// Free spectral range (nm) near `lambda_nm`:
+    /// `FSR = lambda^2 / (n_g * L)`.
+    pub fn fsr_nm(&self, lambda_nm: f64) -> f64 {
+        lambda_nm * lambda_nm / (self.n_group * self.circumference_um() * 1000.0)
+    }
+}
+
+/// An MR weight cell: geometry + loaded Q + extinction, operated at a
+/// specific resonance.
+#[derive(Debug, Clone, Copy)]
+pub struct MicroRing {
+    pub geometry: MrGeometry,
+    /// Loaded quality factor. Paper finds Q ≈ 5000 is required for 8-bit
+    /// weight resolution with FPV tolerance.
+    pub q_factor: f64,
+    /// Resonant wavelength (nm) the cell is nominally tuned to.
+    pub lambda_res_nm: f64,
+    /// Minimum through-port transmission on resonance (extinction floor).
+    pub t_min: f64,
+}
+
+/// Silicon thermo-optic coefficient dn/dT (1/K).
+pub const SILICON_DN_DT: f64 = 1.86e-4;
+
+impl MicroRing {
+    /// Construct a ring at the resonance nearest `target_nm`.
+    pub fn at_wavelength(geometry: MrGeometry, q_factor: f64, target_nm: f64) -> Self {
+        let m = geometry.mode_order_near(target_nm);
+        let lambda = geometry.resonant_wavelength_nm(m);
+        MicroRing { geometry, q_factor, lambda_res_nm: lambda, t_min: 0.01 }
+    }
+
+    /// Lorentzian half-width-at-half-maximum `delta = lambda / (2 Q)`
+    /// (paper §IV, the same `delta` used in the crosstalk model).
+    pub fn delta_nm(&self) -> f64 {
+        self.lambda_res_nm / (2.0 * self.q_factor)
+    }
+
+    /// Through-port power transmission at wavelength `lambda_nm` when the
+    /// ring is detuned by `detune_nm` from its nominal resonance:
+    ///
+    /// `T = 1 - (1 - t_min) * delta^2 / ((lambda - lambda_res)^2 + delta^2)`
+    pub fn transmission(&self, lambda_nm: f64, detune_nm: f64) -> f64 {
+        let d = self.delta_nm();
+        let off = lambda_nm - (self.lambda_res_nm + detune_nm);
+        let lorentz = d * d / (off * off + d * d);
+        1.0 - (1.0 - self.t_min) * lorentz
+    }
+
+    /// Detuning (nm) that imprints weight `w` (in `[t_min, 1)`) on a signal
+    /// at the nominal resonance wavelength. Inverse of [`Self::transmission`]
+    /// evaluated at `lambda = lambda_res`:
+    ///
+    /// `detune = delta * sqrt((1 - t_min)/(1 - w) - 1)`
+    pub fn detuning_for_weight(&self, w: f64) -> f64 {
+        let w = w.clamp(self.t_min, 1.0 - 1e-9);
+        let d = self.delta_nm();
+        let lorentz = (1.0 - w) / (1.0 - self.t_min);
+        d * (1.0 / lorentz - 1.0).sqrt()
+    }
+
+    /// Local slope |dT/dlambda| (1/nm) at the operating point for weight `w`.
+    /// This is the FPV sensitivity: a resonance jitter `sigma_nm` produces a
+    /// weight error of about `slope * sigma_nm`. Sharper rings (higher Q)
+    /// have a proportionally larger slope — the paper's argument for why
+    /// very high Q *hurts* under fabrication variation.
+    pub fn weight_sensitivity(&self, w: f64) -> f64 {
+        let d = self.delta_nm();
+        let x = self.detuning_for_weight(w); // operating offset from resonance
+        // T(x) = 1 - (1-t_min) d^2/(x^2+d^2);  dT/dx = (1-t_min) * 2 d^2 x /(x^2+d^2)^2
+        let denom = x * x + d * d;
+        (1.0 - self.t_min) * 2.0 * d * d * x / (denom * denom)
+    }
+
+    /// Thermo-optic resonance shift per kelvin (nm/K):
+    /// `dlambda/dT = lambda * (dn/dT) / n_g`.
+    pub fn thermal_shift_nm_per_k(&self) -> f64 {
+        self.lambda_res_nm * SILICON_DN_DT / self.geometry.n_group
+    }
+
+    /// Temperature change (K) needed to realise `detune_nm`.
+    pub fn temperature_for_detuning(&self, detune_nm: f64) -> f64 {
+        detune_nm / self.thermal_shift_nm_per_k()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ring() -> MicroRing {
+        MicroRing::at_wavelength(MrGeometry::default(), 5000.0, 1550.0)
+    }
+
+    #[test]
+    fn resonance_near_target() {
+        let r = ring();
+        assert!((r.lambda_res_nm - 1550.0).abs() < r.geometry.fsr_nm(1550.0));
+    }
+
+    #[test]
+    fn fsr_for_5um_ring_is_about_18nm() {
+        let g = MrGeometry::default();
+        let fsr = g.fsr_nm(1550.0);
+        assert!((15.0..22.0).contains(&fsr), "fsr {fsr}");
+    }
+
+    #[test]
+    fn transmission_dips_on_resonance() {
+        let r = ring();
+        let on = r.transmission(r.lambda_res_nm, 0.0);
+        let off = r.transmission(r.lambda_res_nm + 10.0 * r.delta_nm(), 0.0);
+        assert!(on <= r.t_min + 1e-9, "on-resonance {on}");
+        assert!(off > 0.95, "far-off-resonance {off}");
+    }
+
+    #[test]
+    fn weight_roundtrip() {
+        let r = ring();
+        for &w in &[0.02, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99] {
+            let det = r.detuning_for_weight(w);
+            let t = r.transmission(r.lambda_res_nm, det);
+            assert!((t - w).abs() < 1e-9, "w {w} -> t {t}");
+        }
+    }
+
+    #[test]
+    fn sensitivity_scales_with_q() {
+        let lo = MicroRing { q_factor: 2000.0, ..ring() };
+        let hi = MicroRing { q_factor: 20000.0, ..ring() };
+        // At the same weight, the sharper ring is more sensitive to
+        // wavelength jitter (in absolute nm terms).
+        assert!(hi.weight_sensitivity(0.5) > lo.weight_sensitivity(0.5));
+    }
+
+    #[test]
+    fn delta_matches_q_definition() {
+        let r = ring();
+        assert!((r.delta_nm() - r.lambda_res_nm / (2.0 * 5000.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn thermal_tuning_sane() {
+        let r = ring();
+        // ~70 pm/K is the textbook number for silicon rings at 1550 nm.
+        let s = r.thermal_shift_nm_per_k();
+        assert!((0.04..0.12).contains(&s), "shift {s} nm/K");
+        let dt = r.temperature_for_detuning(r.delta_nm());
+        assert!(dt > 0.0 && dt < 10.0, "dT {dt} K for one linewidth");
+    }
+}

@@ -1,0 +1,138 @@
+//! Vertical-Cavity Surface-Emitting Laser (VCSEL) input model.
+//!
+//! Opto-ViT's key input-path choice (§III): activations are encoded directly
+//! into VCSEL drive amplitudes, rather than tuned onto input MRs. Driving a
+//! VCSEL is faster and cheaper than thermally tuning a ring, and one emitted
+//! signal fans out to all 64 arms — the paper's argument for the
+//! VCSEL-per-wavelength front end.
+
+/// A directly modulated VCSEL channel.
+#[derive(Debug, Clone, Copy)]
+pub struct Vcsel {
+    /// Threshold current (mA) below which no lasing occurs.
+    pub threshold_ma: f64,
+    /// Slope efficiency (mW optical per mA drive above threshold).
+    pub slope_eff_mw_per_ma: f64,
+    /// Maximum drive current (mA).
+    pub max_drive_ma: f64,
+    /// Drive voltage (V) for energy accounting.
+    pub drive_voltage_v: f64,
+    /// Modulation bandwidth (GHz) — bounds the symbol rate.
+    pub bandwidth_ghz: f64,
+}
+
+impl Default for Vcsel {
+    fn default() -> Self {
+        // Edge-class low-power 1550-nm VCSEL: ~0.2 mA threshold, ~0.8 mW/mA,
+        // ~15 GHz bandwidth, ~1.8 V drive — the near-sensor operating point
+        // the paper's energy budget assumes (VCSEL drive well below ADC
+        // conversion energy per symbol).
+        Vcsel {
+            threshold_ma: 0.2,
+            slope_eff_mw_per_ma: 0.8,
+            max_drive_ma: 1.5,
+            drive_voltage_v: 1.8,
+            bandwidth_ghz: 15.0,
+        }
+    }
+}
+
+impl Vcsel {
+    /// Optical output power (mW) for a drive current (mA). L-I curve is
+    /// linear above threshold, clamped at `max_drive_ma`.
+    pub fn optical_power_mw(&self, drive_ma: f64) -> f64 {
+        let d = drive_ma.clamp(0.0, self.max_drive_ma);
+        if d <= self.threshold_ma {
+            0.0
+        } else {
+            (d - self.threshold_ma) * self.slope_eff_mw_per_ma
+        }
+    }
+
+    /// Drive current (mA) that encodes a normalized activation `a` in
+    /// `[0, 1]` as a fraction of full-scale optical power.
+    pub fn drive_for_activation(&self, a: f64) -> f64 {
+        let a = a.clamp(0.0, 1.0);
+        self.threshold_ma + a * (self.max_drive_ma - self.threshold_ma)
+    }
+
+    /// Electrical energy (pJ) to emit one symbol of duration `symbol_ns`
+    /// at activation level `a` (drive current × voltage × time).
+    pub fn symbol_energy_pj(&self, a: f64, symbol_ns: f64) -> f64 {
+        let i_ma = self.drive_for_activation(a);
+        // mA * V * ns = pJ
+        i_ma * self.drive_voltage_v * symbol_ns
+    }
+
+    /// Mean symbol energy (pJ) over uniformly distributed activations —
+    /// the number the architecture-level energy model uses per VCSEL symbol.
+    pub fn mean_symbol_energy_pj(&self, symbol_ns: f64) -> f64 {
+        self.symbol_energy_pj(0.5, symbol_ns)
+    }
+
+    /// Shortest symbol time (ns) the modulation bandwidth supports.
+    pub fn min_symbol_ns(&self) -> f64 {
+        1.0 / self.bandwidth_ghz
+    }
+
+    /// Wall-plug efficiency at activation `a`: optical out / electrical in.
+    pub fn wall_plug_efficiency(&self, a: f64) -> f64 {
+        let i = self.drive_for_activation(a);
+        let p_opt = self.optical_power_mw(i);
+        let p_el = i * self.drive_voltage_v;
+        if p_el <= 0.0 {
+            0.0
+        } else {
+            p_opt / p_el
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn li_curve_threshold() {
+        let v = Vcsel::default();
+        assert_eq!(v.optical_power_mw(0.1), 0.0);
+        assert!(v.optical_power_mw(1.0) > 0.0);
+    }
+
+    #[test]
+    fn activation_encoding_monotone() {
+        let v = Vcsel::default();
+        let p0 = v.optical_power_mw(v.drive_for_activation(0.1));
+        let p1 = v.optical_power_mw(v.drive_for_activation(0.9));
+        assert!(p1 > p0);
+    }
+
+    #[test]
+    fn full_scale_uses_max_drive() {
+        let v = Vcsel::default();
+        assert!((v.drive_for_activation(1.0) - v.max_drive_ma).abs() < 1e-12);
+    }
+
+    #[test]
+    fn symbol_energy_scale() {
+        let v = Vcsel::default();
+        // ~1 ns symbol at mid drive: ~1-3 pJ — far below MR thermal tuning.
+        let e = v.mean_symbol_energy_pj(1.0);
+        assert!((0.5..5.0).contains(&e), "energy {e} pJ");
+    }
+
+    #[test]
+    fn efficiency_below_unity() {
+        let v = Vcsel::default();
+        for &a in &[0.1, 0.5, 1.0] {
+            let eff = v.wall_plug_efficiency(a);
+            assert!((0.0..1.0).contains(&eff));
+        }
+    }
+
+    #[test]
+    fn bandwidth_limits_symbol() {
+        let v = Vcsel::default();
+        assert!((v.min_symbol_ns() - 1.0 / 15.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,132 @@
+//! 8-bit symmetric uniform quantization (§IV "Accuracy Analysis").
+//!
+//! Mirrors `python/compile/quant.py`: symmetric uniform quantization with a
+//! dynamically chosen scale (max-abs calibration), matching the precision
+//! limits of the photonic weight banks and the 8-bit ADC/DAC interfaces.
+//! The rust side needs it to quantize sensor frames before they enter the
+//! HLO graph and to sanity-check artifact numerics.
+
+/// Symmetric int8 quantization parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    /// Scale such that `real = scale * int`.
+    pub scale: f32,
+    /// Number of integer bits (8 in the paper).
+    pub bits: u32,
+}
+
+impl QuantParams {
+    /// Max-abs calibration over a tensor: `scale = max|x| / (2^(b-1) - 1)`.
+    pub fn calibrate(xs: &[f32], bits: u32) -> Self {
+        assert!(bits >= 2 && bits <= 16);
+        let max_abs = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+        let scale = if max_abs > 0.0 { max_abs / qmax } else { 1.0 };
+        QuantParams { scale, bits }
+    }
+
+    pub fn qmax(&self) -> i32 {
+        (1i32 << (self.bits - 1)) - 1
+    }
+
+    pub fn qmin(&self) -> i32 {
+        -self.qmax()
+    }
+
+    /// Quantize one value to the integer grid.
+    pub fn quantize(&self, x: f32) -> i32 {
+        let q = (x / self.scale).round() as i32;
+        q.clamp(self.qmin(), self.qmax())
+    }
+
+    /// Dequantize an integer back to real.
+    pub fn dequantize(&self, q: i32) -> f32 {
+        q as f32 * self.scale
+    }
+
+    /// Fake-quantize (quantize-dequantize): what QAT simulates in training
+    /// and what the serving path applies to activations.
+    pub fn fake_quantize(&self, x: f32) -> f32 {
+        self.dequantize(self.quantize(x))
+    }
+
+    /// Fake-quantize a whole slice in place.
+    pub fn fake_quantize_slice(&self, xs: &mut [f32]) {
+        for x in xs.iter_mut() {
+            *x = self.fake_quantize(*x);
+        }
+    }
+
+    /// Worst-case absolute rounding error: half an LSB.
+    pub fn max_abs_error(&self) -> f32 {
+        self.scale / 2.0
+    }
+}
+
+/// Quantize a tensor with its own max-abs calibration; returns (ints, params).
+pub fn quantize_tensor(xs: &[f32], bits: u32) -> (Vec<i8>, QuantParams) {
+    let p = QuantParams::calibrate(xs, bits);
+    assert!(bits <= 8, "i8 storage holds at most 8 bits");
+    (xs.iter().map(|&x| p.quantize(x) as i8).collect(), p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_lsb() {
+        let mut rng = Rng::new(77);
+        let mut xs = vec![0.0f32; 4096];
+        rng.fill_uniform_f32(&mut xs, -3.0, 3.0);
+        let p = QuantParams::calibrate(&xs, 8);
+        for &x in &xs {
+            let err = (p.fake_quantize(x) - x).abs();
+            assert!(err <= p.max_abs_error() + 1e-6, "err {err} > {}", p.max_abs_error());
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        let xs = [0.5f32, -1.25, 2.0, 0.0];
+        let p = QuantParams::calibrate(&xs, 8);
+        for &x in &xs {
+            let once = p.fake_quantize(x);
+            assert_eq!(p.fake_quantize(once), once);
+        }
+    }
+
+    #[test]
+    fn symmetric_range() {
+        let p = QuantParams::calibrate(&[1.0, -1.0], 8);
+        assert_eq!(p.qmax(), 127);
+        assert_eq!(p.qmin(), -127);
+        assert_eq!(p.quantize(1.0), 127);
+        assert_eq!(p.quantize(-1.0), -127);
+    }
+
+    #[test]
+    fn clamps_outliers() {
+        let p = QuantParams { scale: 0.01, bits: 8 };
+        assert_eq!(p.quantize(100.0), 127);
+        assert_eq!(p.quantize(-100.0), -127);
+    }
+
+    #[test]
+    fn zero_tensor_safe() {
+        let (q, p) = quantize_tensor(&[0.0; 16], 8);
+        assert!(q.iter().all(|&v| v == 0));
+        assert_eq!(p.scale, 1.0);
+    }
+
+    #[test]
+    fn lower_bits_mean_larger_error() {
+        let mut rng = Rng::new(5);
+        let mut xs = vec![0.0f32; 1024];
+        rng.fill_uniform_f32(&mut xs, -1.0, 1.0);
+        let e8 = QuantParams::calibrate(&xs, 8).max_abs_error();
+        let e4 = QuantParams::calibrate(&xs, 4).max_abs_error();
+        assert!(e4 > e8 * 8.0);
+    }
+}

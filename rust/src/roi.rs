@@ -1,0 +1,207 @@
+//! Region-of-interest patch masks (§IV "Region of Interest Selection").
+//!
+//! MGNet emits per-patch scores; thresholding with `t_reg` yields a binary
+//! 2-D mask. Masked patches are pruned *before* the first encoder block, so
+//! every downstream computation for that patch is skipped — the property
+//! that makes ViTs especially RoI-friendly (each patch's compute is
+//! independent).
+
+use crate::util::rng::Rng;
+
+/// A binary patch mask over an `side × side` patch grid.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PatchMask {
+    pub side: usize,
+    /// Row-major keep flags.
+    pub keep: Vec<bool>,
+}
+
+impl PatchMask {
+    /// All patches kept.
+    pub fn full(side: usize) -> Self {
+        PatchMask { side, keep: vec![true; side * side] }
+    }
+
+    /// From per-patch scores: keep where `sigmoid(score) > t_reg` (§IV Eq. 3
+    /// onward; scores here are pre-sigmoid logits).
+    pub fn from_scores(side: usize, scores: &[f32], t_reg: f32) -> Self {
+        assert_eq!(scores.len(), side * side, "score grid mismatch");
+        let keep = scores.iter().map(|&s| sigmoid(s) > t_reg).collect();
+        PatchMask { side, keep }
+    }
+
+    /// Ground-truth mask from bounding boxes (pixel coords): a patch is 1 if
+    /// it overlaps any box fully or partially (the paper's labeling rule).
+    pub fn from_boxes(side: usize, patch_px: usize, boxes: &[BoundingBox]) -> Self {
+        let mut keep = vec![false; side * side];
+        for (idx, k) in keep.iter_mut().enumerate() {
+            let py = (idx / side) * patch_px;
+            let px = (idx % side) * patch_px;
+            let (x0, y0, x1, y1) = (px, py, px + patch_px, py + patch_px);
+            *k = boxes.iter().any(|b| b.intersects(x0, y0, x1, y1));
+        }
+        PatchMask { side, keep }
+    }
+
+    pub fn num_patches(&self) -> usize {
+        self.keep.len()
+    }
+
+    pub fn kept(&self) -> usize {
+        self.keep.iter().filter(|&&k| k).count()
+    }
+
+    /// Pixel-skip ratio (the paper's `skip%` column).
+    pub fn skip_ratio(&self) -> f64 {
+        1.0 - self.kept() as f64 / self.num_patches() as f64
+    }
+
+    /// Indices of kept patches in row-major order.
+    pub fn kept_indices(&self) -> Vec<usize> {
+        self.keep.iter().enumerate().filter(|(_, &k)| k).map(|(i, _)| i).collect()
+    }
+
+    /// Intersection-over-union against another mask (the paper's mIoU
+    /// metric for MGNet mask quality).
+    pub fn iou(&self, other: &PatchMask) -> f64 {
+        assert_eq!(self.keep.len(), other.keep.len());
+        let mut inter = 0usize;
+        let mut union = 0usize;
+        for (&a, &b) in self.keep.iter().zip(&other.keep) {
+            inter += (a && b) as usize;
+            union += (a || b) as usize;
+        }
+        if union == 0 {
+            1.0
+        } else {
+            inter as f64 / union as f64
+        }
+    }
+
+    /// Random mask with approximately `keep_prob` density (test workloads).
+    pub fn random(side: usize, keep_prob: f64, rng: &mut Rng) -> Self {
+        PatchMask { side, keep: (0..side * side).map(|_| rng.chance(keep_prob)).collect() }
+    }
+
+    /// Gather kept patches from a row-major patch tensor
+    /// `(num_patches, patch_dim)` into a dense `(kept, patch_dim)` buffer.
+    pub fn gather_patches(&self, patches: &[f32], patch_dim: usize) -> Vec<f32> {
+        assert_eq!(patches.len(), self.num_patches() * patch_dim);
+        let mut out = Vec::with_capacity(self.kept() * patch_dim);
+        for idx in self.kept_indices() {
+            out.extend_from_slice(&patches[idx * patch_dim..(idx + 1) * patch_dim]);
+        }
+        out
+    }
+}
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Axis-aligned pixel-space bounding box.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BoundingBox {
+    pub x0: usize,
+    pub y0: usize,
+    pub x1: usize,
+    pub y1: usize,
+}
+
+impl BoundingBox {
+    pub fn new(x0: usize, y0: usize, x1: usize, y1: usize) -> Self {
+        assert!(x1 > x0 && y1 > y0, "degenerate box");
+        BoundingBox { x0, y0, x1, y1 }
+    }
+
+    fn intersects(&self, x0: usize, y0: usize, x1: usize, y1: usize) -> bool {
+        self.x0 < x1 && x0 < self.x1 && self.y0 < y1 && y0 < self.y1
+    }
+
+    /// IoU between two boxes (used by the detection-experiment scoring).
+    pub fn iou(&self, o: &BoundingBox) -> f64 {
+        let ix0 = self.x0.max(o.x0);
+        let iy0 = self.y0.max(o.y0);
+        let ix1 = self.x1.min(o.x1);
+        let iy1 = self.y1.min(o.y1);
+        if ix1 <= ix0 || iy1 <= iy0 {
+            return 0.0;
+        }
+        let inter = ((ix1 - ix0) * (iy1 - iy0)) as f64;
+        let a = ((self.x1 - self.x0) * (self.y1 - self.y0)) as f64;
+        let b = ((o.x1 - o.x0) * (o.y1 - o.y0)) as f64;
+        inter / (a + b - inter)
+    }
+
+    pub fn area(&self) -> usize {
+        (self.x1 - self.x0) * (self.y1 - self.y0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_mask_keeps_everything() {
+        let m = PatchMask::full(6);
+        assert_eq!(m.kept(), 36);
+        assert_eq!(m.skip_ratio(), 0.0);
+    }
+
+    #[test]
+    fn score_thresholding() {
+        // logit 2 -> sigmoid ~0.88 kept; logit -2 -> ~0.12 dropped at t=0.5.
+        let scores = vec![2.0f32, -2.0, 2.0, -2.0];
+        let m = PatchMask::from_scores(2, &scores, 0.5);
+        assert_eq!(m.keep, vec![true, false, true, false]);
+        assert_eq!(m.skip_ratio(), 0.5);
+    }
+
+    #[test]
+    fn box_mask_marks_partial_overlap() {
+        // 96x96 image, 16-px patches (6x6 grid); box covering pixels
+        // (20..40, 20..40) touches patches (1,1)..(2,2).
+        let m = PatchMask::from_boxes(6, 16, &[BoundingBox::new(20, 20, 40, 40)]);
+        assert!(m.keep[1 * 6 + 1] && m.keep[1 * 6 + 2] && m.keep[2 * 6 + 1] && m.keep[2 * 6 + 2]);
+        assert!(!m.keep[0]);
+        assert_eq!(m.kept(), 4);
+    }
+
+    #[test]
+    fn iou_self_is_one() {
+        let mut rng = Rng::new(3);
+        let m = PatchMask::random(8, 0.4, &mut rng);
+        assert_eq!(m.iou(&m), 1.0);
+    }
+
+    #[test]
+    fn iou_disjoint_is_zero() {
+        let a = PatchMask { side: 2, keep: vec![true, false, false, false] };
+        let b = PatchMask { side: 2, keep: vec![false, true, false, false] };
+        assert_eq!(a.iou(&b), 0.0);
+    }
+
+    #[test]
+    fn gather_selects_rows() {
+        let m = PatchMask { side: 2, keep: vec![true, false, false, true] };
+        let patches: Vec<f32> = (0..8).map(|x| x as f32).collect(); // 4 patches × dim 2
+        let g = m.gather_patches(&patches, 2);
+        assert_eq!(g, vec![0.0, 1.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn bbox_iou() {
+        let a = BoundingBox::new(0, 0, 10, 10);
+        let b = BoundingBox::new(5, 5, 15, 15);
+        let iou = a.iou(&b);
+        assert!((iou - 25.0 / 175.0).abs() < 1e-12);
+        assert_eq!(a.iou(&a), 1.0);
+    }
+
+    #[test]
+    fn empty_masks_iou_defined() {
+        let a = PatchMask { side: 2, keep: vec![false; 4] };
+        assert_eq!(a.iou(&a), 1.0);
+    }
+}

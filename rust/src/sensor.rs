@@ -1,0 +1,288 @@
+//! Synthetic CMOS image sensor and video workload generator.
+//!
+//! The paper's near-sensor deployment consumes live camera frames
+//! (ImageNet-VID sequences for the video evaluation). Offline we generate an
+//! equivalent workload: scenes of moving geometric objects over textured
+//! backgrounds, with exact ground-truth bounding boxes — which is precisely
+//! what MGNet trains against (box-derived patch labels) and what the
+//! detection-style experiments score against.
+//!
+//! Frames are produced in planar RGB `f32` in `[0, 1]`, shape
+//! `(3, size, size)` row-major, matching the L2 model's input layout.
+
+use crate::roi::{BoundingBox, PatchMask};
+use crate::util::rng::Rng;
+
+/// Object shape vocabulary (also the class label in classification runs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shape {
+    Square,
+    Disc,
+    Cross,
+}
+
+impl Shape {
+    pub const ALL: [Shape; 3] = [Shape::Square, Shape::Disc, Shape::Cross];
+
+    pub fn class_id(&self) -> usize {
+        match self {
+            Shape::Square => 0,
+            Shape::Disc => 1,
+            Shape::Cross => 2,
+        }
+    }
+}
+
+/// One moving object in a scene.
+#[derive(Debug, Clone)]
+pub struct SceneObject {
+    pub shape: Shape,
+    /// Center position (pixels, f64 for smooth motion).
+    pub cx: f64,
+    pub cy: f64,
+    /// Half-size (pixels).
+    pub half: f64,
+    /// Velocity (pixels/frame).
+    pub vx: f64,
+    pub vy: f64,
+    /// RGB color.
+    pub color: [f32; 3],
+}
+
+impl SceneObject {
+    pub fn bbox(&self, size: usize) -> BoundingBox {
+        let x0 = (self.cx - self.half).max(0.0) as usize;
+        let y0 = (self.cy - self.half).max(0.0) as usize;
+        let x1 = ((self.cx + self.half).min(size as f64 - 1.0) as usize).max(x0 + 1);
+        let y1 = ((self.cy + self.half).min(size as f64 - 1.0) as usize).max(y0 + 1);
+        BoundingBox::new(x0, y0, x1, y1)
+    }
+
+    fn covers(&self, x: usize, y: usize) -> bool {
+        let dx = x as f64 - self.cx;
+        let dy = y as f64 - self.cy;
+        match self.shape {
+            Shape::Square => dx.abs() <= self.half && dy.abs() <= self.half,
+            Shape::Disc => dx * dx + dy * dy <= self.half * self.half,
+            Shape::Cross => {
+                (dx.abs() <= self.half / 3.0 && dy.abs() <= self.half)
+                    || (dy.abs() <= self.half / 3.0 && dx.abs() <= self.half)
+            }
+        }
+    }
+}
+
+/// One rendered frame + ground truth.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    /// Planar RGB, `3 * size * size`, values in `[0, 1]`.
+    pub pixels: Vec<f32>,
+    pub size: usize,
+    pub boxes: Vec<BoundingBox>,
+    /// Class of the dominant (largest) object.
+    pub label: usize,
+    /// Monotone frame index within its sequence.
+    pub index: u64,
+}
+
+impl Frame {
+    /// Ground-truth patch mask for a given patch size (the paper's labeling
+    /// rule: patch = 1 if it overlaps any box).
+    pub fn gt_mask(&self, patch_px: usize) -> PatchMask {
+        PatchMask::from_boxes(self.size / patch_px, patch_px, &self.boxes)
+    }
+
+    /// Extract non-overlapping flattened patches: output shape
+    /// `(n_patches, patch_px*patch_px*3)`, channels-last within a patch
+    /// (matching the L2 embedding layout).
+    pub fn patchify(&self, patch_px: usize) -> Vec<f32> {
+        let side = self.size / patch_px;
+        let pd = patch_px * patch_px * 3;
+        let mut out = vec![0.0f32; side * side * pd];
+        let plane = self.size * self.size;
+        for py in 0..side {
+            for px in 0..side {
+                let base = (py * side + px) * pd;
+                for dy in 0..patch_px {
+                    for dx in 0..patch_px {
+                        let y = py * patch_px + dy;
+                        let x = px * patch_px + dx;
+                        for c in 0..3 {
+                            out[base + (dy * patch_px + dx) * 3 + c] =
+                                self.pixels[c * plane + y * self.size + x];
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// A synthetic video source: objects move ballistically and bounce off the
+/// frame edges; background is a static low-frequency texture plus per-frame
+/// sensor read noise.
+#[derive(Debug)]
+pub struct VideoSource {
+    pub size: usize,
+    objects: Vec<SceneObject>,
+    background: Vec<f32>,
+    noise_sigma: f32,
+    rng: Rng,
+    frame_index: u64,
+}
+
+impl VideoSource {
+    /// A scene with `num_objects` random objects. Deterministic per seed.
+    pub fn new(size: usize, num_objects: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let objects = (0..num_objects)
+            .map(|_| {
+                let half = rng.uniform(size as f64 * 0.12, size as f64 * 0.24);
+                let shape = Shape::ALL[rng.below(3)];
+                // Class-correlated hue + jitter (mirrors python data.py):
+                // each class has a dominant channel, keeping the build-time
+                // classification task learnable (DESIGN.md §Deviations).
+                let mut color = [
+                    rng.uniform(0.05, 0.35) as f32,
+                    rng.uniform(0.05, 0.35) as f32,
+                    rng.uniform(0.05, 0.35) as f32,
+                ];
+                color[shape.class_id()] = rng.uniform(0.7, 1.0) as f32;
+                SceneObject {
+                    shape,
+                    cx: rng.uniform(half, size as f64 - half),
+                    cy: rng.uniform(half, size as f64 - half),
+                    half,
+                    vx: rng.uniform(-2.5, 2.5),
+                    vy: rng.uniform(-2.5, 2.5),
+                    color,
+                }
+            })
+            .collect();
+        // Low-frequency background texture (sum of two gradients).
+        let mut background = vec![0.0f32; 3 * size * size];
+        let gx = rng.uniform(0.0, 0.15);
+        let gy = rng.uniform(0.0, 0.15);
+        for c in 0..3 {
+            for y in 0..size {
+                for x in 0..size {
+                    background[c * size * size + y * size + x] = (0.1
+                        + gx * x as f64 / size as f64
+                        + gy * y as f64 / size as f64)
+                        as f32;
+                }
+            }
+        }
+        VideoSource { size, objects, background, noise_sigma: 0.01, rng, frame_index: 0 }
+    }
+
+    /// Advance the scene one timestep and render.
+    pub fn next_frame(&mut self) -> Frame {
+        let size = self.size;
+        // Physics step with edge bounce.
+        for o in &mut self.objects {
+            o.cx += o.vx;
+            o.cy += o.vy;
+            if o.cx < o.half || o.cx > size as f64 - o.half {
+                o.vx = -o.vx;
+                o.cx = o.cx.clamp(o.half, size as f64 - o.half);
+            }
+            if o.cy < o.half || o.cy > size as f64 - o.half {
+                o.vy = -o.vy;
+                o.cy = o.cy.clamp(o.half, size as f64 - o.half);
+            }
+        }
+        let mut pixels = self.background.clone();
+        let plane = size * size;
+        for o in &self.objects {
+            let bb = o.bbox(size);
+            for y in bb.y0..=bb.y1.min(size - 1) {
+                for x in bb.x0..=bb.x1.min(size - 1) {
+                    if o.covers(x, y) {
+                        for c in 0..3 {
+                            pixels[c * plane + y * size + x] = o.color[c];
+                        }
+                    }
+                }
+            }
+        }
+        // Sensor read noise.
+        for p in pixels.iter_mut() {
+            *p = (*p + self.noise_sigma * self.rng.normal() as f32).clamp(0.0, 1.0);
+        }
+        let label = self
+            .objects
+            .iter()
+            .max_by(|a, b| a.half.partial_cmp(&b.half).unwrap())
+            .map(|o| o.shape.class_id())
+            .unwrap_or(0);
+        let boxes = self.objects.iter().map(|o| o.bbox(size)).collect();
+        let idx = self.frame_index;
+        self.frame_index += 1;
+        Frame { pixels, size, boxes, label, index: idx }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_have_valid_pixels() {
+        let mut src = VideoSource::new(96, 2, 42);
+        let f = src.next_frame();
+        assert_eq!(f.pixels.len(), 3 * 96 * 96);
+        assert!(f.pixels.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = VideoSource::new(64, 2, 7);
+        let mut b = VideoSource::new(64, 2, 7);
+        assert_eq!(a.next_frame().pixels, b.next_frame().pixels);
+    }
+
+    #[test]
+    fn objects_stay_in_bounds_over_time() {
+        let mut src = VideoSource::new(96, 3, 11);
+        for _ in 0..200 {
+            let f = src.next_frame();
+            for b in &f.boxes {
+                assert!(b.x1 <= 96 && b.y1 <= 96);
+            }
+        }
+    }
+
+    #[test]
+    fn gt_mask_covers_objects_only() {
+        let mut src = VideoSource::new(96, 1, 13);
+        let f = src.next_frame();
+        let m = f.gt_mask(16);
+        // With one modest object, the mask keeps a minority of patches.
+        assert!(m.kept() >= 1);
+        assert!(m.skip_ratio() > 0.3, "skip {}", m.skip_ratio());
+    }
+
+    #[test]
+    fn patchify_shapes_and_content() {
+        let mut src = VideoSource::new(32, 1, 17);
+        let f = src.next_frame();
+        let patches = f.patchify(16);
+        assert_eq!(patches.len(), 4 * 16 * 16 * 3);
+        // First pixel of patch 0 equals pixel (0,0) channels.
+        let plane = 32 * 32;
+        assert_eq!(patches[0], f.pixels[0]);
+        assert_eq!(patches[1], f.pixels[plane]);
+        assert_eq!(patches[2], f.pixels[2 * plane]);
+    }
+
+    #[test]
+    fn motion_changes_frames() {
+        let mut src = VideoSource::new(64, 2, 19);
+        let a = src.next_frame();
+        let b = src.next_frame();
+        assert_ne!(a.pixels, b.pixels);
+        assert_eq!(b.index, a.index + 1);
+    }
+}

@@ -1,0 +1,63 @@
+//! Tiny benchmarking harness (criterion is not available offline).
+//!
+//! Each `rust/benches/*.rs` binary uses [`time_fn`] for wall-clock timing of
+//! hot paths and prints the paper-table reproduction via [`crate::util::table`].
+
+use std::time::Instant;
+
+/// Result of a timed run.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub name: String,
+    pub iters: u32,
+    /// Mean wall-clock seconds per iteration.
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Timing {
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} {:>10}/iter  (min {:>10}, max {:>10}, {} iters)",
+            self.name,
+            super::table::si_time(self.mean_s),
+            super::table::si_time(self.min_s),
+            super::table::si_time(self.max_s),
+            self.iters
+        )
+    }
+}
+
+/// Time `f` over `iters` iterations after `warmup` unrecorded runs.
+/// The closure's return value is black-boxed to keep the optimizer honest.
+pub fn time_fn<T>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> Timing {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean_s = times.iter().sum::<f64>() / times.len() as f64;
+    let min_s = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max_s = times.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    Timing { name: name.to_string(), iters, mean_s, min_s, max_s }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_runs_and_reports() {
+        let t = time_fn("noop-sum", 1, 5, || (0..1000u64).sum::<u64>());
+        assert_eq!(t.iters, 5);
+        assert!(t.mean_s >= 0.0);
+        assert!(t.min_s <= t.mean_s && t.mean_s <= t.max_s);
+        assert!(t.summary().contains("noop-sum"));
+    }
+}

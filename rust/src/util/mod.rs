@@ -1,0 +1,8 @@
+//! Small self-contained utilities (the offline crate set has no `rand`,
+//! `serde`, or `criterion`, so we carry our own PRNG, stats, and table
+//! formatting).
+
+pub mod bench;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,154 @@
+//! Minimal fixed-width table formatter for bench/report output.
+//!
+//! The benches regenerate the paper's tables and figure series as text; this
+//! gives them a consistent, diff-able rendering without external crates.
+
+/// A simple left-aligned text table.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Table { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for i in 0..ncol {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:<w$}", cells[i], w = widths[i]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float with engineering-style precision for table cells.
+pub fn eng(x: f64) -> String {
+    if x == 0.0 {
+        return "0".to_string();
+    }
+    let a = x.abs();
+    if a >= 1000.0 {
+        format!("{x:.0}")
+    } else if a >= 100.0 {
+        format!("{x:.1}")
+    } else if a >= 1.0 {
+        format!("{x:.2}")
+    } else if a >= 0.001 {
+        format!("{x:.4}")
+    } else {
+        format!("{x:.3e}")
+    }
+}
+
+/// Format joules with an auto-scaled SI unit.
+pub fn si_energy(joules: f64) -> String {
+    let a = joules.abs();
+    if a >= 1.0 {
+        format!("{joules:.3} J")
+    } else if a >= 1e-3 {
+        format!("{:.3} mJ", joules * 1e3)
+    } else if a >= 1e-6 {
+        format!("{:.3} uJ", joules * 1e6)
+    } else if a >= 1e-9 {
+        format!("{:.3} nJ", joules * 1e9)
+    } else {
+        format!("{:.3} pJ", joules * 1e12)
+    }
+}
+
+/// Format seconds with an auto-scaled SI unit.
+pub fn si_time(seconds: f64) -> String {
+    let a = seconds.abs();
+    if a >= 1.0 {
+        format!("{seconds:.3} s")
+    } else if a >= 1e-3 {
+        format!("{:.3} ms", seconds * 1e3)
+    } else if a >= 1e-6 {
+        format!("{:.3} us", seconds * 1e6)
+    } else {
+        format!("{:.3} ns", seconds * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(vec!["name", "value"]);
+        t.row(vec!["a", "1"]);
+        t.row(vec!["longer", "2.5"]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("name"));
+        assert!(lines[2].starts_with("a"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn si_units() {
+        assert_eq!(si_energy(2.5e-6), "2.500 uJ");
+        assert_eq!(si_energy(3.2e-3), "3.200 mJ");
+        assert_eq!(si_time(1.5e-9), "1.500 ns");
+        assert_eq!(si_time(0.25), "250.000 ms");
+    }
+
+    #[test]
+    fn eng_scales() {
+        assert_eq!(eng(0.0), "0");
+        // {:.0} uses round-half-to-even.
+        assert_eq!(eng(1234.5), "1234");
+        assert_eq!(eng(12.345), "12.35");
+    }
+}

@@ -1,0 +1,238 @@
+//! ViT-Tiny/Small/Base/Large hyperparameters (Table I / Figs. 8-11 grid)
+//! and the MGNet mask-generator configuration (§IV).
+
+use std::fmt;
+
+/// The four backbone scales evaluated in the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VitVariant {
+    Tiny,
+    Small,
+    Base,
+    Large,
+}
+
+impl VitVariant {
+    pub const ALL: [VitVariant; 4] =
+        [VitVariant::Tiny, VitVariant::Small, VitVariant::Base, VitVariant::Large];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            VitVariant::Tiny => "Tiny",
+            VitVariant::Small => "Small",
+            VitVariant::Base => "Base",
+            VitVariant::Large => "Large",
+        }
+    }
+}
+
+impl fmt::Display for VitVariant {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Full hyperparameter set for one ViT instantiation on one input size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VitConfig {
+    /// Input image side (images are square): 96 or 224 in the paper.
+    pub image_size: usize,
+    /// Patch side `p` (16 throughout the paper).
+    pub patch_size: usize,
+    /// Embedding dimension `d_m`.
+    pub embed_dim: usize,
+    /// Number of attention heads `h`.
+    pub num_heads: usize,
+    /// Encoder depth `L`.
+    pub depth: usize,
+    /// FFN expansion ratio (4 for all standard ViTs).
+    pub mlp_ratio: usize,
+    /// Classifier output dimension.
+    pub num_classes: usize,
+}
+
+impl VitConfig {
+    /// Standard variant hyperparameters (Dosovitskiy et al.).
+    pub fn variant(v: VitVariant, image_size: usize, num_classes: usize) -> Self {
+        let (embed_dim, num_heads, depth) = match v {
+            VitVariant::Tiny => (192, 3, 12),
+            VitVariant::Small => (384, 6, 12),
+            VitVariant::Base => (768, 12, 12),
+            VitVariant::Large => (1024, 16, 24),
+        };
+        VitConfig {
+            image_size,
+            patch_size: 16,
+            embed_dim,
+            num_heads,
+            depth,
+            mlp_ratio: 4,
+            num_classes,
+        }
+    }
+
+    /// Patches per side.
+    pub fn patches_per_side(&self) -> usize {
+        assert_eq!(
+            self.image_size % self.patch_size,
+            0,
+            "image size {} not divisible by patch size {}",
+            self.image_size,
+            self.patch_size
+        );
+        self.image_size / self.patch_size
+    }
+
+    /// Total patch count `n` (excluding the cls token).
+    pub fn num_patches(&self) -> usize {
+        let s = self.patches_per_side();
+        s * s
+    }
+
+    /// Sequence length including the cls token.
+    pub fn seq_len(&self) -> usize {
+        self.num_patches() + 1
+    }
+
+    /// Per-head dimension `d_k = d_m / h` — 64 for every standard variant,
+    /// matching the 64 arms of the optical core (§III).
+    pub fn head_dim(&self) -> usize {
+        assert_eq!(self.embed_dim % self.num_heads, 0);
+        self.embed_dim / self.num_heads
+    }
+
+    /// Flattened patch input dimension `p*p*3`.
+    pub fn patch_dim(&self) -> usize {
+        self.patch_size * self.patch_size * 3
+    }
+
+    /// FFN hidden dimension.
+    pub fn ffn_dim(&self) -> usize {
+        self.embed_dim * self.mlp_ratio
+    }
+
+    /// Total parameter count (weights + biases, embeddings, head).
+    pub fn param_count(&self) -> usize {
+        let d = self.embed_dim;
+        let f = self.ffn_dim();
+        let embed = self.patch_dim() * d + d; // patch projection
+        let pos = self.seq_len() * d + d; // positional + cls token
+        let per_block = {
+            let qkv = 3 * (d * d + d);
+            let proj = d * d + d;
+            let ffn = d * f + f + f * d + d;
+            let norms = 4 * d;
+            qkv + proj + ffn + norms
+        };
+        let head = d * self.num_classes + self.num_classes;
+        embed + pos + self.depth * per_block + head + 2 * d /* final norm */
+    }
+}
+
+/// MGNet configuration (§IV): a single transformer block + cls-attention
+/// scorer + linear per-patch logits, thresholded into a binary mask.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MgnetConfig {
+    pub image_size: usize,
+    pub patch_size: usize,
+    pub embed_dim: usize,
+    pub num_heads: usize,
+    /// Sigmoid threshold `t_reg` for the binary mask.
+    pub region_threshold: f64,
+}
+
+impl MgnetConfig {
+    /// The classification-task MGNet: patch 16, embed 192, 3 heads.
+    pub fn classification(image_size: usize) -> Self {
+        MgnetConfig {
+            image_size,
+            patch_size: 16,
+            embed_dim: 192,
+            num_heads: 3,
+            region_threshold: 0.5,
+        }
+    }
+
+    /// The detection-task MGNet (§IV-2): embed 384, 6 heads.
+    pub fn detection(image_size: usize) -> Self {
+        MgnetConfig {
+            image_size,
+            patch_size: 16,
+            embed_dim: 384,
+            num_heads: 6,
+            region_threshold: 0.5,
+        }
+    }
+
+    pub fn num_patches(&self) -> usize {
+        let s = self.image_size / self.patch_size;
+        s * s
+    }
+
+    /// The MGNet is itself a one-block ViT; reuse the workload machinery.
+    pub fn as_vit(&self) -> VitConfig {
+        VitConfig {
+            image_size: self.image_size,
+            patch_size: self.patch_size,
+            embed_dim: self.embed_dim,
+            num_heads: self.num_heads,
+            depth: 1,
+            mlp_ratio: 4,
+            // scoring head: one logit per patch
+            num_classes: self.num_patches(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_dim_is_64_for_all_variants() {
+        for v in VitVariant::ALL {
+            let c = VitConfig::variant(v, 224, 1000);
+            assert_eq!(c.head_dim(), 64, "{v}: d_k must match the 64-arm core");
+        }
+    }
+
+    #[test]
+    fn patch_counts() {
+        let c96 = VitConfig::variant(VitVariant::Tiny, 96, 10);
+        assert_eq!(c96.num_patches(), 36);
+        assert_eq!(c96.seq_len(), 37);
+        let c224 = VitConfig::variant(VitVariant::Base, 224, 1000);
+        assert_eq!(c224.num_patches(), 196);
+    }
+
+    #[test]
+    fn param_counts_match_published_scale() {
+        // ViT-T ~5.7M, ViT-S ~22M, ViT-B ~86M, ViT-L ~307M (ImageNet heads).
+        let t = VitConfig::variant(VitVariant::Tiny, 224, 1000).param_count();
+        let s = VitConfig::variant(VitVariant::Small, 224, 1000).param_count();
+        let b = VitConfig::variant(VitVariant::Base, 224, 1000).param_count();
+        let l = VitConfig::variant(VitVariant::Large, 224, 1000).param_count();
+        assert!((5_000_000..7_000_000).contains(&t), "tiny {t}");
+        assert!((20_000_000..24_000_000).contains(&s), "small {s}");
+        assert!((82_000_000..90_000_000).contains(&b), "base {b}");
+        assert!((295_000_000..320_000_000).contains(&l), "large {l}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn indivisible_image_size_panics() {
+        VitConfig::variant(VitVariant::Tiny, 100, 10).num_patches();
+    }
+
+    #[test]
+    fn mgnet_matches_paper() {
+        let m = MgnetConfig::classification(224);
+        assert_eq!(m.embed_dim, 192);
+        assert_eq!(m.num_heads, 3);
+        assert_eq!(m.num_patches(), 196);
+        let d = MgnetConfig::detection(224);
+        assert_eq!(d.embed_dim, 384);
+        assert_eq!(d.num_heads, 6);
+        assert_eq!(d.as_vit().depth, 1);
+    }
+}

@@ -1,0 +1,6 @@
+//! Vision-Transformer model configurations (the four variants the paper
+//! evaluates, plus the MGNet RoI mask generator).
+
+pub mod config;
+
+pub use config::{MgnetConfig, VitConfig, VitVariant};

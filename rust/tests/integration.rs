@@ -1,0 +1,89 @@
+//! Integration tests over the real PJRT runtime + compiled artifacts.
+//!
+//! These need `make artifacts` to have run; they are skipped (with a
+//! message) when the artifact directory is missing so `cargo test` stays
+//! green on a fresh checkout. All PJRT work happens inside a single test
+//! body: `PjRtClient` is not `Send`, and artifact compilation (~30 s per
+//! backbone bucket) is the dominant cost, so one sequential flow exercises
+//! the full pipeline.
+
+use optovit::coordinator::pipeline::{serve, Pipeline, PipelineConfig};
+use optovit::runtime::{Runtime, Tensor};
+use optovit::sensor::VideoSource;
+
+fn artifact_dir() -> Option<String> {
+    for dir in ["artifacts", "../artifacts"] {
+        if std::path::Path::new(dir).join("mgnet_96.hlo.txt").exists() {
+            return Some(dir.to_string());
+        }
+    }
+    None
+}
+
+#[test]
+fn runtime_and_pipeline_end_to_end() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return;
+    };
+
+    // --- runtime level: raw artifact execution ---
+    let mut rt = Runtime::new(&dir).expect("runtime");
+    let names = rt.available();
+    assert!(names.contains(&"mgnet_96".to_string()), "{names:?}");
+    assert!(names.contains(&"vit_tiny_96_n36".to_string()), "{names:?}");
+
+    let scores = rt
+        .execute1("mgnet_96", &[Tensor::new(vec![0.25; 36 * 768], vec![36, 768])])
+        .expect("mgnet exec");
+    assert_eq!(scores.len(), 36);
+    assert!(scores.iter().all(|s| s.is_finite()));
+
+    // Determinism: same input, same output.
+    let scores2 = rt
+        .execute1("mgnet_96", &[Tensor::new(vec![0.25; 36 * 768], vec![36, 768])])
+        .expect("mgnet exec 2");
+    assert_eq!(scores, scores2);
+
+    // --- pipeline level: masked serving over a live sensor ---
+    let cfg = PipelineConfig {
+        buckets: vec![9, 36], // subset: keeps compile time bounded
+        ..PipelineConfig::tiny_96()
+    };
+    let mut pipeline = Pipeline::new(cfg, &dir).expect("pipeline");
+    let report = serve(&mut pipeline, 7, 2, 12, 4).expect("serve");
+    assert_eq!(report.frames, 12);
+    assert!(report.mean_latency_s > 0.0);
+    assert!(report.mean_kept_patches >= 1.0);
+    assert!(report.mean_energy_j > 0.0);
+    // With a trained MGNet the mask should beat random (IoU > 0.2); with
+    // --no-train artifacts this is weaker, so only sanity-bound it.
+    assert!((0.0..=1.0).contains(&report.mean_mask_iou));
+    // Masked serving must model less energy than unmasked.
+    let mut cfg_full = PipelineConfig { buckets: vec![9, 36], ..PipelineConfig::tiny_96() };
+    cfg_full.use_mask = false;
+    let mut full = Pipeline::new(cfg_full, &dir).expect("pipeline full");
+    let f = full.next_frame_report();
+    assert!(report.mean_energy_j < f, "masked {} !< full {}", report.mean_energy_j, f);
+
+    // --- per-frame invariants ---
+    let mut sensor = VideoSource::new(96, 2, 99);
+    let frame = sensor.next_frame();
+    let r = pipeline.process_frame(&frame).expect("frame");
+    assert_eq!(r.logits.len(), 10);
+    assert!(r.bucket == 9 || r.bucket == 36);
+    assert!(r.mask.kept() <= 36);
+}
+
+// Helper on Pipeline for the energy comparison above.
+trait FullEnergy {
+    fn next_frame_report(&mut self) -> f64;
+}
+
+impl FullEnergy for Pipeline {
+    fn next_frame_report(&mut self) -> f64 {
+        let mut sensor = VideoSource::new(96, 2, 99);
+        let frame = sensor.next_frame();
+        self.process_frame(&frame).expect("full frame").modeled_energy_j
+    }
+}

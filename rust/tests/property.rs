@@ -1,0 +1,190 @@
+//! Property-based tests over the architecture simulator's invariants
+//! (proptest is unavailable offline; cases are generated with the crate's
+//! deterministic xorshift PRNG — failures print the seed/case).
+
+use optovit::arch::core::{CoreParams, OpticalCore};
+use optovit::arch::mapping::MappingPlan;
+use optovit::arch::scheduler::{AttentionSchedule, Resource};
+use optovit::arch::workload::Workload;
+use optovit::energy::AcceleratorModel;
+use optovit::quant::QuantParams;
+use optovit::roi::PatchMask;
+use optovit::util::rng::Rng;
+use optovit::vit::{VitConfig, VitVariant};
+
+const CASES: usize = 120;
+
+/// Every random MatMul mapping covers each (row, k-chunk, col-tile) cell
+/// exactly once with no slot collisions — the Fig. 6 invariant.
+#[test]
+fn prop_mapping_coverage() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for case in 0..CASES {
+        let m = rng.range(1, 64);
+        let k = rng.range(1, 512);
+        let n = rng.range(1, 512);
+        let params = CoreParams { num_cores: rng.range(1, 8), ..CoreParams::default() };
+        let plan = MappingPlan::weight_stationary(m, k, n, params);
+        assert!(
+            plan.validate_coverage().is_none(),
+            "case {case}: {m}x{k}x{n} cores={} -> {:?}",
+            params.num_cores,
+            plan.validate_coverage()
+        );
+    }
+}
+
+/// Mapping makespan never exceeds the single-core chunk count and never
+/// beats the perfect-parallel lower bound.
+#[test]
+fn prop_mapping_makespan_bounds() {
+    let mut rng = Rng::new(0xBEEF);
+    for _ in 0..CASES {
+        let m = rng.range(1, 48);
+        let k = rng.range(1, 300);
+        let n = rng.range(1, 300);
+        let cores = rng.range(1, 8);
+        let params = CoreParams { num_cores: cores, ..CoreParams::default() };
+        let plan = MappingPlan::weight_stationary(m, k, n, params);
+        let total = plan.chunks.len() as u64;
+        let lower = total.div_ceil(cores as u64);
+        let makespan = plan.makespan_slots();
+        assert!(makespan >= lower && makespan <= total, "{m}x{k}x{n}@{cores}: {lower} <= {makespan} <= {total}");
+    }
+}
+
+/// Cost-model conservation: cycles * macs_per_cycle == mac_slots, ADC
+/// conversions == cycles * arms, and utilization in (0, 1].
+#[test]
+fn prop_core_cost_conservation() {
+    let mut rng = Rng::new(0xFACE);
+    let core = OpticalCore::new(CoreParams::default());
+    for _ in 0..CASES {
+        let m = rng.range(1, 64);
+        let k = rng.range(1, 1024);
+        let n = rng.range(1, 1024);
+        let c = core.matmul_cost(m, k, n);
+        assert_eq!(c.mac_slots, c.cycles * 2048);
+        assert_eq!(c.adc_conversions, c.cycles * 64);
+        assert_eq!(c.vcsel_symbols, c.cycles * 32);
+        let u = c.utilization();
+        assert!(u > 0.0 && u <= 1.0, "util {u} for {m}x{k}x{n}");
+        assert!(c.macs <= c.mac_slots);
+    }
+}
+
+/// Scheduler causality + per-core compute exclusivity for random shapes.
+#[test]
+fn prop_schedule_causality_random() {
+    let mut rng = Rng::new(0xDEAD);
+    for _ in 0..12 {
+        let variant = [VitVariant::Tiny, VitVariant::Small][rng.below(2)];
+        let cfg = VitConfig::variant(variant, 96, 10);
+        let n = rng.range(2, cfg.seq_len() + 1);
+        let tune = [40.0, 250.0, 1000.0][rng.below(3)];
+        let params = CoreParams { tune_ns: tune, ..CoreParams::default() };
+        let decomposed = rng.chance(0.5);
+        let s = if decomposed {
+            AttentionSchedule::decomposed(&cfg, n, params, 1)
+        } else {
+            AttentionSchedule::direct(&cfg, n, params, 1)
+        };
+        let (timing, stats) = s.schedule(5);
+        for (i, t) in s.tasks.iter().enumerate() {
+            for d in t.compute_after.to_vec() {
+                assert!(timing[d].compute_end <= timing[i].compute_start + 1e-9);
+            }
+            for d in t.tune_after.to_vec() {
+                assert!(timing[d].compute_end <= timing[i].tune_start + 1e-9);
+            }
+        }
+        assert!(stats.makespan_ns > 0.0);
+        assert!(stats.mean_core_utilization <= 1.0);
+        // compute exclusivity per core
+        let mut per_core: Vec<Vec<(f64, f64)>> = vec![Vec::new(); 5];
+        for (i, t) in s.tasks.iter().enumerate() {
+            if let Resource::Core(c) = t.resource {
+                per_core[c].push((timing[i].compute_start, timing[i].compute_end));
+            }
+        }
+        for ivs in &mut per_core {
+            ivs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for w in ivs.windows(2) {
+                assert!(w[0].1 <= w[1].0 + 1e-9);
+            }
+        }
+    }
+}
+
+/// Energy monotonicity: more kept patches never costs less energy; more
+/// depth/width never costs less.
+#[test]
+fn prop_energy_monotone_in_patches() {
+    let mut rng = Rng::new(0xAB);
+    let model = AcceleratorModel::default();
+    for _ in 0..40 {
+        let cfg = VitConfig::variant(VitVariant::Tiny, 96, 10);
+        let a = rng.range(1, 36);
+        let b = rng.range(a, 37);
+        let ea = model.frame_report("a", &cfg, a, true).energy.total_j();
+        let eb = model.frame_report("b", &cfg, b, true).energy.total_j();
+        assert!(ea <= eb + 1e-15, "kept {a} -> {ea}, kept {b} -> {eb}");
+    }
+}
+
+/// Quantization: |fake_quant(x) - x| <= scale/2 and idempotence, for random
+/// tensors and bit widths.
+#[test]
+fn prop_quant_roundtrip() {
+    let mut rng = Rng::new(0x51);
+    for _ in 0..CASES {
+        let bits = rng.range(2, 9) as u32;
+        let len = rng.range(1, 256);
+        let mut xs = vec![0.0f32; len];
+        let scale = rng.uniform(0.01, 100.0) as f32;
+        rng.fill_uniform_f32(&mut xs, -scale, scale);
+        let p = QuantParams::calibrate(&xs, bits);
+        for &x in &xs {
+            let q = p.fake_quantize(x);
+            assert!((q - x).abs() <= p.max_abs_error() + 1e-5);
+            assert_eq!(p.fake_quantize(q), q, "idempotence at {x}");
+        }
+    }
+}
+
+/// PatchMask: gather length == kept * dim; IoU symmetry and bounds.
+#[test]
+fn prop_mask_gather_and_iou() {
+    let mut rng = Rng::new(0x99);
+    for _ in 0..CASES {
+        let side = rng.range(2, 15);
+        let a = PatchMask::random(side, rng.uniform(0.0, 1.0), &mut rng);
+        let b = PatchMask::random(side, rng.uniform(0.0, 1.0), &mut rng);
+        let iou_ab = a.iou(&b);
+        let iou_ba = b.iou(&a);
+        assert!((iou_ab - iou_ba).abs() < 1e-12);
+        assert!((0.0..=1.0).contains(&iou_ab));
+        assert_eq!(a.iou(&a), 1.0);
+        let dim = rng.range(1, 8);
+        let patches = vec![1.0f32; a.num_patches() * dim];
+        assert_eq!(a.gather_patches(&patches, dim).len(), a.kept() * dim);
+        assert!((a.skip_ratio() - (1.0 - a.kept() as f64 / a.num_patches() as f64)).abs() < 1e-12);
+    }
+}
+
+/// Workload MAC counts scale correctly with masking: the unmasked total is
+/// an upper bound, and the Embed op scales exactly linearly.
+#[test]
+fn prop_workload_masking_bounds() {
+    let mut rng = Rng::new(0x77);
+    for _ in 0..40 {
+        let cfg = VitConfig::variant(VitVariant::Tiny, 96, 10);
+        let kept = rng.range(1, cfg.num_patches() + 1);
+        let w = Workload::vit(&cfg, kept, true);
+        let full = Workload::vit(&cfg, cfg.num_patches(), true);
+        assert!(w.total_macs() <= full.total_macs());
+        let embed = w.matmuls.iter().find(|m| m.site == "embed").unwrap();
+        assert_eq!(embed.m, kept, "embed rows must equal kept patches");
+        assert_eq!(w.seq_len, kept + 1);
+    }
+}
