@@ -2,13 +2,16 @@
 //! through the full three-layer stack — sensor thread → bounded queue →
 //! MGNet (PJRT) → RoI mask → bucket router → ViT backbone (PJRT) — and
 //! report latency, throughput, mask quality, accuracy, and the modeled
-//! accelerator energy, with and without RoI masking.
+//! accelerator energy, with and without RoI masking. With `workers > 1` the
+//! sharded engine drives one pipeline (and one PJRT runtime) per worker
+//! thread.
 //!
 //! ```bash
 //! make artifacts
-//! cargo run --release --example video_pipeline -- [frames] [seed]
+//! cargo run --release --example video_pipeline -- [frames] [seed] [workers]
 //! ```
 
+use optovit::coordinator::engine::serve_sharded;
 use optovit::coordinator::pipeline::{serve, Pipeline, PipelineConfig};
 use optovit::util::table::{si_energy, si_time, Table};
 
@@ -16,15 +19,22 @@ fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let frames: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(200);
     let seed: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(42);
+    let workers: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(1).max(1);
 
     let mut rows = Vec::new();
     for use_mask in [true, false] {
         let mut cfg = PipelineConfig::tiny_96();
         cfg.use_mask = use_mask;
         let label = if use_mask { "MGNet + RoI mask" } else { "no mask (all patches)" };
-        println!("== serving {frames} frames: {label} ==");
-        let mut pipeline = Pipeline::new(cfg, "artifacts")?;
-        let report = serve(&mut pipeline, seed, 2, frames, 4)?;
+        println!("== serving {frames} frames ({workers} worker(s)): {label} ==");
+        let (report, metrics) = if workers > 1 {
+            serve_sharded(&cfg, "artifacts", workers, 4, seed, 2, frames)?
+        } else {
+            let mut pipeline = Pipeline::new(cfg, "artifacts")?;
+            let report = serve(&mut pipeline, seed, 2, frames, 4)?;
+            let metrics = std::mem::take(&mut pipeline.metrics);
+            (report, metrics)
+        };
         println!("  wall throughput   {:.1} fps", report.wall_fps);
         println!("  mean latency      {}", si_time(report.mean_latency_s));
         println!("  mean kept         {:.1}/36 patches", report.mean_kept_patches);
@@ -32,10 +42,20 @@ fn main() -> anyhow::Result<()> {
         println!("  top-1 accuracy    {:.3}", report.top1_accuracy);
         println!("  modeled energy    {}/frame", si_energy(report.mean_energy_j));
         println!("  modeled KFPS/W    {:.1}", report.modeled_kfps_per_watt);
-        println!("  frames dropped    {}\n", report.dropped);
-        println!("per-stage host latency:");
+        println!("  frames dropped    {}", report.dropped);
+        if workers > 1 {
+            for w in &report.per_worker {
+                println!(
+                    "  worker {}          {} frames, {:.0}% utilized",
+                    w.worker,
+                    w.frames,
+                    w.utilization * 100.0
+                );
+            }
+        }
+        println!("\nper-stage host latency:");
         let mut t = Table::new(vec!["stage", "mean", "max"]);
-        for (s, mean, max, _) in pipeline.metrics.stage_rows() {
+        for (s, mean, max, _) in metrics.stage_rows() {
             t.row(vec![s, si_time(mean), si_time(max)]);
         }
         print!("{}\n", t.render());

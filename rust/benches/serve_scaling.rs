@@ -1,0 +1,224 @@
+//! Worker-scaling bench for the sharded serving engine.
+//!
+//! Sweeps `--workers 1,2,4` (default) through `coordinator::engine`, and
+//! emits a machine-readable `BENCH_serve.json` (wall-FPS, mean latency,
+//! allocations/frame from the counting allocator, modeled energy/frame,
+//! and speedup vs. 1 worker) so the perf trajectory is trackable across
+//! PRs.
+//!
+//! ```bash
+//! cargo bench --bench serve_scaling -- \
+//!     [--workers 1,2,4] [--frames 240] [--out BENCH_serve.json] [--artifacts artifacts]
+//! ```
+//!
+//! (declared `harness = false`: this bench carries its own `main`.)
+//!
+//! With compiled artifacts present the sweep drives real PJRT pipelines;
+//! otherwise it falls back to a synthetic host-compute worker with the
+//! same sensor → patchify → mask → route → backbone structure, so the
+//! host-side scaling behaviour is measurable on any machine.
+
+use anyhow::Result;
+use optovit::cli::Args;
+use optovit::coordinator::engine::{self, serve_sharded, EngineConfig, FrameWorker};
+use optovit::coordinator::pipeline::{FrameResult, FrameScratch, PipelineConfig, ServeReport};
+use optovit::coordinator::{BucketRouter, StageMetrics};
+use optovit::energy::AcceleratorModel;
+use optovit::sensor::Frame;
+use optovit::util::bench::{alloc_count, CountingAlloc};
+use optovit::util::table::{si_energy, si_time, Table};
+use optovit::vit::{MgnetConfig, VitConfig};
+use std::time::Instant;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Host-compute stand-in for a PJRT pipeline: same staging hot path
+/// (shared `FrameScratch` code), with a deterministic arithmetic backbone
+/// whose cost scales with the routed bucket.
+struct SyntheticWorker {
+    scratch: FrameScratch,
+    router: BucketRouter,
+    model: AcceleratorModel,
+    vit: VitConfig,
+    mgnet: MgnetConfig,
+    metrics: StageMetrics,
+    score_buf: Vec<f32>,
+    /// Backbone work passes per frame (tunes per-frame cost into the
+    /// ~millisecond range a compiled Tiny backbone occupies).
+    work_iters: usize,
+}
+
+impl SyntheticWorker {
+    fn new(cfg: &PipelineConfig, work_iters: usize) -> Self {
+        let vit = cfg.vit_config();
+        SyntheticWorker {
+            scratch: FrameScratch::for_config(cfg),
+            router: BucketRouter::new(cfg.buckets.clone()),
+            model: AcceleratorModel::default(),
+            vit,
+            mgnet: cfg.mgnet_config(),
+            metrics: StageMetrics::new(),
+            score_buf: vec![0.0; vit.num_patches()],
+            work_iters,
+        }
+    }
+}
+
+impl FrameWorker for SyntheticWorker {
+    fn process(&mut self, frame: &Frame) -> Result<FrameResult> {
+        let t_start = Instant::now();
+        let patch_px = self.vit.patch_size;
+        let side = frame.size / patch_px;
+        let patch_dim = self.vit.patch_dim();
+
+        self.scratch.stage_patchify(frame, patch_px);
+
+        // Brightness-contrast score per patch: a cheap MGNet stand-in that
+        // still tracks the moving objects over the dim background.
+        for (p, score) in self.score_buf.iter_mut().enumerate() {
+            let row = &self.scratch.patches()[p * patch_dim..(p + 1) * patch_dim];
+            let mean: f32 = row.iter().sum::<f32>() / patch_dim as f32;
+            *score = (mean - 0.35) * 12.0;
+        }
+        self.scratch.stage_mask(side, &self.score_buf, 0.5);
+
+        let bucket = self.scratch.stage_route(&self.router, patch_dim);
+        let kept = self.scratch.kept().len();
+
+        // Deterministic arithmetic "backbone" over the staged bucket.
+        let staged = self.scratch.bucket_patches(bucket, patch_dim);
+        let mut logits = vec![0.0f32; 10];
+        for it in 0..self.work_iters {
+            let mut acc = 0.0f32;
+            for (i, &x) in staged.iter().enumerate() {
+                acc += x * ((i % 7) as f32 - 3.0);
+            }
+            logits[it % 10] += acc * 1e-3;
+        }
+        std::hint::black_box(&logits);
+
+        let energy_j = self.model.masked_energy(&self.vit, &self.mgnet, kept).total_j();
+        let latency = t_start.elapsed().as_secs_f64();
+        self.metrics.record_stage("total", latency);
+        self.metrics.record_frame(energy_j, kept);
+        Ok(FrameResult {
+            frame_index: frame.index,
+            logits,
+            mask: self.scratch.mask().clone(),
+            bucket,
+            modeled_energy_j: energy_j,
+            latency_s: latency,
+        })
+    }
+
+    fn take_metrics(&mut self) -> StageMetrics {
+        std::mem::take(&mut self.metrics)
+    }
+}
+
+struct Row {
+    workers: usize,
+    report: ServeReport,
+    allocs_per_frame: f64,
+}
+
+/// The `speedup_vs_1` denominator: the 1-worker row wherever it appears in
+/// the sweep, falling back to the first row only when no 1-worker point
+/// was requested.
+fn baseline_fps(rows: &[Row]) -> f64 {
+    rows.iter()
+        .find(|r| r.workers == 1)
+        .or_else(|| rows.first())
+        .map(|r| r.report.wall_fps)
+        .unwrap_or(0.0)
+}
+
+fn fmt_json(frames: u64, mode: &str, rows: &[Row]) -> String {
+    let base_fps = baseline_fps(rows);
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"serve_scaling\",\n");
+    out.push_str(&format!("  \"mode\": \"{mode}\",\n"));
+    out.push_str(&format!("  \"frames\": {frames},\n"));
+    out.push_str("  \"sweep\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let speedup = if base_fps > 0.0 { r.report.wall_fps / base_fps } else { 0.0 };
+        out.push_str(&format!(
+            "    {{\"workers\": {}, \"wall_fps\": {:.3}, \"mean_latency_s\": {:.6e}, \
+             \"mean_energy_j\": {:.6e}, \"allocs_per_frame\": {:.1}, \"dropped\": {}, \
+             \"speedup_vs_1\": {:.3}}}{}\n",
+            r.workers,
+            r.report.wall_fps,
+            r.report.mean_latency_s,
+            r.report.mean_energy_j,
+            r.allocs_per_frame,
+            r.report.dropped,
+            speedup,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
+    let worker_counts = args.get_usize_list("workers", &[1, 2, 4]).map_err(anyhow::Error::msg)?;
+    let frames = args.get_u64("frames", 240).map_err(anyhow::Error::msg)?;
+    let out_path = args.get_or("out", "BENCH_serve.json").to_string();
+    let artifact_dir = args.get_or("artifacts", "artifacts").to_string();
+    let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
+
+    let cfg = PipelineConfig::tiny_96();
+    let have_artifacts = std::path::Path::new(&artifact_dir)
+        .join(format!("{}.hlo.txt", cfg.mgnet_artifact()))
+        .exists();
+    let mode = if have_artifacts { "pjrt" } else { "synthetic" };
+    println!(
+        "== serve_scaling: {frames} frames/point, workers {worker_counts:?}, mode {mode} ==\n"
+    );
+
+    let mut rows = Vec::new();
+    for &w in &worker_counts {
+        let a0 = alloc_count();
+        let (report, _metrics) = if have_artifacts {
+            serve_sharded(&cfg, &artifact_dir, w, 4, seed, 2, frames)?
+        } else {
+            let vit = cfg.vit_config();
+            let mut ecfg = EngineConfig::new(w, vit.patch_size, cfg.image_size);
+            ecfg.sensor_seed = seed;
+            engine::run(|_wid| Ok(SyntheticWorker::new(&cfg, 150)), &ecfg, frames, |_r| {})?
+        };
+        let allocs = alloc_count() - a0;
+        let allocs_per_frame =
+            if report.frames > 0 { allocs as f64 / report.frames as f64 } else { 0.0 };
+        println!(
+            "workers {w}: {:.1} fps, {} mean latency, {:.0} allocs/frame, {} dropped",
+            report.wall_fps,
+            si_time(report.mean_latency_s),
+            allocs_per_frame,
+            report.dropped
+        );
+        rows.push(Row { workers: w, report, allocs_per_frame });
+    }
+
+    println!("\n== scaling summary ==");
+    let base = baseline_fps(&rows);
+    let mut t = Table::new(vec!["workers", "wall fps", "speedup", "mean latency", "energy/frame"]);
+    for r in &rows {
+        t.row(vec![
+            r.workers.to_string(),
+            format!("{:.1}", r.report.wall_fps),
+            format!("{:.2}x", if base > 0.0 { r.report.wall_fps / base } else { 0.0 }),
+            si_time(r.report.mean_latency_s),
+            si_energy(r.report.mean_energy_j),
+        ]);
+    }
+    print!("{}", t.render());
+
+    let json = fmt_json(frames, mode, &rows);
+    std::fs::write(&out_path, &json)?;
+    println!("\nwrote {out_path}");
+    Ok(())
+}

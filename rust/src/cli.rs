@@ -82,6 +82,19 @@ impl Args {
     pub fn get_bool(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
+
+    /// Comma-separated usize list, e.g. `--workers 1,2,4`.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim())
+                .filter(|s| !s.is_empty())
+                .map(|s| s.parse::<usize>().map_err(|e| format!("--{key}: '{s}': {e}")))
+                .collect(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -126,5 +139,15 @@ mod tests {
     fn bad_number_is_error() {
         let a = parse(&["run", "--n", "abc"]);
         assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn usize_list_parses_and_defaults() {
+        let a = parse(&["bench", "--workers", "1,2,4"]);
+        assert_eq!(a.get_usize_list("workers", &[8]).unwrap(), vec![1, 2, 4]);
+        assert_eq!(a.get_usize_list("absent", &[1, 2]).unwrap(), vec![1, 2]);
+        let spaced = parse(&["bench", "--workers", " 2, 3 "]);
+        assert_eq!(spaced.get_usize_list("workers", &[]).unwrap(), vec![2, 3]);
+        assert!(parse(&["bench", "--workers", "1,x"]).get_usize_list("workers", &[]).is_err());
     }
 }

@@ -7,7 +7,8 @@
 //! validity-masked patch slots. This is the same shape-bucketing strategy
 //! production LLM routers use for dynamic sequence lengths.
 
-use crate::sensor::Frame;
+use crate::sensor::{Frame, VideoSource};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::time::Duration;
 
@@ -61,9 +62,13 @@ impl BucketRouter {
     }
 }
 
-/// Bounded frame queue between the sensor thread and the inference thread.
-/// `try_push` drops the frame when full (sensor backpressure: a saturated
-/// near-sensor pipeline drops frames rather than buffering stale ones).
+/// Bounded frame queue out of the sensor thread — feeding the inference
+/// thread directly in single-pipeline serving, or the dispatcher in the
+/// sharded engine (`coordinator::engine`), where it is the only point in
+/// the system that drops frames. `try_push` drops the frame when full
+/// (sensor backpressure: a saturated near-sensor pipeline drops frames
+/// rather than buffering stale ones); callers count rejections to report
+/// real drops, not frames merely in flight at shutdown.
 #[derive(Debug)]
 pub struct FrameQueue {
     tx: SyncSender<Frame>,
@@ -85,6 +90,39 @@ impl FrameQueue {
     /// Blocking push (used by paced sensors that must not drop).
     pub fn push(&self, frame: Frame) -> bool {
         self.tx.send(frame).is_ok()
+    }
+}
+
+/// The sensor production loop shared by single-pipeline `serve` and the
+/// sharded engine: produce frames as fast as the queue accepts them until
+/// `stop` is set, idling while `go` is clear (consumers still warming up)
+/// so warmup time can never inflate the rejection count. Every `try_push`
+/// rejection — the only way the system drops a frame — increments
+/// `rejected`.
+pub fn sensor_loop(
+    queue: FrameQueue,
+    size: usize,
+    num_objects: usize,
+    seed: u64,
+    go: &AtomicBool,
+    stop: &AtomicBool,
+    rejected: &AtomicU64,
+) {
+    let mut src = VideoSource::new(size, num_objects, seed);
+    while !stop.load(Ordering::Relaxed) {
+        if !go.load(Ordering::Relaxed) {
+            std::thread::sleep(Duration::from_micros(500));
+            continue;
+        }
+        let f = src.next_frame();
+        if !queue.try_push(f) {
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+            rejected.fetch_add(1, Ordering::Relaxed);
+            // Yield briefly to let the consumer drain.
+            std::thread::sleep(Duration::from_micros(200));
+        }
     }
 }
 

@@ -1,0 +1,450 @@
+//! Sharded multi-worker serving engine.
+//!
+//! The single-pipeline [`super::pipeline::serve`] loop is capped at one
+//! host core because the PJRT client is not `Send`. This engine scales the
+//! host side the way production photonic-transformer servers exploit
+//! parallel dynamically-operated cores: a dispatcher thread shards frames
+//! across N worker threads, **each of which constructs its own pipeline**
+//! (one PJRT runtime per thread), and a reassembler emits results strictly
+//! in dispatch order.
+//!
+//! ```text
+//!                       ┌─▶ worker 0 (own Pipeline/PJRT) ─┐
+//! sensor ─▶ dispatcher ─┼─▶ worker 1 (own Pipeline/PJRT) ─┼─▶ reassembler
+//!           (load-aware │        …                        │  (in-order,
+//!            round-robin)└─▶ worker N-1 ──────────────────┘   merged metrics)
+//! ```
+//!
+//! Scheduling is round-robin biased by queue depth: each frame goes to the
+//! alive worker with the fewest in-flight frames (ties broken in rotation
+//! order), falling back to a blocking hand-off only when every bounded
+//! worker queue is full. A worker that panics or returns an error fails the
+//! whole run promptly — the dispatcher detects the closed queue, the
+//! reassembler sees the failure message, and no thread is left hanging.
+
+use std::collections::BTreeMap;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError, TrySendError};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::{recv_frame, sensor_loop, FrameQueue};
+use super::pipeline::{FrameResult, Pipeline, PipelineConfig, ServeReport};
+use super::stats::{StageMetrics, WorkerStats};
+use crate::sensor::Frame;
+
+/// A per-thread frame processor the engine can drive. [`Pipeline`] is the
+/// production implementation; tests plug in mock workers.
+///
+/// Implementations are constructed *inside* their worker thread (see
+/// [`run`]'s `factory`), so they do not need to be `Send` — exactly the
+/// constraint the non-`Send` PJRT runtime imposes.
+pub trait FrameWorker {
+    /// One-time per-worker preparation (e.g. artifact compilation).
+    fn warmup(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Process one frame end-to-end.
+    fn process(&mut self, frame: &Frame) -> Result<FrameResult>;
+
+    /// Hand the worker's accumulated metrics to the engine at shutdown.
+    fn take_metrics(&mut self) -> StageMetrics;
+}
+
+impl FrameWorker for Pipeline {
+    fn warmup(&mut self) -> Result<()> {
+        Pipeline::warmup(self)
+    }
+
+    fn process(&mut self, frame: &Frame) -> Result<FrameResult> {
+        self.process_frame(frame)
+    }
+
+    fn take_metrics(&mut self) -> StageMetrics {
+        std::mem::take(&mut self.metrics)
+    }
+}
+
+/// Engine topology + workload parameters.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Worker threads (each with its own pipeline); clamped to >= 1.
+    pub workers: usize,
+    /// Bounded queue depth per worker.
+    pub queue_depth: usize,
+    /// Bounded sensor→dispatcher queue depth.
+    pub sensor_queue_depth: usize,
+    /// Patch side in pixels (for ground-truth mask scoring).
+    pub patch_px: usize,
+    /// Sensor frame side in pixels.
+    pub image_size: usize,
+    /// Moving objects in the synthetic scene.
+    pub num_objects: usize,
+    /// Sensor RNG seed.
+    pub sensor_seed: u64,
+    /// How long the reassembler waits for all workers to warm up
+    /// (artifact compilation can take minutes).
+    pub warmup_timeout_s: f64,
+    /// Steady-state stall timeout: no worker progress for this long fails
+    /// the run instead of hanging it.
+    pub stall_timeout_s: f64,
+}
+
+impl EngineConfig {
+    /// Defaults matching `PipelineConfig::tiny_96` serving.
+    pub fn new(workers: usize, patch_px: usize, image_size: usize) -> Self {
+        let workers = workers.max(1);
+        EngineConfig {
+            workers,
+            queue_depth: 4,
+            sensor_queue_depth: 4 * workers,
+            patch_px,
+            image_size,
+            num_objects: 2,
+            sensor_seed: 42,
+            warmup_timeout_s: 600.0,
+            stall_timeout_s: 60.0,
+        }
+    }
+}
+
+/// What a worker thread hands back on clean exit (metrics + utilization),
+/// or the failure message that must abort the run.
+type WorkerOutcome = std::result::Result<(StageMetrics, WorkerStats), String>;
+
+/// Messages from workers / dispatcher to the reassembler.
+enum Msg {
+    /// Worker finished warmup and is accepting frames.
+    Ready,
+    /// One processed frame, tagged with its dense dispatch sequence number.
+    Result { seq: u64, result: FrameResult, iou: f64, correct: bool },
+    /// Worker drained its queue and exited cleanly.
+    Done { stats: WorkerStats, metrics: StageMetrics },
+    /// Worker failed (error or panic): the run must fail, not hang.
+    Failed { error: String },
+    /// Dispatcher finished; exactly `dispatched` results are expected.
+    DispatchDone { dispatched: u64 },
+}
+
+/// Run a sharded serving session: `num_frames` frames from the synthetic
+/// sensor, sharded across `cfg.workers` workers built by `factory` (one
+/// call per worker thread, so non-`Send` pipelines are fine). `sink`
+/// receives every [`FrameResult`] strictly in dispatch order.
+///
+/// Returns the combined [`ServeReport`] plus the merged cross-worker
+/// [`StageMetrics`] for per-stage reporting.
+pub fn run<W, F>(
+    factory: F,
+    cfg: &EngineConfig,
+    num_frames: u64,
+    mut sink: impl FnMut(&FrameResult),
+) -> Result<(ServeReport, StageMetrics)>
+where
+    W: FrameWorker,
+    F: Fn(usize) -> Result<W> + Sync,
+{
+    let n_workers = cfg.workers.max(1);
+    let factory = &factory;
+
+    // Sensor → dispatcher queue; `dropped` counts actual try_push
+    // rejections, not frames in flight at stop time.
+    let (sensor_q, sensor_rx) = FrameQueue::bounded(cfg.sensor_queue_depth.max(1));
+    let rejected = AtomicU64::new(0);
+    // go: all workers warmed up, start producing/dispatching.
+    // stop: sensor shutdown. abort: dispatcher shutdown (failure path).
+    let go = AtomicBool::new(false);
+    let stop = AtomicBool::new(false);
+    let abort = AtomicBool::new(false);
+    let inflight: Vec<AtomicU64> = (0..n_workers).map(|_| AtomicU64::new(0)).collect();
+
+    let (res_tx, res_rx) = mpsc::channel::<Msg>();
+    let mut worker_txs = Vec::with_capacity(n_workers);
+    let mut worker_rxs = Vec::with_capacity(n_workers);
+    for _ in 0..n_workers {
+        let (tx, rx) = mpsc::sync_channel::<(u64, Frame)>(cfg.queue_depth.max(1));
+        worker_txs.push(tx);
+        worker_rxs.push(rx);
+    }
+
+    let (rejected_r, go_r, stop_r, abort_r) = (&rejected, &go, &stop, &abort);
+    let inflight_r = &inflight;
+    let patch_px = cfg.patch_px;
+    let (image_size, num_objects, sensor_seed) = (cfg.image_size, cfg.num_objects, cfg.sensor_seed);
+    let warmup_timeout = Duration::from_secs_f64(cfg.warmup_timeout_s.max(0.1));
+    let stall_timeout = Duration::from_secs_f64(cfg.stall_timeout_s.max(0.1));
+
+    let outcome = std::thread::scope(|s| {
+        // --- sensor thread: produce frames as fast as the queue accepts,
+        //     idle until all workers are warm (`go`) ---
+        s.spawn(move || {
+            sensor_loop(sensor_q, image_size, num_objects, sensor_seed, go_r, stop_r, rejected_r)
+        });
+
+        // --- worker threads: own pipeline each, drain own bounded queue ---
+        for (wid, rx) in worker_rxs.into_iter().enumerate() {
+            let res_tx = res_tx.clone();
+            s.spawn(move || {
+                let body = AssertUnwindSafe(|| -> WorkerOutcome {
+                    let mut w = factory(wid)
+                        .map_err(|e| format!("worker {wid}: construction failed: {e:#}"))?;
+                    w.warmup().map_err(|e| format!("worker {wid}: warmup failed: {e:#}"))?;
+                    res_tx.send(Msg::Ready).ok();
+                    // Utilization window opens at the first frame, not at
+                    // warmup completion: a fast-warming worker must not be
+                    // charged its peers' compile time as idle.
+                    let mut t_first: Option<Instant> = None;
+                    let mut busy = Duration::ZERO;
+                    let mut frames = 0u64;
+                    while let Ok((seq, frame)) = rx.recv() {
+                        t_first.get_or_insert_with(Instant::now);
+                        let gt = frame.gt_mask(patch_px);
+                        let label = frame.label;
+                        let t0 = Instant::now();
+                        let out = w.process(&frame);
+                        busy += t0.elapsed();
+                        inflight_r[wid].fetch_sub(1, Ordering::Relaxed);
+                        let r = out.map_err(|e| {
+                            format!("worker {wid}: frame {} failed: {e:#}", frame.index)
+                        })?;
+                        frames += 1;
+                        let iou = r.mask.iou(&gt);
+                        let correct = r.predicted_class() == label;
+                        res_tx.send(Msg::Result { seq, result: r, iou, correct }).ok();
+                    }
+                    let active_s = t_first.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+                    let busy_s = busy.as_secs_f64();
+                    Ok((
+                        w.take_metrics(),
+                        WorkerStats {
+                            worker: wid,
+                            frames,
+                            busy_s,
+                            utilization: if active_s > 0.0 {
+                                (busy_s / active_s).min(1.0)
+                            } else {
+                                0.0
+                            },
+                        },
+                    ))
+                });
+                match std::panic::catch_unwind(body) {
+                    Ok(Ok((metrics, stats))) => {
+                        res_tx.send(Msg::Done { stats, metrics }).ok();
+                    }
+                    Ok(Err(error)) => {
+                        res_tx.send(Msg::Failed { error }).ok();
+                    }
+                    Err(_) => {
+                        res_tx
+                            .send(Msg::Failed { error: format!("worker {wid} panicked") })
+                            .ok();
+                    }
+                }
+            });
+        }
+
+        // --- dispatcher thread: load-aware round-robin sharding ---
+        let dispatch_tx = res_tx.clone();
+        s.spawn(move || {
+            while !go_r.load(Ordering::Relaxed) && !abort_r.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_micros(500));
+            }
+            let mut dispatched = 0u64;
+            let mut rr = 0usize;
+            let mut alive = vec![true; n_workers];
+            // Reused across frames: the dispatcher itself stays off the
+            // per-frame heap, like the pipeline hot path it feeds.
+            let mut candidates: Vec<usize> = Vec::with_capacity(n_workers);
+            'dispatch: while dispatched < num_frames && !abort_r.load(Ordering::Relaxed) {
+                let Some(frame) = recv_frame(&sensor_rx, Duration::from_secs(5)) else {
+                    break;
+                };
+                let mut undelivered = frame;
+                'place: loop {
+                    candidates.clear();
+                    candidates.extend((0..n_workers).filter(|&w| alive[w]));
+                    if candidates.is_empty() {
+                        dispatch_tx
+                            .send(Msg::Failed { error: "all workers died".to_string() })
+                            .ok();
+                        break 'dispatch;
+                    }
+                    // Least-loaded first; ties broken in rotation order so
+                    // equally-idle workers get frames round-robin.
+                    let rot = rr % n_workers;
+                    candidates.sort_unstable_by_key(|&w| {
+                        (inflight_r[w].load(Ordering::Relaxed), (w + n_workers - rot) % n_workers)
+                    });
+                    let mut f = undelivered;
+                    for &w in &candidates {
+                        match worker_txs[w].try_send((dispatched, f)) {
+                            Ok(()) => {
+                                inflight_r[w].fetch_add(1, Ordering::Relaxed);
+                                dispatched += 1;
+                                rr += 1;
+                                break 'place;
+                            }
+                            Err(TrySendError::Full((_, fr))) => f = fr,
+                            Err(TrySendError::Disconnected((_, fr))) => {
+                                alive[w] = false;
+                                f = fr;
+                            }
+                        }
+                    }
+                    // Every alive queue is full: block on the least-loaded
+                    // alive worker (backpressure, not drop — the sensor
+                    // queue provides the dropping).
+                    let Some(&w) = candidates.iter().find(|&&w| alive[w]) else {
+                        undelivered = f;
+                        continue 'place;
+                    };
+                    match worker_txs[w].send((dispatched, f)) {
+                        Ok(()) => {
+                            inflight_r[w].fetch_add(1, Ordering::Relaxed);
+                            dispatched += 1;
+                            rr += 1;
+                            break 'place;
+                        }
+                        Err(mpsc::SendError((_, fr))) => {
+                            alive[w] = false;
+                            undelivered = fr;
+                        }
+                    }
+                }
+            }
+            dispatch_tx.send(Msg::DispatchDone { dispatched }).ok();
+            stop_r.store(true, Ordering::Relaxed);
+            // Drain leftovers so the sensor never blocks, then close the
+            // worker queues so they drain and exit.
+            while sensor_rx.try_recv().is_ok() {}
+            drop(worker_txs);
+        });
+        drop(res_tx);
+
+        // --- reassembler (this thread): strict in-order emission ---
+        let mut pending: BTreeMap<u64, (FrameResult, f64, bool)> = BTreeMap::new();
+        let mut next_emit = 0u64;
+        let mut emitted = 0u64;
+        let mut iou_sum = 0.0f64;
+        let mut correct = 0u64;
+        let mut ready = 0usize;
+        let mut done_workers = 0usize;
+        let mut expected: Option<u64> = None;
+        let mut merged = StageMetrics::new();
+        let mut per_worker: Vec<WorkerStats> = Vec::new();
+        let mut t0: Option<Instant> = None;
+        let mut failure: Option<String> = None;
+
+        loop {
+            if let Some(exp) = expected {
+                if emitted >= exp && done_workers == n_workers {
+                    break;
+                }
+            }
+            let timeout = if go.load(Ordering::Relaxed) { stall_timeout } else { warmup_timeout };
+            match res_rx.recv_timeout(timeout) {
+                Ok(Msg::Ready) => {
+                    ready += 1;
+                    if ready == n_workers {
+                        t0 = Some(Instant::now());
+                        go.store(true, Ordering::Relaxed);
+                    }
+                }
+                Ok(Msg::Result { seq, result, iou, correct: ok }) => {
+                    pending.insert(seq, (result, iou, ok));
+                    while let Some((r, i, c)) = pending.remove(&next_emit) {
+                        iou_sum += i;
+                        correct += c as u64;
+                        sink(&r);
+                        emitted += 1;
+                        next_emit += 1;
+                    }
+                }
+                Ok(Msg::Done { stats, metrics }) => {
+                    merged.merge(&metrics);
+                    per_worker.push(stats);
+                    done_workers += 1;
+                }
+                Ok(Msg::Failed { error }) => {
+                    failure = Some(error);
+                    break;
+                }
+                Ok(Msg::DispatchDone { dispatched }) => {
+                    expected = Some(dispatched);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    failure = Some(format!(
+                        "engine stalled: no progress for {:.1}s ({} of {:?} frames emitted)",
+                        timeout.as_secs_f64(),
+                        emitted,
+                        expected
+                    ));
+                    break;
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    if expected.is_some_and(|e| emitted >= e) && done_workers == n_workers {
+                        break;
+                    }
+                    failure = Some("engine threads exited before completing the run".to_string());
+                    break;
+                }
+            }
+        }
+        let wall_s = t0.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+        // Unstick every thread (no-ops on the happy path), then let the
+        // scope join them.
+        abort.store(true, Ordering::Relaxed);
+        stop.store(true, Ordering::Relaxed);
+        go.store(true, Ordering::Relaxed);
+        per_worker.sort_by_key(|w| w.worker);
+        (failure, emitted, iou_sum, correct, merged, per_worker, wall_s)
+    });
+
+    let (failure, emitted, iou_sum, correct, merged, per_worker, wall_s) = outcome;
+    if let Some(error) = failure {
+        return Err(anyhow!("sharded serve failed: {error}"));
+    }
+    let report = ServeReport {
+        frames: emitted,
+        dropped: rejected.load(Ordering::Relaxed),
+        wall_fps: if wall_s > 0.0 { emitted as f64 / wall_s } else { 0.0 },
+        mean_latency_s: merged.stage_mean_s("total"),
+        mean_energy_j: merged.mean_energy_j(),
+        modeled_kfps_per_watt: merged.modeled_kfps_per_watt(),
+        mean_kept_patches: merged.mean_kept_patches(),
+        mean_mask_iou: if emitted > 0 { iou_sum / emitted as f64 } else { 0.0 },
+        top1_accuracy: if emitted > 0 { correct as f64 / emitted as f64 } else { 0.0 },
+        workers: n_workers,
+        per_worker,
+    };
+    Ok((report, merged))
+}
+
+/// Serve `num_frames` frames through `workers` parallel [`Pipeline`]s
+/// (one PJRT runtime per worker thread) — the sharded counterpart of
+/// [`super::pipeline::serve`].
+pub fn serve_sharded(
+    pipe_cfg: &PipelineConfig,
+    artifact_dir: &str,
+    workers: usize,
+    queue_depth: usize,
+    sensor_seed: u64,
+    num_objects: usize,
+    num_frames: u64,
+) -> Result<(ServeReport, StageMetrics)> {
+    let vit = pipe_cfg.vit_config();
+    let mut cfg = EngineConfig::new(workers, vit.patch_size, pipe_cfg.image_size);
+    cfg.queue_depth = queue_depth.max(1);
+    cfg.sensor_queue_depth = queue_depth.max(1) * cfg.workers;
+    cfg.num_objects = num_objects;
+    cfg.sensor_seed = sensor_seed;
+    run(
+        |_wid| Pipeline::new(pipe_cfg.clone(), artifact_dir),
+        &cfg,
+        num_frames,
+        |_r| {},
+    )
+}

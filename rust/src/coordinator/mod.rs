@@ -1,5 +1,7 @@
 //! The L3 near-sensor serving coordinator — Opto-ViT's request path.
 //!
+//! Single-pipeline serving (`serve`, [`pipeline`]):
+//!
 //! ```text
 //! sensor thread ──frames──▶ bounded queue ──▶ inference thread
 //!                                              │  MGNet (PJRT)
@@ -10,15 +12,39 @@
 //!                                              ▼  logits + metrics
 //! ```
 //!
+//! Sharded serving (`serve_sharded`, [`engine`]) scales the host side to N
+//! cores by putting a dispatcher between the sensor and N such pipelines:
+//!
+//! ```text
+//!                         ┌─▶ worker 0 (own Pipeline + PJRT runtime) ─┐
+//! sensor ─▶ dispatcher ───┼─▶ worker 1 (own Pipeline + PJRT runtime) ─┼─▶ reassembler
+//!           (round-robin, │           …                               │   (in-order results,
+//!            queue-depth  └─▶ worker N-1 ─────────────────────────────┘    merged StageMetrics,
+//!            aware)                                                        per-worker utilization)
+//! ```
+//!
+//! The dispatcher shards frames round-robin biased toward the worker with
+//! the fewest in-flight frames; per-worker queues are bounded, so
+//! backpressure propagates to the sensor queue, which is the only place
+//! frames are dropped. The reassembler re-orders results by dispatch
+//! sequence number, merges every worker's [`StageMetrics`], and fails the
+//! run (rather than hanging) if any worker errors or panics.
+//!
 //! Python never appears here: both model stages execute pre-compiled HLO
 //! artifacts through [`crate::runtime::Runtime`]. Because `PjRtClient` is
-//! not `Send`, the runtime lives on the inference thread; the sensor runs
-//! on its own thread with a bounded `sync_channel` providing backpressure.
+//! not `Send`, each runtime lives on the thread that created it: the
+//! single-pipeline path keeps it on one inference thread, and the engine
+//! constructs one `Pipeline` *inside each worker thread* (see
+//! [`engine::FrameWorker`]). The hot path is allocation-free in steady
+//! state: per-frame buffers live in [`pipeline::FrameScratch`] and tensors
+//! are handed to PJRT as borrowed [`crate::runtime::TensorRef`] views.
 
 pub mod batcher;
+pub mod engine;
 pub mod pipeline;
 pub mod stats;
 
 pub use batcher::{BucketRouter, FrameQueue};
-pub use pipeline::{FrameResult, Pipeline, PipelineConfig, ServeReport};
-pub use stats::StageMetrics;
+pub use engine::{serve_sharded, EngineConfig, FrameWorker};
+pub use pipeline::{FrameResult, FrameScratch, Pipeline, PipelineConfig, ServeReport};
+pub use stats::{StageMetrics, WorkerStats};

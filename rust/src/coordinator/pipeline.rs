@@ -1,15 +1,22 @@
 //! The frame-serving pipeline: MGNet → RoI mask → bucket routing → backbone.
+//!
+//! The steady-state hot path is **allocation-free up to each PJRT call**:
+//! every per-frame buffer (patchify output, score/mask staging, kept-index
+//! list, zero-padded bucket tensors) lives in a reusable [`FrameScratch`],
+//! and the runtime accepts borrowed [`TensorRef`] views, so no frame ever
+//! clones its patch tensor. `rust/tests/alloc_hot_path.rs` asserts this with
+//! a counting allocator.
 
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use super::batcher::{recv_frame, BucketRouter, FrameQueue};
-use super::stats::StageMetrics;
+use super::stats::{StageMetrics, WorkerStats};
 use crate::energy::AcceleratorModel;
 use crate::roi::PatchMask;
-use crate::runtime::{Runtime, Tensor};
-use crate::sensor::{Frame, VideoSource};
+use crate::runtime::{Runtime, TensorRef};
+use crate::sensor::Frame;
 use crate::vit::{MgnetConfig, VitConfig, VitVariant};
 
 /// Configuration of one serving pipeline instance.
@@ -79,42 +86,192 @@ pub struct FrameResult {
 }
 
 impl FrameResult {
+    /// Argmax over the logits. `total_cmp` gives NaN a defined order, so a
+    /// NaN logit can never panic the serving loop.
     pub fn predicted_class(&self) -> usize {
         self.logits
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i)
             .unwrap_or(0)
     }
 }
 
+/// Reusable per-frame working memory. All buffers are sized once (at
+/// pipeline construction) for the largest bucket, so steady-state frames
+/// perform zero heap allocation before each PJRT call.
+#[derive(Debug)]
+pub struct FrameScratch {
+    /// Patchified frame, `(num_patches, patch_dim)` row-major.
+    patches: Vec<f32>,
+    /// Per-patch MGNet scores (pre-sigmoid logits; 1.0 in no-mask runs).
+    scores: Vec<f32>,
+    /// Thresholded keep mask.
+    mask: PatchMask,
+    /// Kept-patch indices, row-major order.
+    kept: Vec<usize>,
+    /// Zero-padded `(bucket, patch_dim)` backbone input (largest-bucket
+    /// capacity; per-frame prefixes are used).
+    bucket_patches: Vec<f32>,
+    /// Original grid position of each bucket slot.
+    pos_idx: Vec<f32>,
+    /// Validity mask over bucket slots (1.0 = real patch, 0.0 = padding).
+    valid: Vec<f32>,
+}
+
+impl FrameScratch {
+    pub fn new(num_patches: usize, patch_dim: usize, max_bucket: usize) -> Self {
+        FrameScratch {
+            patches: Vec::with_capacity(num_patches * patch_dim),
+            scores: Vec::with_capacity(num_patches),
+            mask: PatchMask { side: 0, keep: Vec::with_capacity(num_patches) },
+            kept: Vec::with_capacity(num_patches),
+            bucket_patches: vec![0.0; max_bucket * patch_dim],
+            pos_idx: vec![0.0; max_bucket],
+            valid: vec![0.0; max_bucket],
+        }
+    }
+
+    /// Scratch sized for one pipeline configuration.
+    pub fn for_config(cfg: &PipelineConfig) -> Self {
+        let vit = cfg.vit_config();
+        let max_bucket =
+            cfg.buckets.iter().copied().max().unwrap_or_else(|| vit.num_patches());
+        Self::new(vit.num_patches(), vit.patch_dim(), max_bucket)
+    }
+
+    /// Stage 1: patchify the frame into the scratch patch buffer.
+    pub fn stage_patchify(&mut self, frame: &Frame, patch_px: usize) {
+        frame.patchify_into(patch_px, &mut self.patches);
+    }
+
+    /// The patchified frame (valid after [`FrameScratch::stage_patchify`]).
+    pub fn patches(&self) -> &[f32] {
+        &self.patches
+    }
+
+    /// Stage 2: adopt MGNet scores and threshold them into the keep mask.
+    pub fn stage_mask(&mut self, side: usize, scores: &[f32], t_reg: f32) {
+        self.scores.clear();
+        self.scores.extend_from_slice(scores);
+        self.mask.fill_from_scores(side, &self.scores, t_reg);
+    }
+
+    /// Stage 2, no-mask baseline: keep everything with uniform scores.
+    pub fn stage_mask_full(&mut self, side: usize) {
+        self.scores.clear();
+        self.scores.resize(side * side, 1.0);
+        self.mask.fill_full(side);
+    }
+
+    pub fn mask(&self) -> &PatchMask {
+        &self.mask
+    }
+
+    /// Stage 3: route the kept count to a bucket and stage kept patches
+    /// into the zero-padded bucket buffers. Returns the bucket size;
+    /// afterwards `bucket_patches`/`pos_idx`/`valid` views hold the
+    /// backbone inputs. `total_cmp` is used throughout so NaN scores sort
+    /// deterministically instead of panicking.
+    pub fn stage_route(&mut self, router: &BucketRouter, patch_dim: usize) -> usize {
+        self.mask.kept_indices_into(&mut self.kept);
+        if self.kept.is_empty() {
+            // Always process at least the highest-score patch.
+            let best = self
+                .scores
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            self.kept.push(best);
+        }
+        let bucket = router.route(self.kept.len());
+        if self.kept.len() > bucket {
+            let scores = &self.scores;
+            self.kept.sort_unstable_by(|&a, &b| scores[b].total_cmp(&scores[a]));
+            self.kept.truncate(bucket);
+            self.kept.sort_unstable();
+        }
+        let staged = &mut self.bucket_patches[..bucket * patch_dim];
+        staged.fill(0.0);
+        self.pos_idx[..bucket].fill(0.0);
+        self.valid[..bucket].fill(0.0);
+        for (slot, &pidx) in self.kept.iter().enumerate() {
+            staged[slot * patch_dim..(slot + 1) * patch_dim]
+                .copy_from_slice(&self.patches[pidx * patch_dim..(pidx + 1) * patch_dim]);
+            self.pos_idx[slot] = pidx as f32;
+            self.valid[slot] = 1.0;
+        }
+        bucket
+    }
+
+    /// Kept-patch indices (valid after [`FrameScratch::stage_route`]).
+    pub fn kept(&self) -> &[usize] {
+        &self.kept
+    }
+
+    /// Staged `(bucket, patch_dim)` backbone input.
+    pub fn bucket_patches(&self, bucket: usize, patch_dim: usize) -> &[f32] {
+        &self.bucket_patches[..bucket * patch_dim]
+    }
+
+    /// Staged position indices for the bucket slots.
+    pub fn pos_idx(&self, bucket: usize) -> &[f32] {
+        &self.pos_idx[..bucket]
+    }
+
+    /// Staged validity mask for the bucket slots.
+    pub fn valid(&self, bucket: usize) -> &[f32] {
+        &self.valid[..bucket]
+    }
+}
+
 /// The pipeline; owns the (non-`Send`) PJRT runtime, so it is constructed
-/// and driven on one thread.
+/// and driven on one thread. Sharded serving constructs one `Pipeline` per
+/// worker thread (see [`crate::coordinator::engine`]).
 pub struct Pipeline {
     cfg: PipelineConfig,
     runtime: Runtime,
     router: BucketRouter,
     model: AcceleratorModel,
+    scratch: FrameScratch,
+    /// Cached (`Copy`) configs so the hot path never rebuilds them.
+    vit_cfg: VitConfig,
+    mgnet_cfg: MgnetConfig,
+    /// Artifact names, formatted once at construction: the hot path must
+    /// not `format!` per frame.
+    mgnet_name: String,
+    backbone_names: Vec<(usize, String)>,
     pub metrics: StageMetrics,
 }
 
 impl Pipeline {
     pub fn new(cfg: PipelineConfig, artifact_dir: &str) -> Result<Self> {
         let router = BucketRouter::new(cfg.buckets.clone());
-        let full = cfg.vit_config().num_patches();
+        let vit_cfg = cfg.vit_config();
+        let full = vit_cfg.num_patches();
         anyhow::ensure!(
             router.buckets().last() == Some(&full),
             "largest bucket {:?} must equal the full patch count {}",
             router.buckets().last(),
             full
         );
+        let backbone_names: Vec<(usize, String)> =
+            router.buckets().iter().map(|&b| (b, cfg.backbone_artifact(b))).collect();
+        let scratch = FrameScratch::new(full, vit_cfg.patch_dim(), full);
         Ok(Pipeline {
-            cfg,
             runtime: Runtime::new(artifact_dir)?,
             router,
             model: AcceleratorModel::default(),
+            scratch,
+            vit_cfg,
+            mgnet_cfg: cfg.mgnet_config(),
+            mgnet_name: cfg.mgnet_artifact(),
+            backbone_names,
             metrics: StageMetrics::new(),
+            cfg,
         })
     }
 
@@ -122,91 +279,74 @@ impl Pipeline {
         &self.cfg
     }
 
-    /// Pre-compile all artifacts (avoids compile jitter on the first frames).
+    /// Pre-compile all artifacts (avoids compile jitter on the first
+    /// frames). Iterates the precomputed name list directly — no copy of
+    /// the bucket vector is needed to satisfy the borrow checker.
     pub fn warmup(&mut self) -> Result<()> {
         if self.cfg.use_mask {
-            let name = self.cfg.mgnet_artifact();
-            self.runtime.load(&name)?;
+            self.runtime.load(&self.mgnet_name)?;
         }
-        for &b in self.router.buckets().to_vec().iter() {
-            let name = self.cfg.backbone_artifact(b);
-            self.runtime.load(&name)?;
+        for (_, name) in &self.backbone_names {
+            self.runtime.load(name)?;
         }
         Ok(())
     }
 
-    /// Process one frame end-to-end.
+    /// Process one frame end-to-end. Steady-state frames perform zero heap
+    /// allocation before each PJRT call: all staging goes through the
+    /// reusable [`FrameScratch`] and inputs are passed as borrowed
+    /// [`TensorRef`] views.
     pub fn process_frame(&mut self, frame: &Frame) -> Result<FrameResult> {
         let t_start = Instant::now();
-        let vit_cfg = self.cfg.vit_config();
-        let patch_px = vit_cfg.patch_size;
+        let patch_px = self.vit_cfg.patch_size;
         let side = frame.size / patch_px;
         let n_full = side * side;
-        let patch_dim = vit_cfg.patch_dim();
+        let patch_dim = self.vit_cfg.patch_dim();
 
-        // 1. Patchify (the sensor→accelerator interface).
+        // 1. Patchify (the sensor→accelerator interface) into scratch.
         let t0 = Instant::now();
-        let patches = frame.patchify(patch_px);
+        self.scratch.stage_patchify(frame, patch_px);
         self.metrics.record_stage("patchify", t0.elapsed().as_secs_f64());
 
         // 2. MGNet scores → binary mask (Eq. 3 + sigmoid threshold).
-        let (mask, scores) = if self.cfg.use_mask {
+        if self.cfg.use_mask {
             let t0 = Instant::now();
+            let dims = [n_full as i64, patch_dim as i64];
             let scores = self
                 .runtime
-                .execute1(
-                    &self.cfg.mgnet_artifact(),
-                    &[Tensor::new(patches.clone(), vec![n_full as i64, patch_dim as i64])],
-                )
+                .execute1(&self.mgnet_name, &[TensorRef::new(&self.scratch.patches, &dims)])
                 .context("MGNet stage")?;
             self.metrics.record_stage("mgnet", t0.elapsed().as_secs_f64());
-            let mask = PatchMask::from_scores(side, &scores, self.cfg.region_threshold);
-            (mask, scores)
+            self.scratch.stage_mask(side, &scores, self.cfg.region_threshold);
         } else {
-            (PatchMask::full(side), vec![1.0f32; n_full])
-        };
+            self.scratch.stage_mask_full(side);
+        }
 
         // 3. Route to a bucket; select top-score patches if over-full,
         //    otherwise pad with zeroed invalid slots.
         let t0 = Instant::now();
-        let mut kept = mask.kept_indices();
-        if kept.is_empty() {
-            // Always process at least the highest-score patch.
-            let best = scores
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(i, _)| i)
-                .unwrap_or(0);
-            kept.push(best);
-        }
-        let bucket = self.router.route(kept.len());
-        if kept.len() > bucket {
-            kept.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
-            kept.truncate(bucket);
-            kept.sort_unstable();
-        }
-        let mut bucket_patches = vec![0.0f32; bucket * patch_dim];
-        let mut pos_idx = vec![0.0f32; bucket];
-        let mut valid = vec![0.0f32; bucket];
-        for (slot, &pidx) in kept.iter().enumerate() {
-            bucket_patches[slot * patch_dim..(slot + 1) * patch_dim]
-                .copy_from_slice(&patches[pidx * patch_dim..(pidx + 1) * patch_dim]);
-            pos_idx[slot] = pidx as f32;
-            valid[slot] = 1.0;
-        }
+        let bucket = self.scratch.stage_route(&self.router, patch_dim);
+        let kept_count = self.scratch.kept.len();
         self.metrics.record_stage("route", t0.elapsed().as_secs_f64());
 
         // 4. Backbone on the pruned sequence.
         let t0 = Instant::now();
+        let artifact = self
+            .backbone_names
+            .iter()
+            .find(|(b, _)| *b == bucket)
+            .map(|(_, n)| n.as_str())
+            .expect("router buckets all have precomputed artifact names");
+        let bdims = [bucket as i64, patch_dim as i64];
+        let vdims = [bucket as i64];
         let logits = self
             .runtime
             .execute1(
-                &self.cfg.backbone_artifact(bucket),
+                artifact,
                 &[
-                    Tensor::new(bucket_patches, vec![bucket as i64, patch_dim as i64]),
-                    Tensor::new(pos_idx, vec![bucket as i64]),
-                    Tensor::new(valid, vec![bucket as i64]),
+                    TensorRef::new(&self.scratch.bucket_patches[..bucket * patch_dim], &bdims),
+                    TensorRef::new(&self.scratch.pos_idx[..bucket], &vdims),
+                    TensorRef::new(&self.scratch.valid[..bucket], &vdims),
                 ],
             )
             .context("backbone stage")?;
@@ -214,18 +354,18 @@ impl Pipeline {
 
         // 5. Modeled accelerator energy at this kept count.
         let energy_j = if self.cfg.use_mask {
-            self.model.masked_energy(&vit_cfg, &self.cfg.mgnet_config(), kept.len()).total_j()
+            self.model.masked_energy(&self.vit_cfg, &self.mgnet_cfg, kept_count).total_j()
         } else {
-            self.model.frame_energy(&vit_cfg, vit_cfg.num_patches(), true).total_j()
+            self.model.frame_energy(&self.vit_cfg, self.vit_cfg.num_patches(), true).total_j()
         };
         let latency = t_start.elapsed().as_secs_f64();
         self.metrics.record_stage("total", latency);
-        self.metrics.record_frame(energy_j, kept.len());
+        self.metrics.record_frame(energy_j, kept_count);
 
         Ok(FrameResult {
             frame_index: frame.index,
             logits,
-            mask,
+            mask: self.scratch.mask.clone(),
             bucket,
             modeled_energy_j: energy_j,
             latency_s: latency,
@@ -237,6 +377,8 @@ impl Pipeline {
 #[derive(Debug, Clone)]
 pub struct ServeReport {
     pub frames: u64,
+    /// Frames the sensor actually failed to enqueue (`try_push`
+    /// rejections) — not frames merely in flight when the run stopped.
     pub dropped: u64,
     pub wall_fps: f64,
     pub mean_latency_s: f64,
@@ -248,6 +390,11 @@ pub struct ServeReport {
     /// Top-1 agreement with the synthetic class labels (meaningful only
     /// when the backbone artifact embeds trained weights).
     pub top1_accuracy: f64,
+    /// Worker pipelines that served the run (1 for the single-threaded
+    /// [`serve`] path).
+    pub workers: usize,
+    /// Per-worker utilization breakdown.
+    pub per_worker: Vec<WorkerStats>,
 }
 
 /// Drive a pipeline from a live sensor thread for `num_frames` frames.
@@ -260,51 +407,73 @@ pub fn serve(
     num_frames: u64,
     queue_depth: usize,
 ) -> Result<ServeReport> {
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::Arc;
+
     let size = pipeline.cfg.image_size;
+    // Warm up before the sensor exists: compile time can neither inflate
+    // the rejection count nor leak a sensor thread on warmup failure.
+    pipeline.warmup()?;
+
     let (queue, rx) = FrameQueue::bounded(queue_depth);
-    let produced = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
-    let produced_t = produced.clone();
-    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
-    let stop_t = stop.clone();
+    // Count actual enqueue rejections in the sensor thread: frames still
+    // sitting in the queue at stop time were never dropped.
+    let rejected = Arc::new(AtomicU64::new(0));
+    let stop = Arc::new(AtomicBool::new(false));
+    // Consumer is already warm, so the sensor starts producing at once.
+    let go = Arc::new(AtomicBool::new(true));
+    let (rejected_t, stop_t, go_t) = (rejected.clone(), stop.clone(), go.clone());
     let sensor = std::thread::spawn(move || {
-        let mut src = VideoSource::new(size, num_objects, sensor_seed);
-        while !stop_t.load(std::sync::atomic::Ordering::Relaxed) {
-            let f = src.next_frame();
-            produced_t.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            // try_push drops on full queue; yield briefly to let the
-            // consumer drain.
-            if !queue.try_push(f) {
-                std::thread::sleep(Duration::from_micros(200));
-            }
-        }
+        super::batcher::sensor_loop(
+            queue,
+            size,
+            num_objects,
+            sensor_seed,
+            &go_t,
+            &stop_t,
+            &rejected_t,
+        )
     });
 
-    pipeline.warmup()?;
     pipeline.metrics.start_run();
-    let patch_px = pipeline.cfg.vit_config().patch_size;
+    let patch_px = pipeline.vit_cfg.patch_size;
     let mut iou_sum = 0.0f64;
     let mut correct = 0u64;
     let mut done = 0u64;
+    let mut serve_err = None;
     while done < num_frames {
         let Some(frame) = recv_frame(&rx, Duration::from_secs(5)) else {
             break;
         };
         let gt = frame.gt_mask(patch_px);
         let label = frame.label;
-        let r = pipeline.process_frame(&frame)?;
-        iou_sum += r.mask.iou(&gt);
-        correct += (r.predicted_class() == label) as u64;
-        done += 1;
+        match pipeline.process_frame(&frame) {
+            Ok(r) => {
+                iou_sum += r.mask.iou(&gt);
+                correct += (r.predicted_class() == label) as u64;
+                done += 1;
+            }
+            Err(e) => {
+                // Stop the sensor before propagating, or it spins forever.
+                serve_err = Some(e);
+                break;
+            }
+        }
     }
-    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    stop.store(true, Ordering::Relaxed);
     // Drain so the sensor thread unblocks, then join.
     while rx.try_recv().is_ok() {}
     sensor.join().ok();
+    if let Some(e) = serve_err {
+        return Err(e);
+    }
 
     let m = &pipeline.metrics;
+    let busy_s = m.stage_sum_s("total");
+    let elapsed_s = m.run_elapsed_s();
     Ok(ServeReport {
         frames: done,
-        dropped: produced.load(std::sync::atomic::Ordering::Relaxed).saturating_sub(done),
+        dropped: rejected.load(Ordering::Relaxed),
         wall_fps: m.wall_fps(),
         mean_latency_s: m.stage_mean_s("total"),
         mean_energy_j: m.mean_energy_j(),
@@ -312,12 +481,20 @@ pub fn serve(
         mean_kept_patches: m.mean_kept_patches(),
         mean_mask_iou: if done > 0 { iou_sum / done as f64 } else { 0.0 },
         top1_accuracy: if done > 0 { correct as f64 / done as f64 } else { 0.0 },
+        workers: 1,
+        per_worker: vec![WorkerStats {
+            worker: 0,
+            frames: done,
+            busy_s,
+            utilization: if elapsed_s > 0.0 { (busy_s / elapsed_s).min(1.0) } else { 0.0 },
+        }],
     })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sensor::VideoSource;
 
     #[test]
     fn config_artifact_names() {
@@ -344,5 +521,93 @@ mod tests {
             latency_s: 0.01,
         };
         assert_eq!(r.predicted_class(), 1);
+    }
+
+    #[test]
+    fn frame_result_argmax_survives_nan() {
+        let r = FrameResult {
+            frame_index: 0,
+            logits: vec![f32::NAN, 0.9, 0.3],
+            mask: PatchMask::full(6),
+            bucket: 36,
+            modeled_energy_j: 1e-5,
+            latency_s: 0.01,
+        };
+        // Must not panic; any in-range index is acceptable.
+        assert!(r.predicted_class() < 3);
+    }
+
+    #[test]
+    fn scratch_patchify_matches_frame_patchify() {
+        let mut src = VideoSource::new(96, 2, 42);
+        let frame = src.next_frame();
+        let mut scratch = FrameScratch::new(36, 768, 36);
+        scratch.stage_patchify(&frame, 16);
+        assert_eq!(scratch.patches(), frame.patchify(16).as_slice());
+    }
+
+    #[test]
+    fn scratch_route_stages_kept_patches() {
+        let mut src = VideoSource::new(96, 1, 13);
+        let frame = src.next_frame();
+        let router = BucketRouter::even(36, 4);
+        let mut scratch = FrameScratch::new(36, 768, 36);
+        scratch.stage_patchify(&frame, 16);
+        // Score patches from ground truth: kept patches get +2, rest -2.
+        let gt = frame.gt_mask(16);
+        let scores: Vec<f32> = gt.keep.iter().map(|&k| if k { 2.0 } else { -2.0 }).collect();
+        scratch.stage_mask(6, &scores, 0.5);
+        let bucket = scratch.stage_route(&router, 768);
+        assert_eq!(scratch.mask(), &gt);
+        assert_eq!(scratch.kept(), gt.kept_indices().as_slice());
+        assert_eq!(bucket, router.route(gt.kept()));
+        // Each staged slot holds the right patch; padding slots are zero.
+        let patches = frame.patchify(16);
+        let staged = scratch.bucket_patches(bucket, 768);
+        for (slot, &pidx) in scratch.kept().iter().enumerate() {
+            let want = &patches[pidx * 768..(pidx + 1) * 768];
+            assert_eq!(&staged[slot * 768..(slot + 1) * 768], want);
+            assert_eq!(scratch.pos_idx(bucket)[slot], pidx as f32);
+            assert_eq!(scratch.valid(bucket)[slot], 1.0);
+        }
+        for slot in scratch.kept().len()..bucket {
+            assert!(staged[slot * 768..(slot + 1) * 768].iter().all(|&x| x == 0.0));
+            assert_eq!(scratch.valid(bucket)[slot], 0.0);
+        }
+    }
+
+    #[test]
+    fn scratch_route_empty_mask_keeps_best_patch() {
+        let mut src = VideoSource::new(96, 1, 7);
+        let frame = src.next_frame();
+        let router = BucketRouter::even(36, 4);
+        let mut scratch = FrameScratch::new(36, 768, 36);
+        scratch.stage_patchify(&frame, 16);
+        let mut scores = vec![-5.0f32; 36];
+        scores[17] = -1.0; // still below threshold, but the best
+        scratch.stage_mask(6, &scores, 0.5);
+        assert_eq!(scratch.mask().kept(), 0);
+        let bucket = scratch.stage_route(&router, 768);
+        assert_eq!(scratch.kept(), &[17]);
+        assert_eq!(bucket, 9);
+    }
+
+    #[test]
+    fn scratch_route_truncates_to_clamped_bucket() {
+        // Router whose largest bucket is below the full patch count: an
+        // over-full mask must keep the top-score patches, in grid order.
+        let mut src = VideoSource::new(96, 2, 21);
+        let frame = src.next_frame();
+        let router = BucketRouter::new(vec![9, 18]);
+        let mut scratch = FrameScratch::new(36, 768, 36);
+        scratch.stage_patchify(&frame, 16);
+        let scores: Vec<f32> = (0..36).map(|i| i as f32).collect();
+        scratch.stage_mask(6, &scores, 0.5); // sigmoid(i) > 0.5 for i >= 1
+        assert!(scratch.mask().kept() > 18);
+        let bucket = scratch.stage_route(&router, 768);
+        assert_eq!(bucket, 18);
+        // Top-18 scores are patches 18..36, re-sorted into grid order.
+        let expect: Vec<usize> = (18..36).collect();
+        assert_eq!(scratch.kept(), expect.as_slice());
     }
 }

@@ -26,9 +26,17 @@ impl StageMetrics {
         self.start = Some(Instant::now());
     }
 
-    /// Record a stage latency in seconds.
+    /// Record a stage latency in seconds. Steady-state recording is
+    /// allocation-free: the stage name is only copied to the heap the first
+    /// time it is seen.
     pub fn record_stage(&mut self, stage: &str, seconds: f64) {
-        self.stages.entry(stage.to_string()).or_default().push(seconds);
+        if let Some(acc) = self.stages.get_mut(stage) {
+            acc.push(seconds);
+        } else {
+            let mut acc = Accumulator::new();
+            acc.push(seconds);
+            self.stages.insert(stage.to_string(), acc);
+        }
     }
 
     /// Record one completed frame with its modeled energy and kept patches.
@@ -40,6 +48,11 @@ impl StageMetrics {
 
     pub fn frames(&self) -> u64 {
         self.frames
+    }
+
+    /// Wall-clock seconds since `start_run` (0.0 if never started).
+    pub fn run_elapsed_s(&self) -> f64 {
+        self.start.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0)
     }
 
     /// Wall-clock frames/s since `start_run`.
@@ -74,6 +87,30 @@ impl StageMetrics {
         self.stages.get(stage).map(|a| a.mean()).unwrap_or(0.0)
     }
 
+    /// Total recorded time of one stage (seconds) — e.g. the "total" stage
+    /// sum is the busy time of the pipeline that recorded it.
+    pub fn stage_sum_s(&self, stage: &str) -> f64 {
+        self.stages.get(stage).map(|a| a.sum()).unwrap_or(0.0)
+    }
+
+    /// Fold another pipeline's metrics into this one. Merging the
+    /// per-worker metrics of a sharded run yields exactly the metrics a
+    /// single pipeline would have recorded over the union of their frames
+    /// (means, extrema, variances, and counts all compose).
+    pub fn merge(&mut self, other: &StageMetrics) {
+        for (stage, acc) in &other.stages {
+            self.stages.entry(stage.clone()).or_default().merge(acc);
+        }
+        self.energy.merge(&other.energy);
+        self.kept.merge(&other.kept);
+        self.frames += other.frames;
+        // Earliest start wins so wall_fps spans the whole merged run.
+        self.start = match (self.start, other.start) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+    }
+
     /// `(stage, mean_s, max_s, count)` rows for reporting.
     pub fn stage_rows(&self) -> Vec<(String, f64, f64, u64)> {
         self.stages
@@ -81,6 +118,19 @@ impl StageMetrics {
             .map(|(k, a)| (k.clone(), a.mean(), a.max(), a.count()))
             .collect()
     }
+}
+
+/// Per-worker utilization summary for a (possibly sharded) serving run.
+#[derive(Debug, Clone)]
+pub struct WorkerStats {
+    /// Worker index (0 for the single-threaded `serve` path).
+    pub worker: usize,
+    /// Frames this worker processed.
+    pub frames: u64,
+    /// Time spent inside `process_frame` (seconds).
+    pub busy_s: f64,
+    /// `busy_s` over the worker's active wall-clock window, in `[0, 1]`.
+    pub utilization: f64,
 }
 
 #[cfg(test)]
@@ -107,6 +157,49 @@ mod tests {
     fn unknown_stage_is_zero() {
         let m = StageMetrics::new();
         assert_eq!(m.stage_mean_s("nope"), 0.0);
+        assert_eq!(m.stage_sum_s("nope"), 0.0);
         assert_eq!(m.modeled_kfps_per_watt(), 0.0);
+    }
+
+    #[test]
+    fn merge_equals_single_recorder() {
+        // Record the same sample stream either into one recorder or split
+        // across three workers and merged — results must match exactly.
+        let samples = [
+            ("mgnet", 0.002),
+            ("backbone", 0.010),
+            ("mgnet", 0.004),
+            ("backbone", 0.012),
+            ("mgnet", 0.003),
+            ("backbone", 0.008),
+        ];
+        let mut whole = StageMetrics::new();
+        let mut parts = [StageMetrics::new(), StageMetrics::new(), StageMetrics::new()];
+        for (i, &(stage, s)) in samples.iter().enumerate() {
+            whole.record_stage(stage, s);
+            parts[i % 3].record_stage(stage, s);
+        }
+        for (i, e) in [1e-5, 2e-5, 3e-5, 4e-5].iter().enumerate() {
+            whole.record_frame(*e, 10 + i);
+            parts[i % 3].record_frame(*e, 10 + i);
+        }
+        let mut merged = StageMetrics::new();
+        for p in &parts {
+            merged.merge(p);
+        }
+        assert_eq!(merged.frames(), whole.frames());
+        assert!((merged.stage_mean_s("mgnet") - whole.stage_mean_s("mgnet")).abs() < 1e-15);
+        assert!((merged.stage_sum_s("backbone") - whole.stage_sum_s("backbone")).abs() < 1e-15);
+        assert!((merged.mean_energy_j() - whole.mean_energy_j()).abs() < 1e-18);
+        assert!((merged.mean_kept_patches() - whole.mean_kept_patches()).abs() < 1e-12);
+        let wr = whole.stage_rows();
+        let mr = merged.stage_rows();
+        assert_eq!(wr.len(), mr.len());
+        for (w, m) in wr.iter().zip(&mr) {
+            assert_eq!(w.0, m.0);
+            assert!((w.1 - m.1).abs() < 1e-15, "mean mismatch for {}", w.0);
+            assert_eq!(w.2, m.2, "max mismatch for {}", w.0);
+            assert_eq!(w.3, m.3, "count mismatch for {}", w.0);
+        }
     }
 }

@@ -20,6 +20,14 @@
 //! Python never runs on the request path: after `make artifacts` the rust
 //! binary is self-contained.
 //!
+//! Host-side serving scales across cores with `optovit serve --workers N`:
+//! the [`coordinator::engine`] shards frames over N worker threads, each
+//! owning its own (non-`Send`) PJRT runtime, and reassembles results
+//! in order. The per-frame hot path is allocation-free in steady state
+//! (see [`coordinator::pipeline::FrameScratch`]); `cargo bench --bench
+//! serve_scaling` sweeps worker counts and writes the machine-readable
+//! `BENCH_serve.json` trajectory.
+//!
 //! ## Module map
 //!
 //! | module | role |
@@ -31,8 +39,8 @@
 //! | [`quant`] | int8 symmetric quantization |
 //! | [`roi`] | patch masks and skip-ratio accounting |
 //! | [`sensor`] | synthetic CMOS sensor / video workload generator |
-//! | [`runtime`] | PJRT client wrapper: load + execute HLO artifacts |
-//! | [`coordinator`] | the serving pipeline: batching, routing, metrics |
+//! | [`runtime`] | PJRT client wrapper: load + execute HLO artifacts (owned tensors or borrowed `TensorRef` views) |
+//! | [`coordinator`] | the serving engine: zero-allocation frame pipeline, bucket routing, sharded multi-worker dispatch (dispatcher → N workers → in-order reassembler), merged metrics |
 //! | [`baselines`] | Table-IV competitor accelerator models + platform refs |
 //! | [`cli`] | dependency-free argument parsing |
 //! | [`util`] | PRNG, stats, table formatting, property-test helpers |

@@ -2,7 +2,7 @@
 //! architecture-simulation reports.
 //!
 //! ```text
-//! optovit serve   [--frames N] [--size 96] [--no-mask] [--seed S] [--objects K]
+//! optovit serve   [--frames N] [--workers W] [--queue D] [--no-mask] [--seed S] [--objects K]
 //! optovit report  [--decomposed true]        # Fig. 8/9 energy+delay grid
 //! optovit roi     [--size 96|224]            # Fig. 10/11 operating points
 //! optovit table4                              # SiPh accelerator comparison
@@ -12,7 +12,9 @@
 
 use optovit::baselines;
 use optovit::cli::Args;
-use optovit::coordinator::pipeline::{serve, Pipeline, PipelineConfig};
+use optovit::coordinator::engine::serve_sharded;
+use optovit::coordinator::pipeline::{serve, Pipeline, PipelineConfig, ServeReport};
+use optovit::coordinator::stats::StageMetrics;
 use optovit::energy::AcceleratorModel;
 use optovit::photonics::fpv::FpvModel;
 use optovit::photonics::MrGeometry;
@@ -50,13 +52,27 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let frames = args.get_u64("frames", 50).map_err(anyhow::Error::msg)?;
     let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
     let objects = args.get_usize("objects", 2).map_err(anyhow::Error::msg)?;
+    let workers = args.get_usize("workers", 1).map_err(anyhow::Error::msg)?.max(1);
+    let queue_depth = args.get_usize("queue", 4).map_err(anyhow::Error::msg)?.max(1);
     let artifact_dir = args.get_or("artifacts", "artifacts").to_string();
     let mut cfg = PipelineConfig::tiny_96();
     cfg.use_mask = !args.get_bool("no-mask");
-    let mut p = Pipeline::new(cfg, &artifact_dir)?;
     println!("warming up (compiling artifacts)...");
-    let r = serve(&mut p, seed, objects, frames, 4)?;
+    let (r, metrics) = if workers > 1 {
+        serve_sharded(&cfg, &artifact_dir, workers, queue_depth, seed, objects, frames)?
+    } else {
+        let mut p = Pipeline::new(cfg, &artifact_dir)?;
+        let r = serve(&mut p, seed, objects, frames, queue_depth)?;
+        let metrics = std::mem::take(&mut p.metrics);
+        (r, metrics)
+    };
+    print_serve_report(&r, &metrics);
+    Ok(())
+}
+
+fn print_serve_report(r: &ServeReport, metrics: &StageMetrics) {
     println!("\n== serve report ==");
+    println!("workers              {}", r.workers);
     println!("frames processed     {}", r.frames);
     println!("frames dropped       {}", r.dropped);
     println!("wall throughput      {:.1} fps", r.wall_fps);
@@ -66,13 +82,25 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     println!("mean kept patches    {:.1} / 36", r.mean_kept_patches);
     println!("mask IoU vs GT       {:.3}", r.mean_mask_iou);
     println!("top-1 vs synth label {:.3}", r.top1_accuracy);
+    if r.workers > 1 {
+        println!("\nper-worker utilization:");
+        let mut t = Table::new(vec!["worker", "frames", "busy", "utilization"]);
+        for w in &r.per_worker {
+            t.row(vec![
+                w.worker.to_string(),
+                w.frames.to_string(),
+                si_time(w.busy_s),
+                format!("{:.2}", w.utilization),
+            ]);
+        }
+        print!("{}", t.render());
+    }
     println!("\nper-stage latency:");
     let mut t = Table::new(vec!["stage", "mean", "max", "count"]);
-    for (s, mean, max, n) in p.metrics.stage_rows() {
+    for (s, mean, max, n) in metrics.stage_rows() {
         t.row(vec![s, si_time(mean), si_time(max), n.to_string()]);
     }
     print!("{}", t.render());
-    Ok(())
 }
 
 fn cmd_report(args: &Args) -> anyhow::Result<()> {

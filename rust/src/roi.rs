@@ -25,9 +25,27 @@ impl PatchMask {
     /// From per-patch scores: keep where `sigmoid(score) > t_reg` (§IV Eq. 3
     /// onward; scores here are pre-sigmoid logits).
     pub fn from_scores(side: usize, scores: &[f32], t_reg: f32) -> Self {
+        let mut m = PatchMask { side, keep: Vec::with_capacity(side * side) };
+        m.fill_from_scores(side, scores, t_reg);
+        m
+    }
+
+    /// In-place variant of [`PatchMask::from_scores`] that reuses the
+    /// existing `keep` buffer — allocation-free once capacity is warm
+    /// (the serving hot path).
+    pub fn fill_from_scores(&mut self, side: usize, scores: &[f32], t_reg: f32) {
         assert_eq!(scores.len(), side * side, "score grid mismatch");
-        let keep = scores.iter().map(|&s| sigmoid(s) > t_reg).collect();
-        PatchMask { side, keep }
+        self.side = side;
+        self.keep.clear();
+        self.keep.extend(scores.iter().map(|&s| sigmoid(s) > t_reg));
+    }
+
+    /// In-place variant of [`PatchMask::full`]: keep everything, reusing
+    /// the existing buffer.
+    pub fn fill_full(&mut self, side: usize) {
+        self.side = side;
+        self.keep.clear();
+        self.keep.resize(side * side, true);
     }
 
     /// Ground-truth mask from bounding boxes (pixel coords): a patch is 1 if
@@ -58,7 +76,16 @@ impl PatchMask {
 
     /// Indices of kept patches in row-major order.
     pub fn kept_indices(&self) -> Vec<usize> {
-        self.keep.iter().enumerate().filter(|(_, &k)| k).map(|(i, _)| i).collect()
+        let mut out = Vec::with_capacity(self.keep.len());
+        self.kept_indices_into(&mut out);
+        out
+    }
+
+    /// Append kept-patch indices into `out` (cleared first). Allocation-free
+    /// when `out` already has capacity for `num_patches()` indices.
+    pub fn kept_indices_into(&self, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend(self.keep.iter().enumerate().filter(|(_, &k)| k).map(|(i, _)| i));
     }
 
     /// Intersection-over-union against another mask (the paper's mIoU
@@ -166,6 +193,25 @@ mod tests {
         assert!(m.keep[1 * 6 + 1] && m.keep[1 * 6 + 2] && m.keep[2 * 6 + 1] && m.keep[2 * 6 + 2]);
         assert!(!m.keep[0]);
         assert_eq!(m.kept(), 4);
+    }
+
+    #[test]
+    fn fill_variants_match_constructors() {
+        let scores = vec![2.0f32, -2.0, 2.0, -2.0];
+        let mut m = PatchMask::full(6);
+        m.fill_from_scores(2, &scores, 0.5);
+        assert_eq!(m, PatchMask::from_scores(2, &scores, 0.5));
+        m.fill_full(3);
+        assert_eq!(m, PatchMask::full(3));
+    }
+
+    #[test]
+    fn kept_indices_into_reuses_buffer() {
+        let m = PatchMask { side: 2, keep: vec![true, false, false, true] };
+        let mut buf = vec![7usize; 9];
+        m.kept_indices_into(&mut buf);
+        assert_eq!(buf, vec![0, 3]);
+        assert_eq!(m.kept_indices(), vec![0, 3]);
     }
 
     #[test]

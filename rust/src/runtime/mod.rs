@@ -42,6 +42,42 @@ impl Tensor {
     }
 }
 
+/// A borrowed tensor view: `&[f32]` data + explicit dims, both living in the
+/// caller. [`Runtime::execute`] takes these so the serving hot path can hand
+/// over scratch buffers without an owned copy per frame (the PJRT literal is
+/// built directly from the slice).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TensorRef<'a> {
+    pub data: &'a [f32],
+    pub dims: &'a [i64],
+}
+
+impl<'a> TensorRef<'a> {
+    pub fn new(data: &'a [f32], dims: &'a [i64]) -> Self {
+        let n: i64 = dims.iter().product();
+        assert_eq!(n as usize, data.len(), "dims {dims:?} don't match data len {}", data.len());
+        TensorRef { data, dims }
+    }
+}
+
+/// Anything [`Runtime::execute`] accepts as an input: an owned [`Tensor`]
+/// or a borrowed [`TensorRef`].
+pub trait AsTensorRef {
+    fn tensor_ref(&self) -> TensorRef<'_>;
+}
+
+impl AsTensorRef for Tensor {
+    fn tensor_ref(&self) -> TensorRef<'_> {
+        TensorRef { data: &self.data, dims: &self.dims }
+    }
+}
+
+impl AsTensorRef for TensorRef<'_> {
+    fn tensor_ref(&self) -> TensorRef<'_> {
+        *self
+    }
+}
+
 /// PJRT-backed executor over a directory of `*.hlo.txt` artifacts.
 pub struct Runtime {
     client: xla::PjRtClient,
@@ -104,19 +140,20 @@ impl Runtime {
         self.executables.contains_key(name)
     }
 
-    /// Execute artifact `name` with the given inputs; returns all tuple
-    /// outputs as flat f32 vectors (artifacts are lowered with
-    /// `return_tuple=True`).
-    pub fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+    /// Execute artifact `name` with the given inputs (owned [`Tensor`]s or
+    /// borrowed [`TensorRef`]s); returns all tuple outputs as flat f32
+    /// vectors (artifacts are lowered with `return_tuple=True`).
+    pub fn execute<T: AsTensorRef>(&mut self, name: &str, inputs: &[T]) -> Result<Vec<Vec<f32>>> {
         self.load(name)?;
         let exe = self.executables.get(name).expect("just loaded");
         let mut literals = Vec::with_capacity(inputs.len());
         for t in inputs {
-            let lit = xla::Literal::vec1(&t.data);
+            let t = t.tensor_ref();
+            let lit = xla::Literal::vec1(t.data);
             let lit = if t.dims.is_empty() {
                 lit
             } else {
-                lit.reshape(&t.dims)
+                lit.reshape(t.dims)
                     .with_context(|| format!("reshaping input to {:?}", t.dims))?
             };
             literals.push(lit);
@@ -134,7 +171,7 @@ impl Runtime {
     }
 
     /// Convenience: execute and return the single output.
-    pub fn execute1(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<f32>> {
+    pub fn execute1<T: AsTensorRef>(&mut self, name: &str, inputs: &[T]) -> Result<Vec<f32>> {
         let mut outs = self.execute(name, inputs)?;
         if outs.len() != 1 {
             bail!("artifact '{name}' returned {} outputs, expected 1", outs.len());
@@ -162,8 +199,28 @@ mod tests {
     #[test]
     fn missing_artifact_is_error() {
         let mut rt = Runtime::new("/nonexistent-artifacts").unwrap();
-        let err = rt.execute("nope", &[]).unwrap_err();
+        let err = rt.execute::<Tensor>("nope", &[]).unwrap_err();
         assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn tensor_ref_views_tensor() {
+        let t = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        let r = t.tensor_ref();
+        assert_eq!(r.data, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(r.dims, &[2, 2]);
+        // TensorRef is itself AsTensorRef (Copy round-trip).
+        assert_eq!(r.tensor_ref(), r);
+        let dims = [4i64];
+        let direct = TensorRef::new(&t.data, &dims);
+        assert_eq!(direct.data.len(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_ref_dim_mismatch_panics() {
+        let data = [1.0f32; 3];
+        TensorRef::new(&data, &[2, 2]);
     }
 
     #[test]

@@ -96,9 +96,19 @@ impl Frame {
     /// `(n_patches, patch_px*patch_px*3)`, channels-last within a patch
     /// (matching the L2 embedding layout).
     pub fn patchify(&self, patch_px: usize) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.patchify_into(patch_px, &mut out);
+        out
+    }
+
+    /// [`Frame::patchify`] into a caller-owned buffer — allocation-free once
+    /// the buffer has capacity for `n_patches * patch_dim` values, which is
+    /// what keeps the serving hot path off the heap.
+    pub fn patchify_into(&self, patch_px: usize, out: &mut Vec<f32>) {
         let side = self.size / patch_px;
         let pd = patch_px * patch_px * 3;
-        let mut out = vec![0.0f32; side * side * pd];
+        out.clear();
+        out.resize(side * side * pd, 0.0);
         let plane = self.size * self.size;
         for py in 0..side {
             for px in 0..side {
@@ -115,7 +125,6 @@ impl Frame {
                 }
             }
         }
-        out
     }
 }
 
@@ -214,7 +223,7 @@ impl VideoSource {
         let label = self
             .objects
             .iter()
-            .max_by(|a, b| a.half.partial_cmp(&b.half).unwrap())
+            .max_by(|a, b| a.half.total_cmp(&b.half))
             .map(|o| o.shape.class_id())
             .unwrap_or(0);
         let boxes = self.objects.iter().map(|o| o.bbox(size)).collect();
@@ -275,6 +284,18 @@ mod tests {
         assert_eq!(patches[0], f.pixels[0]);
         assert_eq!(patches[1], f.pixels[plane]);
         assert_eq!(patches[2], f.pixels[2 * plane]);
+    }
+
+    #[test]
+    fn patchify_into_reuses_buffer() {
+        let mut src = VideoSource::new(32, 1, 17);
+        let a = src.next_frame();
+        let b = src.next_frame();
+        let mut buf = Vec::new();
+        a.patchify_into(16, &mut buf);
+        assert_eq!(buf, a.patchify(16));
+        b.patchify_into(16, &mut buf);
+        assert_eq!(buf, b.patchify(16));
     }
 
     #[test]

@@ -2,8 +2,64 @@
 //!
 //! Each `rust/benches/*.rs` binary uses [`time_fn`] for wall-clock timing of
 //! hot paths and prints the paper-table reproduction via [`crate::util::table`].
+//! [`CountingAlloc`] additionally lets a bench or test binary count heap
+//! allocations, which is how the zero-allocation frame hot path is asserted.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+/// A counting wrapper around the system allocator. Install it in a bench or
+/// integration-test binary with
+///
+/// ```ignore
+/// #[global_allocator]
+/// static ALLOC: optovit::util::bench::CountingAlloc = optovit::util::bench::CountingAlloc;
+/// ```
+///
+/// and read the process-wide allocation counter with [`alloc_count`] /
+/// [`count_allocations`]. Without the `#[global_allocator]` attribute the
+/// counter stays at zero, so counts are only meaningful in binaries that
+/// opt in.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Heap allocations since process start (0 unless [`CountingAlloc`] is the
+/// installed global allocator).
+pub fn alloc_count() -> u64 {
+    ALLOC_COUNT.load(Ordering::Relaxed)
+}
+
+/// Run `f` and return `(result, allocations performed while it ran)`.
+/// The count is process-wide: run on a quiet (single-threaded) process for
+/// exact numbers.
+pub fn count_allocations<T>(f: impl FnOnce() -> T) -> (T, u64) {
+    let before = alloc_count();
+    let out = f();
+    (out, alloc_count() - before)
+}
 
 /// Result of a timed run.
 #[derive(Debug, Clone)]
@@ -59,5 +115,14 @@ mod tests {
         assert!(t.mean_s >= 0.0);
         assert!(t.min_s <= t.mean_s && t.mean_s <= t.max_s);
         assert!(t.summary().contains("noop-sum"));
+    }
+
+    #[test]
+    fn count_allocations_is_inert_without_installation() {
+        // The lib test binary does not install CountingAlloc, so the counter
+        // must stay flat even across an allocating closure.
+        let (v, n) = count_allocations(|| vec![1u8; 4096]);
+        assert_eq!(v.len(), 4096);
+        assert_eq!(n, 0);
     }
 }

@@ -95,6 +95,26 @@ impl Accumulator {
     pub fn sum(&self) -> f64 {
         self.mean() * self.n as f64
     }
+
+    /// Fold another accumulator into this one (Chan et al. parallel
+    /// Welford merge). Merging per-worker accumulators is exactly
+    /// equivalent to having pushed every sample into one accumulator.
+    pub fn merge(&mut self, other: &Accumulator) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let delta = other.mean - self.mean;
+        self.m2 += other.m2 + delta * delta * (self.n as f64 * other.n as f64) / n as f64;
+        self.mean += delta * other.n as f64 / n as f64;
+        self.n = n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
 }
 
 #[cfg(test)]
@@ -127,6 +147,43 @@ mod tests {
         assert_eq!(acc.min(), 1.0);
         assert_eq!(acc.max(), 9.0);
         assert_eq!(acc.count(), 8);
+    }
+
+    #[test]
+    fn merge_matches_single_stream() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0, 5.0, 3.0];
+        let mut whole = Accumulator::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        // Split across three "workers", merge back.
+        let mut parts = [Accumulator::new(), Accumulator::new(), Accumulator::new()];
+        for (i, &x) in xs.iter().enumerate() {
+            parts[i % 3].push(x);
+        }
+        let mut merged = Accumulator::new();
+        for p in &parts {
+            merged.merge(p);
+        }
+        assert_eq!(merged.count(), whole.count());
+        assert!((merged.mean() - whole.mean()).abs() < 1e-12);
+        assert!((merged.stddev() - whole.stddev()).abs() < 1e-9);
+        assert_eq!(merged.min(), whole.min());
+        assert_eq!(merged.max(), whole.max());
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let mut a = Accumulator::new();
+        a.push(2.0);
+        a.push(4.0);
+        let before = (a.count(), a.mean(), a.min(), a.max());
+        a.merge(&Accumulator::new());
+        assert_eq!((a.count(), a.mean(), a.min(), a.max()), before);
+        let mut empty = Accumulator::new();
+        empty.merge(&a);
+        assert_eq!(empty.count(), 2);
+        assert!((empty.mean() - 3.0).abs() < 1e-12);
     }
 
     #[test]

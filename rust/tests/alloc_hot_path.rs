@@ -1,0 +1,64 @@
+//! Asserts the acceptance criterion of the zero-allocation frame hot path:
+//! steady-state frames perform **zero heap allocations before the PJRT
+//! call**. The counted region is exactly the host-side work
+//! `Pipeline::process_frame` does between receiving a frame and handing
+//! `TensorRef` views to the runtime — patchify, score adoption +
+//! mask thresholding, and bucket routing/staging — all through the shared
+//! `FrameScratch` code the pipeline itself uses.
+//!
+//! This binary installs the counting allocator process-wide and holds a
+//! single test, so the counter sees only the hot path.
+
+use optovit::coordinator::pipeline::FrameScratch;
+use optovit::coordinator::BucketRouter;
+use optovit::sensor::VideoSource;
+use optovit::util::bench::{count_allocations, CountingAlloc};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+const PATCH_DIM: usize = 16 * 16 * 3;
+
+fn fill_scores(scratch: &FrameScratch, scores: &mut [f32]) {
+    for (p, s) in scores.iter_mut().enumerate() {
+        let row = &scratch.patches()[p * PATCH_DIM..(p + 1) * PATCH_DIM];
+        *s = row.iter().sum::<f32>() / PATCH_DIM as f32 - 0.35;
+    }
+}
+
+#[test]
+fn steady_state_host_stages_do_not_allocate() {
+    let mut src = VideoSource::new(96, 2, 42);
+    let router = BucketRouter::even(36, 4);
+    // A router whose largest bucket is below the full patch count forces
+    // the sort/truncate route branch, which must also be alloc-free.
+    let clamped = BucketRouter::new(vec![9, 18]);
+    let mut scratch = FrameScratch::new(36, PATCH_DIM, 36);
+    let mut scores = vec![0.0f32; 36];
+
+    // Warm-up frame: buffers reach steady-state capacity.
+    let warm = src.next_frame();
+    scratch.stage_patchify(&warm, 16);
+    fill_scores(&scratch, &mut scores);
+    scratch.stage_mask(6, &scores, 0.5);
+    scratch.stage_route(&router, PATCH_DIM);
+    scratch.stage_mask_full(6);
+    scratch.stage_route(&clamped, PATCH_DIM);
+
+    for _ in 0..5 {
+        let frame = src.next_frame();
+        let (_, allocs) = count_allocations(|| {
+            // Masked path: patchify → mask from scores → route/stage.
+            scratch.stage_patchify(&frame, 16);
+            fill_scores(&scratch, &mut scores);
+            scratch.stage_mask(6, &scores, 0.5);
+            let bucket = scratch.stage_route(&router, PATCH_DIM);
+            std::hint::black_box(scratch.bucket_patches(bucket, PATCH_DIM).len());
+            // Unmasked path + over-full clamped routing (sort/truncate).
+            scratch.stage_mask_full(6);
+            let b2 = scratch.stage_route(&clamped, PATCH_DIM);
+            std::hint::black_box(scratch.valid(b2).len());
+        });
+        assert_eq!(allocs, 0, "steady-state hot path touched the heap");
+    }
+}

@@ -1,0 +1,190 @@
+//! Engine-level tests over mock workers (no PJRT needed): in-order
+//! reassembly under uneven worker latency, merged metrics accounting,
+//! routing stability under sharding, and failure paths that must fail the
+//! run instead of hanging the dispatcher.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+use optovit::coordinator::engine::{run, EngineConfig, FrameWorker};
+use optovit::coordinator::pipeline::FrameResult;
+use optovit::coordinator::{BucketRouter, StageMetrics};
+use optovit::sensor::Frame;
+
+const PATCH_PX: usize = 16;
+
+#[derive(Clone, Copy)]
+enum Behavior {
+    /// Sleep `(frame.index % 3) * base` — uneven, index-dependent latency.
+    Uneven(Duration),
+    /// Panic on any frame with index >= n.
+    PanicAt(u64),
+    /// Return an error on any frame with index >= n.
+    ErrAt(u64),
+}
+
+/// Deterministic stand-in for a `Pipeline`: routes via the real
+/// `BucketRouter` from the ground-truth mask, so results depend only on
+/// the frame — never on which worker processed it.
+struct MockWorker {
+    router: BucketRouter,
+    metrics: StageMetrics,
+    behavior: Behavior,
+}
+
+impl MockWorker {
+    fn new(behavior: Behavior) -> Self {
+        MockWorker { router: BucketRouter::even(36, 4), metrics: StageMetrics::new(), behavior }
+    }
+}
+
+impl FrameWorker for MockWorker {
+    fn process(&mut self, frame: &Frame) -> Result<FrameResult> {
+        match self.behavior {
+            Behavior::Uneven(base) => std::thread::sleep(base * (frame.index % 3) as u32),
+            Behavior::PanicAt(n) if frame.index >= n => panic!("mock worker panic"),
+            Behavior::ErrAt(n) if frame.index >= n => bail!("mock worker error"),
+            _ => {}
+        }
+        let mask = frame.gt_mask(PATCH_PX);
+        let kept = mask.kept().max(1);
+        let bucket = self.router.route(kept);
+        self.metrics.record_stage("total", 1e-4);
+        self.metrics.record_frame(1e-5, kept);
+        let mut logits = vec![0.0f32; 10];
+        logits[frame.label % 10] = 1.0;
+        Ok(FrameResult {
+            frame_index: frame.index,
+            logits,
+            mask,
+            bucket,
+            modeled_energy_j: 1e-5,
+            latency_s: 1e-4,
+        })
+    }
+
+    fn take_metrics(&mut self) -> StageMetrics {
+        std::mem::take(&mut self.metrics)
+    }
+}
+
+fn test_cfg(workers: usize) -> EngineConfig {
+    let mut cfg = EngineConfig::new(workers, PATCH_PX, 96);
+    cfg.warmup_timeout_s = 10.0;
+    cfg.stall_timeout_s = 5.0;
+    cfg
+}
+
+#[test]
+fn in_order_reassembly_under_uneven_latency() {
+    let cfg = test_cfg(3);
+    let mut seen = Vec::new();
+    let (report, _merged) = run(
+        |_w| Ok(MockWorker::new(Behavior::Uneven(Duration::from_millis(2)))),
+        &cfg,
+        60,
+        |r| seen.push(r.frame_index),
+    )
+    .expect("sharded run");
+    assert_eq!(report.frames, 60);
+    assert_eq!(report.workers, 3);
+    assert_eq!(seen.len(), 60);
+    for w in seen.windows(2) {
+        assert!(w[0] < w[1], "results out of order: {seen:?}");
+    }
+}
+
+#[test]
+fn merged_metrics_equal_sum_of_workers() {
+    let cfg = test_cfg(4);
+    let (report, merged) = run(
+        |_w| Ok(MockWorker::new(Behavior::Uneven(Duration::from_millis(1)))),
+        &cfg,
+        80,
+        |_r| {},
+    )
+    .expect("sharded run");
+    assert_eq!(report.frames, 80);
+    assert_eq!(report.per_worker.len(), 4);
+    // Every processed frame is accounted to exactly one worker, and the
+    // merged metrics carry the union of all per-worker samples.
+    let sum: u64 = report.per_worker.iter().map(|w| w.frames).sum();
+    assert_eq!(sum, 80);
+    assert_eq!(merged.frames(), 80);
+    let rows = merged.stage_rows();
+    let total = rows.iter().find(|r| r.0 == "total").expect("total stage recorded");
+    assert_eq!(total.3, 80);
+    assert!((merged.mean_energy_j() - 1e-5).abs() < 1e-12);
+    assert!((report.mean_latency_s - 1e-4).abs() < 1e-12);
+    for w in &report.per_worker {
+        assert!(w.utilization >= 0.0 && w.utilization <= 1.0);
+    }
+}
+
+#[test]
+fn routing_unchanged_under_sharding() {
+    // Same sensor seed → frame index i has identical content in both runs,
+    // so every frame served by both must route to the same bucket.
+    let mut single: BTreeMap<u64, usize> = BTreeMap::new();
+    let (r1, _) = run(
+        |_w| Ok(MockWorker::new(Behavior::Uneven(Duration::ZERO))),
+        &test_cfg(1),
+        50,
+        |r| {
+            single.insert(r.frame_index, r.bucket);
+        },
+    )
+    .expect("1-worker run");
+    let mut sharded: BTreeMap<u64, usize> = BTreeMap::new();
+    let (r4, _) = run(
+        |_w| Ok(MockWorker::new(Behavior::Uneven(Duration::ZERO))),
+        &test_cfg(4),
+        50,
+        |r| {
+            sharded.insert(r.frame_index, r.bucket);
+        },
+    )
+    .expect("4-worker run");
+    assert_eq!(r1.frames, 50);
+    assert_eq!(r4.frames, 50);
+    let mut common = 0usize;
+    for (idx, bucket) in &single {
+        if let Some(b) = sharded.get(idx) {
+            assert_eq!(b, bucket, "bucket differs for frame {idx} under sharding");
+            common += 1;
+        }
+    }
+    assert!(common > 0, "runs served disjoint frame sets — cannot compare routing");
+}
+
+#[test]
+fn worker_panic_fails_run_without_hanging() {
+    let cfg = test_cfg(2);
+    let t0 = Instant::now();
+    let err = run(|_w| Ok(MockWorker::new(Behavior::PanicAt(5))), &cfg, 200, |_r| {})
+        .expect_err("a panicking worker must fail the run");
+    assert!(format!("{err:#}").contains("worker"), "{err:#}");
+    assert!(t0.elapsed() < Duration::from_secs(30), "dispatcher hung after worker panic");
+}
+
+#[test]
+fn worker_error_fails_run() {
+    let cfg = test_cfg(2);
+    let err = run(|_w| Ok(MockWorker::new(Behavior::ErrAt(3))), &cfg, 100, |_r| {})
+        .expect_err("a failing worker must fail the run");
+    assert!(format!("{err:#}").contains("failed"), "{err:#}");
+}
+
+#[test]
+fn factory_failure_fails_run() {
+    let cfg = test_cfg(2);
+    let err = run(
+        |w| -> Result<MockWorker> { bail!("no runtime for worker {w}") },
+        &cfg,
+        10,
+        |_r| {},
+    )
+    .expect_err("a worker that cannot construct must fail the run");
+    assert!(format!("{err:#}").contains("construction failed"), "{err:#}");
+}
