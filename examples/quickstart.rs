@@ -11,6 +11,7 @@
 //! photonic accelerator.
 
 use optovit::coordinator::pipeline::{Pipeline, PipelineConfig};
+use optovit::runtime::PjrtBackend;
 use optovit::sensor::VideoSource;
 use optovit::util::table::{si_energy, si_time};
 
@@ -18,8 +19,11 @@ fn main() -> anyhow::Result<()> {
     // 1. A synthetic near-sensor video feed (96x96 RGB, moving shapes).
     let mut sensor = VideoSource::new(96, 2, 7);
 
-    // 2. The serving pipeline: MGNet -> RoI mask -> bucket router -> ViT.
-    let mut pipeline = Pipeline::new(PipelineConfig::tiny_96(), "artifacts")?;
+    // 2. The serving pipeline: MGNet -> RoI mask -> bucket router -> ViT,
+    //    over the PJRT backend (swap in `HostBackend`/`SimBackend` to run
+    //    without artifacts — see `optovit serve --backend`).
+    let mut pipeline =
+        Pipeline::with_backend(PipelineConfig::tiny_96(), PjrtBackend::new("artifacts")?)?;
     println!("compiling artifacts (one-time)...");
     pipeline.warmup()?;
 

@@ -4,25 +4,34 @@
 //! leaves to the deployment.
 //!
 //! ```bash
-//! make artifacts
-//! cargo run --release --example roi_sweep -- [frames]
+//! make artifacts   # only needed for the pjrt backend
+//! cargo run --release --example roi_sweep -- [frames] [pjrt|host|sim]
 //! ```
 
 use optovit::coordinator::pipeline::{serve, Pipeline, PipelineConfig};
+use optovit::runtime::{AnyFactory, BackendFactory, BackendKind};
 use optovit::util::table::{si_energy, Table};
 
 fn main() -> anyhow::Result<()> {
-    let frames: u64 =
-        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(60);
+    let args: Vec<String> = std::env::args().collect();
+    let frames: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(60);
+    let kind: BackendKind = args
+        .get(2)
+        .map(|s| s.parse())
+        .transpose()
+        .map_err(anyhow::Error::msg)?
+        .unwrap_or(BackendKind::Pjrt);
+    let mut factory = AnyFactory::new(kind, "artifacts");
+    factory.host.num_classes = PipelineConfig::tiny_96().num_classes;
 
-    println!("== t_reg sweep ({frames} frames each) ==\n");
+    println!("== t_reg sweep ({frames} frames each, {kind} backend) ==\n");
     let mut t = Table::new(vec![
         "t_reg", "kept/36", "skip%", "mask IoU", "top-1", "energy/frame", "KFPS/W",
     ]);
     for thr in [0.3f32, 0.4, 0.5, 0.6, 0.7, 0.8] {
         let mut cfg = PipelineConfig::tiny_96();
         cfg.region_threshold = thr;
-        let mut pipeline = Pipeline::new(cfg, "artifacts")?;
+        let mut pipeline = Pipeline::with_backend(cfg, factory.create(0)?)?;
         let r = serve(&mut pipeline, 1234, 2, frames, 4)?;
         t.row(vec![
             format!("{thr:.1}"),

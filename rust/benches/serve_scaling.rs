@@ -8,114 +8,29 @@
 //!
 //! ```bash
 //! cargo bench --bench serve_scaling -- \
-//!     [--workers 1,2,4] [--frames 240] [--out BENCH_serve.json] [--artifacts artifacts]
+//!     [--workers 1,2,4] [--frames 240] [--backend auto|pjrt|host] \
+//!     [--host-depth N] [--out BENCH_serve.json] [--artifacts artifacts]
 //! ```
 //!
 //! (declared `harness = false`: this bench carries its own `main`.)
 //!
-//! With compiled artifacts present the sweep drives real PJRT pipelines;
-//! otherwise it falls back to a synthetic host-compute worker with the
-//! same sensor → patchify → mask → route → backbone structure, so the
-//! host-side scaling behaviour is measurable on any machine.
+//! The execution substrate comes from the shared `runtime::Backend`
+//! abstraction — no bench-private compute fallback. `--backend auto`
+//! (default) drives real PJRT pipelines when compiled artifacts are
+//! present and the pure-Rust `HostBackend` otherwise, so the host-side
+//! scaling behaviour is measurable on any machine; the JSON records which
+//! backend produced the numbers.
 
 use anyhow::Result;
 use optovit::cli::Args;
-use optovit::coordinator::engine::{self, serve_sharded, EngineConfig, FrameWorker};
-use optovit::coordinator::pipeline::{FrameResult, FrameScratch, PipelineConfig, ServeReport};
-use optovit::coordinator::{BucketRouter, StageMetrics};
-use optovit::energy::AcceleratorModel;
-use optovit::sensor::Frame;
+use optovit::coordinator::engine::serve_sharded;
+use optovit::coordinator::pipeline::{PipelineConfig, ServeReport};
+use optovit::runtime::{AnyFactory, BackendKind, HostConfig};
 use optovit::util::bench::{alloc_count, CountingAlloc};
 use optovit::util::table::{si_energy, si_time, Table};
-use optovit::vit::{MgnetConfig, VitConfig};
-use std::time::Instant;
 
 #[global_allocator]
 static ALLOC: CountingAlloc = CountingAlloc;
-
-/// Host-compute stand-in for a PJRT pipeline: same staging hot path
-/// (shared `FrameScratch` code), with a deterministic arithmetic backbone
-/// whose cost scales with the routed bucket.
-struct SyntheticWorker {
-    scratch: FrameScratch,
-    router: BucketRouter,
-    model: AcceleratorModel,
-    vit: VitConfig,
-    mgnet: MgnetConfig,
-    metrics: StageMetrics,
-    score_buf: Vec<f32>,
-    /// Backbone work passes per frame (tunes per-frame cost into the
-    /// ~millisecond range a compiled Tiny backbone occupies).
-    work_iters: usize,
-}
-
-impl SyntheticWorker {
-    fn new(cfg: &PipelineConfig, work_iters: usize) -> Self {
-        let vit = cfg.vit_config();
-        SyntheticWorker {
-            scratch: FrameScratch::for_config(cfg),
-            router: BucketRouter::new(cfg.buckets.clone()),
-            model: AcceleratorModel::default(),
-            vit,
-            mgnet: cfg.mgnet_config(),
-            metrics: StageMetrics::new(),
-            score_buf: vec![0.0; vit.num_patches()],
-            work_iters,
-        }
-    }
-}
-
-impl FrameWorker for SyntheticWorker {
-    fn process(&mut self, frame: &Frame) -> Result<FrameResult> {
-        let t_start = Instant::now();
-        let patch_px = self.vit.patch_size;
-        let side = frame.size / patch_px;
-        let patch_dim = self.vit.patch_dim();
-
-        self.scratch.stage_patchify(frame, patch_px);
-
-        // Brightness-contrast score per patch: a cheap MGNet stand-in that
-        // still tracks the moving objects over the dim background.
-        for (p, score) in self.score_buf.iter_mut().enumerate() {
-            let row = &self.scratch.patches()[p * patch_dim..(p + 1) * patch_dim];
-            let mean: f32 = row.iter().sum::<f32>() / patch_dim as f32;
-            *score = (mean - 0.35) * 12.0;
-        }
-        self.scratch.stage_mask(side, &self.score_buf, 0.5);
-
-        let bucket = self.scratch.stage_route(&self.router, patch_dim);
-        let kept = self.scratch.kept().len();
-
-        // Deterministic arithmetic "backbone" over the staged bucket.
-        let staged = self.scratch.bucket_patches(bucket, patch_dim);
-        let mut logits = vec![0.0f32; 10];
-        for it in 0..self.work_iters {
-            let mut acc = 0.0f32;
-            for (i, &x) in staged.iter().enumerate() {
-                acc += x * ((i % 7) as f32 - 3.0);
-            }
-            logits[it % 10] += acc * 1e-3;
-        }
-        std::hint::black_box(&logits);
-
-        let energy_j = self.model.masked_energy(&self.vit, &self.mgnet, kept).total_j();
-        let latency = t_start.elapsed().as_secs_f64();
-        self.metrics.record_stage("total", latency);
-        self.metrics.record_frame(energy_j, kept);
-        Ok(FrameResult {
-            frame_index: frame.index,
-            logits,
-            mask: self.scratch.mask().clone(),
-            bucket,
-            modeled_energy_j: energy_j,
-            latency_s: latency,
-        })
-    }
-
-    fn take_metrics(&mut self) -> StageMetrics {
-        std::mem::take(&mut self.metrics)
-    }
-}
 
 struct Row {
     workers: usize,
@@ -134,12 +49,12 @@ fn baseline_fps(rows: &[Row]) -> f64 {
         .unwrap_or(0.0)
 }
 
-fn fmt_json(frames: u64, mode: &str, rows: &[Row]) -> String {
+fn fmt_json(frames: u64, backend: &str, rows: &[Row]) -> String {
     let base_fps = baseline_fps(rows);
     let mut out = String::new();
     out.push_str("{\n");
     out.push_str("  \"bench\": \"serve_scaling\",\n");
-    out.push_str(&format!("  \"mode\": \"{mode}\",\n"));
+    out.push_str(&format!("  \"backend\": \"{backend}\",\n"));
     out.push_str(&format!("  \"frames\": {frames},\n"));
     out.push_str("  \"sweep\": [\n");
     for (i, r) in rows.iter().enumerate() {
@@ -169,30 +84,62 @@ fn main() -> Result<()> {
     let out_path = args.get_or("out", "BENCH_serve.json").to_string();
     let artifact_dir = args.get_or("artifacts", "artifacts").to_string();
     let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
+    let backend_arg = args
+        .get_choice("backend", &["auto", "pjrt", "host"], "auto")
+        .map_err(anyhow::Error::msg)?;
+    let host_depth = args.get_usize("host-depth", 0).map_err(anyhow::Error::msg)?;
 
     let cfg = PipelineConfig::tiny_96();
     let have_artifacts = std::path::Path::new(&artifact_dir)
         .join(format!("{}.hlo.txt", cfg.mgnet_artifact()))
         .exists();
-    let mode = if have_artifacts { "pjrt" } else { "synthetic" };
+    let kind = match backend_arg.as_str() {
+        "pjrt" => BackendKind::Pjrt,
+        "host" => BackendKind::Host,
+        _ => {
+            if have_artifacts {
+                BackendKind::Pjrt
+            } else {
+                BackendKind::Host
+            }
+        }
+    };
+    let mut factory = AnyFactory::new(kind, artifact_dir);
+    factory.host = HostConfig {
+        num_classes: cfg.num_classes,
+        depth_limit: (host_depth > 0).then_some(host_depth),
+        ..HostConfig::default()
+    };
     println!(
-        "== serve_scaling: {frames} frames/point, workers {worker_counts:?}, mode {mode} ==\n"
+        "== serve_scaling: {frames} frames/point, workers {worker_counts:?}, backend {kind} ==\n"
     );
 
     let mut rows = Vec::new();
     for &w in &worker_counts {
+        // Backend construction + warmup allocate (per worker, per run), so
+        // a single-run count would inflate allocs/frame and scale with
+        // --workers. Two runs at different frame counts cancel the fixed
+        // setup cost in the difference, leaving the per-frame slope.
+        let calib_frames = frames / 4;
         let a0 = alloc_count();
-        let (report, _metrics) = if have_artifacts {
-            serve_sharded(&cfg, &artifact_dir, w, 4, seed, 2, frames)?
+        let calib = if calib_frames >= 8 && calib_frames < frames {
+            Some(serve_sharded(&cfg, &factory, w, 4, seed, 2, calib_frames)?.0)
         } else {
-            let vit = cfg.vit_config();
-            let mut ecfg = EngineConfig::new(w, vit.patch_size, cfg.image_size);
-            ecfg.sensor_seed = seed;
-            engine::run(|_wid| Ok(SyntheticWorker::new(&cfg, 150)), &ecfg, frames, |_r| {})?
+            None
         };
-        let allocs = alloc_count() - a0;
-        let allocs_per_frame =
-            if report.frames > 0 { allocs as f64 / report.frames as f64 } else { 0.0 };
+        let a1 = alloc_count();
+        let (report, _metrics) = serve_sharded(&cfg, &factory, w, 4, seed, 2, frames)?;
+        let a2 = alloc_count();
+        let allocs_per_frame = match &calib {
+            Some(c) if report.frames > c.frames => {
+                let slope = (a2 - a1) as f64 - (a1 - a0) as f64;
+                (slope / (report.frames - c.frames) as f64).max(0.0)
+            }
+            // Short sweeps fall back to the raw per-run count (includes
+            // the fixed setup cost — fine for a smoke run).
+            _ if report.frames > 0 => (a2 - a1) as f64 / report.frames as f64,
+            _ => 0.0,
+        };
         println!(
             "workers {w}: {:.1} fps, {} mean latency, {:.0} allocs/frame, {} dropped",
             report.wall_fps,
@@ -217,7 +164,7 @@ fn main() -> Result<()> {
     }
     print!("{}", t.render());
 
-    let json = fmt_json(frames, mode, &rows);
+    let json = fmt_json(frames, kind.as_str(), &rows);
     std::fs::write(&out_path, &json)?;
     println!("\nwrote {out_path}");
     Ok(())

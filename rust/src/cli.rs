@@ -83,6 +83,22 @@ impl Args {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
 
+    /// Constrained string option: the value (or `default` when absent)
+    /// must be one of `allowed`, e.g. `--backend pjrt|host|sim`.
+    pub fn get_choice(
+        &self,
+        key: &str,
+        allowed: &[&str],
+        default: &str,
+    ) -> Result<String, String> {
+        let v = self.get(key).unwrap_or(default);
+        if allowed.contains(&v) {
+            Ok(v.to_string())
+        } else {
+            Err(format!("--{key}: unknown value '{v}' (choices: {})", allowed.join("|")))
+        }
+    }
+
     /// Comma-separated usize list, e.g. `--workers 1,2,4`.
     pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>, String> {
         match self.get(key) {
@@ -139,6 +155,17 @@ mod tests {
     fn bad_number_is_error() {
         let a = parse(&["run", "--n", "abc"]);
         assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn choice_validates_against_allowed_set() {
+        let a = parse(&["serve", "--backend", "host"]);
+        assert_eq!(a.get_choice("backend", &["pjrt", "host", "sim"], "pjrt").unwrap(), "host");
+        assert_eq!(a.get_choice("absent", &["x", "y"], "y").unwrap(), "y");
+        let err = parse(&["serve", "--backend", "tpu"])
+            .get_choice("backend", &["pjrt", "host", "sim"], "pjrt")
+            .unwrap_err();
+        assert!(err.contains("pjrt|host|sim"), "{err}");
     }
 
     #[test]

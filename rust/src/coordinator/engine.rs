@@ -1,18 +1,20 @@
 //! Sharded multi-worker serving engine.
 //!
 //! The single-pipeline [`super::pipeline::serve`] loop is capped at one
-//! host core because the PJRT client is not `Send`. This engine scales the
-//! host side the way production photonic-transformer servers exploit
-//! parallel dynamically-operated cores: a dispatcher thread shards frames
-//! across N worker threads, **each of which constructs its own pipeline**
-//! (one PJRT runtime per thread), and a reassembler emits results strictly
-//! in dispatch order.
+//! host core because execution backends are not required to be `Send`
+//! (the PJRT client is `Rc`-backed). This engine scales the host side the
+//! way production photonic-transformer servers exploit parallel
+//! dynamically-operated cores: a dispatcher thread shards frames across N
+//! worker threads, **each of which constructs its own pipeline + backend**
+//! (one [`crate::runtime::Backend`] instance per thread, built by a
+//! [`BackendFactory`]), and a reassembler emits results strictly in
+//! dispatch order.
 //!
 //! ```text
-//!                       ┌─▶ worker 0 (own Pipeline/PJRT) ─┐
-//! sensor ─▶ dispatcher ─┼─▶ worker 1 (own Pipeline/PJRT) ─┼─▶ reassembler
-//!           (load-aware │        …                        │  (in-order,
-//!            round-robin)└─▶ worker N-1 ──────────────────┘   merged metrics)
+//!                       ┌─▶ worker 0 (own Pipeline/Backend) ─┐
+//! sensor ─▶ dispatcher ─┼─▶ worker 1 (own Pipeline/Backend) ─┼─▶ reassembler
+//!           (load-aware │        …                           │  (in-order,
+//!            round-robin)└─▶ worker N-1 ─────────────────────┘   merged metrics)
 //! ```
 //!
 //! Scheduling is round-robin biased by queue depth: each frame goes to the
@@ -33,14 +35,16 @@ use anyhow::{anyhow, Result};
 use super::batcher::{recv_frame, sensor_loop, FrameQueue};
 use super::pipeline::{FrameResult, Pipeline, PipelineConfig, ServeReport};
 use super::stats::{StageMetrics, WorkerStats};
+use crate::runtime::{Backend, BackendFactory};
 use crate::sensor::Frame;
 
-/// A per-thread frame processor the engine can drive. [`Pipeline`] is the
-/// production implementation; tests plug in mock workers.
+/// A per-thread frame processor the engine can drive. [`Pipeline`] (over
+/// any backend) is the production implementation; tests plug in mock
+/// workers.
 ///
 /// Implementations are constructed *inside* their worker thread (see
 /// [`run`]'s `factory`), so they do not need to be `Send` — exactly the
-/// constraint the non-`Send` PJRT runtime imposes.
+/// constraint non-`Send` backends like PJRT impose.
 pub trait FrameWorker {
     /// One-time per-worker preparation (e.g. artifact compilation).
     fn warmup(&mut self) -> Result<()> {
@@ -52,9 +56,15 @@ pub trait FrameWorker {
 
     /// Hand the worker's accumulated metrics to the engine at shutdown.
     fn take_metrics(&mut self) -> StageMetrics;
+
+    /// Identifier of the execution substrate, carried into
+    /// [`ServeReport::backend`].
+    fn backend_name(&self) -> &'static str {
+        "custom"
+    }
 }
 
-impl FrameWorker for Pipeline {
+impl<B: Backend> FrameWorker for Pipeline<B> {
     fn warmup(&mut self) -> Result<()> {
         Pipeline::warmup(self)
     }
@@ -65,6 +75,10 @@ impl FrameWorker for Pipeline {
 
     fn take_metrics(&mut self) -> StageMetrics {
         std::mem::take(&mut self.metrics)
+    }
+
+    fn backend_name(&self) -> &'static str {
+        Pipeline::backend_name(self)
     }
 }
 
@@ -111,9 +125,9 @@ impl EngineConfig {
     }
 }
 
-/// What a worker thread hands back on clean exit (metrics + utilization),
-/// or the failure message that must abort the run.
-type WorkerOutcome = std::result::Result<(StageMetrics, WorkerStats), String>;
+/// What a worker thread hands back on clean exit (metrics + utilization +
+/// backend identity), or the failure message that must abort the run.
+type WorkerOutcome = std::result::Result<(StageMetrics, WorkerStats, &'static str), String>;
 
 /// Messages from workers / dispatcher to the reassembler.
 enum Msg {
@@ -122,7 +136,7 @@ enum Msg {
     /// One processed frame, tagged with its dense dispatch sequence number.
     Result { seq: u64, result: FrameResult, iou: f64, correct: bool },
     /// Worker drained its queue and exited cleanly.
-    Done { stats: WorkerStats, metrics: StageMetrics },
+    Done { stats: WorkerStats, metrics: StageMetrics, backend: &'static str },
     /// Worker failed (error or panic): the run must fail, not hang.
     Failed { error: String },
     /// Dispatcher finished; exactly `dispatched` results are expected.
@@ -216,6 +230,7 @@ where
                     }
                     let active_s = t_first.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
                     let busy_s = busy.as_secs_f64();
+                    let backend = w.backend_name();
                     Ok((
                         w.take_metrics(),
                         WorkerStats {
@@ -228,11 +243,12 @@ where
                                 0.0
                             },
                         },
+                        backend,
                     ))
                 });
                 match std::panic::catch_unwind(body) {
-                    Ok(Ok((metrics, stats))) => {
-                        res_tx.send(Msg::Done { stats, metrics }).ok();
+                    Ok(Ok((metrics, stats, backend))) => {
+                        res_tx.send(Msg::Done { stats, metrics, backend }).ok();
                     }
                     Ok(Err(error)) => {
                         res_tx.send(Msg::Failed { error }).ok();
@@ -335,6 +351,7 @@ where
         let mut expected: Option<u64> = None;
         let mut merged = StageMetrics::new();
         let mut per_worker: Vec<WorkerStats> = Vec::new();
+        let mut backend_name: &'static str = "custom";
         let mut t0: Option<Instant> = None;
         let mut failure: Option<String> = None;
 
@@ -363,9 +380,10 @@ where
                         next_emit += 1;
                     }
                 }
-                Ok(Msg::Done { stats, metrics }) => {
+                Ok(Msg::Done { stats, metrics, backend }) => {
                     merged.merge(&metrics);
                     per_worker.push(stats);
+                    backend_name = backend;
                     done_workers += 1;
                 }
                 Ok(Msg::Failed { error }) => {
@@ -400,18 +418,19 @@ where
         stop.store(true, Ordering::Relaxed);
         go.store(true, Ordering::Relaxed);
         per_worker.sort_by_key(|w| w.worker);
-        (failure, emitted, iou_sum, correct, merged, per_worker, wall_s)
+        (failure, emitted, iou_sum, correct, merged, per_worker, backend_name, wall_s)
     });
 
-    let (failure, emitted, iou_sum, correct, merged, per_worker, wall_s) = outcome;
+    let (failure, emitted, iou_sum, correct, merged, per_worker, backend_name, wall_s) = outcome;
     if let Some(error) = failure {
         return Err(anyhow!("sharded serve failed: {error}"));
     }
     let report = ServeReport {
+        backend: backend_name.to_string(),
         frames: emitted,
         dropped: rejected.load(Ordering::Relaxed),
         wall_fps: if wall_s > 0.0 { emitted as f64 / wall_s } else { 0.0 },
-        mean_latency_s: merged.stage_mean_s("total"),
+        mean_latency_s: merged.frame_latency_mean_s(),
         mean_energy_j: merged.mean_energy_j(),
         modeled_kfps_per_watt: merged.modeled_kfps_per_watt(),
         mean_kept_patches: merged.mean_kept_patches(),
@@ -423,12 +442,13 @@ where
     Ok((report, merged))
 }
 
-/// Serve `num_frames` frames through `workers` parallel [`Pipeline`]s
-/// (one PJRT runtime per worker thread) — the sharded counterpart of
-/// [`super::pipeline::serve`].
-pub fn serve_sharded(
+/// Serve `num_frames` frames through `workers` parallel [`Pipeline`]s —
+/// the sharded counterpart of [`super::pipeline::serve`]. Each worker
+/// thread builds its own backend through `factory` (so non-`Send`
+/// substrates shard cleanly) and its own pipeline around it.
+pub fn serve_sharded<F: BackendFactory>(
     pipe_cfg: &PipelineConfig,
-    artifact_dir: &str,
+    factory: &F,
     workers: usize,
     queue_depth: usize,
     sensor_seed: u64,
@@ -442,7 +462,7 @@ pub fn serve_sharded(
     cfg.num_objects = num_objects;
     cfg.sensor_seed = sensor_seed;
     run(
-        |_wid| Pipeline::new(pipe_cfg.clone(), artifact_dir),
+        |wid| Pipeline::with_backend(pipe_cfg.clone(), factory.create(wid)?),
         &cfg,
         num_frames,
         |_r| {},

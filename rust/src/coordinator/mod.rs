@@ -1,14 +1,21 @@
 //! The L3 near-sensor serving coordinator — Opto-ViT's request path.
 //!
+//! The coordinator is generic over its execution substrate: every model
+//! stage runs through the [`crate::runtime::Backend`] seam (`pjrt` =
+//! compiled HLO on the PJRT client, `host` = pure-Rust reference compute,
+//! `sim` = host numerics + modeled photonic timing), selected per run via
+//! a [`crate::runtime::BackendFactory`]. No backend-specific symbol
+//! appears in the pipeline or engine — artifact names are the contract.
+//!
 //! Single-pipeline serving (`serve`, [`pipeline`]):
 //!
 //! ```text
 //! sensor thread ──frames──▶ bounded queue ──▶ inference thread
-//!                                              │  MGNet (PJRT)
+//!                                              │  MGNet (Backend)
 //!                                              │  threshold → PatchMask
 //!                                              │  gather kept patches
 //!                                              │  bucket router (pad to bucket)
-//!                                              │  ViT backbone (PJRT)
+//!                                              │  ViT backbone (Backend)
 //!                                              ▼  logits + metrics
 //! ```
 //!
@@ -16,11 +23,11 @@
 //! cores by putting a dispatcher between the sensor and N such pipelines:
 //!
 //! ```text
-//!                         ┌─▶ worker 0 (own Pipeline + PJRT runtime) ─┐
-//! sensor ─▶ dispatcher ───┼─▶ worker 1 (own Pipeline + PJRT runtime) ─┼─▶ reassembler
-//!           (round-robin, │           …                               │   (in-order results,
-//!            queue-depth  └─▶ worker N-1 ─────────────────────────────┘    merged StageMetrics,
-//!            aware)                                                        per-worker utilization)
+//!                         ┌─▶ worker 0 (own Pipeline + Backend) ─┐
+//! sensor ─▶ dispatcher ───┼─▶ worker 1 (own Pipeline + Backend) ─┼─▶ reassembler
+//!           (round-robin, │           …                          │   (in-order results,
+//!            queue-depth  └─▶ worker N-1 ────────────────────────┘    merged StageMetrics,
+//!            aware)                                                    per-worker utilization)
 //! ```
 //!
 //! The dispatcher shards frames round-robin biased toward the worker with
@@ -30,14 +37,17 @@
 //! sequence number, merges every worker's [`StageMetrics`], and fails the
 //! run (rather than hanging) if any worker errors or panics.
 //!
-//! Python never appears here: both model stages execute pre-compiled HLO
-//! artifacts through [`crate::runtime::Runtime`]. Because `PjRtClient` is
-//! not `Send`, each runtime lives on the thread that created it: the
-//! single-pipeline path keeps it on one inference thread, and the engine
-//! constructs one `Pipeline` *inside each worker thread* (see
+//! Python never appears here, and with the `host`/`sim` backends neither
+//! do compiled artifacts — which is what lets CI exercise the full frame
+//! path. Backends are not required to be `Send` (the PJRT client is not),
+//! so each one lives on the thread that created it: the single-pipeline
+//! path keeps it on one inference thread, and the engine constructs one
+//! `Pipeline` *inside each worker thread* via its `BackendFactory` (see
 //! [`engine::FrameWorker`]). The hot path is allocation-free in steady
 //! state: per-frame buffers live in [`pipeline::FrameScratch`] and tensors
-//! are handed to PJRT as borrowed [`crate::runtime::TensorRef`] views.
+//! are handed to the backend as borrowed [`crate::runtime::TensorRef`]
+//! views. [`pipeline::ServeReport`] names the backend that served the run;
+//! under `sim` its latency column is modeled photonic-core time.
 
 pub mod batcher;
 pub mod engine;

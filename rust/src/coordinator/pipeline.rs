@@ -1,11 +1,19 @@
 //! The frame-serving pipeline: MGNet → RoI mask → bucket routing → backbone.
 //!
-//! The steady-state hot path is **allocation-free up to each PJRT call**:
-//! every per-frame buffer (patchify output, score/mask staging, kept-index
-//! list, zero-padded bucket tensors) lives in a reusable [`FrameScratch`],
-//! and the runtime accepts borrowed [`TensorRef`] views, so no frame ever
-//! clones its patch tensor. `rust/tests/alloc_hot_path.rs` asserts this with
-//! a counting allocator.
+//! The pipeline is generic over the execution substrate: any
+//! [`crate::runtime::Backend`] (PJRT over compiled HLO, the pure-Rust
+//! host reference, or the analytic photonic simulator) plugs in without
+//! the request path knowing which one it drives. No PJRT symbol appears in
+//! this module — artifact names are the only contract.
+//!
+//! The steady-state hot path is **allocation-free up to each backend
+//! call**: every per-frame buffer (patchify output, score/mask staging,
+//! kept-index list, zero-padded bucket tensors) lives in a reusable
+//! [`FrameScratch`], and backends accept borrowed [`TensorRef`] views, so
+//! no frame ever clones its patch tensor. `rust/tests/alloc_hot_path.rs`
+//! asserts the staging stages with a counting allocator, and
+//! `rust/tests/host_backend.rs` bounds the full frame over
+//! [`crate::runtime::HostBackend`].
 
 use std::time::{Duration, Instant};
 
@@ -15,7 +23,7 @@ use super::batcher::{recv_frame, BucketRouter, FrameQueue};
 use super::stats::{StageMetrics, WorkerStats};
 use crate::energy::AcceleratorModel;
 use crate::roi::PatchMask;
-use crate::runtime::{Runtime, TensorRef};
+use crate::runtime::{Backend, TensorRef};
 use crate::sensor::Frame;
 use crate::vit::{MgnetConfig, VitConfig, VitVariant};
 
@@ -25,8 +33,9 @@ pub struct PipelineConfig {
     pub variant: VitVariant,
     pub image_size: usize,
     pub num_classes: usize,
-    /// Kept-patch buckets the backbone was AOT-compiled at (ascending;
-    /// must include the full patch count).
+    /// Kept-patch buckets the backbone artifacts exist at. Must be strictly
+    /// ascending and end at the full patch count — enforced by
+    /// [`PipelineConfig::validate`] at pipeline construction.
     pub buckets: Vec<usize>,
     /// MGNet sigmoid threshold `t_reg`.
     pub region_threshold: f32,
@@ -69,6 +78,30 @@ impl PipelineConfig {
             bucket
         )
     }
+
+    /// Check the bucket ladder at construction time (a bad ladder would
+    /// otherwise surface frames later as a routing panic or a missing
+    /// artifact deep in a worker thread): buckets must be non-empty,
+    /// strictly ascending, and end at the full patch count.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            !self.buckets.is_empty(),
+            "pipeline config has no buckets — at least the full patch count is required"
+        );
+        anyhow::ensure!(
+            self.buckets.windows(2).all(|w| w[0] < w[1]),
+            "buckets {:?} must be strictly ascending",
+            self.buckets
+        );
+        let full = self.vit_config().num_patches();
+        anyhow::ensure!(
+            self.buckets.last() == Some(&full),
+            "largest bucket {:?} must equal the full patch count {} so every mask has a home",
+            self.buckets.last(),
+            full
+        );
+        Ok(())
+    }
 }
 
 /// Per-frame output.
@@ -81,7 +114,9 @@ pub struct FrameResult {
     pub bucket: usize,
     /// Modeled accelerator energy for this frame (J).
     pub modeled_energy_j: f64,
-    /// Host wall-clock latency (s) for the full pipeline.
+    /// Latency attributed to this frame (s): modeled accelerator latency
+    /// when the backend simulates timing (`sim`), host wall-clock
+    /// otherwise.
     pub latency_s: f64,
 }
 
@@ -100,7 +135,7 @@ impl FrameResult {
 
 /// Reusable per-frame working memory. All buffers are sized once (at
 /// pipeline construction) for the largest bucket, so steady-state frames
-/// perform zero heap allocation before each PJRT call.
+/// perform zero heap allocation before each backend call.
 #[derive(Debug)]
 pub struct FrameScratch {
     /// Patchified frame, `(num_patches, patch_dim)` row-major.
@@ -228,12 +263,13 @@ impl FrameScratch {
     }
 }
 
-/// The pipeline; owns the (non-`Send`) PJRT runtime, so it is constructed
-/// and driven on one thread. Sharded serving constructs one `Pipeline` per
-/// worker thread (see [`crate::coordinator::engine`]).
-pub struct Pipeline {
+/// The pipeline, generic over its execution [`Backend`]. Backends are not
+/// required to be `Send`, so a pipeline is constructed and driven on one
+/// thread; sharded serving constructs one `Pipeline` per worker thread
+/// (see [`crate::coordinator::engine`]).
+pub struct Pipeline<B: Backend> {
     cfg: PipelineConfig,
-    runtime: Runtime,
+    backend: B,
     router: BucketRouter,
     model: AcceleratorModel,
     scratch: FrameScratch,
@@ -247,22 +283,18 @@ pub struct Pipeline {
     pub metrics: StageMetrics,
 }
 
-impl Pipeline {
-    pub fn new(cfg: PipelineConfig, artifact_dir: &str) -> Result<Self> {
+impl<B: Backend> Pipeline<B> {
+    /// Build a pipeline over an already-constructed backend. Validates the
+    /// bucket ladder (see [`PipelineConfig::validate`]).
+    pub fn with_backend(cfg: PipelineConfig, backend: B) -> Result<Self> {
+        cfg.validate()?;
         let router = BucketRouter::new(cfg.buckets.clone());
         let vit_cfg = cfg.vit_config();
-        let full = vit_cfg.num_patches();
-        anyhow::ensure!(
-            router.buckets().last() == Some(&full),
-            "largest bucket {:?} must equal the full patch count {}",
-            router.buckets().last(),
-            full
-        );
         let backbone_names: Vec<(usize, String)> =
             router.buckets().iter().map(|&b| (b, cfg.backbone_artifact(b))).collect();
-        let scratch = FrameScratch::new(full, vit_cfg.patch_dim(), full);
+        let scratch = FrameScratch::for_config(&cfg);
         Ok(Pipeline {
-            runtime: Runtime::new(artifact_dir)?,
+            backend,
             router,
             model: AcceleratorModel::default(),
             scratch,
@@ -279,21 +311,31 @@ impl Pipeline {
         &self.cfg
     }
 
-    /// Pre-compile all artifacts (avoids compile jitter on the first
-    /// frames). Iterates the precomputed name list directly — no copy of
-    /// the bucket vector is needed to satisfy the borrow checker.
+    /// The execution substrate this pipeline drives.
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    /// Stable backend identifier, carried into [`ServeReport`].
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Pre-load all artifacts (avoids compile jitter on the first frames —
+    /// PJRT compilation and host module materialization both happen here,
+    /// never on the steady-state path).
     pub fn warmup(&mut self) -> Result<()> {
         if self.cfg.use_mask {
-            self.runtime.load(&self.mgnet_name)?;
+            self.backend.load(&self.mgnet_name)?;
         }
         for (_, name) in &self.backbone_names {
-            self.runtime.load(name)?;
+            self.backend.load(name)?;
         }
         Ok(())
     }
 
     /// Process one frame end-to-end. Steady-state frames perform zero heap
-    /// allocation before each PJRT call: all staging goes through the
+    /// allocation before each backend call: all staging goes through the
     /// reusable [`FrameScratch`] and inputs are passed as borrowed
     /// [`TensorRef`] views.
     pub fn process_frame(&mut self, frame: &Frame) -> Result<FrameResult> {
@@ -313,7 +355,7 @@ impl Pipeline {
             let t0 = Instant::now();
             let dims = [n_full as i64, patch_dim as i64];
             let scores = self
-                .runtime
+                .backend
                 .execute1(&self.mgnet_name, &[TensorRef::new(&self.scratch.patches, &dims)])
                 .context("MGNet stage")?;
             self.metrics.record_stage("mgnet", t0.elapsed().as_secs_f64());
@@ -340,7 +382,7 @@ impl Pipeline {
         let bdims = [bucket as i64, patch_dim as i64];
         let vdims = [bucket as i64];
         let logits = self
-            .runtime
+            .backend
             .execute1(
                 artifact,
                 &[
@@ -352,14 +394,23 @@ impl Pipeline {
             .context("backbone stage")?;
         self.metrics.record_stage("backbone", t0.elapsed().as_secs_f64());
 
-        // 5. Modeled accelerator energy at this kept count.
+        // 5. Modeled accelerator energy at this kept count (charged for
+        //    every backend — the host is a stand-in for the photonic core).
         let energy_j = if self.cfg.use_mask {
             self.model.masked_energy(&self.vit_cfg, &self.mgnet_cfg, kept_count).total_j()
         } else {
             self.model.frame_energy(&self.vit_cfg, self.vit_cfg.num_patches(), true).total_j()
         };
-        let latency = t_start.elapsed().as_secs_f64();
-        self.metrics.record_stage("total", latency);
+        // "total" is always host wall-clock (it feeds busy-time and
+        // utilization accounting); a simulating backend additionally
+        // charges its modeled frame latency under "modeled", which then
+        // becomes the reported per-frame latency.
+        let wall_s = t_start.elapsed().as_secs_f64();
+        self.metrics.record_stage("total", wall_s);
+        let modeled = self.backend.modeled_frame_latency_s(kept_count, self.cfg.use_mask);
+        if let Some(m) = modeled {
+            self.metrics.record_stage("modeled", m);
+        }
         self.metrics.record_frame(energy_j, kept_count);
 
         Ok(FrameResult {
@@ -368,7 +419,7 @@ impl Pipeline {
             mask: self.scratch.mask.clone(),
             bucket,
             modeled_energy_j: energy_j,
-            latency_s: latency,
+            latency_s: modeled.unwrap_or(wall_s),
         })
     }
 }
@@ -376,11 +427,15 @@ impl Pipeline {
 /// Summary of a serving run.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
+    /// Which execution backend served the run (`"pjrt"`/`"host"`/`"sim"`).
+    pub backend: String,
     pub frames: u64,
     /// Frames the sensor actually failed to enqueue (`try_push`
     /// rejections) — not frames merely in flight when the run stopped.
     pub dropped: u64,
     pub wall_fps: f64,
+    /// Mean per-frame latency: modeled accelerator latency under the `sim`
+    /// backend, host wall-clock otherwise.
     pub mean_latency_s: f64,
     pub mean_energy_j: f64,
     pub modeled_kfps_per_watt: f64,
@@ -388,7 +443,7 @@ pub struct ServeReport {
     /// Mean IoU of the MGNet mask vs. the sensor ground truth.
     pub mean_mask_iou: f64,
     /// Top-1 agreement with the synthetic class labels (meaningful only
-    /// when the backbone artifact embeds trained weights).
+    /// when the backbone weights are trained).
     pub top1_accuracy: f64,
     /// Worker pipelines that served the run (1 for the single-threaded
     /// [`serve`] path).
@@ -400,8 +455,8 @@ pub struct ServeReport {
 /// Drive a pipeline from a live sensor thread for `num_frames` frames.
 /// The sensor produces frames as fast as the queue accepts them; a full
 /// queue drops frames (real near-sensor backpressure).
-pub fn serve(
-    pipeline: &mut Pipeline,
+pub fn serve<B: Backend>(
+    pipeline: &mut Pipeline<B>,
     sensor_seed: u64,
     num_objects: usize,
     num_frames: u64,
@@ -472,10 +527,11 @@ pub fn serve(
     let busy_s = m.stage_sum_s("total");
     let elapsed_s = m.run_elapsed_s();
     Ok(ServeReport {
+        backend: pipeline.backend_name().to_string(),
         frames: done,
         dropped: rejected.load(Ordering::Relaxed),
         wall_fps: m.wall_fps(),
-        mean_latency_s: m.stage_mean_s("total"),
+        mean_latency_s: m.frame_latency_mean_s(),
         mean_energy_j: m.mean_energy_j(),
         modeled_kfps_per_watt: m.modeled_kfps_per_watt(),
         mean_kept_patches: m.mean_kept_patches(),
@@ -494,7 +550,12 @@ pub fn serve(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::{HostBackend, HostConfig};
     use crate::sensor::VideoSource;
+
+    fn host() -> HostBackend {
+        HostBackend::new(HostConfig { depth_limit: Some(1), ..HostConfig::default() })
+    }
 
     #[test]
     fn config_artifact_names() {
@@ -504,10 +565,44 @@ mod tests {
     }
 
     #[test]
-    fn pipeline_requires_full_bucket() {
+    fn validate_rejects_empty_buckets() {
+        let mut c = PipelineConfig::tiny_96();
+        c.buckets = vec![];
+        let err = c.validate().unwrap_err();
+        assert!(err.to_string().contains("no buckets"), "{err}");
+        assert!(Pipeline::with_backend(c, host()).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_unsorted_buckets() {
+        let mut c = PipelineConfig::tiny_96();
+        c.buckets = vec![18, 9, 36];
+        let err = c.validate().unwrap_err();
+        assert!(err.to_string().contains("ascending"), "{err}");
+        // Duplicates are a ladder bug too, not a silent dedup.
+        c.buckets = vec![9, 9, 36];
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_missing_full_bucket() {
         let mut c = PipelineConfig::tiny_96();
         c.buckets = vec![9, 18]; // missing 36
-        assert!(Pipeline::new(c, "/tmp").is_err());
+        let err = c.validate().unwrap_err();
+        assert!(err.to_string().contains("full patch count"), "{err}");
+        assert!(Pipeline::with_backend(c, host()).is_err());
+    }
+
+    #[test]
+    fn validate_accepts_the_default_ladder() {
+        assert!(PipelineConfig::tiny_96().validate().is_ok());
+    }
+
+    #[test]
+    fn pipeline_reports_its_backend() {
+        let p = Pipeline::with_backend(PipelineConfig::tiny_96(), host()).unwrap();
+        assert_eq!(p.backend_name(), "host");
+        assert!(!p.backend().needs_artifacts());
     }
 
     #[test]

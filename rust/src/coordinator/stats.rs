@@ -82,6 +82,23 @@ impl StageMetrics {
         self.kept.mean()
     }
 
+    /// Whether any sample was recorded under `stage`.
+    pub fn has_stage(&self, stage: &str) -> bool {
+        self.stages.contains_key(stage)
+    }
+
+    /// Mean *reported* per-frame latency: the `"modeled"` stage when a
+    /// simulating backend charged accelerator time, host wall-clock
+    /// (`"total"`) otherwise. Keeping the two stages separate preserves
+    /// busy-time/utilization accounting, which is always wall-clock.
+    pub fn frame_latency_mean_s(&self) -> f64 {
+        if self.has_stage("modeled") {
+            self.stage_mean_s("modeled")
+        } else {
+            self.stage_mean_s("total")
+        }
+    }
+
     /// Mean latency of one stage (seconds).
     pub fn stage_mean_s(&self, stage: &str) -> f64 {
         self.stages.get(stage).map(|a| a.mean()).unwrap_or(0.0)
@@ -159,6 +176,22 @@ mod tests {
         assert_eq!(m.stage_mean_s("nope"), 0.0);
         assert_eq!(m.stage_sum_s("nope"), 0.0);
         assert_eq!(m.modeled_kfps_per_watt(), 0.0);
+        assert!(!m.has_stage("nope"));
+    }
+
+    #[test]
+    fn modeled_stage_overrides_reported_latency() {
+        let mut m = StageMetrics::new();
+        m.record_stage("total", 0.010);
+        assert!((m.frame_latency_mean_s() - 0.010).abs() < 1e-15, "wall-clock by default");
+        m.record_stage("modeled", 2e-6);
+        assert!(m.has_stage("modeled"));
+        assert!(
+            (m.frame_latency_mean_s() - 2e-6).abs() < 1e-18,
+            "a simulating backend's modeled latency wins"
+        );
+        // Busy-time accounting stays wall-clock regardless.
+        assert!((m.stage_sum_s("total") - 0.010).abs() < 1e-15);
     }
 
     #[test]

@@ -12,21 +12,28 @@
 //! - **L2** — JAX ViT + MGNet models (`python/compile/model.py`), lowered once
 //!   to HLO-text artifacts by `python/compile/aot.py`.
 //! - **L3** — this crate: the near-sensor serving pipeline (sensor → MGNet →
-//!   RoI mask → patch pruning → ViT backbone over PJRT) plus the architecture
-//!   simulator the paper's evaluation is built on — photonic device models,
-//!   component energy/latency models, the five-core matrix-decompositional
-//!   pipeline scheduler, and analytic models of competing SiPh accelerators.
+//!   RoI mask → patch pruning → ViT backbone over a pluggable execution
+//!   backend) plus the architecture simulator the paper's evaluation is
+//!   built on — photonic device models, component energy/latency models,
+//!   the five-core matrix-decompositional pipeline scheduler, and analytic
+//!   models of competing SiPh accelerators.
 //!
-//! Python never runs on the request path: after `make artifacts` the rust
-//! binary is self-contained.
+//! Execution is pluggable behind the [`runtime::Backend`] trait, mirroring
+//! the paper's three evaluation substrates: `--backend pjrt` runs the
+//! compiled HLO artifacts (Python never runs on the request path: after
+//! `make artifacts` the rust binary is self-contained), `--backend host`
+//! runs a pure-Rust quantized reference forward pass needing no artifacts
+//! at all, and `--backend sim` keeps the host numerics while charging
+//! modeled photonic-core latency from [`arch`]/[`energy`].
 //!
 //! Host-side serving scales across cores with `optovit serve --workers N`:
 //! the [`coordinator::engine`] shards frames over N worker threads, each
-//! owning its own (non-`Send`) PJRT runtime, and reassembles results
-//! in order. The per-frame hot path is allocation-free in steady state
-//! (see [`coordinator::pipeline::FrameScratch`]); `cargo bench --bench
-//! serve_scaling` sweeps worker counts and writes the machine-readable
-//! `BENCH_serve.json` trajectory.
+//! constructing its own (non-`Send`) backend via a
+//! [`runtime::BackendFactory`], and reassembles results in order. The
+//! per-frame hot path is allocation-free in steady state (see
+//! [`coordinator::pipeline::FrameScratch`]); `cargo bench --bench
+//! serve_scaling` sweeps worker counts over whichever backend is available
+//! and writes the machine-readable `BENCH_serve.json` trajectory.
 //!
 //! ## Module map
 //!
@@ -39,8 +46,8 @@
 //! | [`quant`] | int8 symmetric quantization |
 //! | [`roi`] | patch masks and skip-ratio accounting |
 //! | [`sensor`] | synthetic CMOS sensor / video workload generator |
-//! | [`runtime`] | PJRT client wrapper: load + execute HLO artifacts (owned tensors or borrowed `TensorRef` views) |
-//! | [`coordinator`] | the serving engine: zero-allocation frame pipeline, bucket routing, sharded multi-worker dispatch (dispatcher → N workers → in-order reassembler), merged metrics |
+//! | [`runtime`] | pluggable execution backends behind the `Backend` trait: `pjrt` (compiled HLO), `host` (pure-Rust reference), `sim` (host numerics + modeled photonic timing), plus per-worker `BackendFactory` construction |
+//! | [`coordinator`] | the serving engine, generic over any backend: zero-allocation frame pipeline, bucket routing, sharded multi-worker dispatch (dispatcher → N workers → in-order reassembler), merged metrics |
 //! | [`baselines`] | Table-IV competitor accelerator models + platform refs |
 //! | [`cli`] | dependency-free argument parsing |
 //! | [`util`] | PRNG, stats, table formatting, property-test helpers |

@@ -2,13 +2,18 @@
 //! architecture-simulation reports.
 //!
 //! ```text
-//! optovit serve   [--frames N] [--workers W] [--queue D] [--no-mask] [--seed S] [--objects K]
+//! optovit serve   [--backend pjrt|host|sim] [--frames N] [--workers W] [--queue D]
+//!                 [--no-mask] [--seed S] [--objects K] [--artifacts DIR]
 //! optovit report  [--decomposed true]        # Fig. 8/9 energy+delay grid
 //! optovit roi     [--size 96|224]            # Fig. 10/11 operating points
 //! optovit table4                              # SiPh accelerator comparison
 //! optovit resolution [--channels 32]          # §IV MR resolution analysis
 //! optovit info                                 # list compiled artifacts
 //! ```
+//!
+//! `--backend host` and `--backend sim` serve with no HLO artifacts on
+//! disk (pure-Rust reference compute); `sim` additionally reports modeled
+//! photonic-core latency instead of host wall-clock.
 
 use optovit::baselines;
 use optovit::cli::Args;
@@ -18,6 +23,7 @@ use optovit::coordinator::stats::StageMetrics;
 use optovit::energy::AcceleratorModel;
 use optovit::photonics::fpv::FpvModel;
 use optovit::photonics::MrGeometry;
+use optovit::runtime::{AnyFactory, BackendFactory, BackendKind};
 use optovit::util::table::{si_energy, si_time, Table};
 use optovit::vit::{MgnetConfig, VitConfig, VitVariant};
 
@@ -55,13 +61,26 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let workers = args.get_usize("workers", 1).map_err(anyhow::Error::msg)?.max(1);
     let queue_depth = args.get_usize("queue", 4).map_err(anyhow::Error::msg)?.max(1);
     let artifact_dir = args.get_or("artifacts", "artifacts").to_string();
+    // `BackendKind::from_str` is the single source of truth for the
+    // choice set (its error already lists the choices).
+    let kind: BackendKind =
+        args.get_or("backend", "pjrt").parse().map_err(anyhow::Error::msg)?;
     let mut cfg = PipelineConfig::tiny_96();
     cfg.use_mask = !args.get_bool("no-mask");
-    println!("warming up (compiling artifacts)...");
+    let mut factory = AnyFactory::new(kind, artifact_dir);
+    // The host/sim reference models build their classifier head from the
+    // factory config; keep it in lockstep with the pipeline's head width.
+    factory.host.num_classes = cfg.num_classes;
+    match kind {
+        BackendKind::Pjrt => println!("warming up (compiling artifacts)..."),
+        BackendKind::Host | BackendKind::Sim => {
+            println!("warming up ({kind} backend, no artifacts needed)...")
+        }
+    }
     let (r, metrics) = if workers > 1 {
-        serve_sharded(&cfg, &artifact_dir, workers, queue_depth, seed, objects, frames)?
+        serve_sharded(&cfg, &factory, workers, queue_depth, seed, objects, frames)?
     } else {
-        let mut p = Pipeline::new(cfg, &artifact_dir)?;
+        let mut p = Pipeline::with_backend(cfg, factory.create(0)?)?;
         let r = serve(&mut p, seed, objects, frames, queue_depth)?;
         let metrics = std::mem::take(&mut p.metrics);
         (r, metrics)
@@ -72,11 +91,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 
 fn print_serve_report(r: &ServeReport, metrics: &StageMetrics) {
     println!("\n== serve report ==");
+    println!("backend              {}", r.backend);
     println!("workers              {}", r.workers);
     println!("frames processed     {}", r.frames);
     println!("frames dropped       {}", r.dropped);
     println!("wall throughput      {:.1} fps", r.wall_fps);
-    println!("mean latency         {}", si_time(r.mean_latency_s));
+    println!(
+        "mean latency         {}{}",
+        si_time(r.mean_latency_s),
+        if r.backend == "sim" { "  (modeled photonic-core)" } else { "" }
+    );
     println!("mean modeled energy  {}/frame", si_energy(r.mean_energy_j));
     println!("modeled efficiency   {:.1} KFPS/W", r.modeled_kfps_per_watt);
     println!("mean kept patches    {:.1} / 36", r.mean_kept_patches);
@@ -203,10 +227,11 @@ fn cmd_resolution(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_info(args: &Args) -> anyhow::Result<()> {
     let artifact_dir = args.get_or("artifacts", "artifacts").to_string();
-    let rt = optovit::runtime::Runtime::new(&artifact_dir)?;
+    let rt = optovit::runtime::PjrtBackend::new(&artifact_dir)?;
     let names = rt.available();
     if names.is_empty() {
         println!("no artifacts in '{artifact_dir}' — run `make artifacts`");
+        println!("(serving without artifacts: `optovit serve --backend host|sim`)");
     } else {
         println!("artifacts in '{artifact_dir}':");
         for n in names {

@@ -1,0 +1,680 @@
+//! Pure-Rust host execution backend: a reference MGNet + ViT forward pass
+//! that needs **no compiled artifacts** and no Python.
+//!
+//! [`HostBackend`] answers the same artifact names the PJRT backend loads
+//! from disk (`mgnet_<size>`, `vit_<variant>_<size>_n<bucket>` — the
+//! `.hlo.txt` stem grammar of `python/compile/aot.py` is the ABI), but
+//! materializes each one as an in-memory transformer built from
+//! [`VitConfig`]/[`MgnetConfig`] with deterministic weights drawn from
+//! [`crate::util::rng::Rng`]. Weights and matmul-boundary activations are
+//! fake-quantized through [`crate::quant`] to the same 8-bit grid the
+//! photonic weight banks and ADC/DAC interfaces impose, so the numerics
+//! exercise the quantized serving path end to end.
+//!
+//! The weights are *untrained* (mask quality and accuracy are chance-level);
+//! what this backend provides is the full fixed-shape dataflow — patch
+//! embedding, positional gather by `pos_idx`, validity-masked attention over
+//! zero-padded bucket slots, cls-token head — with real content-dependent
+//! outputs, deterministically reproducible from a seed and identical across
+//! worker threads. That is exactly what CI, the serving tests, and the
+//! scaling bench need where HLO artifacts are absent.
+//!
+//! Steady-state execution is allocation-free except for the returned output
+//! vector: every activation buffer lives in a per-module scratch sized at
+//! [`Backend::load`] time.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::{Backend, TensorRef};
+use crate::quant::QuantParams;
+use crate::util::rng::Rng;
+use crate::vit::{MgnetConfig, VitConfig, VitVariant};
+
+/// Configuration of the pure-Rust host reference backend.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HostConfig {
+    /// Weight-init seed. Module weights are derived from
+    /// `(seed, artifact name)`, never from the worker index, so every
+    /// worker of a sharded run builds bit-identical modules and routing is
+    /// stable under sharding.
+    pub seed: u64,
+    /// Classifier width of backbone artifacts (the artifact name encodes
+    /// variant/size/bucket but not the head width). Must match the serving
+    /// `PipelineConfig::num_classes` or logits will be the wrong width —
+    /// call sites that own both configs wire it through (see `cmd_serve`).
+    pub num_classes: usize,
+    /// Optional cap on encoder depth. The reference numerics are defined at
+    /// any depth; tests cap it (e.g. `Some(1)`) to keep debug-mode CI fast.
+    /// `None` runs the full configured depth.
+    pub depth_limit: Option<usize>,
+    /// Weight/activation quantization bits (8 matches the paper's photonic
+    /// weight banks and ADC/DAC interfaces).
+    pub bits: u32,
+}
+
+impl Default for HostConfig {
+    fn default() -> Self {
+        // Seed spells the source paper's arXiv id (2507.07044).
+        HostConfig { seed: 0x2507_07044, num_classes: 10, depth_limit: None, bits: 8 }
+    }
+}
+
+/// What an artifact name denotes, parsed from the shared `.hlo.txt` stem
+/// grammar (`PipelineConfig::mgnet_artifact` / `backbone_artifact`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactSpec {
+    /// `mgnet_<size>`: the mask generator over the full patch grid.
+    Mgnet { image_size: usize },
+    /// `vit_<variant>_<size>_n<bucket>`: a backbone compiled at one
+    /// kept-patch bucket.
+    Backbone { variant: VitVariant, image_size: usize, bucket: usize },
+}
+
+/// Parse an artifact name into its [`ArtifactSpec`].
+pub fn parse_artifact(name: &str) -> Result<ArtifactSpec> {
+    const PATCH_PX: usize = 16;
+    if let Some(rest) = name.strip_prefix("mgnet_") {
+        let image_size: usize =
+            rest.parse().with_context(|| format!("artifact '{name}': bad image size"))?;
+        ensure!(
+            image_size >= PATCH_PX && image_size % PATCH_PX == 0,
+            "artifact '{name}': image size {image_size} not divisible by patch size {PATCH_PX}"
+        );
+        return Ok(ArtifactSpec::Mgnet { image_size });
+    }
+    if let Some(rest) = name.strip_prefix("vit_") {
+        let mut parts = rest.split('_');
+        let variant = parts
+            .next()
+            .and_then(VitVariant::from_name)
+            .with_context(|| format!("artifact '{name}': unknown ViT variant"))?;
+        let image_size: usize = parts
+            .next()
+            .with_context(|| format!("artifact '{name}': missing image size"))?
+            .parse()
+            .with_context(|| format!("artifact '{name}': bad image size"))?;
+        let bucket: usize = parts
+            .next()
+            .and_then(|s| s.strip_prefix('n'))
+            .with_context(|| format!("artifact '{name}': missing 'n<bucket>' suffix"))?
+            .parse()
+            .with_context(|| format!("artifact '{name}': bad bucket"))?;
+        ensure!(parts.next().is_none(), "artifact '{name}': trailing segments");
+        ensure!(
+            image_size >= PATCH_PX && image_size % PATCH_PX == 0,
+            "artifact '{name}': image size {image_size} not divisible by patch size {PATCH_PX}"
+        );
+        let full = (image_size / PATCH_PX) * (image_size / PATCH_PX);
+        ensure!(
+            (1..=full).contains(&bucket),
+            "artifact '{name}': bucket {bucket} outside 1..={full}"
+        );
+        return Ok(ArtifactSpec::Backbone { variant, image_size, bucket });
+    }
+    bail!("unknown artifact name '{name}' (expected 'mgnet_<size>' or 'vit_<variant>_<size>_n<bucket>')")
+}
+
+/// Per-artifact weight seed: stable across workers and processes.
+fn artifact_seed(base: u64, name: &str) -> u64 {
+    // FNV-1a over the name, folded into the base seed.
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    base ^ h
+}
+
+/// Fake-quantize a buffer in place on its own max-abs 8-bit (or `bits`)
+/// grid — the DAC boundary every operand crosses before an optical matmul.
+fn quantize_acts(buf: &mut [f32], bits: u32) {
+    QuantParams::calibrate(buf, bits).fake_quantize_slice(buf);
+}
+
+/// A dense affine layer, `out = x W^T + b`, weights fake-quantized at init.
+#[derive(Debug)]
+struct Linear {
+    w: Vec<f32>,
+    b: Vec<f32>,
+    in_dim: usize,
+    out_dim: usize,
+}
+
+impl Linear {
+    fn init(rng: &mut Rng, in_dim: usize, out_dim: usize, bits: u32) -> Self {
+        let bound = (6.0 / (in_dim + out_dim) as f64).sqrt() as f32;
+        let mut w = vec![0.0f32; out_dim * in_dim];
+        rng.fill_uniform_f32(&mut w, -bound, bound);
+        quantize_acts(&mut w, bits);
+        Linear { w, b: vec![0.0; out_dim], in_dim, out_dim }
+    }
+
+    /// Forward `tokens` rows of `x` into `out` (both exactly sized).
+    fn forward(&self, x: &[f32], tokens: usize, out: &mut [f32]) {
+        debug_assert_eq!(x.len(), tokens * self.in_dim);
+        debug_assert_eq!(out.len(), tokens * self.out_dim);
+        for (xi, oi) in x.chunks_exact(self.in_dim).zip(out.chunks_exact_mut(self.out_dim)) {
+            for (o, y) in oi.iter_mut().enumerate() {
+                let row = &self.w[o * self.in_dim..(o + 1) * self.in_dim];
+                let mut acc = self.b[o];
+                for (a, wv) in xi.iter().zip(row) {
+                    acc += a * wv;
+                }
+                *y = acc;
+            }
+        }
+    }
+}
+
+/// One pre-LN transformer encoder block.
+#[derive(Debug)]
+struct Block {
+    qkv: Linear,
+    proj: Linear,
+    fc1: Linear,
+    fc2: Linear,
+}
+
+impl Block {
+    fn init(rng: &mut Rng, d: usize, ffn: usize, bits: u32) -> Self {
+        Block {
+            qkv: Linear::init(rng, d, 3 * d, bits),
+            proj: Linear::init(rng, d, d, bits),
+            fc1: Linear::init(rng, d, ffn, bits),
+            fc2: Linear::init(rng, ffn, d, bits),
+        }
+    }
+}
+
+/// Reusable activation buffers, sized once at module build time so the
+/// steady-state forward pass never touches the heap.
+#[derive(Debug)]
+struct Scratch {
+    /// Token stream, `(T, d)`.
+    x: Vec<f32>,
+    /// LayerNorm / projection output staging, `(T, d)`.
+    norm: Vec<f32>,
+    /// Fused q/k/v activations, `(T, 3d)`.
+    qkv: Vec<f32>,
+    /// Attention output / FFN output staging, `(T, d)`.
+    attn_out: Vec<f32>,
+    /// One row of attention scores, `(T,)`.
+    attn_row: Vec<f32>,
+    /// FFN hidden activations, `(T, ffn)`.
+    mlp: Vec<f32>,
+    /// Per-token validity (cls + real patch slots true, padding false).
+    valid: Vec<bool>,
+}
+
+impl Scratch {
+    fn new(t_max: usize, d: usize, ffn: usize) -> Self {
+        Scratch {
+            x: vec![0.0; t_max * d],
+            norm: vec![0.0; t_max * d],
+            qkv: vec![0.0; t_max * 3 * d],
+            attn_out: vec![0.0; t_max * d],
+            attn_row: vec![0.0; t_max],
+            mlp: vec![0.0; t_max * ffn],
+            valid: vec![false; t_max],
+        }
+    }
+}
+
+/// Parameter-free LayerNorm (γ=1, β=0 — the freshly-initialized values)
+/// over `tokens` rows of width `d`.
+fn layer_norm_all(src: &[f32], dst: &mut [f32], d: usize) {
+    const EPS: f32 = 1e-5;
+    for (xi, oi) in src.chunks_exact(d).zip(dst.chunks_exact_mut(d)) {
+        let mean = xi.iter().sum::<f32>() / d as f32;
+        let var = xi.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + EPS).sqrt();
+        for (o, &v) in oi.iter_mut().zip(xi) {
+            *o = (v - mean) * inv;
+        }
+    }
+}
+
+/// Tanh-approximated GELU, in place.
+fn gelu_slice(xs: &mut [f32]) {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    for x in xs.iter_mut() {
+        let v = *x;
+        *x = 0.5 * v * (1.0 + (C * (v + 0.044_715 * v * v * v)).tanh());
+    }
+}
+
+/// In-place softmax over one score row (`-inf` entries contribute zero).
+fn softmax_row(row: &mut [f32]) {
+    let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+    let mut sum = 0.0f32;
+    for v in row.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    if sum > 0.0 {
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// One block's forward pass over `t` tokens (pre-LN residual layout), with
+/// invalid tokens masked out of every attention softmax.
+fn block_forward(blk: &Block, cfg: &VitConfig, s: &mut Scratch, t: usize, bits: u32) {
+    let d = cfg.embed_dim;
+    let heads = cfg.num_heads;
+    let hd = cfg.embed_dim / cfg.num_heads;
+    let ffn = cfg.ffn_dim();
+    let scale = 1.0 / (hd as f32).sqrt();
+    let Scratch { x, norm, qkv, attn_out, attn_row, mlp, valid } = s;
+    let (x, norm) = (&mut x[..t * d], &mut norm[..t * d]);
+    let qkv_buf = &mut qkv[..t * 3 * d];
+    let attn_out = &mut attn_out[..t * d];
+    let attn_row = &mut attn_row[..t];
+    let mlp = &mut mlp[..t * ffn];
+
+    // Attention sublayer: x += proj(attn(ln1(x))).
+    layer_norm_all(x, norm, d);
+    quantize_acts(norm, bits);
+    blk.qkv.forward(norm, t, qkv_buf);
+    attn_out.fill(0.0);
+    for h in 0..heads {
+        let (qo, ko, vo) = (h * hd, d + h * hd, 2 * d + h * hd);
+        for tq in 0..t {
+            let q = &qkv_buf[tq * 3 * d + qo..tq * 3 * d + qo + hd];
+            for tk in 0..t {
+                attn_row[tk] = if valid[tk] {
+                    let k = &qkv_buf[tk * 3 * d + ko..tk * 3 * d + ko + hd];
+                    q.iter().zip(k).map(|(a, b)| a * b).sum::<f32>() * scale
+                } else {
+                    f32::NEG_INFINITY
+                };
+            }
+            softmax_row(attn_row);
+            let out = &mut attn_out[tq * d + h * hd..tq * d + h * hd + hd];
+            for (tk, &w) in attn_row.iter().enumerate() {
+                if w > 0.0 {
+                    let v = &qkv_buf[tk * 3 * d + vo..tk * 3 * d + vo + hd];
+                    for (o, &vv) in out.iter_mut().zip(v) {
+                        *o += w * vv;
+                    }
+                }
+            }
+        }
+    }
+    quantize_acts(attn_out, bits);
+    blk.proj.forward(attn_out, t, norm);
+    for (xi, &r) in x.iter_mut().zip(norm.iter()) {
+        *xi += r;
+    }
+
+    // FFN sublayer: x += fc2(gelu(fc1(ln2(x)))).
+    layer_norm_all(x, norm, d);
+    quantize_acts(norm, bits);
+    blk.fc1.forward(norm, t, mlp);
+    gelu_slice(mlp);
+    quantize_acts(mlp, bits);
+    blk.fc2.forward(mlp, t, attn_out);
+    for (xi, &r) in x.iter_mut().zip(attn_out.iter()) {
+        *xi += r;
+    }
+}
+
+/// One materialized artifact: a ViT (or the one-block MGNet-as-ViT) with
+/// deterministic quantized weights and preallocated scratch.
+#[derive(Debug)]
+struct HostVit {
+    cfg: VitConfig,
+    /// Encoder blocks actually run (`min(cfg.depth, depth_limit)`).
+    blocks: Vec<Block>,
+    embed: Linear,
+    /// Learned-token stand-in for the cls embedding, `(d,)`.
+    cls: Vec<f32>,
+    /// Positional table over the *full* grid, `(num_patches + 1, d)`;
+    /// bucket slots gather rows by their original grid index.
+    pos: Vec<f32>,
+    head: Linear,
+    bits: u32,
+    scratch: Scratch,
+}
+
+impl HostVit {
+    fn build(cfg: VitConfig, t_max: usize, seed: u64, depth_limit: Option<usize>, bits: u32) -> Self {
+        let mut rng = Rng::new(seed);
+        let d = cfg.embed_dim;
+        let depth = depth_limit.map_or(cfg.depth, |l| cfg.depth.min(l.max(1)));
+        let embed = Linear::init(&mut rng, cfg.patch_dim(), d, bits);
+        let mut cls = vec![0.0f32; d];
+        rng.fill_uniform_f32(&mut cls, -0.02, 0.02);
+        quantize_acts(&mut cls, bits);
+        let mut pos = vec![0.0f32; cfg.seq_len() * d];
+        rng.fill_uniform_f32(&mut pos, -0.02, 0.02);
+        quantize_acts(&mut pos, bits);
+        let blocks = (0..depth).map(|_| Block::init(&mut rng, d, cfg.ffn_dim(), bits)).collect();
+        let head = Linear::init(&mut rng, d, cfg.num_classes, bits);
+        let scratch = Scratch::new(t_max, d, cfg.ffn_dim());
+        HostVit { cfg, blocks, embed, cls, pos, head, bits, scratch }
+    }
+
+    /// Forward `n` patch rows (+ implicit cls token). `pos_idx`/`valid`
+    /// are the bucket-slot staging tensors; `None` means the full identity
+    /// grid with every slot valid (the MGNet input layout). The returned
+    /// logits vector is the only per-call allocation.
+    fn forward(&mut self, patches: &[f32], n: usize, pos_idx: Option<&[f32]>, valid: Option<&[f32]>) -> Result<Vec<f32>> {
+        let d = self.cfg.embed_dim;
+        let full = self.cfg.num_patches();
+        ensure!(n >= 1 && n <= full, "token count {n} outside 1..={full}");
+        let t = n + 1;
+        let s = &mut self.scratch;
+        s.x[..d].copy_from_slice(&self.cls);
+        self.embed.forward(patches, n, &mut s.x[d..t * d]);
+        for slot in 0..n {
+            let p = match pos_idx {
+                Some(pi) => {
+                    let p = pi[slot];
+                    ensure!(
+                        p.is_finite() && p >= 0.0 && (p as usize) < full,
+                        "pos_idx[{slot}] = {p} outside the {full}-patch grid"
+                    );
+                    p as usize
+                }
+                None => slot,
+            };
+            let prow = &self.pos[(1 + p) * d..(2 + p) * d];
+            for (xi, &pv) in s.x[(1 + slot) * d..(2 + slot) * d].iter_mut().zip(prow) {
+                *xi += pv;
+            }
+        }
+        for (xi, &pv) in s.x[..d].iter_mut().zip(&self.pos[..d]) {
+            *xi += pv;
+        }
+        s.valid[0] = true;
+        for slot in 0..n {
+            s.valid[1 + slot] = valid.map_or(true, |v| v[slot] > 0.5);
+        }
+        // Zero the embedded rows of invalid slots. Activation quantization
+        // calibrates max-abs over whole buffers, so any padded-slot content
+        // left here would shift every valid token's quantization grid —
+        // breaking the invariant that padding can never reach the logits.
+        // Zeroed rows make all downstream buffers padding-independent.
+        for slot in 0..n {
+            if !s.valid[1 + slot] {
+                s.x[(1 + slot) * d..(2 + slot) * d].fill(0.0);
+            }
+        }
+        quantize_acts(&mut s.x[..t * d], self.bits);
+        for blk in &self.blocks {
+            block_forward(blk, &self.cfg, &mut self.scratch, t, self.bits);
+        }
+        // Classifier head on the cls token only: padded slots can never
+        // reach the logits except through (masked) attention.
+        layer_norm_all(&self.scratch.x[..d], &mut self.scratch.norm[..d], d);
+        quantize_acts(&mut self.scratch.norm[..d], self.bits);
+        let mut logits = vec![0.0f32; self.head.out_dim];
+        self.head.forward(&self.scratch.norm[..d], 1, &mut logits);
+        Ok(logits)
+    }
+}
+
+/// Pure-Rust reference implementation of [`Backend`]. See the module docs.
+#[derive(Debug)]
+pub struct HostBackend {
+    cfg: HostConfig,
+    modules: HashMap<String, (ArtifactSpec, HostVit)>,
+}
+
+impl HostBackend {
+    pub fn new(cfg: HostConfig) -> Self {
+        HostBackend { cfg, modules: HashMap::new() }
+    }
+
+    pub fn config(&self) -> &HostConfig {
+        &self.cfg
+    }
+
+    fn build_module(&self, name: &str) -> Result<(ArtifactSpec, HostVit)> {
+        let spec = parse_artifact(name)?;
+        let seed = artifact_seed(self.cfg.seed, name);
+        let vit = match spec {
+            ArtifactSpec::Mgnet { image_size } => {
+                // The MGNet is a one-block ViT whose head scores every
+                // patch of the full grid from the cls token.
+                let cfg = MgnetConfig::classification(image_size).as_vit();
+                HostVit::build(cfg, cfg.seq_len(), seed, self.cfg.depth_limit, self.cfg.bits)
+            }
+            ArtifactSpec::Backbone { variant, image_size, bucket } => {
+                let cfg = VitConfig::variant(variant, image_size, self.cfg.num_classes);
+                HostVit::build(cfg, bucket + 1, seed, self.cfg.depth_limit, self.cfg.bits)
+            }
+        };
+        Ok((spec, vit))
+    }
+}
+
+impl Backend for HostBackend {
+    fn name(&self) -> &'static str {
+        "host"
+    }
+
+    fn needs_artifacts(&self) -> bool {
+        false
+    }
+
+    fn load(&mut self, artifact: &str) -> Result<()> {
+        if self.modules.contains_key(artifact) {
+            return Ok(());
+        }
+        let module = self.build_module(artifact)?;
+        self.modules.insert(artifact.to_string(), module);
+        Ok(())
+    }
+
+    fn is_loaded(&self, artifact: &str) -> bool {
+        self.modules.contains_key(artifact)
+    }
+
+    fn execute(&mut self, artifact: &str, inputs: &[TensorRef<'_>]) -> Result<Vec<Vec<f32>>> {
+        self.load(artifact)?;
+        let (spec, vit) = self.modules.get_mut(artifact).expect("just loaded");
+        let patch_dim = vit.cfg.patch_dim();
+        let out = match *spec {
+            ArtifactSpec::Mgnet { .. } => {
+                let n = vit.cfg.num_patches();
+                ensure!(inputs.len() == 1, "mgnet artifact takes 1 input, got {}", inputs.len());
+                ensure!(
+                    inputs[0].data.len() == n * patch_dim,
+                    "mgnet input has {} values, expected {}x{}",
+                    inputs[0].data.len(),
+                    n,
+                    patch_dim
+                );
+                vit.forward(inputs[0].data, n, None, None)
+            }
+            ArtifactSpec::Backbone { bucket, .. } => {
+                ensure!(
+                    inputs.len() == 3,
+                    "backbone artifact takes (patches, pos_idx, valid), got {} inputs",
+                    inputs.len()
+                );
+                ensure!(
+                    inputs[0].data.len() == bucket * patch_dim,
+                    "backbone patches have {} values, expected {}x{}",
+                    inputs[0].data.len(),
+                    bucket,
+                    patch_dim
+                );
+                ensure!(
+                    inputs[1].data.len() == bucket && inputs[2].data.len() == bucket,
+                    "pos_idx/valid must each have {bucket} slots"
+                );
+                vit.forward(inputs[0].data, bucket, Some(inputs[1].data), Some(inputs[2].data))
+            }
+        }
+        .with_context(|| format!("host execution of artifact '{artifact}'"))?;
+        Ok(vec![out])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // All tests run on a 32px grid (2x2 patches, 5 tokens with cls) to
+    // keep debug-mode forwards cheap.
+    const PD: usize = 16 * 16 * 3;
+
+    fn cfg1() -> HostConfig {
+        HostConfig { depth_limit: Some(1), ..HostConfig::default() }
+    }
+
+    fn patches(n: usize, fill: impl Fn(usize) -> f32) -> Vec<f32> {
+        (0..n * PD).map(fill).collect()
+    }
+
+    #[test]
+    fn parses_artifact_grammar() {
+        assert_eq!(parse_artifact("mgnet_96").unwrap(), ArtifactSpec::Mgnet { image_size: 96 });
+        assert_eq!(
+            parse_artifact("vit_tiny_96_n36").unwrap(),
+            ArtifactSpec::Backbone { variant: VitVariant::Tiny, image_size: 96, bucket: 36 }
+        );
+        assert_eq!(
+            parse_artifact("vit_large_224_n196").unwrap(),
+            ArtifactSpec::Backbone { variant: VitVariant::Large, image_size: 224, bucket: 196 }
+        );
+        for bad in [
+            "mgnet_97",         // not patch-divisible
+            "mgnet_x",          // not a number
+            "vit_giant_96_n9",  // unknown variant
+            "vit_tiny_96",      // missing bucket
+            "vit_tiny_96_n0",   // bucket below 1
+            "vit_tiny_96_n37",  // bucket above the full grid
+            "vit_tiny_96_n9_x", // trailing segment
+            "resnet_50",        // unknown family
+        ] {
+            assert!(parse_artifact(bad).is_err(), "'{bad}' must not parse");
+        }
+    }
+
+    #[test]
+    fn unknown_artifact_is_error() {
+        let mut b = HostBackend::new(cfg1());
+        assert!(b.load("resnet_50").is_err());
+        assert!(!b.is_loaded("resnet_50"));
+    }
+
+    #[test]
+    fn identity_and_loading() {
+        let mut b = HostBackend::new(cfg1());
+        assert_eq!(b.name(), "host");
+        assert!(!b.needs_artifacts());
+        assert!(!b.is_loaded("mgnet_32"));
+        b.load("mgnet_32").unwrap();
+        assert!(b.is_loaded("mgnet_32"));
+        assert_eq!(b.modeled_frame_latency_s(2, true), None);
+    }
+
+    #[test]
+    fn mgnet_scores_full_grid() {
+        let mut b = HostBackend::new(cfg1());
+        let x = patches(4, |i| (i % 17) as f32 / 17.0);
+        let dims = [4i64, PD as i64];
+        let scores = b.execute1("mgnet_32", &[TensorRef::new(&x, &dims)]).unwrap();
+        assert_eq!(scores.len(), 4, "one score per grid patch");
+        assert!(scores.iter().all(|s| s.is_finite()));
+    }
+
+    #[test]
+    fn deterministic_across_instances_and_calls() {
+        let x = patches(2, |i| (i % 13) as f32 / 13.0);
+        let pos = [0.0f32, 3.0];
+        let valid = [1.0f32, 1.0];
+        let dims = [2i64, PD as i64];
+        let vdims = [2i64];
+        let ins =
+            [TensorRef::new(&x, &dims), TensorRef::new(&pos, &vdims), TensorRef::new(&valid, &vdims)];
+        let mut a = HostBackend::new(cfg1());
+        let mut b = HostBackend::new(cfg1());
+        let la = a.execute1("vit_tiny_32_n2", &ins).unwrap();
+        let lb = b.execute1("vit_tiny_32_n2", &ins).unwrap();
+        assert_eq!(la, lb, "same seed must give identical logits");
+        assert_eq!(la, a.execute1("vit_tiny_32_n2", &ins).unwrap(), "execution must be pure");
+        let mut c = HostBackend::new(HostConfig { seed: 99, ..cfg1() });
+        let lc = c.execute1("vit_tiny_32_n2", &ins).unwrap();
+        assert_ne!(la, lc, "different seeds must give different weights");
+        assert_eq!(la.len(), cfg1().num_classes);
+    }
+
+    #[test]
+    fn padded_slots_cannot_reach_the_logits() {
+        // Bucket 4, only 2 valid slots: garbage in the padded slots must
+        // not change the logits — validity masking is load-bearing.
+        let dims = [4i64, PD as i64];
+        let vdims = [4i64];
+        let pos = [0.0f32, 3.0, 0.0, 0.0];
+        let valid = [1.0f32, 1.0, 0.0, 0.0];
+        let mut x = patches(4, |i| (i % 13) as f32 / 13.0);
+        for v in &mut x[2 * PD..] {
+            *v = 0.0;
+        }
+        let mut b = HostBackend::new(cfg1());
+        let zero_pad = b
+            .execute1(
+                "vit_tiny_32_n4",
+                &[TensorRef::new(&x, &dims), TensorRef::new(&pos, &vdims), TensorRef::new(&valid, &vdims)],
+            )
+            .unwrap();
+        for v in &mut x[2 * PD..] {
+            *v = 7.5;
+        }
+        let garbage_pad = b
+            .execute1(
+                "vit_tiny_32_n4",
+                &[TensorRef::new(&x, &dims), TensorRef::new(&pos, &vdims), TensorRef::new(&valid, &vdims)],
+            )
+            .unwrap();
+        assert_eq!(zero_pad, garbage_pad, "padded slots leaked into the logits");
+    }
+
+    #[test]
+    fn depth_limit_changes_numerics_but_not_shape() {
+        let x = patches(2, |i| (i % 11) as f32 / 11.0);
+        let dims = [2i64, PD as i64];
+        let vdims = [2i64];
+        let pos = [0.0f32, 1.0];
+        let valid = [1.0f32, 1.0];
+        let ins =
+            [TensorRef::new(&x, &dims), TensorRef::new(&pos, &vdims), TensorRef::new(&valid, &vdims)];
+        let mut shallow = HostBackend::new(cfg1());
+        let mut full = HostBackend::new(HostConfig { depth_limit: None, ..cfg1() });
+        let ls = shallow.execute1("vit_tiny_32_n2", &ins).unwrap();
+        let lf = full.execute1("vit_tiny_32_n2", &ins).unwrap();
+        assert_eq!(ls.len(), lf.len());
+        assert_ne!(ls, lf, "Tiny runs 12 blocks at full depth, 1 when capped");
+        assert!(lf.iter().all(|v| v.is_finite()), "full-depth forward must stay finite");
+    }
+
+    #[test]
+    fn input_arity_and_shape_are_validated() {
+        let mut b = HostBackend::new(cfg1());
+        let x = patches(2, |_| 0.1);
+        let dims = [2i64, PD as i64];
+        // Backbone with a single input.
+        assert!(b.execute("vit_tiny_32_n2", &[TensorRef::new(&x, &dims)]).is_err());
+        // MGNet with the wrong patch count.
+        assert!(b.execute("mgnet_32", &[TensorRef::new(&x, &dims)]).is_err());
+        // pos_idx outside the grid.
+        let pos = [0.0f32, 9.0];
+        let valid = [1.0f32, 1.0];
+        let vdims = [2i64];
+        let err = b
+            .execute(
+                "vit_tiny_32_n2",
+                &[TensorRef::new(&x, &dims), TensorRef::new(&pos, &vdims), TensorRef::new(&valid, &vdims)],
+            )
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("pos_idx"), "{err:#}");
+    }
+}

@@ -1,19 +1,37 @@
-//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! Execution backends: the seam between the serving coordinator and
+//! whatever actually runs the model stages.
 //!
-//! Interchange format is **HLO text**, not serialized `HloModuleProto` —
-//! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
-//! 0.5.1 rejects; the text parser reassigns ids (see
-//! `/opt/xla-example/README.md`).
+//! The paper's evaluation spans three substrates — real inference, host
+//! reference compute, and the analytic photonic architecture model — and
+//! this module exposes all three behind one object-safe [`Backend`] trait:
 //!
-//! `PjRtClient` is `Rc`-backed (not `Send`): a [`Runtime`] must be created
-//! and used on a single thread. The coordinator owns one on its dedicated
-//! inference thread.
+//! | backend | type | numerics | latency | needs artifacts |
+//! |---|---|---|---|---|
+//! | `pjrt` | [`PjrtBackend`] | compiled HLO on the CPU PJRT client | host wall-clock | yes (`make artifacts`) |
+//! | `host` | [`HostBackend`] | pure-Rust reference ViT/MGNet (quantized, seeded) | host wall-clock | no |
+//! | `sim`  | [`SimBackend`] | host reference numerics | modeled photonic-core delay ([`crate::arch`]/[`crate::energy`]) | no |
+//!
+//! Artifact *names* (`mgnet_96`, `vit_tiny_96_n36` — the `.hlo.txt` stems
+//! emitted by `python/compile/aot.py`) are the ABI shared by every backend:
+//! PJRT resolves them on disk, the host/sim backends materialize them from
+//! [`crate::vit`] configs.
+//!
+//! None of the implementations is `Send` by contract (the PJRT client is
+//! `Rc`-backed), so sharded serving constructs one backend per worker
+//! thread through a [`BackendFactory`] — see [`crate::coordinator::engine`].
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+pub mod host;
+pub mod pjrt;
+pub mod sim;
 
-use anyhow::{bail, Context, Result};
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::{bail, Result};
+
+pub use host::{parse_artifact, ArtifactSpec, HostBackend, HostConfig};
+pub use pjrt::PjrtBackend;
+pub use sim::SimBackend;
 
 /// A host-side f32 tensor (row-major) with explicit dims.
 #[derive(Debug, Clone, PartialEq)]
@@ -43,9 +61,8 @@ impl Tensor {
 }
 
 /// A borrowed tensor view: `&[f32]` data + explicit dims, both living in the
-/// caller. [`Runtime::execute`] takes these so the serving hot path can hand
-/// over scratch buffers without an owned copy per frame (the PJRT literal is
-/// built directly from the slice).
+/// caller. [`Backend::execute`] takes these so the serving hot path can hand
+/// over scratch buffers without an owned copy per frame.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TensorRef<'a> {
     pub data: &'a [f32],
@@ -60,8 +77,8 @@ impl<'a> TensorRef<'a> {
     }
 }
 
-/// Anything [`Runtime::execute`] accepts as an input: an owned [`Tensor`]
-/// or a borrowed [`TensorRef`].
+/// Anything the PJRT backend's inherent `execute` accepts as an input: an
+/// owned [`Tensor`] or a borrowed [`TensorRef`].
 pub trait AsTensorRef {
     fn tensor_ref(&self) -> TensorRef<'_>;
 }
@@ -78,105 +95,226 @@ impl AsTensorRef for TensorRef<'_> {
     }
 }
 
-/// PJRT-backed executor over a directory of `*.hlo.txt` artifacts.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    artifact_dir: PathBuf,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
-}
+/// An execution substrate for the serving pipeline: loads artifacts by name
+/// and executes them over borrowed tensor views.
+///
+/// Implementations are single-threaded by contract (none is required to be
+/// `Send`); sharded serving builds one instance per worker thread via
+/// [`BackendFactory`]. The trait is object-safe, so `dyn Backend` works
+/// where static dispatch is inconvenient.
+pub trait Backend {
+    /// Stable identifier (`"pjrt"` / `"host"` / `"sim"`), carried into
+    /// `ServeReport` and bench output.
+    fn name(&self) -> &'static str;
 
-impl Runtime {
-    /// Create a CPU-PJRT runtime rooted at `artifact_dir`.
-    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime {
-            client,
-            artifact_dir: artifact_dir.as_ref().to_path_buf(),
-            executables: HashMap::new(),
-        })
-    }
+    /// Whether this backend requires compiled HLO artifacts on disk.
+    fn needs_artifacts(&self) -> bool;
 
-    /// Artifact names available on disk (file stems of `*.hlo.txt`).
-    pub fn available(&self) -> Vec<String> {
-        let mut names = Vec::new();
-        if let Ok(rd) = std::fs::read_dir(&self.artifact_dir) {
-            for e in rd.flatten() {
-                let p = e.path();
-                if let Some(name) = p.file_name().and_then(|s| s.to_str()) {
-                    if let Some(stem) = name.strip_suffix(".hlo.txt") {
-                        names.push(stem.to_string());
-                    }
-                }
-            }
-        }
-        names.sort();
-        names
-    }
+    /// Load/prepare an artifact (cached; never on the steady-state path).
+    fn load(&mut self, artifact: &str) -> Result<()>;
 
-    /// Load + compile an artifact (cached). Compilation happens once per
-    /// name per process — never on the steady-state request path.
-    pub fn load(&mut self, name: &str) -> Result<()> {
-        if self.executables.contains_key(name) {
-            return Ok(());
-        }
-        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
-        if !path.exists() {
-            bail!(
-                "artifact '{}' not found at {} — run `make artifacts` first",
-                name,
-                path.display()
-            );
-        }
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe =
-            self.client.compile(&comp).with_context(|| format!("compiling artifact '{name}'"))?;
-        self.executables.insert(name.to_string(), exe);
-        Ok(())
-    }
+    fn is_loaded(&self, artifact: &str) -> bool;
 
-    pub fn is_loaded(&self, name: &str) -> bool {
-        self.executables.contains_key(name)
-    }
-
-    /// Execute artifact `name` with the given inputs (owned [`Tensor`]s or
-    /// borrowed [`TensorRef`]s); returns all tuple outputs as flat f32
-    /// vectors (artifacts are lowered with `return_tuple=True`).
-    pub fn execute<T: AsTensorRef>(&mut self, name: &str, inputs: &[T]) -> Result<Vec<Vec<f32>>> {
-        self.load(name)?;
-        let exe = self.executables.get(name).expect("just loaded");
-        let mut literals = Vec::with_capacity(inputs.len());
-        for t in inputs {
-            let t = t.tensor_ref();
-            let lit = xla::Literal::vec1(t.data);
-            let lit = if t.dims.is_empty() {
-                lit
-            } else {
-                lit.reshape(t.dims)
-                    .with_context(|| format!("reshaping input to {:?}", t.dims))?
-            };
-            literals.push(lit);
-        }
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing artifact '{name}'"))?[0][0]
-            .to_literal_sync()?;
-        let parts = result.to_tuple().context("artifact output is not a tuple")?;
-        let mut out = Vec::with_capacity(parts.len());
-        for p in parts {
-            out.push(p.to_vec::<f32>().context("non-f32 artifact output")?);
-        }
-        Ok(out)
-    }
+    /// Execute an artifact; returns all tuple outputs as flat f32 vectors.
+    /// Loads the artifact first if needed.
+    fn execute(&mut self, artifact: &str, inputs: &[TensorRef<'_>]) -> Result<Vec<Vec<f32>>>;
 
     /// Convenience: execute and return the single output.
-    pub fn execute1<T: AsTensorRef>(&mut self, name: &str, inputs: &[T]) -> Result<Vec<f32>> {
-        let mut outs = self.execute(name, inputs)?;
+    fn execute1(&mut self, artifact: &str, inputs: &[TensorRef<'_>]) -> Result<Vec<f32>> {
+        let mut outs = self.execute(artifact, inputs)?;
         if outs.len() != 1 {
-            bail!("artifact '{name}' returned {} outputs, expected 1", outs.len());
+            bail!("artifact '{artifact}' returned {} outputs, expected 1", outs.len());
         }
         Ok(outs.pop().unwrap())
+    }
+
+    /// Modeled end-to-end frame latency (seconds) at a kept-patch count,
+    /// for backends that simulate accelerator timing. `None` (the default)
+    /// means latency is whatever the host wall-clock measures.
+    fn modeled_frame_latency_s(&mut self, _kept_patches: usize, _use_mask: bool) -> Option<f64> {
+        None
+    }
+}
+
+/// Which backend to construct — the value behind `--backend pjrt|host|sim`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Pjrt,
+    Host,
+    Sim,
+}
+
+impl BackendKind {
+    pub const ALL: [BackendKind; 3] = [BackendKind::Pjrt, BackendKind::Host, BackendKind::Sim];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Host => "host",
+            BackendKind::Sim => "sim",
+        }
+    }
+}
+
+impl fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl FromStr for BackendKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<Self, String> {
+        match s {
+            "pjrt" => Ok(BackendKind::Pjrt),
+            "host" => Ok(BackendKind::Host),
+            "sim" => Ok(BackendKind::Sim),
+            other => Err(format!("unknown backend '{other}' (choices: pjrt|host|sim)")),
+        }
+    }
+}
+
+/// Constructs one backend instance per worker thread. The factory itself
+/// crosses threads (`Sync`); the backends it creates never do — each call
+/// happens *inside* the worker that will own the instance, which is what
+/// lets non-`Send` substrates like PJRT shard across cores.
+pub trait BackendFactory: Sync {
+    type Backend: Backend;
+
+    /// Build the backend for worker `worker`. Implementations must produce
+    /// numerically identical backends for every worker (sharding must not
+    /// change results), so `worker` is for diagnostics, not seeding.
+    fn create(&self, worker: usize) -> Result<Self::Backend>;
+}
+
+/// Factory for [`PjrtBackend`]s over one artifact directory.
+#[derive(Debug, Clone)]
+pub struct PjrtFactory {
+    pub artifact_dir: String,
+}
+
+impl PjrtFactory {
+    pub fn new(artifact_dir: impl Into<String>) -> Self {
+        PjrtFactory { artifact_dir: artifact_dir.into() }
+    }
+}
+
+impl BackendFactory for PjrtFactory {
+    type Backend = PjrtBackend;
+
+    fn create(&self, _worker: usize) -> Result<PjrtBackend> {
+        PjrtBackend::new(&self.artifact_dir)
+    }
+}
+
+/// Factory for [`HostBackend`]s sharing one [`HostConfig`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HostFactory(pub HostConfig);
+
+impl BackendFactory for HostFactory {
+    type Backend = HostBackend;
+
+    fn create(&self, _worker: usize) -> Result<HostBackend> {
+        Ok(HostBackend::new(self.0))
+    }
+}
+
+/// Factory for [`SimBackend`]s sharing one [`HostConfig`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimFactory(pub HostConfig);
+
+impl BackendFactory for SimFactory {
+    type Backend = SimBackend;
+
+    fn create(&self, _worker: usize) -> Result<SimBackend> {
+        Ok(SimBackend::new(self.0))
+    }
+}
+
+/// Statically-dispatched "any of the three" backend, for call sites that
+/// pick the substrate at runtime (CLI, examples, the scaling bench).
+pub enum AnyBackend {
+    Pjrt(PjrtBackend),
+    Host(HostBackend),
+    Sim(SimBackend),
+}
+
+impl Backend for AnyBackend {
+    fn name(&self) -> &'static str {
+        match self {
+            AnyBackend::Pjrt(b) => b.name(),
+            AnyBackend::Host(b) => b.name(),
+            AnyBackend::Sim(b) => b.name(),
+        }
+    }
+
+    fn needs_artifacts(&self) -> bool {
+        match self {
+            AnyBackend::Pjrt(b) => b.needs_artifacts(),
+            AnyBackend::Host(b) => b.needs_artifacts(),
+            AnyBackend::Sim(b) => b.needs_artifacts(),
+        }
+    }
+
+    fn load(&mut self, artifact: &str) -> Result<()> {
+        match self {
+            AnyBackend::Pjrt(b) => Backend::load(b, artifact),
+            AnyBackend::Host(b) => b.load(artifact),
+            AnyBackend::Sim(b) => b.load(artifact),
+        }
+    }
+
+    fn is_loaded(&self, artifact: &str) -> bool {
+        match self {
+            AnyBackend::Pjrt(b) => Backend::is_loaded(b, artifact),
+            AnyBackend::Host(b) => b.is_loaded(artifact),
+            AnyBackend::Sim(b) => b.is_loaded(artifact),
+        }
+    }
+
+    fn execute(&mut self, artifact: &str, inputs: &[TensorRef<'_>]) -> Result<Vec<Vec<f32>>> {
+        match self {
+            AnyBackend::Pjrt(b) => Backend::execute(b, artifact, inputs),
+            AnyBackend::Host(b) => b.execute(artifact, inputs),
+            AnyBackend::Sim(b) => b.execute(artifact, inputs),
+        }
+    }
+
+    fn modeled_frame_latency_s(&mut self, kept_patches: usize, use_mask: bool) -> Option<f64> {
+        match self {
+            AnyBackend::Pjrt(b) => b.modeled_frame_latency_s(kept_patches, use_mask),
+            AnyBackend::Host(b) => b.modeled_frame_latency_s(kept_patches, use_mask),
+            AnyBackend::Sim(b) => b.modeled_frame_latency_s(kept_patches, use_mask),
+        }
+    }
+}
+
+/// Factory for [`AnyBackend`], selected by [`BackendKind`] at runtime.
+#[derive(Debug, Clone)]
+pub struct AnyFactory {
+    pub kind: BackendKind,
+    /// Artifact directory (used by the `pjrt` kind only).
+    pub artifact_dir: String,
+    /// Host/sim reference-model configuration.
+    pub host: HostConfig,
+}
+
+impl AnyFactory {
+    pub fn new(kind: BackendKind, artifact_dir: impl Into<String>) -> Self {
+        AnyFactory { kind, artifact_dir: artifact_dir.into(), host: HostConfig::default() }
+    }
+}
+
+impl BackendFactory for AnyFactory {
+    type Backend = AnyBackend;
+
+    fn create(&self, _worker: usize) -> Result<AnyBackend> {
+        Ok(match self.kind {
+            BackendKind::Pjrt => AnyBackend::Pjrt(PjrtBackend::new(&self.artifact_dir)?),
+            BackendKind::Host => AnyBackend::Host(HostBackend::new(self.host)),
+            BackendKind::Sim => AnyBackend::Sim(SimBackend::new(self.host)),
+        })
     }
 }
 
@@ -194,13 +332,6 @@ mod tests {
     #[should_panic]
     fn tensor_dim_mismatch_panics() {
         Tensor::new(vec![1.0; 3], vec![2, 2]);
-    }
-
-    #[test]
-    fn missing_artifact_is_error() {
-        let mut rt = Runtime::new("/nonexistent-artifacts").unwrap();
-        let err = rt.execute::<Tensor>("nope", &[]).unwrap_err();
-        assert!(err.to_string().contains("make artifacts"), "{err}");
     }
 
     #[test]
@@ -224,14 +355,43 @@ mod tests {
     }
 
     #[test]
-    fn available_lists_hlo_files() {
-        let dir = std::env::temp_dir().join("optovit-rt-test");
-        let _ = std::fs::create_dir_all(&dir);
-        std::fs::write(dir.join("a.hlo.txt"), "x").unwrap();
-        std::fs::write(dir.join("b.hlo.txt"), "x").unwrap();
-        std::fs::write(dir.join("c.other"), "x").unwrap();
-        let rt = Runtime::new(&dir).unwrap();
-        assert_eq!(rt.available(), vec!["a".to_string(), "b".to_string()]);
-        let _ = std::fs::remove_dir_all(&dir);
+    fn backend_kind_roundtrip() {
+        for kind in BackendKind::ALL {
+            assert_eq!(kind.as_str().parse::<BackendKind>(), Ok(kind));
+            assert_eq!(kind.to_string(), kind.as_str());
+        }
+        let err = "tpu".parse::<BackendKind>().unwrap_err();
+        assert!(err.contains("pjrt|host|sim"), "{err}");
+    }
+
+    #[test]
+    fn any_factory_builds_the_requested_kind() {
+        let host = HostConfig { depth_limit: Some(1), ..HostConfig::default() };
+        for (kind, name) in
+            [(BackendKind::Pjrt, "pjrt"), (BackendKind::Host, "host"), (BackendKind::Sim, "sim")]
+        {
+            let f = AnyFactory { kind, artifact_dir: "/nonexistent".into(), host };
+            let b = f.create(0).expect("factory");
+            assert_eq!(b.name(), name);
+            assert_eq!(b.needs_artifacts(), kind == BackendKind::Pjrt);
+        }
+    }
+
+    #[test]
+    fn any_backend_dispatches_to_host() {
+        const PD: usize = 16 * 16 * 3;
+        let host = HostConfig { depth_limit: Some(1), ..HostConfig::default() };
+        let mut b = HostFactory(host).create(0).expect("host factory");
+        let x: Vec<f32> = (0..4 * PD).map(|i| (i % 7) as f32 / 7.0).collect();
+        let dims = [4i64, PD as i64];
+        let scores = b.execute1("mgnet_32", &[TensorRef::new(&x, &dims)]).expect("exec");
+        assert_eq!(scores.len(), 4);
+        assert!(b.is_loaded("mgnet_32"));
+        // The same call through `AnyBackend` gives identical numerics.
+        let mut any = AnyFactory { kind: BackendKind::Host, artifact_dir: String::new(), host }
+            .create(0)
+            .expect("any factory");
+        let scores_any = any.execute1("mgnet_32", &[TensorRef::new(&x, &dims)]).expect("exec");
+        assert_eq!(scores, scores_any);
     }
 }

@@ -1,0 +1,183 @@
+//! PJRT execution backend: loads the AOT-compiled HLO-text artifacts
+//! produced by `python/compile/aot.py` and executes them on the CPU PJRT
+//! client.
+//!
+//! Interchange format is **HLO text**, not serialized `HloModuleProto` —
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see
+//! `/opt/xla-example/README.md`).
+//!
+//! `PjRtClient` is `Rc`-backed (not `Send`): a [`PjrtBackend`] must be
+//! created and used on a single thread. The coordinator constructs one
+//! inside each worker thread (see [`crate::coordinator::engine`]).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::{AsTensorRef, Backend, TensorRef};
+
+/// PJRT-backed executor over a directory of `*.hlo.txt` artifacts — the
+/// production implementation of [`Backend`].
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtBackend {
+    /// Create a CPU-PJRT backend rooted at `artifact_dir`.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtBackend {
+            client,
+            artifact_dir: artifact_dir.as_ref().to_path_buf(),
+            executables: HashMap::new(),
+        })
+    }
+
+    /// Artifact names available on disk (file stems of `*.hlo.txt`).
+    pub fn available(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(&self.artifact_dir) {
+            for e in rd.flatten() {
+                let p = e.path();
+                if let Some(name) = p.file_name().and_then(|s| s.to_str()) {
+                    if let Some(stem) = name.strip_suffix(".hlo.txt") {
+                        names.push(stem.to_string());
+                    }
+                }
+            }
+        }
+        names.sort();
+        names
+    }
+
+    /// Load + compile an artifact (cached). Compilation happens once per
+    /// name per process — never on the steady-state request path.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            bail!(
+                "artifact '{}' not found at {} — run `make artifacts` first",
+                name,
+                path.display()
+            );
+        }
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe =
+            self.client.compile(&comp).with_context(|| format!("compiling artifact '{name}'"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Execute artifact `name` with the given inputs (owned [`super::Tensor`]s
+    /// or borrowed [`TensorRef`]s); returns all tuple outputs as flat f32
+    /// vectors (artifacts are lowered with `return_tuple=True`).
+    pub fn execute<T: AsTensorRef>(&mut self, name: &str, inputs: &[T]) -> Result<Vec<Vec<f32>>> {
+        self.load(name)?;
+        let exe = self.executables.get(name).expect("just loaded");
+        let mut literals = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            let t = t.tensor_ref();
+            let lit = xla::Literal::vec1(t.data);
+            let lit = if t.dims.is_empty() {
+                lit
+            } else {
+                lit.reshape(t.dims)
+                    .with_context(|| format!("reshaping input to {:?}", t.dims))?
+            };
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing artifact '{name}'"))?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple().context("artifact output is not a tuple")?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>().context("non-f32 artifact output")?);
+        }
+        Ok(out)
+    }
+
+    /// Convenience: execute and return the single output.
+    pub fn execute1<T: AsTensorRef>(&mut self, name: &str, inputs: &[T]) -> Result<Vec<f32>> {
+        let mut outs = self.execute(name, inputs)?;
+        if outs.len() != 1 {
+            bail!("artifact '{name}' returned {} outputs, expected 1", outs.len());
+        }
+        Ok(outs.pop().unwrap())
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn needs_artifacts(&self) -> bool {
+        true
+    }
+
+    fn load(&mut self, artifact: &str) -> Result<()> {
+        PjrtBackend::load(self, artifact)
+    }
+
+    fn is_loaded(&self, artifact: &str) -> bool {
+        PjrtBackend::is_loaded(self, artifact)
+    }
+
+    fn execute(&mut self, artifact: &str, inputs: &[TensorRef<'_>]) -> Result<Vec<Vec<f32>>> {
+        // Resolves to the inherent generic `execute` (inherent methods take
+        // precedence over trait methods), instantiated at `T = TensorRef`.
+        PjrtBackend::execute(self, artifact, inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Tensor;
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let mut rt = PjrtBackend::new("/nonexistent-artifacts").unwrap();
+        let err = rt.execute::<Tensor>("nope", &[]).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn available_lists_hlo_files() {
+        let dir = std::env::temp_dir().join("optovit-rt-test");
+        let _ = std::fs::create_dir_all(&dir);
+        std::fs::write(dir.join("a.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("b.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("c.other"), "x").unwrap();
+        let rt = PjrtBackend::new(&dir).unwrap();
+        assert_eq!(rt.available(), vec!["a".to_string(), "b".to_string()]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn trait_object_surface_matches_inherent() {
+        let mut rt = PjrtBackend::new("/nonexistent-artifacts").unwrap();
+        let b: &mut dyn Backend = &mut rt;
+        assert_eq!(b.name(), "pjrt");
+        assert!(b.needs_artifacts());
+        assert!(!b.is_loaded("nope"));
+        assert!(b.load("nope").is_err());
+        // Latency is measured, not modeled, on the real substrate.
+        assert_eq!(b.modeled_frame_latency_s(10, true), None);
+    }
+}

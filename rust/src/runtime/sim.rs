@@ -1,0 +1,178 @@
+//! Analytic photonic-simulation backend: [`HostBackend`] numerics, with
+//! per-frame latency charged from the accelerator architecture model
+//! instead of host wall-clock.
+//!
+//! This is the execution substrate the paper's evaluation actually reports:
+//! the Fig. 9/11 delay model ([`crate::arch`] schedule + component
+//! constants) decides how long a frame takes on the five-core photonic
+//! accelerator, while the host merely computes the reference numerics. A
+//! `--backend sim` serving run therefore produces a `ServeReport` whose
+//! latency column is photonic-core time (energy was always modeled, for
+//! every backend), making near-sensor operating points comparable across
+//! machines regardless of host speed.
+//!
+//! Modeled latencies are cached per kept-patch count: the delay schedule is
+//! orders of magnitude more expensive than the energy model (see
+//! `AcceleratorModel::frame_energy`), so it must never run per frame.
+
+use anyhow::Result;
+
+use super::host::{ArtifactSpec, HostBackend, HostConfig};
+use super::{Backend, TensorRef};
+use crate::energy::AcceleratorModel;
+use crate::vit::{MgnetConfig, VitConfig};
+
+/// [`Backend`] that wraps [`HostBackend`] for execution and overlays
+/// modeled photonic frame latency.
+#[derive(Debug)]
+pub struct SimBackend {
+    inner: HostBackend,
+    model: AcceleratorModel,
+    /// Backbone/MGNet configs, captured from the artifact names at load
+    /// time (the first loaded backbone defines the operating point).
+    backbone: Option<VitConfig>,
+    mgnet: Option<MgnetConfig>,
+    /// Modeled masked-path latency by kept-patch count (index = kept).
+    masked_latency_s: Vec<Option<f64>>,
+    /// Modeled unmasked full-grid latency.
+    full_latency_s: Option<f64>,
+}
+
+impl SimBackend {
+    pub fn new(host: HostConfig) -> Self {
+        Self::with_model(host, AcceleratorModel::default())
+    }
+
+    pub fn with_model(host: HostConfig, model: AcceleratorModel) -> Self {
+        SimBackend {
+            inner: HostBackend::new(host),
+            model,
+            backbone: None,
+            mgnet: None,
+            masked_latency_s: Vec::new(),
+            full_latency_s: None,
+        }
+    }
+
+    /// The architecture model charging the latency.
+    pub fn model(&self) -> &AcceleratorModel {
+        &self.model
+    }
+}
+
+impl Backend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn needs_artifacts(&self) -> bool {
+        false
+    }
+
+    fn load(&mut self, artifact: &str) -> Result<()> {
+        self.inner.load(artifact)?;
+        match super::host::parse_artifact(artifact)? {
+            ArtifactSpec::Mgnet { image_size } => {
+                self.mgnet.get_or_insert(MgnetConfig::classification(image_size));
+            }
+            ArtifactSpec::Backbone { variant, image_size, .. } => {
+                let classes = self.inner.config().num_classes;
+                self.backbone.get_or_insert(VitConfig::variant(variant, image_size, classes));
+            }
+        }
+        Ok(())
+    }
+
+    fn is_loaded(&self, artifact: &str) -> bool {
+        self.inner.is_loaded(artifact)
+    }
+
+    fn execute(&mut self, artifact: &str, inputs: &[TensorRef<'_>]) -> Result<Vec<Vec<f32>>> {
+        if !self.inner.is_loaded(artifact) {
+            // Route implicit loads through `Self::load` so the config
+            // capture above cannot be bypassed.
+            self.load(artifact)?;
+        }
+        self.inner.execute(artifact, inputs)
+    }
+
+    fn modeled_frame_latency_s(&mut self, kept_patches: usize, use_mask: bool) -> Option<f64> {
+        let vit = self.backbone?;
+        if !use_mask {
+            if self.full_latency_s.is_none() {
+                let r = self.model.frame_report("sim", &vit, vit.num_patches(), true);
+                self.full_latency_s = Some(r.delay.total_s());
+            }
+            return self.full_latency_s;
+        }
+        let mg = self.mgnet?;
+        let kept = kept_patches.clamp(1, vit.num_patches());
+        if self.masked_latency_s.len() <= kept {
+            self.masked_latency_s.resize(kept + 1, None);
+        }
+        if self.masked_latency_s[kept].is_none() {
+            let r = self.model.masked_report("sim", &vit, &mg, kept);
+            self.masked_latency_s[kept] = Some(r.delay.total_s());
+        }
+        self.masked_latency_s[kept]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim() -> SimBackend {
+        SimBackend::new(HostConfig { depth_limit: Some(1), ..HostConfig::default() })
+    }
+
+    #[test]
+    fn no_latency_before_any_backbone_loads() {
+        let mut s = sim();
+        assert_eq!(s.modeled_frame_latency_s(4, true), None);
+        assert_eq!(s.name(), "sim");
+        assert!(!s.needs_artifacts());
+    }
+
+    #[test]
+    fn modeled_latency_matches_architecture_model() {
+        let mut s = sim();
+        s.load("mgnet_32").unwrap();
+        s.load("vit_tiny_32_n4").unwrap();
+        let vit = VitConfig::variant(crate::vit::VitVariant::Tiny, 32, 10);
+        let mg = MgnetConfig::classification(32);
+        let model = AcceleratorModel::default();
+        let masked = s.modeled_frame_latency_s(2, true).expect("masked latency");
+        assert_eq!(masked, model.masked_report("x", &vit, &mg, 2).delay.total_s());
+        // Cached second query returns the identical value.
+        assert_eq!(s.modeled_frame_latency_s(2, true), Some(masked));
+        let full = s.modeled_frame_latency_s(4, false).expect("full latency");
+        assert_eq!(full, model.frame_report("x", &vit, vit.num_patches(), true).delay.total_s());
+        assert!(masked > 0.0 && full > 0.0);
+    }
+
+    #[test]
+    fn latency_grows_with_kept_patches() {
+        let mut s = sim();
+        s.load("mgnet_32").unwrap();
+        s.load("vit_tiny_32_n4").unwrap();
+        let l1 = s.modeled_frame_latency_s(1, true).unwrap();
+        let l4 = s.modeled_frame_latency_s(4, true).unwrap();
+        assert!(l4 > l1, "more kept patches must model more latency ({l1} !< {l4})");
+        // Out-of-range kept counts clamp instead of panicking.
+        assert_eq!(s.modeled_frame_latency_s(0, true), Some(l1));
+        assert_eq!(s.modeled_frame_latency_s(99, true), Some(l4));
+    }
+
+    #[test]
+    fn execution_delegates_to_host_numerics() {
+        const PD: usize = 16 * 16 * 3;
+        let x: Vec<f32> = (0..4 * PD).map(|i| (i % 13) as f32 / 13.0).collect();
+        let dims = [4i64, PD as i64];
+        let mut s = sim();
+        let mut h = HostBackend::new(HostConfig { depth_limit: Some(1), ..HostConfig::default() });
+        let scores_sim = s.execute1("mgnet_32", &[TensorRef::new(&x, &dims)]).unwrap();
+        let scores_host = h.execute1("mgnet_32", &[TensorRef::new(&x, &dims)]).unwrap();
+        assert_eq!(scores_sim, scores_host, "sim must reuse the host reference numerics");
+    }
+}

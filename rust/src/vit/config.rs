@@ -24,6 +24,18 @@ impl VitVariant {
             VitVariant::Large => "Large",
         }
     }
+
+    /// Inverse of `name()` (case-insensitive) — used to parse the variant
+    /// segment of artifact names like `vit_tiny_96_n36`.
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "tiny" => Some(VitVariant::Tiny),
+            "small" => Some(VitVariant::Small),
+            "base" => Some(VitVariant::Base),
+            "large" => Some(VitVariant::Large),
+            _ => None,
+        }
+    }
 }
 
 impl fmt::Display for VitVariant {
@@ -187,6 +199,15 @@ impl MgnetConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn variant_name_roundtrip() {
+        for v in VitVariant::ALL {
+            assert_eq!(VitVariant::from_name(&v.name().to_lowercase()), Some(v));
+            assert_eq!(VitVariant::from_name(v.name()), Some(v));
+        }
+        assert_eq!(VitVariant::from_name("giant"), None);
+    }
 
     #[test]
     fn head_dim_is_64_for_all_variants() {

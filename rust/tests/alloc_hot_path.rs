@@ -1,10 +1,11 @@
 //! Asserts the acceptance criterion of the zero-allocation frame hot path:
-//! steady-state frames perform **zero heap allocations before the PJRT
+//! steady-state frames perform **zero heap allocations before each backend
 //! call**. The counted region is exactly the host-side work
 //! `Pipeline::process_frame` does between receiving a frame and handing
-//! `TensorRef` views to the runtime — patchify, score adoption +
+//! `TensorRef` views to the execution backend — patchify, score adoption +
 //! mask thresholding, and bucket routing/staging — all through the shared
-//! `FrameScratch` code the pipeline itself uses.
+//! `FrameScratch` code the pipeline itself uses. (The full-frame bound
+//! over a live backend is asserted in `host_backend.rs`.)
 //!
 //! This binary installs the counting allocator process-wide and holds a
 //! single test, so the counter sees only the hot path.

@@ -106,6 +106,7 @@ fn merged_metrics_equal_sum_of_workers() {
     )
     .expect("sharded run");
     assert_eq!(report.frames, 80);
+    assert_eq!(report.backend, "custom", "mock workers carry the default backend name");
     assert_eq!(report.per_worker.len(), 4);
     // Every processed frame is accounted to exactly one worker, and the
     // merged metrics carry the union of all per-worker samples.

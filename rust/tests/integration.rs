@@ -8,7 +8,7 @@
 //! the full pipeline.
 
 use optovit::coordinator::pipeline::{serve, Pipeline, PipelineConfig};
-use optovit::runtime::{Runtime, Tensor};
+use optovit::runtime::{PjrtBackend, Tensor};
 use optovit::sensor::VideoSource;
 
 fn artifact_dir() -> Option<String> {
@@ -28,7 +28,7 @@ fn runtime_and_pipeline_end_to_end() {
     };
 
     // --- runtime level: raw artifact execution ---
-    let mut rt = Runtime::new(&dir).expect("runtime");
+    let mut rt = PjrtBackend::new(&dir).expect("runtime");
     let names = rt.available();
     assert!(names.contains(&"mgnet_96".to_string()), "{names:?}");
     assert!(names.contains(&"vit_tiny_96_n36".to_string()), "{names:?}");
@@ -50,9 +50,11 @@ fn runtime_and_pipeline_end_to_end() {
         buckets: vec![9, 36], // subset: keeps compile time bounded
         ..PipelineConfig::tiny_96()
     };
-    let mut pipeline = Pipeline::new(cfg, &dir).expect("pipeline");
+    let mut pipeline =
+        Pipeline::with_backend(cfg, PjrtBackend::new(&dir).expect("backend")).expect("pipeline");
     let report = serve(&mut pipeline, 7, 2, 12, 4).expect("serve");
     assert_eq!(report.frames, 12);
+    assert_eq!(report.backend, "pjrt");
     assert!(report.mean_latency_s > 0.0);
     assert!(report.mean_kept_patches >= 1.0);
     assert!(report.mean_energy_j > 0.0);
@@ -62,7 +64,8 @@ fn runtime_and_pipeline_end_to_end() {
     // Masked serving must model less energy than unmasked.
     let mut cfg_full = PipelineConfig { buckets: vec![9, 36], ..PipelineConfig::tiny_96() };
     cfg_full.use_mask = false;
-    let mut full = Pipeline::new(cfg_full, &dir).expect("pipeline full");
+    let mut full = Pipeline::with_backend(cfg_full, PjrtBackend::new(&dir).expect("backend"))
+        .expect("pipeline full");
     let f = full.next_frame_report();
     assert!(report.mean_energy_j < f, "masked {} !< full {}", report.mean_energy_j, f);
 
@@ -80,7 +83,7 @@ trait FullEnergy {
     fn next_frame_report(&mut self) -> f64;
 }
 
-impl FullEnergy for Pipeline {
+impl FullEnergy for Pipeline<PjrtBackend> {
     fn next_frame_report(&mut self) -> f64 {
         let mut sensor = VideoSource::new(96, 2, 99);
         let frame = sensor.next_frame();
