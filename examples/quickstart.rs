@@ -40,5 +40,21 @@ fn main() -> anyhow::Result<()> {
     println!("  host latency      {}", si_time(result.latency_s));
     println!("  modeled energy    {}/frame on the photonic core", si_energy(result.modeled_energy_j));
     println!("  modeled KFPS/W    {:.1}", 1.0 / result.modeled_energy_j / 1000.0);
+
+    // 4. Batch-first execution: a slice of frames goes through the same
+    //    pipeline bucket-major — frames sharing a bucket ride one
+    //    `Backend::execute_batch` dispatch, and followers amortize the
+    //    modeled weight-programming energy.
+    let frames: Vec<_> = (0..4).map(|_| sensor.next_frame()).collect();
+    let batch = pipeline.process_batch(&frames)?;
+    println!("\nmicro-batch of {} frames:", batch.len());
+    for r in &batch {
+        println!(
+            "  frame {}: bucket {:>2}, {}/frame modeled",
+            r.frame_index,
+            r.bucket,
+            si_energy(r.modeled_energy_j)
+        );
+    }
     Ok(())
 }

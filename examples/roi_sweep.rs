@@ -8,7 +8,7 @@
 //! cargo run --release --example roi_sweep -- [frames] [pjrt|host|sim]
 //! ```
 
-use optovit::coordinator::pipeline::{serve, Pipeline, PipelineConfig};
+use optovit::coordinator::pipeline::{serve, Pipeline, PipelineConfig, ServeOptions};
 use optovit::runtime::{AnyFactory, BackendFactory, BackendKind};
 use optovit::util::table::{si_energy, Table};
 
@@ -32,7 +32,9 @@ fn main() -> anyhow::Result<()> {
         let mut cfg = PipelineConfig::tiny_96();
         cfg.region_threshold = thr;
         let mut pipeline = Pipeline::with_backend(cfg, factory.create(0)?)?;
-        let r = serve(&mut pipeline, 1234, 2, frames, 4)?;
+        let opts = ServeOptions { sensor_seed: 1234, ..ServeOptions::frames(frames) };
+        // Drain the result stream into its terminal report.
+        let r = serve(&mut pipeline, &opts)?.finish()?;
         t.row(vec![
             format!("{thr:.1}"),
             format!("{:.1}", r.mean_kept_patches),

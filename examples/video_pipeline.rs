@@ -8,15 +8,20 @@
 //! The fourth argument picks the execution backend:
 //! `pjrt` (default) runs the compiled HLO artifacts, `host` runs the
 //! pure-Rust reference compute with no artifacts at all, and `sim` adds
-//! modeled photonic-core latency on top of the host numerics.
+//! modeled photonic-core latency on top of the host numerics. The fifth
+//! argument sets the bucket-major micro-batch size (frames per
+//! `execute_batch` dispatch; 1 = per-frame).
 //!
 //! ```bash
 //! make artifacts   # only needed for the pjrt backend
-//! cargo run --release --example video_pipeline -- [frames] [seed] [workers] [pjrt|host|sim]
+//! cargo run --release --example video_pipeline -- [frames] [seed] [workers] [pjrt|host|sim] [batch]
 //! ```
 
+use std::time::Duration;
+
+use optovit::coordinator::batcher::BatchPolicy;
 use optovit::coordinator::engine::serve_sharded;
-use optovit::coordinator::pipeline::{serve, Pipeline, PipelineConfig};
+use optovit::coordinator::pipeline::{serve, Pipeline, PipelineConfig, ServeOptions};
 use optovit::runtime::{AnyFactory, BackendFactory, BackendKind};
 use optovit::util::table::{si_energy, si_time, Table};
 
@@ -31,25 +36,35 @@ fn main() -> anyhow::Result<()> {
         .transpose()
         .map_err(anyhow::Error::msg)?
         .unwrap_or(BackendKind::Pjrt);
+    let batch: usize = args.get(5).and_then(|s| s.parse().ok()).unwrap_or(1).max(1);
     let mut factory = AnyFactory::new(kind, "artifacts");
     factory.host.num_classes = PipelineConfig::tiny_96().num_classes;
+    let opts = ServeOptions {
+        sensor_seed: seed,
+        batch: BatchPolicy::batched(batch, Duration::from_micros(500)),
+        ..ServeOptions::frames(frames)
+    };
 
     let mut rows = Vec::new();
     for use_mask in [true, false] {
         let mut cfg = PipelineConfig::tiny_96();
         cfg.use_mask = use_mask;
         let label = if use_mask { "MGNet + RoI mask" } else { "no mask (all patches)" };
-        println!("== serving {frames} frames ({workers} worker(s), {kind} backend): {label} ==");
+        println!(
+            "== serving {frames} frames ({workers} worker(s), {kind} backend, batch {batch}): {label} =="
+        );
         let (report, metrics) = if workers > 1 {
-            serve_sharded(&cfg, &factory, workers, 4, seed, 2, frames)?
+            serve_sharded(&cfg, &factory, workers, &opts)?
         } else {
             let mut pipeline = Pipeline::with_backend(cfg, factory.create(0)?)?;
-            let report = serve(&mut pipeline, seed, 2, frames, 4)?;
+            // `serve` streams results; drain the iterator into the report.
+            let report = serve(&mut pipeline, &opts)?.finish()?;
             let metrics = std::mem::take(&mut pipeline.metrics);
             (report, metrics)
         };
         println!("  backend           {}", report.backend);
         println!("  wall throughput   {:.1} fps", report.wall_fps);
+        println!("  mean micro-batch  {:.2} frames/dispatch", report.mean_batch);
         println!(
             "  mean latency      {}{}",
             si_time(report.mean_latency_s),

@@ -1,14 +1,15 @@
-//! Worker-scaling bench for the sharded serving engine.
+//! Worker- and batch-scaling bench for the sharded serving engine.
 //!
-//! Sweeps `--workers 1,2,4` (default) through `coordinator::engine`, and
-//! emits a machine-readable `BENCH_serve.json` (wall-FPS, mean latency,
-//! allocations/frame from the counting allocator, modeled energy/frame,
-//! and speedup vs. 1 worker) so the perf trajectory is trackable across
-//! PRs.
+//! Sweeps `--workers 1,2,4` × `--batch 1` (defaults) through
+//! `coordinator::engine`, and emits a machine-readable `BENCH_serve.json`
+//! (wall-FPS, mean latency, allocations/frame from the counting allocator,
+//! modeled energy/frame, micro-batch size, and speedup vs. the
+//! 1-worker/batch-1 point) so the perf trajectory is trackable across PRs.
 //!
 //! ```bash
 //! cargo bench --bench serve_scaling -- \
-//!     [--workers 1,2,4] [--frames 240] [--backend auto|pjrt|host] \
+//!     [--workers 1,2,4] [--batch 1,4,8] [--batch-wait-us 500] \
+//!     [--frames 240] [--backend auto|pjrt|host] \
 //!     [--host-depth N] [--out BENCH_serve.json] [--artifacts artifacts]
 //! ```
 //!
@@ -19,12 +20,16 @@
 //! (default) drives real PJRT pipelines when compiled artifacts are
 //! present and the pure-Rust `HostBackend` otherwise, so the host-side
 //! scaling behaviour is measurable on any machine; the JSON records which
-//! backend produced the numbers.
+//! backend produced the numbers. `--batch B` sets the per-worker
+//! bucket-major micro-batch size (frames per `Backend::execute_batch`
+//! dispatch); each JSON row records the requested size and the observed
+//! frame-weighted mean.
 
 use anyhow::Result;
 use optovit::cli::Args;
+use optovit::coordinator::batcher::BatchPolicy;
 use optovit::coordinator::engine::serve_sharded;
-use optovit::coordinator::pipeline::{PipelineConfig, ServeReport};
+use optovit::coordinator::pipeline::{PipelineConfig, ServeOptions, ServeReport};
 use optovit::runtime::{AnyFactory, BackendKind, HostConfig};
 use optovit::util::bench::{alloc_count, CountingAlloc};
 use optovit::util::table::{si_energy, si_time, Table};
@@ -34,16 +39,17 @@ static ALLOC: CountingAlloc = CountingAlloc;
 
 struct Row {
     workers: usize,
+    batch: usize,
     report: ServeReport,
     allocs_per_frame: f64,
 }
 
-/// The `speedup_vs_1` denominator: the 1-worker row wherever it appears in
-/// the sweep, falling back to the first row only when no 1-worker point
-/// was requested.
+/// The `speedup_vs_1` denominator: the 1-worker/batch-1 row wherever it
+/// appears in the sweep, falling back to the first row only when no such
+/// point was requested.
 fn baseline_fps(rows: &[Row]) -> f64 {
     rows.iter()
-        .find(|r| r.workers == 1)
+        .find(|r| r.workers == 1 && r.batch == 1)
         .or_else(|| rows.first())
         .map(|r| r.report.wall_fps)
         .unwrap_or(0.0)
@@ -60,10 +66,13 @@ fn fmt_json(frames: u64, backend: &str, rows: &[Row]) -> String {
     for (i, r) in rows.iter().enumerate() {
         let speedup = if base_fps > 0.0 { r.report.wall_fps / base_fps } else { 0.0 };
         out.push_str(&format!(
-            "    {{\"workers\": {}, \"wall_fps\": {:.3}, \"mean_latency_s\": {:.6e}, \
+            "    {{\"workers\": {}, \"batch\": {}, \"mean_batch\": {:.2}, \
+             \"wall_fps\": {:.3}, \"mean_latency_s\": {:.6e}, \
              \"mean_energy_j\": {:.6e}, \"allocs_per_frame\": {:.1}, \"dropped\": {}, \
              \"speedup_vs_1\": {:.3}}}{}\n",
             r.workers,
+            r.batch,
+            r.report.mean_batch,
             r.report.wall_fps,
             r.report.mean_latency_s,
             r.report.mean_energy_j,
@@ -80,6 +89,8 @@ fn fmt_json(frames: u64, backend: &str, rows: &[Row]) -> String {
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
     let worker_counts = args.get_usize_list("workers", &[1, 2, 4]).map_err(anyhow::Error::msg)?;
+    let batch_sizes = args.get_usize_list("batch", &[1]).map_err(anyhow::Error::msg)?;
+    let batch_wait = args.get_duration_us("batch-wait-us", 500).map_err(anyhow::Error::msg)?;
     let frames = args.get_u64("frames", 240).map_err(anyhow::Error::msg)?;
     let out_path = args.get_or("out", "BENCH_serve.json").to_string();
     let artifact_dir = args.get_or("artifacts", "artifacts").to_string();
@@ -111,51 +122,67 @@ fn main() -> Result<()> {
         ..HostConfig::default()
     };
     println!(
-        "== serve_scaling: {frames} frames/point, workers {worker_counts:?}, backend {kind} ==\n"
+        "== serve_scaling: {frames} frames/point, workers {worker_counts:?}, \
+         batch {batch_sizes:?}, backend {kind} ==\n"
     );
+
+    let opts_for = |b: usize, n: u64| ServeOptions {
+        sensor_seed: seed,
+        batch: BatchPolicy::batched(b, batch_wait),
+        ..ServeOptions::frames(n)
+    };
 
     let mut rows = Vec::new();
     for &w in &worker_counts {
-        // Backend construction + warmup allocate (per worker, per run), so
-        // a single-run count would inflate allocs/frame and scale with
-        // --workers. Two runs at different frame counts cancel the fixed
-        // setup cost in the difference, leaving the per-frame slope.
-        let calib_frames = frames / 4;
-        let a0 = alloc_count();
-        let calib = if calib_frames >= 8 && calib_frames < frames {
-            Some(serve_sharded(&cfg, &factory, w, 4, seed, 2, calib_frames)?.0)
-        } else {
-            None
-        };
-        let a1 = alloc_count();
-        let (report, _metrics) = serve_sharded(&cfg, &factory, w, 4, seed, 2, frames)?;
-        let a2 = alloc_count();
-        let allocs_per_frame = match &calib {
-            Some(c) if report.frames > c.frames => {
-                let slope = (a2 - a1) as f64 - (a1 - a0) as f64;
-                (slope / (report.frames - c.frames) as f64).max(0.0)
-            }
-            // Short sweeps fall back to the raw per-run count (includes
-            // the fixed setup cost — fine for a smoke run).
-            _ if report.frames > 0 => (a2 - a1) as f64 / report.frames as f64,
-            _ => 0.0,
-        };
-        println!(
-            "workers {w}: {:.1} fps, {} mean latency, {:.0} allocs/frame, {} dropped",
-            report.wall_fps,
-            si_time(report.mean_latency_s),
-            allocs_per_frame,
-            report.dropped
-        );
-        rows.push(Row { workers: w, report, allocs_per_frame });
+        for &b in &batch_sizes {
+            // Backend construction + warmup allocate (per worker, per
+            // run), so a single-run count would inflate allocs/frame and
+            // scale with --workers. Two runs at different frame counts
+            // cancel the fixed setup cost in the difference, leaving the
+            // per-frame slope.
+            let calib_frames = frames / 4;
+            let a0 = alloc_count();
+            let calib = if calib_frames >= 8 && calib_frames < frames {
+                Some(serve_sharded(&cfg, &factory, w, &opts_for(b, calib_frames))?.0)
+            } else {
+                None
+            };
+            let a1 = alloc_count();
+            let (report, _metrics) = serve_sharded(&cfg, &factory, w, &opts_for(b, frames))?;
+            let a2 = alloc_count();
+            let allocs_per_frame = match &calib {
+                Some(c) if report.frames > c.frames => {
+                    let slope = (a2 - a1) as f64 - (a1 - a0) as f64;
+                    (slope / (report.frames - c.frames) as f64).max(0.0)
+                }
+                // Short sweeps fall back to the raw per-run count
+                // (includes the fixed setup cost — fine for a smoke run).
+                _ if report.frames > 0 => (a2 - a1) as f64 / report.frames as f64,
+                _ => 0.0,
+            };
+            println!(
+                "workers {w}, batch {b}: {:.1} fps, {} mean latency, mean batch {:.2}, \
+                 {:.0} allocs/frame, {} dropped",
+                report.wall_fps,
+                si_time(report.mean_latency_s),
+                report.mean_batch,
+                allocs_per_frame,
+                report.dropped
+            );
+            rows.push(Row { workers: w, batch: b, report, allocs_per_frame });
+        }
     }
 
     println!("\n== scaling summary ==");
     let base = baseline_fps(&rows);
-    let mut t = Table::new(vec!["workers", "wall fps", "speedup", "mean latency", "energy/frame"]);
+    let mut t = Table::new(vec![
+        "workers", "batch", "mean batch", "wall fps", "speedup", "mean latency", "energy/frame",
+    ]);
     for r in &rows {
         t.row(vec![
             r.workers.to_string(),
+            r.batch.to_string(),
+            format!("{:.2}", r.report.mean_batch),
             format!("{:.1}", r.report.wall_fps),
             format!("{:.2}x", if base > 0.0 { r.report.wall_fps / base } else { 0.0 }),
             si_time(r.report.mean_latency_s),

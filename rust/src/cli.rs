@@ -83,6 +83,15 @@ impl Args {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
 
+    /// Microsecond option as a `Duration`, e.g. `--batch-wait-us 500`.
+    pub fn get_duration_us(
+        &self,
+        key: &str,
+        default_us: u64,
+    ) -> Result<std::time::Duration, String> {
+        Ok(std::time::Duration::from_micros(self.get_u64(key, default_us)?))
+    }
+
     /// Constrained string option: the value (or `default` when absent)
     /// must be one of `allowed`, e.g. `--backend pjrt|host|sim`.
     pub fn get_choice(
@@ -155,6 +164,20 @@ mod tests {
     fn bad_number_is_error() {
         let a = parse(&["run", "--n", "abc"]);
         assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn duration_us_parses_and_defaults() {
+        let a = parse(&["serve", "--batch-wait-us", "250"]);
+        assert_eq!(
+            a.get_duration_us("batch-wait-us", 500).unwrap(),
+            std::time::Duration::from_micros(250)
+        );
+        assert_eq!(
+            a.get_duration_us("absent", 500).unwrap(),
+            std::time::Duration::from_micros(500)
+        );
+        assert!(parse(&["serve", "--batch-wait-us", "x"]).get_duration_us("batch-wait-us", 0).is_err());
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Frame queueing and bucket routing.
+//! Frame queueing, bucket routing, and bucket-major micro-batching.
 //!
 //! RoI masking makes the backbone's sequence length data-dependent, but HLO
 //! artifacts are fixed-shape. The coordinator therefore compiles the
@@ -6,11 +6,18 @@
 //! the smallest bucket that fits, padding the remainder with zeroed,
 //! validity-masked patch slots. This is the same shape-bucketing strategy
 //! production LLM routers use for dynamic sequence lengths.
+//!
+//! The [`MicroBatcher`] completes that strategy on the execution side: a
+//! fixed-shape bucket artifact only amortizes its dispatch overhead when it
+//! runs over several frames per call, so routed frames accumulate in
+//! per-bucket *lanes* and flush as one `Backend::execute_batch` group when
+//! a lane fills (`max_batch`) or its oldest frame has waited `max_wait`
+//! (the deadline that bounds tail latency under light load).
 
 use crate::sensor::{Frame, VideoSource};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Routes a kept-patch count to a compiled bucket size.
 #[derive(Debug, Clone)]
@@ -62,13 +69,164 @@ impl BucketRouter {
     }
 }
 
+/// Micro-batching policy: when does a bucket lane flush?
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchPolicy {
+    /// Flush a lane as soon as it holds this many frames (>= 1).
+    pub max_batch: usize,
+    /// Flush a non-empty lane once its **oldest** frame has waited this
+    /// long — bounds per-frame latency when the lane fills slowly.
+    pub max_wait: Duration,
+}
+
+impl BatchPolicy {
+    /// The degenerate policy: every frame is its own batch (exactly the
+    /// pre-batching serving behaviour).
+    pub fn per_frame() -> Self {
+        BatchPolicy { max_batch: 1, max_wait: Duration::ZERO }
+    }
+
+    /// Batch up to `max_batch` frames, waiting at most `max_wait` for a
+    /// lane to fill.
+    pub fn batched(max_batch: usize, max_wait: Duration) -> Self {
+        BatchPolicy { max_batch: max_batch.max(1), max_wait }
+    }
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self::per_frame()
+    }
+}
+
+/// One per-bucket accumulation lane.
+#[derive(Debug)]
+struct Lane<T> {
+    bucket: usize,
+    items: Vec<T>,
+    /// When the oldest resident item arrived (`None` = empty lane).
+    since: Option<Instant>,
+}
+
+/// Bucket-major micro-batcher: accumulates routed frames per bucket and
+/// hands back `(bucket, group)` flushes under a
+/// `max_batch`/`max_wait` deadline policy ([`BatchPolicy`]).
+///
+/// The batcher is deliberately clock-free: callers pass `now` into
+/// [`MicroBatcher::push`]/[`MicroBatcher::poll`], which keeps the deadline
+/// logic deterministic under test and lets the serving loop reuse one
+/// `Instant` per iteration.
+#[derive(Debug)]
+pub struct MicroBatcher<T> {
+    policy: BatchPolicy,
+    lanes: Vec<Lane<T>>,
+}
+
+impl<T> MicroBatcher<T> {
+    /// One lane per bucket of the (validated) ladder.
+    pub fn new(buckets: &[usize], policy: BatchPolicy) -> Self {
+        assert!(!buckets.is_empty(), "need at least one bucket lane");
+        MicroBatcher {
+            policy,
+            lanes: buckets
+                .iter()
+                .map(|&b| Lane { bucket: b, items: Vec::new(), since: None })
+                .collect(),
+        }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    fn take(lane: &mut Lane<T>) -> (usize, Vec<T>) {
+        lane.since = None;
+        (lane.bucket, std::mem::take(&mut lane.items))
+    }
+
+    /// Accumulate one routed frame in its bucket lane; returns the flushed
+    /// `(bucket, group)` when the lane reaches `max_batch` (with
+    /// `max_batch == 1` every push flushes — the degenerate per-frame
+    /// case). Panics on a bucket outside the ladder, which the router can
+    /// never produce.
+    pub fn push(&mut self, bucket: usize, item: T, now: Instant) -> Option<(usize, Vec<T>)> {
+        let max = self.policy.max_batch.max(1);
+        let lane = self
+            .lanes
+            .iter_mut()
+            .find(|l| l.bucket == bucket)
+            .expect("routed bucket must be in the batcher's ladder");
+        lane.items.push(item);
+        lane.since.get_or_insert(now);
+        if lane.items.len() >= max {
+            Some(Self::take(lane))
+        } else {
+            None
+        }
+    }
+
+    /// Flush the first lane whose oldest frame has waited at least
+    /// `max_wait` (deadline flush). Call repeatedly until `None`.
+    pub fn poll(&mut self, now: Instant) -> Option<(usize, Vec<T>)> {
+        let wait = self.policy.max_wait;
+        let idx = self
+            .lanes
+            .iter()
+            .position(|l| l.since.is_some_and(|s| now.saturating_duration_since(s) >= wait))?;
+        Some(Self::take(&mut self.lanes[idx]))
+    }
+
+    /// Earliest pending lane deadline — what a serving loop should bound
+    /// its queue-receive timeout by.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.lanes.iter().filter_map(|l| l.since).min().map(|s| s + self.policy.max_wait)
+    }
+
+    /// Flush the lane whose oldest frame has waited longest, regardless of
+    /// deadline — the reassembly window's forcing move, and the drain step
+    /// at end of stream.
+    pub fn flush_oldest(&mut self) -> Option<(usize, Vec<T>)> {
+        let idx = self
+            .lanes
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.since.is_some())
+            .min_by_key(|(_, l)| l.since)
+            .map(|(i, _)| i)?;
+        Some(Self::take(&mut self.lanes[idx]))
+    }
+
+    /// Frames currently waiting in lanes.
+    pub fn pending(&self) -> usize {
+        self.lanes.iter().map(|l| l.items.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lanes.iter().all(|l| l.items.is_empty())
+    }
+}
+
+/// Outcome of a non-blocking queue push: the three cases mean three
+/// different things to a sensor, and only one of them is a dropped frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushOutcome {
+    /// The frame was enqueued.
+    Queued,
+    /// The queue was full — real backpressure; the frame was dropped.
+    Full,
+    /// The consumer hung up — shutdown, not backpressure; the frame went
+    /// nowhere but must not count as a drop.
+    Closed,
+}
+
 /// Bounded frame queue out of the sensor thread — feeding the inference
 /// thread directly in single-pipeline serving, or the dispatcher in the
 /// sharded engine (`coordinator::engine`), where it is the only point in
-/// the system that drops frames. `try_push` drops the frame when full
-/// (sensor backpressure: a saturated near-sensor pipeline drops frames
-/// rather than buffering stale ones); callers count rejections to report
-/// real drops, not frames merely in flight at shutdown.
+/// the system that drops frames. [`FrameQueue::try_push`] distinguishes a
+/// full queue (sensor backpressure: a saturated near-sensor pipeline drops
+/// frames rather than buffering stale ones — counted as a rejection) from
+/// a disconnected consumer (shutdown — never counted), so a hung-up
+/// receiver can no longer inflate the dropped-frame statistic.
 #[derive(Debug)]
 pub struct FrameQueue {
     tx: SyncSender<Frame>,
@@ -81,10 +239,13 @@ impl FrameQueue {
         (FrameQueue { tx }, rx)
     }
 
-    /// Non-blocking push; returns false if the frame was dropped (queue
-    /// full) or the consumer hung up.
-    pub fn try_push(&self, frame: Frame) -> bool {
-        !matches!(self.tx.try_send(frame), Err(TrySendError::Full(_) | TrySendError::Disconnected(_)))
+    /// Non-blocking push; see [`PushOutcome`] for the three cases.
+    pub fn try_push(&self, frame: Frame) -> PushOutcome {
+        match self.tx.try_send(frame) {
+            Ok(()) => PushOutcome::Queued,
+            Err(TrySendError::Full(_)) => PushOutcome::Full,
+            Err(TrySendError::Disconnected(_)) => PushOutcome::Closed,
+        }
     }
 
     /// Blocking push (used by paced sensors that must not drop).
@@ -96,9 +257,11 @@ impl FrameQueue {
 /// The sensor production loop shared by single-pipeline `serve` and the
 /// sharded engine: produce frames as fast as the queue accepts them until
 /// `stop` is set, idling while `go` is clear (consumers still warming up)
-/// so warmup time can never inflate the rejection count. Every `try_push`
-/// rejection — the only way the system drops a frame — increments
-/// `rejected`.
+/// so warmup time can never inflate the rejection count. Every
+/// [`PushOutcome::Full`] — the only way the system drops a frame —
+/// increments `rejected`; a [`PushOutcome::Closed`] consumer ends the loop
+/// without counting, because a receiver that hung up is shutdown, not
+/// backpressure.
 pub fn sensor_loop(
     queue: FrameQueue,
     size: usize,
@@ -115,13 +278,17 @@ pub fn sensor_loop(
             continue;
         }
         let f = src.next_frame();
-        if !queue.try_push(f) {
-            if stop.load(Ordering::Relaxed) {
-                break;
+        match queue.try_push(f) {
+            PushOutcome::Queued => {}
+            PushOutcome::Full => {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                rejected.fetch_add(1, Ordering::Relaxed);
+                // Yield briefly to let the consumer drain.
+                std::thread::sleep(Duration::from_micros(200));
             }
-            rejected.fetch_add(1, Ordering::Relaxed);
-            // Yield briefly to let the consumer drain.
-            std::thread::sleep(Duration::from_micros(200));
+            PushOutcome::Closed => break,
         }
     }
 }
@@ -167,14 +334,108 @@ mod tests {
     }
 
     #[test]
+    fn micro_batcher_flushes_on_size() {
+        let t0 = Instant::now();
+        let mut b = MicroBatcher::new(&[9, 36], BatchPolicy::batched(3, Duration::from_secs(1)));
+        assert!(b.push(36, 'a', t0).is_none());
+        assert!(b.push(9, 'x', t0).is_none(), "lanes accumulate independently");
+        assert!(b.push(36, 'b', t0).is_none());
+        let (bucket, group) = b.push(36, 'c', t0).expect("size flush");
+        assert_eq!(bucket, 36);
+        assert_eq!(group, vec!['a', 'b', 'c']);
+        assert_eq!(b.pending(), 1, "the 9-lane still holds its frame");
+        assert!(!b.is_empty());
+    }
+
+    #[test]
+    fn micro_batcher_deadline_flush() {
+        let t0 = Instant::now();
+        let wait = Duration::from_millis(10);
+        let mut b = MicroBatcher::new(&[9, 36], BatchPolicy::batched(4, wait));
+        assert!(b.push(9, 1u32, t0).is_none());
+        // Before the deadline: nothing matures.
+        assert!(b.poll(t0 + Duration::from_millis(5)).is_none());
+        assert_eq!(b.next_deadline(), Some(t0 + wait));
+        // A later push must not extend the lane's deadline — it is keyed
+        // to the *oldest* resident frame.
+        assert!(b.push(9, 2u32, t0 + Duration::from_millis(5)).is_none());
+        assert_eq!(b.next_deadline(), Some(t0 + wait));
+        // At the deadline the lane flushes whole.
+        let (bucket, group) = b.poll(t0 + wait).expect("deadline flush");
+        assert_eq!(bucket, 9);
+        assert_eq!(group, vec![1, 2]);
+        assert!(b.is_empty());
+        assert!(b.poll(t0 + Duration::from_secs(2)).is_none(), "empty lanes never mature");
+        assert_eq!(b.next_deadline(), None);
+    }
+
+    #[test]
+    fn micro_batcher_flush_oldest_forces_the_longest_waiter() {
+        let t0 = Instant::now();
+        let mut b = MicroBatcher::new(&[9, 18, 36], BatchPolicy::batched(8, Duration::from_secs(1)));
+        assert!(b.flush_oldest().is_none(), "nothing to force on an empty batcher");
+        assert!(b.push(18, "late", t0 + Duration::from_millis(2)).is_none());
+        assert!(b.push(36, "early", t0).is_none());
+        let (bucket, group) = b.flush_oldest().expect("forced flush");
+        assert_eq!((bucket, group), (36, vec!["early"]));
+        let (bucket, group) = b.flush_oldest().expect("second forced flush");
+        assert_eq!((bucket, group), (18, vec!["late"]));
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn per_frame_policy_flushes_every_push() {
+        let t0 = Instant::now();
+        let mut b = MicroBatcher::new(&[9, 36], BatchPolicy::per_frame());
+        let (bucket, group) = b.push(9, 7u8, t0).expect("degenerate flush");
+        assert_eq!((bucket, group), (9, vec![7u8]));
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn micro_batcher_rejects_unknown_bucket() {
+        let mut b = MicroBatcher::new(&[9, 36], BatchPolicy::per_frame());
+        let _ = b.push(17, (), Instant::now());
+    }
+
+    #[test]
     fn queue_backpressure_drops_when_full() {
         let (q, rx) = FrameQueue::bounded(1);
         let mut src = VideoSource::new(32, 1, 1);
-        assert!(q.try_push(src.next_frame()));
-        assert!(!q.try_push(src.next_frame()), "second push must drop");
+        assert_eq!(q.try_push(src.next_frame()), PushOutcome::Queued);
+        assert_eq!(q.try_push(src.next_frame()), PushOutcome::Full, "second push must drop");
         let got = recv_frame(&rx, Duration::from_millis(10)).unwrap();
         assert_eq!(got.index, 0);
-        assert!(q.try_push(src.next_frame()));
+        assert_eq!(q.try_push(src.next_frame()), PushOutcome::Queued);
+    }
+
+    #[test]
+    fn disconnected_consumer_is_shutdown_not_backpressure() {
+        let (q, rx) = FrameQueue::bounded(1);
+        let mut src = VideoSource::new(32, 1, 1);
+        drop(rx);
+        assert_eq!(q.try_push(src.next_frame()), PushOutcome::Closed);
+    }
+
+    /// Regression: a hung-up receiver used to count every subsequent push
+    /// as a dropped frame. The sensor loop must exit promptly on a closed
+    /// queue with the rejection counter untouched.
+    #[test]
+    fn sensor_loop_exits_cleanly_when_consumer_hangs_up() {
+        let (q, rx) = FrameQueue::bounded(2);
+        drop(rx);
+        let go = AtomicBool::new(true);
+        let stop = AtomicBool::new(false);
+        let rejected = AtomicU64::new(0);
+        // Runs on this thread: a closed queue must break the loop on the
+        // first push, long before any stop signal.
+        sensor_loop(q, 32, 1, 7, &go, &stop, &rejected);
+        assert_eq!(
+            rejected.load(Ordering::Relaxed),
+            0,
+            "shutdown must not masquerade as dropped frames"
+        );
     }
 
     #[test]

@@ -23,6 +23,17 @@
 //! worker queue is full. A worker that panics or returns an error fails the
 //! whole run promptly — the dispatcher detects the closed queue, the
 //! reassembler sees the failure message, and no thread is left hanging.
+//!
+//! Each worker **micro-batches** its queue under
+//! [`EngineConfig::batch`]: it collects up to `max_batch` frames (waiting
+//! at most `max_wait` after the first) and drives them through one
+//! [`FrameWorker::process_batch`] call — for [`Pipeline`] workers that is
+//! a bucket-major `Backend::execute_batch`, so PJRT dispatch overhead
+//! amortizes inside every worker. The reassembler's out-of-order buffer is
+//! **bounded** ([`EngineConfig::reassembly_window`]), so unbounded
+//! streaming runs cannot accumulate unbounded memory; in-order results
+//! stream into the caller's sink as they reassemble
+//! ([`serve_sharded_with`]).
 
 use std::collections::BTreeMap;
 use std::panic::AssertUnwindSafe;
@@ -32,8 +43,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use super::batcher::{recv_frame, sensor_loop, FrameQueue};
-use super::pipeline::{FrameResult, Pipeline, PipelineConfig, ServeReport};
+use super::batcher::{recv_frame, sensor_loop, BatchPolicy, FrameQueue};
+use super::pipeline::{FrameResult, Pipeline, PipelineConfig, ServeOptions, ServeReport};
 use super::stats::{StageMetrics, WorkerStats};
 use crate::runtime::{Backend, BackendFactory};
 use crate::sensor::Frame;
@@ -54,6 +65,15 @@ pub trait FrameWorker {
     /// Process one frame end-to-end.
     fn process(&mut self, frame: &Frame) -> Result<FrameResult>;
 
+    /// Process a micro-batch collected by the worker loop, returning one
+    /// result per frame in input order. The default loops
+    /// [`FrameWorker::process`]; [`Pipeline`] overrides it with
+    /// bucket-major batched execution so dispatch overhead amortizes
+    /// inside each worker.
+    fn process_batch(&mut self, frames: &[Frame]) -> Result<Vec<FrameResult>> {
+        frames.iter().map(|f| self.process(f)).collect()
+    }
+
     /// Hand the worker's accumulated metrics to the engine at shutdown.
     fn take_metrics(&mut self) -> StageMetrics;
 
@@ -71,6 +91,10 @@ impl<B: Backend> FrameWorker for Pipeline<B> {
 
     fn process(&mut self, frame: &Frame) -> Result<FrameResult> {
         self.process_frame(frame)
+    }
+
+    fn process_batch(&mut self, frames: &[Frame]) -> Result<Vec<FrameResult>> {
+        Pipeline::process_batch(self, frames)
     }
 
     fn take_metrics(&mut self) -> StageMetrics {
@@ -105,6 +129,19 @@ pub struct EngineConfig {
     /// Steady-state stall timeout: no worker progress for this long fails
     /// the run instead of hanging it.
     pub stall_timeout_s: f64,
+    /// Per-worker micro-batching: each worker collects up to
+    /// `batch.max_batch` frames from its queue (waiting at most
+    /// `batch.max_wait` after the first) and processes them with one
+    /// [`FrameWorker::process_batch`] call.
+    pub batch: BatchPolicy,
+    /// Bounded reassembly window: the dispatcher stalls (backpressure,
+    /// propagating to the dropping sensor queue) while
+    /// `dispatched - emitted` would exceed this many frames, so the
+    /// reassembler's out-of-order buffer is bounded even on unbounded
+    /// runs with one pathologically slow worker. `0` derives a default
+    /// from the topology (`workers * (queue_depth + max_batch) * 2 + 16`
+    /// — roomy enough that healthy runs never feel it).
+    pub reassembly_window: usize,
 }
 
 impl EngineConfig {
@@ -121,6 +158,19 @@ impl EngineConfig {
             sensor_seed: 42,
             warmup_timeout_s: 600.0,
             stall_timeout_s: 60.0,
+            batch: BatchPolicy::per_frame(),
+            reassembly_window: 0,
+        }
+    }
+
+    /// The effective bounded reassembly window (see
+    /// [`EngineConfig::reassembly_window`]).
+    pub fn effective_window(&self) -> usize {
+        if self.reassembly_window > 0 {
+            self.reassembly_window
+        } else {
+            let workers = self.workers.max(1);
+            workers * (self.queue_depth.max(1) + self.batch.max_batch.max(1)) * 2 + 16
         }
     }
 }
@@ -183,12 +233,19 @@ where
         worker_rxs.push(rx);
     }
 
+    // Emitted-result counter shared with the dispatcher: the reassembly
+    // window is enforced as dispatch backpressure (`dispatched - emitted`
+    // bounded), never as a failure of a healthy-but-skewed run.
+    let emitted_ctr = AtomicU64::new(0);
     let (rejected_r, go_r, stop_r, abort_r) = (&rejected, &go, &stop, &abort);
+    let emitted_r = &emitted_ctr;
     let inflight_r = &inflight;
     let patch_px = cfg.patch_px;
     let (image_size, num_objects, sensor_seed) = (cfg.image_size, cfg.num_objects, cfg.sensor_seed);
     let warmup_timeout = Duration::from_secs_f64(cfg.warmup_timeout_s.max(0.1));
     let stall_timeout = Duration::from_secs_f64(cfg.stall_timeout_s.max(0.1));
+    let batch_policy = cfg.batch;
+    let reassembly_window = cfg.effective_window();
 
     let outcome = std::thread::scope(|s| {
         // --- sensor thread: produce frames as fast as the queue accepts,
@@ -197,7 +254,9 @@ where
             sensor_loop(sensor_q, image_size, num_objects, sensor_seed, go_r, stop_r, rejected_r)
         });
 
-        // --- worker threads: own pipeline each, drain own bounded queue ---
+        // --- worker threads: own pipeline each, drain own bounded queue,
+        //     micro-batching up to `batch.max_batch` frames per
+        //     process_batch call ---
         for (wid, rx) in worker_rxs.into_iter().enumerate() {
             let res_tx = res_tx.clone();
             s.spawn(move || {
@@ -212,21 +271,75 @@ where
                     let mut t_first: Option<Instant> = None;
                     let mut busy = Duration::ZERO;
                     let mut frames = 0u64;
-                    while let Ok((seq, frame)) = rx.recv() {
+                    let max_batch = batch_policy.max_batch.max(1);
+                    let mut seqs: Vec<u64> = Vec::with_capacity(max_batch);
+                    let mut group: Vec<Frame> = Vec::with_capacity(max_batch);
+                    let mut closed = false;
+                    while !closed {
+                        // Block for the first frame of the group...
+                        seqs.clear();
+                        group.clear();
+                        match rx.recv() {
+                            Ok((seq, frame)) => {
+                                seqs.push(seq);
+                                group.push(frame);
+                            }
+                            Err(_) => break,
+                        }
                         t_first.get_or_insert_with(Instant::now);
-                        let gt = frame.gt_mask(patch_px);
-                        let label = frame.label;
+                        // ...then top it up until max_batch or the
+                        // deadline, whichever comes first.
+                        if max_batch > 1 {
+                            let deadline = Instant::now() + batch_policy.max_wait;
+                            while group.len() < max_batch {
+                                let remaining =
+                                    deadline.saturating_duration_since(Instant::now());
+                                if remaining.is_zero() {
+                                    break;
+                                }
+                                match rx.recv_timeout(remaining) {
+                                    Ok((seq, frame)) => {
+                                        seqs.push(seq);
+                                        group.push(frame);
+                                    }
+                                    Err(RecvTimeoutError::Timeout) => break,
+                                    Err(RecvTimeoutError::Disconnected) => {
+                                        closed = true;
+                                        break;
+                                    }
+                                }
+                            }
+                        }
+                        // Ground truth before processing (frames are
+                        // consumed by reference, results by value).
+                        let gts: Vec<_> = group.iter().map(|f| f.gt_mask(patch_px)).collect();
+                        let labels: Vec<usize> = group.iter().map(|f| f.label).collect();
                         let t0 = Instant::now();
-                        let out = w.process(&frame);
+                        let out = w.process_batch(&group);
                         busy += t0.elapsed();
-                        inflight_r[wid].fetch_sub(1, Ordering::Relaxed);
-                        let r = out.map_err(|e| {
-                            format!("worker {wid}: frame {} failed: {e:#}", frame.index)
+                        inflight_r[wid].fetch_sub(group.len() as u64, Ordering::Relaxed);
+                        let rs = out.map_err(|e| {
+                            format!(
+                                "worker {wid}: batch of {} (first frame {}) failed: {e:#}",
+                                group.len(),
+                                group.first().map(|f| f.index).unwrap_or(0)
+                            )
                         })?;
-                        frames += 1;
-                        let iou = r.mask.iou(&gt);
-                        let correct = r.predicted_class() == label;
-                        res_tx.send(Msg::Result { seq, result: r, iou, correct }).ok();
+                        if rs.len() != group.len() {
+                            return Err(format!(
+                                "worker {wid}: process_batch returned {} results for {} frames",
+                                rs.len(),
+                                group.len()
+                            ));
+                        }
+                        frames += rs.len() as u64;
+                        for ((&seq, r), (gt, &label)) in
+                            seqs.iter().zip(rs).zip(gts.iter().zip(&labels))
+                        {
+                            let iou = r.mask.iou(gt);
+                            let correct = r.predicted_class() == label;
+                            res_tx.send(Msg::Result { seq, result: r, iou, correct }).ok();
+                        }
                     }
                     let active_s = t_first.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
                     let busy_s = busy.as_secs_f64();
@@ -275,6 +388,20 @@ where
             // per-frame heap, like the pipeline hot path it feeds.
             let mut candidates: Vec<usize> = Vec::with_capacity(n_workers);
             'dispatch: while dispatched < num_frames && !abort_r.load(Ordering::Relaxed) {
+                // Bounded reassembly window: hold new dispatches while the
+                // gap to the emission front is at the window. Backpressure
+                // propagates to the sensor queue (the dropping point), and
+                // the reassembler's buffer stays bounded no matter how
+                // skewed the workers run.
+                while dispatched.saturating_sub(emitted_r.load(Ordering::Relaxed))
+                    >= reassembly_window as u64
+                    && !abort_r.load(Ordering::Relaxed)
+                {
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                if abort_r.load(Ordering::Relaxed) {
+                    break;
+                }
                 let Some(frame) = recv_frame(&sensor_rx, Duration::from_secs(5)) else {
                     break;
                 };
@@ -379,6 +506,20 @@ where
                         emitted += 1;
                         next_emit += 1;
                     }
+                    emitted_ctr.store(emitted, Ordering::Relaxed);
+                    // Backstop: the dispatcher never lets more than
+                    // `reassembly_window` frames sit between dispatch and
+                    // emission, so a larger buffer means the engine lost a
+                    // result — fail fast instead of buffering forever.
+                    if pending.len() > reassembly_window {
+                        failure = Some(format!(
+                            "reassembly window overflow: {} results buffered out of order \
+                             (window {reassembly_window}, next expected seq {next_emit}) — \
+                             a result was lost",
+                            pending.len()
+                        ));
+                        break;
+                    }
                 }
                 Ok(Msg::Done { stats, metrics, backend }) => {
                     merged.merge(&metrics);
@@ -434,6 +575,7 @@ where
         mean_energy_j: merged.mean_energy_j(),
         modeled_kfps_per_watt: merged.modeled_kfps_per_watt(),
         mean_kept_patches: merged.mean_kept_patches(),
+        mean_batch: merged.mean_batch(),
         mean_mask_iou: if emitted > 0 { iou_sum / emitted as f64 } else { 0.0 },
         top1_accuracy: if emitted > 0 { correct as f64 / emitted as f64 } else { 0.0 },
         workers: n_workers,
@@ -442,29 +584,46 @@ where
     Ok((report, merged))
 }
 
-/// Serve `num_frames` frames through `workers` parallel [`Pipeline`]s —
-/// the sharded counterpart of [`super::pipeline::serve`]. Each worker
-/// thread builds its own backend through `factory` (so non-`Send`
-/// substrates shard cleanly) and its own pipeline around it.
+/// Serve [`ServeOptions::num_frames`] frames through `workers` parallel
+/// [`Pipeline`]s, streaming every in-order [`FrameResult`] into `sink` as
+/// it is reassembled — the sharded counterpart of the single-pipeline
+/// [`super::pipeline::FrameStream`]. Each worker thread builds its own
+/// backend through `factory` (so non-`Send` substrates shard cleanly), its
+/// own pipeline around it, and micro-batches its queue under
+/// [`ServeOptions::batch`]; the reassembler's out-of-order buffer is
+/// bounded (see [`EngineConfig::reassembly_window`]).
+pub fn serve_sharded_with<F: BackendFactory>(
+    pipe_cfg: &PipelineConfig,
+    factory: &F,
+    workers: usize,
+    opts: &ServeOptions,
+    sink: impl FnMut(&FrameResult),
+) -> Result<(ServeReport, StageMetrics)> {
+    let vit = pipe_cfg.vit_config();
+    let mut cfg = EngineConfig::new(workers, vit.patch_size, pipe_cfg.image_size);
+    cfg.queue_depth = opts.queue_depth.max(1);
+    cfg.sensor_queue_depth = opts.queue_depth.max(1) * cfg.workers;
+    cfg.num_objects = opts.num_objects;
+    cfg.sensor_seed = opts.sensor_seed;
+    cfg.batch = opts.batch;
+    // One window knob across both serving paths: `--window` bounds the
+    // single-pipeline stream and the engine reassembler alike.
+    cfg.reassembly_window = opts.window.max(1);
+    run(
+        |wid| Pipeline::with_backend(pipe_cfg.clone(), factory.create(wid)?),
+        &cfg,
+        opts.num_frames,
+        sink,
+    )
+}
+
+/// [`serve_sharded_with`] without a result sink: drain the stream
+/// internally and return only the terminal report + merged metrics.
 pub fn serve_sharded<F: BackendFactory>(
     pipe_cfg: &PipelineConfig,
     factory: &F,
     workers: usize,
-    queue_depth: usize,
-    sensor_seed: u64,
-    num_objects: usize,
-    num_frames: u64,
+    opts: &ServeOptions,
 ) -> Result<(ServeReport, StageMetrics)> {
-    let vit = pipe_cfg.vit_config();
-    let mut cfg = EngineConfig::new(workers, vit.patch_size, pipe_cfg.image_size);
-    cfg.queue_depth = queue_depth.max(1);
-    cfg.sensor_queue_depth = queue_depth.max(1) * cfg.workers;
-    cfg.num_objects = num_objects;
-    cfg.sensor_seed = sensor_seed;
-    run(
-        |wid| Pipeline::with_backend(pipe_cfg.clone(), factory.create(wid)?),
-        &cfg,
-        num_frames,
-        |_r| {},
-    )
+    serve_sharded_with(pipe_cfg, factory, workers, opts, |_r| {})
 }

@@ -5,37 +5,48 @@
 //! compiled HLO on the PJRT client, `host` = pure-Rust reference compute,
 //! `sim` = host numerics + modeled photonic timing), selected per run via
 //! a [`crate::runtime::BackendFactory`]. No backend-specific symbol
-//! appears in the pipeline or engine — artifact names are the contract.
+//! appears in the pipeline or engine — artifact names are the contract,
+//! and execution is **batch-first**: the coordinator accumulates routed
+//! frames bucket-major and drives `Backend::execute_batch` so dispatch
+//! overhead (and, on the modeled accelerator, MR weight-bank programming)
+//! amortizes across each micro-batch.
 //!
-//! Single-pipeline serving (`serve`, [`pipeline`]):
+//! Single-pipeline serving is **streaming** ([`pipeline::serve`] returns a
+//! [`pipeline::FrameStream`] — an iterator of in-order results; the
+//! terminal [`pipeline::ServeReport`] is derived from the drained stream):
 //!
 //! ```text
-//! sensor thread ──frames──▶ bounded queue ──▶ inference thread
-//!                                              │  MGNet (Backend)
-//!                                              │  threshold → PatchMask
-//!                                              │  gather kept patches
-//!                                              │  bucket router (pad to bucket)
-//!                                              │  ViT backbone (Backend)
-//!                                              ▼  logits + metrics
+//! sensor thread ──frames──▶ bounded queue ──▶ FrameStream
+//!                                              │  MGNet (Backend) → mask → route
+//!                                              │  MicroBatcher lanes (per bucket,
+//!                                              │    max_batch / max_wait deadline)
+//!                                              │  ViT backbone (Backend::execute_batch,
+//!                                              │    one call per flushed lane)
+//!                                              ▼  in-order FrameResults
+//!                                                 (bounded reassembly window)
 //! ```
 //!
 //! Sharded serving (`serve_sharded`, [`engine`]) scales the host side to N
 //! cores by putting a dispatcher between the sensor and N such pipelines:
 //!
 //! ```text
-//!                         ┌─▶ worker 0 (own Pipeline + Backend) ─┐
-//! sensor ─▶ dispatcher ───┼─▶ worker 1 (own Pipeline + Backend) ─┼─▶ reassembler
-//!           (round-robin, │           …                          │   (in-order results,
-//!            queue-depth  └─▶ worker N-1 ────────────────────────┘    merged StageMetrics,
-//!            aware)                                                    per-worker utilization)
+//!                         ┌─▶ worker 0 (Pipeline + Backend, micro-batch) ─┐
+//! sensor ─▶ dispatcher ───┼─▶ worker 1 (Pipeline + Backend, micro-batch) ─┼─▶ reassembler
+//!           (round-robin, │           …                                   │   (in-order sink,
+//!            queue-depth  └─▶ worker N-1 ─────────────────────────────────┘    bounded window,
+//!            aware)                                                            merged StageMetrics)
 //! ```
 //!
 //! The dispatcher shards frames round-robin biased toward the worker with
 //! the fewest in-flight frames; per-worker queues are bounded, so
 //! backpressure propagates to the sensor queue, which is the only place
-//! frames are dropped. The reassembler re-orders results by dispatch
-//! sequence number, merges every worker's [`StageMetrics`], and fails the
-//! run (rather than hanging) if any worker errors or panics.
+//! frames are dropped (a hung-up consumer is shutdown, never a drop — see
+//! [`batcher::PushOutcome`]). Each worker collects micro-batches from its
+//! queue ([`engine::EngineConfig::batch`]) and processes them with one
+//! bucket-major `process_batch` call. The reassembler re-orders results by
+//! dispatch sequence number inside a bounded window, merges every worker's
+//! [`StageMetrics`], and fails the run (rather than hanging) if any worker
+//! errors or panics.
 //!
 //! Python never appears here, and with the `host`/`sim` backends neither
 //! do compiled artifacts — which is what lets CI exercise the full frame
@@ -43,18 +54,25 @@
 //! so each one lives on the thread that created it: the single-pipeline
 //! path keeps it on one inference thread, and the engine constructs one
 //! `Pipeline` *inside each worker thread* via its `BackendFactory` (see
-//! [`engine::FrameWorker`]). The hot path is allocation-free in steady
-//! state: per-frame buffers live in [`pipeline::FrameScratch`] and tensors
-//! are handed to the backend as borrowed [`crate::runtime::TensorRef`]
-//! views. [`pipeline::ServeReport`] names the backend that served the run;
-//! under `sim` its latency column is modeled photonic-core time.
+//! [`engine::FrameWorker`]). The one-frame hot path is allocation-free in
+//! steady state: per-frame buffers live in [`pipeline::FrameScratch`] and
+//! tensors are handed to the backend as borrowed
+//! [`crate::runtime::TensorRef`] views; batched frames stage owned copies
+//! in [`pipeline::RoutedFrame`]s so lanes can wait while routing
+//! continues. [`pipeline::ServeReport`] names the backend that served the
+//! run and the mean micro-batch size; under `sim` its latency column is
+//! modeled photonic-core time, recorded per stage (`modeled_mgnet` /
+//! `modeled_backbone`).
 
 pub mod batcher;
 pub mod engine;
 pub mod pipeline;
 pub mod stats;
 
-pub use batcher::{BucketRouter, FrameQueue};
-pub use engine::{serve_sharded, EngineConfig, FrameWorker};
-pub use pipeline::{FrameResult, FrameScratch, Pipeline, PipelineConfig, ServeReport};
+pub use batcher::{BatchPolicy, BucketRouter, FrameQueue, MicroBatcher, PushOutcome};
+pub use engine::{serve_sharded, serve_sharded_with, EngineConfig, FrameWorker};
+pub use pipeline::{
+    serve, FrameResult, FrameScratch, FrameStream, Pipeline, PipelineConfig, RoutedFrame,
+    ServeOptions, ServeReport,
+};
 pub use stats::{StageMetrics, WorkerStats};

@@ -1,4 +1,5 @@
-//! The frame-serving pipeline: MGNet → RoI mask → bucket routing → backbone.
+//! The frame-serving pipeline: MGNet → RoI mask → bucket routing →
+//! bucket-major micro-batches → backbone.
 //!
 //! The pipeline is generic over the execution substrate: any
 //! [`crate::runtime::Backend`] (PJRT over compiled HLO, the pure-Rust
@@ -6,20 +7,44 @@
 //! the request path knowing which one it drives. No PJRT symbol appears in
 //! this module — artifact names are the only contract.
 //!
-//! The steady-state hot path is **allocation-free up to each backend
-//! call**: every per-frame buffer (patchify output, score/mask staging,
-//! kept-index list, zero-padded bucket tensors) lives in a reusable
-//! [`FrameScratch`], and backends accept borrowed [`TensorRef`] views, so
-//! no frame ever clones its patch tensor. `rust/tests/alloc_hot_path.rs`
-//! asserts the staging stages with a counting allocator, and
-//! `rust/tests/host_backend.rs` bounds the full frame over
-//! [`crate::runtime::HostBackend`].
+//! The execution API is **batch-first** and split-phase:
+//!
+//! - [`Pipeline::route_frame`] runs the front half (patchify → MGNet →
+//!   mask → route) and returns a [`RoutedFrame`] staged for its bucket;
+//! - [`Pipeline::complete_batch`] drives one
+//!   [`crate::runtime::Backend::execute_batch`] call over a single-bucket
+//!   group of routed frames, amortizing dispatch (and, on the modeled
+//!   accelerator, weight-bank programming) across the batch;
+//! - [`Pipeline::process_frame`] is the degenerate one-frame case, kept as
+//!   its own allocation-free fast path, and [`Pipeline::process_batch`]
+//!   composes the two halves bucket-major for callers holding a frame
+//!   slice.
+//!
+//! Serving is **streaming**: [`serve`] returns a [`FrameStream`] — an
+//! iterator of in-order [`FrameResult`]s backed by a
+//! [`super::batcher::MicroBatcher`] and a bounded reassembly window — and
+//! the terminal [`ServeReport`] is derived from the drained stream via
+//! [`FrameStream::finish`].
+//!
+//! The steady-state one-frame hot path is **allocation-free up to each
+//! backend call**: every per-frame buffer (patchify output, score/mask
+//! staging, kept-index list, zero-padded bucket tensors) lives in a
+//! reusable [`FrameScratch`], and backends accept borrowed [`TensorRef`]
+//! views, so no frame ever clones its patch tensor.
+//! `rust/tests/alloc_hot_path.rs` asserts the staging stages with a
+//! counting allocator, and `rust/tests/host_backend.rs` bounds the full
+//! frame over [`crate::runtime::HostBackend`].
 
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
-use super::batcher::{recv_frame, BucketRouter, FrameQueue};
+use super::batcher::{recv_frame, BatchPolicy, BucketRouter, FrameQueue, MicroBatcher};
 use super::stats::{StageMetrics, WorkerStats};
 use crate::energy::AcceleratorModel;
 use crate::roi::PatchMask;
@@ -116,7 +141,8 @@ pub struct FrameResult {
     pub modeled_energy_j: f64,
     /// Latency attributed to this frame (s): modeled accelerator latency
     /// when the backend simulates timing (`sim`), host wall-clock
-    /// otherwise.
+    /// otherwise — including any time the frame waited in a micro-batch
+    /// lane on the batched path.
     pub latency_s: f64,
 }
 
@@ -131,6 +157,39 @@ impl FrameResult {
             .map(|(i, _)| i)
             .unwrap_or(0)
     }
+}
+
+/// A frame that has cleared the front half of the pipeline (patchify →
+/// MGNet → mask → route) and is staged for a batched backbone call: the
+/// unit the bucket-major [`MicroBatcher`] accumulates and
+/// [`Pipeline::complete_batch`] consumes.
+///
+/// Owns its staged bucket tensors (copied out of the pipeline's
+/// [`FrameScratch`], which the next routed frame will overwrite), so any
+/// number of routed frames can wait in lanes while the pipeline keeps
+/// routing.
+#[derive(Debug)]
+pub struct RoutedFrame {
+    pub frame_index: u64,
+    /// Synthetic class label carried along for accuracy scoring.
+    pub label: usize,
+    /// Bucket the frame was routed to (its micro-batch lane).
+    pub bucket: usize,
+    /// Kept patches after masking (≥ 1).
+    pub kept_count: usize,
+    /// The thresholded keep mask (moved into the final [`FrameResult`]).
+    pub mask: PatchMask,
+    /// Staged `(bucket, patch_dim)` backbone input.
+    patches: Vec<f32>,
+    /// Original grid position of each bucket slot.
+    pos_idx: Vec<f32>,
+    /// Validity mask over bucket slots.
+    valid: Vec<f32>,
+    /// Host wall-clock spent in the front half (seconds).
+    front_s: f64,
+    /// When the front half finished — the start of the frame's lane wait,
+    /// so reported latency can include time spent queued for a batch.
+    staged_at: Instant,
 }
 
 /// Reusable per-frame working memory. All buffers are sized once (at
@@ -334,12 +393,11 @@ impl<B: Backend> Pipeline<B> {
         Ok(())
     }
 
-    /// Process one frame end-to-end. Steady-state frames perform zero heap
-    /// allocation before each backend call: all staging goes through the
-    /// reusable [`FrameScratch`] and inputs are passed as borrowed
-    /// [`TensorRef`] views.
-    pub fn process_frame(&mut self, frame: &Frame) -> Result<FrameResult> {
-        let t_start = Instant::now();
+    /// The front half shared by [`Pipeline::process_frame`] and
+    /// [`Pipeline::route_frame`]: patchify → MGNet → mask → route, all
+    /// staged in the reusable [`FrameScratch`]. Returns the routed bucket;
+    /// the staged tensors live in `self.scratch` until the next frame.
+    fn stage_front(&mut self, frame: &Frame) -> Result<usize> {
         let patch_px = self.vit_cfg.patch_size;
         let side = frame.size / patch_px;
         let n_full = side * side;
@@ -368,10 +426,63 @@ impl<B: Backend> Pipeline<B> {
         //    otherwise pad with zeroed invalid slots.
         let t0 = Instant::now();
         let bucket = self.scratch.stage_route(&self.router, patch_dim);
-        let kept_count = self.scratch.kept.len();
         self.metrics.record_stage("route", t0.elapsed().as_secs_f64());
+        Ok(bucket)
+    }
 
-        // 4. Backbone on the pruned sequence.
+    /// Modeled accelerator energy for one frame (J), charged for every
+    /// backend — the host is a stand-in for the photonic core. A frame
+    /// riding a bucket-major batch behind its group's first frame reuses
+    /// the programmed **backbone** MR weight banks, so followers are
+    /// discounted by the backbone's weight-programming share
+    /// ([`AcceleratorModel::weight_program_energy_j`]): modeled
+    /// energy/frame *drops* as batch size grows. The MGNet share is never
+    /// discounted — MGNet executes per frame at route time, interleaved
+    /// with other buckets' batches, so its banks are reprogrammed anyway.
+    fn modeled_energy_j(&self, kept_count: usize, first_in_batch: bool) -> f64 {
+        let (full, backbone_kept) = if self.cfg.use_mask {
+            (
+                self.model.masked_energy(&self.vit_cfg, &self.mgnet_cfg, kept_count).total_j(),
+                kept_count,
+            )
+        } else {
+            let n = self.vit_cfg.num_patches();
+            (self.model.frame_energy(&self.vit_cfg, n, true).total_j(), n)
+        };
+        if first_in_batch {
+            return full;
+        }
+        let saved = self.model.weight_program_energy_j(&self.vit_cfg, backbone_kept, true);
+        (full - saved).max(0.0)
+    }
+
+    /// Record a simulating backend's modeled per-stage latency (MGNet and
+    /// backbone separately, plus the `"modeled"` total that becomes the
+    /// reported frame latency). Returns the modeled total, or `None` on
+    /// measuring backends.
+    fn record_modeled(&mut self, kept_count: usize, first_in_batch: bool) -> Option<f64> {
+        let stages =
+            self.backend.modeled_stages_s(kept_count, self.cfg.use_mask, first_in_batch)?;
+        if self.cfg.use_mask {
+            self.metrics.record_stage("modeled_mgnet", stages.mgnet_s);
+        }
+        self.metrics.record_stage("modeled_backbone", stages.backbone_s);
+        let total = stages.total_s();
+        self.metrics.record_stage("modeled", total);
+        Some(total)
+    }
+
+    /// Process one frame end-to-end — the degenerate batch of one.
+    /// Steady-state frames perform zero heap allocation before each
+    /// backend call: all staging goes through the reusable [`FrameScratch`]
+    /// and inputs are passed as borrowed [`TensorRef`] views.
+    pub fn process_frame(&mut self, frame: &Frame) -> Result<FrameResult> {
+        let t_start = Instant::now();
+        let patch_dim = self.vit_cfg.patch_dim();
+        let bucket = self.stage_front(frame)?;
+        let kept_count = self.scratch.kept.len();
+
+        // Backbone on the pruned sequence.
         let t0 = Instant::now();
         let artifact = self
             .backbone_names
@@ -394,24 +505,16 @@ impl<B: Backend> Pipeline<B> {
             .context("backbone stage")?;
         self.metrics.record_stage("backbone", t0.elapsed().as_secs_f64());
 
-        // 5. Modeled accelerator energy at this kept count (charged for
-        //    every backend — the host is a stand-in for the photonic core).
-        let energy_j = if self.cfg.use_mask {
-            self.model.masked_energy(&self.vit_cfg, &self.mgnet_cfg, kept_count).total_j()
-        } else {
-            self.model.frame_energy(&self.vit_cfg, self.vit_cfg.num_patches(), true).total_j()
-        };
+        let energy_j = self.modeled_energy_j(kept_count, true);
         // "total" is always host wall-clock (it feeds busy-time and
         // utilization accounting); a simulating backend additionally
         // charges its modeled frame latency under "modeled", which then
         // becomes the reported per-frame latency.
         let wall_s = t_start.elapsed().as_secs_f64();
         self.metrics.record_stage("total", wall_s);
-        let modeled = self.backend.modeled_frame_latency_s(kept_count, self.cfg.use_mask);
-        if let Some(m) = modeled {
-            self.metrics.record_stage("modeled", m);
-        }
+        let modeled = self.record_modeled(kept_count, true);
         self.metrics.record_frame(energy_j, kept_count);
+        self.metrics.record_batch_size(1);
 
         Ok(FrameResult {
             frame_index: frame.index,
@@ -422,6 +525,152 @@ impl<B: Backend> Pipeline<B> {
             latency_s: modeled.unwrap_or(wall_s),
         })
     }
+
+    /// Run the front half of the pipeline and stage the frame for a
+    /// bucket-major micro-batch. The returned [`RoutedFrame`] owns copies
+    /// of its staged bucket tensors, so it can wait in a
+    /// [`MicroBatcher`] lane while later frames overwrite the scratch.
+    pub fn route_frame(&mut self, frame: &Frame) -> Result<RoutedFrame> {
+        let t_start = Instant::now();
+        let patch_dim = self.vit_cfg.patch_dim();
+        let bucket = self.stage_front(frame)?;
+        Ok(RoutedFrame {
+            frame_index: frame.index,
+            label: frame.label,
+            bucket,
+            kept_count: self.scratch.kept.len(),
+            mask: self.scratch.mask.clone(),
+            patches: self.scratch.bucket_patches[..bucket * patch_dim].to_vec(),
+            pos_idx: self.scratch.pos_idx[..bucket].to_vec(),
+            valid: self.scratch.valid[..bucket].to_vec(),
+            front_s: t_start.elapsed().as_secs_f64(),
+            staged_at: Instant::now(),
+        })
+    }
+
+    /// Complete a single-bucket group of routed frames with **one**
+    /// [`Backend::execute_batch`] call, returning results in group order.
+    ///
+    /// The group's first frame pays the full modeled cost; followers
+    /// amortize the weight-programming share (energy here, latency via
+    /// the backend's batch-aware model), so modeled energy/frame drops as
+    /// dispatch amortizes. The measured `"backbone"` wall time is split
+    /// evenly across the batch.
+    pub fn complete_batch(&mut self, batch: Vec<RoutedFrame>) -> Result<Vec<FrameResult>> {
+        ensure!(!batch.is_empty(), "complete_batch needs at least one routed frame");
+        let bucket = batch[0].bucket;
+        ensure!(
+            batch.iter().all(|rf| rf.bucket == bucket),
+            "complete_batch requires a single-bucket (bucket-major) group"
+        );
+        let n = batch.len();
+        let patch_dim = self.vit_cfg.patch_dim();
+        let artifact = self
+            .backbone_names
+            .iter()
+            .find(|(b, _)| *b == bucket)
+            .map(|(_, name)| name.as_str())
+            .ok_or_else(|| anyhow!("bucket {bucket} has no artifact in the ladder"))?;
+        let bdims = [bucket as i64, patch_dim as i64];
+        let vdims = [bucket as i64];
+
+        let t0 = Instant::now();
+        let holders: Vec<[TensorRef<'_>; 3]> = batch
+            .iter()
+            .map(|rf| {
+                [
+                    TensorRef::new(&rf.patches, &bdims),
+                    TensorRef::new(&rf.pos_idx, &vdims),
+                    TensorRef::new(&rf.valid, &vdims),
+                ]
+            })
+            .collect();
+        let inputs: Vec<&[TensorRef<'_>]> = holders.iter().map(|h| &h[..]).collect();
+        let outs = self
+            .backend
+            .execute_batch(artifact, &inputs)
+            .context("batched backbone stage")?;
+        drop(inputs);
+        drop(holders);
+        ensure!(
+            outs.len() == n,
+            "backend returned {} result sets for a batch of {n}",
+            outs.len()
+        );
+        let backbone_share = t0.elapsed().as_secs_f64() / n as f64;
+
+        let mut results = Vec::with_capacity(n);
+        for (i, (rf, mut out)) in batch.into_iter().zip(outs).enumerate() {
+            ensure!(
+                out.len() == 1,
+                "artifact '{}' returned {} outputs, expected 1",
+                self.cfg.backbone_artifact(bucket),
+                out.len()
+            );
+            let logits = out.pop().unwrap();
+            let first = i == 0;
+            self.metrics.record_stage("backbone", backbone_share);
+            let energy_j = self.modeled_energy_j(rf.kept_count, first);
+            // "total" stays compute-only (front half + this frame's share
+            // of the batched call) — it feeds busy-time/utilization.
+            // "latency" is what the frame actually experienced: front half
+            // plus everything since it was staged, **including its lane
+            // wait** — so a `--batch`/`--batch-wait-us` sweep reports the
+            // real latency cost of batching, not just its throughput win.
+            self.metrics.record_stage("total", rf.front_s + backbone_share);
+            let latency_wall_s = rf.front_s + rf.staged_at.elapsed().as_secs_f64();
+            self.metrics.record_stage("latency", latency_wall_s);
+            let modeled = self.record_modeled(rf.kept_count, first);
+            self.metrics.record_frame(energy_j, rf.kept_count);
+            self.metrics.record_batch_size(n);
+            results.push(FrameResult {
+                frame_index: rf.frame_index,
+                logits,
+                mask: rf.mask,
+                bucket,
+                modeled_energy_j: energy_j,
+                latency_s: modeled.unwrap_or(latency_wall_s),
+            });
+        }
+        Ok(results)
+    }
+
+    /// Process a slice of frames bucket-major: route every frame, group by
+    /// bucket (in ladder order), complete each group with one batched
+    /// backend call, and return results in **input order**. A slice of one
+    /// falls through to the allocation-free [`Pipeline::process_frame`].
+    pub fn process_batch(&mut self, frames: &[Frame]) -> Result<Vec<FrameResult>> {
+        if frames.len() <= 1 {
+            return frames.iter().map(|f| self.process_frame(f)).collect();
+        }
+        let mut routed: Vec<Option<RoutedFrame>> = Vec::with_capacity(frames.len());
+        for f in frames {
+            routed.push(Some(self.route_frame(f)?));
+        }
+        let mut results: Vec<Option<FrameResult>> = (0..frames.len()).map(|_| None).collect();
+        let ladder: Vec<usize> = self.router.buckets().to_vec();
+        for bucket in ladder {
+            let idxs: Vec<usize> = routed
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.as_ref().is_some_and(|rf| rf.bucket == bucket))
+                .map(|(i, _)| i)
+                .collect();
+            if idxs.is_empty() {
+                continue;
+            }
+            let group: Vec<RoutedFrame> =
+                idxs.iter().map(|&i| routed[i].take().expect("unclaimed routed frame")).collect();
+            let group_results = self.complete_batch(group)?;
+            for (i, r) in idxs.into_iter().zip(group_results) {
+                results[i] = Some(r);
+            }
+        }
+        Ok(results
+            .into_iter()
+            .map(|r| r.expect("every routed frame belongs to exactly one bucket group"))
+            .collect())
+    }
 }
 
 /// Summary of a serving run.
@@ -431,15 +680,20 @@ pub struct ServeReport {
     pub backend: String,
     pub frames: u64,
     /// Frames the sensor actually failed to enqueue (`try_push`
-    /// rejections) — not frames merely in flight when the run stopped.
+    /// backpressure rejections) — not frames merely in flight when the
+    /// run stopped, and not pushes against a hung-up consumer.
     pub dropped: u64,
     pub wall_fps: f64,
     /// Mean per-frame latency: modeled accelerator latency under the `sim`
-    /// backend, host wall-clock otherwise.
+    /// backend, host wall-clock otherwise (lane wait included on the
+    /// batched path — see `StageMetrics::frame_latency_mean_s`).
     pub mean_latency_s: f64,
     pub mean_energy_j: f64,
     pub modeled_kfps_per_watt: f64,
     pub mean_kept_patches: f64,
+    /// Mean micro-batch size frames were executed in (1.0 when batching
+    /// is off).
+    pub mean_batch: f64,
     /// Mean IoU of the MGNet mask vs. the sensor ground truth.
     pub mean_mask_iou: f64,
     /// Top-1 agreement with the synthetic class labels (meaningful only
@@ -452,99 +706,362 @@ pub struct ServeReport {
     pub per_worker: Vec<WorkerStats>,
 }
 
-/// Drive a pipeline from a live sensor thread for `num_frames` frames.
-/// The sensor produces frames as fast as the queue accepts them; a full
-/// queue drops frames (real near-sensor backpressure).
-pub fn serve<B: Backend>(
-    pipeline: &mut Pipeline<B>,
-    sensor_seed: u64,
-    num_objects: usize,
-    num_frames: u64,
-    queue_depth: usize,
-) -> Result<ServeReport> {
-    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-    use std::sync::Arc;
+/// Knobs of a serving run — shared by the streaming [`serve`] and the
+/// sharded `serve_sharded`.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOptions {
+    /// Sensor RNG seed.
+    pub sensor_seed: u64,
+    /// Moving objects in the synthetic scene.
+    pub num_objects: usize,
+    /// Frames to serve before the stream ends.
+    pub num_frames: u64,
+    /// Bounded sensor-queue depth (backpressure point).
+    pub queue_depth: usize,
+    /// Bucket-major micro-batching policy (default: per-frame).
+    pub batch: BatchPolicy,
+    /// Reassembly window: max results buffered out of order before the
+    /// oldest lane is force-flushed so the head of the stream can emit.
+    /// Bounds stream memory on unbounded runs.
+    pub window: usize,
+}
 
-    let size = pipeline.cfg.image_size;
-    // Warm up before the sensor exists: compile time can neither inflate
-    // the rejection count nor leak a sensor thread on warmup failure.
-    pipeline.warmup()?;
+impl ServeOptions {
+    /// Defaults matching the pre-streaming `serve` behaviour: seed 42,
+    /// 2 objects, queue depth 4, per-frame batching.
+    pub fn frames(num_frames: u64) -> Self {
+        ServeOptions {
+            sensor_seed: 42,
+            num_objects: 2,
+            num_frames,
+            queue_depth: 4,
+            batch: BatchPolicy::per_frame(),
+            window: 64,
+        }
+    }
+}
 
-    let (queue, rx) = FrameQueue::bounded(queue_depth);
-    // Count actual enqueue rejections in the sensor thread: frames still
-    // sitting in the queue at stop time were never dropped.
-    let rejected = Arc::new(AtomicU64::new(0));
-    let stop = Arc::new(AtomicBool::new(false));
-    // Consumer is already warm, so the sensor starts producing at once.
-    let go = Arc::new(AtomicBool::new(true));
-    let (rejected_t, stop_t, go_t) = (rejected.clone(), stop.clone(), go.clone());
-    let sensor = std::thread::spawn(move || {
-        super::batcher::sensor_loop(
-            queue,
-            size,
-            num_objects,
-            sensor_seed,
-            &go_t,
-            &stop_t,
-            &rejected_t,
-        )
-    });
+/// A routed frame waiting in a stream lane, tagged with its emission
+/// sequence number and its front-half quality scores.
+struct StreamItem {
+    seq: u64,
+    iou: f64,
+    rf: RoutedFrame,
+}
 
-    pipeline.metrics.start_run();
-    let patch_px = pipeline.vit_cfg.patch_size;
-    let mut iou_sum = 0.0f64;
-    let mut correct = 0u64;
-    let mut done = 0u64;
-    let mut serve_err = None;
-    while done < num_frames {
-        let Some(frame) = recv_frame(&rx, Duration::from_secs(5)) else {
-            break;
-        };
-        let gt = frame.gt_mask(patch_px);
-        let label = frame.label;
-        match pipeline.process_frame(&frame) {
-            Ok(r) => {
-                iou_sum += r.mask.iou(&gt);
-                correct += (r.predicted_class() == label) as u64;
-                done += 1;
+/// A completed frame waiting for in-order emission.
+struct PendingResult {
+    result: FrameResult,
+    iou: f64,
+    correct: bool,
+}
+
+/// How long the stream waits on an idle sensor queue before concluding
+/// the producer is gone (matches the pre-streaming `serve` timeout).
+const SENSOR_IDLE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// The streaming serve surface: an `Iterator` of in-order
+/// [`FrameResult`]s over a live sensor thread.
+///
+/// Internally the stream routes each arriving frame (front half on the
+/// pipeline), parks it in a bucket-major [`MicroBatcher`] lane, and
+/// completes flushed lanes with one batched backend call each. Because
+/// lanes flush independently, results complete out of arrival order; a
+/// reassembly buffer re-orders them and is **bounded** by
+/// [`ServeOptions::window`] — when the buffer plus the lanes reach the
+/// window, the longest-waiting lane is force-flushed, so an unbounded run
+/// can never accumulate unbounded state.
+///
+/// Dropping the stream stops and joins the sensor thread. After the
+/// stream is drained (or to drain-and-summarize in one call), derive the
+/// run summary with [`FrameStream::finish`] / [`FrameStream::report`].
+pub struct FrameStream<'p, B: Backend> {
+    pipeline: &'p mut Pipeline<B>,
+    rx: Receiver<Frame>,
+    sensor: Option<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    rejected: Arc<AtomicU64>,
+    batcher: MicroBatcher<StreamItem>,
+    window: usize,
+    /// Frames still wanted from the sensor (shrinks if the sensor dies).
+    target: u64,
+    /// Frames routed into lanes so far (also the next sequence number).
+    routed: u64,
+    /// Frames handed to the caller so far.
+    emitted: u64,
+    next_emit: u64,
+    pending: BTreeMap<u64, PendingResult>,
+    iou_sum: f64,
+    correct: u64,
+    failed: bool,
+    patch_px: usize,
+}
+
+impl<'p, B: Backend> FrameStream<'p, B> {
+    fn new(pipeline: &'p mut Pipeline<B>, opts: &ServeOptions) -> Result<Self> {
+        let size = pipeline.cfg.image_size;
+        // Warm up before the sensor exists: compile time can neither
+        // inflate the rejection count nor leak a sensor thread on warmup
+        // failure.
+        pipeline.warmup()?;
+
+        let (queue, rx) = FrameQueue::bounded(opts.queue_depth.max(1));
+        // Count actual enqueue rejections in the sensor thread: frames
+        // still sitting in the queue at stop time were never dropped.
+        let rejected = Arc::new(AtomicU64::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        // Consumer is already warm, so the sensor starts producing at once.
+        let go = Arc::new(AtomicBool::new(true));
+        let (rejected_t, stop_t, go_t) = (rejected.clone(), stop.clone(), go.clone());
+        let (num_objects, sensor_seed) = (opts.num_objects, opts.sensor_seed);
+        let sensor = std::thread::spawn(move || {
+            super::batcher::sensor_loop(
+                queue,
+                size,
+                num_objects,
+                sensor_seed,
+                &go_t,
+                &stop_t,
+                &rejected_t,
+            )
+        });
+
+        pipeline.metrics.start_run();
+        let patch_px = pipeline.vit_cfg.patch_size;
+        let batcher = MicroBatcher::new(pipeline.router.buckets(), opts.batch);
+        Ok(FrameStream {
+            pipeline,
+            rx,
+            sensor: Some(sensor),
+            stop,
+            rejected,
+            batcher,
+            window: opts.window.max(1),
+            target: opts.num_frames,
+            routed: 0,
+            emitted: 0,
+            next_emit: 0,
+            pending: BTreeMap::new(),
+            iou_sum: 0.0,
+            correct: 0,
+            failed: false,
+            patch_px,
+        })
+    }
+
+    /// Stop the sensor thread and join it (idempotent).
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Drain leftovers so the producer side quiesces, then join.
+        while self.rx.try_recv().is_ok() {}
+        if let Some(h) = self.sensor.take() {
+            h.join().ok();
+        }
+    }
+
+    /// Complete one flushed lane group and park its results for in-order
+    /// emission.
+    fn complete(&mut self, group: Vec<StreamItem>) -> Result<()> {
+        let mut meta = Vec::with_capacity(group.len());
+        let mut rfs = Vec::with_capacity(group.len());
+        for item in group {
+            meta.push((item.seq, item.iou, item.rf.label));
+            rfs.push(item.rf);
+        }
+        let results = self.pipeline.complete_batch(rfs)?;
+        for ((seq, iou, label), result) in meta.into_iter().zip(results) {
+            let correct = result.predicted_class() == label;
+            self.pending.insert(seq, PendingResult { result, iou, correct });
+        }
+        Ok(())
+    }
+
+    /// One step of forward progress: flush a matured lane, enforce the
+    /// reassembly window, drain lanes at end of input, or route the next
+    /// sensor frame.
+    fn advance(&mut self) -> Result<()> {
+        let now = Instant::now();
+        // 1. Deadline flushes come first: a lane past `max_wait` must not
+        //    wait behind new arrivals.
+        if let Some((_bucket, group)) = self.batcher.poll(now) {
+            return self.complete(group);
+        }
+        // 2. Bounded reassembly window: when buffered results + laned
+        //    frames reach the window, force the longest-waiting lane out
+        //    so the head of the stream can make progress.
+        if self.pending.len() + self.batcher.pending() >= self.window {
+            if let Some((_bucket, group)) = self.batcher.flush_oldest() {
+                return self.complete(group);
             }
-            Err(e) => {
-                // Stop the sensor before propagating, or it spins forever.
-                serve_err = Some(e);
-                break;
+        }
+        // 3. End of input: drain remaining lanes.
+        if self.routed >= self.target {
+            if let Some((_bucket, group)) = self.batcher.flush_oldest() {
+                return self.complete(group);
+            }
+            // Every routed frame is laned, pending, or emitted, and the
+            // caller only reaches here wanting more — so an empty batcher
+            // here means results were lost. Fail loudly rather than spin.
+            anyhow::bail!(
+                "frame stream stalled: {} of {} frames emitted with no work in flight",
+                self.emitted,
+                self.target
+            );
+        }
+        // 4. Route the next frame, waiting no longer than the earliest
+        //    lane deadline.
+        let timeout = self
+            .batcher
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(now).max(Duration::from_micros(50)))
+            .unwrap_or(SENSOR_IDLE_TIMEOUT)
+            .min(SENSOR_IDLE_TIMEOUT);
+        match recv_frame(&self.rx, timeout) {
+            Some(frame) => {
+                let gt = frame.gt_mask(self.patch_px);
+                // Degenerate per-frame policy (the default): keep the
+                // allocation-free `process_frame` fast path — every push
+                // would flush a singleton lane anyway, and `RoutedFrame`
+                // would copy the staged bucket tensors for nothing.
+                if self.batcher.policy().max_batch <= 1 {
+                    let result = self.pipeline.process_frame(&frame)?;
+                    let iou = result.mask.iou(&gt);
+                    let correct = result.predicted_class() == frame.label;
+                    self.pending.insert(self.routed, PendingResult { result, iou, correct });
+                    self.routed += 1;
+                    if self.routed >= self.target {
+                        self.stop.store(true, Ordering::Relaxed);
+                    }
+                    return Ok(());
+                }
+                let rf = self.pipeline.route_frame(&frame)?;
+                let iou = rf.mask.iou(&gt);
+                let bucket = rf.bucket;
+                let item = StreamItem { seq: self.routed, iou, rf };
+                self.routed += 1;
+                if self.routed >= self.target {
+                    // The sensor has nothing left to contribute; stop it
+                    // now so tail rejections don't pile up while the last
+                    // lanes drain.
+                    self.stop.store(true, Ordering::Relaxed);
+                }
+                if let Some((_bucket, group)) = self.batcher.push(bucket, item, Instant::now()) {
+                    return self.complete(group);
+                }
+                Ok(())
+            }
+            None => {
+                // Timeout. With lanes pending this is just the deadline
+                // bounding the wait; with an idle batcher after a full
+                // quiet period, the producer is gone — end the stream at
+                // what we have (the pre-streaming `serve` did the same).
+                if self.batcher.is_empty() && timeout >= SENSOR_IDLE_TIMEOUT {
+                    self.target = self.routed;
+                }
+                Ok(())
             }
         }
     }
-    stop.store(true, Ordering::Relaxed);
-    // Drain so the sensor thread unblocks, then join.
-    while rx.try_recv().is_ok() {}
-    sensor.join().ok();
-    if let Some(e) = serve_err {
-        return Err(e);
+
+    fn next_result(&mut self) -> Option<Result<FrameResult>> {
+        loop {
+            if let Some(p) = self.pending.remove(&self.next_emit) {
+                self.next_emit += 1;
+                self.emitted += 1;
+                self.iou_sum += p.iou;
+                self.correct += p.correct as u64;
+                return Some(Ok(p.result));
+            }
+            if self.failed {
+                return None;
+            }
+            if self.emitted >= self.target {
+                self.shutdown();
+                return None;
+            }
+            if let Err(e) = self.advance() {
+                self.failed = true;
+                self.shutdown();
+                return Some(Err(e));
+            }
+        }
     }
 
-    let m = &pipeline.metrics;
-    let busy_s = m.stage_sum_s("total");
-    let elapsed_s = m.run_elapsed_s();
-    Ok(ServeReport {
-        backend: pipeline.backend_name().to_string(),
-        frames: done,
-        dropped: rejected.load(Ordering::Relaxed),
-        wall_fps: m.wall_fps(),
-        mean_latency_s: m.frame_latency_mean_s(),
-        mean_energy_j: m.mean_energy_j(),
-        modeled_kfps_per_watt: m.modeled_kfps_per_watt(),
-        mean_kept_patches: m.mean_kept_patches(),
-        mean_mask_iou: if done > 0 { iou_sum / done as f64 } else { 0.0 },
-        top1_accuracy: if done > 0 { correct as f64 / done as f64 } else { 0.0 },
-        workers: 1,
-        per_worker: vec![WorkerStats {
-            worker: 0,
+    /// Results buffered out of order right now (always `< window` plus
+    /// the group that completed last).
+    pub fn buffered(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Snapshot of the run summary so far — after the stream is drained
+    /// this is the full [`ServeReport`] the pre-streaming `serve`
+    /// returned.
+    pub fn report(&self) -> ServeReport {
+        let m = &self.pipeline.metrics;
+        let busy_s = m.stage_sum_s("total");
+        let elapsed_s = m.run_elapsed_s();
+        let done = self.emitted;
+        ServeReport {
+            backend: self.pipeline.backend_name().to_string(),
             frames: done,
-            busy_s,
-            utilization: if elapsed_s > 0.0 { (busy_s / elapsed_s).min(1.0) } else { 0.0 },
-        }],
-    })
+            dropped: self.rejected.load(Ordering::Relaxed),
+            wall_fps: m.wall_fps(),
+            mean_latency_s: m.frame_latency_mean_s(),
+            mean_energy_j: m.mean_energy_j(),
+            modeled_kfps_per_watt: m.modeled_kfps_per_watt(),
+            mean_kept_patches: m.mean_kept_patches(),
+            mean_batch: m.mean_batch(),
+            mean_mask_iou: if done > 0 { self.iou_sum / done as f64 } else { 0.0 },
+            top1_accuracy: if done > 0 { self.correct as f64 / done as f64 } else { 0.0 },
+            workers: 1,
+            per_worker: vec![WorkerStats {
+                worker: 0,
+                frames: done,
+                busy_s,
+                utilization: if elapsed_s > 0.0 { (busy_s / elapsed_s).min(1.0) } else { 0.0 },
+            }],
+        }
+    }
+
+    /// Drain the rest of the stream (propagating any serving error) and
+    /// derive the terminal [`ServeReport`] from it.
+    pub fn finish(mut self) -> Result<ServeReport> {
+        while let Some(r) = self.next_result() {
+            r?;
+        }
+        Ok(self.report())
+    }
+}
+
+impl<B: Backend> Iterator for FrameStream<'_, B> {
+    type Item = Result<FrameResult>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        self.next_result()
+    }
+}
+
+impl<B: Backend> Drop for FrameStream<'_, B> {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Drive a pipeline from a live sensor thread and return the result
+/// **stream**: an iterator of in-order [`FrameResult`]s with a bounded
+/// reassembly window (see [`FrameStream`]). The sensor produces frames as
+/// fast as the queue accepts them; a full queue drops frames (real
+/// near-sensor backpressure). Derive the terminal summary with
+/// [`FrameStream::finish`]:
+///
+/// ```ignore
+/// let report = serve(&mut pipeline, &ServeOptions::frames(100))?.finish()?;
+/// ```
+pub fn serve<'p, B: Backend>(
+    pipeline: &'p mut Pipeline<B>,
+    opts: &ServeOptions,
+) -> Result<FrameStream<'p, B>> {
+    FrameStream::new(pipeline, opts)
 }
 
 #[cfg(test)]
@@ -630,6 +1147,97 @@ mod tests {
         };
         // Must not panic; any in-range index is acceptable.
         assert!(r.predicted_class() < 3);
+    }
+
+    #[test]
+    fn route_then_complete_matches_process_frame() {
+        let mut src = VideoSource::new(96, 2, 42);
+        let frame = src.next_frame();
+        let mut direct_p = Pipeline::with_backend(PipelineConfig::tiny_96(), host()).unwrap();
+        let mut split_p = Pipeline::with_backend(PipelineConfig::tiny_96(), host()).unwrap();
+        let direct = direct_p.process_frame(&frame).unwrap();
+        let rf = split_p.route_frame(&frame).unwrap();
+        assert_eq!(rf.bucket, direct.bucket);
+        assert_eq!(rf.frame_index, direct.frame_index);
+        let batched = split_p.complete_batch(vec![rf]).unwrap();
+        assert_eq!(batched.len(), 1);
+        assert_eq!(batched[0].logits, direct.logits, "split-phase must match the fast path");
+        assert_eq!(batched[0].mask, direct.mask);
+        assert_eq!(batched[0].modeled_energy_j, direct.modeled_energy_j);
+    }
+
+    #[test]
+    fn same_bucket_batch_amortizes_energy() {
+        let mut src = VideoSource::new(96, 2, 42);
+        let frame = src.next_frame();
+        let mut p = Pipeline::with_backend(PipelineConfig::tiny_96(), host()).unwrap();
+        let a = p.route_frame(&frame).unwrap();
+        let b = p.route_frame(&frame).unwrap();
+        let rs = p.complete_batch(vec![a, b]).unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].logits, rs[1].logits, "same frame must give identical logits");
+        assert!(
+            rs[1].modeled_energy_j < rs[0].modeled_energy_j,
+            "the follower frame must amortize weight-programming energy \
+             ({} !< {})",
+            rs[1].modeled_energy_j,
+            rs[0].modeled_energy_j
+        );
+        assert!(rs[1].modeled_energy_j > 0.0);
+        assert!((p.metrics.mean_batch() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn follower_energy_discount_is_strict_but_bounded() {
+        let p = Pipeline::with_backend(PipelineConfig::tiny_96(), host()).unwrap();
+        for kept in [1usize, 12, 36] {
+            let first = p.modeled_energy_j(kept, true);
+            let follow = p.modeled_energy_j(kept, false);
+            assert!(follow > 0.0, "kept {kept}: follower energy must stay positive");
+            assert!(follow < first, "kept {kept}: follower must model less energy");
+        }
+        let mut cfg = PipelineConfig::tiny_96();
+        cfg.use_mask = false;
+        let pf = Pipeline::with_backend(cfg, host()).unwrap();
+        let first = pf.modeled_energy_j(36, true);
+        let follow = pf.modeled_energy_j(36, false);
+        assert!(follow > 0.0 && follow < first, "unmasked runs amortize too");
+    }
+
+    #[test]
+    fn complete_batch_rejects_mixed_and_empty_groups() {
+        let mut p = Pipeline::with_backend(PipelineConfig::tiny_96(), host()).unwrap();
+        assert!(p.complete_batch(Vec::new()).is_err(), "empty group");
+        let dummy = |bucket: usize| RoutedFrame {
+            frame_index: 0,
+            label: 0,
+            bucket,
+            kept_count: 1,
+            mask: PatchMask::full(6),
+            patches: vec![0.0; bucket * 768],
+            pos_idx: vec![0.0; bucket],
+            valid: vec![0.0; bucket],
+            front_s: 0.0,
+            staged_at: Instant::now(),
+        };
+        let err = p.complete_batch(vec![dummy(9), dummy(18)]).unwrap_err();
+        assert!(err.to_string().contains("single-bucket"), "{err}");
+    }
+
+    #[test]
+    fn process_batch_preserves_input_order() {
+        let mut src = VideoSource::new(96, 2, 21);
+        let frames: Vec<_> = (0..5).map(|_| src.next_frame()).collect();
+        let mut batch_p = Pipeline::with_backend(PipelineConfig::tiny_96(), host()).unwrap();
+        let mut seq_p = Pipeline::with_backend(PipelineConfig::tiny_96(), host()).unwrap();
+        let batched = batch_p.process_batch(&frames).unwrap();
+        assert_eq!(batched.len(), frames.len());
+        for (frame, r) in frames.iter().zip(&batched) {
+            assert_eq!(r.frame_index, frame.index, "results must come back in input order");
+            let direct = seq_p.process_frame(frame).unwrap();
+            assert_eq!(r.logits, direct.logits, "bucket-major grouping must not change numerics");
+            assert_eq!(r.bucket, direct.bucket);
+        }
     }
 
     #[test]

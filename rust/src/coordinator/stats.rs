@@ -12,6 +12,9 @@ pub struct StageMetrics {
     energy: Accumulator,
     /// Kept-patch counts.
     kept: Accumulator,
+    /// Size of the micro-batch each frame rode in (1 on the per-frame
+    /// path), frame-weighted.
+    batch: Accumulator,
     start: Option<Instant>,
     frames: u64,
 }
@@ -44,6 +47,19 @@ impl StageMetrics {
         self.energy.push(energy_j);
         self.kept.push(kept_patches as f64);
         self.frames += 1;
+    }
+
+    /// Record the micro-batch size one frame was executed in (1 on the
+    /// per-frame path). Frame-weighted, so `mean_batch` answers "how many
+    /// frames shared this frame's dispatch on average".
+    pub fn record_batch_size(&mut self, size: usize) {
+        self.batch.push(size as f64);
+    }
+
+    /// Mean micro-batch size across recorded frames (0.0 before any
+    /// frame).
+    pub fn mean_batch(&self) -> f64 {
+        self.batch.mean()
     }
 
     pub fn frames(&self) -> u64 {
@@ -88,12 +104,17 @@ impl StageMetrics {
     }
 
     /// Mean *reported* per-frame latency: the `"modeled"` stage when a
-    /// simulating backend charged accelerator time, host wall-clock
-    /// (`"total"`) otherwise. Keeping the two stages separate preserves
-    /// busy-time/utilization accounting, which is always wall-clock.
+    /// simulating backend charged accelerator time; otherwise the
+    /// `"latency"` stage (host wall-clock **including** micro-batch lane
+    /// wait, recorded by the batched pipeline path); otherwise plain
+    /// `"total"` wall-clock. Keeping the stages separate preserves
+    /// busy-time/utilization accounting, which is always compute-only
+    /// wall-clock (`"total"`).
     pub fn frame_latency_mean_s(&self) -> f64 {
         if self.has_stage("modeled") {
             self.stage_mean_s("modeled")
+        } else if self.has_stage("latency") {
+            self.stage_mean_s("latency")
         } else {
             self.stage_mean_s("total")
         }
@@ -120,6 +141,7 @@ impl StageMetrics {
         }
         self.energy.merge(&other.energy);
         self.kept.merge(&other.kept);
+        self.batch.merge(&other.batch);
         self.frames += other.frames;
         // Earliest start wins so wall_fps spans the whole merged run.
         self.start = match (self.start, other.start) {
@@ -162,6 +184,10 @@ mod tests {
         m.record_stage("backbone", 0.010);
         m.record_frame(1e-5, 12);
         m.record_frame(2e-5, 14);
+        assert_eq!(m.mean_batch(), 0.0, "no batch sizes recorded yet");
+        m.record_batch_size(1);
+        m.record_batch_size(3);
+        assert!((m.mean_batch() - 2.0).abs() < 1e-12);
         assert_eq!(m.frames(), 2);
         assert!((m.stage_mean_s("mgnet") - 0.003).abs() < 1e-12);
         assert!((m.mean_energy_j() - 1.5e-5).abs() < 1e-12);
@@ -184,6 +210,11 @@ mod tests {
         let mut m = StageMetrics::new();
         m.record_stage("total", 0.010);
         assert!((m.frame_latency_mean_s() - 0.010).abs() < 1e-15, "wall-clock by default");
+        // The batched path's wait-inclusive "latency" stage beats plain
+        // compute time...
+        m.record_stage("latency", 0.015);
+        assert!((m.frame_latency_mean_s() - 0.015).abs() < 1e-15, "lane wait must be reported");
+        // ...and a simulating backend's modeled time beats both.
         m.record_stage("modeled", 2e-6);
         assert!(m.has_stage("modeled"));
         assert!(
@@ -215,6 +246,8 @@ mod tests {
         for (i, e) in [1e-5, 2e-5, 3e-5, 4e-5].iter().enumerate() {
             whole.record_frame(*e, 10 + i);
             parts[i % 3].record_frame(*e, 10 + i);
+            whole.record_batch_size(1 + i % 2);
+            parts[i % 3].record_batch_size(1 + i % 2);
         }
         let mut merged = StageMetrics::new();
         for p in &parts {
@@ -225,6 +258,7 @@ mod tests {
         assert!((merged.stage_sum_s("backbone") - whole.stage_sum_s("backbone")).abs() < 1e-15);
         assert!((merged.mean_energy_j() - whole.mean_energy_j()).abs() < 1e-18);
         assert!((merged.mean_kept_patches() - whole.mean_kept_patches()).abs() < 1e-12);
+        assert!((merged.mean_batch() - whole.mean_batch()).abs() < 1e-12);
         let wr = whole.stage_rows();
         let mr = merged.stage_rows();
         assert_eq!(wr.len(), mr.len());

@@ -236,6 +236,43 @@ impl AcceleratorModel {
         e
     }
 
+    /// The share of one forward's modeled **delay** that a bucket-major
+    /// batch pays only once: streaming the stationary weights from buffer
+    /// memory into the MR banks. Frames after the first in a same-shape
+    /// batch reuse the programmed banks, so their memory stage shrinks by
+    /// exactly this amount — the photonic analogue of the dispatch
+    /// overhead batched execution amortizes.
+    pub fn weight_stream_delay_s(
+        &self,
+        cfg: &VitConfig,
+        kept_patches: usize,
+        decomposed: bool,
+    ) -> f64 {
+        let w = Workload::vit(cfg, kept_patches, decomposed);
+        let core = OpticalCore::new(self.cores);
+        let cost = core.workload_cost(&w);
+        cost.weight_bytes as f64 / self.components.memory.bandwidth_bytes_per_ns * 1e-9
+    }
+
+    /// The share of one forward's modeled **energy** that a bucket-major
+    /// batch pays only once: MR weight-bank programming (weight-side DAC
+    /// conversions + per-MR retune energy) and the weight memory traffic
+    /// feeding it. Strictly a subset of [`Self::frame_energy`]'s total, so
+    /// a follower frame's discounted energy can never go negative.
+    pub fn weight_program_energy_j(
+        &self,
+        cfg: &VitConfig,
+        kept_patches: usize,
+        decomposed: bool,
+    ) -> f64 {
+        let w = Workload::vit(cfg, kept_patches, decomposed);
+        let core = OpticalCore::new(self.cores);
+        let cost = core.workload_cost(&w);
+        let m = &self.components;
+        cost.weight_dac_conversions as f64 * (m.tuning.energy_pj_per_mr + m.dac.energy_pj) * 1e-12
+            + cost.weight_bytes as f64 * m.memory.energy_pj_per_byte * 1e-12
+    }
+
     /// Report for backbone + MGNet front end at a given RoI keep count
     /// (the Figs. 10/11 "with MGNet" series): MGNet always sees the full
     /// frame; the backbone sees only kept patches.
@@ -380,6 +417,34 @@ mod tests {
         // With heater hold power the tuning share must exceed the ADC share —
         // the design-space point the paper's VCSEL-input choice argues against.
         assert!(e.tuning_j > e.adc_j, "{e:?}");
+    }
+
+    #[test]
+    fn weight_program_overhead_is_a_strict_subset() {
+        // The batched-dispatch discount must be positive yet strictly
+        // smaller than the full per-frame figures it is subtracted from.
+        let m = model();
+        for (v, res, kept) in [
+            (VitVariant::Tiny, 96, 12),
+            (VitVariant::Tiny, 96, 36),
+            (VitVariant::Base, 224, 65),
+        ] {
+            let cfg = VitConfig::variant(v, res, 10);
+            let e_over = m.weight_program_energy_j(&cfg, kept, true);
+            let e_full = m.frame_energy(&cfg, kept, true).total_j();
+            assert!(e_over > 0.0, "{v}-{res}: overhead energy must be positive");
+            assert!(
+                e_over < e_full,
+                "{v}-{res}: overhead {e_over} must be below frame energy {e_full}"
+            );
+            let d_over = m.weight_stream_delay_s(&cfg, kept, true);
+            let d_full = m.frame_report("x", &cfg, kept, true).delay.total_s();
+            assert!(d_over > 0.0, "{v}-{res}: overhead delay must be positive");
+            assert!(
+                d_over < d_full,
+                "{v}-{res}: overhead {d_over} must be below frame delay {d_full}"
+            );
+        }
     }
 
     #[test]

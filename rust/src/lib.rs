@@ -26,14 +26,27 @@
 //! at all, and `--backend sim` keeps the host numerics while charging
 //! modeled photonic-core latency from [`arch`]/[`energy`].
 //!
-//! Host-side serving scales across cores with `optovit serve --workers N`:
-//! the [`coordinator::engine`] shards frames over N worker threads, each
+//! Execution is **batch-first**: [`runtime::Backend::execute_batch`] runs
+//! one bucket artifact over N frames per call (all three backends
+//! implement it natively), the coordinator accumulates routed frames in a
+//! bucket-major [`coordinator::batcher::MicroBatcher`] behind a
+//! `max_batch`/`max_wait` deadline policy, and serving **streams**:
+//! [`coordinator::pipeline::serve`] returns a
+//! [`coordinator::pipeline::FrameStream`] — an iterator of in-order
+//! results with a bounded reassembly window — from which the terminal
+//! `ServeReport` is derived.
+//!
+//! Host-side serving scales across cores with `optovit serve --workers N`
+//! (and batches within each worker via `--batch B`): the
+//! [`coordinator::engine`] shards frames over N worker threads, each
 //! constructing its own (non-`Send`) backend via a
-//! [`runtime::BackendFactory`], and reassembles results in order. The
-//! per-frame hot path is allocation-free in steady state (see
+//! [`runtime::BackendFactory`], micro-batching its queue, and reassembles
+//! results in order inside a bounded window. The per-frame hot path is
+//! allocation-free in steady state (see
 //! [`coordinator::pipeline::FrameScratch`]); `cargo bench --bench
-//! serve_scaling` sweeps worker counts over whichever backend is available
-//! and writes the machine-readable `BENCH_serve.json` trajectory.
+//! serve_scaling` sweeps worker counts × batch sizes over whichever
+//! backend is available and writes the machine-readable `BENCH_serve.json`
+//! trajectory.
 //!
 //! ## Module map
 //!
@@ -46,8 +59,8 @@
 //! | [`quant`] | int8 symmetric quantization |
 //! | [`roi`] | patch masks and skip-ratio accounting |
 //! | [`sensor`] | synthetic CMOS sensor / video workload generator |
-//! | [`runtime`] | pluggable execution backends behind the `Backend` trait: `pjrt` (compiled HLO), `host` (pure-Rust reference), `sim` (host numerics + modeled photonic timing), plus per-worker `BackendFactory` construction |
-//! | [`coordinator`] | the serving engine, generic over any backend: zero-allocation frame pipeline, bucket routing, sharded multi-worker dispatch (dispatcher → N workers → in-order reassembler), merged metrics |
+//! | [`runtime`] | pluggable batch-first execution backends behind the `Backend` trait (`execute_batch` = N frames/call, natively in all three): `pjrt` (compiled HLO), `host` (pure-Rust reference), `sim` (host numerics + batch-aware modeled photonic timing), plus per-worker `BackendFactory` construction |
+//! | [`coordinator`] | the serving engine, generic over any backend: zero-allocation frame pipeline, bucket routing, bucket-major micro-batching (`MicroBatcher`), streaming `FrameStream` serve with bounded reassembly, sharded multi-worker dispatch (dispatcher → N micro-batching workers → in-order reassembler), merged metrics |
 //! | [`baselines`] | Table-IV competitor accelerator models + platform refs |
 //! | [`cli`] | dependency-free argument parsing |
 //! | [`util`] | PRNG, stats, table formatting, property-test helpers |

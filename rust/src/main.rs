@@ -3,6 +3,7 @@
 //!
 //! ```text
 //! optovit serve   [--backend pjrt|host|sim] [--frames N] [--workers W] [--queue D]
+//!                 [--batch B] [--batch-wait-us U] [--window W]
 //!                 [--no-mask] [--seed S] [--objects K] [--artifacts DIR]
 //! optovit report  [--decomposed true]        # Fig. 8/9 energy+delay grid
 //! optovit roi     [--size 96|224]            # Fig. 10/11 operating points
@@ -17,8 +18,9 @@
 
 use optovit::baselines;
 use optovit::cli::Args;
+use optovit::coordinator::batcher::BatchPolicy;
 use optovit::coordinator::engine::serve_sharded;
-use optovit::coordinator::pipeline::{serve, Pipeline, PipelineConfig, ServeReport};
+use optovit::coordinator::pipeline::{serve, Pipeline, PipelineConfig, ServeOptions, ServeReport};
 use optovit::coordinator::stats::StageMetrics;
 use optovit::energy::AcceleratorModel;
 use optovit::photonics::fpv::FpvModel;
@@ -60,6 +62,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let objects = args.get_usize("objects", 2).map_err(anyhow::Error::msg)?;
     let workers = args.get_usize("workers", 1).map_err(anyhow::Error::msg)?.max(1);
     let queue_depth = args.get_usize("queue", 4).map_err(anyhow::Error::msg)?.max(1);
+    let batch = args.get_usize("batch", 1).map_err(anyhow::Error::msg)?.max(1);
+    let batch_wait = args.get_duration_us("batch-wait-us", 500).map_err(anyhow::Error::msg)?;
+    let window = args.get_usize("window", 64).map_err(anyhow::Error::msg)?.max(1);
     let artifact_dir = args.get_or("artifacts", "artifacts").to_string();
     // `BackendKind::from_str` is the single source of truth for the
     // choice set (its error already lists the choices).
@@ -71,6 +76,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     // The host/sim reference models build their classifier head from the
     // factory config; keep it in lockstep with the pipeline's head width.
     factory.host.num_classes = cfg.num_classes;
+    let opts = ServeOptions {
+        sensor_seed: seed,
+        num_objects: objects,
+        num_frames: frames,
+        queue_depth,
+        batch: BatchPolicy::batched(batch, batch_wait),
+        window,
+    };
     match kind {
         BackendKind::Pjrt => println!("warming up (compiling artifacts)..."),
         BackendKind::Host | BackendKind::Sim => {
@@ -78,10 +91,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         }
     }
     let (r, metrics) = if workers > 1 {
-        serve_sharded(&cfg, &factory, workers, queue_depth, seed, objects, frames)?
+        serve_sharded(&cfg, &factory, workers, &opts)?
     } else {
+        // `serve` returns the result stream; draining it through `finish`
+        // derives the terminal report from the streamed frames.
         let mut p = Pipeline::with_backend(cfg, factory.create(0)?)?;
-        let r = serve(&mut p, seed, objects, frames, queue_depth)?;
+        let r = serve(&mut p, &opts)?.finish()?;
         let metrics = std::mem::take(&mut p.metrics);
         (r, metrics)
     };
@@ -103,6 +118,7 @@ fn print_serve_report(r: &ServeReport, metrics: &StageMetrics) {
     );
     println!("mean modeled energy  {}/frame", si_energy(r.mean_energy_j));
     println!("modeled efficiency   {:.1} KFPS/W", r.modeled_kfps_per_watt);
+    println!("mean micro-batch     {:.2} frames/dispatch", r.mean_batch);
     println!("mean kept patches    {:.1} / 36", r.mean_kept_patches);
     println!("mask IoU vs GT       {:.3}", r.mean_mask_iou);
     println!("top-1 vs synth label {:.3}", r.top1_accuracy);

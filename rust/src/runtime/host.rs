@@ -453,6 +453,53 @@ impl HostBackend {
     }
 }
 
+/// One frame through a resolved module: arity/shape validation + forward.
+/// Shared by `execute` and the native `execute_batch`, so batched results
+/// are bitwise-identical to sequential ones by construction.
+fn run_artifact(
+    spec: &ArtifactSpec,
+    vit: &mut HostVit,
+    artifact: &str,
+    inputs: &[TensorRef<'_>],
+) -> Result<Vec<Vec<f32>>> {
+    let patch_dim = vit.cfg.patch_dim();
+    let out = match *spec {
+        ArtifactSpec::Mgnet { .. } => {
+            let n = vit.cfg.num_patches();
+            ensure!(inputs.len() == 1, "mgnet artifact takes 1 input, got {}", inputs.len());
+            ensure!(
+                inputs[0].data.len() == n * patch_dim,
+                "mgnet input has {} values, expected {}x{}",
+                inputs[0].data.len(),
+                n,
+                patch_dim
+            );
+            vit.forward(inputs[0].data, n, None, None)
+        }
+        ArtifactSpec::Backbone { bucket, .. } => {
+            ensure!(
+                inputs.len() == 3,
+                "backbone artifact takes (patches, pos_idx, valid), got {} inputs",
+                inputs.len()
+            );
+            ensure!(
+                inputs[0].data.len() == bucket * patch_dim,
+                "backbone patches have {} values, expected {}x{}",
+                inputs[0].data.len(),
+                bucket,
+                patch_dim
+            );
+            ensure!(
+                inputs[1].data.len() == bucket && inputs[2].data.len() == bucket,
+                "pos_idx/valid must each have {bucket} slots"
+            );
+            vit.forward(inputs[0].data, bucket, Some(inputs[1].data), Some(inputs[2].data))
+        }
+    }
+    .with_context(|| format!("host execution of artifact '{artifact}'"))?;
+    Ok(vec![out])
+}
+
 impl Backend for HostBackend {
     fn name(&self) -> &'static str {
         "host"
@@ -478,42 +525,23 @@ impl Backend for HostBackend {
     fn execute(&mut self, artifact: &str, inputs: &[TensorRef<'_>]) -> Result<Vec<Vec<f32>>> {
         self.load(artifact)?;
         let (spec, vit) = self.modules.get_mut(artifact).expect("just loaded");
-        let patch_dim = vit.cfg.patch_dim();
-        let out = match *spec {
-            ArtifactSpec::Mgnet { .. } => {
-                let n = vit.cfg.num_patches();
-                ensure!(inputs.len() == 1, "mgnet artifact takes 1 input, got {}", inputs.len());
-                ensure!(
-                    inputs[0].data.len() == n * patch_dim,
-                    "mgnet input has {} values, expected {}x{}",
-                    inputs[0].data.len(),
-                    n,
-                    patch_dim
-                );
-                vit.forward(inputs[0].data, n, None, None)
-            }
-            ArtifactSpec::Backbone { bucket, .. } => {
-                ensure!(
-                    inputs.len() == 3,
-                    "backbone artifact takes (patches, pos_idx, valid), got {} inputs",
-                    inputs.len()
-                );
-                ensure!(
-                    inputs[0].data.len() == bucket * patch_dim,
-                    "backbone patches have {} values, expected {}x{}",
-                    inputs[0].data.len(),
-                    bucket,
-                    patch_dim
-                );
-                ensure!(
-                    inputs[1].data.len() == bucket && inputs[2].data.len() == bucket,
-                    "pos_idx/valid must each have {bucket} slots"
-                );
-                vit.forward(inputs[0].data, bucket, Some(inputs[1].data), Some(inputs[2].data))
-            }
-        }
-        .with_context(|| format!("host execution of artifact '{artifact}'"))?;
-        Ok(vec![out])
+        run_artifact(spec, vit, artifact, inputs)
+    }
+
+    /// Native batched execution: the module (and its preallocated scratch)
+    /// is resolved **once** for the whole batch, then the reference forward
+    /// runs back-to-back over every frame — the host-side analogue of
+    /// keeping the photonic weight banks programmed across a bucket-major
+    /// batch. Numerics are bitwise-identical to sequential `execute` calls
+    /// (same `run_artifact` body, same scratch reuse discipline).
+    fn execute_batch(
+        &mut self,
+        artifact: &str,
+        batch: &[&[TensorRef<'_>]],
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        self.load(artifact)?;
+        let (spec, vit) = self.modules.get_mut(artifact).expect("just loaded");
+        batch.iter().map(|inputs| run_artifact(spec, vit, artifact, inputs)).collect()
     }
 }
 
@@ -605,6 +633,33 @@ mod tests {
         let lc = c.execute1("vit_tiny_32_n2", &ins).unwrap();
         assert_ne!(la, lc, "different seeds must give different weights");
         assert_eq!(la.len(), cfg1().num_classes);
+    }
+
+    #[test]
+    fn execute_batch_is_bitwise_sequential() {
+        let xa = patches(2, |i| (i % 13) as f32 / 13.0);
+        let xb = patches(2, |i| (i % 5) as f32 / 5.0);
+        let dims = [2i64, PD as i64];
+        let vdims = [2i64];
+        let pos = [0.0f32, 3.0];
+        let valid = [1.0f32, 1.0];
+        let fa =
+            [TensorRef::new(&xa, &dims), TensorRef::new(&pos, &vdims), TensorRef::new(&valid, &vdims)];
+        let fb =
+            [TensorRef::new(&xb, &dims), TensorRef::new(&pos, &vdims), TensorRef::new(&valid, &vdims)];
+        let batch: Vec<&[TensorRef<'_>]> = vec![&fa, &fb, &fa];
+        let mut b = HostBackend::new(cfg1());
+        let batched = b.execute_batch("vit_tiny_32_n2", &batch).expect("batched");
+        let sa = b.execute("vit_tiny_32_n2", &fa).expect("seq a");
+        let sb = b.execute("vit_tiny_32_n2", &fb).expect("seq b");
+        assert_eq!(batched.len(), 3);
+        assert_eq!(batched[0], sa);
+        assert_eq!(batched[1], sb);
+        assert_eq!(batched[2], sa, "repeated frame in a batch must be pure");
+        // A bad frame anywhere in the batch fails the whole call.
+        let short = [TensorRef::new(&xa, &dims)];
+        let bad: Vec<&[TensorRef<'_>]> = vec![&fa, &short];
+        assert!(b.execute_batch("vit_tiny_32_n2", &bad).is_err());
     }
 
     #[test]

@@ -16,6 +16,18 @@
 //! PJRT resolves them on disk, the host/sim backends materialize them from
 //! [`crate::vit`] configs.
 //!
+//! The execution contract is **batch-first**: [`Backend::execute_batch`]
+//! runs one artifact over N frames per call (the serving coordinator's
+//! bucket-major micro-batches), [`Backend::execute`] is the degenerate
+//! one-frame case, and all three backends implement the batched entry
+//! natively:
+//!
+//! | backend | native `execute_batch` | what amortizes across the batch |
+//! |---|---|---|
+//! | `pjrt` | resolves + compiles the artifact once, drives one cached executable back-to-back | per-call artifact resolution + cache lookup |
+//! | `host` | resolves the module once, reuses its scratch across the batch | module lookup + spec dispatch |
+//! | `sim`  | host numerics + batched photonic delay/energy model | MR weight-bank programming (weight DAC + weight memory traffic) |
+//!
 //! None of the implementations is `Send` by contract (the PJRT client is
 //! `Rc`-backed), so sharded serving constructs one backend per worker
 //! thread through a [`BackendFactory`] — see [`crate::coordinator::engine`].
@@ -95,8 +107,34 @@ impl AsTensorRef for TensorRef<'_> {
     }
 }
 
+/// Per-stage modeled frame latency reported by a simulating backend
+/// ([`SimBackend`]): the MGNet front end and the backbone are separate
+/// stages on the five-core accelerator, and the serving metrics record
+/// them separately (`"modeled_mgnet"` / `"modeled_backbone"`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModeledStages {
+    /// MGNet front-end latency (0 on unmasked runs — MGNet never executes).
+    pub mgnet_s: f64,
+    /// Backbone latency at the frame's kept-patch count.
+    pub backbone_s: f64,
+}
+
+impl ModeledStages {
+    /// End-to-end modeled frame latency.
+    pub fn total_s(&self) -> f64 {
+        self.mgnet_s + self.backbone_s
+    }
+}
+
 /// An execution substrate for the serving pipeline: loads artifacts by name
 /// and executes them over borrowed tensor views.
+///
+/// The contract is **batch-first**: [`Backend::execute_batch`] is the
+/// primitive the serving coordinator drives (the bucket router hands every
+/// flushed micro-batch to one call), and [`Backend::execute`] is the
+/// degenerate one-frame case. All three shipped backends implement
+/// `execute_batch` natively; the default implementation loops `execute`
+/// so third-party backends keep working unchanged.
 ///
 /// Implementations are single-threaded by contract (none is required to be
 /// `Send`); sharded serving builds one instance per worker thread via
@@ -119,6 +157,31 @@ pub trait Backend {
     /// Loads the artifact first if needed.
     fn execute(&mut self, artifact: &str, inputs: &[TensorRef<'_>]) -> Result<Vec<Vec<f32>>>;
 
+    /// Execute an artifact over a **batch** of input sets (one inner slice
+    /// per frame, all at the artifact's fixed shape) and return one output
+    /// set per frame, in batch order. This is the serving coordinator's
+    /// primitive: the bucket-major micro-batcher hands every flushed group
+    /// to a single `execute_batch` call so per-dispatch overhead (artifact
+    /// resolution, module lookup, input staging setup) amortizes across
+    /// the batch.
+    ///
+    /// The default implementation loops [`Backend::execute`] — numerically
+    /// the contract is that `execute_batch` over B frames is exactly B
+    /// sequential `execute` calls (asserted bitwise for the host backend in
+    /// `rust/tests/batch_backend.rs`). All three shipped backends override
+    /// it natively.
+    fn execute_batch(
+        &mut self,
+        artifact: &str,
+        batch: &[&[TensorRef<'_>]],
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        let mut out = Vec::with_capacity(batch.len());
+        for inputs in batch {
+            out.push(self.execute(artifact, inputs)?);
+        }
+        Ok(out)
+    }
+
     /// Convenience: execute and return the single output.
     fn execute1(&mut self, artifact: &str, inputs: &[TensorRef<'_>]) -> Result<Vec<f32>> {
         let mut outs = self.execute(artifact, inputs)?;
@@ -128,11 +191,27 @@ pub trait Backend {
         Ok(outs.pop().unwrap())
     }
 
-    /// Modeled end-to-end frame latency (seconds) at a kept-patch count,
-    /// for backends that simulate accelerator timing. `None` (the default)
-    /// means latency is whatever the host wall-clock measures.
-    fn modeled_frame_latency_s(&mut self, _kept_patches: usize, _use_mask: bool) -> Option<f64> {
+    /// Modeled per-stage frame latency at a kept-patch count, for backends
+    /// that simulate accelerator timing. `first_in_batch` tells the model
+    /// whether this frame pays the weight-programming cost (streaming the
+    /// stationary weights into the MR banks) or rides a bucket-major batch
+    /// whose first frame already programmed them — follower frames model
+    /// strictly less latency, which is how batched photonic dispatch
+    /// amortizes. `None` (the default) means latency is whatever the host
+    /// wall-clock measures.
+    fn modeled_stages_s(
+        &mut self,
+        _kept_patches: usize,
+        _use_mask: bool,
+        _first_in_batch: bool,
+    ) -> Option<ModeledStages> {
         None
+    }
+
+    /// Modeled end-to-end frame latency (seconds) at a kept-patch count —
+    /// the single-frame total of [`Backend::modeled_stages_s`].
+    fn modeled_frame_latency_s(&mut self, kept_patches: usize, use_mask: bool) -> Option<f64> {
+        self.modeled_stages_s(kept_patches, use_mask, true).map(|s| s.total_s())
     }
 }
 
@@ -281,11 +360,28 @@ impl Backend for AnyBackend {
         }
     }
 
-    fn modeled_frame_latency_s(&mut self, kept_patches: usize, use_mask: bool) -> Option<f64> {
+    fn execute_batch(
+        &mut self,
+        artifact: &str,
+        batch: &[&[TensorRef<'_>]],
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
         match self {
-            AnyBackend::Pjrt(b) => b.modeled_frame_latency_s(kept_patches, use_mask),
-            AnyBackend::Host(b) => b.modeled_frame_latency_s(kept_patches, use_mask),
-            AnyBackend::Sim(b) => b.modeled_frame_latency_s(kept_patches, use_mask),
+            AnyBackend::Pjrt(b) => Backend::execute_batch(b, artifact, batch),
+            AnyBackend::Host(b) => b.execute_batch(artifact, batch),
+            AnyBackend::Sim(b) => b.execute_batch(artifact, batch),
+        }
+    }
+
+    fn modeled_stages_s(
+        &mut self,
+        kept_patches: usize,
+        use_mask: bool,
+        first_in_batch: bool,
+    ) -> Option<ModeledStages> {
+        match self {
+            AnyBackend::Pjrt(b) => b.modeled_stages_s(kept_patches, use_mask, first_in_batch),
+            AnyBackend::Host(b) => b.modeled_stages_s(kept_patches, use_mask, first_in_batch),
+            AnyBackend::Sim(b) => b.modeled_stages_s(kept_patches, use_mask, first_in_batch),
         }
     }
 }
@@ -375,6 +471,66 @@ mod tests {
             assert_eq!(b.name(), name);
             assert_eq!(b.needs_artifacts(), kind == BackendKind::Pjrt);
         }
+    }
+
+    /// Minimal third-party backend relying on the *default* `execute_batch`
+    /// (loop over `execute`): the degenerate path must stay equivalent.
+    struct EchoBackend {
+        calls: usize,
+    }
+
+    impl Backend for EchoBackend {
+        fn name(&self) -> &'static str {
+            "echo"
+        }
+        fn needs_artifacts(&self) -> bool {
+            false
+        }
+        fn load(&mut self, _artifact: &str) -> Result<()> {
+            Ok(())
+        }
+        fn is_loaded(&self, _artifact: &str) -> bool {
+            true
+        }
+        fn execute(&mut self, _artifact: &str, inputs: &[TensorRef<'_>]) -> Result<Vec<Vec<f32>>> {
+            self.calls += 1;
+            Ok(inputs.iter().map(|t| t.data.to_vec()).collect())
+        }
+    }
+
+    #[test]
+    fn default_execute_batch_loops_execute() {
+        let mut b = EchoBackend { calls: 0 };
+        let (x, y) = ([1.0f32, 2.0], [3.0f32, 4.0]);
+        let dims = [2i64];
+        let fa = [TensorRef::new(&x, &dims)];
+        let fb = [TensorRef::new(&y, &dims)];
+        let batch: Vec<&[TensorRef<'_>]> = vec![&fa, &fb];
+        let out = b.execute_batch("any", &batch).expect("default batch");
+        assert_eq!(b.calls, 2, "default impl must loop execute once per frame");
+        assert_eq!(out, vec![vec![vec![1.0, 2.0]], vec![vec![3.0, 4.0]]]);
+        // No simulated timing on the default hooks.
+        assert_eq!(b.modeled_stages_s(4, true, true), None);
+        assert_eq!(b.modeled_frame_latency_s(4, true), None);
+    }
+
+    #[test]
+    fn any_backend_batch_matches_sequential() {
+        const PD: usize = 16 * 16 * 3;
+        let host = HostConfig { depth_limit: Some(1), ..HostConfig::default() };
+        let mut any = AnyFactory { kind: BackendKind::Host, artifact_dir: String::new(), host }
+            .create(0)
+            .expect("any factory");
+        let xa: Vec<f32> = (0..4 * PD).map(|i| (i % 7) as f32 / 7.0).collect();
+        let xb: Vec<f32> = (0..4 * PD).map(|i| (i % 11) as f32 / 11.0).collect();
+        let dims = [4i64, PD as i64];
+        let fa = [TensorRef::new(&xa, &dims)];
+        let fb = [TensorRef::new(&xb, &dims)];
+        let batch: Vec<&[TensorRef<'_>]> = vec![&fa, &fb];
+        let batched = any.execute_batch("mgnet_32", &batch).expect("batched exec");
+        let sa = any.execute("mgnet_32", &fa).expect("seq a");
+        let sb = any.execute("mgnet_32", &fb).expect("seq b");
+        assert_eq!(batched, vec![sa, sb], "AnyBackend batch must match sequential bitwise");
     }
 
     #[test]

@@ -7,6 +7,7 @@ use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
+use optovit::coordinator::batcher::BatchPolicy;
 use optovit::coordinator::engine::{run, EngineConfig, FrameWorker};
 use optovit::coordinator::pipeline::FrameResult;
 use optovit::coordinator::{BucketRouter, StageMetrics};
@@ -22,6 +23,9 @@ enum Behavior {
     PanicAt(u64),
     /// Return an error on any frame with index >= n.
     ErrAt(u64),
+    /// Stall only on frame index 0 — lets every other worker race ahead,
+    /// flooding the reassembler with out-of-order results.
+    StallFirst(Duration),
 }
 
 /// Deterministic stand-in for a `Pipeline`: routes via the real
@@ -45,6 +49,7 @@ impl FrameWorker for MockWorker {
             Behavior::Uneven(base) => std::thread::sleep(base * (frame.index % 3) as u32),
             Behavior::PanicAt(n) if frame.index >= n => panic!("mock worker panic"),
             Behavior::ErrAt(n) if frame.index >= n => bail!("mock worker error"),
+            Behavior::StallFirst(d) if frame.index == 0 => std::thread::sleep(d),
             _ => {}
         }
         let mask = frame.gt_mask(PATCH_PX);
@@ -157,6 +162,69 @@ fn routing_unchanged_under_sharding() {
         }
     }
     assert!(common > 0, "runs served disjoint frame sets — cannot compare routing");
+}
+
+#[test]
+fn worker_micro_batching_preserves_order_and_counts() {
+    // Workers collect up to 4 frames per process_batch call (the default
+    // FrameWorker::process_batch loops process, so results are unchanged);
+    // reassembly must still be complete and strictly in order.
+    let mut cfg = test_cfg(2);
+    cfg.batch = BatchPolicy::batched(4, Duration::from_millis(2));
+    let mut seen = Vec::new();
+    let (report, merged) = run(
+        |_w| Ok(MockWorker::new(Behavior::Uneven(Duration::ZERO))),
+        &cfg,
+        40,
+        |r| seen.push(r.frame_index),
+    )
+    .expect("batched sharded run");
+    assert_eq!(report.frames, 40);
+    assert_eq!(seen.len(), 40);
+    for w in seen.windows(2) {
+        assert!(w[0] < w[1], "results out of order: {seen:?}");
+    }
+    assert_eq!(merged.frames(), 40);
+    assert_eq!(report.per_worker.iter().map(|w| w.frames).sum::<u64>(), 40);
+}
+
+#[test]
+fn tiny_reassembly_window_backpressures_instead_of_failing() {
+    // Window of 1 with a worker stalled on frame 0: the dispatcher must
+    // hold further dispatches (bounding the reassembler's out-of-order
+    // buffer) and the run must still complete, in order — a skewed but
+    // healthy run is never failed, it is backpressured.
+    let mut cfg = test_cfg(2);
+    cfg.reassembly_window = 1;
+    let mut seen = Vec::new();
+    let (report, _) = run(
+        |_w| Ok(MockWorker::new(Behavior::StallFirst(Duration::from_millis(150)))),
+        &cfg,
+        20,
+        |r| seen.push(r.frame_index),
+    )
+    .expect("a tiny window must backpressure, not fail");
+    assert_eq!(report.frames, 20);
+    assert_eq!(seen.len(), 20);
+    for w in seen.windows(2) {
+        assert!(w[0] < w[1], "results out of order: {seen:?}");
+    }
+}
+
+#[test]
+fn default_window_bounds_a_healthy_run() {
+    // The auto-derived window is above the in-flight bound, so a healthy
+    // uneven run never trips it.
+    let cfg = test_cfg(3);
+    assert!(cfg.effective_window() >= cfg.workers * cfg.queue_depth);
+    let (report, _) = run(
+        |_w| Ok(MockWorker::new(Behavior::Uneven(Duration::from_millis(1)))),
+        &cfg,
+        60,
+        |_r| {},
+    )
+    .expect("healthy run under the default window");
+    assert_eq!(report.frames, 60);
 }
 
 #[test]

@@ -7,8 +7,11 @@
 //! (parallel sibling tests would pollute the process-wide counter — the
 //! same discipline as `alloc_hot_path.rs`).
 
+use std::time::Duration;
+
+use optovit::coordinator::batcher::BatchPolicy;
 use optovit::coordinator::engine::{run, serve_sharded, EngineConfig};
-use optovit::coordinator::pipeline::{serve, Pipeline, PipelineConfig};
+use optovit::coordinator::pipeline::{serve, Pipeline, PipelineConfig, ServeOptions};
 use optovit::coordinator::BucketRouter;
 use optovit::runtime::{Backend, HostBackend, HostConfig, HostFactory, SimBackend};
 use optovit::sensor::VideoSource;
@@ -28,12 +31,15 @@ fn host_backend_serves_end_to_end() {
     let cfg = PipelineConfig::tiny_96();
     let router = BucketRouter::new(cfg.buckets.clone());
 
-    // --- 1. single-pipeline serve: full masked path, no artifacts ---
+    // --- 1. single-pipeline serve: full masked path, no artifacts.
+    //     `serve` streams; `finish` drains the stream into the report ---
     let mut p = Pipeline::with_backend(cfg.clone(), HostBackend::new(host_cfg())).expect("pipeline");
-    let report = serve(&mut p, 7, 2, 8, 4).expect("host serve");
+    let opts8 = ServeOptions { sensor_seed: 7, ..ServeOptions::frames(8) };
+    let report = serve(&mut p, &opts8).expect("host serve").finish().expect("drain");
     assert_eq!(report.backend, "host", "ServeReport must identify the backend");
     assert_eq!(report.frames, 8);
     assert_eq!(report.workers, 1);
+    assert_eq!(report.mean_batch, 1.0, "per-frame policy means batch size 1");
     assert!(report.mean_latency_s > 0.0);
     assert!(report.mean_energy_j > 0.0, "modeled energy is charged on every backend");
     assert!((1.0..=36.0).contains(&report.mean_kept_patches), "{}", report.mean_kept_patches);
@@ -92,7 +98,7 @@ fn host_backend_serves_end_to_end() {
     }
 
     // --- 4. serve_sharded: the public factory-based entry point ---
-    let (r2, m2) = serve_sharded(&cfg, &HostFactory(host_cfg()), 2, 4, 42, 2, 8)
+    let (r2, m2) = serve_sharded(&cfg, &HostFactory(host_cfg()), 2, &ServeOptions::frames(8))
         .expect("serve_sharded over HostBackend");
     assert_eq!(r2.backend, "host");
     assert_eq!(r2.frames, 8);
@@ -103,17 +109,59 @@ fn host_backend_serves_end_to_end() {
     let mut cfg_full = cfg.clone();
     cfg_full.use_mask = false;
     let mut pf = Pipeline::with_backend(cfg_full, HostBackend::new(host_cfg())).expect("pipeline");
-    let rf = serve(&mut pf, 11, 2, 3, 4).expect("no-mask host serve");
+    let opts3 = ServeOptions { sensor_seed: 11, ..ServeOptions::frames(3) };
+    let rf = serve(&mut pf, &opts3).expect("no-mask host serve").finish().expect("drain");
     assert_eq!(rf.frames, 3);
     assert_eq!(rf.mean_kept_patches, 36.0, "no-mask runs keep the full grid");
 
-    // --- 6. sim backend: same numerics, modeled photonic latency ---
+    // --- 6. streaming + micro-batching: the stream yields in-order
+    //     results one by one, the batcher groups frames bucket-major, and
+    //     the drained stream still derives the full report ---
+    let mut pb =
+        Pipeline::with_backend(cfg.clone(), HostBackend::new(host_cfg())).expect("pipeline");
+    let bopts = ServeOptions {
+        sensor_seed: 7,
+        batch: BatchPolicy::batched(4, Duration::from_millis(2)),
+        window: 8,
+        ..ServeOptions::frames(10)
+    };
+    let mut stream = serve(&mut pb, &bopts).expect("batched serve stream");
+    let mut indices = Vec::new();
+    let first = stream.next().expect("stream yields").expect("first result");
+    indices.push(first.frame_index);
+    // The reassembly buffer is bounded by the window plus at most one
+    // force-flushed group.
+    assert!(stream.buffered() <= 8 + 4, "reassembly buffer must respect the window");
+    for r in &mut stream {
+        indices.push(r.expect("streamed result").frame_index);
+    }
+    let rb = stream.finish().expect("report from drained stream");
+    assert_eq!(rb.frames, 10);
+    assert_eq!(indices.len(), 10);
+    for pair in indices.windows(2) {
+        assert!(pair[0] < pair[1], "stream must emit in order: {indices:?}");
+    }
+    assert!(rb.mean_batch >= 1.0, "mean batch must be recorded ({})", rb.mean_batch);
+
+    // --- 7. sim backend: same numerics, modeled photonic latency,
+    //     recorded per stage ---
     let mut ps =
         Pipeline::with_backend(cfg.clone(), SimBackend::new(host_cfg())).expect("sim pipeline");
-    let rs = serve(&mut ps, 7, 2, 4, 4).expect("sim serve");
+    let opts4 = ServeOptions { sensor_seed: 7, ..ServeOptions::frames(4) };
+    let rs = serve(&mut ps, &opts4).expect("sim serve").finish().expect("drain");
     assert_eq!(rs.backend, "sim");
     assert_eq!(rs.frames, 4);
     assert!(ps.metrics.has_stage("modeled"), "sim must charge modeled frame latency");
+    assert!(
+        ps.metrics.has_stage("modeled_mgnet") && ps.metrics.has_stage("modeled_backbone"),
+        "sim must charge MGNet and backbone latency as separate stages"
+    );
+    let stage_sum =
+        ps.metrics.stage_mean_s("modeled_mgnet") + ps.metrics.stage_mean_s("modeled_backbone");
+    assert!(
+        (stage_sum - ps.metrics.stage_mean_s("modeled")).abs() <= stage_sum * 1e-9,
+        "per-stage modeled latency must sum to the modeled total"
+    );
     assert!(
         rs.mean_latency_s > 0.0 && rs.mean_latency_s.is_finite(),
         "modeled latency {} must be positive",

@@ -7,7 +7,7 @@
 //! backbone bucket) is the dominant cost, so one sequential flow exercises
 //! the full pipeline.
 
-use optovit::coordinator::pipeline::{serve, Pipeline, PipelineConfig};
+use optovit::coordinator::pipeline::{serve, Pipeline, PipelineConfig, ServeOptions};
 use optovit::runtime::{PjrtBackend, Tensor};
 use optovit::sensor::VideoSource;
 
@@ -52,7 +52,8 @@ fn runtime_and_pipeline_end_to_end() {
     };
     let mut pipeline =
         Pipeline::with_backend(cfg, PjrtBackend::new(&dir).expect("backend")).expect("pipeline");
-    let report = serve(&mut pipeline, 7, 2, 12, 4).expect("serve");
+    let opts = ServeOptions { sensor_seed: 7, ..ServeOptions::frames(12) };
+    let report = serve(&mut pipeline, &opts).expect("serve").finish().expect("drain stream");
     assert_eq!(report.frames, 12);
     assert_eq!(report.backend, "pjrt");
     assert!(report.mean_latency_s > 0.0);
@@ -67,6 +68,16 @@ fn runtime_and_pipeline_end_to_end() {
     let mut full = Pipeline::with_backend(cfg_full, PjrtBackend::new(&dir).expect("backend"))
         .expect("pipeline full");
     let f = full.next_frame_report();
+    // Batched execution over the compiled artifacts matches per-frame
+    // dispatch bitwise (same executable, same literals).
+    let mut sensor_b = VideoSource::new(96, 2, 123);
+    let frames: Vec<_> = (0..3).map(|_| sensor_b.next_frame()).collect();
+    let batched = pipeline.process_batch(&frames).expect("pjrt process_batch");
+    for (frame, r) in frames.iter().zip(&batched) {
+        let direct = pipeline.process_frame(frame).expect("pjrt frame");
+        assert_eq!(r.logits, direct.logits, "batched PJRT logits must match per-frame");
+        assert_eq!(r.bucket, direct.bucket);
+    }
     assert!(report.mean_energy_j < f, "masked {} !< full {}", report.mean_energy_j, f);
 
     // --- per-frame invariants ---
