@@ -1,0 +1,130 @@
+//! Multi-camera serving (EXPERIMENTS.md §E2E, session edition): N
+//! synthetic sensors → N sessions → **one** shared server — the
+//! near-sensor deployment shape, one accelerator serving continuous
+//! traffic from a fleet of cameras.
+//!
+//! Each camera opens its own `Session` on the server and feeds it from its
+//! own sensor thread; frames from all cameras interleave through the
+//! shared worker pool and the per-bucket micro-batch lanes, so same-bucket
+//! frames from *different* cameras amortize one backbone dispatch
+//! (watch `mean batch` exceed 1 as you add cameras). Admission is weighted
+//! round-robin — camera 0 is given weight 2 to show a priority tenant
+//! taking a larger share without starving the rest — and every camera
+//! streams its own in-order results and gets its own report next to the
+//! server-wide aggregate.
+//!
+//! ```bash
+//! cargo run --release --example multi_camera -- [cameras] [frames] [workers] [pjrt|host|sim] [batch]
+//! # artifact-free: cargo run --release --example multi_camera -- 3 60 2 host 4
+//! ```
+
+use std::time::Duration;
+
+use optovit::coordinator::batcher::BatchPolicy;
+use optovit::coordinator::engine::EngineConfig;
+use optovit::coordinator::pipeline::{Pipeline, PipelineConfig, ServeOptions};
+use optovit::coordinator::server::{spawn_synthetic_sensor, Server, SessionOptions};
+use optovit::runtime::{AnyFactory, BackendFactory, BackendKind};
+use optovit::util::table::{si_energy, si_time, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let cameras: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(3).max(1);
+    let frames: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(60);
+    let workers: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(2).max(1);
+    let kind: BackendKind = args
+        .get(4)
+        .map(|s| s.parse())
+        .transpose()
+        .map_err(anyhow::Error::msg)?
+        .unwrap_or(BackendKind::Host);
+    let batch: usize = args.get(5).and_then(|s| s.parse().ok()).unwrap_or(4).max(1);
+
+    let pipe_cfg = PipelineConfig::tiny_96();
+    let mut factory = AnyFactory::new(kind, "artifacts");
+    factory.host.num_classes = pipe_cfg.num_classes;
+
+    let opts = ServeOptions {
+        batch: BatchPolicy::batched(batch, Duration::from_micros(500)),
+        ..ServeOptions::frames(frames)
+    };
+    let ecfg = EngineConfig::for_serving(&pipe_cfg, &opts, workers);
+
+    println!(
+        "== {cameras} camera(s) → {cameras} session(s) → one {workers}-worker server \
+         ({kind} backend, batch {batch}) =="
+    );
+    let server = {
+        let cfg = pipe_cfg.clone();
+        let factory = factory.clone();
+        Server::start(move |wid| Pipeline::with_backend(cfg.clone(), factory.create(wid)?), ecfg)?
+    };
+
+    // One session + one sensor thread per camera; camera 0 is the
+    // priority tenant (admission weight 2).
+    let image_size = pipe_cfg.image_size;
+    let mut fleet = Vec::with_capacity(cameras);
+    for cam in 0..cameras {
+        let weight = if cam == 0 { 2 } else { 1 };
+        let session =
+            server.session(SessionOptions::named(format!("camera-{cam}")).with_weight(weight))?;
+        let (submitter, stream) = session.split();
+        let sensor = spawn_synthetic_sensor(
+            submitter,
+            server.watch(),
+            image_size,
+            2,
+            1000 + cam as u64, // distinct scene per camera
+            frames,
+        );
+        // Each camera drains its own in-order stream.
+        let drain = std::thread::spawn(move || stream.finish());
+        fleet.push((cam, weight, sensor, drain));
+    }
+
+    let mut t = Table::new(vec![
+        "camera", "weight", "frames", "dropped", "fps", "latency", "mean batch", "IoU",
+    ]);
+    for (cam, weight, sensor, drain) in fleet {
+        sensor.join().ok();
+        let report =
+            drain.join().map_err(|_| anyhow::anyhow!("camera {cam} drain panicked"))??;
+        t.row(vec![
+            format!("camera-{cam}"),
+            weight.to_string(),
+            report.frames.to_string(),
+            report.dropped.to_string(),
+            format!("{:.1}", report.wall_fps),
+            si_time(report.mean_latency_s),
+            format!("{:.2}", report.mean_batch),
+            format!("{:.3}", report.mean_mask_iou),
+        ]);
+    }
+    println!("\nper-session reports (every stream delivered in order):");
+    print!("{}", t.render());
+
+    let (agg, metrics) = server.shutdown()?;
+    println!("\n== server-wide aggregate ==");
+    println!("frames served      {}", agg.frames);
+    println!("wall throughput    {:.1} fps", agg.wall_fps);
+    println!("mean micro-batch   {:.2} frames/dispatch (cross-session amortization)", agg.mean_batch);
+    println!("mean latency       {}", si_time(agg.mean_latency_s));
+    println!("modeled energy     {}/frame", si_energy(agg.mean_energy_j));
+    println!("frames dropped     {}", agg.dropped);
+    for w in &agg.per_worker {
+        println!(
+            "worker {}           {} frames, {:.0}% utilized{}",
+            w.worker,
+            w.frames,
+            w.utilization * 100.0,
+            w.core.map(|c| format!(", core {c}")).unwrap_or_default()
+        );
+    }
+    println!("\nper-stage latency (merged across workers):");
+    let mut st = Table::new(vec!["stage", "mean", "max"]);
+    for (s, mean, max, _) in metrics.stage_rows() {
+        st.row(vec![s, si_time(mean), si_time(max)]);
+    }
+    print!("{}", st.render());
+    Ok(())
+}

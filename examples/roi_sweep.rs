@@ -8,6 +8,10 @@
 //! cargo run --release --example roi_sweep -- [frames] [pjrt|host|sim]
 //! ```
 
+// The sweep uses the in-thread `serve` path (the degenerate one-session
+// case) on purpose: each operating point wants one pipeline, one thread,
+// no pool — see `examples/multi_camera.rs` for the session-oriented
+// multi-tenant surface.
 use optovit::coordinator::pipeline::{serve, Pipeline, PipelineConfig, ServeOptions};
 use optovit::runtime::{AnyFactory, BackendFactory, BackendKind};
 use optovit::util::table::{si_energy, Table};

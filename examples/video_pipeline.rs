@@ -2,8 +2,10 @@
 //! through the full three-layer stack — sensor thread → bounded queue →
 //! MGNet → RoI mask → bucket router → ViT backbone — and report latency,
 //! throughput, mask quality, accuracy, and the modeled accelerator energy,
-//! with and without RoI masking. With `workers > 1` the sharded engine
-//! drives one pipeline (and one backend instance) per worker thread.
+//! with and without RoI masking. Serving goes through the **session API**:
+//! a `Server` owns one pipeline (and one backend instance) per worker
+//! thread, and this driver opens a single synthetic-sensor `Session` on it
+//! (see `examples/multi_camera.rs` for many sessions sharing one server).
 //!
 //! The fourth argument picks the execution backend:
 //! `pjrt` (default) runs the compiled HLO artifacts, `host` runs the
@@ -20,8 +22,9 @@
 use std::time::Duration;
 
 use optovit::coordinator::batcher::BatchPolicy;
-use optovit::coordinator::engine::serve_sharded;
-use optovit::coordinator::pipeline::{serve, Pipeline, PipelineConfig, ServeOptions};
+use optovit::coordinator::engine::EngineConfig;
+use optovit::coordinator::pipeline::{Pipeline, PipelineConfig, ServeOptions};
+use optovit::coordinator::server::{spawn_synthetic_sensor, Server, SessionOptions};
 use optovit::runtime::{AnyFactory, BackendFactory, BackendKind};
 use optovit::util::table::{si_energy, si_time, Table};
 
@@ -53,15 +56,32 @@ fn main() -> anyhow::Result<()> {
         println!(
             "== serving {frames} frames ({workers} worker(s), {kind} backend, batch {batch}): {label} =="
         );
-        let (report, metrics) = if workers > 1 {
-            serve_sharded(&cfg, &factory, workers, &opts)?
-        } else {
-            let mut pipeline = Pipeline::with_backend(cfg, factory.create(0)?)?;
-            // `serve` streams results; drain the iterator into the report.
-            let report = serve(&mut pipeline, &opts)?.finish()?;
-            let metrics = std::mem::take(&mut pipeline.metrics);
-            (report, metrics)
+        // Session API: one server (N worker pipelines), one
+        // synthetic-sensor session on it, drained in order; the aggregate
+        // report equals the session's.
+        let ecfg = EngineConfig::for_serving(&cfg, &opts, workers);
+        let image_size = cfg.image_size;
+        let server = {
+            let cfg = cfg.clone();
+            let factory = factory.clone();
+            Server::start(
+                move |wid| Pipeline::with_backend(cfg.clone(), factory.create(wid)?),
+                ecfg,
+            )?
         };
+        let session = server.session(SessionOptions::named(label))?;
+        let (submitter, stream) = session.split();
+        let sensor = spawn_synthetic_sensor(
+            submitter,
+            server.watch(),
+            image_size,
+            opts.num_objects,
+            opts.sensor_seed,
+            opts.num_frames,
+        );
+        stream.finish()?;
+        sensor.join().ok();
+        let (report, metrics) = server.shutdown()?;
         println!("  backend           {}", report.backend);
         println!("  wall throughput   {:.1} fps", report.wall_fps);
         println!("  mean micro-batch  {:.2} frames/dispatch", report.mean_batch);

@@ -108,6 +108,22 @@ impl Args {
         }
     }
 
+    /// Reject unknown `--key` options: every parsed key must be in
+    /// `known`. Commands with many knobs (`serve` grew `--cameras`,
+    /// `--weights`, `--pin`, …) call this so a typo like `--camera 3`
+    /// fails loudly instead of silently serving one camera.
+    pub fn check_known(&self, known: &[&str]) -> Result<(), String> {
+        for key in self.opts.keys() {
+            if !known.contains(&key.as_str()) {
+                return Err(format!(
+                    "unknown option --{key} (known: {})",
+                    known.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+
     /// Comma-separated usize list, e.g. `--workers 1,2,4`.
     pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>, String> {
         match self.get(key) {
@@ -189,6 +205,15 @@ mod tests {
             .get_choice("backend", &["pjrt", "host", "sim"], "pjrt")
             .unwrap_err();
         assert!(err.contains("pjrt|host|sim"), "{err}");
+    }
+
+    #[test]
+    fn check_known_flags_typos() {
+        let a = parse(&["serve", "--cameras", "3", "--pin"]);
+        assert!(a.check_known(&["cameras", "pin", "frames"]).is_ok());
+        let err = a.check_known(&["camera", "frames"]).unwrap_err();
+        assert!(err.contains("--cameras"), "{err}");
+        assert!(err.contains("camera"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,112 @@
+//! Best-effort worker-thread core pinning.
+//!
+//! The sharded engine's worker threads each own a full pipeline + backend,
+//! so on a multi-core host the scheduler migrating a worker mid-run costs
+//! cache locality exactly where the serving hot path is allocation-free and
+//! cache-resident. [`pin_current_thread`] pins the calling thread to one
+//! core via `sched_setaffinity(2)` on Linux (declared directly against
+//! libc — the offline crate set has no `libc` crate) and is a documented
+//! no-op everywhere else. Pinning is *best-effort*: a denied or failed
+//! syscall degrades to the unpinned behaviour, never to an error — the
+//! engine records the outcome per worker in
+//! [`super::stats::WorkerStats::core`].
+
+/// Host cores available to this process (at least 1).
+pub fn available_cores() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Mirrors glibc's cpu_set_t: 1024 bits of cpu mask.
+#[cfg(target_os = "linux")]
+const SET_WORDS: usize = 1024 / 64;
+
+#[cfg(target_os = "linux")]
+extern "C" {
+    // pid 0 = the calling thread.
+    fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    fn sched_getaffinity(pid: i32, cpusetsize: usize, mask: *mut u64) -> i32;
+}
+
+/// CPU ids the calling thread is currently allowed to run on, in
+/// ascending order. CPU ids need not be contiguous from 0 — under a
+/// container cpuset or `taskset` the permitted set can be e.g. `{2, 3}`,
+/// so pinning must pick from this list, never from `0..n`.
+#[cfg(target_os = "linux")]
+fn allowed_cpus() -> Vec<usize> {
+    let mut mask = [0u64; SET_WORDS];
+    let rc = unsafe { sched_getaffinity(0, std::mem::size_of_val(&mask), mask.as_mut_ptr()) };
+    if rc != 0 {
+        return Vec::new();
+    }
+    let mut cpus = Vec::new();
+    for (word_idx, &word) in mask.iter().enumerate() {
+        for bit in 0..64 {
+            if word & (1u64 << bit) != 0 {
+                cpus.push(word_idx * 64 + bit);
+            }
+        }
+    }
+    cpus
+}
+
+/// Pin the calling thread to the `core % |allowed|`-th CPU of its allowed
+/// set (so worker 0, 1, 2, … spread round-robin over whatever cpuset the
+/// process actually has). Returns the CPU id actually pinned to, or
+/// `None` when pinning is unsupported on this platform or the kernel
+/// refused the mask (best-effort: the caller keeps running unpinned).
+#[cfg(target_os = "linux")]
+pub fn pin_current_thread(core: usize) -> Option<usize> {
+    let allowed = allowed_cpus();
+    if allowed.is_empty() {
+        return None;
+    }
+    let target = allowed[core % allowed.len()];
+    if target / 64 >= SET_WORDS {
+        return None;
+    }
+    let mut mask = [0u64; SET_WORDS];
+    mask[target / 64] = 1u64 << (target % 64);
+    let rc = unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) };
+    (rc == 0).then_some(target)
+}
+
+/// Non-Linux platforms: pinning is a documented no-op.
+#[cfg(not(target_os = "linux"))]
+pub fn pin_current_thread(_core: usize) -> Option<usize> {
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn at_least_one_core() {
+        assert!(available_cores() >= 1);
+    }
+
+    /// Pin from a scratch thread so the test runner's own thread keeps its
+    /// default affinity.
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn pins_within_the_allowed_cpu_set() {
+        let allowed = allowed_cpus();
+        assert!(!allowed.is_empty(), "a running thread always has at least one allowed CPU");
+        // Pinning to the 0th allowed CPU must succeed — the target comes
+        // from the thread's own permitted mask, so cpuset-restricted
+        // containers pin too (ids need not start at 0).
+        let pinned = std::thread::spawn(|| pin_current_thread(0)).join().expect("pin thread");
+        assert_eq!(pinned, Some(allowed[0]));
+        // Out-of-range worker ids wrap over the allowed set.
+        let n = allowed.len();
+        let wrapped =
+            std::thread::spawn(move || pin_current_thread(n * 7 + 1)).join().expect("pin");
+        assert_eq!(wrapped, Some(allowed[1 % n]));
+    }
+
+    #[test]
+    #[cfg(not(target_os = "linux"))]
+    fn non_linux_is_a_noop() {
+        assert_eq!(pin_current_thread(0), None);
+    }
+}

@@ -55,7 +55,9 @@ impl BucketRouter {
                 return b;
             }
         }
-        *self.buckets.last().unwrap()
+        // The constructor rejects an empty ladder, so the clamp target
+        // always exists; stay panic-free on the serving path regardless.
+        self.buckets.last().copied().unwrap_or(kept)
     }
 
     /// Padding waste ratio for a kept count (padded slots / bucket).

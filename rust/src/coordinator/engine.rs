@@ -1,51 +1,35 @@
-//! Sharded multi-worker serving engine.
+//! Batch-job entry points over the sharded serving machinery — now thin
+//! **one-session wrappers** over the session-oriented
+//! [`super::server::Server`].
 //!
-//! The single-pipeline [`super::pipeline::serve`] loop is capped at one
-//! host core because execution backends are not required to be `Send`
-//! (the PJRT client is `Rc`-backed). This engine scales the host side the
-//! way production photonic-transformer servers exploit parallel
-//! dynamically-operated cores: a dispatcher thread shards frames across N
-//! worker threads, **each of which constructs its own pipeline + backend**
-//! (one [`crate::runtime::Backend`] instance per thread, built by a
-//! [`BackendFactory`]), and a reassembler emits results strictly in
-//! dispatch order.
+//! Historically this module owned the dispatcher → N workers → reassembler
+//! threads itself, for exactly one frame source. That machinery moved into
+//! [`super::server`], where any number of tenant [`super::server::Session`]s
+//! share it; what remains here is the batch-job surface built on top:
 //!
-//! ```text
-//!                       ┌─▶ worker 0 (own Pipeline/Backend) ─┐
-//! sensor ─▶ dispatcher ─┼─▶ worker 1 (own Pipeline/Backend) ─┼─▶ reassembler
-//!           (load-aware │        …                           │  (in-order,
-//!            round-robin)└─▶ worker N-1 ─────────────────────┘   merged metrics)
-//! ```
+//! - [`run`] starts a `Server`, opens **one** session fed by the synthetic
+//!   sensor, streams every in-order [`FrameResult`] into the caller's
+//!   sink, and shuts the server down into the terminal [`ServeReport`] +
+//!   merged [`StageMetrics`] — observably the same contract as the
+//!   pre-session engine (in-order emission, `dropped` = real sensor
+//!   rejections, worker failures fail the run, a bounded reassembly
+//!   window backpressures dispatch).
+//! - [`serve_sharded`] / [`serve_sharded_with`] wrap [`run`] for
+//!   [`Pipeline`] workers built through a [`BackendFactory`] (one backend
+//!   constructed *inside* each worker thread, so non-`Send` substrates
+//!   like PJRT shard cleanly).
 //!
-//! Scheduling is round-robin biased by queue depth: each frame goes to the
-//! alive worker with the fewest in-flight frames (ties broken in rotation
-//! order), falling back to a blocking hand-off only when every bounded
-//! worker queue is full. A worker that panics or returns an error fails the
-//! whole run promptly — the dispatcher detects the closed queue, the
-//! reassembler sees the failure message, and no thread is left hanging.
-//!
-//! Each worker **micro-batches** its queue under
-//! [`EngineConfig::batch`]: it collects up to `max_batch` frames (waiting
-//! at most `max_wait` after the first) and drives them through one
-//! [`FrameWorker::process_batch`] call — for [`Pipeline`] workers that is
-//! a bucket-major `Backend::execute_batch`, so PJRT dispatch overhead
-//! amortizes inside every worker. The reassembler's out-of-order buffer is
-//! **bounded** ([`EngineConfig::reassembly_window`]), so unbounded
-//! streaming runs cannot accumulate unbounded memory; in-order results
-//! stream into the caller's sink as they reassemble
-//! ([`serve_sharded_with`]).
-
-use std::collections::BTreeMap;
-use std::panic::AssertUnwindSafe;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{self, RecvTimeoutError, TrySendError};
-use std::time::{Duration, Instant};
+//! The per-worker micro-batching, least-loaded dispatch, bounded
+//! reassembly, and failure semantics all live in `server.rs` now; the
+//! [`FrameWorker`] trait and [`EngineConfig`] stay here as the pool's
+//! construction contract.
 
 use anyhow::{anyhow, Result};
 
-use super::batcher::{recv_frame, sensor_loop, BatchPolicy, FrameQueue};
+use super::batcher::BatchPolicy;
 use super::pipeline::{FrameResult, Pipeline, PipelineConfig, ServeOptions, ServeReport};
-use super::stats::{StageMetrics, WorkerStats};
+use super::server::{spawn_synthetic_sensor, ServeError, Server, SessionOptions};
+use super::stats::StageMetrics;
 use crate::runtime::{Backend, BackendFactory};
 use crate::sensor::Frame;
 
@@ -106,14 +90,17 @@ impl<B: Backend> FrameWorker for Pipeline<B> {
     }
 }
 
-/// Engine topology + workload parameters.
+/// Engine topology + workload parameters (also the [`Server`]'s pool
+/// configuration — the sensor fields are used only by the one-session
+/// batch-job wrappers).
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
     /// Worker threads (each with its own pipeline); clamped to >= 1.
     pub workers: usize,
     /// Bounded queue depth per worker.
     pub queue_depth: usize,
-    /// Bounded sensor→dispatcher queue depth.
+    /// Bounded sensor→dispatcher queue depth (the wrapper session's
+    /// submission queue).
     pub sensor_queue_depth: usize,
     /// Patch side in pixels (for ground-truth mask scoring).
     pub patch_px: usize,
@@ -126,22 +113,28 @@ pub struct EngineConfig {
     /// How long the reassembler waits for all workers to warm up
     /// (artifact compilation can take minutes).
     pub warmup_timeout_s: f64,
-    /// Steady-state stall timeout: no worker progress for this long fails
-    /// the run instead of hanging it.
+    /// Steady-state stall timeout: dispatched-but-unemitted frames with no
+    /// progress for this long fail the server instead of hanging it. An
+    /// *idle* server (nothing in flight) never trips it.
     pub stall_timeout_s: f64,
     /// Per-worker micro-batching: each worker collects up to
     /// `batch.max_batch` frames from its queue (waiting at most
     /// `batch.max_wait` after the first) and processes them with one
-    /// [`FrameWorker::process_batch`] call.
+    /// [`FrameWorker::process_batch`] call. Frames from *all* sessions
+    /// ride the same groups (cross-session bucket-major amortization).
     pub batch: BatchPolicy,
-    /// Bounded reassembly window: the dispatcher stalls (backpressure,
-    /// propagating to the dropping sensor queue) while
-    /// `dispatched - emitted` would exceed this many frames, so the
-    /// reassembler's out-of-order buffer is bounded even on unbounded
-    /// runs with one pathologically slow worker. `0` derives a default
-    /// from the topology (`workers * (queue_depth + max_batch) * 2 + 16`
-    /// — roomy enough that healthy runs never feel it).
+    /// Bounded reassembly window (per session): the dispatcher stops
+    /// admitting a session's frames while `dispatched - consumed` would
+    /// exceed this many, so reassembly memory and undrained results stay
+    /// bounded per tenant. `0` derives a default from the topology
+    /// (`workers * (queue_depth + max_batch) * 2 + 16` — roomy enough
+    /// that healthy runs never feel it).
     pub reassembly_window: usize,
+    /// Best-effort core pinning for worker threads via
+    /// [`super::affinity::pin_current_thread`] (Linux `sched_setaffinity`;
+    /// a no-op elsewhere). The pinned core is recorded per worker in
+    /// [`super::stats::WorkerStats::core`].
+    pub pin_workers: bool,
 }
 
 impl EngineConfig {
@@ -160,7 +153,28 @@ impl EngineConfig {
             stall_timeout_s: 60.0,
             batch: BatchPolicy::per_frame(),
             reassembly_window: 0,
+            pin_workers: false,
         }
+    }
+
+    /// Derive the pool configuration for serving a [`PipelineConfig`]
+    /// under [`ServeOptions`] — the single mapping shared by
+    /// [`serve_sharded_with`], `optovit serve --cameras`, and the
+    /// examples, so a new serving knob cannot be forgotten at one of the
+    /// call sites.
+    pub fn for_serving(pipe_cfg: &PipelineConfig, opts: &ServeOptions, workers: usize) -> Self {
+        let vit = pipe_cfg.vit_config();
+        let mut cfg = EngineConfig::new(workers, vit.patch_size, pipe_cfg.image_size);
+        cfg.queue_depth = opts.queue_depth.max(1);
+        cfg.sensor_queue_depth = opts.queue_depth.max(1) * cfg.workers;
+        cfg.num_objects = opts.num_objects;
+        cfg.sensor_seed = opts.sensor_seed;
+        cfg.batch = opts.batch;
+        cfg.pin_workers = opts.pin_workers;
+        // One window knob across both serving paths: `--window` bounds the
+        // single-pipeline stream and the per-session reassembler alike.
+        cfg.reassembly_window = opts.window.max(1);
+        cfg
     }
 
     /// The effective bounded reassembly window (see
@@ -175,31 +189,17 @@ impl EngineConfig {
     }
 }
 
-/// What a worker thread hands back on clean exit (metrics + utilization +
-/// backend identity), or the failure message that must abort the run.
-type WorkerOutcome = std::result::Result<(StageMetrics, WorkerStats, &'static str), String>;
-
-/// Messages from workers / dispatcher to the reassembler.
-enum Msg {
-    /// Worker finished warmup and is accepting frames.
-    Ready,
-    /// One processed frame, tagged with its dense dispatch sequence number.
-    Result { seq: u64, result: FrameResult, iou: f64, correct: bool },
-    /// Worker drained its queue and exited cleanly.
-    Done { stats: WorkerStats, metrics: StageMetrics, backend: &'static str },
-    /// Worker failed (error or panic): the run must fail, not hang.
-    Failed { error: String },
-    /// Dispatcher finished; exactly `dispatched` results are expected.
-    DispatchDone { dispatched: u64 },
-}
-
-/// Run a sharded serving session: `num_frames` frames from the synthetic
+/// Run a sharded serving job: `num_frames` frames from the synthetic
 /// sensor, sharded across `cfg.workers` workers built by `factory` (one
 /// call per worker thread, so non-`Send` pipelines are fine). `sink`
 /// receives every [`FrameResult`] strictly in dispatch order.
 ///
-/// Returns the combined [`ServeReport`] plus the merged cross-worker
-/// [`StageMetrics`] for per-stage reporting.
+/// This is the **one-session wrapper** over [`Server`]: it starts the
+/// server, opens a single session fed by a synthetic-sensor thread
+/// (counting real enqueue rejections as `dropped`), drains the session's
+/// in-order stream into `sink`, and shuts the server down into the
+/// combined [`ServeReport`] plus the merged cross-worker
+/// [`StageMetrics`].
 pub fn run<W, F>(
     factory: F,
     cfg: &EngineConfig,
@@ -207,381 +207,45 @@ pub fn run<W, F>(
     mut sink: impl FnMut(&FrameResult),
 ) -> Result<(ServeReport, StageMetrics)>
 where
-    W: FrameWorker,
-    F: Fn(usize) -> Result<W> + Sync,
+    W: FrameWorker + 'static,
+    F: Fn(usize) -> Result<W> + Send + Sync + 'static,
 {
-    let n_workers = cfg.workers.max(1);
-    let factory = &factory;
-
-    // Sensor → dispatcher queue; `dropped` counts actual try_push
-    // rejections, not frames in flight at stop time.
-    let (sensor_q, sensor_rx) = FrameQueue::bounded(cfg.sensor_queue_depth.max(1));
-    let rejected = AtomicU64::new(0);
-    // go: all workers warmed up, start producing/dispatching.
-    // stop: sensor shutdown. abort: dispatcher shutdown (failure path).
-    let go = AtomicBool::new(false);
-    let stop = AtomicBool::new(false);
-    let abort = AtomicBool::new(false);
-    let inflight: Vec<AtomicU64> = (0..n_workers).map(|_| AtomicU64::new(0)).collect();
-
-    let (res_tx, res_rx) = mpsc::channel::<Msg>();
-    let mut worker_txs = Vec::with_capacity(n_workers);
-    let mut worker_rxs = Vec::with_capacity(n_workers);
-    for _ in 0..n_workers {
-        let (tx, rx) = mpsc::sync_channel::<(u64, Frame)>(cfg.queue_depth.max(1));
-        worker_txs.push(tx);
-        worker_rxs.push(rx);
-    }
-
-    // Emitted-result counter shared with the dispatcher: the reassembly
-    // window is enforced as dispatch backpressure (`dispatched - emitted`
-    // bounded), never as a failure of a healthy-but-skewed run.
-    let emitted_ctr = AtomicU64::new(0);
-    let (rejected_r, go_r, stop_r, abort_r) = (&rejected, &go, &stop, &abort);
-    let emitted_r = &emitted_ctr;
-    let inflight_r = &inflight;
-    let patch_px = cfg.patch_px;
-    let (image_size, num_objects, sensor_seed) = (cfg.image_size, cfg.num_objects, cfg.sensor_seed);
-    let warmup_timeout = Duration::from_secs_f64(cfg.warmup_timeout_s.max(0.1));
-    let stall_timeout = Duration::from_secs_f64(cfg.stall_timeout_s.max(0.1));
-    let batch_policy = cfg.batch;
-    let reassembly_window = cfg.effective_window();
-
-    let outcome = std::thread::scope(|s| {
-        // --- sensor thread: produce frames as fast as the queue accepts,
-        //     idle until all workers are warm (`go`) ---
-        s.spawn(move || {
-            sensor_loop(sensor_q, image_size, num_objects, sensor_seed, go_r, stop_r, rejected_r)
-        });
-
-        // --- worker threads: own pipeline each, drain own bounded queue,
-        //     micro-batching up to `batch.max_batch` frames per
-        //     process_batch call ---
-        for (wid, rx) in worker_rxs.into_iter().enumerate() {
-            let res_tx = res_tx.clone();
-            s.spawn(move || {
-                let body = AssertUnwindSafe(|| -> WorkerOutcome {
-                    let mut w = factory(wid)
-                        .map_err(|e| format!("worker {wid}: construction failed: {e:#}"))?;
-                    w.warmup().map_err(|e| format!("worker {wid}: warmup failed: {e:#}"))?;
-                    res_tx.send(Msg::Ready).ok();
-                    // Utilization window opens at the first frame, not at
-                    // warmup completion: a fast-warming worker must not be
-                    // charged its peers' compile time as idle.
-                    let mut t_first: Option<Instant> = None;
-                    let mut busy = Duration::ZERO;
-                    let mut frames = 0u64;
-                    let max_batch = batch_policy.max_batch.max(1);
-                    let mut seqs: Vec<u64> = Vec::with_capacity(max_batch);
-                    let mut group: Vec<Frame> = Vec::with_capacity(max_batch);
-                    let mut closed = false;
-                    while !closed {
-                        // Block for the first frame of the group...
-                        seqs.clear();
-                        group.clear();
-                        match rx.recv() {
-                            Ok((seq, frame)) => {
-                                seqs.push(seq);
-                                group.push(frame);
-                            }
-                            Err(_) => break,
-                        }
-                        t_first.get_or_insert_with(Instant::now);
-                        // ...then top it up until max_batch or the
-                        // deadline, whichever comes first.
-                        if max_batch > 1 {
-                            let deadline = Instant::now() + batch_policy.max_wait;
-                            while group.len() < max_batch {
-                                let remaining =
-                                    deadline.saturating_duration_since(Instant::now());
-                                if remaining.is_zero() {
-                                    break;
-                                }
-                                match rx.recv_timeout(remaining) {
-                                    Ok((seq, frame)) => {
-                                        seqs.push(seq);
-                                        group.push(frame);
-                                    }
-                                    Err(RecvTimeoutError::Timeout) => break,
-                                    Err(RecvTimeoutError::Disconnected) => {
-                                        closed = true;
-                                        break;
-                                    }
-                                }
-                            }
-                        }
-                        // Ground truth before processing (frames are
-                        // consumed by reference, results by value).
-                        let gts: Vec<_> = group.iter().map(|f| f.gt_mask(patch_px)).collect();
-                        let labels: Vec<usize> = group.iter().map(|f| f.label).collect();
-                        let t0 = Instant::now();
-                        let out = w.process_batch(&group);
-                        busy += t0.elapsed();
-                        inflight_r[wid].fetch_sub(group.len() as u64, Ordering::Relaxed);
-                        let rs = out.map_err(|e| {
-                            format!(
-                                "worker {wid}: batch of {} (first frame {}) failed: {e:#}",
-                                group.len(),
-                                group.first().map(|f| f.index).unwrap_or(0)
-                            )
-                        })?;
-                        if rs.len() != group.len() {
-                            return Err(format!(
-                                "worker {wid}: process_batch returned {} results for {} frames",
-                                rs.len(),
-                                group.len()
-                            ));
-                        }
-                        frames += rs.len() as u64;
-                        for ((&seq, r), (gt, &label)) in
-                            seqs.iter().zip(rs).zip(gts.iter().zip(&labels))
-                        {
-                            let iou = r.mask.iou(gt);
-                            let correct = r.predicted_class() == label;
-                            res_tx.send(Msg::Result { seq, result: r, iou, correct }).ok();
-                        }
-                    }
-                    let active_s = t_first.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
-                    let busy_s = busy.as_secs_f64();
-                    let backend = w.backend_name();
-                    Ok((
-                        w.take_metrics(),
-                        WorkerStats {
-                            worker: wid,
-                            frames,
-                            busy_s,
-                            utilization: if active_s > 0.0 {
-                                (busy_s / active_s).min(1.0)
-                            } else {
-                                0.0
-                            },
-                        },
-                        backend,
-                    ))
-                });
-                match std::panic::catch_unwind(body) {
-                    Ok(Ok((metrics, stats, backend))) => {
-                        res_tx.send(Msg::Done { stats, metrics, backend }).ok();
-                    }
-                    Ok(Err(error)) => {
-                        res_tx.send(Msg::Failed { error }).ok();
-                    }
-                    Err(_) => {
-                        res_tx
-                            .send(Msg::Failed { error: format!("worker {wid} panicked") })
-                            .ok();
-                    }
-                }
-            });
-        }
-
-        // --- dispatcher thread: load-aware round-robin sharding ---
-        let dispatch_tx = res_tx.clone();
-        s.spawn(move || {
-            while !go_r.load(Ordering::Relaxed) && !abort_r.load(Ordering::Relaxed) {
-                std::thread::sleep(Duration::from_micros(500));
-            }
-            let mut dispatched = 0u64;
-            let mut rr = 0usize;
-            let mut alive = vec![true; n_workers];
-            // Reused across frames: the dispatcher itself stays off the
-            // per-frame heap, like the pipeline hot path it feeds.
-            let mut candidates: Vec<usize> = Vec::with_capacity(n_workers);
-            'dispatch: while dispatched < num_frames && !abort_r.load(Ordering::Relaxed) {
-                // Bounded reassembly window: hold new dispatches while the
-                // gap to the emission front is at the window. Backpressure
-                // propagates to the sensor queue (the dropping point), and
-                // the reassembler's buffer stays bounded no matter how
-                // skewed the workers run.
-                while dispatched.saturating_sub(emitted_r.load(Ordering::Relaxed))
-                    >= reassembly_window as u64
-                    && !abort_r.load(Ordering::Relaxed)
-                {
-                    std::thread::sleep(Duration::from_micros(200));
-                }
-                if abort_r.load(Ordering::Relaxed) {
-                    break;
-                }
-                let Some(frame) = recv_frame(&sensor_rx, Duration::from_secs(5)) else {
-                    break;
-                };
-                let mut undelivered = frame;
-                'place: loop {
-                    candidates.clear();
-                    candidates.extend((0..n_workers).filter(|&w| alive[w]));
-                    if candidates.is_empty() {
-                        dispatch_tx
-                            .send(Msg::Failed { error: "all workers died".to_string() })
-                            .ok();
-                        break 'dispatch;
-                    }
-                    // Least-loaded first; ties broken in rotation order so
-                    // equally-idle workers get frames round-robin.
-                    let rot = rr % n_workers;
-                    candidates.sort_unstable_by_key(|&w| {
-                        (inflight_r[w].load(Ordering::Relaxed), (w + n_workers - rot) % n_workers)
-                    });
-                    let mut f = undelivered;
-                    for &w in &candidates {
-                        match worker_txs[w].try_send((dispatched, f)) {
-                            Ok(()) => {
-                                inflight_r[w].fetch_add(1, Ordering::Relaxed);
-                                dispatched += 1;
-                                rr += 1;
-                                break 'place;
-                            }
-                            Err(TrySendError::Full((_, fr))) => f = fr,
-                            Err(TrySendError::Disconnected((_, fr))) => {
-                                alive[w] = false;
-                                f = fr;
-                            }
-                        }
-                    }
-                    // Every alive queue is full: block on the least-loaded
-                    // alive worker (backpressure, not drop — the sensor
-                    // queue provides the dropping).
-                    let Some(&w) = candidates.iter().find(|&&w| alive[w]) else {
-                        undelivered = f;
-                        continue 'place;
-                    };
-                    match worker_txs[w].send((dispatched, f)) {
-                        Ok(()) => {
-                            inflight_r[w].fetch_add(1, Ordering::Relaxed);
-                            dispatched += 1;
-                            rr += 1;
-                            break 'place;
-                        }
-                        Err(mpsc::SendError((_, fr))) => {
-                            alive[w] = false;
-                            undelivered = fr;
-                        }
-                    }
-                }
-            }
-            dispatch_tx.send(Msg::DispatchDone { dispatched }).ok();
-            stop_r.store(true, Ordering::Relaxed);
-            // Drain leftovers so the sensor never blocks, then close the
-            // worker queues so they drain and exit.
-            while sensor_rx.try_recv().is_ok() {}
-            drop(worker_txs);
-        });
-        drop(res_tx);
-
-        // --- reassembler (this thread): strict in-order emission ---
-        let mut pending: BTreeMap<u64, (FrameResult, f64, bool)> = BTreeMap::new();
-        let mut next_emit = 0u64;
-        let mut emitted = 0u64;
-        let mut iou_sum = 0.0f64;
-        let mut correct = 0u64;
-        let mut ready = 0usize;
-        let mut done_workers = 0usize;
-        let mut expected: Option<u64> = None;
-        let mut merged = StageMetrics::new();
-        let mut per_worker: Vec<WorkerStats> = Vec::new();
-        let mut backend_name: &'static str = "custom";
-        let mut t0: Option<Instant> = None;
-        let mut failure: Option<String> = None;
-
-        loop {
-            if let Some(exp) = expected {
-                if emitted >= exp && done_workers == n_workers {
-                    break;
-                }
-            }
-            let timeout = if go.load(Ordering::Relaxed) { stall_timeout } else { warmup_timeout };
-            match res_rx.recv_timeout(timeout) {
-                Ok(Msg::Ready) => {
-                    ready += 1;
-                    if ready == n_workers {
-                        t0 = Some(Instant::now());
-                        go.store(true, Ordering::Relaxed);
-                    }
-                }
-                Ok(Msg::Result { seq, result, iou, correct: ok }) => {
-                    pending.insert(seq, (result, iou, ok));
-                    while let Some((r, i, c)) = pending.remove(&next_emit) {
-                        iou_sum += i;
-                        correct += c as u64;
-                        sink(&r);
-                        emitted += 1;
-                        next_emit += 1;
-                    }
-                    emitted_ctr.store(emitted, Ordering::Relaxed);
-                    // Backstop: the dispatcher never lets more than
-                    // `reassembly_window` frames sit between dispatch and
-                    // emission, so a larger buffer means the engine lost a
-                    // result — fail fast instead of buffering forever.
-                    if pending.len() > reassembly_window {
-                        failure = Some(format!(
-                            "reassembly window overflow: {} results buffered out of order \
-                             (window {reassembly_window}, next expected seq {next_emit}) — \
-                             a result was lost",
-                            pending.len()
-                        ));
-                        break;
-                    }
-                }
-                Ok(Msg::Done { stats, metrics, backend }) => {
-                    merged.merge(&metrics);
-                    per_worker.push(stats);
-                    backend_name = backend;
-                    done_workers += 1;
-                }
-                Ok(Msg::Failed { error }) => {
-                    failure = Some(error);
-                    break;
-                }
-                Ok(Msg::DispatchDone { dispatched }) => {
-                    expected = Some(dispatched);
-                }
-                Err(RecvTimeoutError::Timeout) => {
-                    failure = Some(format!(
-                        "engine stalled: no progress for {:.1}s ({} of {:?} frames emitted)",
-                        timeout.as_secs_f64(),
-                        emitted,
-                        expected
-                    ));
-                    break;
-                }
-                Err(RecvTimeoutError::Disconnected) => {
-                    if expected.is_some_and(|e| emitted >= e) && done_workers == n_workers {
-                        break;
-                    }
-                    failure = Some("engine threads exited before completing the run".to_string());
-                    break;
-                }
+    let server = Server::start(factory, cfg.clone())?;
+    let session = server.session(
+        SessionOptions::named("sensor")
+            .with_queue_depth(cfg.sensor_queue_depth.max(1))
+            .with_window(cfg.effective_window()),
+    )?;
+    let (submitter, mut stream) = session.split();
+    let sensor = spawn_synthetic_sensor(
+        submitter,
+        server.watch(),
+        cfg.image_size,
+        cfg.num_objects,
+        cfg.sensor_seed,
+        num_frames,
+    );
+    let mut stream_err: Option<ServeError> = None;
+    for item in &mut stream {
+        match item {
+            Ok(r) => sink(&r),
+            Err(e) => {
+                stream_err = Some(e);
+                break;
             }
         }
-        let wall_s = t0.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
-        // Unstick every thread (no-ops on the happy path), then let the
-        // scope join them.
-        abort.store(true, Ordering::Relaxed);
-        stop.store(true, Ordering::Relaxed);
-        go.store(true, Ordering::Relaxed);
-        per_worker.sort_by_key(|w| w.worker);
-        (failure, emitted, iou_sum, correct, merged, per_worker, backend_name, wall_s)
-    });
-
-    let (failure, emitted, iou_sum, correct, merged, per_worker, backend_name, wall_s) = outcome;
-    if let Some(error) = failure {
-        return Err(anyhow!("sharded serve failed: {error}"));
     }
-    let report = ServeReport {
-        backend: backend_name.to_string(),
-        frames: emitted,
-        dropped: rejected.load(Ordering::Relaxed),
-        wall_fps: if wall_s > 0.0 { emitted as f64 / wall_s } else { 0.0 },
-        mean_latency_s: merged.frame_latency_mean_s(),
-        mean_energy_j: merged.mean_energy_j(),
-        modeled_kfps_per_watt: merged.modeled_kfps_per_watt(),
-        mean_kept_patches: merged.mean_kept_patches(),
-        mean_batch: merged.mean_batch(),
-        mean_mask_iou: if emitted > 0 { iou_sum / emitted as f64 } else { 0.0 },
-        top1_accuracy: if emitted > 0 { correct as f64 / emitted as f64 } else { 0.0 },
-        workers: n_workers,
-        per_worker,
-    };
-    Ok((report, merged))
+    sensor.join().ok();
+    drop(stream);
+    match server.shutdown() {
+        Ok(pair) => match stream_err {
+            // The stream only errs when the server failed, in which case
+            // shutdown reports it — this arm is a defensive fallback.
+            Some(e) => Err(anyhow!("sharded serve failed: {e}")),
+            None => Ok(pair),
+        },
+        Err(e) => Err(e),
+    }
 }
 
 /// Serve [`ServeOptions::num_frames`] frames through `workers` parallel
@@ -590,27 +254,27 @@ where
 /// [`super::pipeline::FrameStream`]. Each worker thread builds its own
 /// backend through `factory` (so non-`Send` substrates shard cleanly), its
 /// own pipeline around it, and micro-batches its queue under
-/// [`ServeOptions::batch`]; the reassembler's out-of-order buffer is
-/// bounded (see [`EngineConfig::reassembly_window`]).
-pub fn serve_sharded_with<F: BackendFactory>(
+/// [`ServeOptions::batch`].
+///
+/// **Wrapper status**: a documented one-session wrapper over
+/// [`super::server::Server`] (via [`run`]) — open a `Server` directly to
+/// share the same worker pool between multiple cameras/tenants.
+pub fn serve_sharded_with<F>(
     pipe_cfg: &PipelineConfig,
     factory: &F,
     workers: usize,
     opts: &ServeOptions,
     sink: impl FnMut(&FrameResult),
-) -> Result<(ServeReport, StageMetrics)> {
-    let vit = pipe_cfg.vit_config();
-    let mut cfg = EngineConfig::new(workers, vit.patch_size, pipe_cfg.image_size);
-    cfg.queue_depth = opts.queue_depth.max(1);
-    cfg.sensor_queue_depth = opts.queue_depth.max(1) * cfg.workers;
-    cfg.num_objects = opts.num_objects;
-    cfg.sensor_seed = opts.sensor_seed;
-    cfg.batch = opts.batch;
-    // One window knob across both serving paths: `--window` bounds the
-    // single-pipeline stream and the engine reassembler alike.
-    cfg.reassembly_window = opts.window.max(1);
+) -> Result<(ServeReport, StageMetrics)>
+where
+    F: BackendFactory + Clone + Send + 'static,
+    F::Backend: 'static,
+{
+    let cfg = EngineConfig::for_serving(pipe_cfg, opts, workers);
+    let pipe_cfg = pipe_cfg.clone();
+    let factory = factory.clone();
     run(
-        |wid| Pipeline::with_backend(pipe_cfg.clone(), factory.create(wid)?),
+        move |wid| Pipeline::with_backend(pipe_cfg.clone(), factory.create(wid)?),
         &cfg,
         opts.num_frames,
         sink,
@@ -619,11 +283,17 @@ pub fn serve_sharded_with<F: BackendFactory>(
 
 /// [`serve_sharded_with`] without a result sink: drain the stream
 /// internally and return only the terminal report + merged metrics.
-pub fn serve_sharded<F: BackendFactory>(
+/// Like `serve_sharded_with`, a documented one-session wrapper over the
+/// session-oriented [`super::server::Server`].
+pub fn serve_sharded<F>(
     pipe_cfg: &PipelineConfig,
     factory: &F,
     workers: usize,
     opts: &ServeOptions,
-) -> Result<(ServeReport, StageMetrics)> {
+) -> Result<(ServeReport, StageMetrics)>
+where
+    F: BackendFactory + Clone + Send + 'static,
+    F::Backend: 'static,
+{
     serve_sharded_with(pipe_cfg, factory, workers, opts, |_r| {})
 }

@@ -11,62 +11,70 @@
 //! overhead (and, on the modeled accelerator, MR weight-bank programming)
 //! amortizes across each micro-batch.
 //!
-//! Single-pipeline serving is **streaming** ([`pipeline::serve`] returns a
-//! [`pipeline::FrameStream`] — an iterator of in-order results; the
-//! terminal [`pipeline::ServeReport`] is derived from the drained stream):
+//! Serving is **session-oriented**: a long-lived [`server::Server`] owns
+//! the dispatcher → N workers → reassembler machinery once, and any number
+//! of tenants (cameras) open independent [`server::Session`]s on top of
+//! it — the near-sensor deployment shape, one accelerator shared by
+//! continuous multi-sensor traffic:
 //!
 //! ```text
-//! sensor thread ──frames──▶ bounded queue ──▶ FrameStream
-//!                                              │  MGNet (Backend) → mask → route
-//!                                              │  MicroBatcher lanes (per bucket,
-//!                                              │    max_batch / max_wait deadline)
-//!                                              │  ViT backbone (Backend::execute_batch,
-//!                                              │    one call per flushed lane)
-//!                                              ▼  in-order FrameResults
-//!                                                 (bounded reassembly window)
+//! session "cam-0" ──┐ (bounded queue, weight w0)
+//! session "cam-1" ──┤            ┌─▶ worker 0 (Pipeline + Backend,
+//! session "cam-2" ──┼▶ admission │     bucket-major micro-batch) ─┐
+//!        …          │  (weighted ├─▶ worker 1 …                   ├─▶ per-session
+//!                   │   round-   │        …                       │   reassembly →
+//!                   └─  robin)   └─▶ worker N-1 ──────────────────┘   in-order
+//!                                                                     SessionStreams
 //! ```
 //!
-//! Sharded serving (`serve_sharded`, [`engine`]) scales the host side to N
-//! cores by putting a dispatcher between the sensor and N such pipelines:
+//! Frames from all sessions interleave through the workers' shared
+//! per-bucket micro-batch lanes (same-bucket frames from *different*
+//! cameras complete in one `execute_batch` call); admission is weighted
+//! round-robin so a hot camera cannot starve the rest; each session gets
+//! strictly in-order results, its own `ServeReport`, isolated
+//! backpressure, and graceful close/cancel independent of server
+//! shutdown. Worker threads are optionally core-pinned
+//! ([`engine::EngineConfig::pin_workers`], [`affinity`]).
 //!
-//! ```text
-//!                         ┌─▶ worker 0 (Pipeline + Backend, micro-batch) ─┐
-//! sensor ─▶ dispatcher ───┼─▶ worker 1 (Pipeline + Backend, micro-batch) ─┼─▶ reassembler
-//!           (round-robin, │           …                                   │   (in-order sink,
-//!            queue-depth  └─▶ worker N-1 ─────────────────────────────────┘    bounded window,
-//!            aware)                                                            merged StageMetrics)
-//! ```
+//! The pre-session batch-job surfaces survive as documented wrappers:
 //!
-//! The dispatcher shards frames round-robin biased toward the worker with
-//! the fewest in-flight frames; per-worker queues are bounded, so
-//! backpressure propagates to the sensor queue, which is the only place
-//! frames are dropped (a hung-up consumer is shutdown, never a drop — see
-//! [`batcher::PushOutcome`]). Each worker collects micro-batches from its
-//! queue ([`engine::EngineConfig::batch`]) and processes them with one
-//! bucket-major `process_batch` call. The reassembler re-orders results by
-//! dispatch sequence number inside a bounded window, merges every worker's
-//! [`StageMetrics`], and fails the run (rather than hanging) if any worker
-//! errors or panics.
+//! - [`pipeline::serve`] — the **in-thread degenerate case** (one
+//!   synthetic-sensor tenant, one pipeline on the caller's thread):
+//!   returns a [`pipeline::FrameStream`] of in-order results backed by
+//!   the same `MicroBatcher` lanes and bounded reassembly window.
+//! - [`engine::serve_sharded`] / [`engine::run`] — **one-session
+//!   wrappers** over [`server::Server`]: start the server, feed one
+//!   session from the synthetic sensor, drain it in order, shut down into
+//!   the aggregate report.
 //!
 //! Python never appears here, and with the `host`/`sim` backends neither
 //! do compiled artifacts — which is what lets CI exercise the full frame
-//! path. Backends are not required to be `Send` (the PJRT client is not),
-//! so each one lives on the thread that created it: the single-pipeline
-//! path keeps it on one inference thread, and the engine constructs one
-//! `Pipeline` *inside each worker thread* via its `BackendFactory` (see
-//! [`engine::FrameWorker`]). The one-frame hot path is allocation-free in
-//! steady state: per-frame buffers live in [`pipeline::FrameScratch`] and
-//! tensors are handed to the backend as borrowed
-//! [`crate::runtime::TensorRef`] views; batched frames stage owned copies
-//! in [`pipeline::RoutedFrame`]s so lanes can wait while routing
-//! continues. [`pipeline::ServeReport`] names the backend that served the
-//! run and the mean micro-batch size; under `sim` its latency column is
-//! modeled photonic-core time, recorded per stage (`modeled_mgnet` /
-//! `modeled_backbone`).
+//! path (including multi-session serving, `rust/tests/sessions.rs`).
+//! Backends are not required to be `Send` (the PJRT client is not), so
+//! each one lives on the thread that created it: the server constructs
+//! one `Pipeline` *inside each worker thread* via its `BackendFactory`.
+//! The one-frame hot path is allocation-free in steady state
+//! ([`pipeline::FrameScratch`] + borrowed [`crate::runtime::TensorRef`]
+//! views); batched frames stage owned copies in [`pipeline::RoutedFrame`]s
+//! so lanes can wait while routing continues. [`pipeline::ServeReport`]
+//! names the backend that served the run and the mean micro-batch size;
+//! under `sim` its latency column is modeled photonic-core time, recorded
+//! per stage (`modeled_mgnet` / `modeled_backbone`).
+//!
+//! | module | role |
+//! |---|---|
+//! | [`batcher`] | bucket router, per-bucket micro-batch lanes, bounded frame queues |
+//! | [`pipeline`] | the frame pipeline (MGNet → mask → route → backbone), in-thread streaming `serve` |
+//! | [`server`] | the session-oriented server: multi-tenant sessions, fair admission, per-session streams/reports |
+//! | [`engine`] | `FrameWorker`/`EngineConfig` + the one-session batch-job wrappers (`run`, `serve_sharded`) |
+//! | [`affinity`] | best-effort worker-thread core pinning (`sched_setaffinity`) |
+//! | [`stats`] | per-stage metrics, merge-able across workers; per-worker utilization |
 
+pub mod affinity;
 pub mod batcher;
 pub mod engine;
 pub mod pipeline;
+pub mod server;
 pub mod stats;
 
 pub use batcher::{BatchPolicy, BucketRouter, FrameQueue, MicroBatcher, PushOutcome};
@@ -74,5 +82,9 @@ pub use engine::{serve_sharded, serve_sharded_with, EngineConfig, FrameWorker};
 pub use pipeline::{
     serve, FrameResult, FrameScratch, FrameStream, Pipeline, PipelineConfig, RoutedFrame,
     ServeOptions, ServeReport,
+};
+pub use server::{
+    spawn_synthetic_sensor, ServeError, Server, ServerStats, ServerWatch, Session, SessionOptions,
+    SessionStats, SessionStream, SessionSubmitter,
 };
 pub use stats::{StageMetrics, WorkerStats};

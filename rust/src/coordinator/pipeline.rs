@@ -144,6 +144,10 @@ pub struct FrameResult {
     /// otherwise — including any time the frame waited in a micro-batch
     /// lane on the batched path.
     pub latency_s: f64,
+    /// Frames that shared this frame's backbone dispatch (1 on the
+    /// per-frame path). Lets per-session accounting report the mean
+    /// micro-batch size without access to the worker's [`StageMetrics`].
+    pub batch_size: usize,
 }
 
 impl FrameResult {
@@ -489,7 +493,7 @@ impl<B: Backend> Pipeline<B> {
             .iter()
             .find(|(b, _)| *b == bucket)
             .map(|(_, n)| n.as_str())
-            .expect("router buckets all have precomputed artifact names");
+            .ok_or_else(|| anyhow!("bucket {bucket} has no artifact in the ladder"))?;
         let bdims = [bucket as i64, patch_dim as i64];
         let vdims = [bucket as i64];
         let logits = self
@@ -523,6 +527,7 @@ impl<B: Backend> Pipeline<B> {
             bucket,
             modeled_energy_j: energy_j,
             latency_s: modeled.unwrap_or(wall_s),
+            batch_size: 1,
         })
     }
 
@@ -607,7 +612,8 @@ impl<B: Backend> Pipeline<B> {
                 self.cfg.backbone_artifact(bucket),
                 out.len()
             );
-            let logits = out.pop().unwrap();
+            let logits =
+                out.pop().ok_or_else(|| anyhow!("backend returned an empty output set"))?;
             let first = i == 0;
             self.metrics.record_stage("backbone", backbone_share);
             let energy_j = self.modeled_energy_j(rf.kept_count, first);
@@ -630,6 +636,7 @@ impl<B: Backend> Pipeline<B> {
                 bucket,
                 modeled_energy_j: energy_j,
                 latency_s: modeled.unwrap_or(latency_wall_s),
+                batch_size: n,
             });
         }
         Ok(results)
@@ -659,17 +666,26 @@ impl<B: Backend> Pipeline<B> {
             if idxs.is_empty() {
                 continue;
             }
-            let group: Vec<RoutedFrame> =
-                idxs.iter().map(|&i| routed[i].take().expect("unclaimed routed frame")).collect();
+            let mut group: Vec<RoutedFrame> = Vec::with_capacity(idxs.len());
+            for &i in &idxs {
+                group.push(
+                    routed[i]
+                        .take()
+                        .ok_or_else(|| anyhow!("frame {i} was claimed by two bucket groups"))?,
+                );
+            }
             let group_results = self.complete_batch(group)?;
             for (i, r) in idxs.into_iter().zip(group_results) {
                 results[i] = Some(r);
             }
         }
-        Ok(results
+        results
             .into_iter()
-            .map(|r| r.expect("every routed frame belongs to exactly one bucket group"))
-            .collect())
+            .enumerate()
+            .map(|(i, r)| {
+                r.ok_or_else(|| anyhow!("frame {i} was routed to a bucket outside the ladder"))
+            })
+            .collect()
     }
 }
 
@@ -724,6 +740,11 @@ pub struct ServeOptions {
     /// oldest lane is force-flushed so the head of the stream can emit.
     /// Bounds stream memory on unbounded runs.
     pub window: usize,
+    /// Best-effort worker-thread core pinning
+    /// (`coordinator::affinity::pin_current_thread`). Honored by the
+    /// sharded `serve_sharded` path; the in-thread [`serve`] path has no
+    /// worker threads to pin and ignores it.
+    pub pin_workers: bool,
 }
 
 impl ServeOptions {
@@ -737,6 +758,7 @@ impl ServeOptions {
             queue_depth: 4,
             batch: BatchPolicy::per_frame(),
             window: 64,
+            pin_workers: false,
         }
     }
 }
@@ -1019,6 +1041,7 @@ impl<'p, B: Backend> FrameStream<'p, B> {
                 frames: done,
                 busy_s,
                 utilization: if elapsed_s > 0.0 { (busy_s / elapsed_s).min(1.0) } else { 0.0 },
+                core: None,
             }],
         }
     }
@@ -1057,6 +1080,14 @@ impl<B: Backend> Drop for FrameStream<'_, B> {
 /// ```ignore
 /// let report = serve(&mut pipeline, &ServeOptions::frames(100))?.finish()?;
 /// ```
+///
+/// **Wrapper status.** `serve` is the *in-thread degenerate case* of the
+/// session-oriented serving surface ([`crate::coordinator::server::Server`]):
+/// one synthetic-sensor tenant, one pipeline, no worker threads — the same
+/// MicroBatcher lanes and bounded-window reassembly, driven inline because
+/// the caller owns the (non-`Send`) backend. Multi-worker and multi-tenant
+/// serving go through `Server` (of which `serve_sharded` is the one-session
+/// wrapper); both surfaces produce the same [`ServeReport`] shape.
 pub fn serve<'p, B: Backend>(
     pipeline: &'p mut Pipeline<B>,
     opts: &ServeOptions,
@@ -1131,6 +1162,7 @@ mod tests {
             bucket: 36,
             modeled_energy_j: 1e-5,
             latency_s: 0.01,
+            batch_size: 1,
         };
         assert_eq!(r.predicted_class(), 1);
     }
@@ -1144,6 +1176,7 @@ mod tests {
             bucket: 36,
             modeled_energy_j: 1e-5,
             latency_s: 0.01,
+            batch_size: 1,
         };
         // Must not panic; any in-range index is acceptable.
         assert!(r.predicted_class() < 3);

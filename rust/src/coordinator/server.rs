@@ -1,0 +1,1624 @@
+//! Session-oriented serving: a long-lived [`Server`] that owns the
+//! dispatcher → N workers → reassembler machinery once, shared by any
+//! number of independent client [`Session`]s (one per camera / tenant).
+//!
+//! The batch-job entry points (`engine::run`, `serve_sharded`) consume a
+//! single frame source start-to-finish, so two cameras could never share
+//! the worker pool, the micro-batcher, or the reassembler. The paper's
+//! near-sensor deployment is the opposite shape: **one accelerator,
+//! continuous traffic from many sensors**. This module is that shape:
+//!
+//! ```text
+//! session "cam-0" ──┐ (bounded queue, weight w0)
+//! session "cam-1" ──┤            ┌─▶ worker 0 (Pipeline + Backend,
+//! session "cam-2" ──┼▶ admission │     bucket-major micro-batch) ─┐
+//!        …          │  (weighted ├─▶ worker 1 …                   ├─▶ per-session
+//!                   │   round-   │        …                       │   reassembly →
+//!                   └─  robin)   └─▶ worker N-1 ──────────────────┘   in-order
+//!                                                                     SessionStreams
+//! ```
+//!
+//! Invariants the API guarantees:
+//!
+//! - **Per-session FIFO.** A session's results stream back strictly in its
+//!   own submission order, regardless of which workers served them or how
+//!   sessions interleaved (per-session sequence numbers + a per-session
+//!   reassembly buffer bounded by the session window).
+//! - **Cross-session amortization.** All sessions share the workers'
+//!   per-bucket micro-batch lanes: same-bucket frames from *different*
+//!   cameras complete in one `Backend::execute_batch` call, so a fleet of
+//!   similar sensors batches better than any of them alone (gated by
+//!   `rust/tests/sessions.rs`).
+//! - **Fair admission.** The dispatcher dequeues sessions weighted
+//!   round-robin (up to [`SessionOptions::weight`] frames per turn), so a
+//!   hot camera saturating its queue cannot starve an idle-ish one.
+//! - **Isolated backpressure.** Each session has a bounded submission
+//!   queue ([`Session::submit`] blocks, [`Session::try_submit`] rejects)
+//!   and a per-session dispatch window: a tenant that stops draining its
+//!   stream stalls only its own admission, never its neighbours'.
+//! - **Graceful teardown.** Closing a session drains what it already
+//!   submitted; *dropping* one mid-flight (queue + results in flight)
+//!   cancels it without panicking the server — queued frames are
+//!   discarded, in-flight results fall on the floor, every other session
+//!   keeps streaming. Poisoned locks and hung-up channels surface as
+//!   [`ServeError`], never as a panic.
+//! - **Failure is loud.** A worker error/panic fails the server: every
+//!   stream ends with one [`ServeError::Failed`], and
+//!   [`Server::shutdown`] returns the failure.
+//!
+//! `serve_sharded(_with)` and `engine::run` are thin one-session wrappers
+//! over this module (a synthetic-sensor tenant feeding one session), which
+//! is what keeps their pre-session observable semantics.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::PushOutcome;
+use super::engine::{EngineConfig, FrameWorker};
+use super::pipeline::{FrameResult, ServeReport};
+use super::stats::{StageMetrics, WorkerStats};
+use crate::sensor::{Frame, VideoSource};
+
+/// How serving machinery failures surface to session holders — never as a
+/// panic (see the module invariants).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The server or this session no longer accepts the operation
+    /// (closed, shut down, or the session was canceled).
+    Closed,
+    /// The serving machinery failed (worker error or panic, lost thread);
+    /// the message is the first recorded failure.
+    Failed(String),
+    /// A lock guarding the named shared state was poisoned by a panicking
+    /// thread.
+    Poisoned(&'static str),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Closed => write!(f, "serving session closed"),
+            ServeError::Failed(msg) => write!(f, "serving failed: {msg}"),
+            ServeError::Poisoned(what) => write!(f, "serving state poisoned: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Lock for a public API path: poisoning surfaces as
+/// [`ServeError::Poisoned`] instead of a panic.
+fn guard<'a, T>(
+    m: &'a Mutex<T>,
+    what: &'static str,
+) -> std::result::Result<MutexGuard<'a, T>, ServeError> {
+    m.lock().map_err(|_| ServeError::Poisoned(what))
+}
+
+/// Lock for internal accounting: the guarded data is plain counters, so a
+/// poisoned lock is recovered rather than propagated (the panic that
+/// poisoned it is reported through the worker failure path).
+fn recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Knobs of one serving session.
+#[derive(Debug, Clone)]
+pub struct SessionOptions {
+    /// Diagnostic label carried into [`SessionStats`].
+    pub name: String,
+    /// Bounded submission-queue depth ([`Session::submit`] blocks /
+    /// [`Session::try_submit`] rejects when full).
+    pub queue_depth: usize,
+    /// Fair-admission weight: frames the dispatcher may take from this
+    /// session per round-robin turn (>= 1). Weight 2 gets ~2x the
+    /// admission share of weight 1 under contention.
+    pub weight: u32,
+    /// Per-session dispatch window: max frames between dispatch and the
+    /// consumer's stream (bounds per-session reassembly memory and
+    /// undrained results). `0` derives a default from the server topology
+    /// ([`EngineConfig::effective_window`]).
+    pub window: usize,
+}
+
+impl Default for SessionOptions {
+    fn default() -> Self {
+        SessionOptions { name: String::new(), queue_depth: 8, weight: 1, window: 0 }
+    }
+}
+
+impl SessionOptions {
+    /// Defaults with a diagnostic name.
+    pub fn named(name: impl Into<String>) -> Self {
+        SessionOptions { name: name.into(), ..SessionOptions::default() }
+    }
+
+    pub fn with_weight(mut self, weight: u32) -> Self {
+        self.weight = weight.max(1);
+        self
+    }
+
+    pub fn with_queue_depth(mut self, depth: usize) -> Self {
+        self.queue_depth = depth.max(1);
+        self
+    }
+
+    pub fn with_window(mut self, window: usize) -> Self {
+        self.window = window;
+        self
+    }
+}
+
+/// Per-session running totals, accumulated by the reassembler at emission
+/// time and snapshotted into per-session [`ServeReport`]s.
+#[derive(Debug, Default, Clone)]
+struct SessionAccum {
+    frames: u64,
+    iou_sum: f64,
+    correct: u64,
+    energy_sum: f64,
+    latency_sum: f64,
+    kept_sum: f64,
+    batch_sum: f64,
+    first_emit: Option<Instant>,
+    last_emit: Option<Instant>,
+    /// Every frame the session submitted before closing was emitted.
+    complete: bool,
+}
+
+/// Shared per-session state (counters + accumulated report inputs).
+#[derive(Debug)]
+struct SessionShared {
+    id: u64,
+    name: String,
+    weight: u32,
+    window: usize,
+    /// Frames accepted into the submission queue.
+    submitted: AtomicU64,
+    /// Frames handed to workers (dispatcher mirror).
+    dispatched: AtomicU64,
+    /// Results the consumer has taken off the stream — the dispatch
+    /// window compares against this, which is what isolates a
+    /// non-draining tenant's backpressure to its own session.
+    consumed: AtomicU64,
+    /// `try_submit` rejections (the session's `ServeReport::dropped`).
+    rejected: AtomicU64,
+    /// The stream side was dropped: discard this session's frames.
+    canceled: AtomicBool,
+    accum: Mutex<SessionAccum>,
+}
+
+impl SessionAccum {
+    /// Build a [`ServeReport`] from one consistent snapshot of the totals.
+    fn to_report(&self, dropped: u64, backend: &str, workers: usize) -> ServeReport {
+        let frames = self.frames;
+        let div = |sum: f64| if frames > 0 { sum / frames as f64 } else { 0.0 };
+        let span = match (self.first_emit, self.last_emit) {
+            (Some(first), Some(last)) if last > first => (last - first).as_secs_f64(),
+            _ => 0.0,
+        };
+        let mean_energy = div(self.energy_sum);
+        ServeReport {
+            backend: backend.to_string(),
+            frames,
+            dropped,
+            wall_fps: if span > 0.0 { frames as f64 / span } else { 0.0 },
+            mean_latency_s: div(self.latency_sum),
+            mean_energy_j: mean_energy,
+            modeled_kfps_per_watt: super::stats::kfps_per_watt(mean_energy),
+            mean_kept_patches: div(self.kept_sum),
+            mean_batch: div(self.batch_sum),
+            mean_mask_iou: div(self.iou_sum),
+            top1_accuracy: if frames > 0 { self.correct as f64 / frames as f64 } else { 0.0 },
+            workers,
+            per_worker: Vec::new(),
+        }
+    }
+}
+
+impl SessionShared {
+    /// One consistent snapshot of the session's accumulated totals.
+    fn snapshot(&self) -> SessionAccum {
+        recover(&self.accum).clone()
+    }
+
+    fn report(&self, backend: &str, workers: usize) -> ServeReport {
+        self.snapshot().to_report(self.rejected.load(Ordering::Relaxed), backend, workers)
+    }
+}
+
+/// A frame tagged with its session and per-session sequence number.
+type Job = (u64, u64, Frame);
+
+/// What a worker thread hands back on clean exit (metrics + utilization +
+/// backend identity), or the failure message that must fail the server.
+type WorkerOutcome = std::result::Result<(StageMetrics, WorkerStats, &'static str), String>;
+
+/// The terminal server outcome [`Server::shutdown`] reads back: aggregate
+/// report + merged metrics, or the first recorded failure.
+type FinalOutcome = std::result::Result<(ServeReport, StageMetrics), String>;
+
+/// Messages from the dispatcher / workers to the reassembler.
+enum Msg {
+    /// Worker finished warmup and is accepting frames.
+    Ready { backend: &'static str },
+    /// One processed frame.
+    Result { session: u64, seq: u64, result: FrameResult, iou: f64, correct: bool },
+    /// No more frames will be dispatched for this session; exactly
+    /// `dispatched` results are expected.
+    SessionDone { session: u64, dispatched: u64 },
+    /// Worker exited cleanly with its metrics (boxed: the metrics bundle
+    /// dwarfs every other variant, and this is a once-per-worker message).
+    WorkerDone { stats: WorkerStats, metrics: Box<StageMetrics>, backend: &'static str },
+    /// The server must fail (worker error/panic, dead pool).
+    /// `worker_exit` is true when the sender is a worker thread that will
+    /// send no `WorkerDone` — it still counts toward pool shutdown.
+    Failure { error: String, worker_exit: bool },
+    /// The dispatcher exited (graceful or abort).
+    DispatcherExited,
+}
+
+/// Dispatcher-side session state.
+struct DispatchEntry {
+    shared: Arc<SessionShared>,
+    rx: Receiver<Frame>,
+    dispatched: u64,
+    done_sent: bool,
+}
+
+/// Reassembler-side session state.
+struct ReasmState {
+    shared: Arc<SessionShared>,
+    out: Option<SyncSender<FrameResult>>,
+    pending: BTreeMap<u64, (FrameResult, f64, bool)>,
+    next_emit: u64,
+    emitted: u64,
+    expected: Option<u64>,
+}
+
+/// Hand-off point where [`Server::session`] publishes new sessions to the
+/// dispatcher and reassembler threads.
+#[derive(Default)]
+struct Registry {
+    new_dispatch: Vec<DispatchEntry>,
+    new_reasm: Vec<ReasmState>,
+}
+
+/// State shared by the server handle, its threads, and session handles.
+struct ServerCore {
+    cfg: EngineConfig,
+    n_workers: usize,
+    default_window: usize,
+    ready: AtomicBool,
+    closing: AtomicBool,
+    abort: AtomicBool,
+    failed: AtomicBool,
+    failure: Mutex<Option<String>>,
+    backend: Mutex<&'static str>,
+    t_ready: Mutex<Option<Instant>>,
+    inflight: Vec<AtomicU64>,
+    total_dispatched: AtomicU64,
+    next_session: AtomicU64,
+    registry: Mutex<Registry>,
+    sessions: Mutex<Vec<Arc<SessionShared>>>,
+    outcome: Mutex<Option<FinalOutcome>>,
+}
+
+impl ServerCore {
+    fn failure_msg(&self) -> Option<String> {
+        if !self.failed.load(Ordering::Relaxed) {
+            return None;
+        }
+        recover(&self.failure).clone()
+    }
+
+    fn fail(&self, error: &str) {
+        let mut f = recover(&self.failure);
+        if f.is_none() {
+            *f = Some(error.to_string());
+        }
+        drop(f);
+        self.failed.store(true, Ordering::Relaxed);
+        self.abort.store(true, Ordering::Relaxed);
+    }
+}
+
+/// A cheap, `Send + Clone` view of the server's liveness flags — what a
+/// producer thread needs to pace itself against warmup and failure
+/// without holding the server handle.
+#[derive(Clone)]
+pub struct ServerWatch {
+    core: Arc<ServerCore>,
+}
+
+impl ServerWatch {
+    /// All workers warmed up; dispatch is live.
+    pub fn ready(&self) -> bool {
+        self.core.ready.load(Ordering::Relaxed)
+    }
+
+    /// The server failed (see [`ServerWatch::failure`]).
+    pub fn failed(&self) -> bool {
+        self.core.failed.load(Ordering::Relaxed)
+    }
+
+    /// Graceful shutdown has begun; new submissions are rejected.
+    pub fn closing(&self) -> bool {
+        self.core.closing.load(Ordering::Relaxed)
+    }
+
+    /// The first recorded failure, if any.
+    pub fn failure(&self) -> Option<String> {
+        self.core.failure_msg()
+    }
+}
+
+/// Submission half of a [`Session`] (`Send`: feed it from a sensor
+/// thread). Dropping it closes the session's input — already-submitted
+/// frames still drain through the stream.
+pub struct SessionSubmitter {
+    tx: Option<SyncSender<Frame>>,
+    shared: Arc<SessionShared>,
+    core: Arc<ServerCore>,
+}
+
+impl SessionSubmitter {
+    /// Blocking submission under backpressure: waits while the session
+    /// queue is full, errs if the session/server is closed or failed.
+    ///
+    /// `submitted` is incremented **before** the send: a graceful
+    /// shutdown finalizes a session only once `dispatched` has caught up
+    /// with `submitted`, so a frame this method accepted can never be
+    /// silently discarded by a racing shutdown sweep.
+    pub fn submit(&self, frame: Frame) -> std::result::Result<(), ServeError> {
+        if let Some(msg) = self.core.failure_msg() {
+            return Err(ServeError::Failed(msg));
+        }
+        if self.core.closing.load(Ordering::Relaxed)
+            || self.shared.canceled.load(Ordering::Relaxed)
+        {
+            return Err(ServeError::Closed);
+        }
+        let Some(tx) = &self.tx else { return Err(ServeError::Closed) };
+        self.shared.submitted.fetch_add(1, Ordering::Relaxed);
+        match tx.send(frame) {
+            Ok(()) => Ok(()),
+            Err(_) => {
+                self.shared.submitted.fetch_sub(1, Ordering::Relaxed);
+                match self.core.failure_msg() {
+                    Some(msg) => Err(ServeError::Failed(msg)),
+                    None => Err(ServeError::Closed),
+                }
+            }
+        }
+    }
+
+    /// Non-blocking submission; [`PushOutcome::Full`] counts as a
+    /// rejection in the session's `ServeReport::dropped` (the sensor
+    /// backpressure contract of the batch-job API).
+    pub fn try_submit(&self, frame: Frame) -> PushOutcome {
+        if self.core.closing.load(Ordering::Relaxed)
+            || self.core.failed.load(Ordering::Relaxed)
+            || self.shared.canceled.load(Ordering::Relaxed)
+        {
+            return PushOutcome::Closed;
+        }
+        let Some(tx) = &self.tx else { return PushOutcome::Closed };
+        // Pre-increment for the same shutdown-race reason as `submit`.
+        self.shared.submitted.fetch_add(1, Ordering::Relaxed);
+        match tx.try_send(frame) {
+            Ok(()) => PushOutcome::Queued,
+            Err(TrySendError::Full(_)) => {
+                self.shared.submitted.fetch_sub(1, Ordering::Relaxed);
+                self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+                PushOutcome::Full
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                self.shared.submitted.fetch_sub(1, Ordering::Relaxed);
+                PushOutcome::Closed
+            }
+        }
+    }
+
+    /// Close the session's input (idempotent): no more submissions; the
+    /// stream ends once everything already submitted has been emitted.
+    pub fn close(&mut self) {
+        self.tx = None;
+    }
+}
+
+/// Consumption half of a [`Session`]: an iterator of this session's
+/// [`FrameResult`]s, strictly in submission order. Dropping it without
+/// draining **cancels** the session (queued frames are discarded) — the
+/// graceful mid-flight teardown path.
+pub struct SessionStream {
+    rx: Receiver<FrameResult>,
+    shared: Arc<SessionShared>,
+    core: Arc<ServerCore>,
+    gave_error: bool,
+    finished: bool,
+}
+
+impl SessionStream {
+    fn next_result(&mut self) -> Option<std::result::Result<FrameResult, ServeError>> {
+        if self.finished {
+            return None;
+        }
+        loop {
+            match self.rx.recv_timeout(Duration::from_millis(100)) {
+                Ok(r) => {
+                    self.shared.consumed.fetch_add(1, Ordering::Relaxed);
+                    return Some(Ok(r));
+                }
+                // Quiet channel: keep waiting unless the server failed
+                // (buffered results always drain first, so an empty
+                // channel on a failed server is the end of the stream —
+                // and a session that raced server teardown can never
+                // block its consumer forever).
+                Err(RecvTimeoutError::Timeout) => {
+                    if !self.core.failed.load(Ordering::Relaxed) {
+                        continue;
+                    }
+                    return self.end_of_stream();
+                }
+                Err(RecvTimeoutError::Disconnected) => return self.end_of_stream(),
+            }
+        }
+    }
+
+    /// The stream is over: surface the server failure exactly once, or end
+    /// cleanly for complete / canceled / shutdown-raced sessions.
+    fn end_of_stream(&mut self) -> Option<std::result::Result<FrameResult, ServeError>> {
+        self.finished = true;
+        if self.gave_error || recover(&self.shared.accum).complete {
+            return None;
+        }
+        self.gave_error = true;
+        self.core.failure_msg().map(|msg| Err(ServeError::Failed(msg)))
+    }
+
+    /// Snapshot of this session's running [`ServeReport`].
+    pub fn report(&self) -> ServeReport {
+        self.shared.report(*recover(&self.core.backend), self.core.n_workers)
+    }
+
+    /// Drain the rest of the stream (propagating a server failure) and
+    /// return the session's terminal [`ServeReport`].
+    pub fn finish(mut self) -> std::result::Result<ServeReport, ServeError> {
+        while let Some(item) = self.next_result() {
+            item?;
+        }
+        Ok(self.report())
+    }
+}
+
+impl Iterator for SessionStream {
+    type Item = std::result::Result<FrameResult, ServeError>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        self.next_result()
+    }
+}
+
+impl Drop for SessionStream {
+    fn drop(&mut self) {
+        // An undrained stream marks the session canceled so the dispatcher
+        // discards its remaining frames instead of serving a consumer that
+        // is gone. A drained/complete session keeps its clean record.
+        if !self.finished && !recover(&self.shared.accum).complete {
+            self.shared.canceled.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+/// One tenant's handle on a running [`Server`]: submit frames under
+/// backpressure, iterate in-order results, snapshot the per-session
+/// report. Split it ([`Session::split`]) to feed and drain from different
+/// threads.
+pub struct Session {
+    submitter: SessionSubmitter,
+    stream: SessionStream,
+}
+
+impl Session {
+    /// Session id (unique per server).
+    pub fn id(&self) -> u64 {
+        self.submitter.shared.id
+    }
+
+    /// See [`SessionSubmitter::submit`].
+    pub fn submit(&self, frame: Frame) -> std::result::Result<(), ServeError> {
+        self.submitter.submit(frame)
+    }
+
+    /// See [`SessionSubmitter::try_submit`].
+    pub fn try_submit(&self, frame: Frame) -> PushOutcome {
+        self.submitter.try_submit(frame)
+    }
+
+    /// Close the input side (idempotent); the stream drains what was
+    /// already submitted.
+    pub fn close(&mut self) {
+        self.submitter.close();
+    }
+
+    /// Snapshot of this session's running [`ServeReport`].
+    pub fn report(&self) -> ServeReport {
+        self.stream.report()
+    }
+
+    /// Split into the `Send` submission half and the stream half, so a
+    /// sensor thread can feed while another thread drains.
+    pub fn split(self) -> (SessionSubmitter, SessionStream) {
+        (self.submitter, self.stream)
+    }
+
+    /// Close, drain every remaining result, and return the session's
+    /// terminal [`ServeReport`] (the one-call equivalent of
+    /// `FrameStream::finish`).
+    pub fn finish(mut self) -> std::result::Result<ServeReport, ServeError> {
+        self.submitter.close();
+        self.stream.finish()
+    }
+}
+
+impl Iterator for Session {
+    type Item = std::result::Result<FrameResult, ServeError>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        self.stream.next_result()
+    }
+}
+
+/// Per-session row of [`ServerStats`].
+#[derive(Debug, Clone)]
+pub struct SessionStats {
+    pub id: u64,
+    pub name: String,
+    pub weight: u32,
+    /// Every submitted frame was emitted (session closed and drained).
+    pub complete: bool,
+    /// The session was canceled mid-flight (stream dropped).
+    pub canceled: bool,
+    /// Frames accepted into the submission queue so far.
+    pub submitted: u64,
+    /// Frames dispatched but not yet taken off the stream.
+    pub inflight: u64,
+    pub report: ServeReport,
+}
+
+/// Server-wide snapshot: the aggregate over all sessions plus one
+/// [`SessionStats`] row per session (open or finished).
+#[derive(Debug, Clone)]
+pub struct ServerStats {
+    pub backend: String,
+    pub workers: usize,
+    /// Aggregate report across every session (per-frame means weighted by
+    /// frames; `wall_fps` over the server's post-warmup lifetime).
+    pub aggregate: ServeReport,
+    pub sessions: Vec<SessionStats>,
+}
+
+/// A long-lived serving instance: the dispatcher, worker pool, and
+/// reassembler are started **once**; independent [`Session`]s come and go
+/// on top (see the module docs for the invariants). `serve_sharded` is the
+/// one-session batch-job wrapper over this type.
+pub struct Server {
+    core: Arc<ServerCore>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the serving machinery: N worker threads (each constructing
+    /// its own, possibly non-`Send`, [`FrameWorker`] via `factory`), the
+    /// fair-admission dispatcher, and the per-session reassembler. Workers
+    /// warm up immediately; sessions may be opened (and fed) before warmup
+    /// finishes — dispatch begins once every worker is ready.
+    pub fn start<W, F>(factory: F, cfg: EngineConfig) -> Result<Server>
+    where
+        W: FrameWorker + 'static,
+        F: Fn(usize) -> Result<W> + Send + Sync + 'static,
+    {
+        let n_workers = cfg.workers.max(1);
+        let default_window = cfg.effective_window();
+        let core = Arc::new(ServerCore {
+            n_workers,
+            default_window,
+            ready: AtomicBool::new(false),
+            closing: AtomicBool::new(false),
+            abort: AtomicBool::new(false),
+            failed: AtomicBool::new(false),
+            failure: Mutex::new(None),
+            backend: Mutex::new("custom"),
+            t_ready: Mutex::new(None),
+            inflight: (0..n_workers).map(|_| AtomicU64::new(0)).collect(),
+            total_dispatched: AtomicU64::new(0),
+            next_session: AtomicU64::new(0),
+            registry: Mutex::new(Registry::default()),
+            sessions: Mutex::new(Vec::new()),
+            outcome: Mutex::new(None),
+            cfg,
+        });
+        let factory = Arc::new(factory);
+        let (res_tx, res_rx) = mpsc::channel::<Msg>();
+
+        let mut handles = Vec::with_capacity(n_workers + 2);
+        let mut worker_txs = Vec::with_capacity(n_workers);
+        for wid in 0..n_workers {
+            let (tx, rx) = mpsc::sync_channel::<Job>(core.cfg.queue_depth.max(1));
+            worker_txs.push(tx);
+            let (core_w, factory_w, res_tx_w) = (core.clone(), factory.clone(), res_tx.clone());
+            handles.push(std::thread::spawn(move || {
+                worker_loop(wid, &*factory_w, &core_w, rx, res_tx_w)
+            }));
+        }
+        let (core_d, res_tx_d) = (core.clone(), res_tx.clone());
+        handles.push(std::thread::spawn(move || dispatcher_loop(&core_d, worker_txs, res_tx_d)));
+        let core_r = core.clone();
+        handles.push(std::thread::spawn(move || reassembler_loop(&core_r, res_rx)));
+
+        Ok(Server { core, handles })
+    }
+
+    /// Open an independent serving session. Frames from all sessions share
+    /// the worker pool and per-bucket micro-batch lanes; this session's
+    /// results stream back in its own submission order.
+    pub fn session(&self, opts: SessionOptions) -> std::result::Result<Session, ServeError> {
+        if let Some(msg) = self.core.failure_msg() {
+            return Err(ServeError::Failed(msg));
+        }
+        if self.core.closing.load(Ordering::Relaxed) {
+            return Err(ServeError::Closed);
+        }
+        let id = self.core.next_session.fetch_add(1, Ordering::Relaxed);
+        let requested = if opts.window > 0 { opts.window } else { self.core.default_window };
+        let window = requested.max(1);
+        let (tx, rx) = mpsc::sync_channel::<Frame>(opts.queue_depth.max(1));
+        // Stream capacity == window: the dispatcher never lets more than
+        // `window` frames sit between dispatch and the consumer, so the
+        // reassembler's non-blocking forwards cannot overflow it.
+        let (out_tx, out_rx) = mpsc::sync_channel::<FrameResult>(window);
+        let shared = Arc::new(SessionShared {
+            id,
+            name: if opts.name.is_empty() { format!("session-{id}") } else { opts.name },
+            weight: opts.weight.max(1),
+            window,
+            submitted: AtomicU64::new(0),
+            dispatched: AtomicU64::new(0),
+            consumed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            canceled: AtomicBool::new(false),
+            accum: Mutex::new(SessionAccum::default()),
+        });
+        {
+            let mut reg = guard(&self.core.registry, "session registry")?;
+            reg.new_dispatch.push(DispatchEntry {
+                shared: shared.clone(),
+                rx,
+                dispatched: 0,
+                done_sent: false,
+            });
+            reg.new_reasm.push(ReasmState {
+                shared: shared.clone(),
+                out: Some(out_tx),
+                pending: BTreeMap::new(),
+                next_emit: 0,
+                emitted: 0,
+                expected: None,
+            });
+        }
+        guard(&self.core.sessions, "session list")?.push(shared.clone());
+        Ok(Session {
+            submitter: SessionSubmitter {
+                tx: Some(tx),
+                shared: shared.clone(),
+                core: self.core.clone(),
+            },
+            stream: SessionStream {
+                rx: out_rx,
+                shared,
+                core: self.core.clone(),
+                gave_error: false,
+                finished: false,
+            },
+        })
+    }
+
+    /// A `Send + Clone` liveness view for producer threads.
+    pub fn watch(&self) -> ServerWatch {
+        ServerWatch { core: self.core.clone() }
+    }
+
+    /// All workers warmed up; dispatch is live.
+    pub fn ready(&self) -> bool {
+        self.core.ready.load(Ordering::Relaxed)
+    }
+
+    /// Block until every worker is warm (or the server fails / `timeout`
+    /// elapses).
+    pub fn wait_ready(&self, timeout: Duration) -> std::result::Result<(), ServeError> {
+        let t0 = Instant::now();
+        while !self.ready() {
+            if let Some(msg) = self.core.failure_msg() {
+                return Err(ServeError::Failed(msg));
+            }
+            if t0.elapsed() > timeout {
+                return Err(ServeError::Failed("workers not ready within timeout".into()));
+            }
+            std::thread::sleep(Duration::from_micros(500));
+        }
+        Ok(())
+    }
+
+    /// Server-wide snapshot: per-session [`ServeReport`]s plus the
+    /// aggregate across all of them.
+    pub fn stats(&self) -> std::result::Result<ServerStats, ServeError> {
+        let backend = (*guard(&self.core.backend, "backend name")?).to_string();
+        let sessions: Vec<Arc<SessionShared>> =
+            guard(&self.core.sessions, "session list")?.clone();
+        let mut rows = Vec::with_capacity(sessions.len());
+        let mut agg = SessionAccum::default();
+        let mut dropped = 0u64;
+        for s in &sessions {
+            // One snapshot per session: the row report and the aggregate
+            // must agree even while the reassembler keeps accumulating.
+            let a = s.snapshot();
+            let s_dropped = s.rejected.load(Ordering::Relaxed);
+            agg.frames += a.frames;
+            agg.iou_sum += a.iou_sum;
+            agg.correct += a.correct;
+            agg.energy_sum += a.energy_sum;
+            agg.latency_sum += a.latency_sum;
+            agg.kept_sum += a.kept_sum;
+            agg.batch_sum += a.batch_sum;
+            dropped += s_dropped;
+            rows.push(SessionStats {
+                id: s.id,
+                name: s.name.clone(),
+                weight: s.weight,
+                complete: a.complete,
+                canceled: s.canceled.load(Ordering::Relaxed),
+                submitted: s.submitted.load(Ordering::Relaxed),
+                inflight: s
+                    .dispatched
+                    .load(Ordering::Relaxed)
+                    .saturating_sub(s.consumed.load(Ordering::Relaxed)),
+                report: a.to_report(s_dropped, &backend, self.core.n_workers),
+            });
+        }
+        // The aggregate's wall clock spans the server's post-warmup
+        // lifetime, not any one session's emission span.
+        let t_ready = *recover(&self.core.t_ready);
+        let wall_s = t_ready.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+        agg.first_emit = t_ready;
+        agg.last_emit = t_ready.map(|t| t + Duration::from_secs_f64(wall_s));
+        let aggregate = agg.to_report(dropped, &backend, self.core.n_workers);
+        Ok(ServerStats { backend, workers: self.core.n_workers, aggregate, sessions: rows })
+    }
+
+    /// Graceful shutdown: stop admitting, drain every frame already
+    /// submitted, join all threads, and return the server-wide aggregate
+    /// [`ServeReport`] plus the merged cross-worker [`StageMetrics`] —
+    /// exactly what the batch-job `run` returned. Fails with the first
+    /// recorded worker failure, if any.
+    ///
+    /// Shutdown is **cooperative**: draining a session's backlog needs its
+    /// consumer to keep taking results (the per-session window stalls
+    /// dispatch otherwise), so finish or drop every [`SessionStream`]
+    /// before — or concurrently with — calling this. Dropping the `Server`
+    /// without `shutdown` aborts instead of draining.
+    pub fn shutdown(mut self) -> Result<(ServeReport, StageMetrics)> {
+        self.core.closing.store(true, Ordering::Relaxed);
+        for h in self.handles.drain(..) {
+            h.join().ok();
+        }
+        match recover(&self.core.outcome).take() {
+            Some(Ok(pair)) => Ok(pair),
+            Some(Err(error)) => Err(anyhow!("serving failed: {error}")),
+            None => Err(anyhow!("serving failed: server exited without an outcome")),
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if self.handles.is_empty() {
+            return; // shut down already
+        }
+        // Dropped without shutdown: abort promptly rather than drain.
+        self.core.closing.store(true, Ordering::Relaxed);
+        self.core.abort.store(true, Ordering::Relaxed);
+        for h in self.handles.drain(..) {
+            h.join().ok();
+        }
+    }
+}
+
+/// Feed a session from a synthetic sensor until `num_frames` frames were
+/// **accepted**, then close it. Mirrors the batch-job sensor contract:
+/// idles until the server is warm (so warmup never inflates rejections),
+/// tries each produced frame once, and counts a full queue as a dropped
+/// frame (recorded in the session's `ServeReport::dropped`). Returns the
+/// accepted count.
+pub fn spawn_synthetic_sensor(
+    submitter: SessionSubmitter,
+    watch: ServerWatch,
+    image_size: usize,
+    num_objects: usize,
+    seed: u64,
+    num_frames: u64,
+) -> JoinHandle<u64> {
+    std::thread::spawn(move || {
+        let mut src = VideoSource::new(image_size, num_objects, seed);
+        let mut accepted = 0u64;
+        while accepted < num_frames {
+            if watch.failed() || watch.closing() {
+                break;
+            }
+            if !watch.ready() {
+                std::thread::sleep(Duration::from_micros(500));
+                continue;
+            }
+            match submitter.try_submit(src.next_frame()) {
+                PushOutcome::Queued => accepted += 1,
+                // Real backpressure: the frame is dropped (counted by
+                // try_submit); yield briefly so the pool can drain.
+                PushOutcome::Full => std::thread::sleep(Duration::from_micros(200)),
+                PushOutcome::Closed => break,
+            }
+        }
+        accepted
+        // `submitter` drops here, closing the session's input.
+    })
+}
+
+// --- dispatcher ---------------------------------------------------------
+
+enum Placed {
+    Worker,
+    AllDead,
+    Aborted,
+}
+
+/// Place one job on the least-loaded alive worker (ties broken in
+/// rotation order), backing off briefly while every alive queue is full.
+fn place_job(
+    mut job: Job,
+    worker_txs: &[SyncSender<Job>],
+    alive: &mut [bool],
+    core: &ServerCore,
+    candidates: &mut Vec<usize>,
+    rr: usize,
+) -> Placed {
+    let n = worker_txs.len();
+    loop {
+        if core.abort.load(Ordering::Relaxed) {
+            return Placed::Aborted;
+        }
+        candidates.clear();
+        candidates.extend((0..n).filter(|&w| alive[w]));
+        if candidates.is_empty() {
+            return Placed::AllDead;
+        }
+        let rot = rr % n;
+        candidates.sort_unstable_by_key(|&w| {
+            (core.inflight[w].load(Ordering::Relaxed), (w + n - rot) % n)
+        });
+        let mut j = job;
+        for &w in candidates.iter() {
+            match worker_txs[w].try_send(j) {
+                Ok(()) => {
+                    core.inflight[w].fetch_add(1, Ordering::Relaxed);
+                    return Placed::Worker;
+                }
+                Err(TrySendError::Full(back)) => j = back,
+                Err(TrySendError::Disconnected(back)) => {
+                    alive[w] = false;
+                    j = back;
+                }
+            }
+        }
+        job = j;
+        // Every alive queue is full: brief backpressure backoff, then
+        // re-rank (stays abort-responsive, unlike a blocking send).
+        std::thread::sleep(Duration::from_micros(100));
+    }
+}
+
+/// Send the session's terminal dispatch count to the reassembler once.
+fn finalize_entry(entry: &mut DispatchEntry, res_tx: &mpsc::Sender<Msg>) {
+    if !entry.done_sent {
+        entry.done_sent = true;
+        res_tx
+            .send(Msg::SessionDone { session: entry.shared.id, dispatched: entry.dispatched })
+            .ok();
+    }
+}
+
+/// Weighted round-robin admission over all open sessions, least-loaded
+/// sharding over the worker pool.
+fn dispatcher_loop(core: &ServerCore, worker_txs: Vec<SyncSender<Job>>, res_tx: mpsc::Sender<Msg>) {
+    // Hold dispatch until every worker is warm (or the server is going
+    // away) — warmup must not skew fairness toward the first session.
+    while !core.ready.load(Ordering::Relaxed)
+        && !core.abort.load(Ordering::Relaxed)
+        && !core.closing.load(Ordering::Relaxed)
+    {
+        std::thread::sleep(Duration::from_micros(500));
+    }
+    let n_workers = worker_txs.len();
+    let mut entries: Vec<DispatchEntry> = Vec::new();
+    let mut alive = vec![true; n_workers];
+    let mut candidates: Vec<usize> = Vec::with_capacity(n_workers);
+    let mut rr = 0usize;
+    let mut idle_sweeps = 0u32;
+    'run: loop {
+        if core.abort.load(Ordering::Relaxed) {
+            break;
+        }
+        {
+            let mut reg = recover(&core.registry);
+            entries.extend(reg.new_dispatch.drain(..));
+        }
+        let closing = core.closing.load(Ordering::Relaxed);
+        let mut progressed = false;
+        let n_e = entries.len();
+        for k in 0..n_e {
+            let i = (rr + k) % n_e;
+            if entries[i].done_sent {
+                continue;
+            }
+            if entries[i].shared.canceled.load(Ordering::Relaxed) {
+                // Mid-flight teardown: discard whatever the dead session
+                // still has queued and finalize it at its dispatch count.
+                while entries[i].rx.try_recv().is_ok() {}
+                finalize_entry(&mut entries[i], &res_tx);
+                progressed = true;
+                continue;
+            }
+            let quota = entries[i].shared.weight.max(1) as usize;
+            for _ in 0..quota {
+                let entry = &mut entries[i];
+                // Per-session dispatch window: a tenant that stops
+                // draining its stream stalls only its own admission.
+                let consumed = entry.shared.consumed.load(Ordering::Relaxed);
+                if entry.dispatched.saturating_sub(consumed) >= entry.shared.window as u64 {
+                    break;
+                }
+                match entry.rx.try_recv() {
+                    Ok(frame) => {
+                        let job = (entry.shared.id, entry.dispatched, frame);
+                        match place_job(job, &worker_txs, &mut alive, core, &mut candidates, rr) {
+                            Placed::Worker => {
+                                entry.dispatched += 1;
+                                entry.shared.dispatched.store(entry.dispatched, Ordering::Relaxed);
+                                core.total_dispatched.fetch_add(1, Ordering::Relaxed);
+                                progressed = true;
+                            }
+                            Placed::AllDead => {
+                                res_tx
+                                    .send(Msg::Failure {
+                                        error: "all workers died".to_string(),
+                                        worker_exit: false,
+                                    })
+                                    .ok();
+                                break 'run;
+                            }
+                            Placed::Aborted => break 'run,
+                        }
+                    }
+                    // Empty queue: during graceful shutdown that is the
+                    // end of the session's input — but only once every
+                    // frame a submit() already accepted has landed
+                    // (`dispatched` caught up with `submitted`), so a
+                    // racing submitter can never lose an accepted frame.
+                    Err(mpsc::TryRecvError::Empty) => {
+                        if closing {
+                            let entry = &mut entries[i];
+                            if entry.dispatched >= entry.shared.submitted.load(Ordering::Relaxed)
+                            {
+                                finalize_entry(entry, &res_tx);
+                            }
+                        }
+                        break;
+                    }
+                    // Input side hung up (close or drop): everything
+                    // buffered was drained above, so the count is final.
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        finalize_entry(&mut entries[i], &res_tx);
+                        break;
+                    }
+                }
+            }
+        }
+        entries.retain(|e| !e.done_sent);
+        rr = rr.wrapping_add(1);
+        if entries.is_empty() && closing && recover(&core.registry).new_dispatch.is_empty() {
+            break;
+        }
+        if progressed {
+            idle_sweeps = 0;
+        } else {
+            // 200µs → 2ms exponential idle backoff: admission stays snappy
+            // under load, while an idle long-lived server costs ~500
+            // wakeups/s instead of 5000.
+            idle_sweeps = idle_sweeps.saturating_add(1);
+            let sleep_us = (200u64 << idle_sweeps.min(4)).min(2000);
+            std::thread::sleep(Duration::from_micros(sleep_us));
+        }
+    }
+    // Unblock any submitter stuck on a full queue (dropping the receivers
+    // fails their sends gracefully), then close the worker queues so the
+    // pool drains and exits.
+    drop(entries);
+    drop(worker_txs);
+    res_tx.send(Msg::DispatcherExited).ok();
+}
+
+// --- worker -------------------------------------------------------------
+
+/// One worker thread: construct the (possibly non-`Send`) frame worker
+/// in-thread, warm it up, then micro-batch the queue until it closes.
+fn worker_loop<W, F>(
+    wid: usize,
+    factory: &F,
+    core: &ServerCore,
+    rx: Receiver<Job>,
+    res_tx: mpsc::Sender<Msg>,
+) where
+    W: FrameWorker,
+    F: Fn(usize) -> Result<W>,
+{
+    let patch_px = core.cfg.patch_px;
+    let batch_policy = core.cfg.batch;
+    let body = AssertUnwindSafe(|| -> WorkerOutcome {
+        let pinned_core = if core.cfg.pin_workers {
+            super::affinity::pin_current_thread(wid)
+        } else {
+            None
+        };
+        let mut w =
+            factory(wid).map_err(|e| format!("worker {wid}: construction failed: {e:#}"))?;
+        w.warmup().map_err(|e| format!("worker {wid}: warmup failed: {e:#}"))?;
+        res_tx.send(Msg::Ready { backend: w.backend_name() }).ok();
+        // Utilization window opens at the first frame, not at warmup
+        // completion: a fast-warming worker must not be charged its
+        // peers' compile time as idle.
+        let mut t_first: Option<Instant> = None;
+        let mut busy = Duration::ZERO;
+        let mut frames = 0u64;
+        let max_batch = batch_policy.max_batch.max(1);
+        let mut tags: Vec<(u64, u64)> = Vec::with_capacity(max_batch);
+        let mut group: Vec<Frame> = Vec::with_capacity(max_batch);
+        let mut closed = false;
+        while !closed {
+            tags.clear();
+            group.clear();
+            // Block for the first frame of the group...
+            match rx.recv() {
+                Ok((session, seq, frame)) => {
+                    tags.push((session, seq));
+                    group.push(frame);
+                }
+                Err(_) => break,
+            }
+            t_first.get_or_insert_with(Instant::now);
+            // ...then top it up until max_batch or the deadline,
+            // whichever comes first. Frames from *any* session ride the
+            // same group — cross-session bucket-major amortization.
+            if max_batch > 1 {
+                let deadline = Instant::now() + batch_policy.max_wait;
+                while group.len() < max_batch {
+                    let remaining = deadline.saturating_duration_since(Instant::now());
+                    if remaining.is_zero() {
+                        break;
+                    }
+                    match rx.recv_timeout(remaining) {
+                        Ok((session, seq, frame)) => {
+                            tags.push((session, seq));
+                            group.push(frame);
+                        }
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => {
+                            closed = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            // Ground truth before processing (frames are consumed by
+            // reference, results by value).
+            let gts: Vec<_> = group.iter().map(|f| f.gt_mask(patch_px)).collect();
+            let labels: Vec<usize> = group.iter().map(|f| f.label).collect();
+            let t0 = Instant::now();
+            let out = w.process_batch(&group);
+            busy += t0.elapsed();
+            core.inflight[wid].fetch_sub(group.len() as u64, Ordering::Relaxed);
+            let rs = out.map_err(|e| {
+                format!(
+                    "worker {wid}: batch of {} (first frame {}) failed: {e:#}",
+                    group.len(),
+                    group.first().map(|f| f.index).unwrap_or(0)
+                )
+            })?;
+            if rs.len() != group.len() {
+                return Err(format!(
+                    "worker {wid}: process_batch returned {} results for {} frames",
+                    rs.len(),
+                    group.len()
+                ));
+            }
+            frames += rs.len() as u64;
+            for ((&(session, seq), r), (gt, &label)) in
+                tags.iter().zip(rs).zip(gts.iter().zip(&labels))
+            {
+                let iou = r.mask.iou(gt);
+                let correct = r.predicted_class() == label;
+                res_tx.send(Msg::Result { session, seq, result: r, iou, correct }).ok();
+            }
+        }
+        let active_s = t_first.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+        let busy_s = busy.as_secs_f64();
+        let backend = w.backend_name();
+        Ok((
+            w.take_metrics(),
+            WorkerStats {
+                worker: wid,
+                frames,
+                busy_s,
+                utilization: if active_s > 0.0 { (busy_s / active_s).min(1.0) } else { 0.0 },
+                core: pinned_core,
+            },
+            backend,
+        ))
+    });
+    match std::panic::catch_unwind(body) {
+        Ok(Ok((metrics, stats, backend))) => {
+            res_tx.send(Msg::WorkerDone { stats, metrics: Box::new(metrics), backend }).ok();
+        }
+        Ok(Err(error)) => {
+            res_tx.send(Msg::Failure { error, worker_exit: true }).ok();
+        }
+        Err(_) => {
+            res_tx
+                .send(Msg::Failure { error: format!("worker {wid} panicked"), worker_exit: true })
+                .ok();
+        }
+    }
+}
+
+// --- reassembler --------------------------------------------------------
+
+/// Server-wide totals the reassembler keeps for the terminal aggregate.
+#[derive(Default)]
+struct Aggregate {
+    emitted: u64,
+    iou_sum: f64,
+    correct: u64,
+}
+
+/// Emit one completed frame to its session: update the session accum and
+/// the server aggregate, then forward to the stream (non-blocking; a gone
+/// consumer cancels the session instead of stalling its neighbours).
+fn emit(state: &mut ReasmState, result: FrameResult, iou: f64, correct: bool, agg: &mut Aggregate) {
+    {
+        let mut a = recover(&state.shared.accum);
+        a.frames += 1;
+        a.iou_sum += iou;
+        a.correct += correct as u64;
+        a.energy_sum += result.modeled_energy_j;
+        a.latency_sum += result.latency_s;
+        a.kept_sum += result.mask.kept().max(1) as f64;
+        a.batch_sum += result.batch_size as f64;
+        let now = Instant::now();
+        a.first_emit.get_or_insert(now);
+        a.last_emit = Some(now);
+    }
+    agg.emitted += 1;
+    agg.iou_sum += iou;
+    agg.correct += correct as u64;
+    state.emitted += 1;
+    if let Some(tx) = &state.out {
+        // The per-session dispatch window guarantees capacity; a Full or
+        // Disconnected send means the consumer is gone — cancel the
+        // session rather than block every other tenant.
+        if tx.try_send(result).is_err() {
+            state.out = None;
+            state.shared.canceled.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Mark a session complete (all dispatched frames emitted) and end its
+/// stream. A canceled session is finalized for accounting but never
+/// marked `complete` — its queued frames were discarded, so "every
+/// submitted frame was emitted" would be a lie.
+fn try_finalize_session(state: &mut ReasmState) -> bool {
+    if state.expected.is_some_and(|e| state.emitted >= e) {
+        if !state.shared.canceled.load(Ordering::Relaxed) {
+            recover(&state.shared.accum).complete = true;
+        }
+        state.out = None; // dropping the sender ends the stream cleanly
+        true
+    } else {
+        false
+    }
+}
+
+/// Adopt sessions published since the last sweep. Called at the top of
+/// every reassembler iteration **and** whenever a message names a session
+/// the map doesn't know yet: a fresh session's first result can arrive in
+/// the same iteration it was registered, and must not be mistaken for a
+/// canceled session's leftover.
+fn adopt_new_sessions(core: &ServerCore, states: &mut BTreeMap<u64, ReasmState>) {
+    let mut reg = recover(&core.registry);
+    for st in reg.new_reasm.drain(..) {
+        states.insert(st.shared.id, st);
+    }
+}
+
+/// Record the server's first failure and end every session stream; the
+/// consumers read the message back through [`ServeError::Failed`].
+fn fail_server(
+    core: &ServerCore,
+    msg: String,
+    failure: &mut Option<String>,
+    states: &mut BTreeMap<u64, ReasmState>,
+) {
+    if failure.is_none() {
+        *failure = Some(msg.clone());
+    }
+    core.fail(&msg);
+    for st in states.values_mut() {
+        st.out = None;
+    }
+}
+
+/// Strict per-session in-order reassembly, server failure detection, and
+/// the terminal aggregate.
+fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
+    let warmup_timeout = Duration::from_secs_f64(core.cfg.warmup_timeout_s.max(0.1));
+    let stall_timeout = Duration::from_secs_f64(core.cfg.stall_timeout_s.max(0.1));
+    let tick = Duration::from_millis(100).min(stall_timeout);
+    let n_workers = core.n_workers;
+
+    let mut states: BTreeMap<u64, ReasmState> = BTreeMap::new();
+    let mut agg = Aggregate::default();
+    let mut merged = StageMetrics::new();
+    let mut per_worker: Vec<WorkerStats> = Vec::new();
+    let mut backend_name: &'static str = "custom";
+    let mut ready_count = 0usize;
+    let mut worker_exits = 0usize;
+    let mut dispatcher_exited = false;
+    let mut failure: Option<String> = None;
+    let t_start = Instant::now();
+    let mut t_ready: Option<Instant> = None;
+    let mut last_progress = Instant::now();
+
+    loop {
+        adopt_new_sessions(core, &mut states);
+        match res_rx.recv_timeout(tick) {
+            Ok(Msg::Ready { backend }) => {
+                last_progress = Instant::now();
+                backend_name = backend;
+                *recover(&core.backend) = backend;
+                ready_count += 1;
+                if ready_count == n_workers {
+                    let now = Instant::now();
+                    t_ready = Some(now);
+                    *recover(&core.t_ready) = Some(now);
+                    core.ready.store(true, Ordering::Relaxed);
+                }
+            }
+            Ok(Msg::Result { session, seq, result, iou, correct }) => {
+                last_progress = Instant::now();
+                let mut overflow: Option<String> = None;
+                let mut finalized = false;
+                if !states.contains_key(&session) {
+                    // The session may have registered after this
+                    // iteration's sweep — adopt before concluding it is a
+                    // canceled session's leftover.
+                    adopt_new_sessions(core, &mut states);
+                }
+                // A canceled-and-removed session can still have results in
+                // flight; they fall on the floor by design.
+                if let Some(state) = states.get_mut(&session) {
+                    state.pending.insert(seq, (result, iou, correct));
+                    while let Some((r, i, c)) = state.pending.remove(&state.next_emit) {
+                        state.next_emit += 1;
+                        emit(state, r, i, c, &mut agg);
+                    }
+                    // Backstop: the dispatcher never lets more than
+                    // `window` frames sit between dispatch and the stream,
+                    // so a larger out-of-order buffer means a result was
+                    // lost — fail fast instead of buffering forever.
+                    if state.pending.len() > state.shared.window {
+                        overflow = Some(format!(
+                            "session {session}: reassembly window overflow: {} results \
+                             buffered out of order (window {}, next expected seq {}) — \
+                             a result was lost",
+                            state.pending.len(),
+                            state.shared.window,
+                            state.next_emit
+                        ));
+                    } else {
+                        finalized = try_finalize_session(state);
+                    }
+                }
+                if let Some(msg) = overflow {
+                    fail_server(core, msg, &mut failure, &mut states);
+                } else if finalized {
+                    states.remove(&session);
+                }
+            }
+            Ok(Msg::SessionDone { session, dispatched }) => {
+                last_progress = Instant::now();
+                if !states.contains_key(&session) {
+                    adopt_new_sessions(core, &mut states);
+                }
+                let finalized = match states.get_mut(&session) {
+                    Some(state) => {
+                        state.expected = Some(dispatched);
+                        try_finalize_session(state)
+                    }
+                    None => false,
+                };
+                if finalized {
+                    states.remove(&session);
+                }
+            }
+            Ok(Msg::WorkerDone { stats, metrics, backend }) => {
+                merged.merge(&metrics);
+                per_worker.push(stats);
+                backend_name = backend;
+                worker_exits += 1;
+            }
+            Ok(Msg::Failure { error, worker_exit }) => {
+                if worker_exit {
+                    worker_exits += 1; // a failed worker never sends WorkerDone
+                }
+                fail_server(core, error, &mut failure, &mut states);
+            }
+            Ok(Msg::DispatcherExited) => {
+                dispatcher_exited = true;
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if t_ready.is_none()
+                    && failure.is_none()
+                    && t_start.elapsed() > warmup_timeout
+                {
+                    let msg = format!(
+                        "workers failed to warm up within {:.1}s ({ready_count} of \
+                         {n_workers} ready)",
+                        warmup_timeout.as_secs_f64()
+                    );
+                    fail_server(core, msg, &mut failure, &mut states);
+                }
+                let dispatched = core.total_dispatched.load(Ordering::Relaxed);
+                if t_ready.is_some()
+                    && failure.is_none()
+                    && dispatched > agg.emitted
+                    && last_progress.elapsed() > stall_timeout
+                {
+                    let msg = format!(
+                        "engine stalled: no progress for {:.1}s ({} of {} dispatched \
+                         frames emitted)",
+                        stall_timeout.as_secs_f64(),
+                        agg.emitted,
+                        dispatched
+                    );
+                    fail_server(core, msg, &mut failure, &mut states);
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                // Every sender (dispatcher + workers) is gone.
+                if failure.is_none()
+                    && !(core.closing.load(Ordering::Relaxed)
+                        && dispatcher_exited
+                        && worker_exits == n_workers)
+                {
+                    let msg = "engine threads exited before completing the run".to_string();
+                    fail_server(core, msg, &mut failure, &mut states);
+                }
+                break;
+            }
+        }
+        if dispatcher_exited
+            && worker_exits == n_workers
+            && (core.closing.load(Ordering::Relaxed) || failure.is_some())
+        {
+            break;
+        }
+    }
+
+    // Terminal aggregate (what the one-session wrappers report).
+    for st in states.values_mut() {
+        st.out = None;
+    }
+    per_worker.sort_by_key(|w| w.worker);
+    let wall_s = t_ready.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+    let dropped: u64 = recover(&core.sessions)
+        .iter()
+        .map(|s| s.rejected.load(Ordering::Relaxed))
+        .sum();
+    let outcome = match failure {
+        Some(error) => Err(error),
+        None => Ok((
+            ServeReport {
+                backend: backend_name.to_string(),
+                frames: agg.emitted,
+                dropped,
+                wall_fps: if wall_s > 0.0 { agg.emitted as f64 / wall_s } else { 0.0 },
+                mean_latency_s: merged.frame_latency_mean_s(),
+                mean_energy_j: merged.mean_energy_j(),
+                modeled_kfps_per_watt: merged.modeled_kfps_per_watt(),
+                mean_kept_patches: merged.mean_kept_patches(),
+                mean_batch: merged.mean_batch(),
+                mean_mask_iou: if agg.emitted > 0 { agg.iou_sum / agg.emitted as f64 } else { 0.0 },
+                top1_accuracy: if agg.emitted > 0 {
+                    agg.correct as f64 / agg.emitted as f64
+                } else {
+                    0.0
+                },
+                workers: n_workers,
+                per_worker,
+            },
+            merged,
+        )),
+    };
+    *recover(&core.outcome) = Some(outcome);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::BucketRouter;
+
+    /// Minimal deterministic worker (no backend): routes from the
+    /// ground-truth mask like the engine tests' mock.
+    struct EchoWorker {
+        router: BucketRouter,
+        metrics: StageMetrics,
+    }
+
+    impl EchoWorker {
+        fn new() -> Self {
+            EchoWorker { router: BucketRouter::even(36, 4), metrics: StageMetrics::new() }
+        }
+    }
+
+    impl FrameWorker for EchoWorker {
+        fn process(&mut self, frame: &Frame) -> Result<FrameResult> {
+            let mask = frame.gt_mask(16);
+            let kept = mask.kept().max(1);
+            let bucket = self.router.route(kept);
+            self.metrics.record_stage("total", 1e-4);
+            self.metrics.record_frame(1e-5, kept);
+            self.metrics.record_batch_size(1);
+            let mut logits = vec![0.0f32; 10];
+            logits[frame.label % 10] = 1.0;
+            Ok(FrameResult {
+                frame_index: frame.index,
+                logits,
+                mask,
+                bucket,
+                modeled_energy_j: 1e-5,
+                latency_s: 1e-4,
+                batch_size: 1,
+            })
+        }
+
+        fn take_metrics(&mut self) -> StageMetrics {
+            std::mem::take(&mut self.metrics)
+        }
+    }
+
+    fn test_cfg(workers: usize) -> EngineConfig {
+        let mut cfg = EngineConfig::new(workers, 16, 96);
+        cfg.warmup_timeout_s = 10.0;
+        cfg.stall_timeout_s = 5.0;
+        cfg
+    }
+
+    #[test]
+    fn serve_error_displays_each_variant() {
+        assert!(ServeError::Closed.to_string().contains("closed"));
+        assert!(ServeError::Failed("boom".into()).to_string().contains("boom"));
+        assert!(ServeError::Poisoned("stats").to_string().contains("stats"));
+    }
+
+    #[test]
+    fn poisoned_lock_surfaces_as_serve_error_not_a_panic() {
+        let m = Arc::new(Mutex::new(0u32));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        // Public paths error gracefully…
+        assert_eq!(guard(&m, "counter").unwrap_err(), ServeError::Poisoned("counter"));
+        // …internal accounting recovers the plain data.
+        assert_eq!(*recover(&m), 0);
+    }
+
+    #[test]
+    fn session_options_builders_clamp() {
+        let o = SessionOptions::named("cam").with_weight(0).with_queue_depth(0).with_window(5);
+        assert_eq!(o.name, "cam");
+        assert_eq!(o.weight, 1, "weight clamps to >= 1");
+        assert_eq!(o.queue_depth, 1, "queue depth clamps to >= 1");
+        assert_eq!(o.window, 5);
+    }
+
+    #[test]
+    fn one_session_round_trip_in_order() {
+        let server = Server::start(|_wid| Ok(EchoWorker::new()), test_cfg(2)).expect("server");
+        let mut session = server.session(SessionOptions::named("cam")).expect("session");
+        let mut src = VideoSource::new(96, 2, 7);
+        for _ in 0..10 {
+            session.submit(src.next_frame()).expect("submit");
+        }
+        session.close();
+        let mut indices = Vec::new();
+        for item in &mut session {
+            indices.push(item.expect("streamed result").frame_index);
+        }
+        assert_eq!(indices.len(), 10);
+        for pair in indices.windows(2) {
+            assert!(pair[0] < pair[1], "session stream out of order: {indices:?}");
+        }
+        let report = session.report();
+        assert_eq!(report.frames, 10);
+        assert_eq!(report.backend, "custom");
+        drop(session);
+        let stats = server.stats().expect("stats");
+        assert_eq!(stats.aggregate.frames, 10);
+        assert_eq!(stats.sessions.len(), 1);
+        assert!(stats.sessions[0].complete);
+        assert!(!stats.sessions[0].canceled, "a drained session is complete, not canceled");
+        let (agg, merged) = server.shutdown().expect("shutdown");
+        assert_eq!(agg.frames, 10);
+        assert_eq!(merged.frames(), 10);
+        assert_eq!(agg.workers, 2);
+        assert_eq!(agg.per_worker.len(), 2);
+    }
+
+    #[test]
+    fn submit_after_close_is_rejected() {
+        let server = Server::start(|_wid| Ok(EchoWorker::new()), test_cfg(1)).expect("server");
+        let mut session = server.session(SessionOptions::default()).expect("session");
+        let mut src = VideoSource::new(96, 1, 3);
+        session.submit(src.next_frame()).expect("submit");
+        session.close();
+        assert_eq!(session.submit(src.next_frame()), Err(ServeError::Closed));
+        assert_eq!(session.try_submit(src.next_frame()), PushOutcome::Closed);
+        let report = session.finish().expect("drain");
+        assert_eq!(report.frames, 1);
+        server.shutdown().expect("shutdown");
+    }
+
+    #[test]
+    fn sessions_rejected_after_shutdown_begins() {
+        let server = Server::start(|_wid| Ok(EchoWorker::new()), test_cfg(1)).expect("server");
+        let watch = server.watch();
+        assert!(!watch.closing());
+        server.core.closing.store(true, Ordering::Relaxed);
+        assert!(watch.closing());
+        assert_eq!(
+            server.session(SessionOptions::default()).err(),
+            Some(ServeError::Closed),
+            "a closing server must not admit new sessions"
+        );
+        server.shutdown().expect("shutdown of an idle server");
+    }
+}

@@ -86,12 +86,7 @@ impl StageMetrics {
 
     /// Modeled KFPS/W from the mean frame energy.
     pub fn modeled_kfps_per_watt(&self) -> f64 {
-        let e = self.mean_energy_j();
-        if e <= 0.0 {
-            0.0
-        } else {
-            1.0 / e / 1000.0
-        }
+        kfps_per_watt(self.mean_energy_j())
     }
 
     pub fn mean_kept_patches(&self) -> f64 {
@@ -159,6 +154,18 @@ impl StageMetrics {
     }
 }
 
+/// Modeled KFPS/W from a mean per-frame energy (J) — the one domain
+/// formula shared by [`StageMetrics::modeled_kfps_per_watt`] and the
+/// per-session report builder in `coordinator::server`. Non-positive
+/// energy (no frames yet) reports 0.
+pub fn kfps_per_watt(mean_energy_j: f64) -> f64 {
+    if mean_energy_j <= 0.0 {
+        0.0
+    } else {
+        1.0 / mean_energy_j / 1000.0
+    }
+}
+
 /// Per-worker utilization summary for a (possibly sharded) serving run.
 #[derive(Debug, Clone)]
 pub struct WorkerStats {
@@ -170,6 +177,10 @@ pub struct WorkerStats {
     pub busy_s: f64,
     /// `busy_s` over the worker's active wall-clock window, in `[0, 1]`.
     pub utilization: f64,
+    /// Host core this worker's thread was pinned to
+    /// (`EngineConfig::pin_workers`); `None` when pinning was off,
+    /// unsupported on this platform, or refused by the kernel.
+    pub core: Option<usize>,
 }
 
 #[cfg(test)]

@@ -36,17 +36,23 @@
 //! results with a bounded reassembly window — from which the terminal
 //! `ServeReport` is derived.
 //!
-//! Host-side serving scales across cores with `optovit serve --workers N`
-//! (and batches within each worker via `--batch B`): the
-//! [`coordinator::engine`] shards frames over N worker threads, each
-//! constructing its own (non-`Send`) backend via a
-//! [`runtime::BackendFactory`], micro-batching its queue, and reassembles
-//! results in order inside a bounded window. The per-frame hot path is
-//! allocation-free in steady state (see
-//! [`coordinator::pipeline::FrameScratch`]); `cargo bench --bench
-//! serve_scaling` sweeps worker counts × batch sizes over whichever
-//! backend is available and writes the machine-readable `BENCH_serve.json`
-//! trajectory.
+//! Serving is **session-oriented**: a long-lived
+//! [`coordinator::server::Server`] owns the dispatcher → N workers →
+//! reassembler machinery once (each worker constructing its own non-`Send`
+//! backend via a [`runtime::BackendFactory`], optionally core-pinned), and
+//! independent [`coordinator::server::Session`]s — one per camera/tenant —
+//! submit frames under backpressure and drain per-session in-order
+//! streams. Frames from all sessions share the workers' bucket-major
+//! micro-batch lanes (cross-session amortization), admission is weighted
+//! round-robin (a hot camera cannot starve the rest), and every session
+//! gets its own `ServeReport` plus a server-wide aggregate. The batch-job
+//! surfaces survive as documented wrappers: `optovit serve --workers N`
+//! (`serve_sharded`) is the one-session case, `--cameras K` opens K
+//! sessions over one server. The per-frame hot path is allocation-free in
+//! steady state (see [`coordinator::pipeline::FrameScratch`]); `cargo
+//! bench --bench serve_scaling` sweeps worker counts × batch sizes over
+//! whichever backend is available and writes the machine-readable
+//! `BENCH_serve.json` trajectory.
 //!
 //! ## Module map
 //!
@@ -60,7 +66,7 @@
 //! | [`roi`] | patch masks and skip-ratio accounting |
 //! | [`sensor`] | synthetic CMOS sensor / video workload generator |
 //! | [`runtime`] | pluggable batch-first execution backends behind the `Backend` trait (`execute_batch` = N frames/call, natively in all three): `pjrt` (compiled HLO), `host` (pure-Rust reference), `sim` (host numerics + batch-aware modeled photonic timing), plus per-worker `BackendFactory` construction |
-//! | [`coordinator`] | the serving engine, generic over any backend: zero-allocation frame pipeline, bucket routing, bucket-major micro-batching (`MicroBatcher`), streaming `FrameStream` serve with bounded reassembly, sharded multi-worker dispatch (dispatcher → N micro-batching workers → in-order reassembler), merged metrics |
+//! | [`coordinator`] | the serving stack, generic over any backend: zero-allocation frame pipeline, bucket routing, bucket-major micro-batching (`MicroBatcher`), streaming `FrameStream` serve, and the session-oriented `Server` (multi-tenant `Session`s over one dispatcher → N micro-batching, optionally core-pinned workers → per-session in-order reassembly, fair weighted admission, per-session + aggregate reports) |
 //! | [`baselines`] | Table-IV competitor accelerator models + platform refs |
 //! | [`cli`] | dependency-free argument parsing |
 //! | [`util`] | PRNG, stats, table formatting, property-test helpers |

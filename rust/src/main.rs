@@ -4,6 +4,7 @@
 //! ```text
 //! optovit serve   [--backend pjrt|host|sim] [--frames N] [--workers W] [--queue D]
 //!                 [--batch B] [--batch-wait-us U] [--window W]
+//!                 [--cameras K] [--weights w0,w1,..] [--pin]
 //!                 [--no-mask] [--seed S] [--objects K] [--artifacts DIR]
 //! optovit report  [--decomposed true]        # Fig. 8/9 energy+delay grid
 //! optovit roi     [--size 96|224]            # Fig. 10/11 operating points
@@ -15,12 +16,20 @@
 //! `--backend host` and `--backend sim` serve with no HLO artifacts on
 //! disk (pure-Rust reference compute); `sim` additionally reports modeled
 //! photonic-core latency instead of host wall-clock.
+//!
+//! `--cameras K` serves K independent synthetic sensors as K sessions over
+//! **one** shared server (the session-oriented serving surface): frames
+//! from all cameras interleave through the shared worker pool and
+//! micro-batch lanes, admission is weighted round-robin (`--weights`),
+//! and the report shows each camera's session next to the aggregate.
+//! `--pin` best-effort pins each worker thread to a host core.
 
 use optovit::baselines;
 use optovit::cli::Args;
 use optovit::coordinator::batcher::BatchPolicy;
-use optovit::coordinator::engine::serve_sharded;
+use optovit::coordinator::engine::{serve_sharded, EngineConfig};
 use optovit::coordinator::pipeline::{serve, Pipeline, PipelineConfig, ServeOptions, ServeReport};
+use optovit::coordinator::server::{spawn_synthetic_sensor, Server, SessionOptions};
 use optovit::coordinator::stats::StageMetrics;
 use optovit::energy::AcceleratorModel;
 use optovit::photonics::fpv::FpvModel;
@@ -57,6 +66,11 @@ fn main() {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    args.check_known(&[
+        "frames", "seed", "objects", "workers", "queue", "batch", "batch-wait-us", "window",
+        "cameras", "weights", "pin", "no-mask", "backend", "artifacts",
+    ])
+    .map_err(anyhow::Error::msg)?;
     let frames = args.get_u64("frames", 50).map_err(anyhow::Error::msg)?;
     let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
     let objects = args.get_usize("objects", 2).map_err(anyhow::Error::msg)?;
@@ -65,6 +79,17 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let batch = args.get_usize("batch", 1).map_err(anyhow::Error::msg)?.max(1);
     let batch_wait = args.get_duration_us("batch-wait-us", 500).map_err(anyhow::Error::msg)?;
     let window = args.get_usize("window", 64).map_err(anyhow::Error::msg)?.max(1);
+    let cameras = args.get_usize("cameras", 1).map_err(anyhow::Error::msg)?.max(1);
+    let weights = args.get_usize_list("weights", &[]).map_err(anyhow::Error::msg)?;
+    // Loud-failure discipline (same reason as check_known above): weights
+    // only mean something with multiple sessions, and a longer list than
+    // cameras is a miscount, not something to truncate silently.
+    if !weights.is_empty() && cameras == 1 {
+        anyhow::bail!("--weights requires --cameras K (one admission weight per camera)");
+    }
+    if weights.len() > cameras {
+        anyhow::bail!("--weights lists {} weights for {cameras} camera(s)", weights.len());
+    }
     let artifact_dir = args.get_or("artifacts", "artifacts").to_string();
     // `BackendKind::from_str` is the single source of truth for the
     // choice set (its error already lists the choices).
@@ -83,12 +108,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         queue_depth,
         batch: BatchPolicy::batched(batch, batch_wait),
         window,
+        pin_workers: args.get_bool("pin"),
     };
     match kind {
         BackendKind::Pjrt => println!("warming up (compiling artifacts)..."),
         BackendKind::Host | BackendKind::Sim => {
             println!("warming up ({kind} backend, no artifacts needed)...")
         }
+    }
+    if cameras > 1 {
+        return cmd_serve_cameras(&cfg, &factory, workers, cameras, &weights, &opts);
     }
     let (r, metrics) = if workers > 1 {
         serve_sharded(&cfg, &factory, workers, &opts)?
@@ -101,6 +130,75 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         (r, metrics)
     };
     print_serve_report(&r, &metrics);
+    Ok(())
+}
+
+/// `optovit serve --cameras K`: K synthetic sensors → K sessions over one
+/// shared [`Server`] — the session-oriented serving surface, with frames
+/// from every camera interleaving through the shared worker pool and
+/// micro-batch lanes under weighted fair admission.
+fn cmd_serve_cameras(
+    cfg: &PipelineConfig,
+    factory: &AnyFactory,
+    workers: usize,
+    cameras: usize,
+    weights: &[usize],
+    opts: &ServeOptions,
+) -> anyhow::Result<()> {
+    let ecfg = EngineConfig::for_serving(cfg, opts, workers);
+    let image_size = cfg.image_size;
+    let server = {
+        let cfg = cfg.clone();
+        let factory = factory.clone();
+        Server::start(move |wid| Pipeline::with_backend(cfg.clone(), factory.create(wid)?), ecfg)?
+    };
+    println!(
+        "serving {} frames/camera from {cameras} sessions over one {workers}-worker server...",
+        opts.num_frames
+    );
+    let mut cams = Vec::with_capacity(cameras);
+    for cam in 0..cameras {
+        let weight = weights.get(cam).copied().unwrap_or(1).max(1) as u32;
+        let session = server.session(
+            SessionOptions::named(format!("camera-{cam}"))
+                .with_weight(weight)
+                .with_queue_depth(opts.queue_depth),
+        )?;
+        let (submitter, stream) = session.split();
+        let sensor = spawn_synthetic_sensor(
+            submitter,
+            server.watch(),
+            image_size,
+            opts.num_objects,
+            opts.sensor_seed + cam as u64,
+            opts.num_frames,
+        );
+        let drain = std::thread::spawn(move || stream.finish());
+        cams.push((cam, weight, sensor, drain));
+    }
+    let mut t =
+        Table::new(vec!["camera", "weight", "frames", "dropped", "fps", "latency", "batch", "IoU"]);
+    for (cam, weight, sensor, drain) in cams {
+        sensor.join().ok();
+        let report = drain
+            .join()
+            .map_err(|_| anyhow::anyhow!("camera {cam} drain thread panicked"))??;
+        t.row(vec![
+            format!("camera-{cam}"),
+            weight.to_string(),
+            report.frames.to_string(),
+            report.dropped.to_string(),
+            format!("{:.1}", report.wall_fps),
+            si_time(report.mean_latency_s),
+            format!("{:.2}", report.mean_batch),
+            format!("{:.3}", report.mean_mask_iou),
+        ]);
+    }
+    println!("\nper-session reports:");
+    print!("{}", t.render());
+    let (agg, metrics) = server.shutdown()?;
+    println!("\n== aggregate (all sessions) ==");
+    print_serve_report(&agg, &metrics);
     Ok(())
 }
 
@@ -124,10 +222,11 @@ fn print_serve_report(r: &ServeReport, metrics: &StageMetrics) {
     println!("top-1 vs synth label {:.3}", r.top1_accuracy);
     if r.workers > 1 {
         println!("\nper-worker utilization:");
-        let mut t = Table::new(vec!["worker", "frames", "busy", "utilization"]);
+        let mut t = Table::new(vec!["worker", "core", "frames", "busy", "utilization"]);
         for w in &r.per_worker {
             t.row(vec![
                 w.worker.to_string(),
+                w.core.map(|c| c.to_string()).unwrap_or_else(|| "-".to_string()),
                 w.frames.to_string(),
                 si_time(w.busy_s),
                 format!("{:.2}", w.utilization),

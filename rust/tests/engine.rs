@@ -66,6 +66,7 @@ impl FrameWorker for MockWorker {
             bucket,
             modeled_energy_j: 1e-5,
             latency_s: 1e-4,
+            batch_size: 1,
         })
     }
 

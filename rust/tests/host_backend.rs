@@ -70,8 +70,11 @@ fn host_backend_serves_end_to_end() {
     ecfg.warmup_timeout_s = 60.0;
     ecfg.stall_timeout_s = 30.0;
     let mut seen: Vec<(u64, usize, usize)> = Vec::new();
+    // The factory moves into the server's worker threads now, so it owns
+    // its own copy of the pipeline config.
+    let engine_cfg = cfg.clone();
     let (sharded, merged) = run(
-        |_wid| Pipeline::with_backend(cfg.clone(), HostBackend::new(host_cfg())),
+        move |_wid| Pipeline::with_backend(engine_cfg.clone(), HostBackend::new(host_cfg())),
         &ecfg,
         12,
         |r| seen.push((r.frame_index, r.bucket, r.mask.kept())),

@@ -1,0 +1,293 @@
+//! Session-serving gates over one shared server — the multi-tenant
+//! contract of `coordinator::server`:
+//!
+//! 1. two sessions over one 2-worker server deliver **per-session
+//!    in-order** results and **amortize cross-session**: same-bucket
+//!    frames from different cameras ride one bucket-major micro-batch
+//!    (`mean_batch > 1` per session), with aggregate-vs-per-session frame
+//!    accounting consistent;
+//! 2. **fair admission**: a hot session with a deep backlog cannot starve
+//!    a late, small session (weighted round-robin dequeue);
+//! 3. **graceful mid-flight teardown**: dropping a session with frames
+//!    queued and in flight cancels it without panicking the server or
+//!    disturbing its neighbours (the unwrap-hardening regression test).
+//!
+//! Pipeline-backed tests run on the artifact-free host backend, so CI
+//! gates all of this with no Python and no compiled HLO.
+
+use std::time::Duration;
+
+use anyhow::Result;
+use optovit::coordinator::batcher::BatchPolicy;
+use optovit::coordinator::engine::{EngineConfig, FrameWorker};
+use optovit::coordinator::pipeline::{FrameResult, Pipeline, PipelineConfig};
+use optovit::coordinator::server::{Server, SessionOptions};
+use optovit::coordinator::{BucketRouter, StageMetrics};
+use optovit::runtime::{HostBackend, HostConfig};
+use optovit::sensor::{Frame, VideoSource};
+
+const PATCH_PX: usize = 16;
+
+/// One encoder block keeps debug-mode forwards cheap while exercising the
+/// full dataflow (embed → masked attention → FFN → head).
+fn host_cfg() -> HostConfig {
+    HostConfig { depth_limit: Some(1), ..HostConfig::default() }
+}
+
+fn engine_cfg(workers: usize) -> EngineConfig {
+    let mut cfg = EngineConfig::new(workers, PATCH_PX, 96);
+    cfg.warmup_timeout_s = 60.0;
+    cfg.stall_timeout_s = 30.0;
+    cfg
+}
+
+/// Deterministic stand-in worker with a fixed per-frame latency: routes
+/// from the ground-truth mask, like the engine tests' mock.
+struct SlowWorker {
+    delay: Duration,
+    router: BucketRouter,
+    metrics: StageMetrics,
+}
+
+impl SlowWorker {
+    fn new(delay: Duration) -> Self {
+        SlowWorker { delay, router: BucketRouter::even(36, 4), metrics: StageMetrics::new() }
+    }
+}
+
+impl FrameWorker for SlowWorker {
+    fn process(&mut self, frame: &Frame) -> Result<FrameResult> {
+        std::thread::sleep(self.delay);
+        let mask = frame.gt_mask(PATCH_PX);
+        let kept = mask.kept().max(1);
+        let bucket = self.router.route(kept);
+        self.metrics.record_stage("total", self.delay.as_secs_f64());
+        self.metrics.record_frame(1e-5, kept);
+        self.metrics.record_batch_size(1);
+        let mut logits = vec![0.0f32; 10];
+        logits[frame.label % 10] = 1.0;
+        Ok(FrameResult {
+            frame_index: frame.index,
+            logits,
+            mask,
+            bucket,
+            modeled_energy_j: 1e-5,
+            latency_s: self.delay.as_secs_f64(),
+            batch_size: 1,
+        })
+    }
+
+    fn take_metrics(&mut self) -> StageMetrics {
+        std::mem::take(&mut self.metrics)
+    }
+}
+
+/// Two cameras over one 2-worker server: per-session in-order delivery,
+/// cross-session same-bucket batch amortization, and per-session vs
+/// aggregate frame accounting.
+#[test]
+fn two_sessions_amortize_one_bucket_major_batcher() {
+    const FRAMES_PER_SESSION: u64 = 6;
+    let mut ecfg = engine_cfg(2);
+    // A generous lane deadline: both sessions' frames arrive within it, so
+    // workers reliably collect cross-session groups.
+    ecfg.batch = BatchPolicy::batched(4, Duration::from_millis(200));
+    let pipe_cfg = PipelineConfig::tiny_96();
+    let server = {
+        let cfg = pipe_cfg.clone();
+        Server::start(
+            move |_wid| Pipeline::with_backend(cfg.clone(), HostBackend::new(host_cfg())),
+            ecfg,
+        )
+        .expect("server")
+    };
+    let mut cam_a = server
+        .session(SessionOptions::named("cam-a").with_queue_depth(16))
+        .expect("session a");
+    let mut cam_b = server
+        .session(SessionOptions::named("cam-b").with_queue_depth(16))
+        .expect("session b");
+
+    // Identical frame content from both cameras → every submission routes
+    // to the same bucket, so amortization *must* happen if the lanes are
+    // truly shared across sessions. Distinct indices keep order checkable.
+    let template = VideoSource::new(96, 2, 42).next_frame();
+    for i in 0..FRAMES_PER_SESSION {
+        let mut fa = template.clone();
+        fa.index = i;
+        cam_a.submit(fa).expect("submit a");
+        let mut fb = template.clone();
+        fb.index = i;
+        cam_b.submit(fb).expect("submit b");
+    }
+    cam_a.close();
+    cam_b.close();
+
+    let mut order_a = Vec::new();
+    for item in &mut cam_a {
+        order_a.push(item.expect("cam-a result").frame_index);
+    }
+    let report_a = cam_a.report();
+    let mut order_b = Vec::new();
+    for item in &mut cam_b {
+        order_b.push(item.expect("cam-b result").frame_index);
+    }
+    let report_b = cam_b.report();
+
+    assert_eq!(order_a.len() as u64, FRAMES_PER_SESSION);
+    assert_eq!(order_b.len() as u64, FRAMES_PER_SESSION);
+    for pair in order_a.windows(2) {
+        assert!(pair[0] < pair[1], "cam-a emitted out of order: {order_a:?}");
+    }
+    for pair in order_b.windows(2) {
+        assert!(pair[0] < pair[1], "cam-b emitted out of order: {order_b:?}");
+    }
+    // Cross-session bucket-major amortization: with every frame in one
+    // bucket and both sessions feeding the same lanes, each session's
+    // frames must (on average) have shared their dispatch.
+    assert!(
+        report_a.mean_batch > 1.0,
+        "cam-a frames never shared a batch (mean_batch {})",
+        report_a.mean_batch
+    );
+    assert!(
+        report_b.mean_batch > 1.0,
+        "cam-b frames never shared a batch (mean_batch {})",
+        report_b.mean_batch
+    );
+    assert_eq!(report_a.frames, FRAMES_PER_SESSION);
+    assert_eq!(report_b.frames, FRAMES_PER_SESSION);
+
+    // Aggregate-vs-per-session accounting, live and terminal.
+    drop(cam_a);
+    drop(cam_b);
+    let stats = server.stats().expect("stats");
+    assert_eq!(stats.sessions.len(), 2);
+    let session_sum: u64 = stats.sessions.iter().map(|s| s.report.frames).sum();
+    assert_eq!(session_sum, 2 * FRAMES_PER_SESSION);
+    assert_eq!(stats.aggregate.frames, session_sum, "aggregate must equal the session sum");
+    assert!(stats.sessions.iter().all(|s| s.complete && !s.canceled));
+    let (agg, merged) = server.shutdown().expect("shutdown");
+    assert_eq!(agg.frames, 2 * FRAMES_PER_SESSION);
+    assert_eq!(merged.frames(), 2 * FRAMES_PER_SESSION);
+    assert_eq!(agg.backend, "host");
+    assert!(agg.mean_batch > 1.0, "merged metrics must record the shared batches");
+}
+
+/// Fair admission: a hot session that floods 40 frames before a cold
+/// session submits 8 must not starve it — weighted round-robin dequeue
+/// interleaves the cold frames, so the cold session finishes while the
+/// hot backlog is still draining.
+#[test]
+fn hot_session_cannot_starve_a_cold_one() {
+    const HOT: u64 = 40;
+    const COLD: u64 = 8;
+    let server = Server::start(
+        |_wid| Ok(SlowWorker::new(Duration::from_millis(2))),
+        engine_cfg(1),
+    )
+    .expect("server");
+    // Window 64 > HOT so the per-session dispatch window never binds:
+    // only fair dequeue (not window backpressure) can keep the hot
+    // backlog from finishing first.
+    let hot = server
+        .session(SessionOptions::named("hot").with_queue_depth(64).with_window(64))
+        .expect("hot session");
+    let mut cold = server
+        .session(SessionOptions::named("cold").with_queue_depth(16))
+        .expect("cold session");
+
+    let mut src = VideoSource::new(96, 2, 7);
+    for _ in 0..HOT {
+        hot.submit(src.next_frame()).expect("hot submit");
+    }
+    for _ in 0..COLD {
+        cold.submit(src.next_frame()).expect("cold submit");
+    }
+    cold.close();
+    let mut cold_order = Vec::new();
+    for item in &mut cold {
+        cold_order.push(item.expect("cold result").frame_index);
+    }
+    assert_eq!(cold_order.len() as u64, COLD, "every cold frame must be served");
+    for pair in cold_order.windows(2) {
+        assert!(pair[0] < pair[1], "cold emitted out of order: {cold_order:?}");
+    }
+    // The moment the cold session finished, the hot backlog must not be
+    // done: FIFO admission would have served all 40 hot frames first.
+    let hot_snapshot = hot.report();
+    assert!(
+        hot_snapshot.frames < HOT,
+        "cold session waited behind the whole hot backlog ({} of {HOT} hot frames \
+         emitted at cold completion) — admission is not fair",
+        hot_snapshot.frames
+    );
+    // The hot session still completes in full, in order.
+    let hot_report = hot.finish().expect("hot drain");
+    assert_eq!(hot_report.frames, HOT);
+    let (agg, _merged) = server.shutdown().expect("shutdown");
+    assert_eq!(agg.frames, HOT + COLD);
+}
+
+/// Regression (unwrap hardening): dropping a session mid-flight — frames
+/// still queued and in flight — must cancel it gracefully. No panic, no
+/// poisoned lock, no stalled neighbour: the surviving session drains in
+/// full and shutdown succeeds.
+#[test]
+fn dropping_a_session_mid_flight_is_graceful() {
+    const DOOMED: u64 = 20;
+    const SURVIVOR: u64 = 10;
+    let server = Server::start(
+        |_wid| Ok(SlowWorker::new(Duration::from_millis(2))),
+        engine_cfg(2),
+    )
+    .expect("server");
+    let doomed = server
+        .session(SessionOptions::named("doomed").with_queue_depth(32))
+        .expect("doomed session");
+    let doomed_id = doomed.id();
+    let mut survivor = server
+        .session(SessionOptions::named("survivor").with_queue_depth(16))
+        .expect("survivor session");
+
+    let mut src = VideoSource::new(96, 2, 3);
+    for _ in 0..DOOMED {
+        doomed.submit(src.next_frame()).expect("doomed submit");
+    }
+    for _ in 0..SURVIVOR {
+        survivor.submit(src.next_frame()).expect("survivor submit");
+    }
+    // Mid-flight teardown: the doomed session still has frames queued at
+    // the dispatcher and results in flight from the workers.
+    drop(doomed);
+
+    survivor.close();
+    let mut order = Vec::new();
+    for item in &mut survivor {
+        order.push(item.expect("survivor result").frame_index);
+    }
+    assert_eq!(order.len() as u64, SURVIVOR, "the surviving session must drain in full");
+    for pair in order.windows(2) {
+        assert!(pair[0] < pair[1], "survivor emitted out of order: {order:?}");
+    }
+    let survivor_report = survivor.report();
+    assert_eq!(survivor_report.frames, SURVIVOR);
+    drop(survivor);
+
+    let stats = server.stats().expect("stats must stay readable after a canceled session");
+    let doomed_row =
+        stats.sessions.iter().find(|s| s.id == doomed_id).expect("doomed session row");
+    assert!(doomed_row.canceled, "the dropped session must be marked canceled");
+    assert!(
+        doomed_row.report.frames <= DOOMED,
+        "a canceled session never accounts more than it submitted"
+    );
+    let session_sum: u64 = stats.sessions.iter().map(|s| s.report.frames).sum();
+    assert_eq!(
+        stats.aggregate.frames, session_sum,
+        "aggregate accounting must stay consistent after a mid-flight cancel"
+    );
+    // The server survives: graceful shutdown, no panic surfaced as error.
+    let (agg, _merged) = server.shutdown().expect("shutdown after mid-flight session drop");
+    assert!(agg.frames >= SURVIVOR);
+}
