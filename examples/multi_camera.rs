@@ -13,6 +13,13 @@
 //! streams its own in-order results and gets its own report next to the
 //! server-wide aggregate.
 //!
+//! The fleet also demonstrates per-session QoS: camera 0 is the **SLO
+//! tenant** (50 ms submit→emit SLO — its frames carry deadlines that
+//! flush micro-batch lanes early, and its `slo miss`/`p99` columns score
+//! the result), while the last camera is the **bulk tenant**, rate-capped
+//! by an admission quota (token bucket) whose rejections land in the
+//! distinct `q-drop` column instead of `dropped`.
+//!
 //! ```bash
 //! cargo run --release --example multi_camera -- [cameras] [frames] [workers] [pjrt|host|sim] [batch]
 //! # artifact-free: cargo run --release --example multi_camera -- 3 60 2 host 4
@@ -23,7 +30,7 @@ use std::time::Duration;
 use optovit::coordinator::batcher::BatchPolicy;
 use optovit::coordinator::engine::EngineConfig;
 use optovit::coordinator::pipeline::{Pipeline, PipelineConfig, ServeOptions};
-use optovit::coordinator::server::{spawn_synthetic_sensor, Server, SessionOptions};
+use optovit::coordinator::server::{spawn_synthetic_sensor, Quota, Server, SessionOptions};
 use optovit::runtime::{AnyFactory, BackendFactory, BackendKind};
 use optovit::util::table::{si_energy, si_time, Table};
 
@@ -61,13 +68,21 @@ fn main() -> anyhow::Result<()> {
     };
 
     // One session + one sensor thread per camera; camera 0 is the
-    // priority tenant (admission weight 2).
+    // priority SLO tenant (admission weight 2 + a 50 ms submit→emit SLO),
+    // the last camera is the bulk tenant (rate-capped admission quota).
     let image_size = pipe_cfg.image_size;
     let mut fleet = Vec::with_capacity(cameras);
     for cam in 0..cameras {
         let weight = if cam == 0 { 2 } else { 1 };
-        let session =
-            server.session(SessionOptions::named(format!("camera-{cam}")).with_weight(weight))?;
+        let mut sopts = SessionOptions::named(format!("camera-{cam}")).with_weight(weight);
+        if cam == 0 {
+            sopts = sopts.with_slo(Duration::from_millis(50));
+        } else if cam == cameras - 1 {
+            // Bulk tenant: at most ~200 admissions/s sustained, burst 8;
+            // quota rejections count `q-drop`, never `dropped`.
+            sopts = sopts.with_quota(Quota::rate(200.0, 8));
+        }
+        let session = server.session(sopts)?;
         let (submitter, stream) = session.split();
         let sensor = spawn_synthetic_sensor(
             submitter,
@@ -83,7 +98,8 @@ fn main() -> anyhow::Result<()> {
     }
 
     let mut t = Table::new(vec![
-        "camera", "weight", "frames", "dropped", "fps", "latency", "mean batch", "IoU",
+        "camera", "weight", "frames", "dropped", "q-drop", "slo miss", "fps", "latency", "p99",
+        "mean batch", "IoU",
     ]);
     for (cam, weight, sensor, drain) in fleet {
         sensor.join().ok();
@@ -94,8 +110,11 @@ fn main() -> anyhow::Result<()> {
             weight.to_string(),
             report.frames.to_string(),
             report.dropped.to_string(),
+            report.dropped_quota.to_string(),
+            report.slo_miss.to_string(),
             format!("{:.1}", report.wall_fps),
             si_time(report.mean_latency_s),
+            si_time(report.p99_latency_s),
             format!("{:.2}", report.mean_batch),
             format!("{:.3}", report.mean_mask_iou),
         ]);
@@ -111,6 +130,9 @@ fn main() -> anyhow::Result<()> {
     println!("mean latency       {}", si_time(agg.mean_latency_s));
     println!("modeled energy     {}/frame", si_energy(agg.mean_energy_j));
     println!("frames dropped     {}", agg.dropped);
+    println!("quota rejections   {} (bulk tenant's rate cap)", agg.dropped_quota);
+    println!("SLO misses         {} (camera 0's 50 ms SLO)", agg.slo_miss);
+    println!("p99 session lat.   {}", si_time(agg.p99_latency_s));
     for w in &agg.per_worker {
         println!(
             "worker {}           {} frames, {:.0}% utilized{}",

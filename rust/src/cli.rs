@@ -92,6 +92,32 @@ impl Args {
         Ok(std::time::Duration::from_micros(self.get_u64(key, default_us)?))
     }
 
+    /// Optional fractional-millisecond option as a `Duration`, e.g.
+    /// `--slo-ms 2.5`. Absent → `Ok(None)`. Rejected: non-finite and
+    /// non-positive values (a 0 ms SLO would mark every frame a miss;
+    /// `inf` would panic `Duration::from_secs_f64`) and values over one
+    /// hour (a deadline that far out would overflow nothing but means a
+    /// typo, and `Instant + slo` arithmetic must stay safe).
+    pub fn get_opt_duration_ms(
+        &self,
+        key: &str,
+    ) -> Result<Option<std::time::Duration>, String> {
+        const MAX_MS: f64 = 3_600_000.0; // one hour
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => {
+                let ms: f64 = v.parse().map_err(|e| format!("--{key}: {e}"))?;
+                if !ms.is_finite() || ms <= 0.0 {
+                    return Err(format!("--{key}: must be a positive number of milliseconds"));
+                }
+                if ms > MAX_MS {
+                    return Err(format!("--{key}: {ms} ms is over the one-hour cap"));
+                }
+                Ok(Some(std::time::Duration::from_secs_f64(ms / 1000.0)))
+            }
+        }
+    }
+
     /// Constrained string option: the value (or `default` when absent)
     /// must be one of `allowed`, e.g. `--backend pjrt|host|sim`.
     pub fn get_choice(
@@ -194,6 +220,24 @@ mod tests {
             std::time::Duration::from_micros(500)
         );
         assert!(parse(&["serve", "--batch-wait-us", "x"]).get_duration_us("batch-wait-us", 0).is_err());
+    }
+
+    #[test]
+    fn opt_duration_ms_parses_fractions_and_rejects_nonpositive() {
+        let a = parse(&["serve", "--slo-ms", "2.5"]);
+        assert_eq!(
+            a.get_opt_duration_ms("slo-ms").unwrap(),
+            Some(std::time::Duration::from_micros(2500))
+        );
+        assert_eq!(a.get_opt_duration_ms("absent").unwrap(), None);
+        assert!(parse(&["serve", "--slo-ms", "0"]).get_opt_duration_ms("slo-ms").is_err());
+        assert!(parse(&["serve", "--slo-ms", "-3"]).get_opt_duration_ms("slo-ms").is_err());
+        assert!(parse(&["serve", "--slo-ms", "x"]).get_opt_duration_ms("slo-ms").is_err());
+        // Non-finite and absurd values must fail validation, not panic
+        // later in Duration/Instant arithmetic.
+        assert!(parse(&["serve", "--slo-ms", "inf"]).get_opt_duration_ms("slo-ms").is_err());
+        assert!(parse(&["serve", "--slo-ms", "NaN"]).get_opt_duration_ms("slo-ms").is_err());
+        assert!(parse(&["serve", "--slo-ms", "1e30"]).get_opt_duration_ms("slo-ms").is_err());
     }
 
     #[test]

@@ -108,6 +108,10 @@ struct Lane<T> {
     items: Vec<T>,
     /// When the oldest resident item arrived (`None` = empty lane).
     since: Option<Instant>,
+    /// Earliest per-item deadline among residents (SLO-derived): the lane
+    /// matures at `min(since + max_wait, deadline)` — a latency-bound
+    /// frame flushes its lane early instead of waiting out `max_wait`.
+    deadline: Option<Instant>,
 }
 
 /// Bucket-major micro-batcher: accumulates routed frames per bucket and
@@ -132,7 +136,7 @@ impl<T> MicroBatcher<T> {
             policy,
             lanes: buckets
                 .iter()
-                .map(|&b| Lane { bucket: b, items: Vec::new(), since: None })
+                .map(|&b| Lane { bucket: b, items: Vec::new(), since: None, deadline: None })
                 .collect(),
         }
     }
@@ -143,7 +147,19 @@ impl<T> MicroBatcher<T> {
 
     fn take(lane: &mut Lane<T>) -> (usize, Vec<T>) {
         lane.since = None;
+        lane.deadline = None;
         (lane.bucket, std::mem::take(&mut lane.items))
+    }
+
+    /// When a lane matures: its `max_wait` deadline keyed to the oldest
+    /// resident, or the earliest per-item SLO deadline — whichever is
+    /// tighter.
+    fn lane_deadline(&self, lane: &Lane<T>) -> Option<Instant> {
+        let by_wait = lane.since.map(|s| s + self.policy.max_wait);
+        match (by_wait, lane.deadline) {
+            (Some(w), Some(d)) => Some(w.min(d)),
+            (w, d) => w.or(d),
+        }
     }
 
     /// Accumulate one routed frame in its bucket lane; returns the flushed
@@ -152,6 +168,29 @@ impl<T> MicroBatcher<T> {
     /// case). Panics on a bucket outside the ladder, which the router can
     /// never produce.
     pub fn push(&mut self, bucket: usize, item: T, now: Instant) -> Option<(usize, Vec<T>)> {
+        self.push_with_deadline(bucket, item, now, None)
+    }
+
+    /// [`MicroBatcher::push`] for a frame carrying its own completion
+    /// deadline (an SLO session's `accepted_at + slo`): the lane then
+    /// matures at `min(oldest + max_wait, earliest item deadline)`, so a
+    /// latency-bound frame is never held for the full `max_wait` — the
+    /// deadline-aware flush that makes per-session SLOs enforceable.
+    ///
+    /// This is the **lane-based** form of the invariant, for callers that
+    /// batch through `MicroBatcher` (the in-thread `FrameStream` path;
+    /// property-gated in `rust/tests/property.rs`). The session server's
+    /// workers group straight off their job queues instead of lanes, so
+    /// they enforce the *same* maturity rule through the group-deadline
+    /// `tighten()` in `coordinator::server`'s worker loop — change one
+    /// and keep the other aligned.
+    pub fn push_with_deadline(
+        &mut self,
+        bucket: usize,
+        item: T,
+        now: Instant,
+        deadline: Option<Instant>,
+    ) -> Option<(usize, Vec<T>)> {
         let max = self.policy.max_batch.max(1);
         let lane = self
             .lanes
@@ -160,6 +199,10 @@ impl<T> MicroBatcher<T> {
             .expect("routed bucket must be in the batcher's ladder");
         lane.items.push(item);
         lane.since.get_or_insert(now);
+        lane.deadline = match (lane.deadline, deadline) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
         if lane.items.len() >= max {
             Some(Self::take(lane))
         } else {
@@ -167,21 +210,28 @@ impl<T> MicroBatcher<T> {
         }
     }
 
-    /// Flush the first lane whose oldest frame has waited at least
-    /// `max_wait` (deadline flush). Call repeatedly until `None`.
+    /// Flush the first matured lane: oldest frame waited at least
+    /// `max_wait`, **or** an item's own deadline has arrived (SLO-derived
+    /// early flush). Call repeatedly until `None`.
     pub fn poll(&mut self, now: Instant) -> Option<(usize, Vec<T>)> {
-        let wait = self.policy.max_wait;
-        let idx = self
-            .lanes
-            .iter()
-            .position(|l| l.since.is_some_and(|s| now.saturating_duration_since(s) >= wait))?;
+        let idx = self.lanes.iter().position(|l| {
+            !l.items.is_empty()
+                && self
+                    .lane_deadline(l)
+                    .is_some_and(|d| now >= d)
+        })?;
         Some(Self::take(&mut self.lanes[idx]))
     }
 
-    /// Earliest pending lane deadline — what a serving loop should bound
-    /// its queue-receive timeout by.
+    /// Earliest pending lane deadline (`max_wait` or per-item, whichever
+    /// is tighter) — what a serving loop should bound its queue-receive
+    /// timeout by.
     pub fn next_deadline(&self) -> Option<Instant> {
-        self.lanes.iter().filter_map(|l| l.since).min().map(|s| s + self.policy.max_wait)
+        self.lanes
+            .iter()
+            .filter(|l| !l.items.is_empty())
+            .filter_map(|l| self.lane_deadline(l))
+            .min()
     }
 
     /// Flush the lane whose oldest frame has waited longest, regardless of
@@ -208,14 +258,22 @@ impl<T> MicroBatcher<T> {
     }
 }
 
-/// Outcome of a non-blocking queue push: the three cases mean three
-/// different things to a sensor, and only one of them is a dropped frame.
+/// Outcome of a non-blocking queue push: the cases mean different things
+/// to a sensor, and only [`PushOutcome::Full`] is a dropped frame in the
+/// backpressure sense.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PushOutcome {
     /// The frame was enqueued.
     Queued,
-    /// The queue was full — real backpressure; the frame was dropped.
+    /// The queue was full — real backpressure; the frame was dropped
+    /// (counted in `ServeReport::dropped`).
     Full,
+    /// A per-session admission quota (max in-flight or token-bucket rate,
+    /// `coordinator::server::Quota`) rejected the frame — a policy
+    /// decision, not backpressure; counted separately in
+    /// `ServeReport::dropped_quota`. Never produced by a plain
+    /// [`FrameQueue`].
+    Quota,
     /// The consumer hung up — shutdown, not backpressure; the frame went
     /// nowhere but must not count as a drop.
     Closed,
@@ -282,7 +340,9 @@ pub fn sensor_loop(
         let f = src.next_frame();
         match queue.try_push(f) {
             PushOutcome::Queued => {}
-            PushOutcome::Full => {
+            // A plain FrameQueue has no admission quota, so Quota cannot
+            // occur here; treat it like Full for robustness.
+            PushOutcome::Full | PushOutcome::Quota => {
                 if stop.load(Ordering::Relaxed) {
                     break;
                 }
@@ -369,6 +429,41 @@ mod tests {
         assert!(b.is_empty());
         assert!(b.poll(t0 + Duration::from_secs(2)).is_none(), "empty lanes never mature");
         assert_eq!(b.next_deadline(), None);
+    }
+
+    #[test]
+    fn micro_batcher_item_deadline_flushes_before_max_wait() {
+        let t0 = Instant::now();
+        let wait = Duration::from_secs(3600); // max_wait alone would hold it an hour
+        let mut b = MicroBatcher::new(&[9, 36], BatchPolicy::batched(4, wait));
+        let slo_deadline = t0 + Duration::from_millis(10);
+        assert!(b.push_with_deadline(9, "slo", t0, Some(slo_deadline)).is_none());
+        // The lane's effective deadline is the SLO one, not max_wait…
+        assert_eq!(b.next_deadline(), Some(slo_deadline));
+        assert!(b.poll(t0 + Duration::from_millis(9)).is_none(), "not yet due");
+        // …and at the item deadline the lane flushes early.
+        let (bucket, group) = b.poll(slo_deadline).expect("deadline-aware early flush");
+        assert_eq!((bucket, group), (9, vec!["slo"]));
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn micro_batcher_tightest_deadline_wins_and_resets_on_flush() {
+        let t0 = Instant::now();
+        let mut b = MicroBatcher::new(&[9], BatchPolicy::batched(8, Duration::from_secs(1)));
+        let loose = t0 + Duration::from_millis(500);
+        let tight = t0 + Duration::from_millis(20);
+        assert!(b.push_with_deadline(9, 1u8, t0, Some(loose)).is_none());
+        assert!(b.push_with_deadline(9, 2u8, t0, Some(tight)).is_none());
+        // A later no-deadline push neither loosens nor tightens the lane.
+        assert!(b.push(9, 3u8, t0 + Duration::from_millis(1)).is_none());
+        assert_eq!(b.next_deadline(), Some(tight), "the tightest resident deadline binds");
+        let (_, group) = b.poll(tight).expect("flush at the tight deadline");
+        assert_eq!(group, vec![1, 2, 3], "the whole lane flushes together");
+        // After the flush the lane's deadline state is cleared: a fresh
+        // push is bounded by max_wait only.
+        assert!(b.push(9, 4u8, tight).is_none());
+        assert_eq!(b.next_deadline(), Some(tight + Duration::from_secs(1)));
     }
 
     #[test]

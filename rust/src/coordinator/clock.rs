@@ -1,0 +1,432 @@
+//! The serving stack's time seam: a pluggable [`Clock`] with a
+//! production [`Clock::system`] variant and a step-controlled
+//! [`ManualClock`] for deterministic tests.
+//!
+//! Every time-dependent serving behaviour — micro-batch lane deadlines,
+//! SLO deadlines and miss accounting, admission token buckets, stall and
+//! warmup timeouts — reads time through a `Clock` instead of calling
+//! `Instant::now()` directly, and every wait goes through a clock-aware
+//! [`Event`] instead of `thread::sleep` polling. Under the system clock
+//! this is zero-cost (an enum match around `Instant::now()`, no
+//! allocation, no dyn dispatch — the frame hot path stays within its
+//! allocation budget); under a manual clock, time moves **only** when the
+//! test calls [`ManualClock::advance`], which makes deadline flushes,
+//! SLO misses, and rate quotas provable with exact expectations
+//! (`rust/tests/qos.rs`) instead of wall-clock luck.
+//!
+//! Design notes:
+//!
+//! - Manual time is anchored at a real `Instant` captured at clock
+//!   creation (`now() = anchor + offset`), so manual timestamps
+//!   interoperate with every `Instant`-typed field in the stack — no
+//!   parallel time type to thread through.
+//! - [`Event`] is a generation-counted condvar: readers snapshot
+//!   [`Event::generation`], re-check their predicate, then wait; any
+//!   [`Event::notify`] (or, under a manual clock, any `advance`) wakes
+//!   them. Waits take **absolute** deadlines ([`Event::wait_until`]) so a
+//!   clock step between computing a deadline and entering the wait can
+//!   never stretch the wait past it.
+//! - Events created from a manual clock share the clock's condvar, so a
+//!   single `advance` wakes every deadline-waiting thread in the server
+//!   at once — exactly the "step the world" semantics a deterministic
+//!   test wants.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+/// Cap applied to wait timeouts before adding them to an `Instant`, so a
+/// caller-provided "practically forever" duration can never overflow
+/// `Instant` arithmetic.
+const MAX_WAIT: Duration = Duration::from_secs(60 * 60 * 24 * 365);
+
+/// Defensive real-time re-check period for manual-clock waits: waiters are
+/// woken by `advance`/`notify` broadcasts, but re-check their predicate on
+/// this cadence anyway so a test bug degrades to a slow loop, not a hang
+/// with no stack worth reading.
+const MANUAL_RECHECK: Duration = Duration::from_millis(50);
+
+/// Shared state of a manual timeline.
+struct ManualInner {
+    /// Real instant the manual timeline is anchored at; manual `now()` is
+    /// `anchor + offset`, so manual times interoperate with `Instant`.
+    anchor: Instant,
+    /// Time elapsed on the manual timeline (advanced explicitly).
+    offset: Mutex<Duration>,
+    /// Broadcast on every [`ManualClock::advance`] **and** every
+    /// [`Event::notify`] of an event created from this clock.
+    cv: Condvar,
+}
+
+fn recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// A monotonic time source the serving stack reads instead of calling
+/// `Instant::now()` directly. Cloning is cheap (unit or `Arc` bump); the
+/// system variant adds no allocation and no dyn dispatch to any path.
+#[derive(Clone)]
+pub struct Clock {
+    inner: ClockInner,
+}
+
+#[derive(Clone)]
+enum ClockInner {
+    /// Production clock: `Instant::now()` / `thread::sleep`.
+    System,
+    /// Test clock: time is frozen until [`ManualClock::advance`] moves it.
+    Manual(Arc<ManualInner>),
+}
+
+impl fmt::Debug for Clock {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.inner {
+            ClockInner::System => write!(f, "SystemClock"),
+            ClockInner::Manual(m) => {
+                write!(f, "ManualClock(+{:?})", *recover(&m.offset))
+            }
+        }
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Clock::system()
+    }
+}
+
+impl Clock {
+    /// The production wall clock.
+    pub fn system() -> Clock {
+        Clock { inner: ClockInner::System }
+    }
+
+    /// A frozen, step-controlled timeline: returns the clock (thread it
+    /// through the serving config) and the [`ManualClock`] handle the test
+    /// advances it with.
+    pub fn manual() -> (Clock, ManualClock) {
+        let inner = Arc::new(ManualInner {
+            anchor: Instant::now(),
+            offset: Mutex::new(Duration::ZERO),
+            cv: Condvar::new(),
+        });
+        (Clock { inner: ClockInner::Manual(inner.clone()) }, ManualClock { inner })
+    }
+
+    /// Whether this is a step-controlled test clock.
+    pub fn is_manual(&self) -> bool {
+        matches!(self.inner, ClockInner::Manual(_))
+    }
+
+    /// Current time on this clock's timeline (monotonic).
+    pub fn now(&self) -> Instant {
+        match &self.inner {
+            ClockInner::System => Instant::now(),
+            ClockInner::Manual(m) => m.anchor + *recover(&m.offset),
+        }
+    }
+
+    /// Seconds elapsed on this clock since `earlier` (0 if `earlier` is in
+    /// the future — manual clocks never run backwards, but callers may
+    /// race an advance).
+    pub fn seconds_since(&self, earlier: Instant) -> f64 {
+        self.now().saturating_duration_since(earlier).as_secs_f64()
+    }
+
+    /// Sleep `d` on this clock's timeline: a real `thread::sleep` under
+    /// the system clock; under a manual clock, block until `advance` has
+    /// moved `now()` past the target.
+    pub fn sleep(&self, d: Duration) {
+        match &self.inner {
+            ClockInner::System => std::thread::sleep(d),
+            ClockInner::Manual(m) => {
+                let deadline = self.now() + d.min(MAX_WAIT);
+                let mut off = recover(&m.offset);
+                while m.anchor + *off < deadline {
+                    let (g, _timeout) = m
+                        .cv
+                        .wait_timeout(off, MANUAL_RECHECK)
+                        .unwrap_or_else(PoisonError::into_inner);
+                    off = g;
+                }
+            }
+        }
+    }
+
+    /// A wait/notify cell bound to this clock's timeline (see [`Event`]).
+    pub fn event(&self) -> Event {
+        let kind = match &self.inner {
+            ClockInner::System => {
+                EventKind::System { lock: Mutex::new(()), cv: Condvar::new() }
+            }
+            ClockInner::Manual(m) => EventKind::Manual(m.clone()),
+        };
+        Event { gen: AtomicU64::new(0), kind }
+    }
+}
+
+/// Step controller for a [`Clock::manual`] timeline. Cloneable; advancing
+/// wakes every thread blocked in a clock [`Event`] wait or `sleep`.
+#[derive(Clone)]
+pub struct ManualClock {
+    inner: Arc<ManualInner>,
+}
+
+impl ManualClock {
+    /// The `Clock` view of this timeline (same as the one returned by
+    /// [`Clock::manual`]).
+    pub fn clock(&self) -> Clock {
+        Clock { inner: ClockInner::Manual(self.inner.clone()) }
+    }
+
+    /// Current manual time.
+    pub fn now(&self) -> Instant {
+        self.inner.anchor + *recover(&self.inner.offset)
+    }
+
+    /// Move the timeline forward by `d` in **one atomic jump** (waiters
+    /// never observe intermediate times) and wake every clock waiter.
+    pub fn advance(&self, d: Duration) {
+        {
+            let mut off = recover(&self.inner.offset);
+            *off = off.saturating_add(d);
+        }
+        self.inner.cv.notify_all();
+    }
+
+    /// Total time advanced so far.
+    pub fn elapsed(&self) -> Duration {
+        *recover(&self.inner.offset)
+    }
+}
+
+enum EventKind {
+    System { lock: Mutex<()>, cv: Condvar },
+    /// Shares the manual clock's mutex/condvar so `advance` wakes waiters.
+    Manual(Arc<ManualInner>),
+}
+
+/// A generation-counted wait/notify cell on a [`Clock`] timeline — the
+/// primitive that replaced the serving stack's `thread::sleep` polling
+/// loops.
+///
+/// Race-free usage pattern (the generation snapshot must come **before**
+/// the predicate re-check, so a notify between check and wait returns
+/// immediately instead of being missed):
+///
+/// ```ignore
+/// loop {
+///     let gen = event.generation();
+///     if predicate() { break; }
+///     event.wait_until(gen, deadline);
+/// }
+/// ```
+pub struct Event {
+    gen: AtomicU64,
+    kind: EventKind,
+}
+
+impl fmt::Debug for Event {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let kind = match &self.kind {
+            EventKind::System { .. } => "system",
+            EventKind::Manual(_) => "manual",
+        };
+        write!(f, "Event({kind}, gen {})", self.generation())
+    }
+}
+
+impl Event {
+    /// Snapshot the notify generation (take it *before* re-checking the
+    /// predicate you are about to wait on).
+    pub fn generation(&self) -> u64 {
+        self.gen.load(Ordering::Acquire)
+    }
+
+    /// Wake every waiter. The generation bump happens under the wait lock,
+    /// so a notify can never slip between a waiter's generation snapshot
+    /// and its wait.
+    pub fn notify(&self) {
+        match &self.kind {
+            EventKind::System { lock, cv } => {
+                let _g = recover(lock);
+                self.gen.fetch_add(1, Ordering::Release);
+                cv.notify_all();
+            }
+            EventKind::Manual(m) => {
+                let _g = recover(&m.offset);
+                self.gen.fetch_add(1, Ordering::Release);
+                m.cv.notify_all();
+            }
+        }
+    }
+
+    /// Block until the generation moves past `gen`, or the clock reaches
+    /// the **absolute** `deadline` — whichever comes first. Returns the
+    /// current generation. Under a manual clock the deadline is manual
+    /// time: the wait ends only on a notify or an `advance` past it.
+    pub fn wait_until(&self, gen: u64, deadline: Instant) -> u64 {
+        match &self.kind {
+            EventKind::System { lock, cv } => {
+                let mut g = recover(lock);
+                while self.generation() == gen {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    let (g2, _t) = cv
+                        .wait_timeout(g, deadline - now)
+                        .unwrap_or_else(PoisonError::into_inner);
+                    g = g2;
+                }
+            }
+            EventKind::Manual(m) => {
+                let mut off = recover(&m.offset);
+                while self.generation() == gen && m.anchor + *off < deadline {
+                    let (o2, _t) = m
+                        .cv
+                        .wait_timeout(off, MANUAL_RECHECK)
+                        .unwrap_or_else(PoisonError::into_inner);
+                    off = o2;
+                }
+            }
+        }
+        self.generation()
+    }
+
+    /// [`Event::wait_until`] with a relative timeout measured on the
+    /// event's own clock. Prefer `wait_until` when the deadline was
+    /// computed earlier — a clock step in between must not stretch the
+    /// wait.
+    pub fn wait_for(&self, gen: u64, timeout: Duration) -> u64 {
+        let now = match &self.kind {
+            EventKind::System { .. } => Instant::now(),
+            EventKind::Manual(m) => m.anchor + *recover(&m.offset),
+        };
+        self.wait_until(gen, now + timeout.min(MAX_WAIT))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    #[test]
+    fn system_clock_is_monotonic_and_cheap() {
+        let c = Clock::system();
+        assert!(!c.is_manual());
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+        assert_eq!(c.seconds_since(b + Duration::from_secs(5)), 0.0, "future => 0");
+    }
+
+    #[test]
+    fn manual_clock_moves_only_on_advance() {
+        let (clock, manual) = Clock::manual();
+        assert!(clock.is_manual());
+        let t0 = clock.now();
+        assert_eq!(clock.now(), t0, "frozen until advanced");
+        manual.advance(Duration::from_millis(10));
+        assert_eq!(clock.now(), t0 + Duration::from_millis(10));
+        assert_eq!(manual.elapsed(), Duration::from_millis(10));
+        assert!((clock.seconds_since(t0) - 0.010).abs() < 1e-12);
+    }
+
+    #[test]
+    fn manual_sleep_wakes_only_after_sufficient_advance() {
+        let (clock, manual) = Clock::manual();
+        let (tx, rx) = mpsc::channel();
+        let c2 = clock.clone();
+        let h = std::thread::spawn(move || {
+            c2.sleep(Duration::from_millis(5));
+            tx.send(c2.now()).unwrap();
+        });
+        // The sleeper's target is relative to whenever it entered the
+        // sleep (which races this thread), so step until it reports in —
+        // each advance is atomic and a sleeper can never wake early, so
+        // waking proves an advance moved time past its target.
+        let woke_at = loop {
+            match rx.try_recv() {
+                Ok(t) => break t,
+                Err(_) => manual.advance(Duration::from_millis(5)),
+            }
+        };
+        // A 5 ms sleep can only end once at least 5 ms of manual time
+        // passed after it began.
+        assert!(manual.elapsed() >= Duration::from_millis(5));
+        assert!(woke_at <= clock.now());
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn event_notify_wakes_waiter_and_bumps_generation() {
+        let clock = Clock::system();
+        let ev = Arc::new(clock.event());
+        let g0 = ev.generation();
+        let ev2 = ev.clone();
+        let h = std::thread::spawn(move || ev2.wait_for(g0, Duration::from_secs(30)));
+        ev.notify();
+        let g1 = h.join().unwrap();
+        assert!(g1 > g0, "wait must observe the notify generation");
+    }
+
+    #[test]
+    fn system_event_wait_until_expires() {
+        let clock = Clock::system();
+        let ev = clock.event();
+        let gen = ev.generation();
+        let deadline = Instant::now() + Duration::from_millis(5);
+        let after = ev.wait_until(gen, deadline);
+        assert_eq!(after, gen, "no notify: the deadline ended the wait");
+        assert!(Instant::now() >= deadline);
+    }
+
+    #[test]
+    fn manual_event_wait_until_ends_on_advance_past_deadline() {
+        let (clock, manual) = Clock::manual();
+        let ev = Arc::new(clock.event());
+        let deadline = clock.now() + Duration::from_millis(10);
+        let gen = ev.generation();
+        let ev2 = ev.clone();
+        let (tx, rx) = mpsc::channel();
+        let h = std::thread::spawn(move || {
+            ev2.wait_until(gen, deadline);
+            tx.send(()).unwrap();
+        });
+        assert!(
+            rx.recv_timeout(Duration::from_millis(20)).is_err(),
+            "manual waits must not expire on wall-clock time"
+        );
+        manual.advance(Duration::from_millis(10));
+        rx.recv().expect("advance to the deadline must end the wait");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn manual_event_notify_wakes_without_time_passing() {
+        let (clock, manual) = Clock::manual();
+        let ev = Arc::new(clock.event());
+        let gen = ev.generation();
+        let far = clock.now() + Duration::from_secs(3600);
+        let ev2 = ev.clone();
+        let h = std::thread::spawn(move || ev2.wait_until(gen, far));
+        ev.notify();
+        assert!(h.join().unwrap() > gen);
+        assert_eq!(manual.elapsed(), Duration::ZERO, "no time passed");
+    }
+
+    #[test]
+    fn generation_snapshot_before_notify_returns_immediately() {
+        // A notify between the snapshot and the wait must not be missed.
+        let clock = Clock::system();
+        let ev = clock.event();
+        let gen = ev.generation();
+        ev.notify();
+        let t0 = Instant::now();
+        ev.wait_for(gen, Duration::from_secs(30));
+        assert!(t0.elapsed() < Duration::from_secs(5), "stale generation returns at once");
+    }
+}

@@ -27,6 +27,7 @@
 use anyhow::{anyhow, Result};
 
 use super::batcher::BatchPolicy;
+use super::clock::Clock;
 use super::pipeline::{FrameResult, Pipeline, PipelineConfig, ServeOptions, ServeReport};
 use super::server::{spawn_synthetic_sensor, ServeError, Server, SessionOptions};
 use super::stats::StageMetrics;
@@ -135,6 +136,13 @@ pub struct EngineConfig {
     /// a no-op elsewhere). The pinned core is recorded per worker in
     /// [`super::stats::WorkerStats::core`].
     pub pin_workers: bool,
+    /// Time source for every serving deadline, wait, and timestamp in the
+    /// server built from this config: micro-batch lane deadlines, SLO
+    /// deadlines and miss accounting, quota token refills, warmup/stall
+    /// timeouts. [`Clock::system`] (the default) in production; a
+    /// [`super::clock::ManualClock`] makes all of the above exactly
+    /// assertable in tests (`rust/tests/qos.rs`).
+    pub clock: Clock,
 }
 
 impl EngineConfig {
@@ -154,6 +162,7 @@ impl EngineConfig {
             batch: BatchPolicy::per_frame(),
             reassembly_window: 0,
             pin_workers: false,
+            clock: Clock::system(),
         }
     }
 
@@ -273,8 +282,13 @@ where
     let cfg = EngineConfig::for_serving(pipe_cfg, opts, workers);
     let pipe_cfg = pipe_cfg.clone();
     let factory = factory.clone();
+    // Worker pipelines stamp their stage timings on the server's clock,
+    // so one seam governs every timestamp in the run.
+    let clock = cfg.clock.clone();
     run(
-        move |wid| Pipeline::with_backend(pipe_cfg.clone(), factory.create(wid)?),
+        move |wid| {
+            Pipeline::with_backend_and_clock(pipe_cfg.clone(), factory.create(wid)?, clock.clone())
+        },
         &cfg,
         opts.num_frames,
         sink,

@@ -30,11 +30,28 @@
 //! Frames from all sessions interleave through the workers' shared
 //! per-bucket micro-batch lanes (same-bucket frames from *different*
 //! cameras complete in one `execute_batch` call); admission is weighted
-//! round-robin so a hot camera cannot starve the rest; each session gets
-//! strictly in-order results, its own `ServeReport`, isolated
-//! backpressure, and graceful close/cancel independent of server
-//! shutdown. Worker threads are optionally core-pinned
-//! ([`engine::EngineConfig::pin_workers`], [`affinity`]).
+//! round-robin ([`server::WrrAdmission`]) so a hot camera cannot starve
+//! the rest; each session gets strictly in-order results, its own
+//! `ServeReport`, isolated backpressure, and graceful close/cancel
+//! independent of server shutdown. Worker threads are optionally
+//! core-pinned ([`engine::EngineConfig::pin_workers`], [`affinity`]).
+//!
+//! **Time is a seam, and QoS is per session.** Every deadline, wait, and
+//! timestamp in the serving stack reads a pluggable [`clock::Clock`]
+//! ([`engine::EngineConfig::clock`]; [`clock::Clock::system`] in
+//! production, a step-controlled [`clock::ManualClock`] in tests), and
+//! every wait in the session server is a clock-aware [`clock::Event`] —
+//! no `thread::sleep` polling anywhere in [`server`] (the in-thread
+//! `serve` path's synthetic-sensor helper keeps its two pacing sleeps —
+//! it has no server to be notified by). On top of that seam each session
+//! can declare QoS ([`server::SessionOptions`]): a latency **SLO**
+//! (frames carry `accepted_at + slo` deadlines; a worker flushes its
+//! micro-batch group early when the earliest one arrives, and misses are
+//! counted per session in `ServeReport::slo_miss` with a submit→emit
+//! `p99_latency_s`) and an admission **[`server::Quota`]** (max in-flight
+//! + token-bucket rate; `try_submit` rejections count the distinct
+//! `dropped_quota`). Under a manual clock all of this is exactly
+//! assertable — the deterministic `rust/tests/qos.rs` gate.
 //!
 //! The pre-session batch-job surfaces survive as documented wrappers:
 //!
@@ -63,28 +80,31 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`batcher`] | bucket router, per-bucket micro-batch lanes, bounded frame queues |
+//! | [`clock`] | the time seam: pluggable `Clock` (system / manual) + clock-aware `Event` waits |
+//! | [`batcher`] | bucket router, per-bucket micro-batch lanes (deadline-aware), bounded frame queues |
 //! | [`pipeline`] | the frame pipeline (MGNet → mask → route → backbone), in-thread streaming `serve` |
-//! | [`server`] | the session-oriented server: multi-tenant sessions, fair admission, per-session streams/reports |
-//! | [`engine`] | `FrameWorker`/`EngineConfig` + the one-session batch-job wrappers (`run`, `serve_sharded`) |
+//! | [`server`] | the session-oriented server: multi-tenant sessions, fair admission (`WrrAdmission`), per-session QoS (SLO / `Quota`), streams/reports |
+//! | [`engine`] | `FrameWorker`/`EngineConfig` (incl. the serving clock) + the one-session batch-job wrappers (`run`, `serve_sharded`) |
 //! | [`affinity`] | best-effort worker-thread core pinning (`sched_setaffinity`) |
-//! | [`stats`] | per-stage metrics, merge-able across workers; per-worker utilization |
+//! | [`stats`] | per-stage metrics, merge-able across workers; latency histograms; per-worker utilization |
 
 pub mod affinity;
 pub mod batcher;
+pub mod clock;
 pub mod engine;
 pub mod pipeline;
 pub mod server;
 pub mod stats;
 
 pub use batcher::{BatchPolicy, BucketRouter, FrameQueue, MicroBatcher, PushOutcome};
+pub use clock::{Clock, Event, ManualClock};
 pub use engine::{serve_sharded, serve_sharded_with, EngineConfig, FrameWorker};
 pub use pipeline::{
     serve, FrameResult, FrameScratch, FrameStream, Pipeline, PipelineConfig, RoutedFrame,
     ServeOptions, ServeReport,
 };
 pub use server::{
-    spawn_synthetic_sensor, ServeError, Server, ServerStats, ServerWatch, Session, SessionOptions,
-    SessionStats, SessionStream, SessionSubmitter,
+    spawn_synthetic_sensor, Quota, ServeError, Server, ServerStats, ServerWatch, Session,
+    SessionOptions, SessionStats, SessionStream, SessionSubmitter, WrrAdmission,
 };
-pub use stats::{StageMetrics, WorkerStats};
+pub use stats::{LatencyHistogram, StageMetrics, WorkerStats};

@@ -45,6 +45,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, ensure, Context, Result};
 
 use super::batcher::{recv_frame, BatchPolicy, BucketRouter, FrameQueue, MicroBatcher};
+use super::clock::Clock;
 use super::stats::{StageMetrics, WorkerStats};
 use crate::energy::AcceleratorModel;
 use crate::roi::PatchMask;
@@ -343,13 +344,27 @@ pub struct Pipeline<B: Backend> {
     /// not `format!` per frame.
     mgnet_name: String,
     backbone_names: Vec<(usize, String)>,
+    /// Time source for every stage timestamp and lane deadline
+    /// ([`Clock::system`] in production; a manual clock in deterministic
+    /// tests). Reading it is a branch around `Instant::now()` — no
+    /// allocation, no dyn dispatch, so the frame hot path stays within
+    /// its allocation budget.
+    clock: Clock,
     pub metrics: StageMetrics,
 }
 
 impl<B: Backend> Pipeline<B> {
-    /// Build a pipeline over an already-constructed backend. Validates the
-    /// bucket ladder (see [`PipelineConfig::validate`]).
+    /// Build a pipeline over an already-constructed backend, timed by the
+    /// production [`Clock::system`]. Validates the bucket ladder (see
+    /// [`PipelineConfig::validate`]).
     pub fn with_backend(cfg: PipelineConfig, backend: B) -> Result<Self> {
+        Self::with_backend_and_clock(cfg, backend, Clock::system())
+    }
+
+    /// [`Pipeline::with_backend`] on an explicit [`Clock`] — the seam that
+    /// makes stage timing and lane deadlines deterministic under a manual
+    /// clock.
+    pub fn with_backend_and_clock(cfg: PipelineConfig, backend: B, clock: Clock) -> Result<Self> {
         cfg.validate()?;
         let router = BucketRouter::new(cfg.buckets.clone());
         let vit_cfg = cfg.vit_config();
@@ -365,9 +380,15 @@ impl<B: Backend> Pipeline<B> {
             mgnet_cfg: cfg.mgnet_config(),
             mgnet_name: cfg.mgnet_artifact(),
             backbone_names,
+            clock,
             metrics: StageMetrics::new(),
             cfg,
         })
+    }
+
+    /// The clock this pipeline stamps stage timings with.
+    pub fn clock(&self) -> &Clock {
+        &self.clock
     }
 
     pub fn config(&self) -> &PipelineConfig {
@@ -408,19 +429,19 @@ impl<B: Backend> Pipeline<B> {
         let patch_dim = self.vit_cfg.patch_dim();
 
         // 1. Patchify (the sensor→accelerator interface) into scratch.
-        let t0 = Instant::now();
+        let t0 = self.clock.now();
         self.scratch.stage_patchify(frame, patch_px);
-        self.metrics.record_stage("patchify", t0.elapsed().as_secs_f64());
+        self.metrics.record_stage("patchify", self.clock.seconds_since(t0));
 
         // 2. MGNet scores → binary mask (Eq. 3 + sigmoid threshold).
         if self.cfg.use_mask {
-            let t0 = Instant::now();
+            let t0 = self.clock.now();
             let dims = [n_full as i64, patch_dim as i64];
             let scores = self
                 .backend
                 .execute1(&self.mgnet_name, &[TensorRef::new(&self.scratch.patches, &dims)])
                 .context("MGNet stage")?;
-            self.metrics.record_stage("mgnet", t0.elapsed().as_secs_f64());
+            self.metrics.record_stage("mgnet", self.clock.seconds_since(t0));
             self.scratch.stage_mask(side, &scores, self.cfg.region_threshold);
         } else {
             self.scratch.stage_mask_full(side);
@@ -428,9 +449,9 @@ impl<B: Backend> Pipeline<B> {
 
         // 3. Route to a bucket; select top-score patches if over-full,
         //    otherwise pad with zeroed invalid slots.
-        let t0 = Instant::now();
+        let t0 = self.clock.now();
         let bucket = self.scratch.stage_route(&self.router, patch_dim);
-        self.metrics.record_stage("route", t0.elapsed().as_secs_f64());
+        self.metrics.record_stage("route", self.clock.seconds_since(t0));
         Ok(bucket)
     }
 
@@ -481,13 +502,13 @@ impl<B: Backend> Pipeline<B> {
     /// backend call: all staging goes through the reusable [`FrameScratch`]
     /// and inputs are passed as borrowed [`TensorRef`] views.
     pub fn process_frame(&mut self, frame: &Frame) -> Result<FrameResult> {
-        let t_start = Instant::now();
+        let t_start = self.clock.now();
         let patch_dim = self.vit_cfg.patch_dim();
         let bucket = self.stage_front(frame)?;
         let kept_count = self.scratch.kept.len();
 
         // Backbone on the pruned sequence.
-        let t0 = Instant::now();
+        let t0 = self.clock.now();
         let artifact = self
             .backbone_names
             .iter()
@@ -507,14 +528,14 @@ impl<B: Backend> Pipeline<B> {
                 ],
             )
             .context("backbone stage")?;
-        self.metrics.record_stage("backbone", t0.elapsed().as_secs_f64());
+        self.metrics.record_stage("backbone", self.clock.seconds_since(t0));
 
         let energy_j = self.modeled_energy_j(kept_count, true);
         // "total" is always host wall-clock (it feeds busy-time and
         // utilization accounting); a simulating backend additionally
         // charges its modeled frame latency under "modeled", which then
         // becomes the reported per-frame latency.
-        let wall_s = t_start.elapsed().as_secs_f64();
+        let wall_s = self.clock.seconds_since(t_start);
         self.metrics.record_stage("total", wall_s);
         let modeled = self.record_modeled(kept_count, true);
         self.metrics.record_frame(energy_j, kept_count);
@@ -536,7 +557,7 @@ impl<B: Backend> Pipeline<B> {
     /// of its staged bucket tensors, so it can wait in a
     /// [`MicroBatcher`] lane while later frames overwrite the scratch.
     pub fn route_frame(&mut self, frame: &Frame) -> Result<RoutedFrame> {
-        let t_start = Instant::now();
+        let t_start = self.clock.now();
         let patch_dim = self.vit_cfg.patch_dim();
         let bucket = self.stage_front(frame)?;
         Ok(RoutedFrame {
@@ -548,8 +569,8 @@ impl<B: Backend> Pipeline<B> {
             patches: self.scratch.bucket_patches[..bucket * patch_dim].to_vec(),
             pos_idx: self.scratch.pos_idx[..bucket].to_vec(),
             valid: self.scratch.valid[..bucket].to_vec(),
-            front_s: t_start.elapsed().as_secs_f64(),
-            staged_at: Instant::now(),
+            front_s: self.clock.seconds_since(t_start),
+            staged_at: self.clock.now(),
         })
     }
 
@@ -579,7 +600,7 @@ impl<B: Backend> Pipeline<B> {
         let bdims = [bucket as i64, patch_dim as i64];
         let vdims = [bucket as i64];
 
-        let t0 = Instant::now();
+        let t0 = self.clock.now();
         let holders: Vec<[TensorRef<'_>; 3]> = batch
             .iter()
             .map(|rf| {
@@ -602,7 +623,7 @@ impl<B: Backend> Pipeline<B> {
             "backend returned {} result sets for a batch of {n}",
             outs.len()
         );
-        let backbone_share = t0.elapsed().as_secs_f64() / n as f64;
+        let backbone_share = self.clock.seconds_since(t0) / n as f64;
 
         let mut results = Vec::with_capacity(n);
         for (i, (rf, mut out)) in batch.into_iter().zip(outs).enumerate() {
@@ -624,7 +645,7 @@ impl<B: Backend> Pipeline<B> {
             // wait** — so a `--batch`/`--batch-wait-us` sweep reports the
             // real latency cost of batching, not just its throughput win.
             self.metrics.record_stage("total", rf.front_s + backbone_share);
-            let latency_wall_s = rf.front_s + rf.staged_at.elapsed().as_secs_f64();
+            let latency_wall_s = rf.front_s + self.clock.seconds_since(rf.staged_at);
             self.metrics.record_stage("latency", latency_wall_s);
             let modeled = self.record_modeled(rf.kept_count, first);
             self.metrics.record_frame(energy_j, rf.kept_count);
@@ -699,6 +720,25 @@ pub struct ServeReport {
     /// backpressure rejections) — not frames merely in flight when the
     /// run stopped, and not pushes against a hung-up consumer.
     pub dropped: u64,
+    /// Submissions rejected by the session's **admission quota**
+    /// (`coordinator::server::Quota`: max in-flight and/or token-bucket
+    /// rate) — a policy decision, kept strictly distinct from `dropped`,
+    /// which counts queue-full backpressure. Always 0 on paths without
+    /// session quotas (the in-thread `serve` and the batch-job wrappers).
+    pub dropped_quota: u64,
+    /// Frames whose **submit→emit** latency exceeded the session's
+    /// declared SLO (`SessionOptions::slo`). 0 when no SLO was declared.
+    /// Counted at emission against the serving clock, so a manual-clock
+    /// test can assert it exactly.
+    pub slo_miss: u64,
+    /// p99 of submit→emit latency (seconds) across the report's sessions,
+    /// from a log-scale histogram (`LatencyHistogram`, ~15% bucket
+    /// resolution, quantiles reported as bucket lower bounds — never
+    /// exaggerated). Note this is *end-to-end* session latency (queueing
+    /// + lane wait + compute), unlike `mean_latency_s`, which is the
+    /// per-frame compute/modeled latency; 0.0 on paths without session
+    /// accounting.
+    pub p99_latency_s: f64,
     pub wall_fps: f64,
     /// Mean per-frame latency: modeled accelerator latency under the `sim`
     /// backend, host wall-clock otherwise (lane wait included on the
@@ -848,7 +888,8 @@ impl<'p, B: Backend> FrameStream<'p, B> {
             )
         });
 
-        pipeline.metrics.start_run();
+        let t_run = pipeline.clock.now();
+        pipeline.metrics.start_run_at(t_run);
         let patch_px = pipeline.vit_cfg.patch_size;
         let batcher = MicroBatcher::new(pipeline.router.buckets(), opts.batch);
         Ok(FrameStream {
@@ -902,7 +943,7 @@ impl<'p, B: Backend> FrameStream<'p, B> {
     /// reassembly window, drain lanes at end of input, or route the next
     /// sensor frame.
     fn advance(&mut self) -> Result<()> {
-        let now = Instant::now();
+        let now = self.pipeline.clock.now();
         // 1. Deadline flushes come first: a lane past `max_wait` must not
         //    wait behind new arrivals.
         if let Some((_bucket, group)) = self.batcher.poll(now) {
@@ -967,7 +1008,9 @@ impl<'p, B: Backend> FrameStream<'p, B> {
                     // lanes drain.
                     self.stop.store(true, Ordering::Relaxed);
                 }
-                if let Some((_bucket, group)) = self.batcher.push(bucket, item, Instant::now()) {
+                if let Some((_bucket, group)) =
+                    self.batcher.push(bucket, item, self.pipeline.clock.now())
+                {
                     return self.complete(group);
                 }
                 Ok(())
@@ -1020,14 +1063,20 @@ impl<'p, B: Backend> FrameStream<'p, B> {
     /// returned.
     pub fn report(&self) -> ServeReport {
         let m = &self.pipeline.metrics;
+        let now = self.pipeline.clock.now();
         let busy_s = m.stage_sum_s("total");
-        let elapsed_s = m.run_elapsed_s();
+        let elapsed_s = m.run_elapsed_s_at(now);
         let done = self.emitted;
         ServeReport {
             backend: self.pipeline.backend_name().to_string(),
             frames: done,
             dropped: self.rejected.load(Ordering::Relaxed),
-            wall_fps: m.wall_fps(),
+            // The in-thread path has no sessions, hence no quota or SLO
+            // accounting (see the field docs).
+            dropped_quota: 0,
+            slo_miss: 0,
+            p99_latency_s: 0.0,
+            wall_fps: m.wall_fps_at(now),
             mean_latency_s: m.frame_latency_mean_s(),
             mean_energy_j: m.mean_energy_j(),
             modeled_kfps_per_watt: m.modeled_kfps_per_watt(),

@@ -45,6 +45,23 @@
 //! - **Failure is loud.** A worker error/panic fails the server: every
 //!   stream ends with one [`ServeError::Failed`], and
 //!   [`Server::shutdown`] returns the failure.
+//! - **Per-session QoS.** A session may declare a latency SLO
+//!   ([`SessionOptions::slo`]): its frames carry `accepted_at + slo`
+//!   deadlines, and a worker **flushes its micro-batch group early** when
+//!   the earliest such deadline arrives instead of waiting out
+//!   `BatchPolicy::max_wait` (deadline-aware flush); every emission is
+//!   scored against the SLO and recorded in the session's
+//!   `ServeReport::slo_miss` and submit→emit `p99_latency_s`. A session
+//!   may also carry an admission [`Quota`] (max in-flight + token-bucket
+//!   rate): quota-rejected `try_submit`s count the **distinct**
+//!   `ServeReport::dropped_quota` (never `dropped`, which stays pure
+//!   backpressure), while blocking `submit` waits for the quota to admit.
+//! - **Deterministic time.** Every deadline, wait, and timestamp reads
+//!   the server's [`super::clock::Clock`] ([`EngineConfig::clock`]), and
+//!   every wait is a clock-aware [`super::clock::Event`] (no
+//!   `thread::sleep` polling anywhere in this module). Under a manual
+//!   clock the QoS semantics above are provable with exact expectations —
+//!   the `rust/tests/qos.rs` gate.
 //!
 //! `serve_sharded(_with)` and `engine::run` are thin one-session wrappers
 //! over this module (a synthetic-sensor tenant feeding one session), which
@@ -62,10 +79,28 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::batcher::PushOutcome;
+use super::clock::{Clock, Event};
 use super::engine::{EngineConfig, FrameWorker};
 use super::pipeline::{FrameResult, ServeReport};
-use super::stats::{StageMetrics, WorkerStats};
+use super::stats::{LatencyHistogram, StageMetrics, WorkerStats};
 use crate::sensor::{Frame, VideoSource};
+
+// Wait caps for the event-driven loops. Every admission-relevant
+// transition (submit, consume, close, cancel, worker pop, failure, …)
+// notifies the server's activity [`Event`], so these are *backstops*
+// against a lost wakeup on the system clock — not poll intervals. Under a
+// manual clock they never expire on their own (time only moves on
+// `advance`), which is exactly what makes waits deterministic.
+/// Dispatcher post-sweep idle wait.
+const DISPATCH_IDLE_WAIT: Duration = Duration::from_millis(20);
+/// Dispatcher warmup-hold re-check.
+const WARMUP_POLL: Duration = Duration::from_millis(100);
+/// Worker wait for its queue's first frame.
+const WORKER_IDLE_WAIT: Duration = Duration::from_millis(100);
+/// Dispatcher wait while every alive worker queue is full.
+const PLACE_WAIT: Duration = Duration::from_millis(2);
+/// Blocking-submit re-check while an in-flight quota is saturated.
+const QUOTA_RECHECK: Duration = Duration::from_millis(100);
 
 /// How serving machinery failures surface to session holders — never as a
 /// panic (see the module invariants).
@@ -110,6 +145,75 @@ fn recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
+/// Per-session admission quota: a cap on frames in flight plus an
+/// optional token-bucket rate limit. Quota rejections are a *policy*
+/// outcome, counted in the distinct `ServeReport::dropped_quota` — never
+/// in `dropped`, which stays pure queue-full backpressure.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quota {
+    /// Max frames submitted but not yet taken off the session's stream
+    /// (`0` = unlimited). Bounds one tenant's footprint across queue +
+    /// workers + reassembly regardless of how fast it submits.
+    pub max_inflight: usize,
+    /// Sustained admission rate in frames/second (`0.0` = unlimited),
+    /// enforced by a token bucket on the serving clock.
+    pub rate_fps: f64,
+    /// Token-bucket burst capacity (effective only with `rate_fps > 0`;
+    /// clamped to >= 1). The bucket starts full, so a session may burst
+    /// this many frames before the rate binds.
+    pub burst: usize,
+}
+
+impl Quota {
+    /// No quota (the default): admission bounded only by the submission
+    /// queue and the dispatch window.
+    pub fn unlimited() -> Self {
+        Quota { max_inflight: 0, rate_fps: 0.0, burst: 0 }
+    }
+
+    /// In-flight cap only.
+    pub fn inflight(max: usize) -> Self {
+        Quota { max_inflight: max, ..Quota::unlimited() }
+    }
+
+    /// Token-bucket rate only.
+    pub fn rate(fps: f64, burst: usize) -> Self {
+        Quota { max_inflight: 0, rate_fps: fps.max(0.0), burst: burst.max(1) }
+    }
+
+    /// Combine an in-flight cap with this quota's rate.
+    pub fn with_inflight(mut self, max: usize) -> Self {
+        self.max_inflight = max;
+        self
+    }
+
+    /// Whether this quota never binds (the [`Quota::unlimited`] default).
+    pub fn is_unlimited(&self) -> bool {
+        self.max_inflight == 0 && self.rate_fps <= 0.0
+    }
+}
+
+impl Default for Quota {
+    fn default() -> Self {
+        Quota::unlimited()
+    }
+}
+
+/// Which quota denied an admission, and (for the rate bucket) when to
+/// retry.
+enum QuotaDenied {
+    InFlight,
+    Rate { retry_at: Instant },
+}
+
+/// Token-bucket state for [`Quota::rate_fps`], refilled lazily on the
+/// serving clock.
+#[derive(Debug)]
+struct TokenBucket {
+    tokens: f64,
+    last_refill: Instant,
+}
+
 /// Knobs of one serving session.
 #[derive(Debug, Clone)]
 pub struct SessionOptions {
@@ -127,11 +231,28 @@ pub struct SessionOptions {
     /// undrained results). `0` derives a default from the server topology
     /// ([`EngineConfig::effective_window`]).
     pub window: usize,
+    /// Latency SLO on **submit→emit** time. Frames from this session
+    /// carry `accepted_at + slo` deadlines: a worker flushes its
+    /// micro-batch group early when the earliest such deadline arrives
+    /// (overriding `BatchPolicy::max_wait`), and emissions later than the
+    /// SLO count the session's `ServeReport::slo_miss`.
+    pub slo: Option<Duration>,
+    /// Admission quota (see [`Quota`]). `try_submit` rejections under it
+    /// return [`PushOutcome::Quota`] and count `dropped_quota`; blocking
+    /// `submit` waits for the quota to admit.
+    pub quota: Quota,
 }
 
 impl Default for SessionOptions {
     fn default() -> Self {
-        SessionOptions { name: String::new(), queue_depth: 8, weight: 1, window: 0 }
+        SessionOptions {
+            name: String::new(),
+            queue_depth: 8,
+            weight: 1,
+            window: 0,
+            slo: None,
+            quota: Quota::unlimited(),
+        }
     }
 }
 
@@ -155,6 +276,18 @@ impl SessionOptions {
         self.window = window;
         self
     }
+
+    /// Declare a submit→emit latency SLO (see [`SessionOptions::slo`]).
+    pub fn with_slo(mut self, slo: Duration) -> Self {
+        self.slo = Some(slo);
+        self
+    }
+
+    /// Attach an admission quota (see [`Quota`]).
+    pub fn with_quota(mut self, quota: Quota) -> Self {
+        self.quota = quota;
+        self
+    }
 }
 
 /// Per-session running totals, accumulated by the reassembler at emission
@@ -168,6 +301,10 @@ struct SessionAccum {
     latency_sum: f64,
     kept_sum: f64,
     batch_sum: f64,
+    /// Emissions later than the session's SLO (0 without an SLO).
+    slo_miss: u64,
+    /// Submit→emit latency distribution (p99 in the report).
+    session_latency: LatencyHistogram,
     first_emit: Option<Instant>,
     last_emit: Option<Instant>,
     /// Every frame the session submitted before closing was emitted.
@@ -181,6 +318,10 @@ struct SessionShared {
     name: String,
     weight: u32,
     window: usize,
+    /// Latency SLO on submit→emit time ([`SessionOptions::slo`]).
+    slo: Option<Duration>,
+    /// Admission quota ([`SessionOptions::quota`]).
+    quota: Quota,
     /// Frames accepted into the submission queue.
     submitted: AtomicU64,
     /// Frames handed to workers (dispatcher mirror).
@@ -191,6 +332,11 @@ struct SessionShared {
     consumed: AtomicU64,
     /// `try_submit` rejections (the session's `ServeReport::dropped`).
     rejected: AtomicU64,
+    /// Quota rejections (the session's `ServeReport::dropped_quota` —
+    /// policy, kept distinct from backpressure `rejected`).
+    rejected_quota: AtomicU64,
+    /// Token-bucket state for [`Quota::rate_fps`].
+    bucket: Mutex<TokenBucket>,
     /// The stream side was dropped: discard this session's frames.
     canceled: AtomicBool,
     accum: Mutex<SessionAccum>,
@@ -198,7 +344,13 @@ struct SessionShared {
 
 impl SessionAccum {
     /// Build a [`ServeReport`] from one consistent snapshot of the totals.
-    fn to_report(&self, dropped: u64, backend: &str, workers: usize) -> ServeReport {
+    fn to_report(
+        &self,
+        dropped: u64,
+        dropped_quota: u64,
+        backend: &str,
+        workers: usize,
+    ) -> ServeReport {
         let frames = self.frames;
         let div = |sum: f64| if frames > 0 { sum / frames as f64 } else { 0.0 };
         let span = match (self.first_emit, self.last_emit) {
@@ -210,6 +362,9 @@ impl SessionAccum {
             backend: backend.to_string(),
             frames,
             dropped,
+            dropped_quota,
+            slo_miss: self.slo_miss,
+            p99_latency_s: self.session_latency.quantile(0.99),
             wall_fps: if span > 0.0 { frames as f64 / span } else { 0.0 },
             mean_latency_s: div(self.latency_sum),
             mean_energy_j: mean_energy,
@@ -231,12 +386,73 @@ impl SessionShared {
     }
 
     fn report(&self, backend: &str, workers: usize) -> ServeReport {
-        self.snapshot().to_report(self.rejected.load(Ordering::Relaxed), backend, workers)
+        self.snapshot().to_report(
+            self.rejected.load(Ordering::Relaxed),
+            self.rejected_quota.load(Ordering::Relaxed),
+            backend,
+            workers,
+        )
+    }
+
+    /// Take one admission slot under the session quota. On success a rate
+    /// token (if any) has been consumed — call
+    /// [`SessionShared::refund_token`] if the subsequent enqueue fails, so
+    /// a frame that never entered the system does not burn budget.
+    fn admit_quota(&self, clock: &Clock) -> std::result::Result<(), QuotaDenied> {
+        if self.quota.is_unlimited() {
+            return Ok(());
+        }
+        if self.quota.max_inflight > 0 {
+            let inflight = self
+                .submitted
+                .load(Ordering::Relaxed)
+                .saturating_sub(self.consumed.load(Ordering::Relaxed));
+            if inflight >= self.quota.max_inflight as u64 {
+                return Err(QuotaDenied::InFlight);
+            }
+        }
+        if self.quota.rate_fps > 0.0 {
+            let burst = self.quota.burst.max(1) as f64;
+            let mut b = recover(&self.bucket);
+            let now = clock.now();
+            let dt = now.saturating_duration_since(b.last_refill).as_secs_f64();
+            b.last_refill = now;
+            b.tokens = (b.tokens + dt * self.quota.rate_fps).min(burst);
+            if b.tokens < 1.0 {
+                let wait_s = (1.0 - b.tokens) / self.quota.rate_fps;
+                return Err(QuotaDenied::Rate { retry_at: now + Duration::from_secs_f64(wait_s) });
+            }
+            b.tokens -= 1.0;
+        }
+        Ok(())
+    }
+
+    /// Return the rate token consumed by a successful
+    /// [`SessionShared::admit_quota`] whose enqueue then failed.
+    fn refund_token(&self) {
+        if self.quota.rate_fps > 0.0 {
+            let mut b = recover(&self.bucket);
+            b.tokens = (b.tokens + 1.0).min(self.quota.burst.max(1) as f64);
+        }
     }
 }
 
-/// A frame tagged with its session and per-session sequence number.
-type Job = (u64, u64, Frame);
+/// A frame in the session submission queue, stamped with its admission
+/// time (the clock origin of SLO deadlines and submit→emit latency).
+type Submitted = (Frame, Instant);
+
+/// A dispatched frame: session + per-session sequence number, the
+/// admission timestamp, and — for SLO sessions — the completion deadline
+/// (`accepted_at + slo`) the worker's deadline-aware flush honors.
+struct Job {
+    session: u64,
+    seq: u64,
+    accepted_at: Instant,
+    /// `Some` only for SLO sessions: the micro-batch group holding this
+    /// frame flushes no later than this instant.
+    deadline: Option<Instant>,
+    frame: Frame,
+}
 
 /// What a worker thread hands back on clean exit (metrics + utilization +
 /// backend identity), or the failure message that must fail the server.
@@ -250,8 +466,17 @@ type FinalOutcome = std::result::Result<(ServeReport, StageMetrics), String>;
 enum Msg {
     /// Worker finished warmup and is accepting frames.
     Ready { backend: &'static str },
-    /// One processed frame.
-    Result { session: u64, seq: u64, result: FrameResult, iou: f64, correct: bool },
+    /// One processed frame (`accepted_at` = submission-queue admission
+    /// time, so the reassembler can score submit→emit latency and SLO
+    /// misses on the serving clock).
+    Result {
+        session: u64,
+        seq: u64,
+        accepted_at: Instant,
+        result: FrameResult,
+        iou: f64,
+        correct: bool,
+    },
     /// No more frames will be dispatched for this session; exactly
     /// `dispatched` results are expected.
     SessionDone { session: u64, dispatched: u64 },
@@ -269,16 +494,18 @@ enum Msg {
 /// Dispatcher-side session state.
 struct DispatchEntry {
     shared: Arc<SessionShared>,
-    rx: Receiver<Frame>,
+    rx: Receiver<Submitted>,
     dispatched: u64,
     done_sent: bool,
 }
 
-/// Reassembler-side session state.
+/// Reassembler-side session state. Pending tuples carry the frame's
+/// admission timestamp so in-order emission can score submit→emit latency
+/// and SLO misses.
 struct ReasmState {
     shared: Arc<SessionShared>,
     out: Option<SyncSender<FrameResult>>,
-    pending: BTreeMap<u64, (FrameResult, f64, bool)>,
+    pending: BTreeMap<u64, (FrameResult, f64, bool, Instant)>,
     next_emit: u64,
     emitted: u64,
     expected: Option<u64>,
@@ -295,6 +522,15 @@ struct Registry {
 /// State shared by the server handle, its threads, and session handles.
 struct ServerCore {
     cfg: EngineConfig,
+    /// The serving clock (mirrors `cfg.clock`; every thread reads it).
+    clock: Clock,
+    /// The one wait/notify cell every event-driven loop blocks on:
+    /// submissions, consumptions, worker-queue pops, session lifecycle,
+    /// readiness, and failure all notify it. One cell keeps the wakeup
+    /// graph trivially complete (no transition can miss a waiter) at the
+    /// cost of some spurious wakeups — the right trade at worker-count
+    /// scale.
+    activity: Event,
     n_workers: usize,
     default_window: usize,
     ready: AtomicBool,
@@ -328,6 +564,8 @@ impl ServerCore {
         drop(f);
         self.failed.store(true, Ordering::Relaxed);
         self.abort.store(true, Ordering::Relaxed);
+        // Every blocked loop must observe the failure promptly.
+        self.activity.notify();
     }
 }
 
@@ -365,34 +603,57 @@ impl ServerWatch {
 /// thread). Dropping it closes the session's input — already-submitted
 /// frames still drain through the stream.
 pub struct SessionSubmitter {
-    tx: Option<SyncSender<Frame>>,
+    tx: Option<SyncSender<Submitted>>,
     shared: Arc<SessionShared>,
     core: Arc<ServerCore>,
 }
 
 impl SessionSubmitter {
     /// Blocking submission under backpressure: waits while the session
-    /// queue is full, errs if the session/server is closed or failed.
+    /// queue is full **or the session's admission [`Quota`] is
+    /// exhausted** (an in-flight slot frees when the consumer drains; a
+    /// rate token refills with the serving clock), errs if the
+    /// session/server is closed or failed. Blocking callers never count
+    /// `dropped_quota` — that counter is the non-blocking
+    /// [`SessionSubmitter::try_submit`] rejection record.
     ///
     /// `submitted` is incremented **before** the send: a graceful
     /// shutdown finalizes a session only once `dispatched` has caught up
     /// with `submitted`, so a frame this method accepted can never be
     /// silently discarded by a racing shutdown sweep.
     pub fn submit(&self, frame: Frame) -> std::result::Result<(), ServeError> {
-        if let Some(msg) = self.core.failure_msg() {
-            return Err(ServeError::Failed(msg));
-        }
-        if self.core.closing.load(Ordering::Relaxed)
-            || self.shared.canceled.load(Ordering::Relaxed)
-        {
-            return Err(ServeError::Closed);
-        }
         let Some(tx) = &self.tx else { return Err(ServeError::Closed) };
+        loop {
+            // Generation before the predicate checks: a state change
+            // between check and wait ends the wait immediately.
+            let gen = self.core.activity.generation();
+            if let Some(msg) = self.core.failure_msg() {
+                return Err(ServeError::Failed(msg));
+            }
+            if self.core.closing.load(Ordering::Relaxed)
+                || self.shared.canceled.load(Ordering::Relaxed)
+            {
+                return Err(ServeError::Closed);
+            }
+            match self.shared.admit_quota(&self.core.clock) {
+                Ok(()) => break,
+                Err(QuotaDenied::InFlight) => {
+                    self.core.activity.wait_for(gen, QUOTA_RECHECK);
+                }
+                Err(QuotaDenied::Rate { retry_at }) => {
+                    self.core.activity.wait_until(gen, retry_at);
+                }
+            }
+        }
         self.shared.submitted.fetch_add(1, Ordering::Relaxed);
-        match tx.send(frame) {
-            Ok(()) => Ok(()),
+        match tx.send((frame, self.core.clock.now())) {
+            Ok(()) => {
+                self.core.activity.notify();
+                Ok(())
+            }
             Err(_) => {
                 self.shared.submitted.fetch_sub(1, Ordering::Relaxed);
+                self.shared.refund_token();
                 match self.core.failure_msg() {
                     Some(msg) => Err(ServeError::Failed(msg)),
                     None => Err(ServeError::Closed),
@@ -403,7 +664,10 @@ impl SessionSubmitter {
 
     /// Non-blocking submission; [`PushOutcome::Full`] counts as a
     /// rejection in the session's `ServeReport::dropped` (the sensor
-    /// backpressure contract of the batch-job API).
+    /// backpressure contract of the batch-job API), while
+    /// [`PushOutcome::Quota`] — an admission-[`Quota`] rejection — counts
+    /// the **distinct** `ServeReport::dropped_quota`, so policy drops can
+    /// never masquerade as backpressure.
     pub fn try_submit(&self, frame: Frame) -> PushOutcome {
         if self.core.closing.load(Ordering::Relaxed)
             || self.core.failed.load(Ordering::Relaxed)
@@ -412,17 +676,26 @@ impl SessionSubmitter {
             return PushOutcome::Closed;
         }
         let Some(tx) = &self.tx else { return PushOutcome::Closed };
+        if self.shared.admit_quota(&self.core.clock).is_err() {
+            self.shared.rejected_quota.fetch_add(1, Ordering::Relaxed);
+            return PushOutcome::Quota;
+        }
         // Pre-increment for the same shutdown-race reason as `submit`.
         self.shared.submitted.fetch_add(1, Ordering::Relaxed);
-        match tx.try_send(frame) {
-            Ok(()) => PushOutcome::Queued,
+        match tx.try_send((frame, self.core.clock.now())) {
+            Ok(()) => {
+                self.core.activity.notify();
+                PushOutcome::Queued
+            }
             Err(TrySendError::Full(_)) => {
                 self.shared.submitted.fetch_sub(1, Ordering::Relaxed);
+                self.shared.refund_token();
                 self.shared.rejected.fetch_add(1, Ordering::Relaxed);
                 PushOutcome::Full
             }
             Err(TrySendError::Disconnected(_)) => {
                 self.shared.submitted.fetch_sub(1, Ordering::Relaxed);
+                self.shared.refund_token();
                 PushOutcome::Closed
             }
         }
@@ -432,6 +705,16 @@ impl SessionSubmitter {
     /// stream ends once everything already submitted has been emitted.
     pub fn close(&mut self) {
         self.tx = None;
+        // The dispatcher finalizes the session on the hung-up queue.
+        self.core.activity.notify();
+    }
+}
+
+impl Drop for SessionSubmitter {
+    fn drop(&mut self) {
+        // Dropping the sender closes the session's input; wake the
+        // dispatcher so it observes the hang-up without a timeout.
+        self.core.activity.notify();
     }
 }
 
@@ -456,6 +739,9 @@ impl SessionStream {
             match self.rx.recv_timeout(Duration::from_millis(100)) {
                 Ok(r) => {
                     self.shared.consumed.fetch_add(1, Ordering::Relaxed);
+                    // A drain opens the dispatch window (and any in-flight
+                    // quota): wake the dispatcher and blocked submitters.
+                    self.core.activity.notify();
                     return Some(Ok(r));
                 }
                 // Quiet channel: keep waiting unless the server failed
@@ -516,6 +802,8 @@ impl Drop for SessionStream {
         if !self.finished && !recover(&self.shared.accum).complete {
             self.shared.canceled.store(true, Ordering::Relaxed);
         }
+        // Wake the dispatcher to sweep the canceled session promptly.
+        self.core.activity.notify();
     }
 }
 
@@ -629,7 +917,11 @@ impl Server {
     {
         let n_workers = cfg.workers.max(1);
         let default_window = cfg.effective_window();
+        let clock = cfg.clock.clone();
+        let activity = clock.event();
         let core = Arc::new(ServerCore {
+            clock,
+            activity,
             n_workers,
             default_window,
             ready: AtomicBool::new(false),
@@ -681,7 +973,7 @@ impl Server {
         let id = self.core.next_session.fetch_add(1, Ordering::Relaxed);
         let requested = if opts.window > 0 { opts.window } else { self.core.default_window };
         let window = requested.max(1);
-        let (tx, rx) = mpsc::sync_channel::<Frame>(opts.queue_depth.max(1));
+        let (tx, rx) = mpsc::sync_channel::<Submitted>(opts.queue_depth.max(1));
         // Stream capacity == window: the dispatcher never lets more than
         // `window` frames sit between dispatch and the consumer, so the
         // reassembler's non-blocking forwards cannot overflow it.
@@ -691,10 +983,19 @@ impl Server {
             name: if opts.name.is_empty() { format!("session-{id}") } else { opts.name },
             weight: opts.weight.max(1),
             window,
+            slo: opts.slo,
+            quota: opts.quota,
             submitted: AtomicU64::new(0),
             dispatched: AtomicU64::new(0),
             consumed: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            rejected_quota: AtomicU64::new(0),
+            // The rate bucket starts full: a session may burst up to
+            // `quota.burst` frames before the sustained rate binds.
+            bucket: Mutex::new(TokenBucket {
+                tokens: opts.quota.burst.max(1) as f64,
+                last_refill: self.core.clock.now(),
+            }),
             canceled: AtomicBool::new(false),
             accum: Mutex::new(SessionAccum::default()),
         });
@@ -716,6 +1017,8 @@ impl Server {
             });
         }
         guard(&self.core.sessions, "session list")?.push(shared.clone());
+        // Wake the dispatcher/reassembler to adopt the new session.
+        self.core.activity.notify();
         Ok(Session {
             submitter: SessionSubmitter {
                 tx: Some(tx),
@@ -743,19 +1046,24 @@ impl Server {
     }
 
     /// Block until every worker is warm (or the server fails / `timeout`
-    /// elapses).
+    /// elapses on the serving clock). Event-driven: readiness and failure
+    /// both notify, so there is no polling latency — and under a manual
+    /// clock the timeout only expires if the test advances past it.
     pub fn wait_ready(&self, timeout: Duration) -> std::result::Result<(), ServeError> {
-        let t0 = Instant::now();
-        while !self.ready() {
+        let deadline = self.core.clock.now() + timeout;
+        loop {
+            let gen = self.core.activity.generation();
             if let Some(msg) = self.core.failure_msg() {
                 return Err(ServeError::Failed(msg));
             }
-            if t0.elapsed() > timeout {
+            if self.ready() {
+                return Ok(());
+            }
+            if self.core.clock.now() >= deadline {
                 return Err(ServeError::Failed("workers not ready within timeout".into()));
             }
-            std::thread::sleep(Duration::from_micros(500));
+            self.core.activity.wait_until(gen, deadline);
         }
-        Ok(())
     }
 
     /// Server-wide snapshot: per-session [`ServeReport`]s plus the
@@ -767,11 +1075,13 @@ impl Server {
         let mut rows = Vec::with_capacity(sessions.len());
         let mut agg = SessionAccum::default();
         let mut dropped = 0u64;
+        let mut dropped_quota = 0u64;
         for s in &sessions {
             // One snapshot per session: the row report and the aggregate
             // must agree even while the reassembler keeps accumulating.
             let a = s.snapshot();
             let s_dropped = s.rejected.load(Ordering::Relaxed);
+            let s_dropped_quota = s.rejected_quota.load(Ordering::Relaxed);
             agg.frames += a.frames;
             agg.iou_sum += a.iou_sum;
             agg.correct += a.correct;
@@ -779,7 +1089,13 @@ impl Server {
             agg.latency_sum += a.latency_sum;
             agg.kept_sum += a.kept_sum;
             agg.batch_sum += a.batch_sum;
+            // QoS accounting composes: the aggregate's SLO misses are by
+            // construction the per-session sum, and latency histograms
+            // merge exactly (bucket-wise addition).
+            agg.slo_miss += a.slo_miss;
+            agg.session_latency.merge(&a.session_latency);
             dropped += s_dropped;
+            dropped_quota += s_dropped_quota;
             rows.push(SessionStats {
                 id: s.id,
                 name: s.name.clone(),
@@ -791,16 +1107,17 @@ impl Server {
                     .dispatched
                     .load(Ordering::Relaxed)
                     .saturating_sub(s.consumed.load(Ordering::Relaxed)),
-                report: a.to_report(s_dropped, &backend, self.core.n_workers),
+                report: a.to_report(s_dropped, s_dropped_quota, &backend, self.core.n_workers),
             });
         }
         // The aggregate's wall clock spans the server's post-warmup
         // lifetime, not any one session's emission span.
         let t_ready = *recover(&self.core.t_ready);
-        let wall_s = t_ready.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+        let wall_s =
+            t_ready.map(|t| self.core.clock.seconds_since(t)).unwrap_or(0.0);
         agg.first_emit = t_ready;
         agg.last_emit = t_ready.map(|t| t + Duration::from_secs_f64(wall_s));
-        let aggregate = agg.to_report(dropped, &backend, self.core.n_workers);
+        let aggregate = agg.to_report(dropped, dropped_quota, &backend, self.core.n_workers);
         Ok(ServerStats { backend, workers: self.core.n_workers, aggregate, sessions: rows })
     }
 
@@ -817,6 +1134,7 @@ impl Server {
     /// without `shutdown` aborts instead of draining.
     pub fn shutdown(mut self) -> Result<(ServeReport, StageMetrics)> {
         self.core.closing.store(true, Ordering::Relaxed);
+        self.core.activity.notify();
         for h in self.handles.drain(..) {
             h.join().ok();
         }
@@ -836,6 +1154,7 @@ impl Drop for Server {
         // Dropped without shutdown: abort promptly rather than drain.
         self.core.closing.store(true, Ordering::Relaxed);
         self.core.abort.store(true, Ordering::Relaxed);
+        self.core.activity.notify();
         for h in self.handles.drain(..) {
             h.join().ok();
         }
@@ -846,8 +1165,12 @@ impl Drop for Server {
 /// **accepted**, then close it. Mirrors the batch-job sensor contract:
 /// idles until the server is warm (so warmup never inflates rejections),
 /// tries each produced frame once, and counts a full queue as a dropped
-/// frame (recorded in the session's `ServeReport::dropped`). Returns the
-/// accepted count.
+/// frame (recorded in the session's `ServeReport::dropped`; a quota
+/// rejection counts `dropped_quota` instead). Returns the accepted count.
+///
+/// Event-driven: readiness, queue drains, and quota refills all notify
+/// the server's activity event, so the sensor blocks instead of
+/// sleep-polling (the waits' timeouts are lost-wakeup backstops only).
 pub fn spawn_synthetic_sensor(
     submitter: SessionSubmitter,
     watch: ServerWatch,
@@ -860,18 +1183,26 @@ pub fn spawn_synthetic_sensor(
         let mut src = VideoSource::new(image_size, num_objects, seed);
         let mut accepted = 0u64;
         while accepted < num_frames {
+            let gen = watch.core.activity.generation();
             if watch.failed() || watch.closing() {
                 break;
             }
             if !watch.ready() {
-                std::thread::sleep(Duration::from_micros(500));
+                watch.core.activity.wait_for(gen, Duration::from_millis(5));
                 continue;
             }
             match submitter.try_submit(src.next_frame()) {
                 PushOutcome::Queued => accepted += 1,
                 // Real backpressure: the frame is dropped (counted by
-                // try_submit); yield briefly so the pool can drain.
-                PushOutcome::Full => std::thread::sleep(Duration::from_micros(200)),
+                // try_submit); wait for the pool to drain a slot.
+                PushOutcome::Full => {
+                    watch.core.activity.wait_for(gen, Duration::from_micros(200));
+                }
+                // Quota policy drop (counted as dropped_quota); wait for
+                // a token refill / in-flight drain.
+                PushOutcome::Quota => {
+                    watch.core.activity.wait_for(gen, Duration::from_millis(1));
+                }
                 PushOutcome::Closed => break,
             }
         }
@@ -882,6 +1213,52 @@ pub fn spawn_synthetic_sensor(
 
 // --- dispatcher ---------------------------------------------------------
 
+/// Weighted round-robin admission state — extracted from the dispatcher
+/// loop so the fairness invariant is property-testable without threads
+/// (`rust/tests/property.rs`): each sweep grants session `i` at most
+/// `weights[i]` admissions and starts from a rotating offset, so over any
+/// run of sweeps against backlogged sessions, session `i`'s admitted
+/// share tracks `w_i / Σw` within one round — a hot tenant cannot starve
+/// a small one.
+#[derive(Debug, Default)]
+pub struct WrrAdmission {
+    turn: usize,
+}
+
+impl WrrAdmission {
+    pub fn new() -> Self {
+        WrrAdmission { turn: 0 }
+    }
+
+    /// Sweeps completed so far (also the rotation offset of the next
+    /// sweep — the dispatcher reuses it to rotate worker tie-breaking).
+    pub fn turns(&self) -> usize {
+        self.turn
+    }
+
+    /// One admission sweep over `weights.len()` sessions: starting at the
+    /// rotating offset, call `admit(i)` up to `weights[i]` (min 1) times
+    /// per session, ending that session's turn the first time it returns
+    /// `false` (empty queue, window bound, canceled, fatal). Returns the
+    /// number of granted admissions and advances the rotation.
+    pub fn sweep(&mut self, weights: &[u32], mut admit: impl FnMut(usize) -> bool) -> u64 {
+        let n = weights.len();
+        let mut granted = 0u64;
+        for k in 0..n {
+            let i = (self.turn + k) % n;
+            for _ in 0..weights[i].max(1) {
+                if admit(i) {
+                    granted += 1;
+                } else {
+                    break;
+                }
+            }
+        }
+        self.turn = self.turn.wrapping_add(1);
+        granted
+    }
+}
+
 enum Placed {
     Worker,
     AllDead,
@@ -889,7 +1266,9 @@ enum Placed {
 }
 
 /// Place one job on the least-loaded alive worker (ties broken in
-/// rotation order), backing off briefly while every alive queue is full.
+/// rotation order). While every alive queue is full, wait on the activity
+/// event (each worker pop notifies it) instead of sleep-polling — stays
+/// abort-responsive, unlike a blocking send.
 fn place_job(
     mut job: Job,
     worker_txs: &[SyncSender<Job>],
@@ -900,6 +1279,9 @@ fn place_job(
 ) -> Placed {
     let n = worker_txs.len();
     loop {
+        // Generation before the placement attempt: a pop during the
+        // attempt ends the post-attempt wait immediately.
+        let gen = core.activity.generation();
         if core.abort.load(Ordering::Relaxed) {
             return Placed::Aborted;
         }
@@ -917,6 +1299,8 @@ fn place_job(
             match worker_txs[w].try_send(j) {
                 Ok(()) => {
                     core.inflight[w].fetch_add(1, Ordering::Relaxed);
+                    // Wake the worker blocked waiting for its queue.
+                    core.activity.notify();
                     return Placed::Worker;
                 }
                 Err(TrySendError::Full(back)) => j = back,
@@ -927,9 +1311,7 @@ fn place_job(
             }
         }
         job = j;
-        // Every alive queue is full: brief backpressure backoff, then
-        // re-rank (stays abort-responsive, unlike a blocking send).
-        std::thread::sleep(Duration::from_micros(100));
+        core.activity.wait_for(gen, PLACE_WAIT);
     }
 }
 
@@ -943,24 +1325,34 @@ fn finalize_entry(entry: &mut DispatchEntry, res_tx: &mpsc::Sender<Msg>) {
     }
 }
 
-/// Weighted round-robin admission over all open sessions, least-loaded
-/// sharding over the worker pool.
+/// Weighted round-robin admission over all open sessions
+/// ([`WrrAdmission`]), least-loaded sharding over the worker pool.
+/// Event-driven: an idle dispatcher blocks on the activity event, woken
+/// by submissions, consumptions, session lifecycle, and shutdown.
 fn dispatcher_loop(core: &ServerCore, worker_txs: Vec<SyncSender<Job>>, res_tx: mpsc::Sender<Msg>) {
     // Hold dispatch until every worker is warm (or the server is going
     // away) — warmup must not skew fairness toward the first session.
-    while !core.ready.load(Ordering::Relaxed)
-        && !core.abort.load(Ordering::Relaxed)
-        && !core.closing.load(Ordering::Relaxed)
-    {
-        std::thread::sleep(Duration::from_micros(500));
+    loop {
+        let gen = core.activity.generation();
+        if core.ready.load(Ordering::Relaxed)
+            || core.abort.load(Ordering::Relaxed)
+            || core.closing.load(Ordering::Relaxed)
+        {
+            break;
+        }
+        core.activity.wait_for(gen, WARMUP_POLL);
     }
     let n_workers = worker_txs.len();
     let mut entries: Vec<DispatchEntry> = Vec::new();
     let mut alive = vec![true; n_workers];
     let mut candidates: Vec<usize> = Vec::with_capacity(n_workers);
-    let mut rr = 0usize;
-    let mut idle_sweeps = 0u32;
-    'run: loop {
+    let mut weights: Vec<u32> = Vec::new();
+    let mut wrr = WrrAdmission::new();
+    loop {
+        // Activity generation *before* the sweep: any state change during
+        // it (submit, consume, close, …) ends the post-sweep wait
+        // immediately instead of being missed.
+        let sweep_gen = core.activity.generation();
         if core.abort.load(Ordering::Relaxed) {
             break;
         }
@@ -970,103 +1362,139 @@ fn dispatcher_loop(core: &ServerCore, worker_txs: Vec<SyncSender<Job>>, res_tx: 
         }
         let closing = core.closing.load(Ordering::Relaxed);
         let mut progressed = false;
-        let n_e = entries.len();
-        for k in 0..n_e {
-            let i = (rr + k) % n_e;
-            if entries[i].done_sent {
-                continue;
+        // `Some` ends the run after this sweep; `Some(true)` reports the
+        // dead pool first.
+        let mut fatal: Option<bool> = None;
+        weights.clear();
+        weights.extend(entries.iter().map(|e| e.shared.weight));
+        let rot = wrr.turns();
+        wrr.sweep(&weights, |i| {
+            if fatal.is_some() || core.abort.load(Ordering::Relaxed) {
+                return false;
             }
-            if entries[i].shared.canceled.load(Ordering::Relaxed) {
+            let entry = &mut entries[i];
+            if entry.done_sent {
+                return false;
+            }
+            if entry.shared.canceled.load(Ordering::Relaxed) {
                 // Mid-flight teardown: discard whatever the dead session
                 // still has queued and finalize it at its dispatch count.
-                while entries[i].rx.try_recv().is_ok() {}
-                finalize_entry(&mut entries[i], &res_tx);
+                while entry.rx.try_recv().is_ok() {}
+                finalize_entry(entry, &res_tx);
                 progressed = true;
-                continue;
+                return false;
             }
-            let quota = entries[i].shared.weight.max(1) as usize;
-            for _ in 0..quota {
-                let entry = &mut entries[i];
-                // Per-session dispatch window: a tenant that stops
-                // draining its stream stalls only its own admission.
-                let consumed = entry.shared.consumed.load(Ordering::Relaxed);
-                if entry.dispatched.saturating_sub(consumed) >= entry.shared.window as u64 {
-                    break;
-                }
-                match entry.rx.try_recv() {
-                    Ok(frame) => {
-                        let job = (entry.shared.id, entry.dispatched, frame);
-                        match place_job(job, &worker_txs, &mut alive, core, &mut candidates, rr) {
-                            Placed::Worker => {
-                                entry.dispatched += 1;
-                                entry.shared.dispatched.store(entry.dispatched, Ordering::Relaxed);
-                                core.total_dispatched.fetch_add(1, Ordering::Relaxed);
-                                progressed = true;
-                            }
-                            Placed::AllDead => {
-                                res_tx
-                                    .send(Msg::Failure {
-                                        error: "all workers died".to_string(),
-                                        worker_exit: false,
-                                    })
-                                    .ok();
-                                break 'run;
-                            }
-                            Placed::Aborted => break 'run,
-                        }
-                    }
-                    // Empty queue: during graceful shutdown that is the
-                    // end of the session's input — but only once every
-                    // frame a submit() already accepted has landed
-                    // (`dispatched` caught up with `submitted`), so a
-                    // racing submitter can never lose an accepted frame.
-                    Err(mpsc::TryRecvError::Empty) => {
-                        if closing {
+            // Per-session dispatch window: a tenant that stops draining
+            // its stream stalls only its own admission.
+            let consumed = entry.shared.consumed.load(Ordering::Relaxed);
+            if entry.dispatched.saturating_sub(consumed) >= entry.shared.window as u64 {
+                return false;
+            }
+            match entry.rx.try_recv() {
+                Ok((frame, accepted_at)) => {
+                    // SLO sessions stamp each job with its completion
+                    // deadline; the worker's deadline-aware flush honors
+                    // the earliest one in its group.
+                    let deadline = entry.shared.slo.map(|slo| accepted_at + slo);
+                    let job = Job {
+                        session: entry.shared.id,
+                        seq: entry.dispatched,
+                        accepted_at,
+                        deadline,
+                        frame,
+                    };
+                    match place_job(job, &worker_txs, &mut alive, core, &mut candidates, rot) {
+                        Placed::Worker => {
                             let entry = &mut entries[i];
-                            if entry.dispatched >= entry.shared.submitted.load(Ordering::Relaxed)
-                            {
-                                finalize_entry(entry, &res_tx);
-                            }
+                            entry.dispatched += 1;
+                            entry.shared.dispatched.store(entry.dispatched, Ordering::Relaxed);
+                            core.total_dispatched.fetch_add(1, Ordering::Relaxed);
+                            progressed = true;
+                            true
                         }
-                        break;
-                    }
-                    // Input side hung up (close or drop): everything
-                    // buffered was drained above, so the count is final.
-                    Err(mpsc::TryRecvError::Disconnected) => {
-                        finalize_entry(&mut entries[i], &res_tx);
-                        break;
+                        Placed::AllDead => {
+                            fatal = Some(true);
+                            false
+                        }
+                        Placed::Aborted => {
+                            fatal = Some(false);
+                            false
+                        }
                     }
                 }
+                // Empty queue: during graceful shutdown that is the end
+                // of the session's input — but only once every frame a
+                // submit() already accepted has landed (`dispatched`
+                // caught up with `submitted`), so a racing submitter can
+                // never lose an accepted frame.
+                Err(mpsc::TryRecvError::Empty) => {
+                    if closing
+                        && entry.dispatched >= entry.shared.submitted.load(Ordering::Relaxed)
+                    {
+                        finalize_entry(entry, &res_tx);
+                    }
+                    false
+                }
+                // Input side hung up (close or drop): everything buffered
+                // was drained above, so the count is final.
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    finalize_entry(entry, &res_tx);
+                    false
+                }
             }
+        });
+        match fatal {
+            Some(true) => {
+                res_tx
+                    .send(Msg::Failure {
+                        error: "all workers died".to_string(),
+                        worker_exit: false,
+                    })
+                    .ok();
+                break;
+            }
+            Some(false) => break,
+            None => {}
         }
         entries.retain(|e| !e.done_sent);
-        rr = rr.wrapping_add(1);
         if entries.is_empty() && closing && recover(&core.registry).new_dispatch.is_empty() {
             break;
         }
-        if progressed {
-            idle_sweeps = 0;
-        } else {
-            // 200µs → 2ms exponential idle backoff: admission stays snappy
-            // under load, while an idle long-lived server costs ~500
-            // wakeups/s instead of 5000.
-            idle_sweeps = idle_sweeps.saturating_add(1);
-            let sleep_us = (200u64 << idle_sweeps.min(4)).min(2000);
-            std::thread::sleep(Duration::from_micros(sleep_us));
+        if !progressed {
+            core.activity.wait_for(sweep_gen, DISPATCH_IDLE_WAIT);
         }
     }
     // Unblock any submitter stuck on a full queue (dropping the receivers
     // fails their sends gracefully), then close the worker queues so the
-    // pool drains and exits.
+    // pool drains and exits — and wake every event waiter so workers
+    // observe the hang-up without a timeout.
     drop(entries);
     drop(worker_txs);
+    core.activity.notify();
     res_tx.send(Msg::DispatcherExited).ok();
 }
 
 // --- worker -------------------------------------------------------------
 
+/// The batch-group flush deadline: first-frame arrival + `max_wait`,
+/// tightened by the earliest SLO deadline in the group — the
+/// **deadline-aware flush** that keeps a latency-bound frame from waiting
+/// out the full batching window behind an SLO-less policy. This is the
+/// queue-grouping form of the maturity rule whose lane-based counterpart
+/// is `MicroBatcher::push_with_deadline` — keep the two aligned.
+fn tighten(deadline: Instant, job_deadline: Option<Instant>) -> Instant {
+    match job_deadline {
+        Some(d) => deadline.min(d),
+        None => deadline,
+    }
+}
+
 /// One worker thread: construct the (possibly non-`Send`) frame worker
 /// in-thread, warm it up, then micro-batch the queue until it closes.
+/// All waits are event-driven on the serving clock: the dispatcher
+/// notifies per placement, and group top-up waits until the group's
+/// (possibly SLO-tightened) deadline — under a manual clock a group
+/// flushes exactly when the test advances past that deadline.
 fn worker_loop<W, F>(
     wid: usize,
     factory: &F,
@@ -1077,6 +1505,7 @@ fn worker_loop<W, F>(
     W: FrameWorker,
     F: Fn(usize) -> Result<W>,
 {
+    let clock = core.clock.clone();
     let patch_px = core.cfg.patch_px;
     let batch_policy = core.cfg.batch;
     let body = AssertUnwindSafe(|| -> WorkerOutcome {
@@ -1096,40 +1525,54 @@ fn worker_loop<W, F>(
         let mut busy = Duration::ZERO;
         let mut frames = 0u64;
         let max_batch = batch_policy.max_batch.max(1);
-        let mut tags: Vec<(u64, u64)> = Vec::with_capacity(max_batch);
+        let mut tags: Vec<(u64, u64, Instant)> = Vec::with_capacity(max_batch);
         let mut group: Vec<Frame> = Vec::with_capacity(max_batch);
         let mut closed = false;
         while !closed {
             tags.clear();
             group.clear();
-            // Block for the first frame of the group...
-            match rx.recv() {
-                Ok((session, seq, frame)) => {
-                    tags.push((session, seq));
-                    group.push(frame);
+            // Block for the first frame of the group (the dispatcher
+            // notifies the activity event after every placement).
+            let first = loop {
+                let gen = core.activity.generation();
+                match rx.try_recv() {
+                    Ok(job) => break Some(job),
+                    Err(mpsc::TryRecvError::Empty) => {
+                        core.activity.wait_for(gen, WORKER_IDLE_WAIT);
+                    }
+                    Err(mpsc::TryRecvError::Disconnected) => break None,
                 }
-                Err(_) => break,
-            }
-            t_first.get_or_insert_with(Instant::now);
-            // ...then top it up until max_batch or the deadline,
+            };
+            let Some(job) = first else { break };
+            // A pop freed a queue slot: wake the dispatcher's placement.
+            core.activity.notify();
+            t_first.get_or_insert_with(|| clock.now());
+            let mut group_deadline =
+                tighten(clock.now() + batch_policy.max_wait, job.deadline);
+            tags.push((job.session, job.seq, job.accepted_at));
+            group.push(job.frame);
+            // ...then top it up until max_batch or the group deadline,
             // whichever comes first. Frames from *any* session ride the
-            // same group — cross-session bucket-major amortization.
+            // same group — cross-session bucket-major amortization — and
+            // each joining SLO frame can only tighten the deadline.
             if max_batch > 1 {
-                let deadline = Instant::now() + batch_policy.max_wait;
-                while group.len() < max_batch {
-                    let remaining = deadline.saturating_duration_since(Instant::now());
-                    if remaining.is_zero() {
+                while group.len() < max_batch && !closed {
+                    if clock.now() >= group_deadline {
                         break;
                     }
-                    match rx.recv_timeout(remaining) {
-                        Ok((session, seq, frame)) => {
-                            tags.push((session, seq));
-                            group.push(frame);
+                    let gen = core.activity.generation();
+                    match rx.try_recv() {
+                        Ok(job) => {
+                            core.activity.notify();
+                            group_deadline = tighten(group_deadline, job.deadline);
+                            tags.push((job.session, job.seq, job.accepted_at));
+                            group.push(job.frame);
                         }
-                        Err(RecvTimeoutError::Timeout) => break,
-                        Err(RecvTimeoutError::Disconnected) => {
+                        Err(mpsc::TryRecvError::Empty) => {
+                            core.activity.wait_until(gen, group_deadline);
+                        }
+                        Err(mpsc::TryRecvError::Disconnected) => {
                             closed = true;
-                            break;
                         }
                     }
                 }
@@ -1138,10 +1581,12 @@ fn worker_loop<W, F>(
             // reference, results by value).
             let gts: Vec<_> = group.iter().map(|f| f.gt_mask(patch_px)).collect();
             let labels: Vec<usize> = group.iter().map(|f| f.label).collect();
-            let t0 = Instant::now();
+            let t0 = clock.now();
             let out = w.process_batch(&group);
-            busy += t0.elapsed();
+            busy += clock.now().saturating_duration_since(t0);
             core.inflight[wid].fetch_sub(group.len() as u64, Ordering::Relaxed);
+            // The pool has headroom again: wake blocked placement.
+            core.activity.notify();
             let rs = out.map_err(|e| {
                 format!(
                     "worker {wid}: batch of {} (first frame {}) failed: {e:#}",
@@ -1157,15 +1602,17 @@ fn worker_loop<W, F>(
                 ));
             }
             frames += rs.len() as u64;
-            for ((&(session, seq), r), (gt, &label)) in
+            for ((&(session, seq, accepted_at), r), (gt, &label)) in
                 tags.iter().zip(rs).zip(gts.iter().zip(&labels))
             {
                 let iou = r.mask.iou(gt);
                 let correct = r.predicted_class() == label;
-                res_tx.send(Msg::Result { session, seq, result: r, iou, correct }).ok();
+                res_tx
+                    .send(Msg::Result { session, seq, accepted_at, result: r, iou, correct })
+                    .ok();
             }
         }
-        let active_s = t_first.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+        let active_s = t_first.map(|t| clock.seconds_since(t)).unwrap_or(0.0);
         let busy_s = busy.as_secs_f64();
         let backend = w.backend_name();
         Ok((
@@ -1205,10 +1652,22 @@ struct Aggregate {
     correct: u64,
 }
 
-/// Emit one completed frame to its session: update the session accum and
-/// the server aggregate, then forward to the stream (non-blocking; a gone
-/// consumer cancels the session instead of stalling its neighbours).
-fn emit(state: &mut ReasmState, result: FrameResult, iou: f64, correct: bool, agg: &mut Aggregate) {
+/// Emit one completed frame to its session: update the session accum
+/// (including submit→emit latency and SLO-miss scoring on the serving
+/// clock) and the server aggregate, then forward to the stream
+/// (non-blocking; a gone consumer cancels the session instead of
+/// stalling its neighbours).
+fn emit(
+    state: &mut ReasmState,
+    result: FrameResult,
+    iou: f64,
+    correct: bool,
+    accepted_at: Instant,
+    clock: &Clock,
+    agg: &mut Aggregate,
+) {
+    let now = clock.now();
+    let session_latency = now.saturating_duration_since(accepted_at);
     {
         let mut a = recover(&state.shared.accum);
         a.frames += 1;
@@ -1218,7 +1677,13 @@ fn emit(state: &mut ReasmState, result: FrameResult, iou: f64, correct: bool, ag
         a.latency_sum += result.latency_s;
         a.kept_sum += result.mask.kept().max(1) as f64;
         a.batch_sum += result.batch_size as f64;
-        let now = Instant::now();
+        a.session_latency.record(session_latency.as_secs_f64());
+        // Strictly-greater: a frame emitted exactly at its deadline made
+        // the SLO (which is also what makes a deadline-aware flush under
+        // a frozen manual clock record zero misses — exactly assertable).
+        if state.shared.slo.is_some_and(|slo| session_latency > slo) {
+            a.slo_miss += 1;
+        }
         a.first_emit.get_or_insert(now);
         a.last_emit = Some(now);
     }
@@ -1283,8 +1748,11 @@ fn fail_server(
 }
 
 /// Strict per-session in-order reassembly, server failure detection, and
-/// the terminal aggregate.
+/// the terminal aggregate. Timestamps (warmup/stall timeouts, emission
+/// times, SLO scoring) live on the serving clock; the message-receive
+/// tick stays a real channel timeout so session adoption never stalls.
 fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
+    let clock = core.clock.clone();
     let warmup_timeout = Duration::from_secs_f64(core.cfg.warmup_timeout_s.max(0.1));
     let stall_timeout = Duration::from_secs_f64(core.cfg.stall_timeout_s.max(0.1));
     let tick = Duration::from_millis(100).min(stall_timeout);
@@ -1299,27 +1767,30 @@ fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
     let mut worker_exits = 0usize;
     let mut dispatcher_exited = false;
     let mut failure: Option<String> = None;
-    let t_start = Instant::now();
+    let t_start = clock.now();
     let mut t_ready: Option<Instant> = None;
-    let mut last_progress = Instant::now();
+    let mut last_progress = clock.now();
 
     loop {
         adopt_new_sessions(core, &mut states);
         match res_rx.recv_timeout(tick) {
             Ok(Msg::Ready { backend }) => {
-                last_progress = Instant::now();
+                last_progress = clock.now();
                 backend_name = backend;
                 *recover(&core.backend) = backend;
                 ready_count += 1;
                 if ready_count == n_workers {
-                    let now = Instant::now();
+                    let now = clock.now();
                     t_ready = Some(now);
                     *recover(&core.t_ready) = Some(now);
                     core.ready.store(true, Ordering::Relaxed);
+                    // Wake wait_ready callers, the dispatcher's warmup
+                    // hold, and idling sensors.
+                    core.activity.notify();
                 }
             }
-            Ok(Msg::Result { session, seq, result, iou, correct }) => {
-                last_progress = Instant::now();
+            Ok(Msg::Result { session, seq, accepted_at, result, iou, correct }) => {
+                last_progress = clock.now();
                 let mut overflow: Option<String> = None;
                 let mut finalized = false;
                 if !states.contains_key(&session) {
@@ -1331,10 +1802,10 @@ fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
                 // A canceled-and-removed session can still have results in
                 // flight; they fall on the floor by design.
                 if let Some(state) = states.get_mut(&session) {
-                    state.pending.insert(seq, (result, iou, correct));
-                    while let Some((r, i, c)) = state.pending.remove(&state.next_emit) {
+                    state.pending.insert(seq, (result, iou, correct, accepted_at));
+                    while let Some((r, i, c, at)) = state.pending.remove(&state.next_emit) {
                         state.next_emit += 1;
-                        emit(state, r, i, c, &mut agg);
+                        emit(state, r, i, c, at, &clock, &mut agg);
                     }
                     // Backstop: the dispatcher never lets more than
                     // `window` frames sit between dispatch and the stream,
@@ -1393,7 +1864,7 @@ fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
             Err(RecvTimeoutError::Timeout) => {
                 if t_ready.is_none()
                     && failure.is_none()
-                    && t_start.elapsed() > warmup_timeout
+                    && clock.now().saturating_duration_since(t_start) > warmup_timeout
                 {
                     let msg = format!(
                         "workers failed to warm up within {:.1}s ({ready_count} of \
@@ -1406,7 +1877,7 @@ fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
                 if t_ready.is_some()
                     && failure.is_none()
                     && dispatched > agg.emitted
-                    && last_progress.elapsed() > stall_timeout
+                    && clock.now().saturating_duration_since(last_progress) > stall_timeout
                 {
                     let msg = format!(
                         "engine stalled: no progress for {:.1}s ({} of {} dispatched \
@@ -1444,11 +1915,20 @@ fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
         st.out = None;
     }
     per_worker.sort_by_key(|w| w.worker);
-    let wall_s = t_ready.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
-    let dropped: u64 = recover(&core.sessions)
-        .iter()
-        .map(|s| s.rejected.load(Ordering::Relaxed))
-        .sum();
+    let wall_s = t_ready.map(|t| clock.seconds_since(t)).unwrap_or(0.0);
+    // Per-session QoS totals compose into the aggregate: drop counters
+    // and SLO misses sum, latency histograms merge exactly.
+    let mut dropped = 0u64;
+    let mut dropped_quota = 0u64;
+    let mut slo_miss = 0u64;
+    let mut session_latency = LatencyHistogram::new();
+    for s in recover(&core.sessions).iter() {
+        dropped += s.rejected.load(Ordering::Relaxed);
+        dropped_quota += s.rejected_quota.load(Ordering::Relaxed);
+        let a = recover(&s.accum);
+        slo_miss += a.slo_miss;
+        session_latency.merge(&a.session_latency);
+    }
     let outcome = match failure {
         Some(error) => Err(error),
         None => Ok((
@@ -1456,6 +1936,9 @@ fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
                 backend: backend_name.to_string(),
                 frames: agg.emitted,
                 dropped,
+                dropped_quota,
+                slo_miss,
+                p99_latency_s: session_latency.quantile(0.99),
                 wall_fps: if wall_s > 0.0 { agg.emitted as f64 / wall_s } else { 0.0 },
                 mean_latency_s: merged.frame_latency_mean_s(),
                 mean_energy_j: merged.mean_energy_j(),
@@ -1558,6 +2041,85 @@ mod tests {
         assert_eq!(o.weight, 1, "weight clamps to >= 1");
         assert_eq!(o.queue_depth, 1, "queue depth clamps to >= 1");
         assert_eq!(o.window, 5);
+        assert_eq!(o.slo, None, "no SLO by default");
+        assert_eq!(o.quota, Quota::unlimited(), "no quota by default");
+        let o = o
+            .with_slo(Duration::from_millis(4))
+            .with_quota(Quota::rate(30.0, 0).with_inflight(8));
+        assert_eq!(o.slo, Some(Duration::from_millis(4)));
+        assert_eq!(o.quota.max_inflight, 8);
+        assert_eq!(o.quota.burst, 1, "rate burst clamps to >= 1");
+        assert!(!o.quota.is_unlimited());
+    }
+
+    /// Build the shared session state the quota unit tests poke directly.
+    fn shared_with_quota(quota: Quota, clock: &Clock) -> SessionShared {
+        SessionShared {
+            id: 0,
+            name: "q".into(),
+            weight: 1,
+            window: 4,
+            slo: None,
+            quota,
+            submitted: AtomicU64::new(0),
+            dispatched: AtomicU64::new(0),
+            consumed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            rejected_quota: AtomicU64::new(0),
+            bucket: Mutex::new(TokenBucket {
+                tokens: quota.burst.max(1) as f64,
+                last_refill: clock.now(),
+            }),
+            canceled: AtomicBool::new(false),
+            accum: Mutex::new(SessionAccum::default()),
+        }
+    }
+
+    #[test]
+    fn token_bucket_quota_is_deterministic_on_a_manual_clock() {
+        let (clock, manual) = Clock::manual();
+        let s = shared_with_quota(Quota::rate(2.0, 1), &clock);
+        assert!(s.admit_quota(&clock).is_ok(), "the bucket starts full (burst 1)");
+        assert!(
+            matches!(s.admit_quota(&clock), Err(QuotaDenied::Rate { .. })),
+            "no time passed, no token"
+        );
+        // 2 fps → exactly one token per 500 ms of (manual) time.
+        manual.advance(Duration::from_millis(500));
+        assert!(s.admit_quota(&clock).is_ok());
+        assert!(s.admit_quota(&clock).is_err());
+        // A refund restores the token without any time passing (the
+        // enqueue-failed path must not burn budget).
+        s.refund_token();
+        assert!(s.admit_quota(&clock).is_ok());
+    }
+
+    #[test]
+    fn inflight_quota_frees_on_consumption() {
+        let clock = Clock::system();
+        let s = shared_with_quota(Quota::inflight(2), &clock);
+        s.submitted.store(2, Ordering::Relaxed);
+        assert!(matches!(s.admit_quota(&clock), Err(QuotaDenied::InFlight)));
+        s.consumed.store(1, Ordering::Relaxed);
+        assert!(s.admit_quota(&clock).is_ok(), "a drained result frees an in-flight slot");
+    }
+
+    #[test]
+    fn wrr_sweep_grants_weight_per_turn_and_rotates() {
+        let mut wrr = WrrAdmission::new();
+        let weights = [2u32, 1];
+        let mut granted = vec![0u64; 2];
+        let g = wrr.sweep(&weights, |i| {
+            granted[i] += 1;
+            true
+        });
+        assert_eq!(g, 3, "one full sweep grants Σw admissions");
+        assert_eq!(granted, vec![2, 1]);
+        assert_eq!(wrr.turns(), 1);
+        // A session that reports empty ends its turn without charging the
+        // others.
+        let g = wrr.sweep(&weights, |i| i != 0);
+        assert_eq!(g, 1);
     }
 
     #[test]
@@ -1580,6 +2142,9 @@ mod tests {
         let report = session.report();
         assert_eq!(report.frames, 10);
         assert_eq!(report.backend, "custom");
+        assert_eq!(report.slo_miss, 0, "no SLO declared, no misses");
+        assert_eq!(report.dropped_quota, 0, "no quota declared, no policy drops");
+        assert!(report.p99_latency_s >= 0.0);
         drop(session);
         let stats = server.stats().expect("stats");
         assert_eq!(stats.aggregate.frames, 10);

@@ -26,7 +26,14 @@ impl StageMetrics {
 
     /// Mark the start of the serving run (for wall-clock throughput).
     pub fn start_run(&mut self) {
-        self.start = Some(Instant::now());
+        self.start_run_at(Instant::now());
+    }
+
+    /// Clock-parameterized [`StageMetrics::start_run`]: callers holding a
+    /// [`super::clock::Clock`] pass `clock.now()` so run timing lives on
+    /// the same timeline as every serving deadline.
+    pub fn start_run_at(&mut self, now: Instant) {
+        self.start = Some(now);
     }
 
     /// Record a stage latency in seconds. Steady-state recording is
@@ -68,14 +75,28 @@ impl StageMetrics {
 
     /// Wall-clock seconds since `start_run` (0.0 if never started).
     pub fn run_elapsed_s(&self) -> f64 {
-        self.start.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0)
+        self.run_elapsed_s_at(Instant::now())
+    }
+
+    /// [`StageMetrics::run_elapsed_s`] against a caller-supplied `now`
+    /// (the clock seam: pass `clock.now()`).
+    pub fn run_elapsed_s_at(&self, now: Instant) -> f64 {
+        self.start.map(|t| now.saturating_duration_since(t).as_secs_f64()).unwrap_or(0.0)
     }
 
     /// Wall-clock frames/s since `start_run`.
     pub fn wall_fps(&self) -> f64 {
-        match self.start {
-            Some(t0) if self.frames > 0 => self.frames as f64 / t0.elapsed().as_secs_f64(),
-            _ => 0.0,
+        self.wall_fps_at(Instant::now())
+    }
+
+    /// [`StageMetrics::wall_fps`] against a caller-supplied `now` (the
+    /// clock seam: pass `clock.now()`).
+    pub fn wall_fps_at(&self, now: Instant) -> f64 {
+        let elapsed = self.run_elapsed_s_at(now);
+        if self.frames > 0 && elapsed > 0.0 {
+            self.frames as f64 / elapsed
+        } else {
+            0.0
         }
     }
 
@@ -166,6 +187,92 @@ pub fn kfps_per_watt(mean_energy_j: f64) -> f64 {
     }
 }
 
+/// Fixed-footprint log-scale latency histogram for per-session tail
+/// accounting (`ServeReport::p99_latency_s`).
+///
+/// Sessions are long-lived and unbounded, so quantiles cannot keep every
+/// sample; this trades exactness for a constant 1 KiB of state: bucket 0
+/// holds everything below 1 µs, then 16 buckets per decade
+/// (each ~15.5% wide) up to ~100 s. Quantiles report the **lower bound**
+/// of the hit bucket, so the estimate never exaggerates a tail. Merging
+/// histograms (cross-session aggregate) is exact bucket-wise addition.
+#[derive(Debug, Clone, Copy)]
+pub struct LatencyHistogram {
+    counts: [u64; Self::BUCKETS],
+    total: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    const BUCKETS: usize = 128;
+    /// Lower edge of bucket 1 (bucket 0 is `[0, FLOOR_S)`).
+    const FLOOR_S: f64 = 1e-6;
+    /// Buckets per decade above the floor.
+    const PER_DECADE: f64 = 16.0;
+
+    pub fn new() -> Self {
+        LatencyHistogram { counts: [0; Self::BUCKETS], total: 0 }
+    }
+
+    fn bucket(seconds: f64) -> usize {
+        // NaN / negative / sub-floor all land in bucket 0.
+        if seconds.is_nan() || seconds <= Self::FLOOR_S {
+            return 0;
+        }
+        let b = 1 + ((seconds / Self::FLOOR_S).log10() * Self::PER_DECADE).floor() as usize;
+        b.min(Self::BUCKETS - 1)
+    }
+
+    /// Lower bound of a bucket (0.0 for bucket 0).
+    fn lower_bound(bucket: usize) -> f64 {
+        if bucket == 0 {
+            0.0
+        } else {
+            Self::FLOOR_S * 10f64.powf((bucket - 1) as f64 / Self::PER_DECADE)
+        }
+    }
+
+    /// Record one latency sample (seconds).
+    pub fn record(&mut self, seconds: f64) {
+        self.counts[Self::bucket(seconds)] += 1;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Quantile estimate (`q` in `[0, 1]`): the lower bound of the bucket
+    /// holding the rank-`ceil(q * n)` sample. 0.0 with no samples.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::lower_bound(i);
+            }
+        }
+        Self::lower_bound(Self::BUCKETS - 1)
+    }
+
+    /// Fold another histogram in (exact: bucket-wise addition).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
+}
+
 /// Per-worker utilization summary for a (possibly sharded) serving run.
 #[derive(Debug, Clone)]
 pub struct WorkerStats {
@@ -234,6 +341,56 @@ mod tests {
         );
         // Busy-time accounting stays wall-clock regardless.
         assert!((m.stage_sum_s("total") - 0.010).abs() < 1e-15);
+    }
+
+    #[test]
+    fn latency_histogram_quantiles_are_conservative() {
+        let mut h = LatencyHistogram::new();
+        assert_eq!(h.quantile(0.99), 0.0, "empty histogram reports 0");
+        for _ in 0..99 {
+            h.record(1e-3);
+        }
+        h.record(0.050);
+        assert_eq!(h.count(), 100);
+        // p50 sits in the 1 ms bucket; the estimate is that bucket's lower
+        // bound, so it never exceeds the true value.
+        let p50 = h.quantile(0.50);
+        assert!(p50 > 0.0 && p50 <= 1e-3, "p50 {p50}");
+        // p99 is still the 1 ms bucket (rank 99 of 100)…
+        assert!(h.quantile(0.99) <= 1e-3);
+        // …and p100 reaches the 50 ms outlier's bucket.
+        let p100 = h.quantile(1.0);
+        assert!(p100 > 1e-3 && p100 <= 0.050, "p100 {p100}");
+    }
+
+    #[test]
+    fn latency_histogram_handles_degenerate_samples_and_merges() {
+        let mut a = LatencyHistogram::new();
+        a.record(0.0);
+        a.record(-1.0);
+        a.record(f64::NAN);
+        assert_eq!(a.quantile(1.0), 0.0, "degenerate samples land in bucket 0");
+        let mut b = LatencyHistogram::new();
+        b.record(2e-3);
+        let mut merged = a;
+        merged.merge(&b);
+        assert_eq!(merged.count(), 4);
+        assert!(merged.quantile(1.0) > 0.0);
+        assert_eq!(merged.quantile(0.25), 0.0);
+    }
+
+    #[test]
+    fn clock_parameterized_run_timing_matches_supplied_now() {
+        let mut m = StageMetrics::new();
+        let t0 = Instant::now();
+        m.start_run_at(t0);
+        m.record_frame(1e-5, 10);
+        let now = t0 + std::time::Duration::from_secs(2);
+        assert!((m.run_elapsed_s_at(now) - 2.0).abs() < 1e-9);
+        assert!((m.wall_fps_at(now) - 0.5).abs() < 1e-9);
+        // Before the start (racing a manual-clock snapshot): clamps to 0.
+        assert_eq!(m.run_elapsed_s_at(t0), 0.0);
+        assert_eq!(m.wall_fps_at(t0), 0.0);
     }
 
     #[test]

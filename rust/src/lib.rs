@@ -54,6 +54,17 @@
 //! whichever backend is available and writes the machine-readable
 //! `BENCH_serve.json` trajectory.
 //!
+//! Serving time is **deterministic by construction**: every deadline,
+//! wait, and timestamp goes through the pluggable
+//! [`coordinator::clock::Clock`] seam (system clock in production, a
+//! step-controlled manual clock in tests — zero-cost for production
+//! callers), which is what makes the per-session **QoS** layer provable:
+//! latency SLOs with deadline-aware micro-batch flushes and per-session
+//! `slo_miss`/p99 accounting, plus admission quotas (max in-flight +
+//! token-bucket rate, rejected as the distinct `dropped_quota`). Knobs:
+//! `optovit serve --cameras K --slo-ms F --quota N --rate F`; gate:
+//! `cargo test --test qos` (sleep-free, exact expectations).
+//!
 //! ## Module map
 //!
 //! | module | role |
@@ -66,7 +77,7 @@
 //! | [`roi`] | patch masks and skip-ratio accounting |
 //! | [`sensor`] | synthetic CMOS sensor / video workload generator |
 //! | [`runtime`] | pluggable batch-first execution backends behind the `Backend` trait (`execute_batch` = N frames/call, natively in all three): `pjrt` (compiled HLO), `host` (pure-Rust reference), `sim` (host numerics + batch-aware modeled photonic timing), plus per-worker `BackendFactory` construction |
-//! | [`coordinator`] | the serving stack, generic over any backend: zero-allocation frame pipeline, bucket routing, bucket-major micro-batching (`MicroBatcher`), streaming `FrameStream` serve, and the session-oriented `Server` (multi-tenant `Session`s over one dispatcher → N micro-batching, optionally core-pinned workers → per-session in-order reassembly, fair weighted admission, per-session + aggregate reports) |
+//! | [`coordinator`] | the serving stack, generic over any backend: zero-allocation frame pipeline, bucket routing, deadline-aware bucket-major micro-batching (`MicroBatcher`), streaming `FrameStream` serve, the pluggable `Clock`/`Event` time seam, and the session-oriented `Server` (multi-tenant `Session`s over one dispatcher → N micro-batching, optionally core-pinned workers → per-session in-order reassembly, fair weighted admission, per-session QoS: latency SLOs + admission quotas, per-session + aggregate reports) |
 //! | [`baselines`] | Table-IV competitor accelerator models + platform refs |
 //! | [`cli`] | dependency-free argument parsing |
 //! | [`util`] | PRNG, stats, table formatting, property-test helpers |

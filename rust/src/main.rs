@@ -5,6 +5,7 @@
 //! optovit serve   [--backend pjrt|host|sim] [--frames N] [--workers W] [--queue D]
 //!                 [--batch B] [--batch-wait-us U] [--window W]
 //!                 [--cameras K] [--weights w0,w1,..] [--pin]
+//!                 [--slo-ms F] [--quota N] [--rate F]
 //!                 [--no-mask] [--seed S] [--objects K] [--artifacts DIR]
 //! optovit report  [--decomposed true]        # Fig. 8/9 energy+delay grid
 //! optovit roi     [--size 96|224]            # Fig. 10/11 operating points
@@ -23,13 +24,21 @@
 //! micro-batch lanes, admission is weighted round-robin (`--weights`),
 //! and the report shows each camera's session next to the aggregate.
 //! `--pin` best-effort pins each worker thread to a host core.
+//!
+//! Per-session QoS (session surface — using any of these with one camera
+//! routes the run through the server): `--slo-ms F` declares a
+//! submit→emit latency SLO on every camera session (deadline-aware lane
+//! flushes + `slo miss`/p99 columns), `--quota N` caps each session's
+//! frames in flight, `--rate F` token-bucket-limits each session's
+//! admission rate in frames/s (rejections count the distinct `q-drop`
+//! column, never `dropped`).
 
 use optovit::baselines;
 use optovit::cli::Args;
 use optovit::coordinator::batcher::BatchPolicy;
 use optovit::coordinator::engine::{serve_sharded, EngineConfig};
 use optovit::coordinator::pipeline::{serve, Pipeline, PipelineConfig, ServeOptions, ServeReport};
-use optovit::coordinator::server::{spawn_synthetic_sensor, Server, SessionOptions};
+use optovit::coordinator::server::{spawn_synthetic_sensor, Quota, Server, SessionOptions};
 use optovit::coordinator::stats::StageMetrics;
 use optovit::energy::AcceleratorModel;
 use optovit::photonics::fpv::FpvModel;
@@ -68,7 +77,8 @@ fn main() {
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     args.check_known(&[
         "frames", "seed", "objects", "workers", "queue", "batch", "batch-wait-us", "window",
-        "cameras", "weights", "pin", "no-mask", "backend", "artifacts",
+        "cameras", "weights", "pin", "slo-ms", "quota", "rate", "no-mask", "backend",
+        "artifacts",
     ])
     .map_err(anyhow::Error::msg)?;
     let frames = args.get_u64("frames", 50).map_err(anyhow::Error::msg)?;
@@ -81,6 +91,23 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let window = args.get_usize("window", 64).map_err(anyhow::Error::msg)?.max(1);
     let cameras = args.get_usize("cameras", 1).map_err(anyhow::Error::msg)?.max(1);
     let weights = args.get_usize_list("weights", &[]).map_err(anyhow::Error::msg)?;
+    // Per-session QoS knobs (applied to every camera session).
+    let slo = args.get_opt_duration_ms("slo-ms").map_err(anyhow::Error::msg)?;
+    let quota_inflight = args.get_usize("quota", 0).map_err(anyhow::Error::msg)?;
+    let quota_rate = args.get_f64("rate", 0.0).map_err(anyhow::Error::msg)?;
+    if quota_rate < 0.0 {
+        anyhow::bail!("--rate: must be a non-negative frames/s figure");
+    }
+    let mut quota = Quota::unlimited();
+    if quota_inflight > 0 {
+        quota = quota.with_inflight(quota_inflight);
+    }
+    if quota_rate > 0.0 {
+        // A one-second burst keeps the sustained rate the binding limit.
+        quota = Quota::rate(quota_rate, (quota_rate.ceil() as usize).max(1))
+            .with_inflight(quota.max_inflight);
+    }
+    let has_qos = slo.is_some() || !quota.is_unlimited();
     // Loud-failure discipline (same reason as check_known above): weights
     // only mean something with multiple sessions, and a longer list than
     // cameras is a miscount, not something to truncate silently.
@@ -116,8 +143,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             println!("warming up ({kind} backend, no artifacts needed)...")
         }
     }
-    if cameras > 1 {
-        return cmd_serve_cameras(&cfg, &factory, workers, cameras, &weights, &opts);
+    // QoS knobs are session options, so any of them routes the run
+    // through the session-oriented server — even for one camera.
+    if cameras > 1 || has_qos {
+        return cmd_serve_cameras(&cfg, &factory, workers, cameras, &weights, slo, quota, &opts);
     }
     let (r, metrics) = if workers > 1 {
         serve_sharded(&cfg, &factory, workers, &opts)?
@@ -136,13 +165,17 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 /// `optovit serve --cameras K`: K synthetic sensors → K sessions over one
 /// shared [`Server`] — the session-oriented serving surface, with frames
 /// from every camera interleaving through the shared worker pool and
-/// micro-batch lanes under weighted fair admission.
+/// micro-batch lanes under weighted fair admission, each session carrying
+/// the CLI's QoS options (`--slo-ms`, `--quota`, `--rate`).
+#[allow(clippy::too_many_arguments)]
 fn cmd_serve_cameras(
     cfg: &PipelineConfig,
     factory: &AnyFactory,
     workers: usize,
     cameras: usize,
     weights: &[usize],
+    slo: Option<std::time::Duration>,
+    quota: Quota,
     opts: &ServeOptions,
 ) -> anyhow::Result<()> {
     let ecfg = EngineConfig::for_serving(cfg, opts, workers);
@@ -159,11 +192,14 @@ fn cmd_serve_cameras(
     let mut cams = Vec::with_capacity(cameras);
     for cam in 0..cameras {
         let weight = weights.get(cam).copied().unwrap_or(1).max(1) as u32;
-        let session = server.session(
-            SessionOptions::named(format!("camera-{cam}"))
-                .with_weight(weight)
-                .with_queue_depth(opts.queue_depth),
-        )?;
+        let mut sopts = SessionOptions::named(format!("camera-{cam}"))
+            .with_weight(weight)
+            .with_queue_depth(opts.queue_depth)
+            .with_quota(quota);
+        if let Some(slo) = slo {
+            sopts = sopts.with_slo(slo);
+        }
+        let session = server.session(sopts)?;
         let (submitter, stream) = session.split();
         let sensor = spawn_synthetic_sensor(
             submitter,
@@ -176,8 +212,10 @@ fn cmd_serve_cameras(
         let drain = std::thread::spawn(move || stream.finish());
         cams.push((cam, weight, sensor, drain));
     }
-    let mut t =
-        Table::new(vec!["camera", "weight", "frames", "dropped", "fps", "latency", "batch", "IoU"]);
+    let mut t = Table::new(vec![
+        "camera", "weight", "frames", "dropped", "q-drop", "slo miss", "fps", "latency", "p99",
+        "batch", "IoU",
+    ]);
     for (cam, weight, sensor, drain) in cams {
         sensor.join().ok();
         let report = drain
@@ -188,8 +226,11 @@ fn cmd_serve_cameras(
             weight.to_string(),
             report.frames.to_string(),
             report.dropped.to_string(),
+            report.dropped_quota.to_string(),
+            report.slo_miss.to_string(),
             format!("{:.1}", report.wall_fps),
             si_time(report.mean_latency_s),
+            si_time(report.p99_latency_s),
             format!("{:.2}", report.mean_batch),
             format!("{:.3}", report.mean_mask_iou),
         ]);
@@ -208,6 +249,13 @@ fn print_serve_report(r: &ServeReport, metrics: &StageMetrics) {
     println!("workers              {}", r.workers);
     println!("frames processed     {}", r.frames);
     println!("frames dropped       {}", r.dropped);
+    if r.dropped_quota > 0 {
+        println!("quota rejections     {}", r.dropped_quota);
+    }
+    if r.slo_miss > 0 || r.p99_latency_s > 0.0 {
+        println!("SLO misses           {}", r.slo_miss);
+        println!("p99 session latency  {}", si_time(r.p99_latency_s));
+    }
     println!("wall throughput      {:.1} fps", r.wall_fps);
     println!(
         "mean latency         {}{}",

@@ -2,6 +2,14 @@
 //! reassembly under uneven worker latency, merged metrics accounting,
 //! routing stability under sharding, and failure paths that must fail the
 //! run instead of hanging the dispatcher.
+//!
+//! Wall-clock audit (the qos/clock PR): the sleeps in `MockWorker` are
+//! workload *shaping* (uneven latency, a stalled first frame), never
+//! synchronization — every assertion below is completion-based (exact
+//! frame counts, strict ordering, run-terminates bounds), so no test
+//! outcome depends on how long a sleep actually took. Timing-*semantics*
+//! tests (deadline flushes, SLO misses, quotas) live in
+//! `rust/tests/qos.rs` on a manual clock instead.
 
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};

@@ -1,8 +1,17 @@
-//! Property-based tests over the architecture simulator's invariants
-//! (proptest is unavailable offline; cases are generated with the crate's
+//! Property-based tests over the architecture simulator's invariants —
+//! plus the serving coordinator's scheduling invariants (weighted
+//! round-robin admission fairness, micro-batcher deadline bounds), which
+//! are pure state machines driven on an explicit timeline, so they
+//! property-test without threads or wall-clock sleeps. (proptest is
+//! unavailable offline; cases are generated with the crate's
 //! deterministic xorshift PRNG — failures print the seed/case).
 
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
 use optovit::arch::core::{CoreParams, OpticalCore};
+use optovit::coordinator::batcher::{BatchPolicy, MicroBatcher};
+use optovit::coordinator::server::WrrAdmission;
 use optovit::arch::mapping::MappingPlan;
 use optovit::arch::scheduler::{AttentionSchedule, Resource};
 use optovit::arch::workload::Workload;
@@ -13,6 +22,151 @@ use optovit::util::rng::Rng;
 use optovit::vit::{VitConfig, VitVariant};
 
 const CASES: usize = 120;
+
+/// Weighted round-robin admission fairness ([`WrrAdmission`] — the exact
+/// scheduler the server's dispatcher runs): for random weight vectors and
+/// deep backlogs, a backlogged session's admitted count after `s` sweeps
+/// is **exactly** `s * w_i` (a finite backlog caps at its size), so every
+/// session's admitted share is within one round of `w_i / Σw` — a hot
+/// tenant cannot starve a small one.
+#[test]
+fn prop_wrr_admission_share_within_one_round() {
+    let mut rng = Rng::new(0x5E55);
+    for case in 0..40 {
+        let n = rng.range(2, 7);
+        let weights: Vec<u32> = (0..n).map(|_| rng.range(1, 6) as u32).collect();
+        // Mostly deep backlogs, with some finite ones that exhaust
+        // mid-run (an exhausted session must not distort its neighbours).
+        let initial: Vec<u64> = (0..n)
+            .map(|_| if rng.chance(0.3) { rng.range(0, 40) as u64 } else { 1_000_000 })
+            .collect();
+        let mut backlog = initial.clone();
+        let mut admitted = vec![0u64; n];
+        let mut wrr = WrrAdmission::new();
+        for sweep in 1..=60u64 {
+            wrr.sweep(&weights, |i| {
+                if backlog[i] > 0 {
+                    backlog[i] -= 1;
+                    admitted[i] += 1;
+                    true
+                } else {
+                    false
+                }
+            });
+            for i in 0..n {
+                assert_eq!(
+                    admitted[i],
+                    (sweep * weights[i] as u64).min(initial[i]),
+                    "case {case} sweep {sweep} session {i} (w={}): \
+                     a backlogged session is granted exactly its weight per sweep",
+                    weights[i]
+                );
+            }
+        }
+        // Share form of the invariant, for the sessions that never
+        // exhausted: |admitted_i − total * w_i / Σw| ≤ w_i (one round).
+        let deep: Vec<usize> = (0..n).filter(|&i| initial[i] > 60 * 6).collect();
+        let total: u64 = deep.iter().map(|&i| admitted[i]).sum();
+        let sum_w: u64 = deep.iter().map(|&i| weights[i] as u64).sum();
+        for &i in &deep {
+            let fair = total as f64 * weights[i] as f64 / sum_w as f64;
+            assert!(
+                (admitted[i] as f64 - fair).abs() <= weights[i] as f64 + 1e-9,
+                "case {case} session {i}: admitted {} vs fair share {fair} (w={})",
+                admitted[i],
+                weights[i]
+            );
+        }
+    }
+}
+
+/// Flush every matured lane at `now` and forget its items; every flushed
+/// group respects `max_batch`.
+fn drain_matured(
+    b: &mut MicroBatcher<usize>,
+    now: Instant,
+    max_batch: usize,
+    held: &mut BTreeMap<usize, (Instant, Option<Instant>)>,
+    case: usize,
+) {
+    while let Some((_bucket, group)) = b.poll(now) {
+        assert!(
+            !group.is_empty() && group.len() <= max_batch,
+            "case {case}: flushed group of {} exceeds max_batch {max_batch}",
+            group.len()
+        );
+        for id in group {
+            held.remove(&id);
+        }
+    }
+}
+
+/// [`MicroBatcher`] under random push/advance sequences on an explicit
+/// manual timeline: it never emits a group larger than `max_batch`, and
+/// after polling at any time `now` it never holds a frame past
+/// `max_wait` — or past the frame's own SLO-derived deadline when that
+/// is tighter.
+#[test]
+fn prop_micro_batcher_bounds_batch_size_and_hold_time() {
+    let mut rng = Rng::new(0xBA7C4);
+    let buckets = [9usize, 18, 27, 36];
+    for case in 0..60 {
+        let max_batch = rng.range(1, 6);
+        let max_wait = Duration::from_micros(rng.range(1, 5000) as u64);
+        let mut b: MicroBatcher<usize> =
+            MicroBatcher::new(&buckets, BatchPolicy::batched(max_batch, max_wait));
+        let mut now = Instant::now();
+        // item id → (pushed_at, optional SLO deadline)
+        let mut held: BTreeMap<usize, (Instant, Option<Instant>)> = BTreeMap::new();
+        let mut next_id = 0usize;
+        for _ in 0..300 {
+            if rng.chance(0.6) {
+                let bucket = buckets[rng.below(buckets.len())];
+                let deadline = rng
+                    .chance(0.4)
+                    .then(|| now + Duration::from_micros(rng.range(1, 3000) as u64));
+                let id = next_id;
+                next_id += 1;
+                held.insert(id, (now, deadline));
+                if let Some((_bkt, group)) = b.push_with_deadline(bucket, id, now, deadline) {
+                    assert_eq!(
+                        group.len(),
+                        max_batch,
+                        "case {case}: a size flush is exactly max_batch"
+                    );
+                    for id in group {
+                        held.remove(&id);
+                    }
+                }
+            } else {
+                now += Duration::from_micros(rng.range(1, 4000) as u64);
+                drain_matured(&mut b, now, max_batch, &mut held, case);
+                // The bound: nothing still held is overdue at `now`.
+                for (id, (pushed, deadline)) in &held {
+                    assert!(
+                        now.duration_since(*pushed) < max_wait,
+                        "case {case}: item {id} held past max_wait {max_wait:?}"
+                    );
+                    if let Some(d) = deadline {
+                        assert!(
+                            now < *d,
+                            "case {case}: item {id} held past its SLO-derived deadline"
+                        );
+                    }
+                }
+            }
+            assert_eq!(b.pending(), held.len(), "case {case}: held-set bookkeeping diverged");
+        }
+        // End of stream: the forcing drain empties every lane.
+        while let Some((_bkt, group)) = b.flush_oldest() {
+            assert!(group.len() <= max_batch);
+            for id in group {
+                held.remove(&id);
+            }
+        }
+        assert!(b.is_empty() && held.is_empty(), "case {case}: frames left behind");
+    }
+}
 
 /// Every random MatMul mapping covers each (row, k-chunk, col-tile) cell
 /// exactly once with no slot collisions — the Fig. 6 invariant.

@@ -1,0 +1,286 @@
+//! Deterministic QoS gate — the serving stack's time-dependent semantics
+//! proven under a step-controlled [`ManualClock`], with **exact** (not
+//! threshold-fuzzy) expectations and **zero** `thread::sleep`-based
+//! synchronization (grep this file: there is no `sleep` anywhere; all
+//! blocking is channel receives and clock-event waits, and time moves
+//! only when a test calls `advance`):
+//!
+//! 1. deadline-aware flush: an SLO session's micro-batch lane flushes
+//!    **early** — exactly when the manual clock reaches the frame's
+//!    `accepted_at + slo` deadline, overriding a `BatchPolicy::max_wait`
+//!    of an hour — and records **no** `slo_miss`, while a no-SLO
+//!    neighbour on the same server still amortizes full batches;
+//! 2. a flush past the deadline records exactly one `slo_miss` per late
+//!    frame, and the server-wide aggregate `slo_miss` equals the
+//!    per-session sum;
+//! 3. admission quotas: quota-exceeded `try_submit`s return
+//!    [`PushOutcome::Quota`] and count the distinct `dropped_quota` —
+//!    never `dropped` — for both the in-flight cap and the token-bucket
+//!    rate (whose refill is driven purely by manual-clock advances).
+
+use std::time::Duration;
+
+use anyhow::Result;
+use optovit::coordinator::batcher::{BatchPolicy, BucketRouter, PushOutcome};
+use optovit::coordinator::clock::{Clock, ManualClock};
+use optovit::coordinator::engine::{EngineConfig, FrameWorker};
+use optovit::coordinator::pipeline::FrameResult;
+use optovit::coordinator::server::{Quota, Server, SessionOptions};
+use optovit::coordinator::StageMetrics;
+use optovit::sensor::{Frame, VideoSource};
+
+const PATCH_PX: usize = 16;
+
+/// Deterministic batch-aware worker: routes from the ground-truth mask
+/// and stamps each result with the size of the group it rode in, so
+/// per-session `mean_batch` shows exactly how the server grouped frames.
+struct BatchEchoWorker {
+    router: BucketRouter,
+    metrics: StageMetrics,
+}
+
+impl BatchEchoWorker {
+    fn new() -> Self {
+        BatchEchoWorker { router: BucketRouter::even(36, 4), metrics: StageMetrics::new() }
+    }
+
+    fn result(&mut self, frame: &Frame, batch_size: usize) -> FrameResult {
+        let mask = frame.gt_mask(PATCH_PX);
+        let kept = mask.kept().max(1);
+        let bucket = self.router.route(kept);
+        self.metrics.record_stage("total", 1e-4);
+        self.metrics.record_frame(1e-5, kept);
+        self.metrics.record_batch_size(batch_size);
+        let mut logits = vec![0.0f32; 10];
+        logits[frame.label % 10] = 1.0;
+        FrameResult {
+            frame_index: frame.index,
+            logits,
+            mask,
+            bucket,
+            modeled_energy_j: 1e-5,
+            latency_s: 1e-4,
+            batch_size,
+        }
+    }
+}
+
+impl FrameWorker for BatchEchoWorker {
+    fn process(&mut self, frame: &Frame) -> Result<FrameResult> {
+        Ok(self.result(frame, 1))
+    }
+
+    fn process_batch(&mut self, frames: &[Frame]) -> Result<Vec<FrameResult>> {
+        let n = frames.len().max(1);
+        Ok(frames.iter().map(|f| self.result(f, n)).collect())
+    }
+
+    fn take_metrics(&mut self) -> StageMetrics {
+        std::mem::take(&mut self.metrics)
+    }
+}
+
+/// One worker on a manual clock with a micro-batch policy whose
+/// `max_wait` is an hour: without deadline-aware flushes, a partial lane
+/// would only ever flush by filling to `max_batch`.
+fn manual_server(max_batch: usize) -> (Server, ManualClock) {
+    let (clock, manual) = Clock::manual();
+    let mut cfg = EngineConfig::new(1, PATCH_PX, 96);
+    cfg.clock = clock;
+    cfg.batch = BatchPolicy::batched(max_batch, Duration::from_secs(3600));
+    // Manual time never advances past these on its own; generous bounds
+    // keep test-driven advances from tripping them.
+    cfg.warmup_timeout_s = 24.0 * 3600.0;
+    cfg.stall_timeout_s = 24.0 * 3600.0;
+    let server = Server::start(|_wid| Ok(BatchEchoWorker::new()), cfg).expect("server");
+    // Blocks on the readiness notification — the manual deadline below is
+    // unreachable without an advance, so this cannot time out spuriously.
+    server.wait_ready(Duration::from_secs(3600)).expect("workers warm");
+    (server, manual)
+}
+
+/// Identical frame content with distinct indices: every submission routes
+/// to the same bucket, so grouping depends only on the server's batching
+/// policy, never on scene content.
+fn frames(n: u64) -> Vec<Frame> {
+    let template = VideoSource::new(96, 2, 42).next_frame();
+    (0..n)
+        .map(|i| {
+            let mut f = template.clone();
+            f.index = i;
+            f
+        })
+        .collect()
+}
+
+/// Gate 1: the SLO session's lane flushes exactly at its deadline (hours
+/// before `max_wait`) with no `slo_miss`, while the no-SLO neighbour
+/// amortizes a full batch of 4 on the same server.
+#[test]
+fn slo_lane_flushes_early_and_records_no_miss() {
+    const SLO: Duration = Duration::from_millis(10);
+    let (server, manual) = manual_server(4);
+    let mut bulk =
+        server.session(SessionOptions::named("bulk").with_queue_depth(8)).expect("bulk");
+    let mut slo = server
+        .session(SessionOptions::named("slo").with_queue_depth(8).with_slo(SLO))
+        .expect("slo");
+
+    // The bulk tenant fills a whole group: flushes by *count*, no time
+    // needed — batching still works with the clock frozen.
+    for f in frames(4) {
+        bulk.submit(f).expect("bulk submit");
+    }
+    for _ in 0..4 {
+        let r = (&mut bulk).next().expect("bulk result").expect("bulk ok");
+        assert_eq!(r.batch_size, 4, "the bulk group must amortize the full max_batch");
+    }
+
+    // The SLO tenant parks one frame in a lane. With max_wait = 1 h and
+    // max_batch = 4, nothing can flush it while the clock stands still…
+    slo.submit(frames(1).remove(0)).expect("slo submit");
+    assert_eq!(slo.report().frames, 0, "no flush may happen before the SLO deadline");
+
+    // …and one atomic advance to exactly the deadline flushes it alone.
+    manual.advance(SLO);
+    let r = (&mut slo).next().expect("slo result").expect("slo ok");
+    assert_eq!(r.batch_size, 1, "the deadline-aware flush must not wait for max_batch");
+
+    slo.close();
+    bulk.close();
+    let slo_report = slo.finish().expect("slo drain");
+    let bulk_report = bulk.finish().expect("bulk drain");
+    assert_eq!(slo_report.frames, 1);
+    assert_eq!(slo_report.slo_miss, 0, "emitted exactly at the deadline — not a miss");
+    assert_eq!(bulk_report.frames, 4);
+    assert_eq!(bulk_report.slo_miss, 0, "no SLO declared, no misses");
+    assert!((bulk_report.mean_batch - 4.0).abs() < 1e-12, "bulk mean_batch must be exactly 4");
+    assert_eq!(slo_report.dropped, 0);
+    assert_eq!(slo_report.dropped_quota, 0);
+
+    let (agg, _metrics) = server.shutdown().expect("shutdown");
+    assert_eq!(agg.frames, 5);
+    assert_eq!(agg.slo_miss, 0);
+}
+
+/// Gate 2: a flush past the deadline records exactly one miss per late
+/// frame, p99 reflects the late emission, and the aggregate `slo_miss`
+/// equals the per-session sum — live (`stats()`) and terminal.
+#[test]
+fn late_emissions_count_slo_misses_and_aggregate_equals_session_sum() {
+    let (server, manual) = manual_server(4);
+    let mut tight = server
+        .session(SessionOptions::named("tight").with_slo(Duration::from_millis(10)))
+        .expect("tight");
+    let mut loose = server
+        .session(SessionOptions::named("loose").with_slo(Duration::from_millis(20)))
+        .expect("loose");
+
+    tight.submit(frames(1).remove(0)).expect("tight submit");
+    loose.submit(frames(1).remove(0)).expect("loose submit");
+    // One atomic jump well past both deadlines: both frames emit at
+    // +50 ms on the manual timeline — 50 > 10 and 50 > 20, so exactly one
+    // miss each, regardless of how the worker grouped them.
+    manual.advance(Duration::from_millis(50));
+
+    tight.close();
+    loose.close();
+    let tight_report = tight.finish().expect("tight drain");
+    let loose_report = loose.finish().expect("loose drain");
+    assert_eq!(tight_report.frames, 1);
+    assert_eq!(loose_report.frames, 1);
+    assert_eq!(tight_report.slo_miss, 1, "a 50 ms emission misses a 10 ms SLO exactly once");
+    assert_eq!(loose_report.slo_miss, 1, "a 50 ms emission misses a 20 ms SLO exactly once");
+    assert!(
+        tight_report.p99_latency_s > 0.0 && tight_report.p99_latency_s <= 0.050 + 1e-9,
+        "p99 must reflect the late emission without exaggerating it (got {})",
+        tight_report.p99_latency_s
+    );
+
+    let stats = server.stats().expect("stats");
+    let session_sum: u64 = stats.sessions.iter().map(|s| s.report.slo_miss).sum();
+    assert_eq!(session_sum, 2);
+    assert_eq!(
+        stats.aggregate.slo_miss, session_sum,
+        "aggregate slo_miss must equal the per-session sum"
+    );
+
+    let (agg, _metrics) = server.shutdown().expect("shutdown");
+    assert_eq!(agg.slo_miss, 2, "the terminal aggregate keeps the same accounting");
+}
+
+/// Gate 3a: the in-flight cap. The third un-drained submission is a
+/// quota rejection — `dropped_quota`, not `dropped` — and draining the
+/// stream frees slots again.
+#[test]
+fn inflight_quota_rejections_count_dropped_quota_not_dropped() {
+    let (server, _manual) = manual_server(1);
+    let mut session = server
+        .session(
+            SessionOptions::named("capped")
+                .with_queue_depth(8)
+                .with_quota(Quota::inflight(2)),
+        )
+        .expect("session");
+
+    let mut fs = frames(4).into_iter();
+    assert_eq!(session.try_submit(fs.next().unwrap()), PushOutcome::Queued);
+    assert_eq!(session.try_submit(fs.next().unwrap()), PushOutcome::Queued);
+    // In-flight = submitted − consumed = 2: the cap binds no matter how
+    // fast the worker ran, because nothing was drained yet.
+    assert_eq!(
+        session.try_submit(fs.next().unwrap()),
+        PushOutcome::Quota,
+        "the third un-drained submission must be a quota rejection"
+    );
+    {
+        let report = session.report();
+        assert_eq!(report.dropped_quota, 1, "exactly one quota rejection");
+        assert_eq!(report.dropped, 0, "a policy drop must never count as backpressure");
+    }
+    // Draining two results frees the in-flight slots.
+    for _ in 0..2 {
+        (&mut session).next().expect("result").expect("ok");
+    }
+    assert_eq!(session.try_submit(fs.next().unwrap()), PushOutcome::Queued);
+    session.close();
+    let report = session.finish().expect("drain");
+    assert_eq!(report.frames, 3);
+    assert_eq!(report.dropped_quota, 1);
+    assert_eq!(report.dropped, 0);
+    server.shutdown().expect("shutdown");
+}
+
+/// Gate 3b: the token-bucket rate quota, refilled purely by manual-clock
+/// advances — 1 fps with burst 1 admits exactly one frame per advanced
+/// second, and every early attempt is a distinct `dropped_quota`.
+#[test]
+fn rate_quota_refills_only_with_the_clock() {
+    let (server, manual) = manual_server(1);
+    let mut session = server
+        .session(
+            SessionOptions::named("metered")
+                .with_queue_depth(8)
+                .with_quota(Quota::rate(1.0, 1)),
+        )
+        .expect("session");
+
+    let mut fs = frames(4).into_iter();
+    assert_eq!(session.try_submit(fs.next().unwrap()), PushOutcome::Queued, "burst token");
+    assert_eq!(
+        session.try_submit(fs.next().unwrap()),
+        PushOutcome::Quota,
+        "no manual time passed, so no token can exist"
+    );
+    manual.advance(Duration::from_secs(1));
+    assert_eq!(session.try_submit(fs.next().unwrap()), PushOutcome::Queued, "refilled token");
+    assert_eq!(session.try_submit(fs.next().unwrap()), PushOutcome::Quota);
+
+    session.close();
+    let report = session.finish().expect("drain");
+    assert_eq!(report.frames, 2, "exactly one admission per advanced second");
+    assert_eq!(report.dropped_quota, 2);
+    assert_eq!(report.dropped, 0);
+    let (agg, _metrics) = server.shutdown().expect("shutdown");
+    assert_eq!(agg.dropped_quota, 2, "the aggregate carries the quota accounting");
+}

@@ -14,7 +14,20 @@
 //!
 //! Pipeline-backed tests run on the artifact-free host backend, so CI
 //! gates all of this with no Python and no compiled HLO.
+//!
+//! Wall-clock audit (the qos/clock PR): sleeps in this file are never
+//! used as *synchronization* — every assertion is completion-based. The
+//! fairness test is driven by an explicit permit channel (one permit ==
+//! one processed frame), so its starvation assertion is deterministic
+//! rather than a race against a sleeping worker; `SlowWorker`'s 2 ms
+//! sleep in the teardown test only keeps frames in flight long enough to
+//! make the mid-flight drop meaningful (its assertions hold at any
+//! speed); and the cross-session batching test's lane deadline is
+//! generous because it is a *liveness* bound (flush leftovers), not a
+//! timing assumption.
 
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::Result;
@@ -89,9 +102,10 @@ impl FrameWorker for SlowWorker {
 fn two_sessions_amortize_one_bucket_major_batcher() {
     const FRAMES_PER_SESSION: u64 = 6;
     let mut ecfg = engine_cfg(2);
-    // A generous lane deadline: both sessions' frames arrive within it, so
-    // workers reliably collect cross-session groups.
-    ecfg.batch = BatchPolicy::batched(4, Duration::from_millis(200));
+    // A generous lane deadline: every frame is pre-submitted, so groups
+    // fill by count; the deadline only flushes trailing partial groups
+    // (a liveness bound — 2 s keeps it safe under heavily parallel CI).
+    ecfg.batch = BatchPolicy::batched(4, Duration::from_secs(2));
     let pipe_cfg = PipelineConfig::tiny_96();
     let server = {
         let cfg = pipe_cfg.clone();
@@ -174,16 +188,77 @@ fn two_sessions_amortize_one_bucket_major_batcher() {
     assert!(agg.mean_batch > 1.0, "merged metrics must record the shared batches");
 }
 
+/// Worker gated by an explicit permit channel: each `process` call
+/// consumes one permit (blocking on the channel — a completion signal,
+/// not a sleep) and reports the processed frame's index back to the
+/// test, so the test observes the dispatcher's admission order in
+/// deterministic lockstep. Dropping the permit sender free-runs the
+/// worker.
+struct GateWorker {
+    permits: mpsc::Receiver<()>,
+    done: mpsc::Sender<u64>,
+    router: BucketRouter,
+    metrics: StageMetrics,
+}
+
+impl FrameWorker for GateWorker {
+    fn process(&mut self, frame: &Frame) -> Result<FrameResult> {
+        // Blocks until the test grants a permit; a closed channel means
+        // the gated phase is over — process freely.
+        let _ = self.permits.recv();
+        let mask = frame.gt_mask(PATCH_PX);
+        let kept = mask.kept().max(1);
+        let bucket = self.router.route(kept);
+        self.metrics.record_stage("total", 1e-4);
+        self.metrics.record_frame(1e-5, kept);
+        self.metrics.record_batch_size(1);
+        let mut logits = vec![0.0f32; 10];
+        logits[frame.label % 10] = 1.0;
+        let result = FrameResult {
+            frame_index: frame.index,
+            logits,
+            mask,
+            bucket,
+            modeled_energy_j: 1e-5,
+            latency_s: 1e-4,
+            batch_size: 1,
+        };
+        self.done.send(frame.index).ok();
+        Ok(result)
+    }
+
+    fn take_metrics(&mut self) -> StageMetrics {
+        std::mem::take(&mut self.metrics)
+    }
+}
+
 /// Fair admission: a hot session that floods 40 frames before a cold
 /// session submits 8 must not starve it — weighted round-robin dequeue
-/// interleaves the cold frames, so the cold session finishes while the
-/// hot backlog is still draining.
+/// interleaves the cold frames. Ported off wall-clock pacing (the worker
+/// used to sleep 2 ms per frame and the test raced it): the worker is now
+/// gated by permits, so "the cold session finished while the hot backlog
+/// was still draining" is observed in lockstep, not inferred from timing.
 #[test]
 fn hot_session_cannot_starve_a_cold_one() {
     const HOT: u64 = 40;
     const COLD: u64 = 8;
+    const COLD_TAG: u64 = 10_000;
+    let (permit_tx, permit_rx) = mpsc::channel::<()>();
+    let (done_tx, done_rx) = mpsc::channel::<u64>();
+    // Hand the channel ends to the single worker through the factory
+    // (which must be callable repeatedly, hence the take-once cell).
+    let gate = Arc::new(Mutex::new(Some((permit_rx, done_tx))));
     let server = Server::start(
-        |_wid| Ok(SlowWorker::new(Duration::from_millis(2))),
+        move |_wid| {
+            let (permits, done) =
+                gate.lock().unwrap().take().expect("one worker, one gate");
+            Ok(GateWorker {
+                permits,
+                done,
+                router: BucketRouter::even(36, 4),
+                metrics: StageMetrics::new(),
+            })
+        },
         engine_cfg(1),
     )
     .expect("server");
@@ -202,9 +277,34 @@ fn hot_session_cannot_starve_a_cold_one() {
         hot.submit(src.next_frame()).expect("hot submit");
     }
     for _ in 0..COLD {
-        cold.submit(src.next_frame()).expect("cold submit");
+        let mut f = src.next_frame();
+        f.index += COLD_TAG; // tag cold frames for the done-channel ledger
+        cold.submit(f).expect("cold submit");
     }
     cold.close();
+
+    // Lockstep: one permit == one processed frame == one ledger entry.
+    let mut processed_hot = 0u64;
+    let mut processed_cold = 0u64;
+    while processed_cold < COLD {
+        permit_tx.send(()).expect("worker must be alive");
+        let idx = done_rx.recv().expect("exactly one completion per permit");
+        if idx >= COLD_TAG {
+            processed_cold += 1;
+        } else {
+            processed_hot += 1;
+        }
+    }
+    // At the moment the last cold frame was processed, the hot backlog
+    // must not be done: FIFO admission would have served all 40 first.
+    assert!(
+        processed_hot < HOT,
+        "cold session waited behind the whole hot backlog ({processed_hot} of {HOT} hot \
+         frames processed at cold completion) — admission is not fair"
+    );
+    // Free-run the worker for the remainder.
+    drop(permit_tx);
+
     let mut cold_order = Vec::new();
     for item in &mut cold {
         cold_order.push(item.expect("cold result").frame_index);
@@ -213,15 +313,6 @@ fn hot_session_cannot_starve_a_cold_one() {
     for pair in cold_order.windows(2) {
         assert!(pair[0] < pair[1], "cold emitted out of order: {cold_order:?}");
     }
-    // The moment the cold session finished, the hot backlog must not be
-    // done: FIFO admission would have served all 40 hot frames first.
-    let hot_snapshot = hot.report();
-    assert!(
-        hot_snapshot.frames < HOT,
-        "cold session waited behind the whole hot backlog ({} of {HOT} hot frames \
-         emitted at cold completion) — admission is not fair",
-        hot_snapshot.frames
-    );
     // The hot session still completes in full, in order.
     let hot_report = hot.finish().expect("hot drain");
     assert_eq!(hot_report.frames, HOT);
