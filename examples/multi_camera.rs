@@ -20,18 +20,28 @@
 //! by an admission quota (token bucket) whose rejections land in the
 //! distinct `q-drop` column instead of `dropped`.
 //!
+//! On the `sim` backend the fleet additionally runs on **degrading
+//! optics**: a seeded fault schedule accumulates MR thermal drift fast
+//! enough to push workers accuracy-at-risk within the run, so the
+//! health-aware dispatcher routes the SLO tenant around them, counts
+//! every frame served on degraded optics in the `at-risk` column, and
+//! schedules recalibration windows (watch `recals` in the per-worker
+//! lines) while the rest of the pool keeps serving.
+//!
 //! ```bash
 //! cargo run --release --example multi_camera -- [cameras] [frames] [workers] [pjrt|host|sim] [batch]
 //! # artifact-free: cargo run --release --example multi_camera -- 3 60 2 host 4
+//! # degraded optics: cargo run --release --example multi_camera -- 3 60 2 sim 4
 //! ```
 
 use std::time::Duration;
 
 use optovit::coordinator::batcher::BatchPolicy;
+use optovit::coordinator::clock::Clock;
 use optovit::coordinator::engine::EngineConfig;
 use optovit::coordinator::pipeline::{Pipeline, PipelineConfig, ServeOptions};
 use optovit::coordinator::server::{spawn_synthetic_sensor, Quota, Server, SessionOptions};
-use optovit::runtime::{AnyFactory, BackendFactory, BackendKind};
+use optovit::runtime::{AnyFactory, BackendFactory, BackendKind, FaultPlan};
 use optovit::util::table::{si_energy, si_time, Table};
 
 fn main() -> anyhow::Result<()> {
@@ -50,6 +60,17 @@ fn main() -> anyhow::Result<()> {
     let pipe_cfg = PipelineConfig::tiny_96();
     let mut factory = AnyFactory::new(kind, "artifacts");
     factory.host.num_classes = pipe_cfg.num_classes;
+    if kind == BackendKind::Sim {
+        // Degraded-optics demo: drift fast enough (5e-3 nm/s vs the
+        // ~1e-4 nm/s a thermally stabilized deployment sees) that the
+        // fleet visibly degrades and recalibrates within a short run.
+        factory = factory.with_faults(FaultPlan {
+            seed: 7,
+            drift_nm_per_s: 5e-3,
+            clock: Clock::system(),
+        });
+        println!("sim backend: degrading optics enabled (seeded fault schedule, 5e-3 nm/s drift)");
+    }
 
     let opts = ServeOptions {
         batch: BatchPolicy::batched(batch, Duration::from_micros(500)),
@@ -98,8 +119,8 @@ fn main() -> anyhow::Result<()> {
     }
 
     let mut t = Table::new(vec![
-        "camera", "weight", "frames", "dropped", "q-drop", "slo miss", "fps", "latency", "p99",
-        "mean batch", "IoU",
+        "camera", "weight", "frames", "dropped", "q-drop", "slo miss", "at-risk", "fps",
+        "latency", "p99", "mean batch", "IoU",
     ]);
     for (cam, weight, sensor, drain) in fleet {
         sensor.join().ok();
@@ -112,6 +133,7 @@ fn main() -> anyhow::Result<()> {
             report.dropped.to_string(),
             report.dropped_quota.to_string(),
             report.slo_miss.to_string(),
+            report.accuracy_at_risk.to_string(),
             format!("{:.1}", report.wall_fps),
             si_time(report.mean_latency_s),
             si_time(report.p99_latency_s),
@@ -132,13 +154,20 @@ fn main() -> anyhow::Result<()> {
     println!("frames dropped     {}", agg.dropped);
     println!("quota rejections   {} (bulk tenant's rate cap)", agg.dropped_quota);
     println!("SLO misses         {} (camera 0's 50 ms SLO)", agg.slo_miss);
+    if agg.accuracy_at_risk > 0 {
+        println!("accuracy-at-risk   {} frames served on degraded optics", agg.accuracy_at_risk);
+    }
     println!("p99 session lat.   {}", si_time(agg.p99_latency_s));
     for w in &agg.per_worker {
         println!(
-            "worker {}           {} frames, {:.0}% utilized{}",
+            "worker {}           {} frames, {:.0}% utilized, health {:.2}, {} recal(s), \
+             {} at-risk{}",
             w.worker,
             w.frames,
             w.utilization * 100.0,
+            w.health,
+            w.recals,
+            w.at_risk_frames,
             w.core.map(|c| format!(", core {c}")).unwrap_or_default()
         );
     }

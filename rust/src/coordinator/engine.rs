@@ -67,6 +67,21 @@ pub trait FrameWorker {
     fn backend_name(&self) -> &'static str {
         "custom"
     }
+
+    /// Current optical-hardware condition of the worker's substrate.
+    /// `None` (the default) means no fault model: the server treats the
+    /// worker as permanently healthy. [`Pipeline`] forwards its backend's
+    /// [`crate::runtime::Backend::health`].
+    fn health(&mut self) -> Option<crate::runtime::BackendHealth> {
+        None
+    }
+
+    /// Recalibrate degraded hardware (reset to pristine), returning the
+    /// modeled cost the server charges while the worker is drained.
+    /// `None` (the default) means nothing to recalibrate.
+    fn recalibrate(&mut self) -> Option<crate::runtime::RecalCost> {
+        None
+    }
 }
 
 impl<B: Backend> FrameWorker for Pipeline<B> {
@@ -88,6 +103,14 @@ impl<B: Backend> FrameWorker for Pipeline<B> {
 
     fn backend_name(&self) -> &'static str {
         Pipeline::backend_name(self)
+    }
+
+    fn health(&mut self) -> Option<crate::runtime::BackendHealth> {
+        self.backend_health()
+    }
+
+    fn recalibrate(&mut self) -> Option<crate::runtime::RecalCost> {
+        self.recalibrate_backend()
     }
 }
 
@@ -143,6 +166,37 @@ pub struct EngineConfig {
     /// [`super::clock::ManualClock`] makes all of the above exactly
     /// assertable in tests (`rust/tests/qos.rs`).
     pub clock: Clock,
+    /// How the dispatcher reacts to worker hardware degradation
+    /// ([`FrameWorker::health`]): health-aware routing and recalibration
+    /// scheduling. The default is aware; set
+    /// [`HealthPolicy::aware`] `= false` for the health-blind control
+    /// behavior (exactly the pre-fault dispatcher).
+    pub health: HealthPolicy,
+}
+
+/// Dispatcher policy for degraded workers (see `coordinator::server`):
+/// route critical traffic away from accuracy-at-risk workers, and pull a
+/// worker out of rotation for recalibration when its health sinks below
+/// [`HealthPolicy::recal_below`].
+#[derive(Debug, Clone, Copy)]
+pub struct HealthPolicy {
+    /// Master switch. `false` reproduces the health-blind dispatcher
+    /// bit-for-bit: no routing bias, no recal windows (health and at-risk
+    /// frames are still *recorded*).
+    pub aware: bool,
+    /// Health threshold below which a worker is drained and recalibrated
+    /// (only while at least one other worker is serving).
+    pub recal_below: f64,
+    /// Sessions with admission weight at or above this are *critical*:
+    /// like SLO sessions, their frames avoid accuracy-at-risk workers
+    /// whenever a healthy worker is alive.
+    pub critical_weight: u32,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        HealthPolicy { aware: true, recal_below: 0.6, critical_weight: 3 }
+    }
 }
 
 impl EngineConfig {
@@ -163,6 +217,7 @@ impl EngineConfig {
             reassembly_window: 0,
             pin_workers: false,
             clock: Clock::system(),
+            health: HealthPolicy::default(),
         }
     }
 

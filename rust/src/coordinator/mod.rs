@@ -53,6 +53,36 @@
 //! `dropped_quota`). Under a manual clock all of this is exactly
 //! assertable — the deterministic `rust/tests/qos.rs` gate.
 //!
+//! **Serving survives degraded optics.** The `sim` backend carries a
+//! clock-driven per-worker fault schedule (MR thermal drift, crosstalk
+//! growth, stuck cells, dead VCSEL lanes —
+//! [`crate::photonics::FaultSchedule`]), distilled into a continuous
+//! health score the serving stack routes on:
+//!
+//! ```text
+//! FaultSchedule (per worker, seeded, Clock-driven)
+//!      │ state_at(elapsed)
+//!      ▼
+//! DegradationState ──health()──▶ Backend::health() ─▶ worker publishes
+//!  (drift, stuck,                 (BackendHealth)      HealthSlot (lock-free)
+//!   dead lanes, xt)                                         │
+//!                  ┌────────────────────────────────────────┤ dispatcher reads
+//!                  ▼                                        ▼
+//!        place_job: critical frames              health sweep: health <
+//!        (SLO / high weight) avoid               recal_below → Draining →
+//!        at-risk workers; rotation               worker drains, pays
+//!        anchor is health-weighted               Backend::recalibrate()
+//!        (HealthWeightedWrr, never               (modeled time + energy),
+//!        starves a worker)                       rejoins Serving
+//! ```
+//!
+//! Frames served by an at-risk worker count the session's
+//! `ServeReport::accuracy_at_risk` (aggregate = per-session sum);
+//! [`server::ServerStats::worker_health`] exposes the live per-worker
+//! score, mode, and recal counts. [`engine::HealthPolicy`] tunes the
+//! thresholds (`aware: false` restores health-blind routing — the
+//! control arm of the deterministic `rust/tests/faults.rs` gate).
+//!
 //! The pre-session batch-job surfaces survive as documented wrappers:
 //!
 //! - [`pipeline::serve`] — the **in-thread degenerate case** (one
@@ -83,7 +113,7 @@
 //! | [`clock`] | the time seam: pluggable `Clock` (system / manual) + clock-aware `Event` waits |
 //! | [`batcher`] | bucket router, per-bucket micro-batch lanes (deadline-aware), bounded frame queues |
 //! | [`pipeline`] | the frame pipeline (MGNet → mask → route → backbone), in-thread streaming `serve` |
-//! | [`server`] | the session-oriented server: multi-tenant sessions, fair admission (`WrrAdmission`), per-session QoS (SLO / `Quota`), streams/reports |
+//! | [`server`] | the session-oriented server: multi-tenant sessions, fair admission (`WrrAdmission`), per-session QoS (SLO / `Quota`), health-aware placement + recal windows (`HealthWeightedWrr`), streams/reports |
 //! | [`engine`] | `FrameWorker`/`EngineConfig` (incl. the serving clock) + the one-session batch-job wrappers (`run`, `serve_sharded`) |
 //! | [`affinity`] | best-effort worker-thread core pinning (`sched_setaffinity`) |
 //! | [`stats`] | per-stage metrics, merge-able across workers; latency histograms; per-worker utilization |
@@ -98,13 +128,14 @@ pub mod stats;
 
 pub use batcher::{BatchPolicy, BucketRouter, FrameQueue, MicroBatcher, PushOutcome};
 pub use clock::{Clock, Event, ManualClock};
-pub use engine::{serve_sharded, serve_sharded_with, EngineConfig, FrameWorker};
+pub use engine::{serve_sharded, serve_sharded_with, EngineConfig, FrameWorker, HealthPolicy};
 pub use pipeline::{
     serve, FrameResult, FrameScratch, FrameStream, Pipeline, PipelineConfig, RoutedFrame,
     ServeOptions, ServeReport,
 };
 pub use server::{
-    spawn_synthetic_sensor, Quota, ServeError, Server, ServerStats, ServerWatch, Session,
-    SessionOptions, SessionStats, SessionStream, SessionSubmitter, WrrAdmission,
+    spawn_synthetic_sensor, HealthWeightedWrr, Quota, ServeError, Server, ServerStats,
+    ServerWatch, Session, SessionOptions, SessionStats, SessionStream, SessionSubmitter,
+    WrrAdmission,
 };
-pub use stats::{LatencyHistogram, StageMetrics, WorkerStats};
+pub use stats::{LatencyHistogram, StageMetrics, WorkerHealthStats, WorkerMode, WorkerStats};

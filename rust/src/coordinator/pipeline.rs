@@ -405,6 +405,19 @@ impl<B: Backend> Pipeline<B> {
         self.backend.name()
     }
 
+    /// The backend's optical-hardware condition (`None` on substrates
+    /// without a fault model) — the signal the health-aware server routes
+    /// on.
+    pub fn backend_health(&mut self) -> Option<crate::runtime::BackendHealth> {
+        self.backend.health()
+    }
+
+    /// Recalibrate the backend's modeled optics (see
+    /// [`crate::runtime::Backend::recalibrate`]).
+    pub fn recalibrate_backend(&mut self) -> Option<crate::runtime::RecalCost> {
+        self.backend.recalibrate()
+    }
+
     /// Pre-load all artifacts (avoids compile jitter on the first frames —
     /// PJRT compilation and host module materialization both happen here,
     /// never on the steady-state path).
@@ -455,6 +468,16 @@ impl<B: Backend> Pipeline<B> {
         Ok(bucket)
     }
 
+    /// Degraded optics cost extra modeled energy (drift compensation and
+    /// re-tune retries): up to `+FAULT_ENERGY_PENALTY` at health 0.
+    /// Exactly 1.0 on substrates without a fault model.
+    fn energy_factor(&mut self) -> f64 {
+        match self.backend.health() {
+            Some(h) => 1.0 + crate::runtime::sim::FAULT_ENERGY_PENALTY * (1.0 - h.health),
+            None => 1.0,
+        }
+    }
+
     /// Modeled accelerator energy for one frame (J), charged for every
     /// backend — the host is a stand-in for the photonic core. A frame
     /// riding a bucket-major batch behind its group's first frame reuses
@@ -464,7 +487,8 @@ impl<B: Backend> Pipeline<B> {
     /// energy/frame *drops* as batch size grows. The MGNet share is never
     /// discounted — MGNet executes per frame at route time, interleaved
     /// with other buckets' batches, so its banks are reprogrammed anyway.
-    fn modeled_energy_j(&self, kept_count: usize, first_in_batch: bool) -> f64 {
+    /// Degraded optics inflate the figure by [`Pipeline::energy_factor`].
+    fn modeled_energy_j(&mut self, kept_count: usize, first_in_batch: bool) -> f64 {
         let (full, backbone_kept) = if self.cfg.use_mask {
             (
                 self.model.masked_energy(&self.vit_cfg, &self.mgnet_cfg, kept_count).total_j(),
@@ -474,11 +498,13 @@ impl<B: Backend> Pipeline<B> {
             let n = self.vit_cfg.num_patches();
             (self.model.frame_energy(&self.vit_cfg, n, true).total_j(), n)
         };
-        if first_in_batch {
-            return full;
-        }
-        let saved = self.model.weight_program_energy_j(&self.vit_cfg, backbone_kept, true);
-        (full - saved).max(0.0)
+        let ideal = if first_in_batch {
+            full
+        } else {
+            let saved = self.model.weight_program_energy_j(&self.vit_cfg, backbone_kept, true);
+            (full - saved).max(0.0)
+        };
+        ideal * self.energy_factor()
     }
 
     /// Record a simulating backend's modeled per-stage latency (MGNet and
@@ -731,6 +757,12 @@ pub struct ServeReport {
     /// Counted at emission against the serving clock, so a manual-clock
     /// test can assert it exactly.
     pub slo_miss: u64,
+    /// Frames served by a worker whose backend reported **accuracy-at-risk**
+    /// hardware health at completion time (degraded optics below
+    /// `photonics::AT_RISK_HEALTH`). Per session in session reports; the
+    /// terminal aggregate is exactly the per-session sum. Always 0 on
+    /// substrates without a fault model.
+    pub accuracy_at_risk: u64,
     /// p99 of submit→emit latency (seconds) across the report's sessions,
     /// from a log-scale histogram (`LatencyHistogram`, ~15% bucket
     /// resolution, quantiles reported as bucket lower bounds — never
@@ -1071,10 +1103,11 @@ impl<'p, B: Backend> FrameStream<'p, B> {
             backend: self.pipeline.backend_name().to_string(),
             frames: done,
             dropped: self.rejected.load(Ordering::Relaxed),
-            // The in-thread path has no sessions, hence no quota or SLO
-            // accounting (see the field docs).
+            // The in-thread path has no sessions, hence no quota, SLO, or
+            // health-routing accounting (see the field docs).
             dropped_quota: 0,
             slo_miss: 0,
+            accuracy_at_risk: 0,
             p99_latency_s: 0.0,
             wall_fps: m.wall_fps_at(now),
             mean_latency_s: m.frame_latency_mean_s(),
@@ -1091,6 +1124,9 @@ impl<'p, B: Backend> FrameStream<'p, B> {
                 busy_s,
                 utilization: if elapsed_s > 0.0 { (busy_s / elapsed_s).min(1.0) } else { 0.0 },
                 core: None,
+                health: 1.0,
+                recals: 0,
+                at_risk_frames: 0,
             }],
         }
     }

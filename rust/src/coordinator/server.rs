@@ -56,6 +56,22 @@
 //!   rate): quota-rejected `try_submit`s count the **distinct**
 //!   `ServeReport::dropped_quota` (never `dropped`, which stays pure
 //!   backpressure), while blocking `submit` waits for the quota to admit.
+//! - **Degraded-optics awareness.** Each worker publishes its backend's
+//!   optical health score (drift, stuck cells, dead lanes → estimated
+//!   accuracy-at-risk; see `crate::photonics::DegradationState`) into a
+//!   lock-free per-worker [`HealthSlot`] read by the dispatcher. Under
+//!   [`super::engine::HealthPolicy`] (`aware`, the default) placement
+//!   routes **critical** frames (SLO sessions, weight >=
+//!   `critical_weight`) away from at-risk workers, the worker rotation
+//!   anchor is health-weighted ([`HealthWeightedWrr`] — a degraded worker
+//!   still gets >= 1 turn per cycle, so it is never starved), and a
+//!   worker whose health falls below `recal_below` is **drained**
+//!   (receives no new frames), pays its backend's modeled recalibration
+//!   window (`FrameWorker::recalibrate`), and rejoins healthy. Frames
+//!   served while the worker was at risk count the session's
+//!   `ServeReport::accuracy_at_risk` (the aggregate is exactly the
+//!   per-session sum). With `aware = false` routing is health-blind —
+//!   the control arm of `rust/tests/faults.rs`.
 //! - **Deterministic time.** Every deadline, wait, and timestamp reads
 //!   the server's [`super::clock::Clock`] ([`EngineConfig::clock`]), and
 //!   every wait is a clock-aware [`super::clock::Event`] (no
@@ -70,7 +86,7 @@
 use std::collections::BTreeMap;
 use std::fmt;
 use std::panic::AssertUnwindSafe;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
@@ -82,7 +98,7 @@ use super::batcher::PushOutcome;
 use super::clock::{Clock, Event};
 use super::engine::{EngineConfig, FrameWorker};
 use super::pipeline::{FrameResult, ServeReport};
-use super::stats::{LatencyHistogram, StageMetrics, WorkerStats};
+use super::stats::{LatencyHistogram, StageMetrics, WorkerHealthStats, WorkerMode, WorkerStats};
 use crate::sensor::{Frame, VideoSource};
 
 // Wait caps for the event-driven loops. Every admission-relevant
@@ -303,6 +319,9 @@ struct SessionAccum {
     batch_sum: f64,
     /// Emissions later than the session's SLO (0 without an SLO).
     slo_miss: u64,
+    /// Frames served by a worker whose backend reported accuracy-at-risk
+    /// at completion time (0 without a fault model).
+    accuracy_at_risk: u64,
     /// Submit→emit latency distribution (p99 in the report).
     session_latency: LatencyHistogram,
     first_emit: Option<Instant>,
@@ -364,6 +383,7 @@ impl SessionAccum {
             dropped,
             dropped_quota,
             slo_miss: self.slo_miss,
+            accuracy_at_risk: self.accuracy_at_risk,
             p99_latency_s: self.session_latency.quantile(0.99),
             wall_fps: if span > 0.0 { frames as f64 / span } else { 0.0 },
             mean_latency_s: div(self.latency_sum),
@@ -451,6 +471,10 @@ struct Job {
     /// `Some` only for SLO sessions: the micro-batch group holding this
     /// frame flushes no later than this instant.
     deadline: Option<Instant>,
+    /// Accuracy-critical under the server's `HealthPolicy` (SLO session
+    /// or weight >= `critical_weight`): placement steers this frame away
+    /// from accuracy-at-risk workers.
+    critical: bool,
     frame: Frame,
 }
 
@@ -476,6 +500,9 @@ enum Msg {
         result: FrameResult,
         iou: f64,
         correct: bool,
+        /// The serving worker's backend reported accuracy-at-risk when
+        /// this frame completed (counts `ServeReport::accuracy_at_risk`).
+        at_risk: bool,
     },
     /// No more frames will be dispatched for this session; exactly
     /// `dispatched` results are expected.
@@ -500,12 +527,12 @@ struct DispatchEntry {
 }
 
 /// Reassembler-side session state. Pending tuples carry the frame's
-/// admission timestamp so in-order emission can score submit→emit latency
-/// and SLO misses.
+/// at-risk flag and admission timestamp so in-order emission can count
+/// `accuracy_at_risk` and score submit→emit latency / SLO misses.
 struct ReasmState {
     shared: Arc<SessionShared>,
     out: Option<SyncSender<FrameResult>>,
-    pending: BTreeMap<u64, (FrameResult, f64, bool, Instant)>,
+    pending: BTreeMap<u64, (FrameResult, f64, bool, bool, Instant)>,
     next_emit: u64,
     emitted: u64,
     expected: Option<u64>,
@@ -517,6 +544,100 @@ struct ReasmState {
 struct Registry {
     new_dispatch: Vec<DispatchEntry>,
     new_reasm: Vec<ReasmState>,
+}
+
+/// Per-worker hardware-health cell. The worker thread publishes its
+/// backend's degradation signal here on every wake (lock-free), the
+/// dispatcher reads it to route frames and to schedule recalibration
+/// windows, and [`Server::stats`] snapshots it into
+/// [`WorkerHealthStats`]. `health` and `recal_energy` hold `f64` bit
+/// patterns in `AtomicU64`s.
+struct HealthSlot {
+    /// Published health score in `[0, 1]` (`f64` bits; starts at 1.0 and
+    /// stays there for backends without a fault model).
+    health: AtomicU64,
+    /// [`WorkerMode`] discriminant — the recalibration state machine
+    /// (`Serving → Draining → Recalibrating → Serving`).
+    mode: AtomicU8,
+    /// Completed recalibration cycles (drain → pay → rejoin).
+    recals: AtomicU64,
+    /// Last published accuracy-at-risk flag.
+    at_risk: AtomicBool,
+    /// Frames this worker completed (health accounting mirror).
+    frames: AtomicU64,
+    /// Frames completed while the backend reported accuracy-at-risk.
+    at_risk_frames: AtomicU64,
+    /// Modeled recalibration energy paid so far (`f64` bits, joules).
+    recal_energy: AtomicU64,
+    /// Publish ticks — lets tests synchronize on "the worker has
+    /// (re)published its health" without sleeping.
+    updates: AtomicU64,
+}
+
+impl HealthSlot {
+    fn new() -> Self {
+        HealthSlot {
+            health: AtomicU64::new(1.0f64.to_bits()),
+            mode: AtomicU8::new(WorkerMode::Serving as u8),
+            recals: AtomicU64::new(0),
+            at_risk: AtomicBool::new(false),
+            frames: AtomicU64::new(0),
+            at_risk_frames: AtomicU64::new(0),
+            recal_energy: AtomicU64::new(0.0f64.to_bits()),
+            updates: AtomicU64::new(0),
+        }
+    }
+
+    fn health_value(&self) -> f64 {
+        f64::from_bits(self.health.load(Ordering::Relaxed))
+    }
+
+    fn mode(&self) -> WorkerMode {
+        match self.mode.load(Ordering::Relaxed) {
+            1 => WorkerMode::Draining,
+            2 => WorkerMode::Recalibrating,
+            _ => WorkerMode::Serving,
+        }
+    }
+
+    fn set_mode(&self, mode: WorkerMode) {
+        self.mode.store(mode as u8, Ordering::Relaxed);
+    }
+
+    fn recal_energy_j(&self) -> f64 {
+        f64::from_bits(self.recal_energy.load(Ordering::Relaxed))
+    }
+
+    /// CAS-add onto the `f64`-bits energy cell (writers: worker thread
+    /// only, but stats snapshots race the add, hence the loop).
+    fn add_recal_energy(&self, joules: f64) {
+        let mut cur = self.recal_energy.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + joules).to_bits();
+            match self.recal_energy.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    fn snapshot(&self, worker: usize) -> WorkerHealthStats {
+        WorkerHealthStats {
+            worker,
+            health: self.health_value(),
+            mode: self.mode(),
+            at_risk: self.at_risk.load(Ordering::Relaxed),
+            recals: self.recals.load(Ordering::Relaxed),
+            recal_energy_j: self.recal_energy_j(),
+            at_risk_frames: self.at_risk_frames.load(Ordering::Relaxed),
+            updates: self.updates.load(Ordering::Relaxed),
+        }
+    }
 }
 
 /// State shared by the server handle, its threads, and session handles.
@@ -541,6 +662,8 @@ struct ServerCore {
     backend: Mutex<&'static str>,
     t_ready: Mutex<Option<Instant>>,
     inflight: Vec<AtomicU64>,
+    /// Per-worker health cells (same indexing as `inflight`).
+    health: Vec<HealthSlot>,
     total_dispatched: AtomicU64,
     next_session: AtomicU64,
     registry: Mutex<Registry>,
@@ -893,6 +1016,10 @@ pub struct ServerStats {
     /// frames; `wall_fps` over the server's post-warmup lifetime).
     pub aggregate: ServeReport,
     pub sessions: Vec<SessionStats>,
+    /// Live per-worker hardware-health snapshot (health score, serving
+    /// mode, recal counts/energy) — all 1.0/`Serving`/zero for backends
+    /// without a fault model.
+    pub worker_health: Vec<WorkerHealthStats>,
 }
 
 /// A long-lived serving instance: the dispatcher, worker pool, and
@@ -932,6 +1059,7 @@ impl Server {
             backend: Mutex::new("custom"),
             t_ready: Mutex::new(None),
             inflight: (0..n_workers).map(|_| AtomicU64::new(0)).collect(),
+            health: (0..n_workers).map(|_| HealthSlot::new()).collect(),
             total_dispatched: AtomicU64::new(0),
             next_session: AtomicU64::new(0),
             registry: Mutex::new(Registry::default()),
@@ -1093,6 +1221,7 @@ impl Server {
             // construction the per-session sum, and latency histograms
             // merge exactly (bucket-wise addition).
             agg.slo_miss += a.slo_miss;
+            agg.accuracy_at_risk += a.accuracy_at_risk;
             agg.session_latency.merge(&a.session_latency);
             dropped += s_dropped;
             dropped_quota += s_dropped_quota;
@@ -1118,7 +1247,15 @@ impl Server {
         agg.first_emit = t_ready;
         agg.last_emit = t_ready.map(|t| t + Duration::from_secs_f64(wall_s));
         let aggregate = agg.to_report(dropped, dropped_quota, &backend, self.core.n_workers);
-        Ok(ServerStats { backend, workers: self.core.n_workers, aggregate, sessions: rows })
+        let worker_health =
+            self.core.health.iter().enumerate().map(|(w, s)| s.snapshot(w)).collect();
+        Ok(ServerStats {
+            backend,
+            workers: self.core.n_workers,
+            aggregate,
+            sessions: rows,
+            worker_health,
+        })
     }
 
     /// Graceful shutdown: stop admitting, drain every frame already
@@ -1259,6 +1396,53 @@ impl WrrAdmission {
     }
 }
 
+/// Health-weighted worker rotation — the placement-side extension of
+/// [`WrrAdmission`], extracted so its no-starvation invariant is
+/// property-testable without threads (`rust/tests/property.rs`): each
+/// cycle the cursor holds worker `w` for [`HealthWeightedWrr::credits`]
+/// `(health[w])` consecutive turns (1–4), so a pristine worker anchors
+/// ~4x as often as a floored one, but **every** worker — however
+/// degraded — still gets at least one turn per cycle. The dispatcher
+/// feeds the picks to [`place_job`] as the rotation anchor for its
+/// least-loaded tie-break (health biases placement; the load criterion
+/// still dominates).
+#[derive(Debug, Default)]
+pub struct HealthWeightedWrr {
+    cursor: usize,
+    credit: u32,
+}
+
+impl HealthWeightedWrr {
+    pub fn new() -> Self {
+        HealthWeightedWrr { cursor: 0, credit: 0 }
+    }
+
+    /// Turns per cycle a worker earns from its health score in `[0, 1]`:
+    /// `ceil(4 * health)` clamped to `>= 1`. The floor is the
+    /// no-starvation guarantee — a degraded worker keeps draining work
+    /// (it still produces usable frames, just flagged at-risk).
+    pub fn credits(health: f64) -> u32 {
+        (health.clamp(0.0, 1.0) * 4.0).ceil().max(1.0) as u32
+    }
+
+    /// Pick the next rotation anchor. Allocation-free; O(1) per call.
+    pub fn next(&mut self, healths: &[f64]) -> usize {
+        if healths.is_empty() {
+            return 0;
+        }
+        self.cursor %= healths.len();
+        if self.credit == 0 {
+            self.credit = Self::credits(healths[self.cursor]);
+        }
+        self.credit -= 1;
+        let pick = self.cursor;
+        if self.credit == 0 {
+            self.cursor = (self.cursor + 1) % healths.len();
+        }
+        pick
+    }
+}
+
 enum Placed {
     Worker,
     AllDead,
@@ -1269,6 +1453,12 @@ enum Placed {
 /// rotation order). While every alive queue is full, wait on the activity
 /// event (each worker pop notifies it) instead of sleep-polling — stays
 /// abort-responsive, unlike a blocking send.
+///
+/// Under a health-aware policy, placement is additionally degradation-
+/// aware: draining/recalibrating workers are ineligible (with an
+/// availability fallback — if **no** serving worker is alive, any alive
+/// worker beats stalling the pool), and a critical job sorts at-risk
+/// workers last, ahead of the load criterion.
 fn place_job(
     mut job: Job,
     worker_txs: &[SyncSender<Job>],
@@ -1278,6 +1468,8 @@ fn place_job(
     rr: usize,
 ) -> Placed {
     let n = worker_txs.len();
+    let aware = core.cfg.health.aware;
+    let critical = job.critical;
     loop {
         // Generation before the placement attempt: a pop during the
         // attempt ends the post-attempt wait immediately.
@@ -1286,13 +1478,27 @@ fn place_job(
             return Placed::Aborted;
         }
         candidates.clear();
-        candidates.extend((0..n).filter(|&w| alive[w]));
+        candidates.extend(
+            (0..n).filter(|&w| {
+                alive[w] && (!aware || core.health[w].mode() == WorkerMode::Serving)
+            }),
+        );
+        if candidates.is_empty() {
+            // Availability over routing purity: with every serving worker
+            // gone (all draining/recalibrating at once), any alive worker
+            // is better than a stalled pool.
+            candidates.extend((0..n).filter(|&w| alive[w]));
+        }
         if candidates.is_empty() {
             return Placed::AllDead;
         }
         let rot = rr % n;
         candidates.sort_unstable_by_key(|&w| {
-            (core.inflight[w].load(Ordering::Relaxed), (w + n - rot) % n)
+            (
+                aware && critical && core.health[w].at_risk.load(Ordering::Relaxed),
+                core.inflight[w].load(Ordering::Relaxed),
+                (w + n - rot) % n,
+            )
         });
         let mut j = job;
         for &w in candidates.iter() {
@@ -1348,6 +1554,9 @@ fn dispatcher_loop(core: &ServerCore, worker_txs: Vec<SyncSender<Job>>, res_tx: 
     let mut candidates: Vec<usize> = Vec::with_capacity(n_workers);
     let mut weights: Vec<u32> = Vec::new();
     let mut wrr = WrrAdmission::new();
+    let mut hwrr = HealthWeightedWrr::new();
+    let mut healths: Vec<f64> = Vec::with_capacity(n_workers);
+    let policy = core.cfg.health;
     loop {
         // Activity generation *before* the sweep: any state change during
         // it (submit, consume, close, …) ends the post-sweep wait
@@ -1361,13 +1570,51 @@ fn dispatcher_loop(core: &ServerCore, worker_txs: Vec<SyncSender<Job>>, res_tx: 
             entries.extend(reg.new_dispatch.drain(..));
         }
         let closing = core.closing.load(Ordering::Relaxed);
+        // Health sweep before admission: flag any serving worker whose
+        // published health fell below the recal threshold for draining —
+        // but always keep at least one worker serving (availability over
+        // recalibration; the laggard recals once a peer rejoins).
+        if policy.aware {
+            let mut spare = core
+                .health
+                .iter()
+                .enumerate()
+                .filter(|&(w, s)| alive[w] && s.mode() == WorkerMode::Serving)
+                .count()
+                .saturating_sub(1);
+            for (w, slot) in core.health.iter().enumerate() {
+                if spare == 0 {
+                    break;
+                }
+                if alive[w]
+                    && slot.mode() == WorkerMode::Serving
+                    && slot.health_value() < policy.recal_below
+                {
+                    slot.set_mode(WorkerMode::Draining);
+                    spare -= 1;
+                    // The worker's idle path owns the drain → recal →
+                    // rejoin transitions; wake it.
+                    core.activity.notify();
+                }
+            }
+        }
         let mut progressed = false;
         // `Some` ends the run after this sweep; `Some(true)` reports the
         // dead pool first.
         let mut fatal: Option<bool> = None;
         weights.clear();
         weights.extend(entries.iter().map(|e| e.shared.weight));
-        let rot = wrr.turns();
+        // Health-aware runs anchor worker tie-breaking with the
+        // health-weighted rotation (healthy workers anchor more turns per
+        // cycle, degraded ones never zero); blind runs keep the plain
+        // sweep-count rotation.
+        let rot = if policy.aware {
+            healths.clear();
+            healths.extend(core.health.iter().map(|s| s.health_value()));
+            hwrr.next(&healths)
+        } else {
+            wrr.turns()
+        };
         wrr.sweep(&weights, |i| {
             if fatal.is_some() || core.abort.load(Ordering::Relaxed) {
                 return false;
@@ -1396,11 +1643,16 @@ fn dispatcher_loop(core: &ServerCore, worker_txs: Vec<SyncSender<Job>>, res_tx: 
                     // deadline; the worker's deadline-aware flush honors
                     // the earliest one in its group.
                     let deadline = entry.shared.slo.map(|slo| accepted_at + slo);
+                    // SLO and high-weight tenants are accuracy-critical:
+                    // placement keeps them off at-risk workers.
+                    let critical = entry.shared.slo.is_some()
+                        || entry.shared.weight >= policy.critical_weight;
                     let job = Job {
                         session: entry.shared.id,
                         seq: entry.dispatched,
                         accepted_at,
                         deadline,
+                        critical,
                         frame,
                     };
                     match place_job(job, &worker_txs, &mut alive, core, &mut candidates, rot) {
@@ -1489,6 +1741,67 @@ fn tighten(deadline: Instant, job_deadline: Option<Instant>) -> Instant {
     }
 }
 
+/// Publish the worker's current backend health into its [`HealthSlot`].
+/// Called on every worker wake, so under a manual clock each `advance`
+/// refreshes the published score. A *changed* score notifies the activity
+/// event so the dispatcher re-sweeps against it promptly; the `updates`
+/// tick always advances (tests synchronize on it).
+fn publish_health<W: FrameWorker>(slot: &HealthSlot, core: &ServerCore, w: &mut W) {
+    if let Some(h) = w.health() {
+        let bits = h.health.to_bits();
+        let old = slot.health.swap(bits, Ordering::Relaxed);
+        slot.at_risk.store(h.at_risk, Ordering::Relaxed);
+        if old != bits {
+            core.activity.notify();
+        }
+    }
+    slot.updates.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Advance this worker's recalibration state machine one step. The
+/// dispatcher flags `Serving → Draining`; the worker owns the rest:
+/// once drained (`inflight == 0`, so its queue is empty too), it pays the
+/// backend's modeled recalibration cost and holds `Recalibrating` until
+/// `recal_due` passes on the serving clock, then rejoins `Serving` (the
+/// recalibrated backend republishes full health on the next wake).
+/// Workers without a recalibration hook rejoin immediately — there is
+/// nothing to pay, and holding them drained would idle capacity.
+fn drive_recal<W: FrameWorker>(
+    wid: usize,
+    slot: &HealthSlot,
+    core: &ServerCore,
+    w: &mut W,
+    clock: &Clock,
+    recal_due: &mut Option<Instant>,
+) {
+    match slot.mode() {
+        WorkerMode::Serving => {}
+        WorkerMode::Draining => {
+            if core.inflight[wid].load(Ordering::Relaxed) == 0 {
+                match w.recalibrate() {
+                    Some(cost) => {
+                        slot.add_recal_energy(cost.energy_j);
+                        *recal_due = Some(clock.now() + Duration::from_secs_f64(cost.time_s));
+                        slot.set_mode(WorkerMode::Recalibrating);
+                    }
+                    None => slot.set_mode(WorkerMode::Serving),
+                }
+                core.activity.notify();
+            }
+        }
+        WorkerMode::Recalibrating => {
+            // A lost `recal_due` (only possible across a panic-recovered
+            // iteration) degrades to an immediate rejoin.
+            if recal_due.map(|due| clock.now() >= due).unwrap_or(true) {
+                *recal_due = None;
+                slot.recals.fetch_add(1, Ordering::Relaxed);
+                slot.set_mode(WorkerMode::Serving);
+                core.activity.notify();
+            }
+        }
+    }
+}
+
 /// One worker thread: construct the (possibly non-`Send`) frame worker
 /// in-thread, warm it up, then micro-batch the queue until it closes.
 /// All waits are event-driven on the serving clock: the dispatcher
@@ -1527,14 +1840,21 @@ fn worker_loop<W, F>(
         let max_batch = batch_policy.max_batch.max(1);
         let mut tags: Vec<(u64, u64, Instant)> = Vec::with_capacity(max_batch);
         let mut group: Vec<Frame> = Vec::with_capacity(max_batch);
+        let slot = &core.health[wid];
+        let mut recal_due: Option<Instant> = None;
         let mut closed = false;
         while !closed {
             tags.clear();
             group.clear();
             // Block for the first frame of the group (the dispatcher
-            // notifies the activity event after every placement).
+            // notifies the activity event after every placement). Every
+            // wake also republishes backend health and steps the
+            // recalibration state machine — which is what lets a drained
+            // worker recalibrate and rejoin while its queue stays empty.
             let first = loop {
                 let gen = core.activity.generation();
+                publish_health(slot, core, &mut w);
+                drive_recal(wid, slot, core, &mut w, &clock, &mut recal_due);
                 match rx.try_recv() {
                     Ok(job) => break Some(job),
                     Err(mpsc::TryRecvError::Empty) => {
@@ -1602,13 +1922,30 @@ fn worker_loop<W, F>(
                 ));
             }
             frames += rs.len() as u64;
+            // Score the whole group against the backend's *post-batch*
+            // health: degradation accrued while serving these frames is
+            // exactly what put their accuracy at risk.
+            publish_health(slot, core, &mut w);
+            let at_risk = slot.at_risk.load(Ordering::Relaxed);
+            slot.frames.fetch_add(rs.len() as u64, Ordering::Relaxed);
+            if at_risk {
+                slot.at_risk_frames.fetch_add(rs.len() as u64, Ordering::Relaxed);
+            }
             for ((&(session, seq, accepted_at), r), (gt, &label)) in
                 tags.iter().zip(rs).zip(gts.iter().zip(&labels))
             {
                 let iou = r.mask.iou(gt);
                 let correct = r.predicted_class() == label;
                 res_tx
-                    .send(Msg::Result { session, seq, accepted_at, result: r, iou, correct })
+                    .send(Msg::Result {
+                        session,
+                        seq,
+                        accepted_at,
+                        result: r,
+                        iou,
+                        correct,
+                        at_risk,
+                    })
                     .ok();
             }
         }
@@ -1623,6 +1960,9 @@ fn worker_loop<W, F>(
                 busy_s,
                 utilization: if active_s > 0.0 { (busy_s / active_s).min(1.0) } else { 0.0 },
                 core: pinned_core,
+                health: slot.health_value(),
+                recals: slot.recals.load(Ordering::Relaxed),
+                at_risk_frames: slot.at_risk_frames.load(Ordering::Relaxed),
             },
             backend,
         ))
@@ -1662,6 +2002,7 @@ fn emit(
     result: FrameResult,
     iou: f64,
     correct: bool,
+    at_risk: bool,
     accepted_at: Instant,
     clock: &Clock,
     agg: &mut Aggregate,
@@ -1673,6 +2014,7 @@ fn emit(
         a.frames += 1;
         a.iou_sum += iou;
         a.correct += correct as u64;
+        a.accuracy_at_risk += at_risk as u64;
         a.energy_sum += result.modeled_energy_j;
         a.latency_sum += result.latency_s;
         a.kept_sum += result.mask.kept().max(1) as f64;
@@ -1789,7 +2131,7 @@ fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
                     core.activity.notify();
                 }
             }
-            Ok(Msg::Result { session, seq, accepted_at, result, iou, correct }) => {
+            Ok(Msg::Result { session, seq, accepted_at, result, iou, correct, at_risk }) => {
                 last_progress = clock.now();
                 let mut overflow: Option<String> = None;
                 let mut finalized = false;
@@ -1802,10 +2144,10 @@ fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
                 // A canceled-and-removed session can still have results in
                 // flight; they fall on the floor by design.
                 if let Some(state) = states.get_mut(&session) {
-                    state.pending.insert(seq, (result, iou, correct, accepted_at));
-                    while let Some((r, i, c, at)) = state.pending.remove(&state.next_emit) {
+                    state.pending.insert(seq, (result, iou, correct, at_risk, accepted_at));
+                    while let Some((r, i, c, ar, at)) = state.pending.remove(&state.next_emit) {
                         state.next_emit += 1;
-                        emit(state, r, i, c, at, &clock, &mut agg);
+                        emit(state, r, i, c, ar, at, &clock, &mut agg);
                     }
                     // Backstop: the dispatcher never lets more than
                     // `window` frames sit between dispatch and the stream,
@@ -1921,12 +2263,14 @@ fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
     let mut dropped = 0u64;
     let mut dropped_quota = 0u64;
     let mut slo_miss = 0u64;
+    let mut accuracy_at_risk = 0u64;
     let mut session_latency = LatencyHistogram::new();
     for s in recover(&core.sessions).iter() {
         dropped += s.rejected.load(Ordering::Relaxed);
         dropped_quota += s.rejected_quota.load(Ordering::Relaxed);
         let a = recover(&s.accum);
         slo_miss += a.slo_miss;
+        accuracy_at_risk += a.accuracy_at_risk;
         session_latency.merge(&a.session_latency);
     }
     let outcome = match failure {
@@ -1938,6 +2282,7 @@ fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
                 dropped,
                 dropped_quota,
                 slo_miss,
+                accuracy_at_risk,
                 p99_latency_s: session_latency.quantile(0.99),
                 wall_fps: if wall_s > 0.0 { agg.emitted as f64 / wall_s } else { 0.0 },
                 mean_latency_s: merged.frame_latency_mean_s(),

@@ -288,6 +288,60 @@ pub struct WorkerStats {
     /// (`EngineConfig::pin_workers`); `None` when pinning was off,
     /// unsupported on this platform, or refused by the kernel.
     pub core: Option<usize>,
+    /// Final optical-health score of this worker's backend in `[0, 1]`
+    /// (`1.0` for substrates without a fault model).
+    pub health: f64,
+    /// Recalibration windows this worker completed.
+    pub recals: u64,
+    /// Frames this worker served while its backend was accuracy-at-risk.
+    pub at_risk_frames: u64,
+}
+
+/// What a worker is doing with respect to hardware health — the
+/// recalibration state machine the health-aware dispatcher drives
+/// (`Serving → Draining → Recalibrating → Serving`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerMode {
+    /// In rotation, eligible for new frames.
+    Serving,
+    /// Flagged for recalibration: receives no new frames, finishing its
+    /// in-flight work.
+    Draining,
+    /// Drained and paying the modeled recalibration window.
+    Recalibrating,
+}
+
+impl WorkerMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            WorkerMode::Serving => "serving",
+            WorkerMode::Draining => "draining",
+            WorkerMode::Recalibrating => "recal",
+        }
+    }
+}
+
+/// Live per-worker hardware-health snapshot, surfaced by
+/// `Server::stats()` while a run is in flight.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkerHealthStats {
+    /// Worker index.
+    pub worker: usize,
+    /// Latest published health score in `[0, 1]`.
+    pub health: f64,
+    /// Current recalibration state.
+    pub mode: WorkerMode,
+    /// Whether the worker's backend currently reports accuracy-at-risk.
+    pub at_risk: bool,
+    /// Recalibration windows completed so far.
+    pub recals: u64,
+    /// Modeled energy charged for those windows (joules).
+    pub recal_energy_j: f64,
+    /// Frames served while accuracy-at-risk.
+    pub at_risk_frames: u64,
+    /// Health snapshots the worker has published (≥ 1 once the worker has
+    /// polled its backend; useful for tests synchronizing on publication).
+    pub updates: u64,
 }
 
 #[cfg(test)]

@@ -121,6 +121,14 @@ impl FrameReport {
     }
 }
 
+/// Tuning points each MR is swept through during recalibration to
+/// re-locate its drifted resonance (binary search over the 8-bit
+/// detuning range).
+pub const RECAL_SWEEP_STEPS: usize = 16;
+/// Thermo-optic settling window per sweep step (µs) — the heater time
+/// constant bounds how fast the search can step.
+pub const RECAL_SETTLE_US_PER_STEP: f64 = 10.0;
+
 /// The Opto-ViT accelerator model: five optical cores + EPU + buffers.
 #[derive(Debug, Clone, Copy)]
 pub struct AcceleratorModel {
@@ -271,6 +279,24 @@ impl AcceleratorModel {
         let m = &self.components;
         cost.weight_dac_conversions as f64 * (m.tuning.energy_pj_per_mr + m.dac.energy_pj) * 1e-12
             + cost.weight_bytes as f64 * m.memory.energy_pj_per_byte * 1e-12
+    }
+
+    /// Modeled cost `(time_s, energy_j)` of recalibrating a degraded
+    /// worker's optics: every MR is swept through
+    /// [`RECAL_SWEEP_STEPS`] tuning points to re-locate its drifted
+    /// resonance (each step one bank-tune plus one thermo-optic settle
+    /// window), then the full weight set is re-streamed and programmed.
+    /// Built from the same primitives as the batching discounts
+    /// ([`Self::weight_stream_delay_s`], [`Self::weight_program_energy_j`])
+    /// so recal is always strictly costlier than one weight program.
+    pub fn recalibration_cost(&self, cfg: &VitConfig) -> (f64, f64) {
+        let steps = RECAL_SWEEP_STEPS as f64;
+        let kept = cfg.num_patches();
+        let sweep_s = steps
+            * (self.components.tuning.bank_tune_ns * 1e-9 + RECAL_SETTLE_US_PER_STEP * 1e-6);
+        let time_s = sweep_s + self.weight_stream_delay_s(cfg, kept, true);
+        let energy_j = (steps + 1.0) * self.weight_program_energy_j(cfg, kept, true);
+        (time_s, energy_j)
     }
 
     /// Report for backbone + MGNet front end at a given RoI keep count
@@ -444,6 +470,20 @@ mod tests {
                 d_over < d_full,
                 "{v}-{res}: overhead {d_over} must be below frame delay {d_full}"
             );
+        }
+    }
+
+    #[test]
+    fn recalibration_costs_more_than_one_weight_program() {
+        let m = model();
+        for (v, res) in [(VitVariant::Tiny, 96), (VitVariant::Base, 224)] {
+            let cfg = VitConfig::variant(v, res, 10);
+            let (t, e) = m.recalibration_cost(&cfg);
+            let kept = cfg.num_patches();
+            assert!(t > m.weight_stream_delay_s(&cfg, kept, true), "{v}-{res}: time {t}");
+            assert!(e > m.weight_program_energy_j(&cfg, kept, true), "{v}-{res}: energy {e}");
+            // Sanity: a recal window is sub-second at these bank sizes.
+            assert!(t < 1.0, "{v}-{res}: recal time {t}s");
         }
     }
 

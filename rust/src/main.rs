@@ -6,6 +6,7 @@
 //!                 [--batch B] [--batch-wait-us U] [--window W]
 //!                 [--cameras K] [--weights w0,w1,..] [--pin]
 //!                 [--slo-ms F] [--quota N] [--rate F]
+//!                 [--faults S] [--drift-rate R]
 //!                 [--no-mask] [--seed S] [--objects K] [--artifacts DIR]
 //! optovit report  [--decomposed true]        # Fig. 8/9 energy+delay grid
 //! optovit roi     [--size 96|224]            # Fig. 10/11 operating points
@@ -32,6 +33,13 @@
 //! frames in flight, `--rate F` token-bucket-limits each session's
 //! admission rate in frames/s (rejections count the distinct `q-drop`
 //! column, never `dropped`).
+//!
+//! `--faults S` (sim backend only) seeds a per-worker degraded-optics
+//! schedule (MR thermal drift, stuck cells, dead VCSEL lanes) on the
+//! serving clock; `--drift-rate R` sets the drift accumulation in nm/s
+//! (default 1e-4). The per-worker table then reports each worker's final
+//! health score, completed recalibration windows, and at-risk frames,
+//! and the serve report counts `accuracy-at-risk` frames.
 
 use optovit::baselines;
 use optovit::cli::Args;
@@ -43,7 +51,8 @@ use optovit::coordinator::stats::StageMetrics;
 use optovit::energy::AcceleratorModel;
 use optovit::photonics::fpv::FpvModel;
 use optovit::photonics::MrGeometry;
-use optovit::runtime::{AnyFactory, BackendFactory, BackendKind};
+use optovit::coordinator::clock::Clock;
+use optovit::runtime::{AnyFactory, BackendFactory, BackendKind, FaultPlan};
 use optovit::util::table::{si_energy, si_time, Table};
 use optovit::vit::{MgnetConfig, VitConfig, VitVariant};
 
@@ -77,8 +86,8 @@ fn main() {
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     args.check_known(&[
         "frames", "seed", "objects", "workers", "queue", "batch", "batch-wait-us", "window",
-        "cameras", "weights", "pin", "slo-ms", "quota", "rate", "no-mask", "backend",
-        "artifacts",
+        "cameras", "weights", "pin", "slo-ms", "quota", "rate", "faults", "drift-rate",
+        "no-mask", "backend", "artifacts",
     ])
     .map_err(anyhow::Error::msg)?;
     let frames = args.get_u64("frames", 50).map_err(anyhow::Error::msg)?;
@@ -128,6 +137,30 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     // The host/sim reference models build their classifier head from the
     // factory config; keep it in lockstep with the pipeline's head width.
     factory.host.num_classes = cfg.num_classes;
+    // Degraded-optics schedule: sim-only (the fault model perturbs the
+    // *modeled* photonic substrate; host/pjrt have no such substrate).
+    let fault_seed = args
+        .get("faults")
+        .map(|v| v.parse::<u64>().map_err(|e| format!("--faults: {e}")))
+        .transpose()
+        .map_err(anyhow::Error::msg)?;
+    let drift_rate = args.get_f64("drift-rate", 1e-4).map_err(anyhow::Error::msg)?;
+    if !(drift_rate >= 0.0 && drift_rate.is_finite()) {
+        anyhow::bail!("--drift-rate: must be a finite non-negative nm/s figure");
+    }
+    if args.get("drift-rate").is_some() && fault_seed.is_none() {
+        anyhow::bail!("--drift-rate requires --faults S (the fault-schedule seed)");
+    }
+    if let Some(seed) = fault_seed {
+        if kind != BackendKind::Sim {
+            anyhow::bail!("--faults requires --backend sim (the modeled photonic substrate)");
+        }
+        factory = factory.with_faults(FaultPlan {
+            seed,
+            drift_nm_per_s: drift_rate,
+            clock: Clock::system(),
+        });
+    }
     let opts = ServeOptions {
         sensor_seed: seed,
         num_objects: objects,
@@ -213,8 +246,8 @@ fn cmd_serve_cameras(
         cams.push((cam, weight, sensor, drain));
     }
     let mut t = Table::new(vec![
-        "camera", "weight", "frames", "dropped", "q-drop", "slo miss", "fps", "latency", "p99",
-        "batch", "IoU",
+        "camera", "weight", "frames", "dropped", "q-drop", "slo miss", "at-risk", "fps",
+        "latency", "p99", "batch", "IoU",
     ]);
     for (cam, weight, sensor, drain) in cams {
         sensor.join().ok();
@@ -228,6 +261,7 @@ fn cmd_serve_cameras(
             report.dropped.to_string(),
             report.dropped_quota.to_string(),
             report.slo_miss.to_string(),
+            report.accuracy_at_risk.to_string(),
             format!("{:.1}", report.wall_fps),
             si_time(report.mean_latency_s),
             si_time(report.p99_latency_s),
@@ -256,6 +290,9 @@ fn print_serve_report(r: &ServeReport, metrics: &StageMetrics) {
         println!("SLO misses           {}", r.slo_miss);
         println!("p99 session latency  {}", si_time(r.p99_latency_s));
     }
+    if r.accuracy_at_risk > 0 {
+        println!("accuracy-at-risk     {} frames (served on degraded optics)", r.accuracy_at_risk);
+    }
     println!("wall throughput      {:.1} fps", r.wall_fps);
     println!(
         "mean latency         {}{}",
@@ -270,7 +307,9 @@ fn print_serve_report(r: &ServeReport, metrics: &StageMetrics) {
     println!("top-1 vs synth label {:.3}", r.top1_accuracy);
     if r.workers > 1 {
         println!("\nper-worker utilization:");
-        let mut t = Table::new(vec!["worker", "core", "frames", "busy", "utilization"]);
+        let mut t = Table::new(vec![
+            "worker", "core", "frames", "busy", "utilization", "health", "recals", "at-risk",
+        ]);
         for w in &r.per_worker {
             t.row(vec![
                 w.worker.to_string(),
@@ -278,6 +317,9 @@ fn print_serve_report(r: &ServeReport, metrics: &StageMetrics) {
                 w.frames.to_string(),
                 si_time(w.busy_s),
                 format!("{:.2}", w.utilization),
+                format!("{:.2}", w.health),
+                w.recals.to_string(),
+                w.at_risk_frames.to_string(),
             ]);
         }
         print!("{}", t.render());

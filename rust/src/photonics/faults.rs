@@ -1,4 +1,5 @@
-//! Microring fault models and their accuracy impact.
+//! Microring fault models, their accuracy impact, and clock-driven
+//! degradation schedules.
 //!
 //! Fabricated MR banks fail in characteristic ways: stuck heaters/DACs pin
 //! a weight cell, thermal drift shifts a whole bank, and a dead VCSEL kills
@@ -7,7 +8,19 @@
 //! abstraction so the test-suite (and the fault_injection example) can
 //! quantify how many faults the 8-bit budget absorbs — the robustness
 //! question ROBIN [26] asks of binary designs, answered here for Opto-ViT.
+//!
+//! Two layers:
+//!
+//! - [`FaultyBank`] — a *static* fault population on one weight bank
+//!   (screening-campaign view: how many effective bits survive).
+//! - [`FaultSchedule`] / [`DegradationState`] — a *dynamic*, seeded
+//!   timeline of degradation (thermal drift accumulation, crosstalk
+//!   growth, stuck-cell and dead-lane onsets) that a serving worker's
+//!   backend evaluates against elapsed `Clock` time. The continuous
+//!   [`DegradationState::health`] score in `[0, 1]` is what the
+//!   health-aware dispatcher routes on (see `coordinator::server`).
 
+use super::mr::{MicroRing, MrGeometry};
 use crate::util::rng::Rng;
 
 /// A fault affecting one MR weight cell or one channel.
@@ -41,20 +54,31 @@ impl FaultyBank {
 
     /// Sample a random fault population: each cell independently stuck with
     /// probability `p_stuck`, each channel dead with probability `p_dead`.
+    /// At most **one** fault lands on any cell: a dead channel (VCSEL
+    /// failure) takes precedence over stuck cells in its row, so a cell is
+    /// either dead-by-channel, stuck, or clean — never both.
+    ///
+    /// **Sampling order (stable contract).** The variate sequence drawn
+    /// from `rng` is fixed regardless of outcomes, so seeded fault
+    /// populations survive refactors of the injection logic: for each
+    /// channel in index order, draw 1 dead-trial variate, then for each
+    /// arm in index order draw a stuck-trial variate and a stuck-value
+    /// variate **unconditionally** (the value is discarded when the trial
+    /// fails or the channel is dead). Total draws are always
+    /// `wavelengths * (1 + 2 * arms)`. The regression test
+    /// `random_population_is_stable_across_refactors` pins one population.
     pub fn random(wavelengths: usize, arms: usize, p_stuck: f64, p_dead: f64, rng: &mut Rng) -> Self {
         let mut bank = Self::new(wavelengths, arms);
         for ch in 0..wavelengths {
-            if rng.chance(p_dead) {
+            let dead = rng.chance(p_dead);
+            if dead {
                 bank.inject(Fault::DeadChannel { channel: ch });
-                continue;
             }
             for arm in 0..arms {
-                if rng.chance(p_stuck) {
-                    bank.inject(Fault::StuckWeight {
-                        channel: ch,
-                        arm,
-                        value: rng.next_f32(),
-                    });
+                let stuck = rng.chance(p_stuck);
+                let value = rng.next_f32();
+                if stuck && !dead {
+                    bank.inject(Fault::StuckWeight { channel: ch, arm, value });
                 }
             }
         }
@@ -107,6 +131,200 @@ impl FaultyBank {
         } else {
             -(e.log2())
         }
+    }
+}
+
+// --- clock-driven degradation -------------------------------------------
+
+/// Effective-bits level mapped to health 1.0 (the paper's 8-bit weight
+/// budget: a bank at or above it is as good as new).
+pub const HEALTH_FULL_BITS: f64 = 8.0;
+/// Effective-bits level mapped to health 0.0 (below ~4 bits the bank
+/// serves numerically meaningless weights).
+pub const HEALTH_FLOOR_BITS: f64 = 4.0;
+/// Health below which frames served by the worker are counted
+/// *accuracy-at-risk* (≈ under 7 effective weight bits).
+pub const AT_RISK_HEALTH: f64 = 0.75;
+/// Mission window (seconds of worker uptime) over which a schedule's
+/// discrete fault onsets are drawn.
+pub const SCHEDULE_WINDOW_S: f64 = 600.0;
+/// Cap on seeded stuck-cell onsets per schedule.
+const MAX_STUCK_EVENTS: usize = 6;
+/// Cap on seeded dead-lane onsets per schedule.
+const MAX_DEAD_EVENTS: usize = 2;
+/// Fraction of neighbour-channel power coupled in per unit of
+/// linewidth-normalized drift (crosstalk grows as drifting resonances
+/// crowd their neighbours).
+const CROSSTALK_PER_LINEWIDTH: f64 = 0.02;
+
+/// Seeded, pure (clock-independent) degradation timeline for one worker's
+/// optics. The schedule never mutates: callers evaluate
+/// [`FaultSchedule::state_at`] at an elapsed-seconds offset, so the same
+/// schedule replayed over the same `ManualClock` steps yields bit-identical
+/// degradation — the determinism the `rust/tests/faults.rs` gate relies on.
+///
+/// **Sampling order (stable contract, mirrors [`FaultyBank::random`]).**
+/// From `Rng::new(seed)`: 1 stuck-count variate, 1 dead-count variate,
+/// then `MAX_STUCK_EVENTS` stuck-onset variates and `MAX_DEAD_EVENTS`
+/// dead-onset variates, all drawn unconditionally (surplus onsets beyond
+/// the drawn counts are discarded). Onsets are uniform over
+/// [`SCHEDULE_WINDOW_S`] and sorted ascending.
+#[derive(Debug, Clone)]
+pub struct FaultSchedule {
+    /// Seed the timeline was drawn from (diagnostic).
+    pub seed: u64,
+    /// MR thermal drift accumulation rate (nm of resonance shift per
+    /// second of uptime; ≈0.069 nm/K via [`MicroRing::thermal_shift_nm_per_k`]).
+    pub drift_nm_per_s: f64,
+    /// Bank geometry the health estimate is normalized against.
+    pub wavelengths: usize,
+    pub arms: usize,
+    /// Sorted stuck-cell onset times (seconds of uptime).
+    stuck_onsets_s: Vec<f64>,
+    /// Sorted dead-VCSEL-lane onset times (seconds of uptime).
+    dead_onsets_s: Vec<f64>,
+}
+
+impl FaultSchedule {
+    /// Draw a schedule for the paper's 32×64 bank geometry.
+    pub fn seeded(seed: u64, drift_nm_per_s: f64) -> Self {
+        Self::seeded_for_bank(seed, drift_nm_per_s, 32, 64)
+    }
+
+    /// Draw a schedule for an explicit bank geometry (see the type-level
+    /// sampling-order contract).
+    pub fn seeded_for_bank(
+        seed: u64,
+        drift_nm_per_s: f64,
+        wavelengths: usize,
+        arms: usize,
+    ) -> Self {
+        let mut rng = Rng::new(seed);
+        let n_stuck = rng.below(MAX_STUCK_EVENTS + 1);
+        let n_dead = rng.below(MAX_DEAD_EVENTS + 1);
+        let mut stuck_onsets_s: Vec<f64> =
+            (0..MAX_STUCK_EVENTS).map(|_| rng.uniform(0.0, SCHEDULE_WINDOW_S)).collect();
+        let mut dead_onsets_s: Vec<f64> =
+            (0..MAX_DEAD_EVENTS).map(|_| rng.uniform(0.0, SCHEDULE_WINDOW_S)).collect();
+        stuck_onsets_s.sort_by(f64::total_cmp);
+        stuck_onsets_s.truncate(n_stuck);
+        dead_onsets_s.sort_by(f64::total_cmp);
+        dead_onsets_s.truncate(n_dead);
+        FaultSchedule {
+            seed,
+            drift_nm_per_s: drift_nm_per_s.max(0.0),
+            wavelengths: wavelengths.max(1),
+            arms: arms.max(1),
+            stuck_onsets_s,
+            dead_onsets_s,
+        }
+    }
+
+    /// The degradation accumulated after `elapsed_s` seconds of uptime
+    /// (clamped at 0): continuous drift plus every discrete onset whose
+    /// time has passed. Pure — recalibration is modeled by the *caller*
+    /// resetting its elapsed-time epoch, not by mutating the schedule.
+    pub fn state_at(&self, elapsed_s: f64) -> DegradationState {
+        let t = elapsed_s.max(0.0);
+        let drift_nm = self.drift_nm_per_s * t;
+        let ring = reference_ring();
+        let crosstalk_growth = (drift_nm / ring.delta_nm() * CROSSTALK_PER_LINEWIDTH).min(0.2);
+        DegradationState {
+            drift_nm,
+            crosstalk_growth,
+            stuck_cells: self.stuck_onsets_s.iter().filter(|&&o| o <= t).count(),
+            dead_lanes: self
+                .dead_onsets_s
+                .iter()
+                .filter(|&&o| o <= t)
+                .count()
+                .min(self.wavelengths),
+            wavelengths: self.wavelengths,
+            arms: self.arms,
+        }
+    }
+}
+
+/// The reference ring the health estimate converts drift through:
+/// default geometry, Q = 5000, C-band 1550 nm — the same operating point
+/// as the screening campaign in `examples/fault_injection`.
+fn reference_ring() -> MicroRing {
+    MicroRing::at_wavelength(MrGeometry::default(), 5000.0, 1550.0)
+}
+
+/// Degradation accumulated by one worker's optics at a point in time —
+/// what [`FaultSchedule::state_at`] returns and the serving stack's
+/// `BackendHealth` is derived from.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DegradationState {
+    /// Accumulated MR resonance drift (nm).
+    pub drift_nm: f64,
+    /// Extra neighbour-channel power fraction coupled in by that drift.
+    pub crosstalk_growth: f64,
+    /// Stuck weight cells so far.
+    pub stuck_cells: usize,
+    /// Dead VCSEL lanes so far.
+    pub dead_lanes: usize,
+    /// Bank geometry the error estimate is normalized against.
+    pub wavelengths: usize,
+    pub arms: usize,
+}
+
+impl DegradationState {
+    /// A pristine bank (health exactly 1.0).
+    pub fn healthy(wavelengths: usize, arms: usize) -> Self {
+        DegradationState {
+            drift_nm: 0.0,
+            crosstalk_growth: 0.0,
+            stuck_cells: 0,
+            dead_lanes: 0,
+            wavelengths: wavelengths.max(1),
+            arms: arms.max(1),
+        }
+    }
+
+    /// Estimated RMS weight error (full-scale 1), combining the four
+    /// degradation channels as independent error sources:
+    /// drift × the reference ring's weight sensitivity, stuck cells at the
+    /// expected U[-1,1]-vs-U[0,1) mismatch (2/3 mean square), dead lanes
+    /// zeroing whole rows (1/3 mean square per cell), and crosstalk growth
+    /// as a gain error on the 1/√3 RMS weight.
+    pub fn estimated_rms_error(&self) -> f64 {
+        let cells = (self.wavelengths * self.arms).max(1) as f64;
+        let sens = reference_ring().weight_sensitivity(0.5);
+        let drift = sens * self.drift_nm;
+        let stuck = (self.stuck_cells as f64 * (2.0 / 3.0) / cells).sqrt();
+        let dead = (self.dead_lanes as f64 * self.arms as f64 * (1.0 / 3.0) / cells).sqrt();
+        let xt = self.crosstalk_growth * (1.0f64 / 3.0).sqrt();
+        (drift * drift + stuck * stuck + dead * dead + xt * xt).sqrt()
+    }
+
+    /// Effective weight bits at this degradation level
+    /// (`-log2(estimated_rms_error)`; infinite when pristine).
+    pub fn effective_bits(&self) -> f64 {
+        let e = self.estimated_rms_error();
+        if e <= 0.0 {
+            f64::INFINITY
+        } else {
+            -e.log2()
+        }
+    }
+
+    /// Continuous health score in `[0, 1]`: 1.0 at or above
+    /// [`HEALTH_FULL_BITS`] effective bits, 0.0 at or below
+    /// [`HEALTH_FLOOR_BITS`], linear in effective bits between.
+    pub fn health(&self) -> f64 {
+        let bits = self.effective_bits();
+        if bits.is_infinite() {
+            return 1.0;
+        }
+        ((bits - HEALTH_FLOOR_BITS) / (HEALTH_FULL_BITS - HEALTH_FLOOR_BITS)).clamp(0.0, 1.0)
+    }
+
+    /// Whether frames served at this level should be counted
+    /// accuracy-at-risk (health below [`AT_RISK_HEALTH`]).
+    pub fn at_risk(&self) -> bool {
+        self.health() < AT_RISK_HEALTH
     }
 }
 
@@ -185,5 +403,124 @@ mod tests {
             worst = worst.min(bank.effective_bits(&w));
         }
         assert!(worst > 5.0, "worst effective bits {worst}");
+    }
+
+    /// Pins one seeded population exactly. If the sampling order documented
+    /// on [`FaultyBank::random`] changes, this fails — that contract is what
+    /// keeps fault-injection campaigns reproducible across refactors.
+    #[test]
+    fn random_population_is_stable_across_refactors() {
+        let mut rng = Rng::new(0x51CD);
+        let bank = FaultyBank::random(4, 3, 0.3, 0.25, &mut rng);
+        assert_eq!(
+            bank.faults,
+            vec![
+                Fault::DeadChannel { channel: 0 },
+                Fault::StuckWeight { channel: 2, arm: 2, value: 0.45618567 },
+                Fault::StuckWeight { channel: 3, arm: 0, value: 0.2933382 },
+                Fault::StuckWeight { channel: 3, arm: 1, value: 0.6635391 },
+                Fault::StuckWeight { channel: 3, arm: 2, value: 0.05909135 },
+            ]
+        );
+    }
+
+    #[test]
+    fn at_most_one_fault_per_cell_even_at_high_rates() {
+        let mut rng = Rng::new(7);
+        let bank = FaultyBank::random(16, 8, 0.9, 0.5, &mut rng);
+        let mut dead_channels = std::collections::BTreeSet::new();
+        let mut stuck_cells = std::collections::BTreeSet::new();
+        for f in &bank.faults {
+            match *f {
+                Fault::DeadChannel { channel } => {
+                    assert!(dead_channels.insert(channel), "channel {channel} dead twice");
+                }
+                Fault::StuckWeight { channel, arm, .. } => {
+                    assert!(stuck_cells.insert((channel, arm)), "cell ({channel},{arm}) stuck twice");
+                }
+                Fault::BankDrift { .. } => unreachable!("random() never injects drift"),
+            }
+        }
+        // Dead channels take precedence: no stuck cell in a dead row.
+        for &(ch, _) in &stuck_cells {
+            assert!(!dead_channels.contains(&ch), "stuck cell in dead channel {ch}");
+        }
+        assert!(!dead_channels.is_empty() && !stuck_cells.is_empty());
+    }
+
+    /// The variate draw count must not depend on fault outcomes: two
+    /// generators that sample wildly different populations stay in
+    /// lockstep afterwards.
+    #[test]
+    fn draw_count_is_independent_of_outcomes() {
+        let mut a = Rng::new(99);
+        let mut b = Rng::new(99);
+        let _ = FaultyBank::random(8, 4, 0.9, 0.9, &mut a);
+        let _ = FaultyBank::random(8, 4, 0.0, 0.0, &mut b);
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_pure() {
+        let a = FaultSchedule::seeded(42, 1e-4);
+        let b = FaultSchedule::seeded(42, 1e-4);
+        for t in [0.0, 17.5, 300.0, 599.9, 1200.0] {
+            assert_eq!(a.state_at(t), b.state_at(t));
+        }
+        // Evaluation doesn't mutate: asking twice gives the same answer.
+        assert_eq!(a.state_at(300.0), a.state_at(300.0));
+    }
+
+    #[test]
+    fn degradation_is_monotone_in_time() {
+        let s = FaultSchedule::seeded(3, 2e-4);
+        let mut prev = s.state_at(0.0);
+        for t in 1..=60 {
+            let cur = s.state_at(t as f64 * 15.0);
+            assert!(cur.drift_nm >= prev.drift_nm);
+            assert!(cur.crosstalk_growth >= prev.crosstalk_growth);
+            assert!(cur.stuck_cells >= prev.stuck_cells);
+            assert!(cur.dead_lanes >= prev.dead_lanes);
+            assert!(cur.health() <= prev.health() + 1e-12);
+            prev = cur;
+        }
+        // Past the mission window everything discrete has fired.
+        let end = s.state_at(SCHEDULE_WINDOW_S + 1.0);
+        assert_eq!(end.stuck_cells, s.state_at(f64::MAX).stuck_cells);
+    }
+
+    #[test]
+    fn health_score_brackets() {
+        let fresh = DegradationState::healthy(32, 64);
+        assert_eq!(fresh.health(), 1.0);
+        assert!(!fresh.at_risk());
+
+        // Heavy degradation pins health to the floor.
+        let wrecked = DegradationState {
+            drift_nm: 0.5,
+            crosstalk_growth: 0.2,
+            stuck_cells: 512,
+            dead_lanes: 16,
+            wavelengths: 32,
+            arms: 64,
+        };
+        assert_eq!(wrecked.health(), 0.0);
+        assert!(wrecked.at_risk());
+
+        // A single stuck cell on a 32×64 bank keeps ~8+ bits: healthy.
+        let one = DegradationState { stuck_cells: 1, ..DegradationState::healthy(32, 64) };
+        assert!(one.effective_bits() > HEALTH_FULL_BITS - 3.0);
+        assert!(one.health() > wrecked.health());
+    }
+
+    #[test]
+    fn recalibration_resets_via_epoch() {
+        // Recal is modeled by the caller rewinding elapsed time to zero;
+        // the schedule itself stays pure.
+        let s = FaultSchedule::seeded(11, 5e-4);
+        let late = s.state_at(400.0);
+        let fresh = s.state_at(0.0);
+        assert!(fresh.health() >= late.health());
+        assert_eq!(fresh.drift_nm, 0.0);
     }
 }

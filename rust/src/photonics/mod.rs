@@ -11,6 +11,26 @@
 //! - [`fpv`] — Monte-Carlo fabrication-process variation over MR geometry.
 //! - [`vcsel`] — VCSEL drive/efficiency model for the optical inputs.
 //! - [`bpd`] — balanced photodetector accumulation model.
+//! - [`faults`] — static fault populations ([`FaultyBank`]) **and** the
+//!   clock-driven degradation layer the serving stack routes on.
+//!
+//! # Fault → health flow (degraded-optics serving)
+//!
+//! ```text
+//! FaultSchedule::seeded(seed_w, rate)      per worker w, pure timeline
+//!        │ state_at(elapsed since recal epoch)
+//!        ▼
+//! DegradationState { drift_nm, crosstalk_growth, stuck, dead }
+//!        │ estimated_rms_error → effective bits → health ∈ [0,1]
+//!        ▼
+//! SimBackend::health() ──▶ BackendHealth ──▶ worker HealthSlot (atomics)
+//!        │                                        │
+//!        │ recalibrate(): epoch ← now,            ▼
+//!        │ cost = AcceleratorModel::      dispatcher: route critical
+//!        │        recalibration_cost     traffic off at-risk workers,
+//!        ▼                               drain + recal below threshold
+//! worker rejoins healthy                 (see coordinator::server)
+//! ```
 
 pub mod bpd;
 pub mod crosstalk;
@@ -21,7 +41,10 @@ pub mod mr;
 pub mod vcsel;
 
 pub use crosstalk::{ChannelGrid, CrosstalkModel};
-pub use faults::{Fault, FaultyBank};
+pub use faults::{
+    AT_RISK_HEALTH, DegradationState, Fault, FaultSchedule, FaultyBank, HEALTH_FLOOR_BITS,
+    HEALTH_FULL_BITS,
+};
 pub use fpv::{FpvModel, FpvSample};
 pub use link::LinkBudget;
 pub use mr::{MicroRing, MrGeometry};

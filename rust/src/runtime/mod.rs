@@ -126,6 +126,37 @@ impl ModeledStages {
     }
 }
 
+/// Snapshot of a backend's optical-hardware condition, reported by
+/// substrates that model degradation ([`SimBackend`] with a fault schedule
+/// enabled). The serving dispatcher routes on [`BackendHealth::health`]
+/// and schedules recalibration windows when it decays — see
+/// `coordinator::server`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BackendHealth {
+    /// Continuous health score in `[0, 1]` (1.0 = pristine optics), from
+    /// [`crate::photonics::DegradationState::health`].
+    pub health: f64,
+    /// Accumulated MR resonance drift since the last recalibration (nm).
+    pub drift_nm: f64,
+    /// Stuck weight cells currently present.
+    pub stuck_cells: usize,
+    /// Dead VCSEL lanes currently present.
+    pub dead_lanes: usize,
+    /// Whether frames served right now should be counted accuracy-at-risk
+    /// (health below [`crate::photonics::AT_RISK_HEALTH`]).
+    pub at_risk: bool,
+}
+
+/// Modeled cost of one recalibration window, paid by a degraded worker
+/// while drained (from [`crate::energy::AcceleratorModel::recalibration_cost`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecalCost {
+    /// Wall time the worker is out of rotation (seconds).
+    pub time_s: f64,
+    /// Energy charged to the worker's recal accounting (joules).
+    pub energy_j: f64,
+}
+
 /// An execution substrate for the serving pipeline: loads artifacts by name
 /// and executes them over borrowed tensor views.
 ///
@@ -213,6 +244,24 @@ pub trait Backend {
     fn modeled_frame_latency_s(&mut self, kept_patches: usize, use_mask: bool) -> Option<f64> {
         self.modeled_stages_s(kept_patches, use_mask, true).map(|s| s.total_s())
     }
+
+    /// Current optical-hardware condition, for backends that model
+    /// degradation over clock time. `None` (the default) means the
+    /// substrate has no fault model and the dispatcher treats the worker
+    /// as permanently healthy.
+    fn health(&mut self) -> Option<BackendHealth> {
+        None
+    }
+
+    /// Recalibrate degraded optics: reset the fault state to pristine and
+    /// return the modeled cost of doing so. `None` (the default) means
+    /// there is nothing to recalibrate. Callers are expected to keep the
+    /// worker drained for `RecalCost::time_s` of clock time and charge
+    /// `RecalCost::energy_j` — the backend itself rejoins healthy
+    /// immediately.
+    fn recalibrate(&mut self) -> Option<RecalCost> {
+        None
+    }
 }
 
 /// Which backend to construct — the value behind `--backend pjrt|host|sim`.
@@ -264,7 +313,39 @@ pub trait BackendFactory: Sync {
     /// Build the backend for worker `worker`. Implementations must produce
     /// numerically identical backends for every worker (sharding must not
     /// change results), so `worker` is for diagnostics, not seeding.
+    ///
+    /// **One documented exception:** when a factory carries a [`FaultPlan`]
+    /// (degraded-optics simulation), each worker gets an independently
+    /// seeded degradation timeline derived from `worker` — physical copies
+    /// of the accelerator fail independently, and that is exactly what the
+    /// fleet-level fault gates exercise. Fault-free construction remains
+    /// worker-independent.
     fn create(&self, worker: usize) -> Result<Self::Backend>;
+}
+
+/// Configuration for per-worker degraded-optics simulation, carried by
+/// [`AnyFactory`]: worker `w` gets a [`crate::photonics::FaultSchedule`]
+/// seeded with `seed + w * 0x9E3779B97F4A7C15` (so fleets are reproducible
+/// from one seed while workers degrade independently) evaluated against
+/// `clock` time.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// Base seed for the fleet's degradation timelines.
+    pub seed: u64,
+    /// MR thermal drift accumulation rate (nm/s of uptime).
+    pub drift_nm_per_s: f64,
+    /// The serving clock the schedules are evaluated against — pass the
+    /// same clock as `EngineConfig::clock` so `ManualClock` tests drive
+    /// degradation deterministically.
+    pub clock: crate::coordinator::clock::Clock,
+}
+
+impl FaultPlan {
+    /// The per-worker schedule seed (golden-ratio stride over the base
+    /// seed, mirroring the doc on [`FaultPlan`]).
+    pub fn worker_seed(&self, worker: usize) -> u64 {
+        self.seed.wrapping_add((worker as u64).wrapping_mul(0x9E3779B97F4A7C15))
+    }
 }
 
 /// Factory for [`PjrtBackend`]s over one artifact directory.
@@ -384,6 +465,22 @@ impl Backend for AnyBackend {
             AnyBackend::Sim(b) => b.modeled_stages_s(kept_patches, use_mask, first_in_batch),
         }
     }
+
+    fn health(&mut self) -> Option<BackendHealth> {
+        match self {
+            AnyBackend::Pjrt(b) => b.health(),
+            AnyBackend::Host(b) => b.health(),
+            AnyBackend::Sim(b) => b.health(),
+        }
+    }
+
+    fn recalibrate(&mut self) -> Option<RecalCost> {
+        match self {
+            AnyBackend::Pjrt(b) => b.recalibrate(),
+            AnyBackend::Host(b) => b.recalibrate(),
+            AnyBackend::Sim(b) => b.recalibrate(),
+        }
+    }
 }
 
 /// Factory for [`AnyBackend`], selected by [`BackendKind`] at runtime.
@@ -394,22 +491,46 @@ pub struct AnyFactory {
     pub artifact_dir: String,
     /// Host/sim reference-model configuration.
     pub host: HostConfig,
+    /// Degraded-optics simulation (honored by the `sim` kind only): each
+    /// worker's backend gets an independently seeded fault schedule.
+    pub faults: Option<FaultPlan>,
 }
 
 impl AnyFactory {
     pub fn new(kind: BackendKind, artifact_dir: impl Into<String>) -> Self {
-        AnyFactory { kind, artifact_dir: artifact_dir.into(), host: HostConfig::default() }
+        AnyFactory {
+            kind,
+            artifact_dir: artifact_dir.into(),
+            host: HostConfig::default(),
+            faults: None,
+        }
+    }
+
+    /// Enable per-worker degraded-optics simulation (see [`FaultPlan`]).
+    pub fn with_faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
     }
 }
 
 impl BackendFactory for AnyFactory {
     type Backend = AnyBackend;
 
-    fn create(&self, _worker: usize) -> Result<AnyBackend> {
+    fn create(&self, worker: usize) -> Result<AnyBackend> {
         Ok(match self.kind {
             BackendKind::Pjrt => AnyBackend::Pjrt(PjrtBackend::new(&self.artifact_dir)?),
             BackendKind::Host => AnyBackend::Host(HostBackend::new(self.host)),
-            BackendKind::Sim => AnyBackend::Sim(SimBackend::new(self.host)),
+            BackendKind::Sim => {
+                let mut b = SimBackend::new(self.host);
+                if let Some(plan) = &self.faults {
+                    let schedule = crate::photonics::FaultSchedule::seeded(
+                        plan.worker_seed(worker),
+                        plan.drift_nm_per_s,
+                    );
+                    b.enable_faults(schedule, plan.clock.clone());
+                }
+                AnyBackend::Sim(b)
+            }
         })
     }
 }
@@ -466,7 +587,7 @@ mod tests {
         for (kind, name) in
             [(BackendKind::Pjrt, "pjrt"), (BackendKind::Host, "host"), (BackendKind::Sim, "sim")]
         {
-            let f = AnyFactory { kind, artifact_dir: "/nonexistent".into(), host };
+            let f = AnyFactory { kind, artifact_dir: "/nonexistent".into(), host, faults: None };
             let b = f.create(0).expect("factory");
             assert_eq!(b.name(), name);
             assert_eq!(b.needs_artifacts(), kind == BackendKind::Pjrt);
@@ -518,9 +639,9 @@ mod tests {
     fn any_backend_batch_matches_sequential() {
         const PD: usize = 16 * 16 * 3;
         let host = HostConfig { depth_limit: Some(1), ..HostConfig::default() };
-        let mut any = AnyFactory { kind: BackendKind::Host, artifact_dir: String::new(), host }
-            .create(0)
-            .expect("any factory");
+        let factory =
+            AnyFactory { kind: BackendKind::Host, artifact_dir: String::new(), host, faults: None };
+        let mut any = factory.create(0).expect("any factory");
         let xa: Vec<f32> = (0..4 * PD).map(|i| (i % 7) as f32 / 7.0).collect();
         let xb: Vec<f32> = (0..4 * PD).map(|i| (i % 11) as f32 / 11.0).collect();
         let dims = [4i64, PD as i64];
@@ -544,9 +665,10 @@ mod tests {
         assert_eq!(scores.len(), 4);
         assert!(b.is_loaded("mgnet_32"));
         // The same call through `AnyBackend` gives identical numerics.
-        let mut any = AnyFactory { kind: BackendKind::Host, artifact_dir: String::new(), host }
-            .create(0)
-            .expect("any factory");
+        let mut any =
+            AnyFactory { kind: BackendKind::Host, artifact_dir: String::new(), host, faults: None }
+                .create(0)
+                .expect("any factory");
         let scores_any = any.execute1("mgnet_32", &[TensorRef::new(&x, &dims)]).expect("exec");
         assert_eq!(scores, scores_any);
     }

@@ -29,12 +29,17 @@
 //! orders of magnitude more expensive than the energy model (see
 //! `AcceleratorModel::frame_energy`), so it must never run per frame.
 
+use std::time::Instant;
+
 use anyhow::Result;
 
 use super::host::{ArtifactSpec, HostBackend, HostConfig};
-use super::{Backend, ModeledStages, TensorRef};
+use super::{Backend, BackendHealth, ModeledStages, RecalCost, TensorRef};
+use crate::coordinator::clock::Clock;
 use crate::energy::AcceleratorModel;
-use crate::vit::{MgnetConfig, VitConfig};
+use crate::photonics::{DegradationState, FaultSchedule};
+use crate::util::rng::Rng;
+use crate::vit::{MgnetConfig, VitConfig, VitVariant};
 
 /// `(first_in_batch, follower)` modeled latency pair for one stage.
 #[derive(Debug, Clone, Copy)]
@@ -53,6 +58,32 @@ impl StagePair {
     }
 }
 
+/// Clock-driven degraded-optics state for one worker's backend: a pure
+/// seeded [`FaultSchedule`] evaluated at "seconds since the last
+/// recalibration epoch". Deterministic under `ManualClock` — same schedule
+/// plus same advances produce bit-identical degradation and perturbations.
+#[derive(Debug)]
+struct WorkerFaultState {
+    schedule: FaultSchedule,
+    clock: Clock,
+    /// Degradation accumulates from here; [`SimBackend::recalibrate`]
+    /// resets it to "now".
+    epoch: Instant,
+}
+
+impl WorkerFaultState {
+    fn state(&self) -> DegradationState {
+        self.schedule.state_at(self.clock.seconds_since(self.epoch))
+    }
+}
+
+/// Latency penalty per unit of lost health: a degraded bank needs extra
+/// tuning passes and guard time, up to +10% at health 0.
+const FAULT_LATENCY_PENALTY: f64 = 0.10;
+/// Modeled-energy penalty per unit of lost health: drift compensation and
+/// re-tune retries, up to +25% at health 0 (see `Pipeline`'s accounting).
+pub const FAULT_ENERGY_PENALTY: f64 = 0.25;
+
 /// [`Backend`] that wraps [`HostBackend`] for execution and overlays
 /// modeled photonic frame latency.
 #[derive(Debug)]
@@ -70,6 +101,9 @@ pub struct SimBackend {
     masked_latency: Vec<Option<StagePair>>,
     /// Modeled unmasked full-grid latency.
     full_latency: Option<StagePair>,
+    /// Degraded-optics simulation; `None` = ideal hardware (the default,
+    /// and the mode every pre-existing modeled-latency equality holds in).
+    faults: Option<WorkerFaultState>,
 }
 
 impl SimBackend {
@@ -86,12 +120,61 @@ impl SimBackend {
             mgnet_latency: None,
             masked_latency: Vec::new(),
             full_latency: None,
+            faults: None,
         }
     }
 
     /// The architecture model charging the latency.
     pub fn model(&self) -> &AcceleratorModel {
         &self.model
+    }
+
+    /// Enable clock-driven degraded-optics simulation: `schedule` is
+    /// evaluated at seconds-of-`clock`-time since construction (or since
+    /// the last [`Backend::recalibrate`]). Outputs gain seeded pseudo-noise
+    /// at the schedule's estimated RMS weight error, and modeled latency
+    /// inflates by up to [`FAULT_LATENCY_PENALTY`] as health decays.
+    pub fn enable_faults(&mut self, schedule: FaultSchedule, clock: Clock) {
+        let epoch = clock.now();
+        self.faults = Some(WorkerFaultState { schedule, clock, epoch });
+    }
+
+    /// Current degradation, if fault simulation is enabled.
+    fn degradation(&self) -> Option<DegradationState> {
+        self.faults.as_ref().map(WorkerFaultState::state)
+    }
+
+    /// Modeled-latency inflation factor at the current degradation level
+    /// (1.0 on ideal hardware, so cached pristine figures pass through
+    /// untouched).
+    fn latency_factor(&self) -> f64 {
+        match self.degradation() {
+            Some(d) => 1.0 + FAULT_LATENCY_PENALTY * (1.0 - d.health()),
+            None => 1.0,
+        }
+    }
+
+    /// Perturb host-computed outputs with seeded pseudo-noise at the
+    /// degradation's estimated RMS weight error. The noise generator is
+    /// seeded from the schedule seed and the *quantized* degradation
+    /// state, so identical clock timelines perturb identically and the
+    /// pristine state (rms 0) is a no-op.
+    fn perturb(&self, outputs: &mut [Vec<f32>]) {
+        let Some(fs) = &self.faults else { return };
+        let d = fs.state();
+        let rms = d.estimated_rms_error();
+        if rms <= 0.0 {
+            return;
+        }
+        // Quantize the error level so the seed is stable across f64 jitter
+        // (1e-6 steps of rms; ManualClock timelines land on exact steps).
+        let level = (rms * 1e6).round() as u64;
+        let mut rng = Rng::new(fs.schedule.seed ^ level.rotate_left(17));
+        for out in outputs.iter_mut() {
+            for x in out.iter_mut() {
+                *x += (rms * rng.uniform(-1.0, 1.0)) as f32;
+            }
+        }
     }
 
     /// Model one pass of `cfg` at `kept` patches: full latency for a
@@ -137,7 +220,9 @@ impl Backend for SimBackend {
             // capture above cannot be bypassed.
             self.load(artifact)?;
         }
-        self.inner.execute(artifact, inputs)
+        let mut out = self.inner.execute(artifact, inputs)?;
+        self.perturb(&mut out);
+        Ok(out)
     }
 
     fn execute_batch(
@@ -148,7 +233,11 @@ impl Backend for SimBackend {
         if !self.inner.is_loaded(artifact) {
             self.load(artifact)?;
         }
-        self.inner.execute_batch(artifact, batch)
+        let mut out = self.inner.execute_batch(artifact, batch)?;
+        for frame in out.iter_mut() {
+            self.perturb(frame);
+        }
+        Ok(out)
     }
 
     fn modeled_stages_s(
@@ -158,12 +247,16 @@ impl Backend for SimBackend {
         first_in_batch: bool,
     ) -> Option<ModeledStages> {
         let vit = self.backbone?;
+        // Caches hold pristine-hardware figures; degradation inflates them
+        // at return time so recalibration instantly restores the ideal
+        // model (factor 1.0 when fault simulation is off).
+        let k = self.latency_factor();
         if !use_mask {
             if self.full_latency.is_none() {
                 self.full_latency = Some(self.stage_pair(&vit, vit.num_patches()));
             }
             let full = self.full_latency.unwrap();
-            return Some(ModeledStages { mgnet_s: 0.0, backbone_s: full.pick(first_in_batch) });
+            return Some(ModeledStages { mgnet_s: 0.0, backbone_s: full.pick(first_in_batch) * k });
         }
         let mg = self.mgnet?;
         if self.mgnet_latency.is_none() {
@@ -180,16 +273,38 @@ impl Backend for SimBackend {
         }
         let backbone = self.masked_latency[kept].unwrap();
         Some(ModeledStages {
-            mgnet_s: self.mgnet_latency.unwrap(),
-            backbone_s: backbone.pick(first_in_batch),
+            mgnet_s: self.mgnet_latency.unwrap() * k,
+            backbone_s: backbone.pick(first_in_batch) * k,
         })
+    }
+
+    fn health(&mut self) -> Option<BackendHealth> {
+        let d = self.degradation()?;
+        Some(BackendHealth {
+            health: d.health(),
+            drift_nm: d.drift_nm,
+            stuck_cells: d.stuck_cells,
+            dead_lanes: d.dead_lanes,
+            at_risk: d.at_risk(),
+        })
+    }
+
+    fn recalibrate(&mut self) -> Option<RecalCost> {
+        // Cost first (immutable borrows), then reset the epoch.
+        let cfg = self.backbone.unwrap_or_else(|| {
+            VitConfig::variant(VitVariant::Tiny, 96, self.inner.config().num_classes)
+        });
+        let (time_s, energy_j) = self.model.recalibration_cost(&cfg);
+        let fs = self.faults.as_mut()?;
+        fs.epoch = fs.clock.now();
+        Some(RecalCost { time_s, energy_j })
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::vit::VitVariant;
+    use std::time::Duration;
 
     fn sim() -> SimBackend {
         SimBackend::new(HostConfig { depth_limit: Some(1), ..HostConfig::default() })
@@ -291,5 +406,62 @@ mod tests {
         let batched = s2.execute_batch("mgnet_32", &batch).unwrap();
         assert_eq!(batched[0][0], scores_host);
         assert_eq!(batched[1][0], scores_host);
+    }
+
+    #[test]
+    fn no_fault_state_means_no_health() {
+        let mut s = loaded_sim();
+        assert_eq!(s.health(), None);
+        assert_eq!(s.recalibrate(), None);
+    }
+
+    #[test]
+    fn fault_schedule_degrades_and_recal_restores() {
+        let (clock, manual) = Clock::manual();
+        let mut s = loaded_sim();
+        // Seed 5: stuck onset at ~56 s, dead lanes at ~402/541 s.
+        s.enable_faults(FaultSchedule::seeded_for_bank(5, 1e-3, 32, 64), clock);
+        let h0 = s.health().expect("fault sim enabled");
+        assert_eq!(h0.health, 1.0);
+        assert!(!h0.at_risk);
+        let base = s.modeled_frame_latency_s(2, true).unwrap();
+
+        manual.advance(Duration::from_secs(200));
+        let h1 = s.health().unwrap();
+        assert!(h1.health < 1.0, "{h1:?}");
+        assert!(h1.drift_nm > 0.0 && h1.stuck_cells >= 1);
+        let degraded = s.modeled_frame_latency_s(2, true).unwrap();
+        assert!(degraded > base, "degraded latency {degraded} !> {base}");
+
+        let cost = s.recalibrate().expect("recal on fault sim");
+        assert!(cost.time_s > 0.0 && cost.energy_j > 0.0);
+        let h2 = s.health().unwrap();
+        assert_eq!(h2.health, 1.0, "recal must restore pristine optics");
+        assert_eq!(h2.drift_nm, 0.0);
+        // Pristine caches were never poisoned: the ideal figure returns.
+        assert_eq!(s.modeled_frame_latency_s(2, true), Some(base));
+    }
+
+    #[test]
+    fn degraded_outputs_are_perturbed_but_deterministic() {
+        const PD: usize = 16 * 16 * 3;
+        let x: Vec<f32> = (0..4 * PD).map(|i| (i % 13) as f32 / 13.0).collect();
+        let dims = [4i64, PD as i64];
+        let run = || {
+            let (clock, manual) = Clock::manual();
+            let mut s = loaded_sim();
+            s.enable_faults(FaultSchedule::seeded_for_bank(9, 5e-4, 32, 64), clock);
+            manual.advance(Duration::from_secs(150));
+            let out = s.execute1("mgnet_32", &[TensorRef::new(&x, &dims)]).unwrap();
+            (s.health().unwrap(), out)
+        };
+        let (ha, oa) = run();
+        let (hb, ob) = run();
+        assert_eq!(ha, hb, "same seed + same manual timeline → same health");
+        assert_eq!(oa, ob, "→ bit-identical perturbed outputs");
+        // And the perturbation is real: clean numerics differ.
+        let mut clean = loaded_sim();
+        let oc = clean.execute1("mgnet_32", &[TensorRef::new(&x, &dims)]).unwrap();
+        assert_ne!(oa, oc, "degraded outputs must deviate from ideal numerics");
     }
 }

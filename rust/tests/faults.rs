@@ -1,0 +1,602 @@
+//! Deterministic degraded-optics gate — fault- and drift-aware serving
+//! proven under a step-controlled [`ManualClock`], with exact
+//! expectations on routing, recal scheduling, and `accuracy_at_risk`
+//! accounting:
+//!
+//! 1. **health-aware routing + the recal lifecycle**: with one worker
+//!    accuracy-at-risk, the SLO session's (critical) frames route to the
+//!    healthy worker, exactly the background frames ride the degraded
+//!    optics, and when health sinks below `recal_below` the worker
+//!    drains fully, pays the modeled recal cost over manual time, and
+//!    rejoins healthy — the SLO session finishes with zero misses;
+//! 2. **the health-blind control arm** (`HealthPolicy::aware = false`):
+//!    the same machinery with awareness off serves the SLO frame on
+//!    degraded-and-slow optics, provably missing the SLO — and never
+//!    schedules a recal window even at floor health (degradation is
+//!    recorded, not acted on);
+//! 3. **availability beats accuracy**: a lone worker below the recal
+//!    threshold is never drained (no healthy spare exists), keeps
+//!    serving, and every frame counts accuracy-at-risk — per session,
+//!    with the aggregate exactly the per-session sum;
+//! 4. **end to end over the real substrate**: a seeded [`FaultPlan`] on
+//!    the `sim` backend degrades both workers by pure thermal drift,
+//!    the dispatcher recals them one at a time (at least one worker is
+//!    always serving), and the session drains completely.
+//!
+//! Synchronization notes (same discipline as `rust/tests/qos.rs`): no
+//! `thread::sleep` anywhere — blocking is channel receives and clock
+//! events, and manual time moves only on explicit `advance` calls. The
+//! only polling is yield-spin waits on `Server::stats()` snapshots for
+//! *push-driven* worker-thread state (health publication, recal
+//! transitions), bounded by generous wall-clock bailouts: those waits
+//! are about scheduler liveness, never about manual time.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+use optovit::coordinator::batcher::{BatchPolicy, BucketRouter};
+use optovit::coordinator::clock::{Clock, ManualClock};
+use optovit::coordinator::engine::{EngineConfig, FrameWorker, HealthPolicy};
+use optovit::coordinator::pipeline::{FrameResult, Pipeline, PipelineConfig};
+use optovit::coordinator::server::{Server, ServerStats, SessionOptions};
+use optovit::coordinator::stats::WorkerMode;
+use optovit::coordinator::StageMetrics;
+use optovit::photonics::AT_RISK_HEALTH;
+use optovit::runtime::{
+    AnyFactory, BackendFactory, BackendHealth, BackendKind, FaultPlan, HostConfig, RecalCost,
+};
+use optovit::sensor::{Frame, VideoSource};
+
+const PATCH_PX: usize = 16;
+/// Modeled recal window the mock backend charges (manual seconds).
+const RECAL_S: f64 = 2.0;
+/// Modeled recal energy the mock backend charges (joules).
+const RECAL_J: f64 = 5.0;
+/// Wall-clock bailout for yield-spin waits on push-driven worker state.
+const SPIN_BOUND: Duration = Duration::from_secs(30);
+
+/// Test-controlled fault state shared with one mock worker: the test
+/// sets health and observes processing/recal activity through atomics.
+struct Probe {
+    /// Health score the worker's `health()` hook reports (f64 bits).
+    health_bits: AtomicU64,
+    /// Manual-clock milliseconds each processed group consumes — a
+    /// degraded worker serves *slowly* (0 for a pristine one).
+    stall_ms: AtomicU64,
+    /// Process calls entered (counted before any gating), so the test
+    /// can prove which worker a frame landed on.
+    entered: AtomicU64,
+    /// Backend recalibrations performed (each resets health to 1.0).
+    recals: AtomicU64,
+}
+
+impl Probe {
+    fn new(health: f64, stall_ms: u64) -> Arc<Self> {
+        Arc::new(Probe {
+            health_bits: AtomicU64::new(health.to_bits()),
+            stall_ms: AtomicU64::new(stall_ms),
+            entered: AtomicU64::new(0),
+            recals: AtomicU64::new(0),
+        })
+    }
+
+    fn set_health(&self, h: f64) {
+        self.health_bits.store(h.to_bits(), Ordering::SeqCst);
+    }
+
+    fn health(&self) -> f64 {
+        f64::from_bits(self.health_bits.load(Ordering::SeqCst))
+    }
+
+    fn entered(&self) -> u64 {
+        self.entered.load(Ordering::SeqCst)
+    }
+}
+
+/// Deterministic worker whose optical condition the test scripts: health
+/// comes from its [`Probe`], an optional gate parks `process` until the
+/// test sends a permit (one permit == one processed group), and a
+/// nonzero stall advances the manual clock while "serving" — degraded
+/// optics made exactly as slow as the test needs.
+struct FaultableWorker {
+    probe: Arc<Probe>,
+    gate: Option<mpsc::Receiver<()>>,
+    manual: ManualClock,
+    router: BucketRouter,
+    metrics: StageMetrics,
+}
+
+impl FaultableWorker {
+    fn new(probe: Arc<Probe>, gate: Option<mpsc::Receiver<()>>, manual: ManualClock) -> Self {
+        FaultableWorker {
+            probe,
+            gate,
+            manual,
+            router: BucketRouter::even(36, 4),
+            metrics: StageMetrics::new(),
+        }
+    }
+
+    /// Entry bookkeeping shared by `process` and `process_batch`: count
+    /// the call, wait for a permit if gated, then burn the scripted
+    /// amount of manual time.
+    fn step(&mut self) {
+        self.probe.entered.fetch_add(1, Ordering::SeqCst);
+        if let Some(gate) = self.gate.take() {
+            // A dropped sender means the test stopped choreographing;
+            // degrade to ungated instead of wedging the worker.
+            if gate.recv().is_ok() {
+                self.gate = Some(gate);
+            }
+        }
+        let stall = self.probe.stall_ms.load(Ordering::SeqCst);
+        if stall > 0 {
+            self.manual.advance(Duration::from_millis(stall));
+        }
+    }
+
+    fn result(&mut self, frame: &Frame, batch_size: usize) -> FrameResult {
+        let mask = frame.gt_mask(PATCH_PX);
+        let kept = mask.kept().max(1);
+        let bucket = self.router.route(kept);
+        self.metrics.record_stage("total", 1e-4);
+        self.metrics.record_frame(1e-5, kept);
+        self.metrics.record_batch_size(batch_size);
+        let mut logits = vec![0.0f32; 10];
+        logits[frame.label % 10] = 1.0;
+        FrameResult {
+            frame_index: frame.index,
+            logits,
+            mask,
+            bucket,
+            modeled_energy_j: 1e-5,
+            latency_s: 1e-4,
+            batch_size,
+        }
+    }
+}
+
+impl FrameWorker for FaultableWorker {
+    fn process(&mut self, frame: &Frame) -> Result<FrameResult> {
+        self.step();
+        Ok(self.result(frame, 1))
+    }
+
+    fn process_batch(&mut self, frames: &[Frame]) -> Result<Vec<FrameResult>> {
+        self.step();
+        let n = frames.len().max(1);
+        Ok(frames.iter().map(|f| self.result(f, n)).collect())
+    }
+
+    fn take_metrics(&mut self) -> StageMetrics {
+        std::mem::take(&mut self.metrics)
+    }
+
+    fn health(&mut self) -> Option<BackendHealth> {
+        let h = self.probe.health();
+        Some(BackendHealth {
+            health: h,
+            drift_nm: 0.0,
+            stuck_cells: 0,
+            dead_lanes: 0,
+            at_risk: h < AT_RISK_HEALTH,
+        })
+    }
+
+    fn recalibrate(&mut self) -> Option<RecalCost> {
+        self.probe.recals.fetch_add(1, Ordering::SeqCst);
+        self.probe.set_health(1.0);
+        self.probe.stall_ms.store(0, Ordering::SeqCst);
+        Some(RecalCost { time_s: RECAL_S, energy_j: RECAL_J })
+    }
+}
+
+/// A manual-clock server over scripted [`FaultableWorker`]s, one probe
+/// (and optional processing gate) per worker. `max_batch = 1` keeps
+/// every frame its own group, so one gate permit releases exactly one
+/// frame.
+fn faulty_server(
+    probes: Vec<Arc<Probe>>,
+    gates: Vec<Option<mpsc::Receiver<()>>>,
+    policy: HealthPolicy,
+) -> (Server, ManualClock) {
+    let (clock, manual) = Clock::manual();
+    let mut cfg = EngineConfig::new(probes.len(), PATCH_PX, 96);
+    cfg.clock = clock;
+    cfg.batch = BatchPolicy::batched(1, Duration::from_secs(3600));
+    // Manual time never advances past these on its own; generous bounds
+    // keep test-driven advances from tripping them.
+    cfg.warmup_timeout_s = 24.0 * 3600.0;
+    cfg.stall_timeout_s = 24.0 * 3600.0;
+    cfg.health = policy;
+    let gates = Mutex::new(gates);
+    let worker_clock = manual.clone();
+    let server = Server::start(
+        move |wid| {
+            Ok(FaultableWorker::new(
+                probes[wid].clone(),
+                gates.lock().unwrap()[wid].take(),
+                worker_clock.clone(),
+            ))
+        },
+        cfg,
+    )
+    .expect("server");
+    server.wait_ready(Duration::from_secs(3600)).expect("workers warm");
+    (server, manual)
+}
+
+/// Identical frame content with distinct indices (see `qos.rs`): routing
+/// depends only on policy, never on scene content.
+fn frames(n: u64) -> Vec<Frame> {
+    let template = VideoSource::new(96, 2, 42).next_frame();
+    (0..n)
+        .map(|i| {
+            let mut f = template.clone();
+            f.index = i;
+            f
+        })
+        .collect()
+}
+
+/// Yield-spin until `pred` holds on a fresh stats snapshot — push-driven
+/// worker state only (see the module doc), with a loud wall-clock
+/// bailout.
+fn wait_stats(server: &Server, what: &str, pred: impl Fn(&ServerStats) -> bool) -> ServerStats {
+    let deadline = std::time::Instant::now() + SPIN_BOUND;
+    loop {
+        let stats = server.stats().expect("stats");
+        if pred(&stats) {
+            return stats;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "timed out waiting for {what}; worker health: {:?}",
+            stats.worker_health
+        );
+        std::thread::yield_now();
+    }
+}
+
+/// Yield-spin until a probe has entered `target` process calls.
+fn wait_entered(probe: &Probe, target: u64, what: &str) {
+    let deadline = std::time::Instant::now() + SPIN_BOUND;
+    while probe.entered() < target {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "timed out waiting for {what} (entered {} of {target})",
+            probe.entered()
+        );
+        std::thread::yield_now();
+    }
+}
+
+/// Gate 1 — the aware arm. Worker 1 is accuracy-at-risk (health 0.65):
+/// the SLO session's critical frame routes to healthy worker 0 even
+/// though both are idle, exactly the two background frames ride the
+/// degraded optics, and when health then collapses to 0.2 the worker
+/// drains fully, pays a 2 s modeled recal window on the manual
+/// timeline, and rejoins healthy. The SLO session never misses.
+#[test]
+fn health_aware_routing_shields_critical_traffic_and_recals_the_degraded_worker() {
+    const SLO: Duration = Duration::from_millis(10);
+    let (gate_tx, gate_rx) = mpsc::channel();
+    let p0 = Probe::new(1.0, 0);
+    // At risk (< AT_RISK_HEALTH = 0.75) but above recal_below (0.6):
+    // routed around, not yet recalibrated.
+    let p1 = Probe::new(0.65, 0);
+    let (server, manual) = faulty_server(
+        vec![p0.clone(), p1.clone()],
+        vec![Some(gate_rx), None],
+        HealthPolicy::default(),
+    );
+
+    // Routing reads published health: wait for both workers' first
+    // publication before placing anything.
+    wait_stats(&server, "initial health publication", |s| {
+        s.worker_health.len() == 2
+            && s.worker_health[0].updates >= 1
+            && s.worker_health[1].at_risk
+    });
+
+    let mut slo = server
+        .session(SessionOptions::named("slo").with_queue_depth(8).with_slo(SLO))
+        .expect("slo session");
+    let mut bulk =
+        server.session(SessionOptions::named("bulk").with_queue_depth(8)).expect("bulk session");
+    let mut fs = frames(8).into_iter();
+
+    // The SLO frame is critical: both workers are idle, so only the
+    // at-risk bias can explain it landing on worker 0 — where the gate
+    // parks it mid-`process`, pinning worker 0's inflight at 1.
+    slo.submit(fs.next().unwrap()).expect("slo submit");
+    wait_entered(&p0, 1, "worker 0 to pick up the critical frame");
+
+    // Background frames are non-critical and the degraded worker is now
+    // the least loaded: exactly these two ride the at-risk optics.
+    // Draining each result before the next submit keeps worker 1's
+    // inflight observably 0 at every placement.
+    for _ in 0..2 {
+        bulk.submit(fs.next().unwrap()).expect("bulk submit");
+        (&mut bulk).next().expect("bulk result").expect("bulk ok");
+    }
+    assert_eq!(p1.entered(), 2, "both background frames must land on the degraded worker");
+
+    // Release the critical frame. No manual time ever passed, so the
+    // SLO session emits at zero latency — no miss is possible.
+    gate_tx.send(()).expect("release worker 0");
+    (&mut slo).next().expect("slo result").expect("slo ok");
+
+    // The optics now decay past the recal threshold. A 1 ms advance
+    // (nothing is in flight) wakes the fleet: worker 1 republishes, the
+    // dispatcher drains it, and — already idle — it starts its modeled
+    // recal window immediately.
+    p1.set_health(0.2);
+    manual.advance(Duration::from_millis(1));
+    let stats = wait_stats(&server, "worker 1 to enter its recal window", |s| {
+        s.worker_health[1].mode == WorkerMode::Recalibrating
+    });
+    assert_eq!(stats.worker_health[1].recals, 0, "the recal window has not completed yet");
+    assert!(
+        (stats.worker_health[1].recal_energy_j - RECAL_J).abs() < 1e-12,
+        "modeled recal energy is charged when the window opens (got {})",
+        stats.worker_health[1].recal_energy_j
+    );
+    assert_eq!(p1.recals.load(Ordering::SeqCst), 1, "the backend recalibrated exactly once");
+
+    // Drain-before-rejoin: a recalibrating worker is out of rotation,
+    // so background traffic falls to worker 0 (permit sent first).
+    gate_tx.send(()).expect("permit for worker 0");
+    bulk.submit(fs.next().unwrap()).expect("bulk submit during recal");
+    (&mut bulk).next().expect("bulk result").expect("bulk ok");
+    assert_eq!(p1.entered(), 2, "a recalibrating worker must receive no frames");
+
+    // The window is RECAL_S = 2 s of manual time: 1 s in, still closed…
+    manual.advance(Duration::from_secs(1));
+    let stats = server.stats().expect("stats");
+    assert_eq!(stats.worker_health[1].mode, WorkerMode::Recalibrating);
+    assert_eq!(stats.worker_health[1].recals, 0);
+
+    // …and crossing it rejoins the worker, healthy.
+    manual.advance(Duration::from_millis(1500));
+    wait_stats(&server, "worker 1 to rejoin after recal", |s| {
+        s.worker_health[1].recals == 1 && s.worker_health[1].mode == WorkerMode::Serving
+    });
+
+    // Serving continues on the healed fleet (either worker may take
+    // this one — both are healthy now, so nothing is at risk).
+    gate_tx.send(()).expect("permit for worker 0");
+    bulk.submit(fs.next().unwrap()).expect("bulk submit after recal");
+    (&mut bulk).next().expect("bulk result").expect("bulk ok");
+
+    slo.close();
+    bulk.close();
+    let slo_report = slo.finish().expect("slo drain");
+    let bulk_report = bulk.finish().expect("bulk drain");
+    assert_eq!(slo_report.frames, 1);
+    assert_eq!(slo_report.slo_miss, 0, "the critical session never touched degraded optics");
+    assert_eq!(slo_report.accuracy_at_risk, 0);
+    assert!(
+        slo_report.p99_latency_s <= SLO.as_secs_f64(),
+        "SLO p99 must hold (got {})",
+        slo_report.p99_latency_s
+    );
+    assert_eq!(bulk_report.frames, 4);
+    assert_eq!(
+        bulk_report.accuracy_at_risk, 2,
+        "exactly the two frames served at health 0.65 count as at risk"
+    );
+
+    let stats = server.stats().expect("stats");
+    let session_sum: u64 = stats.sessions.iter().map(|s| s.report.accuracy_at_risk).sum();
+    assert_eq!(session_sum, 2);
+    assert_eq!(
+        stats.aggregate.accuracy_at_risk, session_sum,
+        "aggregate accuracy_at_risk must equal the per-session sum"
+    );
+
+    let (agg, _metrics) = server.shutdown().expect("shutdown");
+    assert_eq!(agg.frames, 5);
+    assert_eq!(agg.slo_miss, 0);
+    assert_eq!(agg.accuracy_at_risk, 2);
+    let w0 = agg.per_worker.iter().find(|w| w.worker == 0).expect("worker 0 stats");
+    let w1 = agg.per_worker.iter().find(|w| w.worker == 1).expect("worker 1 stats");
+    assert_eq!(w1.recals, 1);
+    assert_eq!(w1.at_risk_frames, 2);
+    assert!((w1.health - 1.0).abs() < 1e-12, "the degraded worker rejoined at full health");
+    assert_eq!(w0.recals, 0);
+    assert_eq!(w0.at_risk_frames, 0);
+    assert_eq!(w0.frames + w1.frames, 5);
+}
+
+/// Gate 2 — the control arm. Awareness off, both workers degraded
+/// (health 0.2) and slow: serving any group burns 50 ms of manual time,
+/// five times the SLO. The blind dispatcher serves the SLO frame on
+/// degraded optics and provably misses — and even at floor health it
+/// never schedules a recal window (degradation recorded, not acted on).
+#[test]
+fn health_blind_control_misses_slo_on_degraded_optics_and_never_recals() {
+    const SLO: Duration = Duration::from_millis(10);
+    let p0 = Probe::new(0.2, 50);
+    let p1 = Probe::new(0.2, 50);
+    let blind = HealthPolicy { aware: false, ..HealthPolicy::default() };
+    let (server, _manual) = faulty_server(vec![p0.clone(), p1.clone()], vec![None, None], blind);
+
+    wait_stats(&server, "initial health publication", |s| {
+        s.worker_health.iter().all(|w| w.updates >= 1 && w.at_risk)
+    });
+
+    let mut slo = server
+        .session(SessionOptions::named("slo").with_queue_depth(8).with_slo(SLO))
+        .expect("slo session");
+    slo.submit(frames(1).remove(0)).expect("submit");
+    (&mut slo).next().expect("result").expect("ok");
+
+    slo.close();
+    let report = slo.finish().expect("drain");
+    assert_eq!(report.frames, 1);
+    assert_eq!(
+        report.slo_miss, 1,
+        "a health-blind dispatcher serves the SLO frame on degraded optics and misses"
+    );
+    assert_eq!(report.accuracy_at_risk, 1, "…and the frame counts as accuracy-at-risk");
+
+    let stats = server.stats().expect("stats");
+    assert_eq!(stats.aggregate.accuracy_at_risk, 1);
+    let session_sum: u64 = stats.sessions.iter().map(|s| s.report.accuracy_at_risk).sum();
+    assert_eq!(stats.aggregate.accuracy_at_risk, session_sum);
+    for w in &stats.worker_health {
+        assert_eq!(w.mode, WorkerMode::Serving, "blind mode never schedules a recal window");
+        assert_eq!(w.recals, 0);
+    }
+    assert_eq!(p0.recals.load(Ordering::SeqCst) + p1.recals.load(Ordering::SeqCst), 0);
+
+    let (agg, _metrics) = server.shutdown().expect("shutdown");
+    assert_eq!(agg.slo_miss, 1);
+    assert_eq!(agg.accuracy_at_risk, 1);
+    let risky: u64 = agg.per_worker.iter().map(|w| w.at_risk_frames).sum();
+    assert_eq!(risky, 1);
+    assert!(
+        agg.per_worker.iter().all(|w| w.health < AT_RISK_HEALTH),
+        "degradation must still be recorded when not acted on"
+    );
+}
+
+/// Gate 3 — availability beats accuracy. A lone worker below the recal
+/// threshold is never drained (draining it would leave nobody serving);
+/// it keeps serving with every frame counted accuracy-at-risk, per
+/// session, and the aggregate is exactly the per-session sum.
+#[test]
+fn lone_degraded_worker_keeps_serving_and_risk_counts_per_session() {
+    // Below recal_below (0.6) — would be drained if a spare existed.
+    let p0 = Probe::new(0.5, 0);
+    let (server, _manual) = faulty_server(vec![p0.clone()], vec![None], HealthPolicy::default());
+    wait_stats(&server, "health publication", |s| s.worker_health[0].updates >= 1);
+
+    let mut cam_a =
+        server.session(SessionOptions::named("cam-a").with_queue_depth(8)).expect("cam-a");
+    let mut cam_b =
+        server.session(SessionOptions::named("cam-b").with_queue_depth(8)).expect("cam-b");
+    for f in frames(2) {
+        cam_a.submit(f).expect("a submit");
+    }
+    for f in frames(3) {
+        cam_b.submit(f).expect("b submit");
+    }
+    for _ in 0..2 {
+        (&mut cam_a).next().expect("a result").expect("a ok");
+    }
+    for _ in 0..3 {
+        (&mut cam_b).next().expect("b result").expect("b ok");
+    }
+
+    // Five frames served through dispatcher sweeps that saw health 0.5
+    // the whole time — and still no drain was scheduled.
+    let stats = server.stats().expect("stats");
+    assert_eq!(stats.worker_health[0].mode, WorkerMode::Serving);
+    assert_eq!(stats.worker_health[0].recals, 0);
+    assert_eq!(stats.worker_health[0].at_risk_frames, 5);
+    let session_sum: u64 = stats.sessions.iter().map(|s| s.report.accuracy_at_risk).sum();
+    assert_eq!(session_sum, 5);
+    assert_eq!(stats.aggregate.accuracy_at_risk, session_sum);
+
+    cam_a.close();
+    cam_b.close();
+    let report_a = cam_a.finish().expect("a drain");
+    let report_b = cam_b.finish().expect("b drain");
+    assert_eq!(report_a.accuracy_at_risk, 2);
+    assert_eq!(report_b.accuracy_at_risk, 3);
+    let (agg, _metrics) = server.shutdown().expect("shutdown");
+    assert_eq!(agg.frames, 5);
+    assert_eq!(agg.accuracy_at_risk, 5);
+    assert_eq!(agg.per_worker[0].at_risk_frames, 5);
+    assert_eq!(agg.per_worker[0].recals, 0);
+}
+
+/// Gate 4 — end to end over the real substrate: a seeded [`FaultPlan`]
+/// on the `sim` backend, driven by the serving clock. At zero elapsed
+/// manual time the optics are pristine (no frame is at risk); 600 s of
+/// thermal drift at 1e-3 nm/s floors both workers' health, after which
+/// the dispatcher recals them one at a time (at least one worker always
+/// keeps serving) with modeled energy charged, and the session drains
+/// completely.
+#[test]
+fn sim_fault_plan_degrades_and_recals_end_to_end() {
+    let (clock, manual) = Clock::manual();
+    let mut ecfg = EngineConfig::new(2, PATCH_PX, 96);
+    ecfg.clock = clock.clone();
+    ecfg.batch = BatchPolicy::batched(1, Duration::from_secs(3600));
+    ecfg.warmup_timeout_s = 24.0 * 3600.0;
+    ecfg.stall_timeout_s = 24.0 * 3600.0;
+    let pipe_cfg = PipelineConfig::tiny_96();
+    let mut factory = AnyFactory::new(BackendKind::Sim, "unused-artifacts")
+        .with_faults(FaultPlan { seed: 5, drift_nm_per_s: 1e-3, clock: clock.clone() });
+    // One encoder block keeps debug-mode forwards cheap (as in
+    // `sessions.rs`), head width in lockstep with the pipeline's.
+    factory.host = HostConfig { depth_limit: Some(1), ..HostConfig::default() };
+    factory.host.num_classes = pipe_cfg.num_classes;
+    let server = {
+        let cfg = pipe_cfg.clone();
+        Server::start(move |wid| Pipeline::with_backend(cfg.clone(), factory.create(wid)?), ecfg)
+            .expect("server")
+    };
+    server.wait_ready(Duration::from_secs(3600)).expect("workers warm");
+
+    let mut cam = server.session(SessionOptions::named("cam").with_queue_depth(8)).expect("cam");
+    for f in frames(3) {
+        cam.submit(f).expect("submit");
+    }
+    for _ in 0..3 {
+        (&mut cam).next().expect("result").expect("ok");
+    }
+    assert_eq!(
+        cam.report().accuracy_at_risk,
+        0,
+        "no manual time has passed, so the optics are still pristine"
+    );
+
+    // 600 s of drift floors both workers. Step manual time in 500 ms
+    // increments until each has paid at least one recal window — drift
+    // re-accrues between recals (~5e-4 nm per step), so health may
+    // oscillate; the recal *count* is monotone and must reach every
+    // worker because the dispatcher drains only while a serving spare
+    // exists.
+    manual.advance(Duration::from_secs(600));
+    let deadline = std::time::Instant::now() + Duration::from_secs(120);
+    loop {
+        let stats = server.stats().expect("stats");
+        if stats.worker_health.iter().all(|w| w.recals >= 1) {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "fleet never recalibrated; worker health: {:?}",
+            stats.worker_health
+        );
+        manual.advance(Duration::from_millis(500));
+        std::thread::yield_now();
+    }
+    let stats = server.stats().expect("stats");
+    for w in &stats.worker_health {
+        assert!(w.recal_energy_j > 0.0, "modeled recal energy must be charged: {w:?}");
+    }
+
+    // The fleet serves on: two more frames drain through whatever
+    // workers are in rotation (at least one always is).
+    for (i, mut f) in frames(2).into_iter().enumerate() {
+        f.index = 3 + i as u64;
+        cam.submit(f).expect("submit after degradation");
+    }
+    for _ in 0..2 {
+        (&mut cam).next().expect("result").expect("ok");
+    }
+    cam.close();
+    let report = cam.finish().expect("drain");
+    assert_eq!(report.frames, 5);
+
+    let (agg, _metrics) = server.shutdown().expect("shutdown");
+    assert_eq!(agg.frames, 5);
+    assert!(agg.per_worker.iter().all(|w| w.recals >= 1));
+}

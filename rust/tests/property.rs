@@ -11,7 +11,7 @@ use std::time::{Duration, Instant};
 
 use optovit::arch::core::{CoreParams, OpticalCore};
 use optovit::coordinator::batcher::{BatchPolicy, MicroBatcher};
-use optovit::coordinator::server::WrrAdmission;
+use optovit::coordinator::server::{HealthWeightedWrr, WrrAdmission};
 use optovit::arch::mapping::MappingPlan;
 use optovit::arch::scheduler::{AttentionSchedule, Resource};
 use optovit::arch::workload::Workload;
@@ -77,6 +77,62 @@ fn prop_wrr_admission_share_within_one_round() {
                 weights[i]
             );
         }
+    }
+}
+
+/// Health-weighted rotation ([`HealthWeightedWrr`] — the dispatcher's
+/// placement tie-break anchor): for random health vectors, including
+/// floored (0.0) entries, one full rotation cycle visits **every**
+/// worker at least once — health only scales a worker's share within
+/// `[1, 4]` credits, it can never starve one — and a pristine worker's
+/// share is exactly `credits(h)` per cycle, at most 4x a floored
+/// worker's.
+#[test]
+fn prop_health_weighted_wrr_never_starves_any_worker() {
+    // Degenerate shapes first: empty fleets and lone workers pick 0.
+    let mut hwrr = HealthWeightedWrr::new();
+    assert_eq!(hwrr.next(&[]), 0);
+    assert_eq!(hwrr.next(&[0.0]), 0);
+    assert_eq!(hwrr.next(&[1.0]), 0);
+
+    let mut rng = Rng::new(0x4EA1);
+    for case in 0..60 {
+        let n = rng.range(2, 9);
+        let healths: Vec<f64> = (0..n)
+            .map(|_| {
+                if rng.chance(0.25) {
+                    0.0 // floored optics — the starvation-prone extreme
+                } else {
+                    rng.uniform(0.0, 1.0)
+                }
+            })
+            .collect();
+        let credits: Vec<u64> =
+            healths.iter().map(|&h| HealthWeightedWrr::credits(h) as u64).collect();
+        let cycle: u64 = credits.iter().sum();
+        const CYCLES: u64 = 10;
+        let mut picks = vec![0u64; n];
+        let mut hwrr = HealthWeightedWrr::new();
+        for _ in 0..cycle * CYCLES {
+            let w = hwrr.next(&healths);
+            assert!(w < n, "case {case}: pick {w} out of range");
+            picks[w] += 1;
+        }
+        for i in 0..n {
+            assert_eq!(
+                picks[i],
+                credits[i] * CYCLES,
+                "case {case} worker {i} (h={:.3}): exactly credits-per-cycle turns",
+                healths[i]
+            );
+            assert!(picks[i] >= CYCLES, "case {case}: worker {i} starved");
+        }
+        let max = *picks.iter().max().unwrap();
+        let min = *picks.iter().min().unwrap();
+        assert!(
+            max <= 4 * min,
+            "case {case}: share spread {max}/{min} exceeds the 4x credit band"
+        );
     }
 }
 
