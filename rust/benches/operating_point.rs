@@ -1,0 +1,189 @@
+//! Queueing-co-sim operating-point bench: cores × batch × offered load.
+//!
+//! Sweeps the discrete-event queueing simulator ([`optovit::cosim`]) over
+//! the modeled accelerator and emits a machine-readable `BENCH_cosim.json`
+//! with latency/queueing percentiles, achieved throughput, and KFPS/W at
+//! each grid point — the Fig. 9/11-style operating-point curves, now with
+//! the load-dependent waiting term the closed-form schedule cannot see.
+//!
+//! ```bash
+//! cargo bench --bench operating_point -- \
+//!     [--cores 5,6,8] [--batch 1,4] [--load 0.4,0.75,0.95] \
+//!     [--frames 400] [--tokens 18] [--seed 7] [--out BENCH_cosim.json]
+//! ```
+//!
+//! (declared `harness = false`: this bench carries its own `main`.)
+//!
+//! Arrivals are seeded-exponential (Poisson) bursts of `--batch` frames,
+//! so every point is deterministic for a fixed `--seed`. KFPS/W folds the
+//! micro-batch's weight-programming amortization into mean energy/frame:
+//! the first frame of each burst pays the MR weight-bank programming
+//! (weight-side DAC conversions + stationary weight bytes), followers
+//! reuse the programmed banks.
+
+use anyhow::Result;
+use optovit::arch::{CoreParams, OpticalCore, Workload};
+use optovit::cli::Args;
+use optovit::coordinator::stats::kfps_per_watt;
+use optovit::cosim::{simulate, OperatingPoint, OperatingPointReport};
+use optovit::energy::AcceleratorModel;
+use optovit::util::bench::CountingAlloc;
+use optovit::util::table::{si_energy, si_time, Table};
+use optovit::vit::{VitConfig, VitVariant};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+struct Row {
+    report: OperatingPointReport,
+    mean_energy_j: f64,
+    kfps_per_watt: f64,
+}
+
+/// Mean modeled energy per frame in a `batch`-frame burst: the first
+/// frame programs the MR weight banks, followers reuse them.
+fn mean_energy_j(m: &AcceleratorModel, cfg: &VitConfig, n_tokens: usize, batch: usize) -> f64 {
+    let core = OpticalCore::new(m.cores);
+    let w = Workload::vit(cfg, n_tokens, true);
+    let cost = core.workload_cost(&w);
+    let first = m.energy_of_cost(&cost, w.elementwise.total()).total_j();
+    let mut follow_cost = cost;
+    follow_cost.weight_dac_conversions = 0;
+    follow_cost.weight_bytes = 0;
+    let follow = m.energy_of_cost(&follow_cost, w.elementwise.total()).total_j();
+    (first + (batch - 1) as f64 * follow) / batch as f64
+}
+
+fn fmt_json(frames: usize, tokens: usize, seed: u64, rows: &[Row]) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"operating_point\",\n");
+    out.push_str(&format!("  \"frames\": {frames},\n"));
+    out.push_str(&format!("  \"tokens\": {tokens},\n"));
+    out.push_str(&format!("  \"arrival_seed\": {seed},\n"));
+    out.push_str("  \"sweep\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let p = &r.report;
+        out.push_str(&format!(
+            "    {{\"cores\": {}, \"batch\": {}, \"load\": {:.3}, \
+             \"saturation_kfps\": {:.3}, \"offered_kfps\": {:.3}, \
+             \"achieved_kfps\": {:.3}, \"mean_latency_ns\": {:.3}, \
+             \"p50_latency_ns\": {:.3}, \"p99_latency_ns\": {:.3}, \
+             \"mean_queueing_ns\": {:.3}, \"p99_queueing_ns\": {:.3}, \
+             \"peak_in_flight\": {}, \"mean_energy_j\": {:.6e}, \
+             \"kfps_per_watt\": {:.3}}}{}\n",
+            p.cores,
+            p.batch,
+            p.load,
+            p.saturation_kfps,
+            p.offered_kfps,
+            p.achieved_kfps,
+            p.mean_latency_ns,
+            p.p50_latency_ns,
+            p.p99_latency_ns,
+            p.mean_queueing_ns,
+            p.p99_queueing_ns,
+            p.peak_in_flight,
+            r.mean_energy_j,
+            r.kfps_per_watt,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
+    let cores_list = args.get_usize_list("cores", &[5, 6, 8]).map_err(anyhow::Error::msg)?;
+    let batches = args.get_usize_list("batch", &[1, 4]).map_err(anyhow::Error::msg)?;
+    let loads: Vec<f64> = match args.get("load") {
+        None => vec![0.4, 0.75, 0.95],
+        Some(v) => v
+            .split(',')
+            .map(|s| s.trim().parse::<f64>().map_err(|e| format!("--load: {e}")))
+            .collect::<std::result::Result<_, _>>()
+            .map_err(anyhow::Error::msg)?,
+    };
+    let frames = args.get_usize("frames", 400).map_err(anyhow::Error::msg)?.max(1);
+    let tokens = args.get_usize("tokens", 18).map_err(anyhow::Error::msg)?.max(1);
+    let seed = args.get_u64("seed", 7).map_err(anyhow::Error::msg)?;
+    let out_path = args.get_or("out", "BENCH_cosim.json").to_string();
+    for &l in &loads {
+        if !(l > 0.0 && l.is_finite()) {
+            anyhow::bail!("--load: offered load must be finite and positive, got {l}");
+        }
+    }
+    for &c in &cores_list {
+        if c < 5 {
+            anyhow::bail!("--cores: the five-core pipeline flow needs at least 5, got {c}");
+        }
+    }
+
+    let cfg = VitConfig::variant(VitVariant::Tiny, 96, 10);
+    println!(
+        "== operating_point: {frames} frames/point, cores {cores_list:?}, \
+         batch {batches:?}, load {loads:?}, {tokens} tokens ==\n"
+    );
+
+    let mut rows = Vec::new();
+    for &cores in &cores_list {
+        let params = CoreParams { num_cores: cores, ..CoreParams::default() };
+        let model = AcceleratorModel { cores: params, ..AcceleratorModel::default() };
+        for &batch in &batches {
+            let energy = mean_energy_j(&model, &cfg, tokens, batch);
+            for &load in &loads {
+                let op = OperatingPoint {
+                    cores,
+                    batch,
+                    load,
+                    frames,
+                    n_tokens: tokens,
+                    arrival_seed: Some(seed),
+                };
+                let report = simulate(&cfg, &op);
+                println!(
+                    "cores {cores}, batch {batch}, load {load:.2}: \
+                     {:.2} KFPS achieved (sat {:.2}), p99 {}, queueing {} mean",
+                    report.achieved_kfps,
+                    report.saturation_kfps,
+                    si_time(report.p99_latency_ns * 1e-9),
+                    si_time(report.mean_queueing_ns * 1e-9),
+                );
+                rows.push(Row {
+                    report,
+                    mean_energy_j: energy,
+                    kfps_per_watt: kfps_per_watt(energy),
+                });
+            }
+        }
+    }
+
+    println!("\n== operating-point summary ==");
+    let mut t = Table::new(vec![
+        "cores", "batch", "load", "offered", "achieved", "p50", "p99", "queue p99", "peak",
+        "energy/frame", "KFPS/W",
+    ]);
+    for r in &rows {
+        let p = &r.report;
+        t.row(vec![
+            p.cores.to_string(),
+            p.batch.to_string(),
+            format!("{:.2}", p.load),
+            format!("{:.2}k", p.offered_kfps),
+            format!("{:.2}k", p.achieved_kfps),
+            si_time(p.p50_latency_ns * 1e-9),
+            si_time(p.p99_latency_ns * 1e-9),
+            si_time(p.p99_queueing_ns * 1e-9),
+            p.peak_in_flight.to_string(),
+            si_energy(r.mean_energy_j),
+            format!("{:.2}", r.kfps_per_watt),
+        ]);
+    }
+    print!("{}", t.render());
+
+    let json = fmt_json(frames, tokens, seed, &rows);
+    std::fs::write(&out_path, &json)?;
+    println!("\nwrote {out_path}");
+    Ok(())
+}

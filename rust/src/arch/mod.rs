@@ -8,6 +8,12 @@
 //!   partial-sum plans (Fig. 6).
 //! - [`scheduler`] — the five-core matrix-decompositional pipeline of
 //!   Fig. 5, as a discrete-event simulation.
+//!
+//! The scheduler's per-frame task graph is also the input to the
+//! queueing co-sim ([`crate::cosim`]), which replays it per *arrival*
+//! against persistent per-core availability, so serving can model
+//! waiting time under load — at zero load the replay reproduces
+//! [`scheduler::AttentionSchedule::steady_state_frame_ns`] bitwise.
 
 pub mod area;
 pub mod core;

@@ -45,7 +45,9 @@
 //! `serve` path's synthetic-sensor helper keeps its two pacing sleeps —
 //! it has no server to be notified by). On top of that seam each session
 //! can declare QoS ([`server::SessionOptions`]): a latency **SLO**
-//! (frames carry `accepted_at + slo` deadlines; a worker flushes its
+//! (frames carry `accepted_at + slo` deadlines; the dispatcher's
+//! earliest-deadline-first pre-pass admits the most imminent peeked
+//! deadline ahead of plain round-robin order, a worker flushes its
 //! micro-batch group early when the earliest one arrives, and misses are
 //! counted per session in `ServeReport::slo_miss` with a submit→emit
 //! `p99_latency_s`) and an admission **[`server::Quota`]** (max in-flight
@@ -106,7 +108,33 @@
 //! so lanes can wait while routing continues. [`pipeline::ServeReport`]
 //! names the backend that served the run and the mean micro-batch size;
 //! under `sim` its latency column is modeled photonic-core time, recorded
-//! per stage (`modeled_mgnet` / `modeled_backbone`).
+//! per stage (`modeled_mgnet` / `modeled_backbone` / `modeled_queueing`).
+//!
+//! **Load-dependent modeled latency (queueing co-sim).** When the `sim`
+//! backend is armed with a [`crate::runtime::QueueingPlan`] (`optovit
+//! serve --backend sim` with `--cores` / `--arrival-fps`), each worker
+//! replays the scheduler's per-frame task graph through the crate's
+//! discrete-event simulator ([`crate::cosim`]) at each frame's *actual*
+//! arrival time, so modeled latency includes waiting for busy cores
+//! under the real arrival process:
+//!
+//! ```text
+//! micro-batcher frame ─▶ arrival stamp (serving Clock, or paced k/fps)
+//!                              │
+//!                              ▼
+//!                  cosim::QueueSim (one per worker)
+//!                  per-core event queues: busy ? wait : start
+//!                              │
+//!                              ▼
+//!                  `modeled_queueing` stage ─▶ ModeledStages::queueing_s
+//!                  (FrameResult / ServeReport::modeled_queueing_s,
+//!                   per-session exact sums, per-worker means)
+//! ```
+//!
+//! At zero load the replay collapses bitwise to the closed-form
+//! `steady_state_frame_ns` (the `rust/tests/cosim.rs` anchor); under
+//! load the waiting term makes modeled latency depend on offered load —
+//! the effect a static per-kept-count latency cache cannot express.
 //!
 //! | module | role |
 //! |---|---|

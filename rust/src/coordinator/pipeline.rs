@@ -145,6 +145,10 @@ pub struct FrameResult {
     /// otherwise — including any time the frame waited in a micro-batch
     /// lane on the batched path.
     pub latency_s: f64,
+    /// Modeled queueing share of `latency_s` (s): waiting time charged by
+    /// the discrete-event co-sim (see [`crate::cosim`]) when a queueing
+    /// plan is armed on the `sim` backend; exactly 0.0 otherwise.
+    pub modeled_queueing_s: f64,
     /// Frames that shared this frame's backbone dispatch (1 on the
     /// per-frame path). Lets per-session accounting report the mean
     /// micro-batch size without access to the worker's [`StageMetrics`].
@@ -509,18 +513,30 @@ impl<B: Backend> Pipeline<B> {
 
     /// Record a simulating backend's modeled per-stage latency (MGNet and
     /// backbone separately, plus the `"modeled"` total that becomes the
-    /// reported frame latency). Returns the modeled total, or `None` on
+    /// reported frame latency). Returns the modeled stages, or `None` on
     /// measuring backends.
-    fn record_modeled(&mut self, kept_count: usize, first_in_batch: bool) -> Option<f64> {
-        let stages =
+    ///
+    /// When the backend's queueing co-sim is armed (see [`crate::cosim`]),
+    /// each call here also feeds **one arrival event** into it and charges
+    /// the resulting waiting time as the `"modeled_queueing"` stage —
+    /// `modeled_stages_s` itself reports pure load-independent *service*
+    /// stages (which is what makes them cacheable), so queueing is added
+    /// exactly once per frame, at completion time.
+    fn record_modeled(
+        &mut self,
+        kept_count: usize,
+        first_in_batch: bool,
+    ) -> Option<crate::runtime::ModeledStages> {
+        let mut stages =
             self.backend.modeled_stages_s(kept_count, self.cfg.use_mask, first_in_batch)?;
+        stages.queueing_s = self.backend.modeled_queueing_s(kept_count, self.cfg.use_mask);
         if self.cfg.use_mask {
             self.metrics.record_stage("modeled_mgnet", stages.mgnet_s);
         }
         self.metrics.record_stage("modeled_backbone", stages.backbone_s);
-        let total = stages.total_s();
-        self.metrics.record_stage("modeled", total);
-        Some(total)
+        self.metrics.record_stage("modeled_queueing", stages.queueing_s);
+        self.metrics.record_stage("modeled", stages.total_s());
+        Some(stages)
     }
 
     /// Process one frame end-to-end — the degenerate batch of one.
@@ -573,7 +589,8 @@ impl<B: Backend> Pipeline<B> {
             mask: self.scratch.mask.clone(),
             bucket,
             modeled_energy_j: energy_j,
-            latency_s: modeled.unwrap_or(wall_s),
+            latency_s: modeled.map(|s| s.total_s()).unwrap_or(wall_s),
+            modeled_queueing_s: modeled.map_or(0.0, |s| s.queueing_s),
             batch_size: 1,
         })
     }
@@ -682,7 +699,8 @@ impl<B: Backend> Pipeline<B> {
                 mask: rf.mask,
                 bucket,
                 modeled_energy_j: energy_j,
-                latency_s: modeled.unwrap_or(latency_wall_s),
+                latency_s: modeled.map(|s| s.total_s()).unwrap_or(latency_wall_s),
+                modeled_queueing_s: modeled.map_or(0.0, |s| s.queueing_s),
                 batch_size: n,
             });
         }
@@ -776,6 +794,13 @@ pub struct ServeReport {
     /// backend, host wall-clock otherwise (lane wait included on the
     /// batched path — see `StageMetrics::frame_latency_mean_s`).
     pub mean_latency_s: f64,
+    /// **Total** modeled queueing time (s) summed over the report's
+    /// frames: the waiting share charged by the discrete-event co-sim when
+    /// a queueing plan is armed on the `sim` backend (`--cores` /
+    /// `--arrival-fps`); 0.0 otherwise. A sum rather than a mean so the
+    /// server-wide aggregate is exactly the sum of the per-session
+    /// figures.
+    pub modeled_queueing_s: f64,
     pub mean_energy_j: f64,
     pub modeled_kfps_per_watt: f64,
     pub mean_kept_patches: f64,
@@ -1111,6 +1136,7 @@ impl<'p, B: Backend> FrameStream<'p, B> {
             p99_latency_s: 0.0,
             wall_fps: m.wall_fps_at(now),
             mean_latency_s: m.frame_latency_mean_s(),
+            modeled_queueing_s: m.stage_sum_s("modeled_queueing"),
             mean_energy_j: m.mean_energy_j(),
             modeled_kfps_per_watt: m.modeled_kfps_per_watt(),
             mean_kept_patches: m.mean_kept_patches(),
@@ -1122,6 +1148,7 @@ impl<'p, B: Backend> FrameStream<'p, B> {
                 worker: 0,
                 frames: done,
                 busy_s,
+                queueing_s: m.stage_mean_s("modeled_queueing"),
                 utilization: if elapsed_s > 0.0 { (busy_s / elapsed_s).min(1.0) } else { 0.0 },
                 core: None,
                 health: 1.0,
@@ -1247,6 +1274,7 @@ mod tests {
             bucket: 36,
             modeled_energy_j: 1e-5,
             latency_s: 0.01,
+            modeled_queueing_s: 0.0,
             batch_size: 1,
         };
         assert_eq!(r.predicted_class(), 1);
@@ -1261,6 +1289,7 @@ mod tests {
             bucket: 36,
             modeled_energy_j: 1e-5,
             latency_s: 0.01,
+            modeled_queueing_s: 0.0,
             batch_size: 1,
         };
         // Must not panic; any in-range index is acceptable.

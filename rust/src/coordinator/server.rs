@@ -47,9 +47,13 @@
 //!   [`Server::shutdown`] returns the failure.
 //! - **Per-session QoS.** A session may declare a latency SLO
 //!   ([`SessionOptions::slo`]): its frames carry `accepted_at + slo`
-//!   deadlines, and a worker **flushes its micro-batch group early** when
-//!   the earliest such deadline arrives instead of waiting out
-//!   `BatchPolicy::max_wait` (deadline-aware flush); every emission is
+//!   deadlines, the dispatcher's **earliest-deadline-first pre-pass**
+//!   admits the most imminent peeked deadline ahead of the plain
+//!   round-robin order (within the session's weighted share, so
+//!   fairness is untouched), and a worker **flushes its micro-batch
+//!   group early** when the earliest such deadline arrives instead of
+//!   waiting out `BatchPolicy::max_wait` (deadline-aware flush); every
+//!   emission is
 //!   scored against the SLO and recorded in the session's
 //!   `ServeReport::slo_miss` and submit→emit `p99_latency_s`. A session
 //!   may also carry an admission [`Quota`] (max in-flight + token-bucket
@@ -315,6 +319,10 @@ struct SessionAccum {
     correct: u64,
     energy_sum: f64,
     latency_sum: f64,
+    /// Total modeled queueing time (s) across emitted frames — the co-sim
+    /// waiting share of `latency_sum`. Kept as a sum so the server-wide
+    /// aggregate is exactly the per-session sum.
+    queueing_sum: f64,
     kept_sum: f64,
     batch_sum: f64,
     /// Emissions later than the session's SLO (0 without an SLO).
@@ -387,6 +395,7 @@ impl SessionAccum {
             p99_latency_s: self.session_latency.quantile(0.99),
             wall_fps: if span > 0.0 { frames as f64 / span } else { 0.0 },
             mean_latency_s: div(self.latency_sum),
+            modeled_queueing_s: self.queueing_sum,
             mean_energy_j: mean_energy,
             modeled_kfps_per_watt: super::stats::kfps_per_watt(mean_energy),
             mean_kept_patches: div(self.kept_sum),
@@ -522,8 +531,33 @@ enum Msg {
 struct DispatchEntry {
     shared: Arc<SessionShared>,
     rx: Receiver<Submitted>,
+    /// Head-of-queue frame pulled off `rx` by [`DispatchEntry::peek`] (the
+    /// EDF pre-pass inspects deadlines without admitting) and not yet
+    /// dispatched. Always consumed before `rx` by
+    /// [`DispatchEntry::try_next`]; must be discarded when the session's
+    /// queue is drained on cancel.
+    peeked: Option<Submitted>,
     dispatched: u64,
     done_sent: bool,
+}
+
+impl DispatchEntry {
+    /// Look at the session's head-of-queue frame without admitting it.
+    fn peek(&mut self) -> Option<&Submitted> {
+        if self.peeked.is_none() {
+            self.peeked = self.rx.try_recv().ok();
+        }
+        self.peeked.as_ref()
+    }
+
+    /// Take the session's next queued frame — the peeked one first, so
+    /// peeking never reorders or loses a frame.
+    fn try_next(&mut self) -> std::result::Result<Submitted, mpsc::TryRecvError> {
+        match self.peeked.take() {
+            Some(s) => Ok(s),
+            None => self.rx.try_recv(),
+        }
+    }
 }
 
 /// Reassembler-side session state. Pending tuples carry the frame's
@@ -1132,6 +1166,7 @@ impl Server {
             reg.new_dispatch.push(DispatchEntry {
                 shared: shared.clone(),
                 rx,
+                peeked: None,
                 dispatched: 0,
                 done_sent: false,
             });
@@ -1215,6 +1250,7 @@ impl Server {
             agg.correct += a.correct;
             agg.energy_sum += a.energy_sum;
             agg.latency_sum += a.latency_sum;
+            agg.queueing_sum += a.queueing_sum;
             agg.kept_sum += a.kept_sum;
             agg.batch_sum += a.batch_sum;
             // QoS accounting composes: the aggregate's SLO misses are by
@@ -1533,6 +1569,10 @@ fn finalize_entry(entry: &mut DispatchEntry, res_tx: &mpsc::Sender<Msg>) {
 
 /// Weighted round-robin admission over all open sessions
 /// ([`WrrAdmission`]), least-loaded sharding over the worker pool.
+/// Each sweep runs an earliest-deadline-first pre-pass over the SLO
+/// sessions' peeked head-of-queue frames: the most imminent completion
+/// deadline is admitted first, within that session's ordinary weighted
+/// share, before the round-robin serves everyone else.
 /// Event-driven: an idle dispatcher blocks on the activity event, woken
 /// by submissions, consumptions, session lifecycle, and shutdown.
 fn dispatcher_loop(core: &ServerCore, worker_txs: Vec<SyncSender<Job>>, res_tx: mpsc::Sender<Msg>) {
@@ -1556,6 +1596,11 @@ fn dispatcher_loop(core: &ServerCore, worker_txs: Vec<SyncSender<Job>>, res_tx: 
     let mut wrr = WrrAdmission::new();
     let mut hwrr = HealthWeightedWrr::new();
     let mut healths: Vec<f64> = Vec::with_capacity(n_workers);
+    // EDF pre-pass scratch: `(deadline, session index)` of each SLO
+    // session's head-of-queue frame, and the sessions already served
+    // ahead of the round-robin this sweep.
+    let mut edf: Vec<(Instant, usize)> = Vec::new();
+    let mut edf_served: Vec<bool> = Vec::new();
     let policy = core.cfg.health;
     loop {
         // Activity generation *before* the sweep: any state change during
@@ -1615,7 +1660,27 @@ fn dispatcher_loop(core: &ServerCore, worker_txs: Vec<SyncSender<Job>>, res_tx: 
         } else {
             wrr.turns()
         };
-        wrr.sweep(&weights, |i| {
+        // EDF pre-pass: peek every SLO session's head-of-queue frame and
+        // order those sessions by completion deadline, so a frame about
+        // to blow its SLO is admitted before tenants whose deadlines are
+        // slack (or absent). The pre-pass only *reorders* this sweep —
+        // each session still gets its plain weighted share and nothing
+        // more, so long-run fairness is untouched.
+        edf.clear();
+        edf_served.clear();
+        edf_served.resize(entries.len(), false);
+        for (i, entry) in entries.iter_mut().enumerate() {
+            if entry.done_sent || entry.shared.canceled.load(Ordering::Relaxed) {
+                continue;
+            }
+            if let Some(slo) = entry.shared.slo {
+                if let Some(s) = entry.peek() {
+                    edf.push((s.1 + slo, i));
+                }
+            }
+        }
+        edf.sort_unstable();
+        let mut admit = |i: usize| -> bool {
             if fatal.is_some() || core.abort.load(Ordering::Relaxed) {
                 return false;
             }
@@ -1626,6 +1691,7 @@ fn dispatcher_loop(core: &ServerCore, worker_txs: Vec<SyncSender<Job>>, res_tx: 
             if entry.shared.canceled.load(Ordering::Relaxed) {
                 // Mid-flight teardown: discard whatever the dead session
                 // still has queued and finalize it at its dispatch count.
+                entry.peeked = None;
                 while entry.rx.try_recv().is_ok() {}
                 finalize_entry(entry, &res_tx);
                 progressed = true;
@@ -1637,7 +1703,7 @@ fn dispatcher_loop(core: &ServerCore, worker_txs: Vec<SyncSender<Job>>, res_tx: 
             if entry.dispatched.saturating_sub(consumed) >= entry.shared.window as u64 {
                 return false;
             }
-            match entry.rx.try_recv() {
+            match entry.try_next() {
                 Ok((frame, accepted_at)) => {
                     // SLO sessions stamp each job with its completion
                     // deadline; the worker's deadline-aware flush honors
@@ -1694,6 +1760,23 @@ fn dispatcher_loop(core: &ServerCore, worker_txs: Vec<SyncSender<Job>>, res_tx: 
                     false
                 }
             }
+        };
+        // Deadline order first (bounded by each session's weighted
+        // share), then the plain weighted round-robin over everyone the
+        // pre-pass did not touch.
+        for &(_, i) in &edf {
+            edf_served[i] = true;
+            for _ in 0..weights[i].max(1) {
+                if !admit(i) {
+                    break;
+                }
+            }
+        }
+        wrr.sweep(&weights, |i| {
+            if edf_served[i] {
+                return false;
+            }
+            admit(i)
         });
         match fatal {
             Some(true) => {
@@ -1952,12 +2035,15 @@ fn worker_loop<W, F>(
         let active_s = t_first.map(|t| clock.seconds_since(t)).unwrap_or(0.0);
         let busy_s = busy.as_secs_f64();
         let backend = w.backend_name();
+        let metrics = w.take_metrics();
+        let queueing_s = metrics.stage_mean_s("modeled_queueing");
         Ok((
-            w.take_metrics(),
+            metrics,
             WorkerStats {
                 worker: wid,
                 frames,
                 busy_s,
+                queueing_s,
                 utilization: if active_s > 0.0 { (busy_s / active_s).min(1.0) } else { 0.0 },
                 core: pinned_core,
                 health: slot.health_value(),
@@ -2017,6 +2103,7 @@ fn emit(
         a.accuracy_at_risk += at_risk as u64;
         a.energy_sum += result.modeled_energy_j;
         a.latency_sum += result.latency_s;
+        a.queueing_sum += result.modeled_queueing_s;
         a.kept_sum += result.mask.kept().max(1) as f64;
         a.batch_sum += result.batch_size as f64;
         a.session_latency.record(session_latency.as_secs_f64());
@@ -2264,6 +2351,9 @@ fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
     let mut dropped_quota = 0u64;
     let mut slo_miss = 0u64;
     let mut accuracy_at_risk = 0u64;
+    // Summed from the per-session accums (not the merged worker metrics)
+    // so the aggregate is *exactly* the per-session sum.
+    let mut queueing_sum = 0.0f64;
     let mut session_latency = LatencyHistogram::new();
     for s in recover(&core.sessions).iter() {
         dropped += s.rejected.load(Ordering::Relaxed);
@@ -2271,6 +2361,7 @@ fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
         let a = recover(&s.accum);
         slo_miss += a.slo_miss;
         accuracy_at_risk += a.accuracy_at_risk;
+        queueing_sum += a.queueing_sum;
         session_latency.merge(&a.session_latency);
     }
     let outcome = match failure {
@@ -2286,6 +2377,7 @@ fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
                 p99_latency_s: session_latency.quantile(0.99),
                 wall_fps: if wall_s > 0.0 { agg.emitted as f64 / wall_s } else { 0.0 },
                 mean_latency_s: merged.frame_latency_mean_s(),
+                modeled_queueing_s: queueing_sum,
                 mean_energy_j: merged.mean_energy_j(),
                 modeled_kfps_per_watt: merged.modeled_kfps_per_watt(),
                 mean_kept_patches: merged.mean_kept_patches(),
@@ -2340,6 +2432,7 @@ mod tests {
                 bucket,
                 modeled_energy_j: 1e-5,
                 latency_s: 1e-4,
+                modeled_queueing_s: 0.0,
                 batch_size: 1,
             })
         }

@@ -282,6 +282,10 @@ pub struct WorkerStats {
     pub frames: u64,
     /// Time spent inside `process_frame` (seconds).
     pub busy_s: f64,
+    /// Mean modeled queueing delay per frame (seconds) charged by this
+    /// worker's discrete-event co-sim — the `"modeled_queueing"` stage
+    /// mean. 0.0 unless a queueing plan is armed on the `sim` backend.
+    pub queueing_s: f64,
     /// `busy_s` over the worker's active wall-clock window, in `[0, 1]`.
     pub utilization: f64,
     /// Host core this worker's thread was pinned to

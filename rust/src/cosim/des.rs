@@ -1,0 +1,289 @@
+//! The discrete-event queueing simulator itself.
+//!
+//! [`QueueSim`] owns the per-resource queues and a cache of mapped
+//! [`FrameGraph`]s (one per token count). Each [`QueueSim::arrive`] call
+//! replays one frame's task list over the live resource state with every
+//! dependency-free readiness floored at the arrival time — the exact
+//! `PipelineScheduler::schedule` recurrence, generalized from "everything
+//! ready at t=0" to "everything ready at t=arrival". Cross-frame coupling
+//! flows *only* through the [`CoreQueue`]/[`EpuQueue`] horizons, mirroring
+//! the hardware: a frame queues behind whatever the accelerator is still
+//! doing, and nothing else.
+//!
+//! Exactness properties (asserted in `tests/cosim.rs`):
+//! - a frame arriving to fully idle hardware reports `queueing_ns == 0.0`
+//!   exactly, and the very first frame's latency is bitwise the one-frame
+//!   schedule makespan;
+//! - frames all arriving at t=0 perform the same float operations as one
+//!   concatenated multi-frame `schedule()` build, so completion-horizon
+//!   deltas reproduce `AttentionSchedule::steady_state_frame_ns` bitwise.
+
+use std::collections::BTreeMap;
+
+use crate::arch::scheduler::{Deps, Resource};
+use crate::arch::CoreParams;
+use crate::vit::VitConfig;
+
+use super::graph::FrameGraph;
+use super::queue::{CoreQueue, EpuQueue};
+
+/// Modeled timing of one simulated frame.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FrameSpan {
+    /// When the frame arrived (virtual ns).
+    pub arrival_ns: f64,
+    /// When its last task's compute finished (virtual ns).
+    pub completion_ns: f64,
+    /// Idle-hardware service time of its graph (ns).
+    pub service_ns: f64,
+    /// Waiting charged by contention: `(completion - arrival) - service`,
+    /// clamped at zero — and **exactly** `0.0` when the frame arrived to
+    /// idle hardware.
+    pub queueing_ns: f64,
+}
+
+impl FrameSpan {
+    /// Modeled time in system: queueing plus service.
+    pub fn latency_ns(&self) -> f64 {
+        self.completion_ns - self.arrival_ns
+    }
+}
+
+/// Deterministic queueing co-simulator over the mapped frame graphs.
+#[derive(Debug)]
+pub struct QueueSim {
+    cfg: VitConfig,
+    params: CoreParams,
+    /// Mapped-once task graphs, keyed by token count.
+    graphs: BTreeMap<usize, FrameGraph>,
+    cores: Vec<CoreQueue>,
+    epu: EpuQueue,
+    /// Per-task compute-end scratch for the current replay (reused across
+    /// frames; no steady-state allocation).
+    end_scratch: Vec<f64>,
+    frames: u64,
+    last_arrival_ns: f64,
+}
+
+impl QueueSim {
+    /// A fresh (idle) simulator for `cfg` on a `params` accelerator.
+    pub fn new(cfg: VitConfig, params: CoreParams) -> Self {
+        QueueSim {
+            cfg,
+            params,
+            graphs: BTreeMap::new(),
+            cores: vec![CoreQueue::default(); params.num_cores],
+            epu: EpuQueue::default(),
+            end_scratch: Vec::new(),
+            frames: 0,
+            last_arrival_ns: 0.0,
+        }
+    }
+
+    /// Frames simulated so far.
+    pub fn frames(&self) -> u64 {
+        self.frames
+    }
+
+    /// Latest resource availability horizon (ns): when the accelerator
+    /// drains if nothing else arrives.
+    pub fn horizon_ns(&self) -> f64 {
+        self.cores.iter().map(|c| c.free_ns).fold(self.epu.free_ns, f64::max)
+    }
+
+    /// Idle-hardware service time for `n_tokens` (maps the graph if this
+    /// token count is new).
+    pub fn service_ns(&mut self, n_tokens: usize) -> f64 {
+        self.ensure_graph(n_tokens);
+        self.graphs[&n_tokens].service_ns
+    }
+
+    /// Drop all queued work (mapped graphs are kept — they are static).
+    pub fn reset(&mut self) {
+        for c in &mut self.cores {
+            c.reset();
+        }
+        self.epu.free_ns = 0.0;
+        self.frames = 0;
+        self.last_arrival_ns = 0.0;
+    }
+
+    fn ensure_graph(&mut self, n_tokens: usize) {
+        if !self.graphs.contains_key(&n_tokens) {
+            let g = FrameGraph::map(&self.cfg, n_tokens, self.params);
+            self.graphs.insert(n_tokens, g);
+        }
+    }
+
+    /// Simulate one frame of `n_tokens` arriving at `arrival_ns`.
+    /// Arrivals must be fed in non-decreasing time order (the FIFO queue
+    /// discipline assumes it; the serving clock and paced traces are both
+    /// monotone).
+    pub fn arrive(&mut self, arrival_ns: f64, n_tokens: usize) -> FrameSpan {
+        debug_assert!(
+            arrival_ns >= self.last_arrival_ns,
+            "arrivals must be time-ordered: {arrival_ns} < {}",
+            self.last_arrival_ns
+        );
+        self.ensure_graph(n_tokens);
+        self.last_arrival_ns = arrival_ns;
+        self.frames += 1;
+        let g = &self.graphs[&n_tokens];
+        let idle = self.epu.idle_at(arrival_ns) && self.cores.iter().all(|c| c.idle_at(arrival_ns));
+
+        // Dependency-gated readiness, floored at the arrival: a task with
+        // no deps is ready the moment its frame arrives (deps are always
+        // intra-frame, hence >= arrival already).
+        fn dep_end(deps: &Deps, end: &[f64], arrival_ns: f64) -> f64 {
+            let mut m = arrival_ns;
+            deps.for_each(|d| m = m.max(end[d]));
+            m
+        }
+
+        let end = &mut self.end_scratch;
+        end.clear();
+        end.reserve(g.tasks.len());
+        let mut completion = arrival_ns;
+        for t in &g.tasks {
+            match t.resource {
+                Resource::Core(c) => {
+                    let q = &mut self.cores[c];
+                    let tune_ready = dep_end(&t.tune_after, end, arrival_ns);
+                    // Tuning needs a free bank of the 2-deep ping-pong
+                    // pair: the next-to-last task's compute must be done.
+                    let tune_start = tune_ready.max(q.bank_end_ns[0]);
+                    let tune_end = tune_start + t.tune_ns;
+                    let compute_ready = dep_end(&t.compute_after, end, arrival_ns);
+                    let compute_start = tune_end.max(compute_ready).max(q.free_ns);
+                    let compute_end = compute_start + t.compute_ns;
+                    q.free_ns = compute_end;
+                    q.bank_end_ns = [q.bank_end_ns[1], compute_end];
+                    q.busy_ns += compute_end - compute_start;
+                    completion = completion.max(compute_end);
+                    end.push(compute_end);
+                }
+                Resource::Epu => {
+                    let start = dep_end(&t.compute_after, end, arrival_ns).max(self.epu.free_ns);
+                    let compute_end = start + t.compute_ns;
+                    self.epu.free_ns = compute_end;
+                    self.epu.busy_ns += t.compute_ns;
+                    completion = completion.max(compute_end);
+                    end.push(compute_end);
+                }
+            }
+        }
+
+        // Idle hardware means no contention by construction: report an
+        // exact zero rather than the FP residue of `(a + x) - a - x`
+        // reassociation. Busy arrivals clamp the (monotone-nonnegative)
+        // difference against ulp noise the same way.
+        let queueing_ns = if idle {
+            0.0
+        } else {
+            ((completion - arrival_ns) - g.service_ns).max(0.0)
+        };
+        FrameSpan { arrival_ns, completion_ns: completion, service_ns: g.service_ns, queueing_ns }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::AttentionSchedule;
+    use crate::vit::VitVariant;
+
+    fn tiny() -> VitConfig {
+        VitConfig::variant(VitVariant::Tiny, 96, 10)
+    }
+
+    #[test]
+    fn first_frame_is_bitwise_the_idle_makespan() {
+        let p = CoreParams::default();
+        let mut sim = QueueSim::new(tiny(), p);
+        let expect = AttentionSchedule::decomposed(&tiny(), 18, p, 1).schedule(p.num_cores).1;
+        let span = sim.arrive(0.0, 18);
+        assert_eq!(span.latency_ns(), expect.makespan_ns);
+        assert_eq!(span.queueing_ns, 0.0);
+        assert_eq!(span.service_ns, expect.makespan_ns);
+        assert_eq!(sim.frames(), 1);
+    }
+
+    #[test]
+    fn back_to_back_arrivals_reproduce_steady_state_bitwise() {
+        let p = CoreParams::default();
+        let mut sim = QueueSim::new(tiny(), p);
+        let c0 = sim.arrive(0.0, 18).completion_ns;
+        let c1 = sim.arrive(0.0, 18).completion_ns;
+        let c2 = sim.arrive(0.0, 18).completion_ns;
+        // Horizon deltas of the concatenated replay == the closed-form
+        // steady-state figure, bitwise (same float ops in the same order).
+        let steady = AttentionSchedule::steady_state_frame_ns(&tiny(), 18, p, true);
+        assert_eq!(c2 - c1, steady);
+        assert!(c1 > c0 && c0 > 0.0);
+    }
+
+    #[test]
+    fn idle_arrivals_have_exactly_zero_queueing() {
+        let p = CoreParams::default();
+        let mut sim = QueueSim::new(tiny(), p);
+        let service = sim.service_ns(18);
+        // Space arrivals far beyond the drain horizon: every frame lands
+        // on idle hardware.
+        let mut t = 0.0;
+        for _ in 0..4 {
+            let span = sim.arrive(t, 18);
+            assert_eq!(span.queueing_ns, 0.0);
+            let lat = span.latency_ns();
+            assert!(
+                (lat - service).abs() <= service * 1e-9,
+                "idle latency {lat} != service {service}"
+            );
+            t = sim.horizon_ns() + 10.0 * service;
+        }
+    }
+
+    #[test]
+    fn simultaneous_arrivals_queue_strictly() {
+        let p = CoreParams::default();
+        let mut sim = QueueSim::new(tiny(), p);
+        let a = sim.arrive(0.0, 18);
+        let b = sim.arrive(0.0, 18);
+        assert_eq!(a.queueing_ns, 0.0);
+        assert!(b.queueing_ns > 0.0, "second frame of a burst must wait: {b:?}");
+        assert!(b.latency_ns() > a.latency_ns());
+        assert!(sim.horizon_ns() >= b.completion_ns);
+    }
+
+    #[test]
+    fn replay_is_bitwise_deterministic() {
+        let run = || {
+            let mut sim = QueueSim::new(tiny(), CoreParams::default());
+            let mut out = Vec::new();
+            let mut t = 0.0;
+            for i in 0..12 {
+                // Mixed token counts and a bursty, irregular trace.
+                let n = [9, 18, 36][i % 3];
+                out.push(sim.arrive(t, n));
+                if i % 3 != 0 {
+                    t += 1500.0 * (i as f64);
+                }
+            }
+            out
+        };
+        assert_eq!(run(), run(), "same trace must replay bit-identically");
+    }
+
+    #[test]
+    fn reset_returns_to_idle() {
+        let p = CoreParams::default();
+        let mut sim = QueueSim::new(tiny(), p);
+        let first = sim.arrive(0.0, 18);
+        sim.arrive(0.0, 18);
+        assert!(sim.horizon_ns() > 0.0);
+        sim.reset();
+        assert_eq!(sim.frames(), 0);
+        let again = sim.arrive(0.0, 18);
+        assert_eq!(again.latency_ns(), first.latency_ns());
+        assert_eq!(again.queueing_ns, 0.0);
+    }
+}

@@ -1,0 +1,65 @@
+//! Map-once frame task graphs: the static half of the co-simulation.
+//!
+//! A [`FrameGraph`] is the one-frame task list the Fig. 5 scheduler
+//! produces for a token count, mapped **once** and then replayed per
+//! arrival by [`super::des::QueueSim`]. The schedule builder emits every
+//! frame identically (dependencies are strictly intra-frame; cross-frame
+//! coupling is resource state only), which is what makes the replay exact.
+
+use crate::arch::scheduler::AttentionSchedule;
+use crate::arch::scheduler::Task;
+use crate::arch::CoreParams;
+use crate::vit::VitConfig;
+
+/// One frame's mapped task DAG plus its idle-hardware makespan.
+#[derive(Debug)]
+pub struct FrameGraph {
+    /// Token count this graph was mapped for.
+    pub n_tokens: usize,
+    /// Tasks in topological (submission) order, dependencies expressed as
+    /// indices into this same vector.
+    pub tasks: Vec<Task>,
+    /// Idle-hardware makespan (ns): the frame's **service time** — latency
+    /// when it arrives to an empty accelerator. Queueing is everything a
+    /// loaded replay adds on top.
+    pub service_ns: f64,
+}
+
+impl FrameGraph {
+    /// Map one frame of the decomposed (Eq. 2, Fig. 5) flow at `n_tokens`
+    /// through `cfg.depth` encoder blocks. Called once per token count;
+    /// replays never rebuild it.
+    pub fn map(cfg: &VitConfig, n_tokens: usize, params: CoreParams) -> Self {
+        let sched = AttentionSchedule::decomposed(cfg, n_tokens, params, 1);
+        let (_, stats) = sched.schedule(params.num_cores);
+        FrameGraph { n_tokens, tasks: sched.tasks, service_ns: stats.makespan_ns }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vit::VitVariant;
+
+    fn tiny() -> VitConfig {
+        VitConfig::variant(VitVariant::Tiny, 96, 10)
+    }
+
+    #[test]
+    fn maps_one_frame_with_positive_service() {
+        let g = FrameGraph::map(&tiny(), 18, CoreParams::default());
+        assert!(!g.tasks.is_empty());
+        assert!(g.service_ns > 0.0);
+        assert_eq!(g.n_tokens, 18);
+        // One-frame build: every task belongs to frame 0.
+        assert!(g.tasks.iter().all(|t| t.name.frame == 0));
+    }
+
+    #[test]
+    fn service_grows_with_tokens() {
+        let p = CoreParams::default();
+        let small = FrameGraph::map(&tiny(), 9, p).service_ns;
+        let large = FrameGraph::map(&tiny(), 36, p).service_ns;
+        assert!(large > small, "{large} !> {small}");
+    }
+}

@@ -1,0 +1,55 @@
+//! Discrete-event queueing co-simulation of the five-core photonic
+//! scheduler: modeled latency that includes *waiting*, not just service.
+//!
+//! [`crate::arch::scheduler`] maps one frame onto the accelerator (list
+//! scheduling over the Fig. 5 task DAG) and answers "how long does a frame
+//! take on idle hardware" — a pure **service-time** model. Under load that
+//! is the wrong number: frames arrive while earlier frames still occupy MR
+//! banks, optical cores, and the EPU, and real latency includes the time
+//! spent queued behind them. This module replays the mapped task graph
+//! under an arbitrary arrival process:
+//!
+//! ```text
+//! micro-batcher ──► arrival events (serving Clock stamps or a paced trace)
+//!                         │
+//!                         ▼
+//!             per-core FIFO queues ([`CoreQueue`] × N + [`EpuQueue`]:
+//!             serial light path, 2-deep ping-pong MR banks — exactly
+//!             the PipelineScheduler resource rules)
+//!                         │
+//!                         ▼
+//!             per-frame [`FrameSpan`] {service, queueing, completion}
+//!             ──► "modeled_queueing" stage in StageMetrics / ServeReport
+//! ```
+//!
+//! **Map once, then simulate under traffic** (the compiler → metasim → sim
+//! split of hardware-emulation flows): [`FrameGraph`] builds the one-frame
+//! task list per token count once, and [`QueueSim`] replays it per arrival,
+//! carrying every resource availability horizon across frames. Because the
+//! schedule builder emits identical task sequences per frame with strictly
+//! intra-frame dependencies, replaying frame after frame over shared
+//! resource state performs the *same float operations* as scheduling one
+//! concatenated multi-frame build — so at zero offered load the co-sim
+//! collapses to the closed-form model: a frame arriving to idle hardware
+//! reports queueing of exactly `0.0`, and back-to-back arrivals reproduce
+//! [`crate::arch::AttentionSchedule::steady_state_frame_ns`] bitwise (the
+//! `tests/cosim.rs` anchors).
+//!
+//! Everything here is pure arithmetic over `f64` virtual nanoseconds — no
+//! threads, no wall clock, no allocation per frame in steady state — so
+//! every co-sim number is deterministic, and the serving integration
+//! (`runtime::sim::SimBackend::modeled_queueing_s`) stays exact under
+//! `ManualClock`. [`sweep::simulate`] drives the operating-point studies
+//! (cores × batch × offered load → latency/KFPS-per-W curves comparable to
+//! the paper's Fig. 9/11); the `operating_point` bench writes them to
+//! `BENCH_cosim.json`.
+
+pub mod des;
+pub mod graph;
+pub mod queue;
+pub mod sweep;
+
+pub use des::{FrameSpan, QueueSim};
+pub use graph::FrameGraph;
+pub use queue::{CoreQueue, EpuQueue, EventHeap};
+pub use sweep::{percentile, simulate, OperatingPoint, OperatingPointReport};

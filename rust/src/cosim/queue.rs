@@ -1,0 +1,166 @@
+//! Per-resource queues and the event heap: the dynamic half's plumbing.
+//!
+//! Tasks are replayed onto each resource in FIFO (mapped) order, so a
+//! resource queue collapses to its **availability horizons**: when the
+//! light path frees ([`CoreQueue::free_ns`]) and when each bank of the
+//! 2-deep ping-pong MR pair frees ([`CoreQueue::bank_end_ns`]). The max/+
+//! recurrence over those horizons is exactly the per-task event processing
+//! of the `PipelineScheduler`, in O(1) per task.
+//!
+//! [`EventHeap`] is a deterministic min-heap over `(virtual time, FIFO
+//! sequence)` used where event streams genuinely interleave — the
+//! operating-point sweep merges frame arrival and completion events with
+//! it to track queue occupancy over time.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// FIFO queue state of one optical core.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CoreQueue {
+    /// When the core's light path (compute) frees (ns).
+    pub free_ns: f64,
+    /// When each bank of the ping-pong MR pair frees: `[next-to-last,
+    /// last]` compute end on this core — tuning of a new task may not
+    /// start before `bank_end_ns[0]`.
+    pub bank_end_ns: [f64; 2],
+    /// Accumulated compute-busy time (ns), for utilization accounting.
+    pub busy_ns: f64,
+}
+
+impl CoreQueue {
+    /// Whether the core is idle at virtual time `t_ns` (no queued or
+    /// running work; bank horizons never exceed `free_ns`).
+    pub fn idle_at(&self, t_ns: f64) -> bool {
+        self.free_ns <= t_ns
+    }
+
+    /// Drop queued work, keeping utilization counters.
+    pub fn reset(&mut self) {
+        self.free_ns = 0.0;
+        self.bank_end_ns = [0.0; 2];
+    }
+}
+
+/// FIFO queue state of the electronic processing unit.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EpuQueue {
+    /// When the EPU frees (ns).
+    pub free_ns: f64,
+    /// Accumulated busy time (ns).
+    pub busy_ns: f64,
+}
+
+impl EpuQueue {
+    /// Whether the EPU is idle at virtual time `t_ns`.
+    pub fn idle_at(&self, t_ns: f64) -> bool {
+        self.free_ns <= t_ns
+    }
+}
+
+/// One queued event: total-ordered by `(time, insertion sequence)`, so
+/// ties break FIFO and the pop order is deterministic.
+#[derive(Debug)]
+struct Entry<T> {
+    time_ns: f64,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl<T> Eq for Entry<T> {}
+
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap and we want the earliest
+        // event first.
+        other
+            .time_ns
+            .total_cmp(&self.time_ns)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic discrete-event min-heap: events pop in virtual-time
+/// order, FIFO within a timestamp.
+#[derive(Debug, Default)]
+pub struct EventHeap<T> {
+    heap: BinaryHeap<Entry<T>>,
+    seq: u64,
+}
+
+impl<T> EventHeap<T> {
+    pub fn new() -> Self {
+        EventHeap { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    /// Schedule `payload` at virtual time `time_ns`.
+    pub fn push(&mut self, time_ns: f64, payload: T) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { time_ns, seq, payload });
+    }
+
+    /// Pop the earliest event.
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        self.heap.pop().map(|e| (e.time_ns, e.payload))
+    }
+
+    /// Virtual time of the earliest pending event.
+    pub fn peek_time_ns(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time_ns)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_heap_pops_in_time_order_fifo_on_ties() {
+        let mut h: EventHeap<&str> = EventHeap::new();
+        h.push(5.0, "late");
+        h.push(1.0, "first");
+        h.push(3.0, "tie-a");
+        h.push(3.0, "tie-b");
+        assert_eq!(h.len(), 4);
+        assert_eq!(h.peek_time_ns(), Some(1.0));
+        let order: Vec<&str> = std::iter::from_fn(|| h.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, ["first", "tie-a", "tie-b", "late"]);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn queues_report_idleness() {
+        let mut c = CoreQueue::default();
+        assert!(c.idle_at(0.0));
+        c.free_ns = 10.0;
+        c.bank_end_ns = [4.0, 10.0];
+        assert!(!c.idle_at(9.0));
+        assert!(c.idle_at(10.0));
+        c.reset();
+        assert!(c.idle_at(0.0));
+        let e = EpuQueue { free_ns: 2.0, busy_ns: 2.0 };
+        assert!(!e.idle_at(1.0));
+        assert!(e.idle_at(2.0));
+    }
+}

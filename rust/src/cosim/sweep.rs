@@ -1,0 +1,193 @@
+//! Operating-point sweeps: cores × batch × offered load → latency and
+//! throughput curves (the Fig. 9/11-style studies, under queueing).
+//!
+//! [`simulate`] drives a [`QueueSim`] with a synthetic arrival process —
+//! groups of `batch` frames arriving together, group gaps either
+//! deterministic or seeded-exponential (Poisson) — and summarizes the
+//! per-frame [`FrameSpan`]s into an [`OperatingPointReport`]. Offered
+//! load is expressed as a fraction of the saturation rate
+//! (`1 / steady_state_frame_ns`), so `load = 1.0` means "frames offered
+//! exactly as fast as the pipelined accelerator can drain them". The
+//! `operating_point` bench serializes these reports to `BENCH_cosim.json`.
+
+use crate::arch::scheduler::AttentionSchedule;
+use crate::arch::CoreParams;
+use crate::util::rng::Rng;
+use crate::vit::VitConfig;
+
+use super::des::QueueSim;
+use super::queue::EventHeap;
+
+/// One point of the cores × batch × load grid.
+#[derive(Debug, Clone, Copy)]
+pub struct OperatingPoint {
+    /// Optical core count (≥ 5: the Fig. 5 flow needs five).
+    pub cores: usize,
+    /// Frames per arrival burst (the micro-batch width being modeled).
+    pub batch: usize,
+    /// Offered load as a fraction of the saturation rate (> 0; may exceed
+    /// 1.0 to model overload).
+    pub load: f64,
+    /// Frames to simulate.
+    pub frames: usize,
+    /// Token count per frame (post-RoI).
+    pub n_tokens: usize,
+    /// `Some(seed)`: seeded-exponential (Poisson) burst gaps; `None`:
+    /// deterministic uniform spacing.
+    pub arrival_seed: Option<u64>,
+}
+
+/// Summary of one simulated operating point.
+#[derive(Debug, Clone, Copy)]
+pub struct OperatingPointReport {
+    pub cores: usize,
+    pub batch: usize,
+    pub load: f64,
+    pub frames: usize,
+    /// Saturation throughput at this core count / token count (kilo-fps).
+    pub saturation_kfps: f64,
+    /// Offered arrival rate (kilo-fps).
+    pub offered_kfps: f64,
+    /// Achieved throughput: frames over the first-arrival → last-completion
+    /// span (kilo-fps).
+    pub achieved_kfps: f64,
+    pub mean_latency_ns: f64,
+    pub p50_latency_ns: f64,
+    pub p99_latency_ns: f64,
+    pub max_latency_ns: f64,
+    pub mean_queueing_ns: f64,
+    pub p99_queueing_ns: f64,
+    /// Peak frames simultaneously in system (queued + in service).
+    pub peak_in_flight: usize,
+}
+
+/// Nearest-rank percentile over an **ascending-sorted** slice
+/// (`q` in `[0, 1]`; deterministic, no interpolation).
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty sample");
+    let idx = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Simulate one operating point. Deterministic: the same `op` always
+/// produces the same report (arrivals are a pure function of `op`).
+pub fn simulate(cfg: &VitConfig, op: &OperatingPoint) -> OperatingPointReport {
+    assert!(op.load > 0.0, "offered load must be positive");
+    assert!(op.frames > 0 && op.batch > 0);
+    let params = CoreParams { num_cores: op.cores, ..CoreParams::default() };
+    let steady_ns = AttentionSchedule::steady_state_frame_ns(cfg, op.n_tokens, params, true);
+    let interval_ns = steady_ns / op.load;
+    let gap_mean_ns = interval_ns * op.batch as f64;
+    let mut sim = QueueSim::new(*cfg, params);
+    let mut rng = op.arrival_seed.map(Rng::new);
+
+    let mut latencies = Vec::with_capacity(op.frames);
+    let mut queueing = Vec::with_capacity(op.frames);
+    let mut events: EventHeap<i64> = EventHeap::new();
+    let mut t = 0.0f64;
+    let mut last_completion = 0.0f64;
+    let mut done = 0usize;
+    while done < op.frames {
+        let burst = op.batch.min(op.frames - done);
+        for _ in 0..burst {
+            let span = sim.arrive(t, op.n_tokens);
+            latencies.push(span.latency_ns());
+            queueing.push(span.queueing_ns);
+            events.push(span.arrival_ns, 1);
+            events.push(span.completion_ns, -1);
+            last_completion = last_completion.max(span.completion_ns);
+            done += 1;
+        }
+        let gap = match rng.as_mut() {
+            // Inverse-CDF exponential over the open unit interval
+            // (`next_f64` is in [0,1), so `1 - u` never hits zero).
+            Some(r) => -(1.0 - r.next_f64()).ln() * gap_mean_ns,
+            None => gap_mean_ns,
+        };
+        t += gap;
+    }
+
+    // Merge arrival/completion event streams to track occupancy.
+    let mut in_flight = 0i64;
+    let mut peak = 0i64;
+    while let Some((_, delta)) = events.pop() {
+        in_flight += delta;
+        peak = peak.max(in_flight);
+    }
+
+    let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len() as f64;
+    let mean_latency_ns = mean(&latencies);
+    let mean_queueing_ns = mean(&queueing);
+    latencies.sort_by(f64::total_cmp);
+    queueing.sort_by(f64::total_cmp);
+    let span_s = (last_completion * 1e-9).max(f64::MIN_POSITIVE);
+    OperatingPointReport {
+        cores: op.cores,
+        batch: op.batch,
+        load: op.load,
+        frames: op.frames,
+        saturation_kfps: 1e9 / steady_ns / 1e3,
+        offered_kfps: op.load * 1e9 / steady_ns / 1e3,
+        achieved_kfps: op.frames as f64 / span_s / 1e3,
+        mean_latency_ns,
+        p50_latency_ns: percentile(&latencies, 0.50),
+        p99_latency_ns: percentile(&latencies, 0.99),
+        max_latency_ns: latencies[latencies.len() - 1],
+        mean_queueing_ns,
+        p99_queueing_ns: percentile(&queueing, 0.99),
+        peak_in_flight: peak.max(0) as usize,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vit::VitVariant;
+
+    fn tiny() -> VitConfig {
+        VitConfig::variant(VitVariant::Tiny, 96, 10)
+    }
+
+    fn point(load: f64) -> OperatingPoint {
+        OperatingPoint {
+            cores: 5,
+            batch: 4,
+            load,
+            frames: 120,
+            n_tokens: 18,
+            arrival_seed: Some(7),
+        }
+    }
+
+    #[test]
+    fn overload_queues_and_underload_drains() {
+        let calm = simulate(&tiny(), &point(0.2));
+        let storm = simulate(&tiny(), &point(1.5));
+        assert!(storm.mean_queueing_ns > calm.mean_queueing_ns);
+        assert!(storm.p99_latency_ns > calm.p99_latency_ns);
+        assert!(storm.peak_in_flight > calm.peak_in_flight);
+        // Overload cannot beat saturation; underload tracks the offer
+        // (loose bound: Poisson gap sums jitter the horizon).
+        assert!(storm.achieved_kfps <= storm.saturation_kfps * 1.01);
+        assert!(calm.achieved_kfps <= calm.offered_kfps * 1.5);
+        assert!(calm.frames == 120 && storm.frames == 120);
+    }
+
+    #[test]
+    fn reports_are_deterministic() {
+        let a = simulate(&tiny(), &point(0.8));
+        let b = simulate(&tiny(), &point(0.8));
+        assert_eq!(a.p99_latency_ns, b.p99_latency_ns);
+        assert_eq!(a.mean_latency_ns, b.mean_latency_ns);
+        assert_eq!(a.achieved_kfps, b.achieved_kfps);
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert_eq!(percentile(&[5.0], 0.99), 5.0);
+    }
+}

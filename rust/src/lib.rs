@@ -24,7 +24,10 @@
 //! `make artifacts` the rust binary is self-contained), `--backend host`
 //! runs a pure-Rust quantized reference forward pass needing no artifacts
 //! at all, and `--backend sim` keeps the host numerics while charging
-//! modeled photonic-core latency from [`arch`]/[`energy`].
+//! modeled photonic-core latency from [`arch`]/[`energy`] — including,
+//! when a [`cosim`] queueing plan is armed (`--cores`/`--arrival-fps`),
+//! load-dependent waiting time from a discrete-event replay of the
+//! scheduler under the actual arrival process.
 //!
 //! Execution is **batch-first**: [`runtime::Backend::execute_batch`] runs
 //! one bucket artifact over N frames per call (all three backends
@@ -72,6 +75,7 @@
 //! | [`photonics`] | microring, crosstalk, FPV, VCSEL, BPD device models |
 //! | [`energy`] | per-component energy/delay constants + accounting engine |
 //! | [`arch`] | optical core cycle model, chunk mapping, 5-core scheduler, ViT workload inventory |
+//! | [`cosim`] | discrete-event queueing co-sim of the mapped scheduler: per-core FIFO queues under the real arrival process, load-dependent modeled latency, operating-point sweeps |
 //! | [`vit`] | ViT-T/S/B/L and MGNet configurations |
 //! | [`quant`] | int8 symmetric quantization |
 //! | [`roi`] | patch masks and skip-ratio accounting |
@@ -86,6 +90,7 @@ pub mod arch;
 pub mod baselines;
 pub mod cli;
 pub mod coordinator;
+pub mod cosim;
 pub mod energy;
 pub mod photonics;
 pub mod quant;

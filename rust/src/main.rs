@@ -7,6 +7,7 @@
 //!                 [--cameras K] [--weights w0,w1,..] [--pin]
 //!                 [--slo-ms F] [--quota N] [--rate F]
 //!                 [--faults S] [--drift-rate R]
+//!                 [--cores N] [--arrival-fps F]
 //!                 [--no-mask] [--seed S] [--objects K] [--artifacts DIR]
 //! optovit report  [--decomposed true]        # Fig. 8/9 energy+delay grid
 //! optovit roi     [--size 96|224]            # Fig. 10/11 operating points
@@ -40,6 +41,16 @@
 //! (default 1e-4). The per-worker table then reports each worker's final
 //! health score, completed recalibration windows, and at-risk frames,
 //! and the serve report counts `accuracy-at-risk` frames.
+//!
+//! `--cores N` / `--arrival-fps F` (sim backend only) arm the queueing
+//! co-sim: each worker replays the five-core scheduler's task graph
+//! through the discrete-event simulator at each frame's actual arrival
+//! time, so modeled latency includes waiting for busy cores under load.
+//! `--cores` sets the modeled optical core count (≥ 5, default 5);
+//! `--arrival-fps` paces virtual arrivals at a fixed offered load
+//! (frame `k` arrives at `k/F` seconds) instead of stamping them from
+//! the serving clock. The report gains a `modeled queueing` line and a
+//! per-worker queueing column.
 
 use optovit::baselines;
 use optovit::cli::Args;
@@ -52,7 +63,7 @@ use optovit::energy::AcceleratorModel;
 use optovit::photonics::fpv::FpvModel;
 use optovit::photonics::MrGeometry;
 use optovit::coordinator::clock::Clock;
-use optovit::runtime::{AnyFactory, BackendFactory, BackendKind, FaultPlan};
+use optovit::runtime::{AnyFactory, BackendFactory, BackendKind, FaultPlan, QueueingPlan};
 use optovit::util::table::{si_energy, si_time, Table};
 use optovit::vit::{MgnetConfig, VitConfig, VitVariant};
 
@@ -87,7 +98,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     args.check_known(&[
         "frames", "seed", "objects", "workers", "queue", "batch", "batch-wait-us", "window",
         "cameras", "weights", "pin", "slo-ms", "quota", "rate", "faults", "drift-rate",
-        "no-mask", "backend", "artifacts",
+        "cores", "arrival-fps", "no-mask", "backend", "artifacts",
     ])
     .map_err(anyhow::Error::msg)?;
     let frames = args.get_u64("frames", 50).map_err(anyhow::Error::msg)?;
@@ -158,6 +169,38 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         factory = factory.with_faults(FaultPlan {
             seed,
             drift_nm_per_s: drift_rate,
+            clock: Clock::system(),
+        });
+    }
+    // Queueing co-sim: sim-only (waiting is modeled against the photonic
+    // scheduler's task graph; host/pjrt have no modeled substrate).
+    let cores = args
+        .get("cores")
+        .map(|v| v.parse::<usize>().map_err(|e| format!("--cores: {e}")))
+        .transpose()
+        .map_err(anyhow::Error::msg)?;
+    let arrival_fps = args
+        .get("arrival-fps")
+        .map(|v| v.parse::<f64>().map_err(|e| format!("--arrival-fps: {e}")))
+        .transpose()
+        .map_err(anyhow::Error::msg)?;
+    if let Some(f) = arrival_fps {
+        if !(f > 0.0 && f.is_finite()) {
+            anyhow::bail!("--arrival-fps: must be a finite positive frames/s figure");
+        }
+    }
+    if let Some(c) = cores {
+        if c < 5 {
+            anyhow::bail!("--cores: the five-core pipeline flow needs at least 5 optical cores");
+        }
+    }
+    if cores.is_some() || arrival_fps.is_some() {
+        if kind != BackendKind::Sim {
+            anyhow::bail!("--cores/--arrival-fps require --backend sim (the queueing co-sim)");
+        }
+        factory = factory.with_queueing(QueueingPlan {
+            cores: cores.unwrap_or(5),
+            pace_fps: arrival_fps,
             clock: Clock::system(),
         });
     }
@@ -299,6 +342,12 @@ fn print_serve_report(r: &ServeReport, metrics: &StageMetrics) {
         si_time(r.mean_latency_s),
         if r.backend == "sim" { "  (modeled photonic-core)" } else { "" }
     );
+    if r.modeled_queueing_s > 0.0 {
+        println!(
+            "modeled queueing     {} total (waiting for busy cores, co-sim)",
+            si_time(r.modeled_queueing_s)
+        );
+    }
     println!("mean modeled energy  {}/frame", si_energy(r.mean_energy_j));
     println!("modeled efficiency   {:.1} KFPS/W", r.modeled_kfps_per_watt);
     println!("mean micro-batch     {:.2} frames/dispatch", r.mean_batch);
@@ -308,7 +357,8 @@ fn print_serve_report(r: &ServeReport, metrics: &StageMetrics) {
     if r.workers > 1 {
         println!("\nper-worker utilization:");
         let mut t = Table::new(vec![
-            "worker", "core", "frames", "busy", "utilization", "health", "recals", "at-risk",
+            "worker", "core", "frames", "busy", "queueing", "utilization", "health", "recals",
+            "at-risk",
         ]);
         for w in &r.per_worker {
             t.row(vec![
@@ -316,6 +366,7 @@ fn print_serve_report(r: &ServeReport, metrics: &StageMetrics) {
                 w.core.map(|c| c.to_string()).unwrap_or_else(|| "-".to_string()),
                 w.frames.to_string(),
                 si_time(w.busy_s),
+                si_time(w.queueing_s),
                 format!("{:.2}", w.utilization),
                 format!("{:.2}", w.health),
                 w.recals.to_string(),

@@ -9,7 +9,7 @@
 //! |---|---|---|---|---|
 //! | `pjrt` | [`PjrtBackend`] | compiled HLO on the CPU PJRT client | host wall-clock | yes (`make artifacts`) |
 //! | `host` | [`HostBackend`] | pure-Rust reference ViT/MGNet (quantized, seeded) | host wall-clock | no |
-//! | `sim`  | [`SimBackend`] | host reference numerics | modeled photonic-core delay ([`crate::arch`]/[`crate::energy`]) | no |
+//! | `sim`  | [`SimBackend`] | host reference numerics | modeled photonic-core delay ([`crate::arch`]/[`crate::energy`]), plus queueing under load when a [`QueueingPlan`] arms the [`crate::cosim`] replay | no |
 //!
 //! Artifact *names* (`mgnet_96`, `vit_tiny_96_n36` — the `.hlo.txt` stems
 //! emitted by `python/compile/aot.py`) are the ABI shared by every backend:
@@ -110,19 +110,27 @@ impl AsTensorRef for TensorRef<'_> {
 /// Per-stage modeled frame latency reported by a simulating backend
 /// ([`SimBackend`]): the MGNet front end and the backbone are separate
 /// stages on the five-core accelerator, and the serving metrics record
-/// them separately (`"modeled_mgnet"` / `"modeled_backbone"`).
+/// them separately (`"modeled_mgnet"` / `"modeled_backbone"`), plus the
+/// load-dependent queueing delay charged by the scheduler co-sim
+/// (`"modeled_queueing"` — see [`crate::cosim`]).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ModeledStages {
     /// MGNet front-end latency (0 on unmasked runs — MGNet never executes).
     pub mgnet_s: f64,
     /// Backbone latency at the frame's kept-patch count.
     pub backbone_s: f64,
+    /// Queueing delay under the arrival process (0 unless a queueing
+    /// co-simulation is armed — [`Backend::modeled_stages_s`] itself
+    /// reports pure *service* stages; the pipeline fills this in from
+    /// [`Backend::modeled_queueing_s`] so service figures stay cacheable
+    /// while waiting time never is).
+    pub queueing_s: f64,
 }
 
 impl ModeledStages {
-    /// End-to-end modeled frame latency.
+    /// End-to-end modeled frame latency: waiting plus service.
     pub fn total_s(&self) -> f64 {
-        self.mgnet_s + self.backbone_s
+        self.mgnet_s + self.backbone_s + self.queueing_s
     }
 }
 
@@ -245,6 +253,18 @@ pub trait Backend {
         self.modeled_stages_s(kept_patches, use_mask, true).map(|s| s.total_s())
     }
 
+    /// Advance the backend's queueing co-simulation by one frame arrival
+    /// and return the modeled **queueing delay** (seconds) that frame
+    /// spends waiting for the accelerator, on top of the service time
+    /// [`Backend::modeled_stages_s`] reports. Stateful by design: each
+    /// call feeds one arrival event (stamped from the serving clock, or a
+    /// paced trace) into the discrete-event model, so waiting reflects the
+    /// actual load. The default — and any backend without a co-sim —
+    /// charges no waiting.
+    fn modeled_queueing_s(&mut self, _kept_patches: usize, _use_mask: bool) -> f64 {
+        0.0
+    }
+
     /// Current optical-hardware condition, for backends that model
     /// degradation over clock time. `None` (the default) means the
     /// substrate has no fault model and the dispatcher treats the worker
@@ -346,6 +366,27 @@ impl FaultPlan {
     pub fn worker_seed(&self, worker: usize) -> u64 {
         self.seed.wrapping_add((worker as u64).wrapping_mul(0x9E3779B97F4A7C15))
     }
+}
+
+/// Configuration for the scheduler queueing co-simulation
+/// ([`crate::cosim`]), carried by [`AnyFactory`] and honored by the `sim`
+/// kind only: each worker's backend gets its own discrete-event replay of
+/// the mapped task graph (one modeled accelerator per worker), so modeled
+/// latency includes waiting time under that worker's arrival process.
+#[derive(Debug, Clone)]
+pub struct QueueingPlan {
+    /// Optical core count of the modeled accelerator (≥ 5 — the Fig. 5
+    /// flow needs five; `--cores`).
+    pub cores: usize,
+    /// `Some(fps)`: paced virtual arrivals — frame `k` arrives at `k/fps`
+    /// seconds, a deterministic offered-load trace (`--arrival-fps`).
+    /// `None`: arrivals are stamped from `clock` as frames reach the
+    /// backend, i.e. the actual serving arrival process.
+    pub pace_fps: Option<f64>,
+    /// The serving clock arrivals are stamped from when `pace_fps` is
+    /// `None` — pass the same clock as `EngineConfig::clock` so
+    /// `ManualClock` tests drive queueing deterministically.
+    pub clock: crate::coordinator::clock::Clock,
 }
 
 /// Factory for [`PjrtBackend`]s over one artifact directory.
@@ -466,6 +507,14 @@ impl Backend for AnyBackend {
         }
     }
 
+    fn modeled_queueing_s(&mut self, kept_patches: usize, use_mask: bool) -> f64 {
+        match self {
+            AnyBackend::Pjrt(b) => b.modeled_queueing_s(kept_patches, use_mask),
+            AnyBackend::Host(b) => b.modeled_queueing_s(kept_patches, use_mask),
+            AnyBackend::Sim(b) => b.modeled_queueing_s(kept_patches, use_mask),
+        }
+    }
+
     fn health(&mut self) -> Option<BackendHealth> {
         match self {
             AnyBackend::Pjrt(b) => b.health(),
@@ -494,6 +543,9 @@ pub struct AnyFactory {
     /// Degraded-optics simulation (honored by the `sim` kind only): each
     /// worker's backend gets an independently seeded fault schedule.
     pub faults: Option<FaultPlan>,
+    /// Scheduler queueing co-simulation (honored by the `sim` kind only):
+    /// each worker's backend models its own arrival queue.
+    pub queueing: Option<QueueingPlan>,
 }
 
 impl AnyFactory {
@@ -503,12 +555,19 @@ impl AnyFactory {
             artifact_dir: artifact_dir.into(),
             host: HostConfig::default(),
             faults: None,
+            queueing: None,
         }
     }
 
     /// Enable per-worker degraded-optics simulation (see [`FaultPlan`]).
     pub fn with_faults(mut self, plan: FaultPlan) -> Self {
         self.faults = Some(plan);
+        self
+    }
+
+    /// Enable the per-worker queueing co-simulation (see [`QueueingPlan`]).
+    pub fn with_queueing(mut self, plan: QueueingPlan) -> Self {
+        self.queueing = Some(plan);
         self
     }
 }
@@ -528,6 +587,9 @@ impl BackendFactory for AnyFactory {
                         plan.drift_nm_per_s,
                     );
                     b.enable_faults(schedule, plan.clock.clone());
+                }
+                if let Some(plan) = &self.queueing {
+                    b.enable_queueing(plan.cores, plan.pace_fps, plan.clock.clone());
                 }
                 AnyBackend::Sim(b)
             }

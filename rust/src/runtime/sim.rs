@@ -25,9 +25,18 @@
 //! time, interleaved with other buckets' batches, so its banks are
 //! reprogrammed regardless of batching.
 //!
-//! Modeled latencies are cached per kept-patch count: the delay schedule is
-//! orders of magnitude more expensive than the energy model (see
-//! `AcceleratorModel::frame_energy`), so it must never run per frame.
+//! Modeled **service** figures are cached per kept-patch count: the delay
+//! schedule is orders of magnitude more expensive than the energy model
+//! (see `AcceleratorModel::frame_energy`), so it must never run per frame
+//! — and caching *service* is sound, because it depends only on the kept
+//! count and the first/follower position. What is never cached is total
+//! latency: with the [`crate::cosim`] queueing co-simulation armed
+//! ([`SimBackend::enable_queueing`]), every frame adds a waiting term
+//! computed from its arrival against the live per-core queue state, so
+//! different batch widths and offered loads genuinely report different
+//! modeled latency. (The pre-co-sim cache keyed *total* latency by kept
+//! count alone, silently reusing batch-amortized timings across batch
+//! widths; re-keying it as a service-only cache fixed that.)
 
 use std::time::Instant;
 
@@ -35,13 +44,16 @@ use anyhow::Result;
 
 use super::host::{ArtifactSpec, HostBackend, HostConfig};
 use super::{Backend, BackendHealth, ModeledStages, RecalCost, TensorRef};
+use crate::arch::CoreParams;
 use crate::coordinator::clock::Clock;
+use crate::cosim::QueueSim;
 use crate::energy::AcceleratorModel;
 use crate::photonics::{DegradationState, FaultSchedule};
 use crate::util::rng::Rng;
 use crate::vit::{MgnetConfig, VitConfig, VitVariant};
 
-/// `(first_in_batch, follower)` modeled latency pair for one stage.
+/// `(first_in_batch, follower)` modeled **service**-latency pair for one
+/// stage — load-independent by construction; queueing is never part of it.
 #[derive(Debug, Clone, Copy)]
 struct StagePair {
     first_s: f64,
@@ -77,6 +89,26 @@ impl WorkerFaultState {
     }
 }
 
+/// Armed queueing co-simulation for one worker's backend: a
+/// [`QueueSim`] over the backbone's mapped task graphs, fed one arrival
+/// event per modeled frame (see [`SimBackend::enable_queueing`]).
+#[derive(Debug)]
+struct QueueingState {
+    /// Modeled optical core count (≥ 5).
+    cores: usize,
+    /// `Some(fps)` = paced virtual arrivals at `k / fps`; `None` = stamp
+    /// arrivals from `clock`.
+    pace_fps: Option<f64>,
+    clock: Clock,
+    /// Clock-stamped arrivals are measured from here (arming time).
+    origin: Instant,
+    /// Frames fed so far (the paced-arrival index).
+    arrivals: u64,
+    /// Built lazily on the first modeled frame — the co-sim needs the
+    /// backbone config captured at artifact-load time.
+    sim: Option<QueueSim>,
+}
+
 /// Latency penalty per unit of lost health: a degraded bank needs extra
 /// tuning passes and guard time, up to +10% at health 0.
 const FAULT_LATENCY_PENALTY: f64 = 0.10;
@@ -94,16 +126,21 @@ pub struct SimBackend {
     /// time (the first loaded backbone defines the operating point).
     backbone: Option<VitConfig>,
     mgnet: Option<MgnetConfig>,
-    /// Modeled MGNet front-end latency (full grid; masked path only).
-    /// Batch-independent: MGNet executes per frame at route time.
-    mgnet_latency: Option<f64>,
-    /// Modeled masked backbone latency by kept-patch count (index = kept).
-    masked_latency: Vec<Option<StagePair>>,
-    /// Modeled unmasked full-grid latency.
-    full_latency: Option<StagePair>,
+    /// Modeled MGNet front-end **service** latency (full grid; masked path
+    /// only). Batch-independent: MGNet executes per frame at route time.
+    mgnet_service: Option<f64>,
+    /// Modeled masked backbone **service** latency by kept-patch count
+    /// (index = kept). Service only — sound to cache; total latency adds
+    /// uncacheable queueing when the co-sim is armed.
+    masked_service: Vec<Option<StagePair>>,
+    /// Modeled unmasked full-grid **service** latency.
+    full_service: Option<StagePair>,
     /// Degraded-optics simulation; `None` = ideal hardware (the default,
     /// and the mode every pre-existing modeled-latency equality holds in).
     faults: Option<WorkerFaultState>,
+    /// Queueing co-simulation; `None` = contention-free modeling (the
+    /// default: queueing reports exactly 0, totals equal service).
+    queueing: Option<QueueingState>,
 }
 
 impl SimBackend {
@@ -117,10 +154,11 @@ impl SimBackend {
             model,
             backbone: None,
             mgnet: None,
-            mgnet_latency: None,
-            masked_latency: Vec::new(),
-            full_latency: None,
+            mgnet_service: None,
+            masked_service: Vec::new(),
+            full_service: None,
             faults: None,
+            queueing: None,
         }
     }
 
@@ -137,6 +175,22 @@ impl SimBackend {
     pub fn enable_faults(&mut self, schedule: FaultSchedule, clock: Clock) {
         let epoch = clock.now();
         self.faults = Some(WorkerFaultState { schedule, clock, epoch });
+    }
+
+    /// Arm the scheduler queueing co-simulation ([`crate::cosim`]):
+    /// modeled latency gains a load-dependent waiting stage, fed one
+    /// arrival event per frame. `cores` is the modeled optical core count
+    /// (≥ 5 — the Fig. 5 flow needs five). `pace_fps = Some(f)` paces
+    /// deterministic virtual arrivals at `f` frames/s (the offered-load
+    /// knob for operating-point studies); `None` stamps arrivals from
+    /// `clock` as frames reach the backend — the actual serving arrival
+    /// process, exact under `ManualClock`. Cached service figures stay
+    /// pristine; queueing is computed per arrival and never cached.
+    pub fn enable_queueing(&mut self, cores: usize, pace_fps: Option<f64>, clock: Clock) {
+        assert!(cores >= 5, "the Fig. 5 flow needs at least 5 cores (got {cores})");
+        let origin = clock.now();
+        self.queueing =
+            Some(QueueingState { cores, pace_fps, clock, origin, arrivals: 0, sim: None });
     }
 
     /// Current degradation, if fault simulation is enabled.
@@ -252,30 +306,56 @@ impl Backend for SimBackend {
         // model (factor 1.0 when fault simulation is off).
         let k = self.latency_factor();
         if !use_mask {
-            if self.full_latency.is_none() {
-                self.full_latency = Some(self.stage_pair(&vit, vit.num_patches()));
+            if self.full_service.is_none() {
+                self.full_service = Some(self.stage_pair(&vit, vit.num_patches()));
             }
-            let full = self.full_latency.unwrap();
-            return Some(ModeledStages { mgnet_s: 0.0, backbone_s: full.pick(first_in_batch) * k });
+            let full = self.full_service.unwrap();
+            return Some(ModeledStages {
+                mgnet_s: 0.0,
+                backbone_s: full.pick(first_in_batch) * k,
+                queueing_s: 0.0,
+            });
         }
         let mg = self.mgnet?;
-        if self.mgnet_latency.is_none() {
+        if self.mgnet_service.is_none() {
             let mg_vit = mg.as_vit();
-            self.mgnet_latency =
+            self.mgnet_service =
                 Some(self.model.frame_report("sim", &mg_vit, mg_vit.num_patches(), true).delay.total_s());
         }
         let kept = kept_patches.clamp(1, vit.num_patches());
-        if self.masked_latency.len() <= kept {
-            self.masked_latency.resize(kept + 1, None);
+        if self.masked_service.len() <= kept {
+            self.masked_service.resize(kept + 1, None);
         }
-        if self.masked_latency[kept].is_none() {
-            self.masked_latency[kept] = Some(self.stage_pair(&vit, kept));
+        if self.masked_service[kept].is_none() {
+            self.masked_service[kept] = Some(self.stage_pair(&vit, kept));
         }
-        let backbone = self.masked_latency[kept].unwrap();
+        let backbone = self.masked_service[kept].unwrap();
         Some(ModeledStages {
-            mgnet_s: self.mgnet_latency.unwrap() * k,
+            mgnet_s: self.mgnet_service.unwrap() * k,
             backbone_s: backbone.pick(first_in_batch) * k,
+            queueing_s: 0.0,
         })
+    }
+
+    fn modeled_queueing_s(&mut self, kept_patches: usize, use_mask: bool) -> f64 {
+        // Degradation inflates waiting exactly like it inflates service
+        // (read the factor before mutably holding the queueing state).
+        let k = self.latency_factor();
+        let Some(vit) = self.backbone else { return 0.0 };
+        let Some(q) = self.queueing.as_mut() else { return 0.0 };
+        let n_tokens =
+            if use_mask { kept_patches.clamp(1, vit.num_patches()) } else { vit.num_patches() };
+        let arrival_s = match q.pace_fps {
+            Some(fps) => q.arrivals as f64 / fps,
+            None => q.clock.seconds_since(q.origin),
+        };
+        q.arrivals += 1;
+        let cores = q.cores;
+        let sim = q.sim.get_or_insert_with(|| {
+            QueueSim::new(vit, CoreParams { num_cores: cores, ..CoreParams::default() })
+        });
+        let span = sim.arrive(arrival_s * 1e9, n_tokens);
+        span.queueing_ns * 1e-9 * k
     }
 
     fn health(&mut self) -> Option<BackendHealth> {
@@ -463,5 +543,61 @@ mod tests {
         let mut clean = loaded_sim();
         let oc = clean.execute1("mgnet_32", &[TensorRef::new(&x, &dims)]).unwrap();
         assert_ne!(oa, oc, "degraded outputs must deviate from ideal numerics");
+    }
+
+    #[test]
+    fn queueing_off_reports_exactly_zero_waiting() {
+        let mut s = loaded_sim();
+        assert_eq!(s.modeled_queueing_s(2, true), 0.0);
+        let stages = s.modeled_stages_s(2, true, true).unwrap();
+        assert_eq!(stages.queueing_s, 0.0);
+        assert_eq!(stages.total_s(), stages.mgnet_s + stages.backbone_s);
+    }
+
+    #[test]
+    fn batch_width_changes_modeled_latency() {
+        // Regression for the old per-kept-count *total*-latency cache,
+        // which reported identical modeled latency for every batch width.
+        // With the co-sim armed, a frozen ManualClock stamps a whole batch
+        // at the same arrival instant: followers queue behind the first
+        // frame, so mean modeled latency strictly grows with batch width.
+        let mean_total = |width: usize| {
+            let (clock, _manual) = Clock::manual();
+            let mut s = loaded_sim();
+            s.enable_queueing(5, None, clock);
+            let mut sum = 0.0;
+            for i in 0..width {
+                let stages = s.modeled_stages_s(2, true, i == 0).unwrap();
+                sum += stages.total_s() + s.modeled_queueing_s(2, true);
+            }
+            sum / width as f64
+        };
+        let w1 = mean_total(1);
+        let w4 = mean_total(4);
+        assert!(w4 > w1, "batch width must change modeled latency: {w4} !> {w1}");
+        assert_eq!(mean_total(4), w4, "co-sim replay must be deterministic");
+    }
+
+    #[test]
+    fn paced_queueing_is_deterministic_and_load_sensitive() {
+        let run = |fps: f64| {
+            let (clock, _manual) = Clock::manual();
+            let mut s = loaded_sim();
+            s.enable_queueing(5, Some(fps), clock);
+            (0..6).map(|_| s.modeled_queueing_s(4, true)).collect::<Vec<f64>>()
+        };
+        // 100 fps = 10 ms gaps: orders of magnitude beyond the modeled
+        // service time, so every frame lands on idle hardware.
+        let sparse = run(100.0);
+        assert!(sparse.iter().all(|&q| q == 0.0), "sparse arrivals must not queue: {sparse:?}");
+        // 1e9 fps = 1 ns gaps: effectively simultaneous, so every frame
+        // after the first waits.
+        let dense = run(1e9);
+        assert!(
+            dense.iter().skip(1).all(|&q| q > 0.0),
+            "near-simultaneous arrivals must queue: {dense:?}"
+        );
+        assert_eq!(dense[0], 0.0, "the first frame arrives to an idle accelerator");
+        assert_eq!(dense, run(1e9), "same pace → bitwise-identical queueing");
     }
 }

@@ -1,0 +1,247 @@
+//! Deterministic co-sim gate — the discrete-event queueing simulator's
+//! correctness anchors and its wiring through the serving stack, with
+//! **exact** (bitwise where stated) expectations:
+//!
+//! 1. zero-load anchor: with every frame arriving at t = 0, the DES
+//!    replay's steady-state completion spacing equals the closed-form
+//!    [`AttentionSchedule::steady_state_frame_ns`] **bitwise**, and a
+//!    frame arriving to idle hardware reports queueing of exactly `0.0`;
+//! 2. load sensitivity: modeled p99 latency is **strictly** increasing
+//!    across an offered-load sweep under seeded-Poisson arrivals;
+//! 3. determinism: the same arrival trace replays to bit-identical
+//!    spans, the same operating point to a bit-identical report, and
+//!    the same paced serving pipeline to bit-identical per-frame
+//!    queueing — there is no hidden wall-clock or RNG state;
+//! 4. accounting: served through real sim-backend pipelines with the
+//!    co-sim armed, the aggregate `modeled_queueing_s` equals the
+//!    per-session sum **exactly**, and is positive under a dense paced
+//!    arrival process.
+
+use optovit::arch::scheduler::AttentionSchedule;
+use optovit::arch::CoreParams;
+use optovit::coordinator::clock::Clock;
+use optovit::coordinator::engine::EngineConfig;
+use optovit::coordinator::pipeline::{Pipeline, PipelineConfig};
+use optovit::coordinator::server::{Server, SessionOptions};
+use optovit::cosim::{simulate, OperatingPoint, QueueSim};
+use optovit::runtime::{AnyFactory, BackendFactory, BackendKind, QueueingPlan};
+use optovit::sensor::VideoSource;
+use optovit::vit::{VitConfig, VitVariant};
+
+const TOKENS: usize = 18;
+
+fn tiny() -> VitConfig {
+    VitConfig::variant(VitVariant::Tiny, 96, 10)
+}
+
+/// A sim-backend factory with the queueing co-sim armed. `pace_fps`
+/// paces virtual arrivals (deterministic regardless of wall time);
+/// artifact dir is irrelevant — the sim backend runs artifact-free.
+fn cosim_factory(pace_fps: f64) -> AnyFactory {
+    let cfg = PipelineConfig::tiny_96();
+    let mut factory = AnyFactory::new(BackendKind::Sim, "artifacts".to_string());
+    factory.host.num_classes = cfg.num_classes;
+    factory.with_queueing(QueueingPlan {
+        cores: 5,
+        pace_fps: Some(pace_fps),
+        clock: Clock::system(),
+    })
+}
+
+/// Gate 1a: back-to-back arrivals at t = 0 drive the pipeline to steady
+/// state, and the completion spacing there equals the closed-form
+/// schedule horizon delta bitwise — the DES is the schedule, replayed.
+#[test]
+fn zero_load_replay_matches_closed_form_bitwise() {
+    let cfg = tiny();
+    let params = CoreParams::default();
+    let steady = AttentionSchedule::steady_state_frame_ns(&cfg, TOKENS, params, true);
+    let mut sim = QueueSim::new(cfg, params);
+    let c1 = sim.arrive(0.0, TOKENS).completion_ns;
+    let c2 = sim.arrive(0.0, TOKENS).completion_ns;
+    let c3 = sim.arrive(0.0, TOKENS).completion_ns;
+    assert_eq!(c2 - c1, steady, "steady-state spacing must equal the closed form bitwise");
+    assert_eq!(c3 - c2, steady, "and stay there for every further frame");
+}
+
+/// Gate 1b: a frame arriving to idle hardware waits exactly `0.0` ns —
+/// not a float residue — no matter how much history the simulator has.
+#[test]
+fn idle_arrivals_report_exactly_zero_queueing() {
+    let cfg = tiny();
+    let mut sim = QueueSim::new(cfg, CoreParams::default());
+    let first = sim.arrive(0.0, TOKENS);
+    assert_eq!(first.queueing_ns, 0.0, "an empty simulator cannot charge waiting");
+    // Far past the first frame's completion: hardware is idle again.
+    let mut t = first.completion_ns;
+    for _ in 0..5 {
+        t += 10.0 * first.service_ns;
+        let span = sim.arrive(t, TOKENS);
+        assert_eq!(span.queueing_ns, 0.0, "idle-arrival queueing must be exactly zero");
+        assert_eq!(
+            span.latency_ns(),
+            span.service_ns,
+            "an unqueued frame's latency is pure service"
+        );
+        t = span.completion_ns;
+    }
+}
+
+/// Gate 2: p99 modeled latency is strictly increasing across an
+/// offered-load sweep — the load dependence the static latency cache
+/// could never express, and the reason the co-sim exists.
+#[test]
+fn p99_latency_strictly_increases_with_offered_load() {
+    let reports: Vec<_> = [0.4, 0.75, 0.95]
+        .iter()
+        .map(|&load| {
+            simulate(
+                &tiny(),
+                &OperatingPoint {
+                    cores: 5,
+                    batch: 1,
+                    load,
+                    frames: 400,
+                    n_tokens: TOKENS,
+                    arrival_seed: Some(7),
+                },
+            )
+        })
+        .collect();
+    for pair in reports.windows(2) {
+        assert!(
+            pair[1].p99_latency_ns > pair[0].p99_latency_ns,
+            "p99 must strictly increase with load: {} !> {} (loads {} vs {})",
+            pair[1].p99_latency_ns,
+            pair[0].p99_latency_ns,
+            pair[1].load,
+            pair[0].load
+        );
+        assert!(
+            pair[1].mean_queueing_ns > pair[0].mean_queueing_ns,
+            "mean queueing must strictly increase with load"
+        );
+    }
+}
+
+/// Gate 3a: the same arrival trace replays bit-identically — spans, not
+/// just summaries.
+#[test]
+fn same_trace_replays_bitwise() {
+    let cfg = tiny();
+    let trace: Vec<f64> = (0..64).map(|k| k as f64 * 700.0).collect();
+    let run = || {
+        let mut sim = QueueSim::new(cfg, CoreParams::default());
+        trace.iter().map(|&t| sim.arrive(t, TOKENS)).collect::<Vec<_>>()
+    };
+    assert_eq!(run(), run(), "identical traces must produce identical spans");
+    let a = simulate(
+        &tiny(),
+        &OperatingPoint {
+            cores: 5,
+            batch: 4,
+            load: 0.8,
+            frames: 200,
+            n_tokens: TOKENS,
+            arrival_seed: Some(11),
+        },
+    );
+    let b = simulate(
+        &tiny(),
+        &OperatingPoint {
+            cores: 5,
+            batch: 4,
+            load: 0.8,
+            frames: 200,
+            n_tokens: TOKENS,
+            arrival_seed: Some(11),
+        },
+    );
+    assert_eq!(a.p99_latency_ns, b.p99_latency_ns);
+    assert_eq!(a.mean_queueing_ns, b.mean_queueing_ns);
+    assert_eq!(a.achieved_kfps, b.achieved_kfps);
+}
+
+/// Gate 3b: the armed serving pipeline is deterministic end-to-end —
+/// two identical paced runs report bit-identical per-frame queueing,
+/// the first frame waits exactly zero, and dense followers all wait.
+#[test]
+fn paced_pipeline_queueing_is_deterministic_and_positive() {
+    let run = || -> Vec<f64> {
+        // 1 GHz offered arrivals: every follower lands on busy cores.
+        let factory = cosim_factory(1e9);
+        let mut p = Pipeline::with_backend(PipelineConfig::tiny_96(), factory.create(0).unwrap())
+            .expect("pipeline");
+        let mut src = VideoSource::new(96, 2, 42);
+        (0..8).map(|_| p.process_frame(&src.next_frame()).unwrap().modeled_queueing_s).collect()
+    };
+    let a = run();
+    assert_eq!(a[0], 0.0, "the first paced arrival lands on idle hardware");
+    assert!(
+        a.iter().skip(1).all(|&q| q > 0.0),
+        "1 GHz arrivals must queue every follower: {a:?}"
+    );
+    assert_eq!(a, run(), "paced modeled queueing must be bit-deterministic");
+}
+
+/// Gate 4: per-session accounting. Two sessions served by a real
+/// sim-backend worker with the co-sim armed: the aggregate
+/// `modeled_queueing_s` equals the per-session sum **exactly** (both are
+/// summed from the same per-session accumulators in registration
+/// order), and dense paced arrivals make it positive.
+#[test]
+fn aggregate_queueing_is_exactly_the_per_session_sum() {
+    let cfg = PipelineConfig::tiny_96();
+    let factory = cosim_factory(1e9);
+    let mut ecfg = EngineConfig::new(1, 16, 96);
+    ecfg.warmup_timeout_s = 60.0;
+    ecfg.stall_timeout_s = 30.0;
+    let server = {
+        let cfg = cfg.clone();
+        Server::start(move |wid| Pipeline::with_backend(cfg.clone(), factory.create(wid)?), ecfg)
+            .expect("server")
+    };
+
+    const PER_SESSION: u64 = 6;
+    let mut reports = Vec::new();
+    let mut sessions = Vec::new();
+    for cam in 0..2u64 {
+        sessions.push(
+            server
+                .session(SessionOptions::named(format!("cam-{cam}")).with_queue_depth(16))
+                .expect("session"),
+        );
+    }
+    for (cam, session) in sessions.iter_mut().enumerate() {
+        let mut src = VideoSource::new(96, 2, 42 + cam as u64);
+        for _ in 0..PER_SESSION {
+            session.submit(src.next_frame()).expect("submit");
+        }
+    }
+    for mut session in sessions {
+        session.close();
+        reports.push(session.finish().expect("drain"));
+    }
+    // Registration order — the same order both the live stats and the
+    // terminal aggregate fold the per-session accumulators in.
+    let session_sum: f64 = reports.iter().map(|r| r.modeled_queueing_s).sum();
+    let (agg, metrics) = server.shutdown().expect("shutdown");
+    assert_eq!(agg.frames, 2 * PER_SESSION);
+    assert!(
+        session_sum > 0.0,
+        "1 GHz paced arrivals over µs-scale service must accumulate waiting"
+    );
+    assert_eq!(
+        agg.modeled_queueing_s, session_sum,
+        "aggregate modeled_queueing_s must be exactly the per-session sum"
+    );
+    // The stage metrics carry the same accounting (same values, summed
+    // in emission rather than session order — so approximate, not
+    // bitwise).
+    let stage_sum = metrics.stage_sum_s("modeled_queueing");
+    assert!(
+        (agg.modeled_queueing_s - stage_sum).abs() <= 1e-12 * stage_sum.max(1.0),
+        "stage sum {stage_sum} must agree with the aggregate {}",
+        agg.modeled_queueing_s
+    );
+}

@@ -74,6 +74,7 @@ impl FrameWorker for MockWorker {
             bucket,
             modeled_energy_j: 1e-5,
             latency_s: 1e-4,
+            modeled_queueing_s: 0.0,
             batch_size: 1,
         })
     }

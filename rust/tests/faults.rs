@@ -153,6 +153,7 @@ impl FaultableWorker {
             bucket,
             modeled_energy_j: 1e-5,
             latency_s: 1e-4,
+            modeled_queueing_s: 0.0,
             batch_size,
         }
     }

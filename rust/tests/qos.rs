@@ -16,8 +16,12 @@
 //! 3. admission quotas: quota-exceeded `try_submit`s return
 //!    [`PushOutcome::Quota`] and count the distinct `dropped_quota` —
 //!    never `dropped` — for both the in-flight cap and the token-bucket
-//!    rate (whose refill is driven purely by manual-clock advances).
+//!    rate (whose refill is driven purely by manual-clock advances);
+//! 4. earliest-deadline-first admission: with two SLO sessions queued
+//!    while the worker warms, the dispatcher's EDF pre-pass admits the
+//!    imminent deadline first, overriding plain admission order.
 
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::Result;
@@ -60,6 +64,7 @@ impl BatchEchoWorker {
             bucket,
             modeled_energy_j: 1e-5,
             latency_s: 1e-4,
+            modeled_queueing_s: 0.0,
             batch_size,
         }
     }
@@ -283,4 +288,109 @@ fn rate_quota_refills_only_with_the_clock() {
     assert_eq!(report.dropped, 0);
     let (agg, _metrics) = server.shutdown().expect("shutdown");
     assert_eq!(agg.dropped_quota, 2, "the aggregate carries the quota accounting");
+}
+
+/// Worker whose warmup blocks on a permit — holding the dispatcher
+/// pre-ready while submissions queue — and records the exact order it
+/// processes frames in.
+struct GatedWorker {
+    inner: BatchEchoWorker,
+    permit: Arc<Mutex<Option<std::sync::mpsc::Receiver<()>>>>,
+    order: Arc<Mutex<Vec<u64>>>,
+}
+
+impl FrameWorker for GatedWorker {
+    fn warmup(&mut self) -> Result<()> {
+        let rx = self.permit.lock().unwrap().take().expect("one worker, one permit");
+        rx.recv().ok();
+        Ok(())
+    }
+
+    fn process(&mut self, frame: &Frame) -> Result<FrameResult> {
+        self.order.lock().unwrap().push(frame.index);
+        self.inner.process(frame)
+    }
+
+    fn process_batch(&mut self, batch: &[Frame]) -> Result<Vec<FrameResult>> {
+        for f in batch {
+            self.order.lock().unwrap().push(f.index);
+        }
+        self.inner.process_batch(batch)
+    }
+
+    fn take_metrics(&mut self) -> StageMetrics {
+        self.inner.take_metrics()
+    }
+}
+
+/// Gate 4: earliest-deadline-first admission. The loose-SLO session
+/// (1 s) submits strictly before the tight-SLO session (10 ms) while the
+/// lone worker is still gated in warmup; once the worker warms, the
+/// dispatcher's EDF pre-pass must admit the tight frame first — plain
+/// weighted round-robin order would have served the loose session's
+/// earlier-registered entry first. Deterministic: the clock is frozen
+/// (both `accepted_at`s are identical, only the SLOs differ) and batch
+/// size 1 makes worker processing order equal admission order.
+#[test]
+fn edf_admits_imminent_deadline_before_admission_order() {
+    let (permit_tx, permit_rx) = std::sync::mpsc::channel::<()>();
+    let permit = Arc::new(Mutex::new(Some(permit_rx)));
+    let order: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+    let (clock, _manual) = Clock::manual();
+    let mut cfg = EngineConfig::new(1, PATCH_PX, 96);
+    cfg.clock = clock;
+    cfg.batch = BatchPolicy::batched(1, Duration::from_secs(3600));
+    cfg.warmup_timeout_s = 24.0 * 3600.0;
+    cfg.stall_timeout_s = 24.0 * 3600.0;
+    let server = {
+        let permit = permit.clone();
+        let order = order.clone();
+        Server::start(
+            move |_wid| {
+                Ok(GatedWorker {
+                    inner: BatchEchoWorker::new(),
+                    permit: permit.clone(),
+                    order: order.clone(),
+                })
+            },
+            cfg,
+        )
+        .expect("server")
+    };
+
+    // Registration and submission order: loose strictly first.
+    let mut loose = server
+        .session(SessionOptions::named("loose").with_queue_depth(8).with_slo(Duration::from_secs(1)))
+        .expect("loose");
+    let mut tight = server
+        .session(
+            SessionOptions::named("tight")
+                .with_queue_depth(8)
+                .with_slo(Duration::from_millis(10)),
+        )
+        .expect("tight");
+    let template = frames(1).remove(0);
+    let mut f_loose = template.clone();
+    f_loose.index = 100;
+    let mut f_tight = template;
+    f_tight.index = 200;
+    loose.submit(f_loose).expect("loose submit");
+    tight.submit(f_tight).expect("tight submit");
+
+    // Both frames are queued with identical accepted_at stamps; release
+    // the worker and let the dispatcher's first sweep order them.
+    permit_tx.send(()).expect("release warmup");
+    (&mut tight).next().expect("tight result").expect("tight ok");
+    (&mut loose).next().expect("loose result").expect("loose ok");
+    assert_eq!(
+        *order.lock().unwrap(),
+        vec![200, 100],
+        "the 10 ms deadline must be admitted before the 1 s one, despite admission order"
+    );
+
+    tight.close();
+    loose.close();
+    assert_eq!(tight.finish().expect("tight drain").frames, 1);
+    assert_eq!(loose.finish().expect("loose drain").frames, 1);
+    server.shutdown().expect("shutdown");
 }

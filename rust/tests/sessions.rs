@@ -86,6 +86,7 @@ impl FrameWorker for SlowWorker {
             bucket,
             modeled_energy_j: 1e-5,
             latency_s: self.delay.as_secs_f64(),
+            modeled_queueing_s: 0.0,
             batch_size: 1,
         })
     }
@@ -221,6 +222,7 @@ impl FrameWorker for GateWorker {
             bucket,
             modeled_energy_j: 1e-5,
             latency_s: 1e-4,
+            modeled_queueing_s: 0.0,
             batch_size: 1,
         };
         self.done.send(frame.index).ok();
