@@ -28,14 +28,25 @@
 //! schedules recalibration windows (watch `recals` in the per-worker
 //! lines) while the rest of the pool keeps serving.
 //!
+//! The pool is also **elastic**: every sensor thread opens fire at once,
+//! so fleet start-up is a burst — an `AutoScaler` ticks against the live
+//! server while the cameras drain, growing the pool (up to 2x the
+//! starting `--workers`) while the burst backlog holds the per-worker
+//! queue-depth gauge high and retiring workers once the fleet quiesces.
+//! The scale-event log prints after the per-session reports; retired
+//! workers keep their final rows in the aggregate.
+//!
 //! ```bash
 //! cargo run --release --example multi_camera -- [cameras] [frames] [workers] [pjrt|host|sim] [batch]
 //! # artifact-free: cargo run --release --example multi_camera -- 3 60 2 host 4
 //! # degraded optics: cargo run --release --example multi_camera -- 3 60 2 sim 4
+//! # visible elasticity: many cameras, small starting pool:
+//! #   cargo run --release --example multi_camera -- 8 120 1 host 4
 //! ```
 
 use std::time::Duration;
 
+use optovit::coordinator::autoscale::{AutoScaler, ScaleAction, ScalePolicy};
 use optovit::coordinator::batcher::BatchPolicy;
 use optovit::coordinator::clock::Clock;
 use optovit::coordinator::engine::EngineConfig;
@@ -76,11 +87,15 @@ fn main() -> anyhow::Result<()> {
         batch: BatchPolicy::batched(batch, Duration::from_micros(500)),
         ..ServeOptions::frames(frames)
     };
-    let ecfg = EngineConfig::for_serving(&pipe_cfg, &opts, workers);
+    let mut ecfg = EngineConfig::for_serving(&pipe_cfg, &opts, workers);
+    // Elastic pool: the autoscaler may grow the fleet to 2x the starting
+    // size while the start-up burst queues.
+    let max_workers = workers * 2;
+    ecfg.max_workers = max_workers;
 
     println!(
-        "== {cameras} camera(s) → {cameras} session(s) → one {workers}-worker server \
-         ({kind} backend, batch {batch}) =="
+        "== {cameras} camera(s) → {cameras} session(s) → one elastic \
+         {workers}..{max_workers}-worker server ({kind} backend, batch {batch}) =="
     );
     let server = {
         let cfg = pipe_cfg.clone();
@@ -119,30 +134,74 @@ fn main() -> anyhow::Result<()> {
     }
 
     let mut t = Table::new(vec![
-        "camera", "weight", "frames", "dropped", "q-drop", "slo miss", "at-risk", "fps",
+        "camera", "weight", "frames", "dropped", "q-drop", "shed", "slo miss", "at-risk", "fps",
         "latency", "p99", "mean batch", "IoU",
     ]);
-    for (cam, weight, sensor, drain) in fleet {
-        sensor.join().ok();
-        let report =
-            drain.join().map_err(|_| anyhow::anyhow!("camera {cam} drain panicked"))??;
-        t.row(vec![
-            format!("camera-{cam}"),
-            weight.to_string(),
-            report.frames.to_string(),
-            report.dropped.to_string(),
-            report.dropped_quota.to_string(),
-            report.slo_miss.to_string(),
-            report.accuracy_at_risk.to_string(),
-            format!("{:.1}", report.wall_fps),
-            si_time(report.mean_latency_s),
-            si_time(report.p99_latency_s),
-            format!("{:.2}", report.mean_batch),
-            format!("{:.3}", report.mean_mask_iou),
-        ]);
-    }
+    // While the fleet drains its start-up burst, an autoscaler ticks
+    // against the live server on the serving clock: the whole-fleet
+    // arrival spike holds the queue-depth gauge high → scale-ups toward
+    // `max_workers`; once cameras finish, the pool quiesces → scale-downs
+    // back to the floor. The stop flag is set before any error
+    // propagates so the scaler thread can never deadlock the scope join.
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    std::thread::scope(|scope| -> anyhow::Result<()> {
+        scope.spawn(|| {
+            let mut scaler = AutoScaler::new(
+                ScalePolicy { min_workers: workers, max_workers, ..ScalePolicy::default() },
+                server.clock(),
+            );
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                let _ = scaler.tick(&server);
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        });
+        let joined = (|| -> anyhow::Result<()> {
+            for (cam, weight, sensor, drain) in fleet {
+                sensor.join().ok();
+                let report =
+                    drain.join().map_err(|_| anyhow::anyhow!("camera {cam} drain panicked"))??;
+                t.row(vec![
+                    format!("camera-{cam}"),
+                    weight.to_string(),
+                    report.frames.to_string(),
+                    report.dropped.to_string(),
+                    report.dropped_quota.to_string(),
+                    report.dropped_shed.to_string(),
+                    report.slo_miss.to_string(),
+                    report.accuracy_at_risk.to_string(),
+                    format!("{:.1}", report.wall_fps),
+                    si_time(report.mean_latency_s),
+                    si_time(report.p99_latency_s),
+                    format!("{:.2}", report.mean_batch),
+                    format!("{:.3}", report.mean_mask_iou),
+                ]);
+            }
+            Ok(())
+        })();
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        joined
+    })?;
     println!("\nper-session reports (every stream delivered in order):");
     print!("{}", t.render());
+
+    let events = server.scale_events();
+    println!(
+        "\nautoscaler: {} live worker(s) at close, {} scale event(s)",
+        server.live_workers(),
+        events.len()
+    );
+    if events.is_empty() {
+        println!("  (pool held steady at {workers} — try more cameras or fewer starting workers)");
+    }
+    for e in &events {
+        let action = match &e.action {
+            ScaleAction::Up => "scale-up".to_string(),
+            ScaleAction::Down => "scale-down".to_string(),
+            ScaleAction::ShedOn { below_weight } => format!("shed <{below_weight}"),
+            ScaleAction::ShedOff => "shed-off".to_string(),
+        };
+        println!("  t={:>7} {:<10} → {} worker(s)  {}", si_time(e.at_s), action, e.workers, e.detail);
+    }
 
     let (agg, metrics) = server.shutdown()?;
     println!("\n== server-wide aggregate ==");
@@ -161,14 +220,15 @@ fn main() -> anyhow::Result<()> {
     for w in &agg.per_worker {
         println!(
             "worker {}           {} frames, {:.0}% utilized, health {:.2}, {} recal(s), \
-             {} at-risk{}",
+             {} at-risk{}{}",
             w.worker,
             w.frames,
             w.utilization * 100.0,
             w.health,
             w.recals,
             w.at_risk_frames,
-            w.core.map(|c| format!(", core {c}")).unwrap_or_default()
+            w.core.map(|c| format!(", core {c}")).unwrap_or_default(),
+            if w.retired { " [retired by scale-down]" } else { "" }
         );
     }
     println!("\nper-stage latency (merged across workers):");

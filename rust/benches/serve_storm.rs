@@ -1,0 +1,219 @@
+//! Fleet-elasticity storm bench: open-loop arrival scenarios swept
+//! through hundreds of synthetic camera sessions against the session
+//! server, **with and without** the SLO-driven autoscaler, emitting the
+//! machine-readable `BENCH_storm.json` (p99-vs-offered-load sample
+//! curves, scale-event logs, shed/drop/miss totals) so the elasticity
+//! trajectory is trackable across PRs.
+//!
+//! ```bash
+//! cargo bench --bench serve_storm -- \
+//!     [--sessions 200] [--duration 60] [--workers 2] [--max-workers 8] \
+//!     [--batch 8] [--service-ms 500] [--slo-ms 1500] [--seed 42] \
+//!     [--out BENCH_storm.json]
+//! ```
+//!
+//! (declared `harness = false`: this bench carries its own `main`.)
+//!
+//! Every sweep is **deterministic**: `loadgen::run_scenario` owns a
+//! manual clock, arrival schedules are precomputed (seeded where
+//! random), and workers model service time by sleeping on the serving
+//! clock — wall time only affects how fast the sweep runs, never what
+//! it measures. The four scenario shapes: a capacity-crossing **step**,
+//! a **10x burst**, a **diurnal** sine, and seeded-**Poisson** jitter.
+//! The fixed arm shows the failure mode (p99 blow-up, SLO misses); the
+//! autoscaled arm shows the controller riding the same storm (scale-ups
+//! into the burst, shedding at the cap, scale-downs after).
+
+use anyhow::Result;
+use optovit::cli::Args;
+use optovit::coordinator::autoscale::{ScaleAction, ScalePolicy};
+use optovit::coordinator::batcher::BatchPolicy;
+use optovit::coordinator::engine::EngineConfig;
+use optovit::coordinator::loadgen::{run_scenario, Scenario, StormConfig, StormOutcome};
+use optovit::util::table::{si_time, Table};
+
+struct Row {
+    autoscaled: bool,
+    outcome: StormOutcome,
+}
+
+fn event_counts(outcome: &StormOutcome) -> (usize, usize, usize) {
+    let ups = outcome.scale_events.iter().filter(|e| e.action == ScaleAction::Up).count();
+    let downs = outcome.scale_events.iter().filter(|e| e.action == ScaleAction::Down).count();
+    let sheds = outcome
+        .scale_events
+        .iter()
+        .filter(|e| matches!(e.action, ScaleAction::ShedOn { .. }))
+        .count();
+    (ups, downs, sheds)
+}
+
+fn max_p99(outcome: &StormOutcome) -> f64 {
+    outcome.samples.iter().map(|s| s.p99_s).fold(0.0, f64::max)
+}
+
+fn fmt_json(sessions: usize, duration_s: f64, rows: &[Row]) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"serve_storm\",\n");
+    out.push_str(&format!("  \"sessions\": {sessions},\n"));
+    out.push_str(&format!("  \"duration_s\": {duration_s},\n"));
+    out.push_str("  \"sweeps\": [\n");
+    for (i, row) in rows.iter().enumerate() {
+        let o = &row.outcome;
+        let (ups, downs, sheds) = event_counts(o);
+        out.push_str(&format!(
+            "    {{\"scenario\": \"{}\", \"autoscale\": {}, \"frames\": {}, \
+             \"dropped\": {}, \"dropped_quota\": {}, \"dropped_shed\": {}, \
+             \"slo_miss\": {}, \"final_workers\": {}, \
+             \"scale_ups\": {ups}, \"scale_downs\": {downs}, \"shed_events\": {sheds},\n",
+            o.scenario,
+            row.autoscaled,
+            o.frames,
+            o.dropped,
+            o.dropped_quota,
+            o.dropped_shed,
+            o.slo_miss,
+            o.live_workers,
+        ));
+        out.push_str("     \"samples\": [\n");
+        for (j, s) in o.samples.iter().enumerate() {
+            out.push_str(&format!(
+                "       {{\"t_s\": {:.1}, \"offered_fps\": {:.3}, \"achieved_fps\": {:.3}, \
+                 \"p99_s\": {:.6}, \"workers\": {}, \"queue_depth\": {}, \"shed_below\": {}}}{}\n",
+                s.t_s,
+                s.offered_fps,
+                s.achieved_fps,
+                s.p99_s,
+                s.live_workers,
+                s.queue_depth,
+                s.shed_below,
+                if j + 1 < o.samples.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("     ],\n");
+        out.push_str("     \"scale_events\": [\n");
+        for (j, e) in o.scale_events.iter().enumerate() {
+            let action = match &e.action {
+                ScaleAction::Up => "up".to_string(),
+                ScaleAction::Down => "down".to_string(),
+                ScaleAction::ShedOn { below_weight } => format!("shed_below_{below_weight}"),
+                ScaleAction::ShedOff => "shed_off".to_string(),
+            };
+            out.push_str(&format!(
+                "       {{\"at_s\": {:.3}, \"action\": \"{action}\", \"workers\": {}}}{}\n",
+                e.at_s,
+                e.workers,
+                if j + 1 < o.scale_events.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("     ]\n");
+        out.push_str(&format!("    }}{}\n", if i + 1 < rows.len() { "," } else { "" }));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
+    let sessions = args.get_usize("sessions", 200).map_err(anyhow::Error::msg)?.max(1);
+    let duration_s = args.get_f64("duration", 60.0).map_err(anyhow::Error::msg)?.max(10.0);
+    let workers = args.get_usize("workers", 2).map_err(anyhow::Error::msg)?.max(1);
+    let max_workers = args.get_usize("max-workers", 8).map_err(anyhow::Error::msg)?.max(workers);
+    let batch = args.get_usize("batch", 8).map_err(anyhow::Error::msg)?.max(1);
+    let service_ms = args.get_f64("service-ms", 500.0).map_err(anyhow::Error::msg)?;
+    let service = std::time::Duration::from_secs_f64(service_ms.clamp(0.0, 1_000.0) / 1000.0);
+    let slo_ms = args.get_f64("slo-ms", 1500.0).map_err(anyhow::Error::msg)?;
+    let slo = std::time::Duration::from_secs_f64(slo_ms.max(1.0) / 1000.0);
+    let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
+    let out_path = args.get_or("out", "BENCH_storm.json").to_string();
+
+    // Modeled capacity: one micro-batch of `batch` frames per worker per
+    // 1 s tick. The scenario rates are written against it: base load at
+    // half the starting pool's capacity, storms crossing the elastic
+    // ceiling so the autoscaled arm has real work (and the shed ladder a
+    // reason to fire).
+    let cap0 = (workers * batch) as f64;
+    let base = cap0 / 2.0;
+    let third = duration_s / 3.0;
+    let scenarios = [
+        Scenario::step("step", sessions, duration_s, base, cap0 * 2.0, third),
+        Scenario::burst("burst10x", sessions, duration_s, base, 10.0, third, third + duration_s / 6.0),
+        Scenario::diurnal("diurnal", sessions, duration_s, cap0, 0.75, duration_s),
+        Scenario::poisson("poisson", sessions, duration_s, cap0 * 0.75, seed),
+    ];
+    let policy = ScalePolicy {
+        min_workers: workers,
+        max_workers,
+        shed_after: 3,
+        ..ScalePolicy::default()
+    };
+
+    println!(
+        "== serve_storm: {sessions} sessions, {duration_s:.0} s/scenario, \
+         {workers}..{max_workers} workers x batch {batch}, service {} ==\n",
+        si_time(service.as_secs_f64())
+    );
+    let mut rows = Vec::new();
+    for scenario in &scenarios {
+        for autoscaled in [false, true] {
+            let mut cfg = EngineConfig::new(workers, 16, 96);
+            cfg.batch = BatchPolicy::batched(batch, std::time::Duration::from_millis(1));
+            cfg.queue_depth = 64;
+            cfg.max_workers = if autoscaled { max_workers } else { 0 };
+            cfg.warmup_timeout_s = 24.0 * 3600.0;
+            cfg.stall_timeout_s = 24.0 * 3600.0;
+            let storm = StormConfig {
+                tick: std::time::Duration::from_secs(1),
+                sample_every: 5,
+                service,
+                slo: Some(slo),
+                autoscale: autoscaled.then(|| policy.clone()),
+            };
+            let outcome = run_scenario(cfg, &storm, scenario)?;
+            let (ups, downs, sheds) = event_counts(&outcome);
+            println!(
+                "{:<9} {}: {} frames, {} shed, {} slo miss, max p99 {}, \
+                 {} ups / {} downs / {} shed events, {} workers at close",
+                outcome.scenario,
+                if autoscaled { "autoscaled" } else { "fixed     " },
+                outcome.frames,
+                outcome.dropped_shed,
+                outcome.slo_miss,
+                si_time(max_p99(&outcome)),
+                ups,
+                downs,
+                sheds,
+                outcome.live_workers,
+            );
+            rows.push(Row { autoscaled, outcome });
+        }
+    }
+
+    println!("\n== storm summary ==");
+    let mut t = Table::new(vec![
+        "scenario", "mode", "frames", "dropped", "shed", "slo miss", "max p99", "workers",
+        "ups/downs",
+    ]);
+    for row in &rows {
+        let o = &row.outcome;
+        let (ups, downs, _) = event_counts(o);
+        t.row(vec![
+            o.scenario.clone(),
+            if row.autoscaled { "autoscaled" } else { "fixed" }.to_string(),
+            o.frames.to_string(),
+            o.dropped.to_string(),
+            o.dropped_shed.to_string(),
+            o.slo_miss.to_string(),
+            si_time(max_p99(o)),
+            o.live_workers.to_string(),
+            format!("{ups}/{downs}"),
+        ]);
+    }
+    print!("{}", t.render());
+
+    let json = fmt_json(sessions, duration_s, &rows);
+    std::fs::write(&out_path, &json)?;
+    println!("\nwrote {out_path}");
+    Ok(())
+}

@@ -1,0 +1,320 @@
+//! SLO-driven fleet elasticity: the closed-loop controller over
+//! [`Server::scale_up`] / [`Server::scale_down`] / [`Server::set_shed`].
+//!
+//! The serving paper-shape is a fixed photonic accelerator pool sized for
+//! the worst case; this module sizes it for the *observed* case instead.
+//! An [`AutoScaler`] is ticked periodically (it is **not** a thread — the
+//! caller owns the cadence, which is what keeps the control loop
+//! deterministic under a manual clock: `rust/tests/storm.rs` drives it
+//! tick-by-tick between `ManualClock::advance` calls, the CLI ticks it
+//! from the main serving loop, and `coordinator::loadgen` ticks it once
+//! per simulated interval). Each tick reads one [`ServerStats`] snapshot
+//! and distills three signals:
+//!
+//! - **queue depth** — mean in-flight frames per live worker (the
+//!   per-worker `WorkerHealthStats::queue_depth` gauge),
+//! - **SLO miss rate** — misses per emitted frame *since the last tick*
+//!   (delta, not lifetime, so old pain cannot pin the pool high),
+//! - **p99 trend** — whether the aggregate submit→emit p99 rose since
+//!   the last tick (a scale-down veto, not a scale-up trigger).
+//!
+//! The decision ladder, with hysteresis between the up and down bands so
+//! the pool never flaps:
+//!
+//! 1. Overloaded (`depth >= up_queue_depth` **or**
+//!    `miss rate > up_miss_rate`) and below the policy/pool cap →
+//!    [`Server::scale_up`], rate-limited by `up_cooldown`.
+//! 2. Overloaded **at** the cap for `shed_after` consecutive ticks →
+//!    admission shedding: reject the lowest weight class first
+//!    ([`Server::set_shed`] with the second-lowest distinct session
+//!    weight), escalating one class per further `shed_after` ticks but
+//!    never shedding the highest class.
+//! 3. Calm (`depth <= down_queue_depth`, no new misses, p99 not rising)
+//!    → first lift shedding, then — after `down_cooldown` since the last
+//!    resize — [`Server::scale_down`] toward `min_workers`. The server
+//!    itself refuses to drain a lone serving worker.
+//!
+//! Every acted-on decision is recorded by the server in its
+//! [`ScaleEvent`] log ([`ServerStats::scale_events`]), stamped on the
+//! serving clock.
+
+use std::time::{Duration, Instant};
+
+use super::clock::Clock;
+use super::server::{ScaleError, ServeError, Server};
+use super::stats::WorkerMode;
+
+/// Hysteresis bands, cooldowns, and bounds for one [`AutoScaler`].
+///
+/// The defaults are deliberately conservative: scale up on ~2 queued
+/// frames per worker or >5% fresh SLO misses, scale down only once the
+/// pool is nearly idle, and wait `shed_after` consecutive capped ticks
+/// before turning tenants away.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScalePolicy {
+    /// Never scale below this many live workers (clamped to `>= 1`; the
+    /// server additionally never drains a lone serving worker).
+    pub min_workers: usize,
+    /// Never scale above this many live workers. `0` means "no policy
+    /// bound" — the pool capacity ([`super::engine::EngineConfig::
+    /// pool_capacity`]) still applies either way.
+    pub max_workers: usize,
+    /// Scale up when mean queued frames per live worker reaches this.
+    pub up_queue_depth: f64,
+    /// Scale up when the since-last-tick SLO miss rate exceeds this.
+    pub up_miss_rate: f64,
+    /// Scale down (or lift shedding) only when mean queue depth is at or
+    /// below this. Keep well under `up_queue_depth`: the gap is the
+    /// hysteresis that prevents flapping.
+    pub down_queue_depth: f64,
+    /// Minimum spacing between two scale-ups (the first is immediate).
+    pub up_cooldown: Duration,
+    /// Minimum spacing between a scale-down and the previous resize in
+    /// either direction (longer than `up_cooldown`: growing is urgent,
+    /// shrinking is housekeeping).
+    pub down_cooldown: Duration,
+    /// Consecutive overloaded-at-cap ticks before shedding starts (and
+    /// between shedding escalations).
+    pub shed_after: u32,
+}
+
+impl Default for ScalePolicy {
+    fn default() -> Self {
+        ScalePolicy {
+            min_workers: 1,
+            max_workers: 0,
+            up_queue_depth: 2.0,
+            up_miss_rate: 0.05,
+            down_queue_depth: 0.25,
+            up_cooldown: Duration::from_secs(2),
+            down_cooldown: Duration::from_secs(10),
+            shed_after: 2,
+        }
+    }
+}
+
+/// What a scale/shed decision did ([`ScaleEvent::action`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ScaleAction {
+    /// One worker spawned into the pool.
+    Up,
+    /// One worker flagged `Retiring` (drains, then exits).
+    Down,
+    /// Admission shedding (re)armed: sessions with `weight <
+    /// below_weight` are turned away.
+    ShedOn { below_weight: u32 },
+    /// Admission shedding lifted.
+    ShedOff,
+}
+
+/// One recorded scale/shed decision, stamped on the serving clock
+/// (seconds since [`Server::start`]). The full log is
+/// [`ServerStats::scale_events`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScaleEvent {
+    /// Seconds since the server started, on the serving clock.
+    pub at_s: f64,
+    pub action: ScaleAction,
+    /// Live workers *after* the action (for `Down`: the size the pool is
+    /// draining toward).
+    pub workers: usize,
+    /// Human-readable cause, e.g. `"worker 3 spawned into slot 1"`.
+    pub detail: String,
+}
+
+/// The controller state: last-resize timestamps for the cooldowns and
+/// last-tick counters for the delta signals. See the module docs for the
+/// decision ladder.
+pub struct AutoScaler {
+    policy: ScalePolicy,
+    clock: Clock,
+    last_up: Option<Instant>,
+    last_down: Option<Instant>,
+    last_frames: u64,
+    last_misses: u64,
+    last_p99: f64,
+    overloaded_ticks: u32,
+}
+
+impl AutoScaler {
+    /// A controller for servers on `clock` (pass the serving clock —
+    /// cooldowns must live on the same timeline as the traffic).
+    pub fn new(policy: ScalePolicy, clock: Clock) -> Self {
+        AutoScaler {
+            policy: ScalePolicy { min_workers: policy.min_workers.max(1), ..policy },
+            clock,
+            last_up: None,
+            last_down: None,
+            last_frames: 0,
+            last_misses: 0,
+            last_p99: 0.0,
+            overloaded_ticks: 0,
+        }
+    }
+
+    /// The policy in force.
+    pub fn policy(&self) -> &ScalePolicy {
+        &self.policy
+    }
+
+    /// One control iteration: snapshot the server, apply the decision
+    /// ladder, return the action taken (`None` = deliberately held
+    /// still). Call it on a steady cadence; the cooldowns assume ticks
+    /// arrive at least as often as they are long.
+    pub fn tick(
+        &mut self,
+        server: &Server,
+    ) -> std::result::Result<Option<ScaleAction>, ServeError> {
+        let stats = server.stats()?;
+        let now = self.clock.now();
+
+        let live = stats.live_workers.max(1);
+        let queued: u64 = stats
+            .worker_health
+            .iter()
+            .filter(|w| w.mode != WorkerMode::Retired)
+            .map(|w| w.queue_depth)
+            .sum();
+        let mean_depth = queued as f64 / live as f64;
+        let (d_frames, d_misses) = (
+            stats.aggregate.frames.saturating_sub(self.last_frames),
+            stats.aggregate.slo_miss.saturating_sub(self.last_misses),
+        );
+        let miss_rate = if d_frames > 0 {
+            d_misses as f64 / d_frames as f64
+        } else if d_misses > 0 {
+            // Misses with zero emissions (everything late and still in
+            // flight) is the worst signal, not a divide-by-zero blind
+            // spot.
+            1.0
+        } else {
+            0.0
+        };
+        let p99_rising = stats.aggregate.p99_latency_s > self.last_p99 + 1e-9;
+        self.last_frames = stats.aggregate.frames;
+        self.last_misses = stats.aggregate.slo_miss;
+        self.last_p99 = stats.aggregate.p99_latency_s;
+
+        let overloaded =
+            mean_depth >= self.policy.up_queue_depth || miss_rate > self.policy.up_miss_rate;
+        if overloaded {
+            let under_policy_cap =
+                self.policy.max_workers == 0 || live < self.policy.max_workers;
+            if under_policy_cap {
+                let cooled = self
+                    .last_up
+                    .map(|t| now.saturating_duration_since(t) >= self.policy.up_cooldown)
+                    .unwrap_or(true);
+                if !cooled {
+                    return Ok(None);
+                }
+                match server.scale_up() {
+                    Ok(_) => {
+                        self.last_up = Some(now);
+                        self.overloaded_ticks = 0;
+                        return Ok(Some(ScaleAction::Up));
+                    }
+                    // Pool capacity bound: fall through to the shedding
+                    // ladder exactly as a policy cap would.
+                    Err(ScaleError::AtCapacity) => {}
+                    Err(_) => return Ok(None),
+                }
+            }
+            self.overloaded_ticks += 1;
+            if self.overloaded_ticks >= self.policy.shed_after {
+                let weights: Vec<u32> = stats.sessions.iter().map(|s| s.weight).collect();
+                if let Some(below) = next_shed_threshold(&weights, server.shed_below()) {
+                    if server.set_shed(below) {
+                        // Escalate one weight class per `shed_after`
+                        // further overloaded ticks, not per tick.
+                        self.overloaded_ticks = 0;
+                        return Ok(Some(ScaleAction::ShedOn { below_weight: below }));
+                    }
+                }
+            }
+            return Ok(None);
+        }
+
+        self.overloaded_ticks = 0;
+        let calm = mean_depth <= self.policy.down_queue_depth;
+        if !calm {
+            // Between the bands: hysteresis — hold the pool still.
+            return Ok(None);
+        }
+        if server.shed_below() > 0 {
+            // Re-admit everyone before giving capacity back.
+            if server.clear_shed() {
+                return Ok(Some(ScaleAction::ShedOff));
+            }
+            return Ok(None);
+        }
+        if live <= self.policy.min_workers || d_misses > 0 || p99_rising {
+            return Ok(None);
+        }
+        let last_resize = match (self.last_up, self.last_down) {
+            (Some(u), Some(d)) => Some(u.max(d)),
+            (a, b) => a.or(b),
+        };
+        let cooled = last_resize
+            .map(|t| now.saturating_duration_since(t) >= self.policy.down_cooldown)
+            .unwrap_or(true);
+        if !cooled {
+            return Ok(None);
+        }
+        match server.scale_down() {
+            Ok(_) => {
+                self.last_down = Some(now);
+                Ok(Some(ScaleAction::Down))
+            }
+            // AtFloor (lone serving worker) and Closed are quiet holds.
+            Err(_) => Ok(None),
+        }
+    }
+}
+
+/// The next shedding threshold, one weight class above `current`:
+/// distinct session weights sorted ascending, candidates are all but
+/// the lowest (shedding *below* weight `w` rejects every class under
+/// `w`), and the highest class is never shed — with a single distinct
+/// weight there is nothing to differentiate, so no shedding at all.
+fn next_shed_threshold(session_weights: &[u32], current: u32) -> Option<u32> {
+    let mut weights = session_weights.to_vec();
+    weights.sort_unstable();
+    weights.dedup();
+    if weights.len() < 2 {
+        return None;
+    }
+    weights[1..].iter().copied().find(|&w| w > current)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shed_ladder_walks_distinct_weights_and_spares_the_top() {
+        let weights = [1, 1, 2, 4];
+        // First escalation sheds the lowest class only.
+        assert_eq!(next_shed_threshold(&weights, 0), Some(2));
+        // Then the next class up...
+        assert_eq!(next_shed_threshold(&weights, 2), Some(4));
+        // ...but never past the highest: weight-4 tenants always admit.
+        assert_eq!(next_shed_threshold(&weights, 4), None);
+    }
+
+    #[test]
+    fn shed_ladder_needs_two_weight_classes() {
+        assert_eq!(next_shed_threshold(&[3, 3, 3], 0), None);
+        assert_eq!(next_shed_threshold(&[], 0), None);
+    }
+
+    #[test]
+    fn default_policy_has_hysteresis_and_floors() {
+        let p = ScalePolicy::default();
+        assert!(p.down_queue_depth < p.up_queue_depth, "bands must not overlap");
+        assert!(p.down_cooldown > p.up_cooldown, "shrinking is housekeeping");
+        assert_eq!(AutoScaler::new(ScalePolicy { min_workers: 0, ..p }, Clock::system())
+            .policy()
+            .min_workers, 1, "min_workers clamps to >= 1");
+    }
+}

@@ -274,6 +274,13 @@ pub enum PushOutcome {
     /// `ServeReport::dropped_quota`. Never produced by a plain
     /// [`FrameQueue`].
     Quota,
+    /// Overload shedding rejected the frame: the autoscaler
+    /// (`coordinator::autoscale`) hit its worker cap and is turning away
+    /// the lowest-weight tenants until load falls. A fleet-level policy
+    /// decision — not backpressure, not a per-session quota — counted
+    /// separately in `ServeReport::dropped_shed`. Never produced by a
+    /// plain [`FrameQueue`].
+    Shed,
     /// The consumer hung up — shutdown, not backpressure; the frame went
     /// nowhere but must not count as a drop.
     Closed,
@@ -340,9 +347,10 @@ pub fn sensor_loop(
         let f = src.next_frame();
         match queue.try_push(f) {
             PushOutcome::Queued => {}
-            // A plain FrameQueue has no admission quota, so Quota cannot
-            // occur here; treat it like Full for robustness.
-            PushOutcome::Full | PushOutcome::Quota => {
+            // A plain FrameQueue has no admission quota or shed policy, so
+            // Quota/Shed cannot occur here; treat them like Full for
+            // robustness.
+            PushOutcome::Full | PushOutcome::Quota | PushOutcome::Shed => {
                 if stop.load(Ordering::Relaxed) {
                     break;
                 }

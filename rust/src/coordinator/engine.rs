@@ -120,7 +120,16 @@ impl<B: Backend> FrameWorker for Pipeline<B> {
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
     /// Worker threads (each with its own pipeline); clamped to >= 1.
+    /// This is the pool's *initial* size; see
+    /// [`EngineConfig::max_workers`] for elastic headroom.
     pub workers: usize,
+    /// Upper bound on the live worker pool for elastic scaling
+    /// ([`super::autoscale::AutoScaler`] / [`Server::scale_up`]). `0`
+    /// (the default) means the pool is fixed at `workers` — exactly the
+    /// pre-elastic behavior. When set, the server reserves slots so
+    /// `Server::scale_up` can spawn additional workers (through the same
+    /// per-thread factory) up to this many.
+    pub max_workers: usize,
     /// Bounded queue depth per worker.
     pub queue_depth: usize,
     /// Bounded sensor→dispatcher queue depth (the wrapper session's
@@ -205,6 +214,7 @@ impl EngineConfig {
         let workers = workers.max(1);
         EngineConfig {
             workers,
+            max_workers: 0,
             queue_depth: 4,
             sensor_queue_depth: 4 * workers,
             patch_px,
@@ -239,6 +249,13 @@ impl EngineConfig {
         // single-pipeline stream and the per-session reassembler alike.
         cfg.reassembly_window = opts.window.max(1);
         cfg
+    }
+
+    /// The pool's slot capacity: `max(workers, max_workers)` workers can
+    /// ever be live at once (`max_workers == 0` fixes the pool at
+    /// `workers`). The server sizes its per-slot state to this.
+    pub fn pool_capacity(&self) -> usize {
+        self.workers.max(1).max(self.max_workers)
     }
 
     /// The effective bounded reassembly window (see

@@ -1,0 +1,519 @@
+//! Open-loop load generation for the serving stack: scripted arrival
+//! scenarios (step, burst, diurnal sine, seeded-Poisson jitter) swept
+//! through hundreds of synthetic camera sessions against a [`Server`],
+//! optionally under [`AutoScaler`] control — the harness behind the
+//! `serve_storm` bench (`BENCH_storm.json`) and a building block of the
+//! `rust/tests/storm.rs` gate.
+//!
+//! **Open-loop** means arrival times come from the scenario's rate
+//! curve, not from the server's completion pace — the generator keeps
+//! offering frames when the pool falls behind, which is exactly what
+//! makes offered-vs-achieved curves (and shed/drop counts) meaningful.
+//! **Deterministic** means everything the server observes lives on a
+//! [`ManualClock`] owned by [`run_scenario`]: arrivals are precomputed
+//! ([`Scenario::arrivals`], seeded where random), the driver submits the
+//! due slice of them each simulated tick, lets placement/completions
+//! quiesce, ticks the autoscaler, then advances the clock by one tick.
+//! Workers model service time by *sleeping on the serving clock*
+//! ([`PacedWorker`]), so each worker completes at most one micro-batch
+//! per tick — the capacity a scenario's fps is written against.
+//!
+//! ```text
+//! Scenario rate curve ─▶ arrivals (precomputed, deterministic)
+//!        │ per tick: due slice
+//!        ▼
+//! try_submit per session ─▶ Server (ManualClock) ─▶ drain try_next
+//!        │                        │
+//!        │                        ├─ AutoScaler::tick (optional)
+//!        ▼                        ▼
+//! StormSample per interval   ScaleEvent log, dropped/_quota/_shed
+//! ```
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::autoscale::{AutoScaler, ScaleEvent, ScalePolicy};
+use crate::coordinator::clock::Clock;
+use crate::coordinator::engine::{EngineConfig, FrameWorker};
+use crate::coordinator::pipeline::FrameResult;
+use crate::coordinator::server::{Server, Session, SessionOptions};
+use crate::coordinator::stats::{StageMetrics, WorkerMode};
+use crate::coordinator::BucketRouter;
+use crate::sensor::{Frame, VideoSource};
+use crate::util::rng::Rng;
+
+/// The shape of a scenario's offered-load curve (frames/sec, summed
+/// across all sessions; [`Scenario::arrivals`] spreads them round-robin).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScenarioKind {
+    /// Constant `base_fps` until `at_s`, then constant `step_fps`.
+    Step { base_fps: f64, step_fps: f64, at_s: f64 },
+    /// `base_fps`, multiplied by `mult` inside `[from_s, to_s)` — the
+    /// 10x-spike shape the autoscaler gate rides.
+    Burst { base_fps: f64, mult: f64, from_s: f64, to_s: f64 },
+    /// `base_fps * (1 + amplitude * sin(2πt / period_s))`, floored at
+    /// zero — a compressed day/night cycle.
+    Diurnal { base_fps: f64, amplitude: f64, period_s: f64 },
+    /// Poisson arrivals at `mean_fps` (seeded exponential inter-arrival
+    /// times — jittered but exactly reproducible).
+    Poisson { mean_fps: f64, seed: u64 },
+}
+
+/// One scripted sweep: a rate curve, how long to run it, and how many
+/// sessions share it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    pub kind: ScenarioKind,
+    /// Simulated length of the sweep, seconds.
+    pub duration_s: f64,
+    /// Sessions the arrivals are spread over (round-robin).
+    pub sessions: usize,
+}
+
+/// One arrival the driver owes the server: simulated time + session.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Arrival {
+    pub t_s: f64,
+    pub session: usize,
+}
+
+impl Scenario {
+    pub fn step(name: impl Into<String>, sessions: usize, duration_s: f64, base_fps: f64, step_fps: f64, at_s: f64) -> Self {
+        Scenario { name: name.into(), kind: ScenarioKind::Step { base_fps, step_fps, at_s }, duration_s, sessions: sessions.max(1) }
+    }
+
+    pub fn burst(name: impl Into<String>, sessions: usize, duration_s: f64, base_fps: f64, mult: f64, from_s: f64, to_s: f64) -> Self {
+        Scenario { name: name.into(), kind: ScenarioKind::Burst { base_fps, mult, from_s, to_s }, duration_s, sessions: sessions.max(1) }
+    }
+
+    pub fn diurnal(name: impl Into<String>, sessions: usize, duration_s: f64, base_fps: f64, amplitude: f64, period_s: f64) -> Self {
+        Scenario { name: name.into(), kind: ScenarioKind::Diurnal { base_fps, amplitude, period_s }, duration_s, sessions: sessions.max(1) }
+    }
+
+    pub fn poisson(name: impl Into<String>, sessions: usize, duration_s: f64, mean_fps: f64, seed: u64) -> Self {
+        Scenario { name: name.into(), kind: ScenarioKind::Poisson { mean_fps, seed }, duration_s, sessions: sessions.max(1) }
+    }
+
+    /// Offered load (total fps across sessions) at simulated time `t_s`.
+    pub fn offered_fps(&self, t_s: f64) -> f64 {
+        match self.kind {
+            ScenarioKind::Step { base_fps, step_fps, at_s } => {
+                if t_s < at_s { base_fps } else { step_fps }
+            }
+            ScenarioKind::Burst { base_fps, mult, from_s, to_s } => {
+                if t_s >= from_s && t_s < to_s { base_fps * mult } else { base_fps }
+            }
+            ScenarioKind::Diurnal { base_fps, amplitude, period_s } => {
+                let phase = 2.0 * std::f64::consts::PI * t_s / period_s.max(1e-9);
+                (base_fps * (1.0 + amplitude * phase.sin())).max(0.0)
+            }
+            ScenarioKind::Poisson { mean_fps, .. } => mean_fps,
+        }
+    }
+
+    /// The full deterministic arrival schedule, sorted by time, sessions
+    /// assigned round-robin. Deterministic kinds integrate the rate curve
+    /// (1 ms steps, emitting whenever the accumulated mass crosses 1);
+    /// Poisson draws seeded exponential inter-arrival gaps. Same
+    /// scenario, same schedule — every run.
+    pub fn arrivals(&self) -> Vec<Arrival> {
+        let mut out = Vec::new();
+        let mut next_session = 0usize;
+        let mut push = |t_s: f64, next_session: &mut usize| {
+            out.push(Arrival { t_s, session: *next_session });
+            *next_session = (*next_session + 1) % self.sessions;
+        };
+        match self.kind {
+            ScenarioKind::Poisson { mean_fps, seed } => {
+                if mean_fps > 0.0 {
+                    let mut rng = Rng::new(seed);
+                    let mut t = 0.0f64;
+                    loop {
+                        // Exponential inter-arrival: -ln(1 - U) / λ.
+                        let u = rng.next_f64();
+                        t += -(1.0 - u).ln() / mean_fps;
+                        if t >= self.duration_s {
+                            break;
+                        }
+                        push(t, &mut next_session);
+                    }
+                }
+            }
+            _ => {
+                let dt = 1e-3;
+                let mut acc = 0.0f64;
+                let mut t = 0.0f64;
+                while t < self.duration_s {
+                    acc += self.offered_fps(t) * dt;
+                    while acc >= 1.0 {
+                        acc -= 1.0;
+                        push(t, &mut next_session);
+                    }
+                    t += dt;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// A [`FrameWorker`] that models service time by sleeping `service` on
+/// the serving clock before echoing the frame's ground truth (the
+/// `EchoWorker` shape). Under the harness's manual clock a worker
+/// therefore completes exactly one micro-batch per clock tick it is
+/// busy — a deterministic, load-independent capacity model that makes
+/// "the pool is saturated at N fps" an arithmetic statement.
+pub struct PacedWorker {
+    clock: Clock,
+    service: Duration,
+    router: BucketRouter,
+    metrics: StageMetrics,
+}
+
+impl PacedWorker {
+    pub fn new(clock: Clock, service: Duration) -> Self {
+        PacedWorker {
+            clock,
+            service,
+            router: BucketRouter::even(36, 4),
+            metrics: StageMetrics::new(),
+        }
+    }
+}
+
+impl FrameWorker for PacedWorker {
+    fn process(&mut self, frame: &Frame) -> Result<FrameResult> {
+        if !self.service.is_zero() {
+            self.clock.sleep(self.service);
+        }
+        let mask = frame.gt_mask(16);
+        let kept = mask.kept().max(1);
+        let bucket = self.router.route(kept);
+        let service_s = self.service.as_secs_f64();
+        self.metrics.record_stage("total", service_s.max(1e-6));
+        self.metrics.record_frame(1e-5, kept);
+        self.metrics.record_batch_size(1);
+        let mut logits = vec![0.0f32; 10];
+        logits[frame.label % 10] = 1.0;
+        Ok(FrameResult {
+            frame_index: frame.index,
+            logits,
+            mask,
+            bucket,
+            modeled_energy_j: 1e-5,
+            latency_s: service_s,
+            modeled_queueing_s: 0.0,
+            batch_size: 1,
+        })
+    }
+
+    /// One modeled service interval per *micro-batch* (not per frame):
+    /// batching amortizes, so a worker's capacity is `max_batch` frames
+    /// per clock tick.
+    fn process_batch(&mut self, frames: &[Frame]) -> Result<Vec<FrameResult>> {
+        if !self.service.is_zero() {
+            self.clock.sleep(self.service);
+        }
+        let n = frames.len().max(1);
+        let service_s = self.service.as_secs_f64();
+        frames
+            .iter()
+            .map(|frame| {
+                let mask = frame.gt_mask(16);
+                let kept = mask.kept().max(1);
+                let bucket = self.router.route(kept);
+                self.metrics.record_stage("total", (service_s / n as f64).max(1e-6));
+                self.metrics.record_frame(1e-5, kept);
+                self.metrics.record_batch_size(n);
+                let mut logits = vec![0.0f32; 10];
+                logits[frame.label % 10] = 1.0;
+                Ok(FrameResult {
+                    frame_index: frame.index,
+                    logits,
+                    mask,
+                    bucket,
+                    modeled_energy_j: 1e-5,
+                    latency_s: service_s,
+                    modeled_queueing_s: 0.0,
+                    batch_size: n,
+                })
+            })
+            .collect()
+    }
+
+    fn take_metrics(&mut self) -> StageMetrics {
+        std::mem::take(&mut self.metrics)
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "paced"
+    }
+}
+
+/// Driver knobs for [`run_scenario`].
+#[derive(Debug, Clone)]
+pub struct StormConfig {
+    /// Simulated tick: the clock advances by this between submit rounds
+    /// (also the autoscaler cadence).
+    pub tick: Duration,
+    /// Emit one [`StormSample`] every this many ticks.
+    pub sample_every: u32,
+    /// Modeled per-batch service time of each [`PacedWorker`].
+    pub service: Duration,
+    /// Per-session submit→emit SLO to score misses against (optional).
+    pub slo: Option<Duration>,
+    /// Autoscaling policy; `None` runs the fixed-pool control arm.
+    pub autoscale: Option<ScalePolicy>,
+}
+
+impl Default for StormConfig {
+    fn default() -> Self {
+        StormConfig {
+            tick: Duration::from_millis(100),
+            sample_every: 5,
+            service: Duration::from_millis(80),
+            slo: Some(Duration::from_millis(500)),
+            autoscale: None,
+        }
+    }
+}
+
+/// One point on the offered-vs-achieved curve.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StormSample {
+    /// Simulated seconds since the sweep started.
+    pub t_s: f64,
+    /// Scenario rate at `t_s` (total fps across sessions).
+    pub offered_fps: f64,
+    /// Emission rate over the last sample interval (simulated time).
+    pub achieved_fps: f64,
+    /// Aggregate submit→emit p99 so far, seconds (serving clock).
+    pub p99_s: f64,
+    /// Live workers at sample time.
+    pub live_workers: usize,
+    /// Total queued (placed, unfinished) frames across live workers.
+    pub queue_depth: u64,
+    /// Shedding threshold in force (0 = off).
+    pub shed_below: u32,
+}
+
+/// Everything one sweep produced.
+#[derive(Debug, Clone)]
+pub struct StormOutcome {
+    pub scenario: String,
+    pub samples: Vec<StormSample>,
+    /// Frames emitted end-to-end.
+    pub frames: u64,
+    pub dropped: u64,
+    pub dropped_quota: u64,
+    pub dropped_shed: u64,
+    pub slo_miss: u64,
+    /// Final live pool size.
+    pub live_workers: usize,
+    pub scale_events: Vec<ScaleEvent>,
+}
+
+/// Drain every session's buffered results without blocking; returns how
+/// many were pulled. Real-time backoff only spins the *driver* — nothing
+/// the server observes leaves the manual clock.
+fn drain(sessions: &mut [Session]) -> u64 {
+    let mut pulled = 0u64;
+    for s in sessions.iter_mut() {
+        while let Some(item) = s.try_next() {
+            let _ = item;
+            pulled += 1;
+        }
+    }
+    pulled
+}
+
+/// Drain until the server visibly quiesces: no new results for a few
+/// consecutive probes (the dispatcher/workers run on OS threads, so the
+/// driver waits them out in real time — bounded by a 30 s wall bailout
+/// that only a hung server hits).
+fn settle(sessions: &mut [Session]) -> u64 {
+    let t0 = std::time::Instant::now();
+    let mut pulled = 0u64;
+    let mut idle = 0u32;
+    while idle < 10 && t0.elapsed() < Duration::from_secs(30) {
+        let got = drain(sessions);
+        pulled += got;
+        if got > 0 {
+            idle = 0;
+        } else {
+            idle += 1;
+            std::thread::sleep(Duration::from_micros(500));
+        }
+    }
+    pulled
+}
+
+/// Run one scenario against a fresh [`Server`] of [`PacedWorker`]s on an
+/// internally-owned [`ManualClock`](crate::coordinator::ManualClock).
+/// Per simulated tick: submit the due arrivals (`try_submit` — drops,
+/// quota and shed rejections are the server's to count), let placement
+/// and completions quiesce, tick the autoscaler (if any), advance the
+/// clock. Sessions get weights alternating 1 and 2 so the shedding
+/// ladder has a lowest class to reject first.
+pub fn run_scenario(mut cfg: EngineConfig, storm: &StormConfig, scenario: &Scenario) -> Result<StormOutcome> {
+    let (clock, manual) = Clock::manual();
+    cfg.clock = clock.clone();
+    let service = storm.service;
+    let worker_clock = clock.clone();
+    let server = Server::start(
+        move |_wid| Ok(PacedWorker::new(worker_clock.clone(), service)),
+        cfg,
+    )?;
+    server.wait_ready(Duration::from_secs(3600))?;
+
+    let mut sessions: Vec<Session> = Vec::with_capacity(scenario.sessions);
+    for i in 0..scenario.sessions {
+        let mut opts = SessionOptions::named(format!("cam-{i}"))
+            .with_weight(1 + (i % 2) as u32)
+            .with_queue_depth(64)
+            .with_window(64);
+        if let Some(slo) = storm.slo {
+            opts = opts.with_slo(slo);
+        }
+        sessions.push(server.session(opts)?);
+    }
+    let mut scaler = storm.autoscale.clone().map(|p| AutoScaler::new(p, clock.clone()));
+
+    // One frame template, cloned per arrival: the load generator measures
+    // the serving fabric, not the renderer.
+    let template = VideoSource::new(96, 2, 7).next_frame();
+    let arrivals = scenario.arrivals();
+    let mut next_arrival = 0usize;
+
+    let tick_s = storm.tick.as_secs_f64().max(1e-9);
+    let ticks = (scenario.duration_s / tick_s).ceil() as u64;
+    let mut samples = Vec::new();
+    let mut frames_at_last_sample = 0u64;
+    let mut t_last_sample = 0.0f64;
+    let mut emitted = 0u64;
+
+    for tick_idx in 0..ticks {
+        let t_s = tick_idx as f64 * tick_s;
+        // Offer every arrival due within this tick. Rejections (Full /
+        // Quota / Shed / Closed) are deliberately not retried — open
+        // loop — and land in the server's drop counters.
+        while next_arrival < arrivals.len() && arrivals[next_arrival].t_s < t_s + tick_s {
+            let a = arrivals[next_arrival];
+            let _ = sessions[a.session].try_submit(template.clone());
+            next_arrival += 1;
+        }
+        emitted += settle(&mut sessions);
+        if let Some(sc) = scaler.as_mut() {
+            sc.tick(&server)?;
+        }
+        manual.advance(storm.tick);
+        emitted += settle(&mut sessions);
+
+        if storm.sample_every > 0 && (tick_idx + 1) % storm.sample_every as u64 == 0 {
+            let stats = server.stats()?;
+            let now_s = (tick_idx + 1) as f64 * tick_s;
+            let span = (now_s - t_last_sample).max(tick_s);
+            let queue_depth: u64 = stats
+                .worker_health
+                .iter()
+                .filter(|w| w.mode != WorkerMode::Retired)
+                .map(|w| w.queue_depth)
+                .sum();
+            samples.push(StormSample {
+                t_s: now_s,
+                offered_fps: scenario.offered_fps(t_s),
+                achieved_fps: (stats.aggregate.frames - frames_at_last_sample) as f64 / span,
+                p99_s: stats.aggregate.p99_latency_s,
+                live_workers: stats.live_workers,
+                queue_depth,
+                shed_below: stats.shed_below,
+            });
+            frames_at_last_sample = stats.aggregate.frames;
+            t_last_sample = now_s;
+        }
+    }
+
+    // Close every session, then keep advancing until the backlog drains
+    // (bounded: the backlog is finite and every tick completes at least
+    // one batch per live worker).
+    for s in sessions.iter_mut() {
+        s.close();
+    }
+    for _ in 0..(ticks + arrivals.len() as u64 + 16) {
+        emitted += settle(&mut sessions);
+        let stats = server.stats()?;
+        if stats.sessions.iter().all(|s| s.complete || s.canceled) {
+            break;
+        }
+        manual.advance(storm.tick);
+    }
+    let _ = emitted;
+
+    let stats = server.stats()?;
+    let outcome = StormOutcome {
+        scenario: scenario.name.clone(),
+        samples,
+        frames: stats.aggregate.frames,
+        dropped: stats.aggregate.dropped,
+        dropped_quota: stats.aggregate.dropped_quota,
+        dropped_shed: stats.aggregate.dropped_shed,
+        slo_miss: stats.aggregate.slo_miss,
+        live_workers: stats.live_workers,
+        scale_events: stats.scale_events.clone(),
+    };
+    drop(sessions);
+    server.shutdown()?;
+    Ok(outcome)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_arrivals_integrate_the_rate_curve_exactly() {
+        // 2 fps for 5 s then 10 fps for 5 s → 10 + 50 arrivals.
+        let s = Scenario::step("step", 4, 10.0, 2.0, 10.0, 5.0);
+        let arr = s.arrivals();
+        assert_eq!(arr.len(), 60);
+        assert!(arr.windows(2).all(|w| w[0].t_s <= w[1].t_s), "sorted by time");
+        // Round-robin session assignment covers every session.
+        for sess in 0..4 {
+            assert!(arr.iter().any(|a| a.session == sess));
+        }
+        let before = arr.iter().filter(|a| a.t_s < 5.0).count();
+        assert_eq!(before, 10, "the low-rate half contributes exactly 2 fps * 5 s");
+    }
+
+    #[test]
+    fn burst_multiplies_only_inside_the_window() {
+        let s = Scenario::burst("burst", 1, 30.0, 1.0, 10.0, 10.0, 20.0);
+        assert_eq!(s.offered_fps(5.0), 1.0);
+        assert_eq!(s.offered_fps(10.0), 10.0);
+        assert_eq!(s.offered_fps(19.99), 10.0);
+        assert_eq!(s.offered_fps(20.0), 1.0);
+        // 10 s * 1 fps + 10 s * 10 fps + 10 s * 1 fps.
+        assert_eq!(s.arrivals().len(), 120);
+    }
+
+    #[test]
+    fn poisson_arrivals_are_seeded_and_reproducible() {
+        let a = Scenario::poisson("p", 3, 60.0, 5.0, 42).arrivals();
+        let b = Scenario::poisson("p", 3, 60.0, 5.0, 42).arrivals();
+        assert_eq!(a, b, "same seed, same schedule");
+        let c = Scenario::poisson("p", 3, 60.0, 5.0, 43).arrivals();
+        assert_ne!(a, c, "different seed, different jitter");
+        // Mean rate is honored within a loose statistical band.
+        assert!(a.len() > 200 && a.len() < 400, "≈300 expected, got {}", a.len());
+    }
+
+    #[test]
+    fn diurnal_curve_floors_at_zero_and_oscillates() {
+        let s = Scenario::diurnal("d", 1, 40.0, 4.0, 1.5, 40.0);
+        assert_eq!(s.offered_fps(0.0), 4.0);
+        assert!(s.offered_fps(10.0) > 4.0, "peak above base");
+        assert_eq!(s.offered_fps(30.0), 0.0, "trough clamps at zero");
+    }
+}

@@ -136,34 +136,64 @@
 //! load the waiting term makes modeled latency depend on offered load —
 //! the effect a static per-kept-count latency cache cannot express.
 //!
+//! **The pool is elastic.** With [`engine::EngineConfig::max_workers`]
+//! above the starting size, a live [`server::Server`] can be resized
+//! without a restart: [`server::Server::scale_up`] spawns a worker into
+//! the lowest free pool slot (claiming the lowest free core when
+//! `pin_workers` is on), [`server::Server::scale_down`] flags the
+//! highest serving slot `Retiring` — it drains in-flight work, archives
+//! a final `retired` stats row (totals stay monotone), and leaves; a
+//! lone serving worker is never drained. [`autoscale::AutoScaler`]
+//! closes the loop: ticked on the caller's cadence, it reads one
+//! [`server::ServerStats`] snapshot (per-worker queue-depth gauges,
+//! delta SLO miss rate, p99 trend) and walks a hysteresis ladder —
+//! scale up under load, shed the lowest-weight tenants
+//! ([`server::Server::set_shed`], counted in the distinct
+//! `ServeReport::dropped_shed`) when capped, scale down when calm —
+//! with every decision in the [`autoscale::ScaleEvent`] log.
+//! [`loadgen`] is the proving ground: open-loop scripted arrival
+//! scenarios (step / 10x burst / diurnal / seeded Poisson) swept
+//! through synthetic sessions, fully deterministic under a manual
+//! clock (the `rust/tests/storm.rs` gate and the `serve_storm` bench's
+//! `BENCH_storm.json` offered-vs-achieved curves).
+//!
 //! | module | role |
 //! |---|---|
 //! | [`clock`] | the time seam: pluggable `Clock` (system / manual) + clock-aware `Event` waits |
 //! | [`batcher`] | bucket router, per-bucket micro-batch lanes (deadline-aware), bounded frame queues |
 //! | [`pipeline`] | the frame pipeline (MGNet → mask → route → backbone), in-thread streaming `serve` |
-//! | [`server`] | the session-oriented server: multi-tenant sessions, fair admission (`WrrAdmission`), per-session QoS (SLO / `Quota`), health-aware placement + recal windows (`HealthWeightedWrr`), streams/reports |
-//! | [`engine`] | `FrameWorker`/`EngineConfig` (incl. the serving clock) + the one-session batch-job wrappers (`run`, `serve_sharded`) |
+//! | [`server`] | the session-oriented server: multi-tenant sessions, fair admission (`WrrAdmission`), per-session QoS (SLO / `Quota`), health-aware placement + recal windows (`HealthWeightedWrr`), elastic pool (`scale_up` / `scale_down` / `set_shed`), streams/reports |
+//! | [`autoscale`] | the SLO-driven elasticity controller: `ScalePolicy` hysteresis bands + cooldowns, `AutoScaler::tick`, the `ScaleEvent` log |
+//! | [`loadgen`] | open-loop load generation: scripted arrival `Scenario`s (step / burst / diurnal / Poisson), `PacedWorker`, the deterministic `run_scenario` storm driver |
+//! | [`engine`] | `FrameWorker`/`EngineConfig` (incl. the serving clock and `max_workers` pool capacity) + the one-session batch-job wrappers (`run`, `serve_sharded`) |
 //! | [`affinity`] | best-effort worker-thread core pinning (`sched_setaffinity`) |
-//! | [`stats`] | per-stage metrics, merge-able across workers; latency histograms; per-worker utilization |
+//! | [`stats`] | per-stage metrics, merge-able across workers; latency histograms; per-worker utilization + live queue-depth gauges |
 
 pub mod affinity;
+pub mod autoscale;
 pub mod batcher;
 pub mod clock;
 pub mod engine;
+pub mod loadgen;
 pub mod pipeline;
 pub mod server;
 pub mod stats;
 
+pub use autoscale::{AutoScaler, ScaleAction, ScaleEvent, ScalePolicy};
 pub use batcher::{BatchPolicy, BucketRouter, FrameQueue, MicroBatcher, PushOutcome};
 pub use clock::{Clock, Event, ManualClock};
 pub use engine::{serve_sharded, serve_sharded_with, EngineConfig, FrameWorker, HealthPolicy};
+pub use loadgen::{
+    run_scenario, Arrival, PacedWorker, Scenario, ScenarioKind, StormConfig, StormOutcome,
+    StormSample,
+};
 pub use pipeline::{
     serve, FrameResult, FrameScratch, FrameStream, Pipeline, PipelineConfig, RoutedFrame,
     ServeOptions, ServeReport,
 };
 pub use server::{
-    spawn_synthetic_sensor, HealthWeightedWrr, Quota, ServeError, Server, ServerStats,
-    ServerWatch, Session, SessionOptions, SessionStats, SessionStream, SessionSubmitter,
-    WrrAdmission,
+    spawn_synthetic_sensor, HealthWeightedWrr, Quota, ScaleError, ServeError, Server,
+    ServerStats, ServerWatch, Session, SessionOptions, SessionStats, SessionStream,
+    SessionSubmitter, WrrAdmission,
 };
 pub use stats::{LatencyHistogram, StageMetrics, WorkerHealthStats, WorkerMode, WorkerStats};

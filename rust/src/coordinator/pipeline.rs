@@ -770,6 +770,14 @@ pub struct ServeReport {
     /// which counts queue-full backpressure. Always 0 on paths without
     /// session quotas (the in-thread `serve` and the batch-job wrappers).
     pub dropped_quota: u64,
+    /// Submissions rejected by the autoscaler's **overload shedding**
+    /// (`coordinator::autoscale`): when scale-up is capped at
+    /// `max_workers` and the pool stays overloaded, sessions below the
+    /// shed weight threshold are refused admission until load recedes.
+    /// Kept strictly distinct from `dropped` (queue backpressure) and
+    /// `dropped_quota` (per-session policy); the terminal aggregate is
+    /// exactly the per-session sum. Always 0 without an autoscaler.
+    pub dropped_shed: u64,
     /// Frames whose **submit→emit** latency exceeded the session's
     /// declared SLO (`SessionOptions::slo`). 0 when no SLO was declared.
     /// Counted at emission against the serving clock, so a manual-clock
@@ -1131,6 +1139,7 @@ impl<'p, B: Backend> FrameStream<'p, B> {
             // The in-thread path has no sessions, hence no quota, SLO, or
             // health-routing accounting (see the field docs).
             dropped_quota: 0,
+            dropped_shed: 0,
             slo_miss: 0,
             accuracy_at_risk: 0,
             p99_latency_s: 0.0,
@@ -1154,6 +1163,8 @@ impl<'p, B: Backend> FrameStream<'p, B> {
                 health: 1.0,
                 recals: 0,
                 at_risk_frames: 0,
+                queue_depth: 0,
+                retired: false,
             }],
         }
     }

@@ -82,6 +82,21 @@
 //!   `thread::sleep` polling anywhere in this module). Under a manual
 //!   clock the QoS semantics above are provable with exact expectations —
 //!   the `rust/tests/qos.rs` gate.
+//! - **Elastic pool.** The worker pool is no longer fixed at startup:
+//!   [`Server::scale_up`] spawns one more worker through the factory
+//!   retained from [`Server::start`] (up to
+//!   [`EngineConfig::pool_capacity`]), and [`Server::scale_down`] retires
+//!   the highest-slot serving worker through the recalibration drain
+//!   machinery (`Serving → Retiring → Retired`: no new placements, queue
+//!   drains, clean exit with final stats flagged `retired` so totals stay
+//!   monotone). A lone serving worker is never drained. When scale-up is
+//!   capped, [`Server::set_shed`] turns away the lowest-weight tenants
+//!   ([`PushOutcome::Shed`], counted in the distinct
+//!   `ServeReport::dropped_shed`). Every scale/shed decision lands in the
+//!   [`ScaleEvent`](super::autoscale::ScaleEvent) log on
+//!   [`ServerStats::scale_events`]. The closed-loop controller driving
+//!   these knobs is `coordinator::autoscale`; `rust/tests/storm.rs` gates
+//!   the semantics under a manual clock.
 //!
 //! `serve_sharded(_with)` and `engine::run` are thin one-session wrappers
 //! over this module (a synthetic-sensor tenant feeding one session), which
@@ -90,7 +105,7 @@
 use std::collections::BTreeMap;
 use std::fmt;
 use std::panic::AssertUnwindSafe;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
@@ -98,6 +113,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use super::autoscale::{ScaleAction, ScaleEvent};
 use super::batcher::PushOutcome;
 use super::clock::{Clock, Event};
 use super::engine::{EngineConfig, FrameWorker};
@@ -362,6 +378,10 @@ struct SessionShared {
     /// Quota rejections (the session's `ServeReport::dropped_quota` —
     /// policy, kept distinct from backpressure `rejected`).
     rejected_quota: AtomicU64,
+    /// Overload-shedding rejections (the session's
+    /// `ServeReport::dropped_shed` — the autoscaler's fleet-level valve,
+    /// kept distinct from both backpressure and per-session quota).
+    rejected_shed: AtomicU64,
     /// Token-bucket state for [`Quota::rate_fps`].
     bucket: Mutex<TokenBucket>,
     /// The stream side was dropped: discard this session's frames.
@@ -375,6 +395,7 @@ impl SessionAccum {
         &self,
         dropped: u64,
         dropped_quota: u64,
+        dropped_shed: u64,
         backend: &str,
         workers: usize,
     ) -> ServeReport {
@@ -390,6 +411,7 @@ impl SessionAccum {
             frames,
             dropped,
             dropped_quota,
+            dropped_shed,
             slo_miss: self.slo_miss,
             accuracy_at_risk: self.accuracy_at_risk,
             p99_latency_s: self.session_latency.quantile(0.99),
@@ -418,6 +440,7 @@ impl SessionShared {
         self.snapshot().to_report(
             self.rejected.load(Ordering::Relaxed),
             self.rejected_quota.load(Ordering::Relaxed),
+            self.rejected_shed.load(Ordering::Relaxed),
             backend,
             workers,
         )
@@ -630,8 +653,25 @@ impl HealthSlot {
         match self.mode.load(Ordering::Relaxed) {
             1 => WorkerMode::Draining,
             2 => WorkerMode::Recalibrating,
+            3 => WorkerMode::Retiring,
+            4 => WorkerMode::Retired,
             _ => WorkerMode::Serving,
         }
+    }
+
+    /// Re-arm the slot for a fresh worker spawned into it after the
+    /// previous occupant retired (the retired occupant's final row lives
+    /// in `ServerCore::retired_health`, so nothing is lost). `updates`
+    /// keeps counting across occupants — tests synchronize on it being
+    /// monotone.
+    fn reset(&self) {
+        self.health.store(1.0f64.to_bits(), Ordering::Relaxed);
+        self.mode.store(WorkerMode::Serving as u8, Ordering::Relaxed);
+        self.recals.store(0, Ordering::Relaxed);
+        self.at_risk.store(false, Ordering::Relaxed);
+        self.frames.store(0, Ordering::Relaxed);
+        self.at_risk_frames.store(0, Ordering::Relaxed);
+        self.recal_energy.store(0.0f64.to_bits(), Ordering::Relaxed);
     }
 
     fn set_mode(&self, mode: WorkerMode) {
@@ -660,7 +700,7 @@ impl HealthSlot {
         }
     }
 
-    fn snapshot(&self, worker: usize) -> WorkerHealthStats {
+    fn snapshot(&self, worker: usize, queue_depth: u64) -> WorkerHealthStats {
         WorkerHealthStats {
             worker,
             health: self.health_value(),
@@ -670,8 +710,84 @@ impl HealthSlot {
             recal_energy_j: self.recal_energy_j(),
             at_risk_frames: self.at_risk_frames.load(Ordering::Relaxed),
             updates: self.updates.load(Ordering::Relaxed),
+            queue_depth,
         }
     }
+}
+
+/// Why a scale operation was refused. Refusals are normal controller
+/// feedback — the autoscaler reacts to them (e.g. turns on shedding when
+/// [`ScaleError::AtCapacity`]) — not server failures, and they are never
+/// recorded as [`ScaleEvent`]s.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ScaleError {
+    /// Every slot up to [`EngineConfig::pool_capacity`] holds a live
+    /// worker — the autoscaler's cue to start shedding.
+    AtCapacity,
+    /// Scaling down would leave no serving worker: a lone worker is never
+    /// drained (availability over elasticity).
+    AtFloor,
+    /// The server is closing/failed, or the dispatcher already exited —
+    /// the pool no longer changes size.
+    Closed,
+    /// A lock guarding pool state was poisoned by a panicking thread.
+    Poisoned(&'static str),
+}
+
+impl fmt::Display for ScaleError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ScaleError::AtCapacity => write!(f, "worker pool at capacity"),
+            ScaleError::AtFloor => write!(f, "a lone serving worker is never drained"),
+            ScaleError::Closed => write!(f, "server closing; pool size is frozen"),
+            ScaleError::Poisoned(what) => write!(f, "pool state poisoned: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for ScaleError {}
+
+/// Dynamic worker-pool occupancy, guarded by one mutex so scale
+/// decisions, spawner hand-off, and worker exits stay mutually
+/// consistent. Slot index = `ServerCore::inflight` / `health` index; the
+/// vectors are sized to [`EngineConfig::pool_capacity`] once at start so
+/// scale-up never reallocates shared state.
+struct PoolState {
+    /// Per-slot occupant: `Some(wid)` while a (possibly retiring) worker
+    /// thread owns the slot; `None` once it exited.
+    slots: Vec<Option<usize>>,
+    /// Per-slot logical pin-core claim (`Some` only under
+    /// `EngineConfig::pin_workers`); released with the slot on exit.
+    claims: Vec<Option<usize>>,
+    /// Worker queues spawned by [`Server::scale_up`] and not yet adopted
+    /// by the dispatcher: `(slot, sender)`.
+    pending: Vec<(usize, SyncSender<Job>)>,
+    /// Workers ever spawned — the unique-wid source and the
+    /// reassembler's exit expectation (`worker_exits` catches up to it).
+    spawned: usize,
+    /// The dispatcher exited and dropped every queue: no more spawns.
+    closed: bool,
+}
+
+impl PoolState {
+    /// Workers currently holding a slot (serving, draining,
+    /// recalibrating, or retiring — their thread is still running).
+    fn live(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    fn lowest_free_slot(&self) -> Option<usize> {
+        self.slots.iter().position(|s| s.is_none())
+    }
+}
+
+/// Lowest logical core index not claimed by a live worker — the pin
+/// target for a newly spawned worker under `EngineConfig::pin_workers`.
+/// A retired worker's claim returns to the free set, so scale cycles
+/// reuse low cores instead of marching rightward (or blindly re-pinning
+/// from core 0 over a live worker).
+fn lowest_free_core(claims: &[Option<usize>]) -> usize {
+    (0usize..=claims.len()).find(|c| !claims.contains(&Some(*c))).unwrap_or(0)
 }
 
 /// State shared by the server handle, its threads, and session handles.
@@ -687,6 +803,10 @@ struct ServerCore {
     /// scale.
     activity: Event,
     n_workers: usize,
+    /// Slot capacity of the elastic pool ([`EngineConfig::pool_capacity`]);
+    /// `inflight` and `health` are sized to it once, so the dispatcher and
+    /// scale-up never reallocate shared vectors.
+    capacity: usize,
     default_window: usize,
     ready: AtomicBool,
     closing: AtomicBool,
@@ -703,6 +823,19 @@ struct ServerCore {
     registry: Mutex<Registry>,
     sessions: Mutex<Vec<Arc<SessionShared>>>,
     outcome: Mutex<Option<FinalOutcome>>,
+    /// Dynamic pool occupancy + spawner hand-off (see [`PoolState`]).
+    pool: Mutex<PoolState>,
+    /// Scale/shed decision log, exposed via [`ServerStats::scale_events`].
+    scale_events: Mutex<Vec<ScaleEvent>>,
+    /// Admission-shedding threshold: `try_submit` from sessions with
+    /// `weight <` this returns [`PushOutcome::Shed`] (`0` = off). Set by
+    /// the autoscaler when scale-up is capped, lowest weights first.
+    shed_below: AtomicU32,
+    /// Final health rows of retired workers (mode `Retired`), kept so
+    /// [`ServerStats`] totals stay monotone across a scale-down.
+    retired_health: Mutex<Vec<WorkerHealthStats>>,
+    /// Serving-clock origin of [`ScaleEvent::at_s`].
+    t_start: Instant,
 }
 
 impl ServerCore {
@@ -792,6 +925,15 @@ impl SessionSubmitter {
             {
                 return Err(ServeError::Closed);
             }
+            let shed = self.core.shed_below.load(Ordering::Relaxed);
+            if shed > 0 && self.shared.weight < shed {
+                // Fleet overload shedding: block until the autoscaler
+                // clears it (`clear_shed` notifies). Blocking callers
+                // never count `dropped_shed` — that is the non-blocking
+                // `try_submit` rejection record.
+                self.core.activity.wait_for(gen, QUOTA_RECHECK);
+                continue;
+            }
             match self.shared.admit_quota(&self.core.clock) {
                 Ok(()) => break,
                 Err(QuotaDenied::InFlight) => {
@@ -824,7 +966,11 @@ impl SessionSubmitter {
     /// backpressure contract of the batch-job API), while
     /// [`PushOutcome::Quota`] — an admission-[`Quota`] rejection — counts
     /// the **distinct** `ServeReport::dropped_quota`, so policy drops can
-    /// never masquerade as backpressure.
+    /// never masquerade as backpressure. Under autoscaler overload
+    /// shedding ([`Server::set_shed`]), a below-threshold session gets
+    /// [`PushOutcome::Shed`] — counted in the third distinct counter,
+    /// `ServeReport::dropped_shed` — checked before the quota, so the
+    /// fleet-level valve never burns per-session budget.
     pub fn try_submit(&self, frame: Frame) -> PushOutcome {
         if self.core.closing.load(Ordering::Relaxed)
             || self.core.failed.load(Ordering::Relaxed)
@@ -833,6 +979,11 @@ impl SessionSubmitter {
             return PushOutcome::Closed;
         }
         let Some(tx) = &self.tx else { return PushOutcome::Closed };
+        let shed = self.core.shed_below.load(Ordering::Relaxed);
+        if shed > 0 && self.shared.weight < shed {
+            self.shared.rejected_shed.fetch_add(1, Ordering::Relaxed);
+            return PushOutcome::Shed;
+        }
         if self.shared.admit_quota(&self.core.clock).is_err() {
             self.shared.rejected_quota.fetch_add(1, Ordering::Relaxed);
             return PushOutcome::Quota;
@@ -928,6 +1079,27 @@ impl SessionStream {
         self.core.failure_msg().map(|msg| Err(ServeError::Failed(msg)))
     }
 
+    /// Non-blocking pull: `Some(Ok)` for a result already buffered,
+    /// `Some(Err)` to surface a server failure (exactly once), `None`
+    /// when the stream is quiet *or* over — check [`ServeReport`]
+    /// completion to tell them apart. Lets a single driver thread drain
+    /// hundreds of sessions between clock advances (the load-generator
+    /// harness in `coordinator::loadgen`) without parking on any one.
+    pub fn try_next(&mut self) -> Option<std::result::Result<FrameResult, ServeError>> {
+        if self.finished {
+            return None;
+        }
+        match self.rx.try_recv() {
+            Ok(r) => {
+                self.shared.consumed.fetch_add(1, Ordering::Relaxed);
+                self.core.activity.notify();
+                Some(Ok(r))
+            }
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => self.end_of_stream(),
+        }
+    }
+
     /// Snapshot of this session's running [`ServeReport`].
     pub fn report(&self) -> ServeReport {
         self.shared.report(*recover(&self.core.backend), self.core.n_workers)
@@ -1000,6 +1172,11 @@ impl Session {
         self.stream.report()
     }
 
+    /// See [`SessionStream::try_next`] (non-blocking pull).
+    pub fn try_next(&mut self) -> Option<std::result::Result<FrameResult, ServeError>> {
+        self.stream.try_next()
+    }
+
     /// Split into the `Send` submission half and the stream half, so a
     /// sensor thread can feed while another thread drains.
     pub fn split(self) -> (SessionSubmitter, SessionStream) {
@@ -1045,24 +1222,51 @@ pub struct SessionStats {
 #[derive(Debug, Clone)]
 pub struct ServerStats {
     pub backend: String,
+    /// Workers configured at start ([`EngineConfig::workers`]) — the
+    /// elastic pool's starting size, not its current one.
     pub workers: usize,
+    /// Workers currently holding a pool slot (serving, draining,
+    /// recalibrating, or retiring; retired workers have released theirs).
+    pub live_workers: usize,
+    /// Admission-shedding threshold in force (`0` = off): sessions with
+    /// `weight <` this are being turned away ([`PushOutcome::Shed`]).
+    pub shed_below: u32,
     /// Aggregate report across every session (per-frame means weighted by
     /// frames; `wall_fps` over the server's post-warmup lifetime).
     pub aggregate: ServeReport,
     pub sessions: Vec<SessionStats>,
     /// Live per-worker hardware-health snapshot (health score, serving
-    /// mode, recal counts/energy) — all 1.0/`Serving`/zero for backends
-    /// without a fault model.
+    /// mode, queue depth, recal counts/energy) — all 1.0/`Serving`/zero
+    /// for backends without a fault model. Retired workers keep their
+    /// final row (mode `Retired`, queue depth 0) so totals stay monotone
+    /// across a scale-down.
     pub worker_health: Vec<WorkerHealthStats>,
+    /// Every scale/shed decision so far, in order ([`ScaleEvent`]).
+    pub scale_events: Vec<ScaleEvent>,
 }
+
+/// Type-erased worker spawner retained by the [`Server`] so
+/// [`Server::scale_up`] can add workers after `start` without knowing the
+/// concrete `FrameWorker`/factory types: `(wid, slot, pin_core)` → (job
+/// queue sender for the dispatcher to adopt, worker thread handle).
+type Spawner =
+    dyn Fn(usize, usize, Option<usize>) -> (SyncSender<Job>, JoinHandle<()>) + Send + Sync;
 
 /// A long-lived serving instance: the dispatcher, worker pool, and
 /// reassembler are started **once**; independent [`Session`]s come and go
 /// on top (see the module docs for the invariants). `serve_sharded` is the
-/// one-session batch-job wrapper over this type.
+/// one-session batch-job wrapper over this type. The worker pool is
+/// elastic: [`Server::scale_up`] / [`Server::scale_down`] resize it at
+/// runtime (typically driven by `coordinator::autoscale`).
 pub struct Server {
     core: Arc<ServerCore>,
     handles: Vec<JoinHandle<()>>,
+    /// Spawns one more worker thread through the retained factory (see
+    /// [`Spawner`]).
+    spawner: Arc<Spawner>,
+    /// Handles of workers spawned by [`Server::scale_up`], joined on
+    /// shutdown/drop alongside the initial `handles`.
+    scaled: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl Server {
@@ -1070,20 +1274,26 @@ impl Server {
     /// its own, possibly non-`Send`, [`FrameWorker`] via `factory`), the
     /// fair-admission dispatcher, and the per-session reassembler. Workers
     /// warm up immediately; sessions may be opened (and fed) before warmup
-    /// finishes — dispatch begins once every worker is ready.
+    /// finishes — dispatch begins once every initial worker is ready.
+    ///
+    /// The factory is retained (type-erased) so [`Server::scale_up`] can
+    /// grow the pool later, up to [`EngineConfig::pool_capacity`].
     pub fn start<W, F>(factory: F, cfg: EngineConfig) -> Result<Server>
     where
         W: FrameWorker + 'static,
         F: Fn(usize) -> Result<W> + Send + Sync + 'static,
     {
         let n_workers = cfg.workers.max(1);
+        let capacity = cfg.pool_capacity();
         let default_window = cfg.effective_window();
         let clock = cfg.clock.clone();
         let activity = clock.event();
+        let t_start = clock.now();
         let core = Arc::new(ServerCore {
             clock,
             activity,
             n_workers,
+            capacity,
             default_window,
             ready: AtomicBool::new(false),
             closing: AtomicBool::new(false),
@@ -1092,34 +1302,217 @@ impl Server {
             failure: Mutex::new(None),
             backend: Mutex::new("custom"),
             t_ready: Mutex::new(None),
-            inflight: (0..n_workers).map(|_| AtomicU64::new(0)).collect(),
-            health: (0..n_workers).map(|_| HealthSlot::new()).collect(),
+            inflight: (0..capacity).map(|_| AtomicU64::new(0)).collect(),
+            health: (0..capacity).map(|_| HealthSlot::new()).collect(),
             total_dispatched: AtomicU64::new(0),
             next_session: AtomicU64::new(0),
             registry: Mutex::new(Registry::default()),
             sessions: Mutex::new(Vec::new()),
             outcome: Mutex::new(None),
+            pool: Mutex::new(PoolState {
+                slots: vec![None; capacity],
+                claims: vec![None; capacity],
+                pending: Vec::new(),
+                spawned: 0,
+                closed: false,
+            }),
+            scale_events: Mutex::new(Vec::new()),
+            shed_below: AtomicU32::new(0),
+            retired_health: Mutex::new(Vec::new()),
+            t_start,
             cfg,
         });
         let factory = Arc::new(factory);
         let (res_tx, res_rx) = mpsc::channel::<Msg>();
 
+        // Type-erase the factory into a spawner closure so scale_up can
+        // add workers without the `W`/`F` generics. It holds a `res_tx`
+        // clone for late-spawned workers; the reassembler exits on its
+        // counted conditions, never on channel disconnect, so the
+        // long-lived clone is harmless.
+        let spawner: Arc<Spawner> = {
+            let (core, factory, res_tx) = (core.clone(), factory.clone(), res_tx.clone());
+            Arc::new(move |wid, slot, pin_core| {
+                let (tx, rx) = mpsc::sync_channel::<Job>(core.cfg.queue_depth.max(1));
+                let (core_w, factory_w, res_tx_w) =
+                    (core.clone(), factory.clone(), res_tx.clone());
+                let handle = std::thread::spawn(move || {
+                    worker_loop(wid, slot, pin_core, &*factory_w, &core_w, rx, res_tx_w)
+                });
+                (tx, handle)
+            })
+        };
+
         let mut handles = Vec::with_capacity(n_workers + 2);
-        let mut worker_txs = Vec::with_capacity(n_workers);
-        for wid in 0..n_workers {
-            let (tx, rx) = mpsc::sync_channel::<Job>(core.cfg.queue_depth.max(1));
-            worker_txs.push(tx);
-            let (core_w, factory_w, res_tx_w) = (core.clone(), factory.clone(), res_tx.clone());
-            handles.push(std::thread::spawn(move || {
-                worker_loop(wid, &*factory_w, &core_w, rx, res_tx_w)
-            }));
+        // The dispatcher owns one sender slot per pool slot; unspawned
+        // slots hold `None` until scale-up fills them.
+        let mut worker_txs: Vec<Option<SyncSender<Job>>> = (0..capacity).map(|_| None).collect();
+        {
+            let mut pool = recover(&core.pool);
+            for wid in 0..n_workers {
+                let pin_core = core.cfg.pin_workers.then(|| lowest_free_core(&pool.claims));
+                pool.slots[wid] = Some(wid);
+                pool.claims[wid] = pin_core;
+                pool.spawned += 1;
+                let (tx, handle) = spawner(wid, wid, pin_core);
+                worker_txs[wid] = Some(tx);
+                handles.push(handle);
+            }
         }
         let (core_d, res_tx_d) = (core.clone(), res_tx.clone());
         handles.push(std::thread::spawn(move || dispatcher_loop(&core_d, worker_txs, res_tx_d)));
         let core_r = core.clone();
         handles.push(std::thread::spawn(move || reassembler_loop(&core_r, res_rx)));
 
-        Ok(Server { core, handles })
+        Ok(Server { core, handles, spawner, scaled: Mutex::new(Vec::new()) })
+    }
+
+    /// Grow the live pool by one worker, spawned gracefully through the
+    /// factory retained from [`Server::start`] (it warms up in-thread and
+    /// joins placement; frames may queue on it while it warms). The new
+    /// worker takes the lowest free slot, and — under
+    /// `EngineConfig::pin_workers` — the lowest core not claimed by a
+    /// live worker. Refused with [`ScaleError::AtCapacity`] once every
+    /// slot up to [`EngineConfig::pool_capacity`] is occupied (the
+    /// autoscaler's cue to shed) and with [`ScaleError::Closed`] on a
+    /// closing server. Records a [`ScaleEvent`]; returns the live count
+    /// including the new worker.
+    pub fn scale_up(&self) -> std::result::Result<usize, ScaleError> {
+        if self.core.closing.load(Ordering::Relaxed) || self.core.failed.load(Ordering::Relaxed)
+        {
+            return Err(ScaleError::Closed);
+        }
+        let (wid, slot, live) = {
+            let mut pool =
+                self.core.pool.lock().map_err(|_| ScaleError::Poisoned("worker pool"))?;
+            if pool.closed {
+                return Err(ScaleError::Closed);
+            }
+            let Some(slot) = pool.lowest_free_slot() else {
+                return Err(ScaleError::AtCapacity);
+            };
+            let wid = pool.spawned;
+            pool.spawned += 1;
+            let pin_core = self.core.cfg.pin_workers.then(|| lowest_free_core(&pool.claims));
+            pool.slots[slot] = Some(wid);
+            pool.claims[slot] = pin_core;
+            // Re-arm the slot's health cell for its fresh occupant (the
+            // previous occupant's final row lives in `retired_health`).
+            self.core.health[slot].reset();
+            let (tx, handle) = (self.spawner)(wid, slot, pin_core);
+            pool.pending.push((slot, tx));
+            recover(&self.scaled).push(handle);
+            (wid, slot, pool.live())
+        };
+        self.record_scale(
+            ScaleAction::Up,
+            live,
+            format!("worker {wid} spawned into slot {slot}"),
+        );
+        // The dispatcher adopts the pending queue on its next sweep.
+        self.core.activity.notify();
+        Ok(live)
+    }
+
+    /// Shrink the live pool by one: flag the highest-slot **serving**
+    /// worker `Retiring` and let the drain machinery finish the job — the
+    /// dispatcher stops placing on it, waits for its queue to drain
+    /// (`inflight == 0`), then closes the queue; the worker exits cleanly
+    /// with its final stats flagged `retired` and its slot (and pin-core
+    /// claim) returns to the free set. Never drains a lone serving worker
+    /// ([`ScaleError::AtFloor`] — draining/recalibrating peers don't
+    /// count). Records a [`ScaleEvent`]; returns the live count the pool
+    /// is shrinking toward.
+    pub fn scale_down(&self) -> std::result::Result<usize, ScaleError> {
+        if self.core.closing.load(Ordering::Relaxed) || self.core.failed.load(Ordering::Relaxed)
+        {
+            return Err(ScaleError::Closed);
+        }
+        let (victim, target) = {
+            let pool = self.core.pool.lock().map_err(|_| ScaleError::Poisoned("worker pool"))?;
+            if pool.closed {
+                return Err(ScaleError::Closed);
+            }
+            let mut serving = pool
+                .slots
+                .iter()
+                .enumerate()
+                .filter(|(slot, occ)| {
+                    occ.is_some() && self.core.health[*slot].mode() == WorkerMode::Serving
+                })
+                .map(|(slot, _)| slot);
+            let (first, last) = (serving.next(), serving.last());
+            let victim = match (first, last) {
+                // A lone serving worker is never drained.
+                (_, None) | (None, _) => return Err(ScaleError::AtFloor),
+                (Some(_), Some(highest)) => highest,
+            };
+            self.core.health[victim].set_mode(WorkerMode::Retiring);
+            (victim, pool.live() - 1)
+        };
+        self.record_scale(ScaleAction::Down, target, format!("slot {victim} retiring"));
+        // Wake the dispatcher so an already-drained victim retires now.
+        self.core.activity.notify();
+        Ok(target)
+    }
+
+    /// Enable admission shedding: `try_submit` from sessions with
+    /// `weight < below_weight` returns [`PushOutcome::Shed`] (counted in
+    /// the distinct `ServeReport::dropped_shed`) until
+    /// [`Server::clear_shed`]. The autoscaler's overload valve when
+    /// scale-up is capped — lowest-weight tenants are rejected first.
+    /// `below_weight == 0` clears. Records a [`ScaleEvent`] when the
+    /// threshold actually changes; returns whether it did.
+    pub fn set_shed(&self, below_weight: u32) -> bool {
+        if below_weight == 0 {
+            return self.clear_shed();
+        }
+        let prev = self.core.shed_below.swap(below_weight, Ordering::Relaxed);
+        if prev == below_weight {
+            return false;
+        }
+        let live = recover(&self.core.pool).live();
+        self.record_scale(
+            ScaleAction::ShedOn { below_weight },
+            live,
+            format!("shedding tenants below weight {below_weight}"),
+        );
+        self.core.activity.notify();
+        true
+    }
+
+    /// Disable admission shedding (blocked submitters re-admit). Records
+    /// a [`ScaleEvent`] if shedding was on; returns whether it was.
+    pub fn clear_shed(&self) -> bool {
+        let prev = self.core.shed_below.swap(0, Ordering::Relaxed);
+        if prev == 0 {
+            return false;
+        }
+        let live = recover(&self.core.pool).live();
+        self.record_scale(ScaleAction::ShedOff, live, "shedding cleared".to_string());
+        self.core.activity.notify();
+        true
+    }
+
+    /// Admission-shedding threshold in force (`0` = off).
+    pub fn shed_below(&self) -> u32 {
+        self.core.shed_below.load(Ordering::Relaxed)
+    }
+
+    /// Workers currently holding a pool slot (their thread is running:
+    /// serving, draining, recalibrating, or retiring).
+    pub fn live_workers(&self) -> usize {
+        recover(&self.core.pool).live()
+    }
+
+    /// Snapshot of the scale/shed decision log, in decision order.
+    pub fn scale_events(&self) -> Vec<ScaleEvent> {
+        recover(&self.core.scale_events).clone()
+    }
+
+    fn record_scale(&self, action: ScaleAction, workers: usize, detail: String) {
+        let at_s = self.core.clock.seconds_since(self.core.t_start);
+        recover(&self.core.scale_events).push(ScaleEvent { at_s, action, workers, detail });
     }
 
     /// Open an independent serving session. Frames from all sessions share
@@ -1152,6 +1545,7 @@ impl Server {
             consumed: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             rejected_quota: AtomicU64::new(0),
+            rejected_shed: AtomicU64::new(0),
             // The rate bucket starts full: a session may burst up to
             // `quota.burst` frames before the sustained rate binds.
             bucket: Mutex::new(TokenBucket {
@@ -1203,6 +1597,14 @@ impl Server {
         ServerWatch { core: self.core.clone() }
     }
 
+    /// The serving clock — the timeline every deadline, wait, and
+    /// [`ScaleEvent`] timestamp lives on (hand it to an
+    /// [`super::autoscale::AutoScaler`] so cooldowns move with the
+    /// traffic).
+    pub fn clock(&self) -> Clock {
+        self.core.clock.clone()
+    }
+
     /// All workers warmed up; dispatch is live.
     pub fn ready(&self) -> bool {
         self.core.ready.load(Ordering::Relaxed)
@@ -1239,12 +1641,14 @@ impl Server {
         let mut agg = SessionAccum::default();
         let mut dropped = 0u64;
         let mut dropped_quota = 0u64;
+        let mut dropped_shed = 0u64;
         for s in &sessions {
             // One snapshot per session: the row report and the aggregate
             // must agree even while the reassembler keeps accumulating.
             let a = s.snapshot();
             let s_dropped = s.rejected.load(Ordering::Relaxed);
             let s_dropped_quota = s.rejected_quota.load(Ordering::Relaxed);
+            let s_dropped_shed = s.rejected_shed.load(Ordering::Relaxed);
             agg.frames += a.frames;
             agg.iou_sum += a.iou_sum;
             agg.correct += a.correct;
@@ -1261,6 +1665,7 @@ impl Server {
             agg.session_latency.merge(&a.session_latency);
             dropped += s_dropped;
             dropped_quota += s_dropped_quota;
+            dropped_shed += s_dropped_shed;
             rows.push(SessionStats {
                 id: s.id,
                 name: s.name.clone(),
@@ -1272,7 +1677,13 @@ impl Server {
                     .dispatched
                     .load(Ordering::Relaxed)
                     .saturating_sub(s.consumed.load(Ordering::Relaxed)),
-                report: a.to_report(s_dropped, s_dropped_quota, &backend, self.core.n_workers),
+                report: a.to_report(
+                    s_dropped,
+                    s_dropped_quota,
+                    s_dropped_shed,
+                    &backend,
+                    self.core.n_workers,
+                ),
             });
         }
         // The aggregate's wall clock spans the server's post-warmup
@@ -1282,15 +1693,43 @@ impl Server {
             t_ready.map(|t| self.core.clock.seconds_since(t)).unwrap_or(0.0);
         agg.first_emit = t_ready;
         agg.last_emit = t_ready.map(|t| t + Duration::from_secs_f64(wall_s));
-        let aggregate = agg.to_report(dropped, dropped_quota, &backend, self.core.n_workers);
-        let worker_health =
-            self.core.health.iter().enumerate().map(|(w, s)| s.snapshot(w)).collect();
+        let aggregate =
+            agg.to_report(dropped, dropped_quota, dropped_shed, &backend, self.core.n_workers);
+        // Live rows come from occupied pool slots (queue-depth gauge =
+        // that slot's inflight count); retired workers keep their final
+        // archived row so totals stay monotone across scale-down.
+        let (live_workers, mut worker_health) = {
+            let pool = guard(&self.core.pool, "worker pool")?;
+            let live_rows: Vec<WorkerHealthStats> = pool
+                .slots
+                .iter()
+                .enumerate()
+                .filter_map(|(slot, occ)| {
+                    // A slot whose occupant already flipped to `Retired`
+                    // (but hasn't freed the slot yet) is reported by its
+                    // archived row, not here — never both.
+                    occ.filter(|_| self.core.health[slot].mode() != WorkerMode::Retired).map(
+                        |wid| {
+                            self.core.health[slot]
+                                .snapshot(wid, self.core.inflight[slot].load(Ordering::Relaxed))
+                        },
+                    )
+                })
+                .collect();
+            (pool.live(), live_rows)
+        };
+        worker_health
+            .extend(guard(&self.core.retired_health, "retired worker stats")?.iter().cloned());
+        worker_health.sort_by_key(|w| w.worker);
         Ok(ServerStats {
             backend,
             workers: self.core.n_workers,
+            live_workers,
+            shed_below: self.core.shed_below.load(Ordering::Relaxed),
             aggregate,
             sessions: rows,
             worker_health,
+            scale_events: recover(&self.core.scale_events).clone(),
         })
     }
 
@@ -1311,6 +1750,11 @@ impl Server {
         for h in self.handles.drain(..) {
             h.join().ok();
         }
+        // Scaled-up workers exit once the dispatcher (joined above) drops
+        // their queues; join them after so shutdown never hangs on one.
+        for h in recover(&self.scaled).drain(..) {
+            h.join().ok();
+        }
         match recover(&self.core.outcome).take() {
             Some(Ok(pair)) => Ok(pair),
             Some(Err(error)) => Err(anyhow!("serving failed: {error}")),
@@ -1329,6 +1773,9 @@ impl Drop for Server {
         self.core.abort.store(true, Ordering::Relaxed);
         self.core.activity.notify();
         for h in self.handles.drain(..) {
+            h.join().ok();
+        }
+        for h in recover(&self.scaled).drain(..) {
             h.join().ok();
         }
     }
@@ -1374,6 +1821,11 @@ pub fn spawn_synthetic_sensor(
                 // Quota policy drop (counted as dropped_quota); wait for
                 // a token refill / in-flight drain.
                 PushOutcome::Quota => {
+                    watch.core.activity.wait_for(gen, Duration::from_millis(1));
+                }
+                // Overload shed (counted as dropped_shed); wait for the
+                // autoscaler to lift the threshold.
+                PushOutcome::Shed => {
                     watch.core.activity.wait_for(gen, Duration::from_millis(1));
                 }
                 PushOutcome::Closed => break,
@@ -1494,10 +1946,12 @@ enum Placed {
 /// aware: draining/recalibrating workers are ineligible (with an
 /// availability fallback — if **no** serving worker is alive, any alive
 /// worker beats stalling the pool), and a critical job sorts at-risk
-/// workers last, ahead of the load criterion.
+/// workers last, ahead of the load criterion. Retiring/retired slots are
+/// never placed on, health-aware or not — retirement means the queue is
+/// closing for good, so there is no availability fallback onto them.
 fn place_job(
     mut job: Job,
-    worker_txs: &[SyncSender<Job>],
+    worker_txs: &[Option<SyncSender<Job>>],
     alive: &mut [bool],
     core: &ServerCore,
     candidates: &mut Vec<usize>,
@@ -1514,16 +1968,27 @@ fn place_job(
             return Placed::Aborted;
         }
         candidates.clear();
-        candidates.extend(
-            (0..n).filter(|&w| {
-                alive[w] && (!aware || core.health[w].mode() == WorkerMode::Serving)
-            }),
-        );
+        candidates.extend((0..n).filter(|&w| {
+            alive[w]
+                && worker_txs[w].is_some()
+                && match core.health[w].mode() {
+                    WorkerMode::Retiring | WorkerMode::Retired => false,
+                    WorkerMode::Serving => true,
+                    WorkerMode::Draining | WorkerMode::Recalibrating => !aware,
+                }
+        }));
         if candidates.is_empty() {
             // Availability over routing purity: with every serving worker
             // gone (all draining/recalibrating at once), any alive worker
             // is better than a stalled pool.
-            candidates.extend((0..n).filter(|&w| alive[w]));
+            candidates.extend((0..n).filter(|&w| {
+                alive[w]
+                    && worker_txs[w].is_some()
+                    && !matches!(
+                        core.health[w].mode(),
+                        WorkerMode::Retiring | WorkerMode::Retired
+                    )
+            }));
         }
         if candidates.is_empty() {
             return Placed::AllDead;
@@ -1538,7 +2003,8 @@ fn place_job(
         });
         let mut j = job;
         for &w in candidates.iter() {
-            match worker_txs[w].try_send(j) {
+            let Some(tx) = worker_txs[w].as_ref() else { continue };
+            match tx.try_send(j) {
                 Ok(()) => {
                     core.inflight[w].fetch_add(1, Ordering::Relaxed);
                     // Wake the worker blocked waiting for its queue.
@@ -1575,7 +2041,16 @@ fn finalize_entry(entry: &mut DispatchEntry, res_tx: &mpsc::Sender<Msg>) {
 /// share, before the round-robin serves everyone else.
 /// Event-driven: an idle dispatcher blocks on the activity event, woken
 /// by submissions, consumptions, session lifecycle, and shutdown.
-fn dispatcher_loop(core: &ServerCore, worker_txs: Vec<SyncSender<Job>>, res_tx: mpsc::Sender<Msg>) {
+///
+/// The dispatcher also owns the elastic-pool handoffs: each sweep it
+/// adopts queues for freshly scaled-up workers from the pool's pending
+/// list, and closes the queue of any `Retiring` worker that has fully
+/// drained (`inflight == 0`) so it exits cleanly.
+fn dispatcher_loop(
+    core: &ServerCore,
+    mut worker_txs: Vec<Option<SyncSender<Job>>>,
+    res_tx: mpsc::Sender<Msg>,
+) {
     // Hold dispatch until every worker is warm (or the server is going
     // away) — warmup must not skew fairness toward the first session.
     loop {
@@ -1590,7 +2065,7 @@ fn dispatcher_loop(core: &ServerCore, worker_txs: Vec<SyncSender<Job>>, res_tx: 
     }
     let n_workers = worker_txs.len();
     let mut entries: Vec<DispatchEntry> = Vec::new();
-    let mut alive = vec![true; n_workers];
+    let mut alive: Vec<bool> = worker_txs.iter().map(|t| t.is_some()).collect();
     let mut candidates: Vec<usize> = Vec::with_capacity(n_workers);
     let mut weights: Vec<u32> = Vec::new();
     let mut wrr = WrrAdmission::new();
@@ -1613,6 +2088,27 @@ fn dispatcher_loop(core: &ServerCore, worker_txs: Vec<SyncSender<Job>>, res_tx: 
         {
             let mut reg = recover(&core.registry);
             entries.extend(reg.new_dispatch.drain(..));
+        }
+        // Adopt queues for workers spawned by `scale_up` since the last
+        // sweep, then retire any `Retiring` worker that has drained:
+        // dropping its sender disconnects its queue, and the worker's
+        // clean-exit path archives its final stats and frees the slot.
+        {
+            let mut pool = recover(&core.pool);
+            for (slot, tx) in pool.pending.drain(..) {
+                alive[slot] = true;
+                worker_txs[slot] = Some(tx);
+            }
+        }
+        for w in 0..n_workers {
+            if worker_txs[w].is_some()
+                && core.health[w].mode() == WorkerMode::Retiring
+                && core.inflight[w].load(Ordering::Relaxed) == 0
+            {
+                worker_txs[w] = None;
+                alive[w] = false;
+                core.activity.notify();
+            }
         }
         let closing = core.closing.load(Ordering::Relaxed);
         // Health sweep before admission: flag any serving worker whose
@@ -1805,6 +2301,14 @@ fn dispatcher_loop(core: &ServerCore, worker_txs: Vec<SyncSender<Job>>, res_tx: 
     // observe the hang-up without a timeout.
     drop(entries);
     drop(worker_txs);
+    // Close the pool under its lock: any queue a racing `scale_up`
+    // already parked in `pending` is dropped here (its worker exits on
+    // the disconnect), and `closed` makes later scale calls refuse.
+    {
+        let mut pool = recover(&core.pool);
+        pool.pending.clear();
+        pool.closed = true;
+    }
     core.activity.notify();
     res_tx.send(Msg::DispatcherExited).ok();
 }
@@ -1850,7 +2354,7 @@ fn publish_health<W: FrameWorker>(slot: &HealthSlot, core: &ServerCore, w: &mut 
 /// Workers without a recalibration hook rejoin immediately — there is
 /// nothing to pay, and holding them drained would idle capacity.
 fn drive_recal<W: FrameWorker>(
-    wid: usize,
+    slot_idx: usize,
     slot: &HealthSlot,
     core: &ServerCore,
     w: &mut W,
@@ -1859,8 +2363,12 @@ fn drive_recal<W: FrameWorker>(
 ) {
     match slot.mode() {
         WorkerMode::Serving => {}
+        // Retirement is owned by the scale-down path: the dispatcher
+        // closes the drained worker's queue, and the worker's clean-exit
+        // path archives its final stats. Nothing to drive here.
+        WorkerMode::Retiring | WorkerMode::Retired => {}
         WorkerMode::Draining => {
-            if core.inflight[wid].load(Ordering::Relaxed) == 0 {
+            if core.inflight[slot_idx].load(Ordering::Relaxed) == 0 {
                 match w.recalibrate() {
                     Some(cost) => {
                         slot.add_recal_energy(cost.energy_j);
@@ -1893,6 +2401,8 @@ fn drive_recal<W: FrameWorker>(
 /// flushes exactly when the test advances past that deadline.
 fn worker_loop<W, F>(
     wid: usize,
+    slot_idx: usize,
+    pin_core: Option<usize>,
     factory: &F,
     core: &ServerCore,
     rx: Receiver<Job>,
@@ -1905,11 +2415,10 @@ fn worker_loop<W, F>(
     let patch_px = core.cfg.patch_px;
     let batch_policy = core.cfg.batch;
     let body = AssertUnwindSafe(|| -> WorkerOutcome {
-        let pinned_core = if core.cfg.pin_workers {
-            super::affinity::pin_current_thread(wid)
-        } else {
-            None
-        };
+        // The pin target is pool-allocated (lowest core not claimed by a
+        // live worker) so a retired worker's core is reused by the next
+        // spawn rather than drifting upward.
+        let pinned_core = pin_core.and_then(super::affinity::pin_current_thread);
         let mut w =
             factory(wid).map_err(|e| format!("worker {wid}: construction failed: {e:#}"))?;
         w.warmup().map_err(|e| format!("worker {wid}: warmup failed: {e:#}"))?;
@@ -1923,7 +2432,7 @@ fn worker_loop<W, F>(
         let max_batch = batch_policy.max_batch.max(1);
         let mut tags: Vec<(u64, u64, Instant)> = Vec::with_capacity(max_batch);
         let mut group: Vec<Frame> = Vec::with_capacity(max_batch);
-        let slot = &core.health[wid];
+        let slot = &core.health[slot_idx];
         let mut recal_due: Option<Instant> = None;
         let mut closed = false;
         while !closed {
@@ -1937,7 +2446,7 @@ fn worker_loop<W, F>(
             let first = loop {
                 let gen = core.activity.generation();
                 publish_health(slot, core, &mut w);
-                drive_recal(wid, slot, core, &mut w, &clock, &mut recal_due);
+                drive_recal(slot_idx, slot, core, &mut w, &clock, &mut recal_due);
                 match rx.try_recv() {
                     Ok(job) => break Some(job),
                     Err(mpsc::TryRecvError::Empty) => {
@@ -1987,7 +2496,7 @@ fn worker_loop<W, F>(
             let t0 = clock.now();
             let out = w.process_batch(&group);
             busy += clock.now().saturating_duration_since(t0);
-            core.inflight[wid].fetch_sub(group.len() as u64, Ordering::Relaxed);
+            core.inflight[slot_idx].fetch_sub(group.len() as u64, Ordering::Relaxed);
             // The pool has headroom again: wake blocked placement.
             core.activity.notify();
             let rs = out.map_err(|e| {
@@ -2037,6 +2546,15 @@ fn worker_loop<W, F>(
         let backend = w.backend_name();
         let metrics = w.take_metrics();
         let queueing_s = metrics.stage_mean_s("modeled_queueing");
+        // A queue closed while Retiring means scale-down drained this
+        // worker out of the pool: flag its final rows `retired` and
+        // archive the health row so `Server::stats` totals stay monotone
+        // after the live slot is reused.
+        let retired = matches!(slot.mode(), WorkerMode::Retiring | WorkerMode::Retired);
+        if retired {
+            slot.set_mode(WorkerMode::Retired);
+            recover(&core.retired_health).push(slot.snapshot(wid, 0));
+        }
         Ok((
             metrics,
             WorkerStats {
@@ -2049,11 +2567,22 @@ fn worker_loop<W, F>(
                 health: slot.health_value(),
                 recals: slot.recals.load(Ordering::Relaxed),
                 at_risk_frames: slot.at_risk_frames.load(Ordering::Relaxed),
+                queue_depth: 0,
+                retired,
             },
             backend,
         ))
     });
-    match std::panic::catch_unwind(body) {
+    let outcome = std::panic::catch_unwind(body);
+    // Release the pool slot (and its pin-core claim) whatever the exit
+    // path — the next scale_up may reuse both.
+    {
+        let mut pool = recover(&core.pool);
+        pool.slots[slot_idx] = None;
+        pool.claims[slot_idx] = None;
+    }
+    core.activity.notify();
+    match outcome {
         Ok(Ok((metrics, stats, backend))) => {
             res_tx.send(Msg::WorkerDone { stats, metrics: Box::new(metrics), backend }).ok();
         }
@@ -2208,7 +2737,9 @@ fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
                 backend_name = backend;
                 *recover(&core.backend) = backend;
                 ready_count += 1;
-                if ready_count == n_workers {
+                // Scaled-up workers send `Ready` too: only the initial
+                // pool gates dispatch, and readiness latches once.
+                if !core.ready.load(Ordering::Relaxed) && ready_count >= n_workers {
                     let now = clock.now();
                     t_ready = Some(now);
                     *recover(&core.t_ready) = Some(now);
@@ -2323,7 +2854,7 @@ fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
                 if failure.is_none()
                     && !(core.closing.load(Ordering::Relaxed)
                         && dispatcher_exited
-                        && worker_exits == n_workers)
+                        && worker_exits >= recover(&core.pool).spawned)
                 {
                     let msg = "engine threads exited before completing the run".to_string();
                     fail_server(core, msg, &mut failure, &mut states);
@@ -2331,8 +2862,10 @@ fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
                 break;
             }
         }
+        // The dispatcher must have exited first: `spawned` is final once
+        // the pool is closed, so the count cannot race a late scale_up.
         if dispatcher_exited
-            && worker_exits == n_workers
+            && worker_exits >= recover(&core.pool).spawned
             && (core.closing.load(Ordering::Relaxed) || failure.is_some())
         {
             break;
@@ -2349,6 +2882,7 @@ fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
     // and SLO misses sum, latency histograms merge exactly.
     let mut dropped = 0u64;
     let mut dropped_quota = 0u64;
+    let mut dropped_shed = 0u64;
     let mut slo_miss = 0u64;
     let mut accuracy_at_risk = 0u64;
     // Summed from the per-session accums (not the merged worker metrics)
@@ -2358,6 +2892,7 @@ fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
     for s in recover(&core.sessions).iter() {
         dropped += s.rejected.load(Ordering::Relaxed);
         dropped_quota += s.rejected_quota.load(Ordering::Relaxed);
+        dropped_shed += s.rejected_shed.load(Ordering::Relaxed);
         let a = recover(&s.accum);
         slo_miss += a.slo_miss;
         accuracy_at_risk += a.accuracy_at_risk;
@@ -2372,6 +2907,7 @@ fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
                 frames: agg.emitted,
                 dropped,
                 dropped_quota,
+                dropped_shed,
                 slo_miss,
                 accuracy_at_risk,
                 p99_latency_s: session_latency.quantile(0.99),
@@ -2388,7 +2924,10 @@ fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
                 } else {
                     0.0
                 },
-                workers: n_workers,
+                // Every worker that ever served, including scaled-up and
+                // since-retired ones (`spawned` is final here — the
+                // dispatcher closed the pool before this runs).
+                workers: recover(&core.pool).spawned,
                 per_worker,
             },
             merged,
@@ -2504,6 +3043,7 @@ mod tests {
             consumed: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             rejected_quota: AtomicU64::new(0),
+            rejected_shed: AtomicU64::new(0),
             bucket: Mutex::new(TokenBucket {
                 tokens: quota.burst.max(1) as f64,
                 last_refill: clock.now(),
@@ -2623,5 +3163,83 @@ mod tests {
             "a closing server must not admit new sessions"
         );
         server.shutdown().expect("shutdown of an idle server");
+    }
+
+    #[test]
+    fn lowest_free_core_picks_lowest_and_reuses_released() {
+        assert_eq!(lowest_free_core(&[]), 0);
+        assert_eq!(lowest_free_core(&[None, None]), 0);
+        assert_eq!(lowest_free_core(&[Some(0), Some(1), None]), 2);
+        // A retired worker's claim is cleared; its core is the next pick.
+        assert_eq!(lowest_free_core(&[Some(0), Some(2)]), 1);
+        assert_eq!(lowest_free_core(&[Some(1), Some(2)]), 0);
+    }
+
+    /// Spin (real time, bounded) until the live pool reaches `want`.
+    fn wait_live(server: &Server, want: usize) {
+        let t0 = std::time::Instant::now();
+        while server.live_workers() != want {
+            assert!(
+                t0.elapsed() < Duration::from_secs(30),
+                "pool never reached {want} live workers (at {})",
+                server.live_workers()
+            );
+            std::thread::yield_now();
+        }
+    }
+
+    #[test]
+    fn scale_up_and_down_resize_the_live_pool() {
+        let mut cfg = test_cfg(1);
+        cfg.max_workers = 3;
+        let server = Server::start(|_wid| Ok(EchoWorker::new()), cfg).expect("server");
+        server.wait_ready(Duration::from_secs(10)).expect("warmup");
+        assert_eq!(server.live_workers(), 1);
+        assert_eq!(server.scale_up().expect("grow to 2"), 2);
+        assert_eq!(server.scale_up().expect("grow to 3"), 3);
+        assert_eq!(server.scale_up(), Err(ScaleError::AtCapacity));
+        assert_eq!(server.scale_down().expect("shrink toward 2"), 2);
+        wait_live(&server, 2);
+        let actions: Vec<ScaleAction> =
+            server.scale_events().iter().map(|e| e.action.clone()).collect();
+        assert_eq!(actions, vec![ScaleAction::Up, ScaleAction::Up, ScaleAction::Down]);
+        let stats = server.stats().expect("stats");
+        assert_eq!(stats.live_workers, 2);
+        assert_eq!(
+            stats.worker_health.iter().filter(|w| w.mode == WorkerMode::Retired).count(),
+            1,
+            "the retired worker keeps its final archived row"
+        );
+        let (agg, _) = server.shutdown().expect("shutdown");
+        assert_eq!(agg.workers, 3, "every worker that ever served counts");
+        assert_eq!(agg.per_worker.iter().filter(|w| w.retired).count(), 1);
+    }
+
+    #[test]
+    fn a_lone_serving_worker_is_never_drained() {
+        let server = Server::start(|_wid| Ok(EchoWorker::new()), test_cfg(1)).expect("server");
+        server.wait_ready(Duration::from_secs(10)).expect("warmup");
+        assert_eq!(server.scale_down(), Err(ScaleError::AtFloor));
+        assert!(server.scale_events().is_empty(), "a refused scale is not an event");
+        assert_eq!(server.live_workers(), 1);
+        server.shutdown().expect("shutdown");
+    }
+
+    #[test]
+    fn shed_thresholds_record_events_once() {
+        let server = Server::start(|_wid| Ok(EchoWorker::new()), test_cfg(1)).expect("server");
+        assert_eq!(server.shed_below(), 0);
+        assert!(server.set_shed(2), "first threshold records");
+        assert!(!server.set_shed(2), "same threshold is a no-op");
+        assert_eq!(server.shed_below(), 2);
+        assert!(server.clear_shed(), "clearing an active shed records");
+        assert!(!server.clear_shed(), "clearing twice is a no-op");
+        let actions: Vec<ScaleAction> =
+            server.scale_events().iter().map(|e| e.action.clone()).collect();
+        assert_eq!(
+            actions,
+            vec![ScaleAction::ShedOn { below_weight: 2 }, ScaleAction::ShedOff]
+        );
+        server.shutdown().expect("shutdown");
     }
 }

@@ -299,11 +299,21 @@ pub struct WorkerStats {
     pub recals: u64,
     /// Frames this worker served while its backend was accuracy-at-risk.
     pub at_risk_frames: u64,
+    /// Frames dispatched to this worker but not yet completed at the
+    /// moment the stats row was taken — the live queue-depth gauge the
+    /// autoscaler reads. Always 0 in a worker's *final* row (a worker
+    /// only exits once its queue is drained).
+    pub queue_depth: u64,
+    /// Whether this row belongs to a worker retired by a scale-down.
+    /// Retired rows are kept so `ServerStats` totals (frames, recals,
+    /// queueing) stay monotone across pool resizes.
+    pub retired: bool,
 }
 
-/// What a worker is doing with respect to hardware health — the
-/// recalibration state machine the health-aware dispatcher drives
-/// (`Serving → Draining → Recalibrating → Serving`).
+/// What a worker is doing with respect to hardware health and pool
+/// membership — the recalibration state machine the health-aware
+/// dispatcher drives (`Serving → Draining → Recalibrating → Serving`)
+/// plus the scale-down path (`Serving → Retiring → Retired`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum WorkerMode {
     /// In rotation, eligible for new frames.
@@ -313,6 +323,12 @@ pub enum WorkerMode {
     Draining,
     /// Drained and paying the modeled recalibration window.
     Recalibrating,
+    /// Flagged for retirement by a scale-down: receives no new frames,
+    /// finishing its in-flight work before leaving the pool.
+    Retiring,
+    /// Out of the pool. The worker's final stats row is retained (flagged
+    /// `retired`) so server totals stay monotone.
+    Retired,
 }
 
 impl WorkerMode {
@@ -321,6 +337,8 @@ impl WorkerMode {
             WorkerMode::Serving => "serving",
             WorkerMode::Draining => "draining",
             WorkerMode::Recalibrating => "recal",
+            WorkerMode::Retiring => "retiring",
+            WorkerMode::Retired => "retired",
         }
     }
 }
@@ -346,6 +364,10 @@ pub struct WorkerHealthStats {
     /// Health snapshots the worker has published (≥ 1 once the worker has
     /// polled its backend; useful for tests synchronizing on publication).
     pub updates: u64,
+    /// Frames dispatched to this worker but not yet completed — the live
+    /// queue-depth gauge (the autoscaler's load signal). 0 for retired
+    /// workers.
+    pub queue_depth: u64,
 }
 
 #[cfg(test)]
@@ -435,6 +457,70 @@ mod tests {
         assert_eq!(merged.count(), 4);
         assert!(merged.quantile(1.0) > 0.0);
         assert_eq!(merged.quantile(0.25), 0.0);
+    }
+
+    /// Per-session histograms are merged in whatever order sessions
+    /// finish, and the aggregate in `ServerStats` is rebuilt on every
+    /// call — merging must be order-insensitive and exact, or the
+    /// autoscaler's miss-rate/p99 signals would depend on session order.
+    #[test]
+    fn latency_histogram_merge_is_associative_and_exact() {
+        // Three "sessions" with overlapping but distinct latency ranges,
+        // including degenerate samples.
+        let streams: [&[f64]; 3] = [
+            &[1e-3, 2e-3, 5e-3, 1e-3, 0.0],
+            &[5e-4, 5e-2, 1e-3, f64::NAN],
+            &[2e-2, 2e-2, 3e-6, -1.0, 8e-3, 1e-1],
+        ];
+        let mut parts = [LatencyHistogram::new(), LatencyHistogram::new(), LatencyHistogram::new()];
+        let mut whole = LatencyHistogram::new();
+        for (h, s) in parts.iter_mut().zip(streams.iter()) {
+            for &v in *s {
+                h.record(v);
+                whole.record(v);
+            }
+        }
+        // (a ⊕ b) ⊕ c  vs  a ⊕ (b ⊕ c)  vs  c ⊕ a ⊕ b — all orders, plus
+        // the single-recorder ground truth, must agree on every quantile.
+        let mut left = parts[0];
+        left.merge(&parts[1]);
+        left.merge(&parts[2]);
+        let mut right_inner = parts[1];
+        right_inner.merge(&parts[2]);
+        let mut right = parts[0];
+        right.merge(&right_inner);
+        let mut rotated = parts[2];
+        rotated.merge(&parts[0]);
+        rotated.merge(&parts[1]);
+        assert_eq!(left.count(), whole.count());
+        assert_eq!(right.count(), whole.count());
+        assert_eq!(rotated.count(), whole.count());
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            let expect = whole.quantile(q);
+            assert_eq!(left.quantile(q), expect, "left-fold q={q}");
+            assert_eq!(right.quantile(q), expect, "right-fold q={q}");
+            assert_eq!(rotated.quantile(q), expect, "rotated q={q}");
+        }
+    }
+
+    /// Merging an empty histogram is the identity, in either direction.
+    #[test]
+    fn latency_histogram_empty_merge_is_identity() {
+        let mut h = LatencyHistogram::new();
+        for v in [1e-3, 4e-3, 2e-2] {
+            h.record(v);
+        }
+        let before: Vec<f64> = [0.5, 0.99, 1.0].iter().map(|&q| h.quantile(q)).collect();
+        let mut merged = h;
+        merged.merge(&LatencyHistogram::new());
+        let mut from_empty = LatencyHistogram::new();
+        from_empty.merge(&h);
+        for (i, &q) in [0.5, 0.99, 1.0].iter().enumerate() {
+            assert_eq!(merged.quantile(q), before[i]);
+            assert_eq!(from_empty.quantile(q), before[i]);
+        }
+        assert_eq!(merged.count(), 3);
+        assert_eq!(from_empty.count(), 3);
     }
 
     #[test]

@@ -68,6 +68,24 @@
 //! `optovit serve --cameras K --slo-ms F --quota N --rate F`; gate:
 //! `cargo test --test qos` (sleep-free, exact expectations).
 //!
+//! The worker pool is **elastic**: with `--max-workers` above the
+//! starting size the live server resizes without a restart —
+//! [`coordinator::server::Server::scale_up`] spawns into the lowest
+//! free slot (lowest free core under `--pin`),
+//! [`coordinator::server::Server::scale_down`] drains and retires the
+//! highest serving slot (its final stats row is retained so totals
+//! stay monotone; a lone worker is never drained). `optovit serve
+//! --autoscale` closes the loop with
+//! [`coordinator::autoscale::AutoScaler`]: queue-depth / SLO-miss /
+//! p99 signals walk a hysteresis ladder of scale-ups, lowest-weight
+//! admission shedding at the cap (the distinct `dropped_shed`
+//! counter), and cooled-down scale-downs, every decision logged as a
+//! [`coordinator::autoscale::ScaleEvent`]. [`coordinator::loadgen`]
+//! sweeps scripted arrival storms (step / burst / diurnal / Poisson)
+//! through hundreds of sessions deterministically; gates: `cargo test
+//! --test storm`, `cargo bench --bench serve_storm` →
+//! `BENCH_storm.json`.
+//!
 //! ## Module map
 //!
 //! | module | role |
@@ -81,7 +99,7 @@
 //! | [`roi`] | patch masks and skip-ratio accounting |
 //! | [`sensor`] | synthetic CMOS sensor / video workload generator |
 //! | [`runtime`] | pluggable batch-first execution backends behind the `Backend` trait (`execute_batch` = N frames/call, natively in all three): `pjrt` (compiled HLO), `host` (pure-Rust reference), `sim` (host numerics + batch-aware modeled photonic timing), plus per-worker `BackendFactory` construction |
-//! | [`coordinator`] | the serving stack, generic over any backend: zero-allocation frame pipeline, bucket routing, deadline-aware bucket-major micro-batching (`MicroBatcher`), streaming `FrameStream` serve, the pluggable `Clock`/`Event` time seam, and the session-oriented `Server` (multi-tenant `Session`s over one dispatcher → N micro-batching, optionally core-pinned workers → per-session in-order reassembly, fair weighted admission, per-session QoS: latency SLOs + admission quotas, per-session + aggregate reports) |
+//! | [`coordinator`] | the serving stack, generic over any backend: zero-allocation frame pipeline, bucket routing, deadline-aware bucket-major micro-batching (`MicroBatcher`), streaming `FrameStream` serve, the pluggable `Clock`/`Event` time seam, and the session-oriented `Server` (multi-tenant `Session`s over one dispatcher → N micro-batching, optionally core-pinned workers → per-session in-order reassembly, fair weighted admission, per-session QoS: latency SLOs + admission quotas, per-session + aggregate reports) — now elastic: `scale_up`/`scale_down`/`set_shed` on the live pool, the SLO-driven `autoscale::AutoScaler`, and the `loadgen` storm harness |
 //! | [`baselines`] | Table-IV competitor accelerator models + platform refs |
 //! | [`cli`] | dependency-free argument parsing |
 //! | [`util`] | PRNG, stats, table formatting, property-test helpers |

@@ -6,6 +6,7 @@
 //!                 [--batch B] [--batch-wait-us U] [--window W]
 //!                 [--cameras K] [--weights w0,w1,..] [--pin]
 //!                 [--slo-ms F] [--quota N] [--rate F]
+//!                 [--autoscale] [--min-workers N] [--max-workers N]
 //!                 [--faults S] [--drift-rate R]
 //!                 [--cores N] [--arrival-fps F]
 //!                 [--no-mask] [--seed S] [--objects K] [--artifacts DIR]
@@ -35,6 +36,15 @@
 //! admission rate in frames/s (rejections count the distinct `q-drop`
 //! column, never `dropped`).
 //!
+//! `--autoscale` (session surface) arms the SLO-driven elasticity
+//! controller: a background `AutoScaler` ticks against the live server,
+//! scaling the worker pool up under queue-depth/SLO pressure, shedding
+//! the lowest-weight sessions when capped (the distinct `shed` column),
+//! and draining workers back down when calm. `--min-workers`/
+//! `--max-workers` bound the pool (default: never below the starting
+//! `--workers`, never above 4x it); the report appends the scale-event
+//! log and flags retired workers in the per-worker table.
+//!
 //! `--faults S` (sim backend only) seeds a per-worker degraded-optics
 //! schedule (MR thermal drift, stuck cells, dead VCSEL lanes) on the
 //! serving clock; `--drift-rate R` sets the drift accumulation in nm/s
@@ -54,6 +64,7 @@
 
 use optovit::baselines;
 use optovit::cli::Args;
+use optovit::coordinator::autoscale::{AutoScaler, ScaleAction, ScalePolicy};
 use optovit::coordinator::batcher::BatchPolicy;
 use optovit::coordinator::engine::{serve_sharded, EngineConfig};
 use optovit::coordinator::pipeline::{serve, Pipeline, PipelineConfig, ServeOptions, ServeReport};
@@ -97,8 +108,9 @@ fn main() {
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     args.check_known(&[
         "frames", "seed", "objects", "workers", "queue", "batch", "batch-wait-us", "window",
-        "cameras", "weights", "pin", "slo-ms", "quota", "rate", "faults", "drift-rate",
-        "cores", "arrival-fps", "no-mask", "backend", "artifacts",
+        "cameras", "weights", "pin", "slo-ms", "quota", "rate", "autoscale", "min-workers",
+        "max-workers", "faults", "drift-rate", "cores", "arrival-fps", "no-mask", "backend",
+        "artifacts",
     ])
     .map_err(anyhow::Error::msg)?;
     let frames = args.get_u64("frames", 50).map_err(anyhow::Error::msg)?;
@@ -128,6 +140,32 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             .with_inflight(quota.max_inflight);
     }
     let has_qos = slo.is_some() || !quota.is_unlimited();
+    // Elasticity knobs (session surface: --autoscale routes through the
+    // server even for one camera).
+    let autoscale = args.get_bool("autoscale");
+    if (args.get("min-workers").is_some() || args.get("max-workers").is_some()) && !autoscale {
+        anyhow::bail!("--min-workers/--max-workers require --autoscale (the elasticity controller)");
+    }
+    let min_workers = args.get_usize("min-workers", 1).map_err(anyhow::Error::msg)?.max(1);
+    let max_workers =
+        args.get_usize("max-workers", workers * 4).map_err(anyhow::Error::msg)?;
+    if autoscale {
+        if max_workers < workers {
+            anyhow::bail!(
+                "--max-workers {max_workers} is below the starting --workers {workers}"
+            );
+        }
+        if min_workers > workers {
+            anyhow::bail!(
+                "--min-workers {min_workers} is above the starting --workers {workers}"
+            );
+        }
+    }
+    let scale_policy = autoscale.then(|| ScalePolicy {
+        min_workers,
+        max_workers,
+        ..ScalePolicy::default()
+    });
     // Loud-failure discipline (same reason as check_known above): weights
     // only mean something with multiple sessions, and a longer list than
     // cameras is a miscount, not something to truncate silently.
@@ -219,10 +257,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             println!("warming up ({kind} backend, no artifacts needed)...")
         }
     }
-    // QoS knobs are session options, so any of them routes the run
-    // through the session-oriented server — even for one camera.
-    if cameras > 1 || has_qos {
-        return cmd_serve_cameras(&cfg, &factory, workers, cameras, &weights, slo, quota, &opts);
+    // QoS and elasticity knobs are server-side, so any of them routes the
+    // run through the session-oriented server — even for one camera.
+    if cameras > 1 || has_qos || autoscale {
+        return cmd_serve_cameras(
+            &cfg, &factory, workers, cameras, &weights, slo, quota, scale_policy, &opts,
+        );
     }
     let (r, metrics) = if workers > 1 {
         serve_sharded(&cfg, &factory, workers, &opts)?
@@ -242,7 +282,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 /// shared [`Server`] — the session-oriented serving surface, with frames
 /// from every camera interleaving through the shared worker pool and
 /// micro-batch lanes under weighted fair admission, each session carrying
-/// the CLI's QoS options (`--slo-ms`, `--quota`, `--rate`).
+/// the CLI's QoS options (`--slo-ms`, `--quota`, `--rate`). With
+/// `--autoscale` a background [`AutoScaler`] ticks against the live
+/// server, resizing the pool (within `--min-workers`/`--max-workers`)
+/// and shedding lowest-weight sessions at the cap.
 #[allow(clippy::too_many_arguments)]
 fn cmd_serve_cameras(
     cfg: &PipelineConfig,
@@ -252,9 +295,15 @@ fn cmd_serve_cameras(
     weights: &[usize],
     slo: Option<std::time::Duration>,
     quota: Quota,
+    scale_policy: Option<ScalePolicy>,
     opts: &ServeOptions,
 ) -> anyhow::Result<()> {
-    let ecfg = EngineConfig::for_serving(cfg, opts, workers);
+    let mut ecfg = EngineConfig::for_serving(cfg, opts, workers);
+    if let Some(p) = &scale_policy {
+        // The policy cap is also the pool capacity the server pre-sizes
+        // its slots for.
+        ecfg.max_workers = p.max_workers;
+    }
     let image_size = cfg.image_size;
     let server = {
         let cfg = cfg.clone();
@@ -289,31 +338,67 @@ fn cmd_serve_cameras(
         cams.push((cam, weight, sensor, drain));
     }
     let mut t = Table::new(vec![
-        "camera", "weight", "frames", "dropped", "q-drop", "slo miss", "at-risk", "fps",
+        "camera", "weight", "frames", "dropped", "q-drop", "shed", "slo miss", "at-risk", "fps",
         "latency", "p99", "batch", "IoU",
     ]);
-    for (cam, weight, sensor, drain) in cams {
-        sensor.join().ok();
-        let report = drain
-            .join()
-            .map_err(|_| anyhow::anyhow!("camera {cam} drain thread panicked"))??;
-        t.row(vec![
-            format!("camera-{cam}"),
-            weight.to_string(),
-            report.frames.to_string(),
-            report.dropped.to_string(),
-            report.dropped_quota.to_string(),
-            report.slo_miss.to_string(),
-            report.accuracy_at_risk.to_string(),
-            format!("{:.1}", report.wall_fps),
-            si_time(report.mean_latency_s),
-            si_time(report.p99_latency_s),
-            format!("{:.2}", report.mean_batch),
-            format!("{:.3}", report.mean_mask_iou),
-        ]);
-    }
+    // Drain every camera with the autoscaler (if armed) ticking in a
+    // scoped thread alongside; the stop flag is set before any early
+    // return so the scope's implicit join cannot deadlock.
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        if let Some(policy) = scale_policy.clone() {
+            let server = &server;
+            let stop = &stop;
+            scope.spawn(move || {
+                let mut scaler = AutoScaler::new(policy, Clock::system());
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let _ = scaler.tick(server);
+                    std::thread::sleep(std::time::Duration::from_millis(200));
+                }
+            });
+        }
+        let joined = (|| -> anyhow::Result<()> {
+            for (cam, weight, sensor, drain) in cams {
+                sensor.join().ok();
+                let report = drain
+                    .join()
+                    .map_err(|_| anyhow::anyhow!("camera {cam} drain thread panicked"))??;
+                t.row(vec![
+                    format!("camera-{cam}"),
+                    weight.to_string(),
+                    report.frames.to_string(),
+                    report.dropped.to_string(),
+                    report.dropped_quota.to_string(),
+                    report.dropped_shed.to_string(),
+                    report.slo_miss.to_string(),
+                    report.accuracy_at_risk.to_string(),
+                    format!("{:.1}", report.wall_fps),
+                    si_time(report.mean_latency_s),
+                    si_time(report.p99_latency_s),
+                    format!("{:.2}", report.mean_batch),
+                    format!("{:.3}", report.mean_mask_iou),
+                ]);
+            }
+            Ok(())
+        })();
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        joined
+    })?;
     println!("\nper-session reports:");
     print!("{}", t.render());
+    let events = server.scale_events();
+    if !events.is_empty() {
+        println!("\nscale events ({} live workers at close):", server.live_workers());
+        for e in &events {
+            let what = match &e.action {
+                ScaleAction::Up => "scale-up".to_string(),
+                ScaleAction::Down => "scale-down".to_string(),
+                ScaleAction::ShedOn { below_weight } => format!("shed <{below_weight}"),
+                ScaleAction::ShedOff => "shed-off".to_string(),
+            };
+            println!("  t={:>9.3}s  {:<10}  -> {} workers  ({})", e.at_s, what, e.workers, e.detail);
+        }
+    }
     let (agg, metrics) = server.shutdown()?;
     println!("\n== aggregate (all sessions) ==");
     print_serve_report(&agg, &metrics);
@@ -328,6 +413,9 @@ fn print_serve_report(r: &ServeReport, metrics: &StageMetrics) {
     println!("frames dropped       {}", r.dropped);
     if r.dropped_quota > 0 {
         println!("quota rejections     {}", r.dropped_quota);
+    }
+    if r.dropped_shed > 0 {
+        println!("shed rejections      {} (autoscaler admission shedding)", r.dropped_shed);
     }
     if r.slo_miss > 0 || r.p99_latency_s > 0.0 {
         println!("SLO misses           {}", r.slo_miss);
@@ -358,7 +446,7 @@ fn print_serve_report(r: &ServeReport, metrics: &StageMetrics) {
         println!("\nper-worker utilization:");
         let mut t = Table::new(vec![
             "worker", "core", "frames", "busy", "queueing", "utilization", "health", "recals",
-            "at-risk",
+            "at-risk", "queue", "state",
         ]);
         for w in &r.per_worker {
             t.row(vec![
@@ -371,6 +459,8 @@ fn print_serve_report(r: &ServeReport, metrics: &StageMetrics) {
                 format!("{:.2}", w.health),
                 w.recals.to_string(),
                 w.at_risk_frames.to_string(),
+                w.queue_depth.to_string(),
+                if w.retired { "retired" } else { "live" }.to_string(),
             ]);
         }
         print!("{}", t.render());

@@ -1,0 +1,481 @@
+//! Deterministic fleet-elasticity gate — the autoscaler's closed loop
+//! proven under a step-controlled [`ManualClock`] with **exact**
+//! expectations (counts asserted with `==`, event times to 1e-9):
+//!
+//! 1. a 10-frame burst that a fixed 1-worker pool **provably** misses
+//!    (exactly 6 SLO misses: frame `k` emits at `k-1` seconds against a
+//!    3.5 s SLO) is held at **zero** misses by the autoscaler, which
+//!    scales 1 → 4 workers while the burst queues and back down to 1
+//!    once it drains;
+//! 2. the scale-event log is exact — actions `[Up, Up, Up, Down, Down,
+//!    Down]` at `t = [0, 1, 2, 4, 6, 8]` s with pool sizes
+//!    `[2, 3, 4, 3, 2, 1]` — and consecutive same-direction events
+//!    respect their cooldowns; a second tick at the same instant adds
+//!    nothing;
+//! 3. admission shedding at the capacity cap rejects only the
+//!    lowest-weight session, counts the distinct `dropped_shed` (never
+//!    `dropped` / `dropped_quota`), and the aggregate equals the exact
+//!    per-session sum; shedding lifts once calm;
+//! 4. a lone serving worker is never drained ([`ScaleError::AtFloor`]).
+//!
+//! Synchronization discipline: time moves only on `advance`; worker
+//! progress is gated by a counting semaphore (one frame per released
+//! permit), and every wait is a bounded real-time spin on server
+//! counters — no `thread::sleep`-based timing anywhere.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+use optovit::coordinator::autoscale::{AutoScaler, ScaleAction, ScalePolicy};
+use optovit::coordinator::batcher::{BatchPolicy, BucketRouter, PushOutcome};
+use optovit::coordinator::clock::{Clock, ManualClock};
+use optovit::coordinator::engine::{EngineConfig, FrameWorker};
+use optovit::coordinator::loadgen::{run_scenario, Scenario, StormConfig};
+use optovit::coordinator::pipeline::FrameResult;
+use optovit::coordinator::server::{ScaleError, Server, SessionOptions};
+use optovit::coordinator::StageMetrics;
+use optovit::sensor::{Frame, VideoSource};
+
+const PATCH_PX: usize = 16;
+
+/// Counting semaphore shared by every worker: one frame completes per
+/// released permit, so the test decides exactly how many frames emit at
+/// each manual-clock instant (which worker consumes a permit is
+/// irrelevant — latency depends only on release timing).
+#[derive(Clone)]
+struct Permits(Arc<(Mutex<u64>, Condvar)>);
+
+impl Permits {
+    fn new() -> Self {
+        Permits(Arc::new((Mutex::new(0), Condvar::new())))
+    }
+
+    fn release(&self, n: u64) {
+        let (count, wake) = &*self.0;
+        *count.lock().unwrap() += n;
+        wake.notify_all();
+    }
+
+    fn acquire(&self) {
+        let (count, wake) = &*self.0;
+        let mut held = count.lock().unwrap();
+        while *held == 0 {
+            held = wake.wait(held).unwrap();
+        }
+        *held -= 1;
+    }
+}
+
+/// Deterministic worker gated on [`Permits`]: echoes the ground-truth
+/// mask (the qos-gate idiom) after acquiring one permit per frame.
+struct GatedEchoWorker {
+    permits: Permits,
+    router: BucketRouter,
+    metrics: StageMetrics,
+}
+
+impl GatedEchoWorker {
+    fn new(permits: Permits) -> Self {
+        GatedEchoWorker {
+            permits,
+            router: BucketRouter::even(36, 4),
+            metrics: StageMetrics::new(),
+        }
+    }
+}
+
+impl FrameWorker for GatedEchoWorker {
+    fn process(&mut self, frame: &Frame) -> Result<FrameResult> {
+        self.permits.acquire();
+        let mask = frame.gt_mask(PATCH_PX);
+        let kept = mask.kept().max(1);
+        let bucket = self.router.route(kept);
+        self.metrics.record_stage("total", 1e-4);
+        self.metrics.record_frame(1e-5, kept);
+        self.metrics.record_batch_size(1);
+        let mut logits = vec![0.0f32; 10];
+        logits[frame.label % 10] = 1.0;
+        Ok(FrameResult {
+            frame_index: frame.index,
+            logits,
+            mask,
+            bucket,
+            modeled_energy_j: 1e-5,
+            latency_s: 1e-4,
+            modeled_queueing_s: 0.0,
+            batch_size: 1,
+        })
+    }
+
+    fn take_metrics(&mut self) -> StageMetrics {
+        std::mem::take(&mut self.metrics)
+    }
+}
+
+/// An elastic 1-worker server on a manual clock: batch size 1 (one
+/// permit per frame), worker channels deep enough that every burst
+/// frame places immediately (the queue-depth gauge sees the whole
+/// backlog).
+fn storm_server(max_workers: usize, permits: &Permits) -> (Server, ManualClock) {
+    let (clock, manual) = Clock::manual();
+    let mut cfg = EngineConfig::new(1, PATCH_PX, 96);
+    cfg.clock = clock;
+    cfg.batch = BatchPolicy::batched(1, Duration::from_secs(3600));
+    cfg.queue_depth = 16;
+    cfg.max_workers = max_workers;
+    cfg.warmup_timeout_s = 24.0 * 3600.0;
+    cfg.stall_timeout_s = 24.0 * 3600.0;
+    let permits = permits.clone();
+    let server =
+        Server::start(move |_wid| Ok(GatedEchoWorker::new(permits.clone())), cfg).expect("server");
+    server.wait_ready(Duration::from_secs(3600)).expect("workers warm");
+    (server, manual)
+}
+
+/// Identical frames with distinct indices (content never affects
+/// grouping or routing determinism).
+fn frames(n: u64) -> Vec<Frame> {
+    let template = VideoSource::new(96, 2, 42).next_frame();
+    (0..n)
+        .map(|i| {
+            let mut f = template.clone();
+            f.index = i;
+            f
+        })
+        .collect()
+}
+
+/// Bounded real-time spin on a server-observable condition; manual time
+/// never moves here, so the 30 s wall bailout only trips on a hang.
+fn wait_for(what: &str, mut cond: impl FnMut() -> bool) {
+    let t0 = std::time::Instant::now();
+    while !cond() {
+        assert!(t0.elapsed() < Duration::from_secs(30), "timed out waiting for {what}");
+        std::thread::yield_now();
+    }
+}
+
+fn emitted(server: &Server) -> u64 {
+    server.stats().expect("stats").aggregate.frames
+}
+
+fn queue_depth(server: &Server) -> u64 {
+    server
+        .stats()
+        .expect("stats")
+        .worker_health
+        .iter()
+        .map(|w| w.queue_depth)
+        .sum()
+}
+
+/// The control arm: a fixed 1-worker pool served the same 10-frame
+/// burst at one frame per second — frame `k` emits at `k-1` s, so a
+/// 3.5 s SLO misses on exactly the last six frames. This is the number
+/// the autoscaled arm must beat to zero.
+#[test]
+fn fixed_pool_provably_misses_the_burst() {
+    let permits = Permits::new();
+    let (server, manual) = storm_server(0, &permits);
+    let mut session = server
+        .session(
+            SessionOptions::named("slo-cam")
+                .with_queue_depth(16)
+                .with_window(16)
+                .with_slo(Duration::from_millis(3500)),
+        )
+        .expect("session");
+
+    for f in frames(10) {
+        session.submit(f).expect("submit");
+    }
+    for k in 1..=10u64 {
+        permits.release(1);
+        wait_for("burst frame emission", || emitted(&server) == k);
+        manual.advance(Duration::from_secs(1));
+    }
+
+    session.close();
+    let report = session.finish().expect("drain");
+    assert_eq!(report.frames, 10);
+    assert_eq!(
+        report.slo_miss, 6,
+        "latencies 0..=9 s against a 3.5 s SLO: frames 5..=10 miss, exactly six"
+    );
+    assert_eq!(report.dropped, 0);
+    assert_eq!(report.dropped_quota, 0);
+    assert_eq!(report.dropped_shed, 0);
+    let (agg, _metrics) = server.shutdown().expect("shutdown");
+    assert_eq!(agg.slo_miss, 6);
+}
+
+/// The autoscaled arm: the same burst, but an [`AutoScaler`] ticked once
+/// per simulated second grows the pool 1 → 4 while the backlog queues
+/// (draining it in waves of 1, 2, 3, 4 — worst latency 3 s, zero
+/// misses) and retires workers back to 1 once calm, with the exact
+/// event log and cooldown spacing asserted.
+#[test]
+fn autoscaler_holds_the_slo_through_the_burst_and_scales_back_down() {
+    let permits = Permits::new();
+    let (server, manual) = storm_server(4, &permits);
+    let policy = ScalePolicy {
+        min_workers: 1,
+        max_workers: 4,
+        up_queue_depth: 1.25,
+        up_miss_rate: 0.05,
+        down_queue_depth: 0.25,
+        up_cooldown: Duration::from_secs(1),
+        down_cooldown: Duration::from_secs(2),
+        shed_after: 1000,
+    };
+    let clock = server.clock();
+    let mut scaler = AutoScaler::new(policy, clock);
+    let mut session = server
+        .session(
+            SessionOptions::named("slo-cam")
+                .with_queue_depth(16)
+                .with_window(16)
+                .with_slo(Duration::from_millis(3500)),
+        )
+        .expect("session");
+
+    for f in frames(10) {
+        session.submit(f).expect("submit");
+    }
+    wait_for("burst placement", || queue_depth(&server) == 10);
+
+    // Drain waves sized to the live pool: 1 @ t0, 2 @ t1, 3 @ t2,
+    // 4 @ t3 — the scaler grows the pool one worker per tick while the
+    // backlog holds the queue-depth signal above the up band.
+    let mut left = 10u64;
+    let mut expect_live = 1usize;
+    for tick in 0..4u64 {
+        let wave = (tick + 1).min(left);
+        permits.release(wave);
+        left -= wave;
+        wait_for("wave emission", || emitted(&server) == 10 - left);
+        wait_for("wave completion drains the gauge", || queue_depth(&server) == left);
+        let action = scaler.tick(&server).expect("tick");
+        if tick < 3 {
+            assert_eq!(action, Some(ScaleAction::Up), "tick {tick} must scale up");
+            expect_live += 1;
+            wait_for("spawned worker goes live", || {
+                server.stats().expect("stats").live_workers == expect_live
+            });
+        } else {
+            assert_eq!(action, None, "tick 3: calm, but still inside down_cooldown — hold");
+            // Same-instant double tick: nothing changes, nothing fires.
+            assert_eq!(scaler.tick(&server).expect("re-tick"), None);
+        }
+        manual.advance(Duration::from_secs(1));
+    }
+    assert_eq!(left, 0, "waves 1+2+3+4 drain the whole burst");
+
+    // Calm ticks: scale-down every down_cooldown (2 s), never below 1.
+    for tick in 4..10u64 {
+        let action = scaler.tick(&server).expect("tick");
+        if tick % 2 == 0 && expect_live > 1 {
+            assert_eq!(action, Some(ScaleAction::Down), "tick {tick} must scale down");
+            expect_live -= 1;
+            wait_for("retired worker leaves the pool", || {
+                server.stats().expect("stats").live_workers == expect_live
+            });
+        } else {
+            assert_eq!(action, None, "tick {tick} must hold (cooldown or at floor)");
+        }
+        manual.advance(Duration::from_secs(1));
+    }
+    assert_eq!(expect_live, 1);
+
+    // The lone survivor is never drained — by the scaler or directly.
+    assert_eq!(scaler.tick(&server).expect("tick"), None);
+    assert!(matches!(server.scale_down(), Err(ScaleError::AtFloor)));
+
+    // Exact event log: actions, pool sizes, timestamps, cooldown gaps.
+    let events = server.scale_events();
+    let actions: Vec<&ScaleAction> = events.iter().map(|e| &e.action).collect();
+    assert_eq!(
+        actions,
+        vec![
+            &ScaleAction::Up,
+            &ScaleAction::Up,
+            &ScaleAction::Up,
+            &ScaleAction::Down,
+            &ScaleAction::Down,
+            &ScaleAction::Down,
+        ]
+    );
+    let workers: Vec<usize> = events.iter().map(|e| e.workers).collect();
+    assert_eq!(workers, vec![2, 3, 4, 3, 2, 1]);
+    let expected_at = [0.0, 1.0, 2.0, 4.0, 6.0, 8.0];
+    for (e, want) in events.iter().zip(expected_at) {
+        assert!(
+            (e.at_s - want).abs() < 1e-9,
+            "event at {} s, expected {} s",
+            e.at_s,
+            want
+        );
+    }
+    for gap in events[..3].windows(2) {
+        assert!(gap[1].at_s - gap[0].at_s >= 1.0 - 1e-9, "up_cooldown respected");
+    }
+    for gap in events[3..].windows(2) {
+        assert!(gap[1].at_s - gap[0].at_s >= 2.0 - 1e-9, "down_cooldown respected");
+    }
+
+    session.close();
+    let report = session.finish().expect("drain");
+    assert_eq!(report.frames, 10);
+    assert_eq!(
+        report.slo_miss, 0,
+        "the elastic pool drains the burst within 3 s — zero misses against 3.5 s"
+    );
+    assert_eq!(report.dropped, 0);
+    assert_eq!(report.dropped_quota, 0);
+    assert_eq!(report.dropped_shed, 0);
+
+    // Retired workers keep their final rows: totals stay monotone.
+    let stats = server.stats().expect("stats");
+    assert_eq!(stats.live_workers, 1);
+    let retired = stats.worker_health.len() - stats.live_workers;
+    assert_eq!(retired, 3, "three retired workers keep their final rows");
+
+    let (agg, _metrics) = server.shutdown().expect("shutdown");
+    assert_eq!(agg.slo_miss, 0);
+    assert_eq!(agg.frames, 10);
+    assert_eq!(agg.workers, 4, "every worker that ever served is accounted");
+}
+
+/// Shedding at the capacity cap: overloaded ticks with nowhere to grow
+/// arm admission shedding against the lowest weight class only. Shed
+/// rejections land in the distinct `dropped_shed` — never `dropped` or
+/// `dropped_quota` — the aggregate equals the per-session sum exactly,
+/// and shedding lifts once the backlog drains.
+#[test]
+fn capped_pool_sheds_lowest_weight_first_and_counts_dropped_shed() {
+    let permits = Permits::new();
+    let (server, _manual) = storm_server(1, &permits);
+    let policy = ScalePolicy {
+        min_workers: 1,
+        max_workers: 1,
+        up_queue_depth: 1.0,
+        shed_after: 2,
+        ..ScalePolicy::default()
+    };
+    let mut scaler = AutoScaler::new(policy, server.clock());
+    let mut lo = server
+        .session(SessionOptions::named("lo").with_weight(1).with_queue_depth(16).with_window(16))
+        .expect("lo");
+    let mut hi = server
+        .session(SessionOptions::named("hi").with_weight(2).with_queue_depth(16).with_window(16))
+        .expect("hi");
+
+    // Overload from the high-weight tenant: four queued frames on a
+    // 1-worker pool that cannot grow.
+    let mut hi_frames = frames(8).into_iter();
+    for _ in 0..4 {
+        assert_eq!(hi.try_submit(hi_frames.next().unwrap()), PushOutcome::Queued);
+    }
+    wait_for("backlog placement", || queue_depth(&server) == 4);
+
+    assert_eq!(scaler.tick(&server).expect("tick 1"), None, "one overloaded tick is not enough");
+    assert_eq!(
+        scaler.tick(&server).expect("tick 2"),
+        Some(ScaleAction::ShedOn { below_weight: 2 }),
+        "two consecutive capped ticks arm shedding below the second weight class"
+    );
+
+    // The low-weight tenant is turned away — distinctly.
+    let mut lo_frames = frames(4).into_iter();
+    for _ in 0..3 {
+        assert_eq!(lo.try_submit(lo_frames.next().unwrap()), PushOutcome::Shed);
+    }
+    {
+        let report = lo.report();
+        assert_eq!(report.dropped_shed, 3, "every shed rejection counts dropped_shed");
+        assert_eq!(report.dropped, 0, "shedding is not backpressure");
+        assert_eq!(report.dropped_quota, 0, "shedding is not a quota");
+    }
+    // The high-weight tenant still admits.
+    assert_eq!(hi.try_submit(hi_frames.next().unwrap()), PushOutcome::Queued);
+
+    // Drain the backlog; a calm tick lifts shedding before anything else.
+    permits.release(5);
+    wait_for("backlog drains", || emitted(&server) == 5 && queue_depth(&server) == 0);
+    assert_eq!(scaler.tick(&server).expect("tick 3"), Some(ScaleAction::ShedOff));
+    assert_eq!(lo.try_submit(lo_frames.next().unwrap()), PushOutcome::Queued, "re-admitted");
+    permits.release(1);
+    wait_for("lo frame emits", || emitted(&server) == 6);
+
+    // Never a scale event on this pool — only the shed pair — and the
+    // lone worker is never drained.
+    let actions: Vec<ScaleAction> =
+        server.scale_events().into_iter().map(|e| e.action).collect();
+    assert_eq!(actions, vec![ScaleAction::ShedOn { below_weight: 2 }, ScaleAction::ShedOff]);
+    assert!(matches!(server.scale_down(), Err(ScaleError::AtFloor)));
+
+    lo.close();
+    hi.close();
+    let lo_report = lo.finish().expect("lo drain");
+    let hi_report = hi.finish().expect("hi drain");
+    assert_eq!(lo_report.frames, 1);
+    assert_eq!(lo_report.dropped_shed, 3);
+    assert_eq!(hi_report.frames, 5);
+    assert_eq!(hi_report.dropped_shed, 0);
+    let (agg, _metrics) = server.shutdown().expect("shutdown");
+    assert_eq!(
+        agg.dropped_shed,
+        lo_report.dropped_shed + hi_report.dropped_shed,
+        "aggregate dropped_shed is exactly the per-session sum"
+    );
+    assert_eq!(agg.dropped, 0);
+    assert_eq!(agg.dropped_quota, 0);
+}
+
+/// End-to-end storm harness smoke: a 10-session 10x burst scenario under
+/// the loadgen driver completes every arrival (deep queues, no
+/// shedding), scales up during the burst, and samples the offered-load
+/// plateau — the `serve_storm` bench path exercised as a gate.
+#[test]
+fn loadgen_burst_scenario_scales_up_and_completes_every_arrival() {
+    let mut cfg = EngineConfig::new(2, PATCH_PX, 96);
+    cfg.batch = BatchPolicy::batched(8, Duration::from_millis(1));
+    cfg.queue_depth = 16;
+    cfg.max_workers = 6;
+    cfg.warmup_timeout_s = 24.0 * 3600.0;
+    cfg.stall_timeout_s = 24.0 * 3600.0;
+    let storm = StormConfig {
+        tick: Duration::from_secs(1),
+        sample_every: 2,
+        service: Duration::from_millis(500),
+        slo: Some(Duration::from_secs(2)),
+        autoscale: Some(ScalePolicy {
+            min_workers: 2,
+            max_workers: 6,
+            up_cooldown: Duration::from_secs(1),
+            shed_after: 1000,
+            ..ScalePolicy::default()
+        }),
+    };
+    // 4 fps base, 10x for 5 s: 60 base + 200 burst arrivals.
+    let scenario = Scenario::burst("burst10x", 10, 20.0, 4.0, 10.0, 5.0, 10.0);
+    assert_eq!(scenario.arrivals().len(), 260);
+
+    let outcome = run_scenario(cfg, &storm, &scenario).expect("storm sweep");
+    assert_eq!(outcome.frames, 260, "deep queues + elastic pool: every arrival completes");
+    assert_eq!(outcome.dropped, 0);
+    assert_eq!(outcome.dropped_quota, 0);
+    assert_eq!(outcome.dropped_shed, 0, "shed_after 1000 keeps shedding out of this sweep");
+    assert!(
+        outcome.scale_events.iter().any(|e| e.action == ScaleAction::Up),
+        "the 10x burst must trigger at least one scale-up"
+    );
+    assert!(!outcome.samples.is_empty());
+    let peak = outcome.samples.iter().map(|s| s.offered_fps).fold(0.0, f64::max);
+    assert!((peak - 40.0).abs() < 1e-9, "the sampled offered curve shows the 10x plateau");
+    assert!(
+        outcome.live_workers >= 2 && outcome.live_workers <= 6,
+        "the pool ends within its policy bounds"
+    );
+}
