@@ -107,8 +107,12 @@ fn main() -> Result<()> {
     let kind = match backend_arg.as_str() {
         "pjrt" => BackendKind::Pjrt,
         "host" => BackendKind::Host,
+        // "auto": real inference only when the pjrt substrate is compiled
+        // in AND artifacts exist; otherwise fall back to host reference
+        // compute (an explicit `--backend pjrt` still errors clearly at
+        // factory-create time when the feature is off).
         _ => {
-            if have_artifacts {
+            if cfg!(feature = "pjrt") && have_artifacts {
                 BackendKind::Pjrt
             } else {
                 BackendKind::Host

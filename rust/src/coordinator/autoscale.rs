@@ -284,6 +284,7 @@ fn next_shed_threshold(session_weights: &[u32], current: u32) -> Option<u32> {
     if weights.len() < 2 {
         return None;
     }
+    // lint-allow(panic): length >= 2 checked above.
     weights[1..].iter().copied().find(|&w| w > current)
 }
 

@@ -196,6 +196,9 @@ impl<T> MicroBatcher<T> {
             .lanes
             .iter_mut()
             .find(|l| l.bucket == bucket)
+            // lint-allow(panic): `bucket` comes from `route()` over this
+            // batcher's own ladder, so the lane always exists; a miss is a
+            // routing-table corruption worth crashing on.
             .expect("routed bucket must be in the batcher's ladder");
         lane.items.push(item);
         lane.since.get_or_insert(now);
@@ -220,6 +223,8 @@ impl<T> MicroBatcher<T> {
                     .lane_deadline(l)
                     .is_some_and(|d| now >= d)
         })?;
+        // lint-allow(panic): `idx` was produced by `position()` over
+        // `self.lanes` on the line above.
         Some(Self::take(&mut self.lanes[idx]))
     }
 
@@ -245,6 +250,8 @@ impl<T> MicroBatcher<T> {
             .filter(|(_, l)| l.since.is_some())
             .min_by_key(|(_, l)| l.since)
             .map(|(i, _)| i)?;
+        // lint-allow(panic): `idx` was produced by `enumerate()` over
+        // `self.lanes` on the lines above.
         Some(Self::take(&mut self.lanes[idx]))
     }
 
@@ -328,20 +335,26 @@ impl FrameQueue {
 /// [`PushOutcome::Full`] — the only way the system drops a frame —
 /// increments `rejected`; a [`PushOutcome::Closed`] consumer ends the loop
 /// without counting, because a receiver that hung up is shutdown, not
-/// backpressure.
+/// backpressure. All waiting goes through `clock` so a manual clock can
+/// drive the loop deterministically.
 pub fn sensor_loop(
     queue: FrameQueue,
     size: usize,
     num_objects: usize,
     seed: u64,
+    clock: &super::clock::Clock,
     go: &AtomicBool,
     stop: &AtomicBool,
     rejected: &AtomicU64,
 ) {
     let mut src = VideoSource::new(size, num_objects, seed);
+    // relaxed-ok: `stop` is a standalone control latch polled in a loop —
+    // no payload is published under it, so ordering only affects how soon
+    // the flip is observed, never correctness.
     while !stop.load(Ordering::Relaxed) {
+        // relaxed-ok: `go` is the same kind of standalone control latch.
         if !go.load(Ordering::Relaxed) {
-            std::thread::sleep(Duration::from_micros(500));
+            clock.sleep(Duration::from_micros(500));
             continue;
         }
         let f = src.next_frame();
@@ -351,12 +364,16 @@ pub fn sensor_loop(
             // Quota/Shed cannot occur here; treat them like Full for
             // robustness.
             PushOutcome::Full | PushOutcome::Quota | PushOutcome::Shed => {
+                // relaxed-ok: same control latch as the loop condition.
                 if stop.load(Ordering::Relaxed) {
                     break;
                 }
+                // relaxed-ok: monotonic statistics counter; the reader
+                // joins the producer thread before the final load, and the
+                // join is the happens-before edge.
                 rejected.fetch_add(1, Ordering::Relaxed);
                 // Yield briefly to let the consumer drain.
-                std::thread::sleep(Duration::from_micros(200));
+                clock.sleep(Duration::from_micros(200));
             }
             PushOutcome::Closed => break,
         }
@@ -535,7 +552,8 @@ mod tests {
         let rejected = AtomicU64::new(0);
         // Runs on this thread: a closed queue must break the loop on the
         // first push, long before any stop signal.
-        sensor_loop(q, 32, 1, 7, &go, &stop, &rejected);
+        let clock = super::super::clock::Clock::system();
+        sensor_loop(q, 32, 1, 7, &clock, &go, &stop, &rejected);
         assert_eq!(
             rejected.load(Ordering::Relaxed),
             0,

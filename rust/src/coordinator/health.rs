@@ -1,0 +1,232 @@
+//! Lock-free per-worker health publication.
+//!
+//! [`HealthSlot`] is the cell a worker thread publishes its backend's
+//! degradation signal into on every wake; the dispatcher reads it to
+//! route critical frames away from at-risk workers and to schedule
+//! recalibration windows, and [`super::server::Server::stats`] snapshots
+//! it for reporting. It is deliberately all-atomics (no lock): the
+//! dispatcher reads it inside the placement loop, and a worker mid-batch
+//! must never block a routing decision.
+//!
+//! # Publication protocol (model-checked)
+//!
+//! [`HealthSlot::publish`] writes the health payload first (Relaxed),
+//! then the `at_risk` routing flag with **Release**, then the `updates`
+//! tick with **Release**. Readers take the flag with **Acquire**
+//! ([`HealthSlot::at_risk`], [`HealthSlot::snapshot`]) before any payload
+//! read, so a reader that observes `at_risk == true` is guaranteed to
+//! also observe the degraded health value that caused it — the standard
+//! message-passing pattern. Same for `updates`: a reader that observes
+//! tick `n` (Acquire) sees everything publish `n` wrote, which is what
+//! lets tests synchronize on "the worker has republished" without
+//! sleeping.
+//!
+//! These ordering choices are not argued in prose only: the loom model in
+//! `rust/tests/loom_models.rs` (run under `RUSTFLAGS="--cfg loom"`)
+//! exhaustively explores the worker/dispatcher interleavings against this
+//! exact type via the [`crate::util::sync`] seam and fails if any
+//! weakening (e.g. Relaxed on the flag) lets a reader route on a flag
+//! whose payload is not yet visible.
+//!
+//! The remaining Relaxed fields are single-writer statistics counters and
+//! the mode latch, whose cross-thread edges ride the activity
+//! [`super::clock::Event`] and pool mutex — each carries its own
+//! `relaxed-ok` justification below (enforced by `invariant-lint`).
+
+use super::stats::{WorkerHealthStats, WorkerMode};
+use crate::util::sync::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+
+/// Per-worker hardware-health cell. `health` and `recal_energy` hold
+/// `f64` bit patterns in `AtomicU64`s.
+pub struct HealthSlot {
+    /// Published health score in `[0, 1]` (`f64` bits; starts at 1.0 and
+    /// stays there for backends without a fault model). Payload of the
+    /// publication protocol — ordered by the `at_risk`/`updates`
+    /// Release stores, never read for routing on its own.
+    health: AtomicU64,
+    /// [`WorkerMode`] discriminant — the recalibration state machine
+    /// (`Serving → Draining → Recalibrating → Serving`).
+    mode: AtomicU8,
+    /// Completed recalibration cycles (drain → pay → rejoin).
+    recals: AtomicU64,
+    /// Last published accuracy-at-risk flag. The Release/Acquire flag of
+    /// the publication protocol.
+    at_risk: AtomicBool,
+    /// Frames this worker completed (health accounting mirror).
+    frames: AtomicU64,
+    /// Frames completed while the backend reported accuracy-at-risk.
+    at_risk_frames: AtomicU64,
+    /// Modeled recalibration energy paid so far (`f64` bits, joules).
+    recal_energy: AtomicU64,
+    /// Publish ticks — lets tests synchronize on "the worker has
+    /// (re)published its health" without sleeping.
+    updates: AtomicU64,
+}
+
+impl HealthSlot {
+    pub fn new() -> Self {
+        HealthSlot {
+            health: AtomicU64::new(1.0f64.to_bits()),
+            mode: AtomicU8::new(WorkerMode::Serving as u8),
+            recals: AtomicU64::new(0),
+            at_risk: AtomicBool::new(false),
+            frames: AtomicU64::new(0),
+            at_risk_frames: AtomicU64::new(0),
+            recal_energy: AtomicU64::new(0.0f64.to_bits()),
+            updates: AtomicU64::new(0),
+        }
+    }
+
+    /// Publish a fresh `(health, at_risk)` pair and advance the `updates`
+    /// tick. Returns whether the health score *changed* (the caller
+    /// notifies the activity event on change so the dispatcher re-sweeps
+    /// promptly).
+    ///
+    /// Ordering: payload first (Relaxed), then flag and tick with
+    /// Release — see the module docs and the loom model.
+    pub fn publish(&self, health: f64, at_risk: bool) -> bool {
+        let bits = health.to_bits();
+        // relaxed-ok: payload store; made visible by the Release stores
+        // on `at_risk` and `updates` below (loom-checked).
+        let old = self.health.swap(bits, Ordering::Relaxed);
+        self.at_risk.store(at_risk, Ordering::Release);
+        self.updates.fetch_add(1, Ordering::Release);
+        old != bits
+    }
+
+    /// Advance the `updates` tick without touching the published pair
+    /// (workers whose backend has no health signal still prove liveness).
+    pub fn tick(&self) {
+        self.updates.fetch_add(1, Ordering::Release);
+    }
+
+    /// The accuracy-at-risk routing flag (Acquire: a `true` guarantees
+    /// the degraded payload behind it is visible).
+    pub fn at_risk(&self) -> bool {
+        self.at_risk.load(Ordering::Acquire)
+    }
+
+    pub fn health_value(&self) -> f64 {
+        // relaxed-ok: payload load; coherent with the flag when sequenced
+        // after an Acquire `at_risk`/`updates` read, and a plain
+        // monotonic gauge read otherwise.
+        f64::from_bits(self.health.load(Ordering::Relaxed))
+    }
+
+    pub fn mode(&self) -> WorkerMode {
+        // relaxed-ok: mode transitions hand off through the activity
+        // event's lock (dispatcher flags Draining, worker drives the
+        // rest), so the latch itself needs no ordering.
+        match self.mode.load(Ordering::Relaxed) {
+            1 => WorkerMode::Draining,
+            2 => WorkerMode::Recalibrating,
+            3 => WorkerMode::Retiring,
+            4 => WorkerMode::Retired,
+            _ => WorkerMode::Serving,
+        }
+    }
+
+    pub fn set_mode(&self, mode: WorkerMode) {
+        // relaxed-ok: see `mode` — the activity event notification that
+        // follows every transition carries the edge.
+        self.mode.store(mode as u8, Ordering::Relaxed);
+    }
+
+    /// Re-arm the slot for a fresh worker spawned into it after the
+    /// previous occupant retired (the retired occupant's final row lives
+    /// in `ServerCore::retired_health`, so nothing is lost). `updates`
+    /// keeps counting across occupants — tests synchronize on it being
+    /// monotone.
+    pub fn reset(&self) {
+        // relaxed-ok(fn): the spawner holds the pool mutex while
+        // re-arming, and the new worker thread is created after — thread
+        // spawn is the happens-before edge to the only other writer.
+        self.health.store(1.0f64.to_bits(), Ordering::Relaxed);
+        self.mode.store(WorkerMode::Serving as u8, Ordering::Relaxed);
+        self.recals.store(0, Ordering::Relaxed);
+        self.at_risk.store(false, Ordering::Relaxed);
+        self.frames.store(0, Ordering::Relaxed);
+        self.at_risk_frames.store(0, Ordering::Relaxed);
+        self.recal_energy.store(0.0f64.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Count `n` completed frames against this worker, `at_risk` ones
+    /// separately.
+    pub fn record_frames(&self, n: u64, at_risk: bool) {
+        // relaxed-ok(fn): single-writer statistics counters (the worker
+        // thread); readers are stats snapshots that tolerate a stale
+        // count, and the terminal read follows the worker join.
+        self.frames.fetch_add(n, Ordering::Relaxed);
+        if at_risk {
+            self.at_risk_frames.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// One completed recalibration cycle (drain → pay → rejoin).
+    pub fn complete_recal(&self) {
+        // relaxed-ok: single-writer statistics counter (worker thread).
+        self.recals.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn recals(&self) -> u64 {
+        // relaxed-ok: statistics snapshot; staleness is acceptable.
+        self.recals.load(Ordering::Relaxed)
+    }
+
+    pub fn at_risk_frames(&self) -> u64 {
+        // relaxed-ok: statistics snapshot; staleness is acceptable.
+        self.at_risk_frames.load(Ordering::Relaxed)
+    }
+
+    pub fn recal_energy_j(&self) -> f64 {
+        // relaxed-ok: statistics snapshot; staleness is acceptable.
+        f64::from_bits(self.recal_energy.load(Ordering::Relaxed))
+    }
+
+    /// CAS-add onto the `f64`-bits energy cell (writers: worker thread
+    /// only, but stats snapshots race the add, hence the loop).
+    pub fn add_recal_energy(&self, joules: f64) {
+        // relaxed-ok(fn): single-writer accumulate; the CAS loop is for
+        // atomicity of read-modify-write against snapshot readers, not
+        // for ordering — no payload rides on this cell.
+        let mut cur = self.recal_energy.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + joules).to_bits();
+            match self.recal_energy.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Reporting snapshot. The `at_risk` Acquire read comes first so the
+    /// payload reads behind it are coherent with the flag.
+    pub fn snapshot(&self, worker: usize, queue_depth: u64) -> WorkerHealthStats {
+        let at_risk = self.at_risk();
+        // Acquire: observing tick `n` synchronizes with publish `n`, so a
+        // test that waits on `updates` sees everything that publish wrote.
+        let updates = self.updates.load(Ordering::Acquire);
+        WorkerHealthStats {
+            worker,
+            health: self.health_value(),
+            mode: self.mode(),
+            at_risk,
+            recals: self.recals(),
+            recal_energy_j: self.recal_energy_j(),
+            at_risk_frames: self.at_risk_frames(),
+            updates,
+            queue_depth,
+        }
+    }
+}
+
+impl Default for HealthSlot {
+    fn default() -> Self {
+        Self::new()
+    }
+}

@@ -334,6 +334,10 @@ fn drain(sessions: &mut [Session]) -> u64 {
 /// driver waits them out in real time — bounded by a 30 s wall bailout
 /// that only a hung server hits).
 fn settle(sessions: &mut [Session]) -> u64 {
+    // lint-allow(clock): the driver holds the *manual* clock frozen while
+    // real OS worker threads finish in wall time — waiting them out (and
+    // the hung-server bailout) must read real time, or it would spin
+    // forever on a clock nobody advances.
     let t0 = std::time::Instant::now();
     let mut pulled = 0u64;
     let mut idle = 0u32;
@@ -344,6 +348,7 @@ fn settle(sessions: &mut [Session]) -> u64 {
             idle = 0;
         } else {
             idle += 1;
+            // lint-allow(clock): same wall-time wait as `t0` above.
             std::thread::sleep(Duration::from_micros(500));
         }
     }

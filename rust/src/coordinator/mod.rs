@@ -41,9 +41,13 @@
 //! ([`engine::EngineConfig::clock`]; [`clock::Clock::system`] in
 //! production, a step-controlled [`clock::ManualClock`] in tests), and
 //! every wait in the session server is a clock-aware [`clock::Event`] —
-//! no `thread::sleep` polling anywhere in [`server`] (the in-thread
-//! `serve` path's synthetic-sensor helper keeps its two pacing sleeps —
-//! it has no server to be notified by). On top of that seam each session
+//! no `thread::sleep` polling anywhere in the serving stack (the
+//! in-thread `serve` path's synthetic-sensor helper paces through
+//! `Clock::sleep` — it has no server to be notified by). The seam is
+//! machine-enforced: `cargo run -p invariant-lint` rejects any raw
+//! `Instant::now()` / `thread::sleep` outside [`clock`] (see the
+//! *Machine-checked invariants* section below). On top of that seam each
+//! session
 //! can declare QoS ([`server::SessionOptions`]): a latency **SLO**
 //! (frames carry `accepted_at + slo` deadlines; the dispatcher's
 //! earliest-deadline-first pre-pass admits the most imminent peeked
@@ -157,12 +161,47 @@
 //! clock (the `rust/tests/storm.rs` gate and the `serve_storm` bench's
 //! `BENCH_storm.json` offered-vs-achieved curves).
 //!
+//! # Machine-checked invariants
+//!
+//! The serving stack's discipline is enforced by tooling, not review
+//! convention — `rust/tools/invariant-lint` (a required CI step, `cargo
+//! run -p invariant-lint`) scans this tree and fails the build on:
+//!
+//! 1. **Clock seam** — no raw `Instant::now()` / `SystemTime::now()` /
+//!    `thread::sleep` outside [`clock`] and `#[cfg(test)]` code. Time
+//!    flows through [`clock::Clock`] or it does not flow at all (a
+//!    deliberate wall-clock read carries a `// lint-allow(clock): <reason>`
+//!    justification, e.g. the benchmark timer).
+//! 2. **No-panic serving path** — `unwrap` / `expect` / `panic!` /
+//!    slice-indexing in the five hot-path files ([`server`],
+//!    [`pipeline`], [`engine`], [`batcher`], [`autoscale`]) is a build
+//!    failure unless tagged `// lint-allow(panic): <why it cannot
+//!    fire>`; fallible paths return [`server::ServeError`] instead.
+//! 3. **Atomics-ordering audit** — every `Ordering::Relaxed` carries a
+//!    `// relaxed-ok: <why no ordering is needed>` or is upgraded to
+//!    Acquire/Release. The one protocol that genuinely publishes data
+//!    across threads without a lock — [`health::HealthSlot`] — uses
+//!    Release stores with Acquire readers, and its interleavings are
+//!    exhaustively model-checked by loom (`rust/tests/loom_models.rs`,
+//!    run under `RUSTFLAGS="--cfg loom"`, its own CI lane) through the
+//!    [`crate::util::sync`] seam; the generation-counted [`clock::Event`]
+//!    wait's no-missed-notify property is model-checked the same way.
+//! 4. **Accounting convention** — every `ServeReport` counter appears in
+//!    both the per-session accumulator and the aggregate-sum path, so a
+//!    new counter cannot silently miss one of the two books.
+//!
+//! The linter's rule semantics are themselves pinned by seeded fixture
+//! trees (`rust/tools/invariant-lint/tests/`): one of every violation
+//! must be found at its exact line, and the repaired twin must scan to
+//! zero.
+//!
 //! | module | role |
 //! |---|---|
 //! | [`clock`] | the time seam: pluggable `Clock` (system / manual) + clock-aware `Event` waits |
 //! | [`batcher`] | bucket router, per-bucket micro-batch lanes (deadline-aware), bounded frame queues |
 //! | [`pipeline`] | the frame pipeline (MGNet → mask → route → backbone), in-thread streaming `serve` |
 //! | [`server`] | the session-oriented server: multi-tenant sessions, fair admission (`WrrAdmission`), per-session QoS (SLO / `Quota`), health-aware placement + recal windows (`HealthWeightedWrr`), elastic pool (`scale_up` / `scale_down` / `set_shed`), streams/reports |
+//! | [`health`] | the lock-free per-worker `HealthSlot` publication cell (Release/Acquire protocol, loom-model-checked) |
 //! | [`autoscale`] | the SLO-driven elasticity controller: `ScalePolicy` hysteresis bands + cooldowns, `AutoScaler::tick`, the `ScaleEvent` log |
 //! | [`loadgen`] | open-loop load generation: scripted arrival `Scenario`s (step / burst / diurnal / Poisson), `PacedWorker`, the deterministic `run_scenario` storm driver |
 //! | [`engine`] | `FrameWorker`/`EngineConfig` (incl. the serving clock and `max_workers` pool capacity) + the one-session batch-job wrappers (`run`, `serve_sharded`) |
@@ -174,6 +213,7 @@ pub mod autoscale;
 pub mod batcher;
 pub mod clock;
 pub mod engine;
+pub mod health;
 pub mod loadgen;
 pub mod pipeline;
 pub mod server;
@@ -182,6 +222,7 @@ pub mod stats;
 pub use autoscale::{AutoScaler, ScaleAction, ScaleEvent, ScalePolicy};
 pub use batcher::{BatchPolicy, BucketRouter, FrameQueue, MicroBatcher, PushOutcome};
 pub use clock::{Clock, Event, ManualClock};
+pub use health::HealthSlot;
 pub use engine::{serve_sharded, serve_sharded_with, EngineConfig, FrameWorker, HealthPolicy};
 pub use loadgen::{
     run_scenario, Arrival, PacedWorker, Scenario, ScenarioKind, StormConfig, StormOutcome,

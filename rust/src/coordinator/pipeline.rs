@@ -115,6 +115,7 @@ impl PipelineConfig {
             "pipeline config has no buckets — at least the full patch count is required"
         );
         anyhow::ensure!(
+            // lint-allow(panic): `windows(2)` yields exactly-2 slices.
             self.buckets.windows(2).all(|w| w[0] < w[1]),
             "buckets {:?} must be strictly ascending",
             self.buckets
@@ -277,6 +278,12 @@ impl FrameScratch {
     /// afterwards `bucket_patches`/`pos_idx`/`valid` views hold the
     /// backbone inputs. `total_cmp` is used throughout so NaN scores sort
     /// deterministically instead of panicking.
+    // lint-allow(panic, fn): hot-path staging over buffers sized at
+    // construction for the largest bucket; `route()` never returns a
+    // bucket above `self.kept` capacity and kept indices come from the
+    // mask over the same frame, so every index is in bounds by
+    // construction. `.get()` here would hide real corruption and cost a
+    // branch per patch on the per-frame path.
     pub fn stage_route(&mut self, router: &BucketRouter, patch_dim: usize) -> usize {
         self.mask.kept_indices_into(&mut self.kept);
         if self.kept.is_empty() {
@@ -316,16 +323,21 @@ impl FrameScratch {
     }
 
     /// Staged `(bucket, patch_dim)` backbone input.
+    // lint-allow(panic, fn): `bucket` is the value `stage_route` returned
+    // for this scratch; the buffer was sized for the largest bucket at
+    // construction.
     pub fn bucket_patches(&self, bucket: usize, patch_dim: usize) -> &[f32] {
         &self.bucket_patches[..bucket * patch_dim]
     }
 
     /// Staged position indices for the bucket slots.
+    // lint-allow(panic, fn): same bounds invariant as `bucket_patches`.
     pub fn pos_idx(&self, bucket: usize) -> &[f32] {
         &self.pos_idx[..bucket]
     }
 
     /// Staged validity mask for the bucket slots.
+    // lint-allow(panic, fn): same bounds invariant as `bucket_patches`.
     pub fn valid(&self, bucket: usize) -> &[f32] {
         &self.valid[..bucket]
     }
@@ -559,6 +571,9 @@ impl<B: Backend> Pipeline<B> {
             .ok_or_else(|| anyhow!("bucket {bucket} has no artifact in the ladder"))?;
         let bdims = [bucket as i64, patch_dim as i64];
         let vdims = [bucket as i64];
+        // lint-allow(panic): staged-view slices use the bucket returned by
+        // `stage_route` for this very frame (see `FrameScratch` bounds
+        // invariant).
         let logits = self
             .backend
             .execute1(
@@ -599,6 +614,8 @@ impl<B: Backend> Pipeline<B> {
     /// bucket-major micro-batch. The returned [`RoutedFrame`] owns copies
     /// of its staged bucket tensors, so it can wait in a
     /// [`MicroBatcher`] lane while later frames overwrite the scratch.
+    // lint-allow(panic, fn): the only indexing is the staged-view slices
+    // under the `stage_route` bounds invariant (see `FrameScratch`).
     pub fn route_frame(&mut self, frame: &Frame) -> Result<RoutedFrame> {
         let t_start = self.clock.now();
         let patch_dim = self.vit_cfg.patch_dim();
@@ -627,6 +644,7 @@ impl<B: Backend> Pipeline<B> {
     /// evenly across the batch.
     pub fn complete_batch(&mut self, batch: Vec<RoutedFrame>) -> Result<Vec<FrameResult>> {
         ensure!(!batch.is_empty(), "complete_batch needs at least one routed frame");
+        // lint-allow(panic): non-emptiness ensured on the line above.
         let bucket = batch[0].bucket;
         ensure!(
             batch.iter().all(|rf| rf.bucket == bucket),
@@ -654,6 +672,8 @@ impl<B: Backend> Pipeline<B> {
                 ]
             })
             .collect();
+        // lint-allow(panic): full-range `&h[..]` reslice cannot be out of
+        // bounds.
         let inputs: Vec<&[TensorRef<'_>]> = holders.iter().map(|h| &h[..]).collect();
         let outs = self
             .backend
@@ -734,6 +754,8 @@ impl<B: Backend> Pipeline<B> {
             let mut group: Vec<RoutedFrame> = Vec::with_capacity(idxs.len());
             for &i in &idxs {
                 group.push(
+                    // lint-allow(panic): `idxs` was collected from
+                    // `enumerate()` over `routed` above.
                     routed[i]
                         .take()
                         .ok_or_else(|| anyhow!("frame {i} was claimed by two bucket groups"))?,
@@ -741,6 +763,7 @@ impl<B: Backend> Pipeline<B> {
             }
             let group_results = self.complete_batch(group)?;
             for (i, r) in idxs.into_iter().zip(group_results) {
+                // lint-allow(panic): same `enumerate()`-derived indices.
                 results[i] = Some(r);
             }
         }
@@ -941,12 +964,14 @@ impl<'p, B: Backend> FrameStream<'p, B> {
         let go = Arc::new(AtomicBool::new(true));
         let (rejected_t, stop_t, go_t) = (rejected.clone(), stop.clone(), go.clone());
         let (num_objects, sensor_seed) = (opts.num_objects, opts.sensor_seed);
+        let sensor_clock = pipeline.clock.clone();
         let sensor = std::thread::spawn(move || {
             super::batcher::sensor_loop(
                 queue,
                 size,
                 num_objects,
                 sensor_seed,
+                &sensor_clock,
                 &go_t,
                 &stop_t,
                 &rejected_t,
@@ -979,6 +1004,8 @@ impl<'p, B: Backend> FrameStream<'p, B> {
 
     /// Stop the sensor thread and join it (idempotent).
     fn shutdown(&mut self) {
+        // relaxed-ok: standalone stop latch; the join below is the
+        // happens-before edge for everything the sensor wrote.
         self.stop.store(true, Ordering::Relaxed);
         // Drain leftovers so the producer side quiesces, then join.
         while self.rx.try_recv().is_ok() {}
@@ -1058,6 +1085,7 @@ impl<'p, B: Backend> FrameStream<'p, B> {
                     self.pending.insert(self.routed, PendingResult { result, iou, correct });
                     self.routed += 1;
                     if self.routed >= self.target {
+                        // relaxed-ok: standalone stop latch (see shutdown).
                         self.stop.store(true, Ordering::Relaxed);
                     }
                     return Ok(());
@@ -1071,6 +1099,7 @@ impl<'p, B: Backend> FrameStream<'p, B> {
                     // The sensor has nothing left to contribute; stop it
                     // now so tail rejections don't pile up while the last
                     // lanes drain.
+                    // relaxed-ok: standalone stop latch (see shutdown).
                     self.stop.store(true, Ordering::Relaxed);
                 }
                 if let Some((_bucket, group)) =
@@ -1135,6 +1164,8 @@ impl<'p, B: Backend> FrameStream<'p, B> {
         ServeReport {
             backend: self.pipeline.backend_name().to_string(),
             frames: done,
+            // relaxed-ok: monotonic counter snapshot for reporting; the
+            // final authoritative read happens after the sensor join.
             dropped: self.rejected.load(Ordering::Relaxed),
             // The in-thread path has no sessions, hence no quota, SLO, or
             // health-routing accounting (see the field docs).

@@ -105,7 +105,7 @@
 use std::collections::BTreeMap;
 use std::fmt;
 use std::panic::AssertUnwindSafe;
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
@@ -438,9 +438,9 @@ impl SessionShared {
 
     fn report(&self, backend: &str, workers: usize) -> ServeReport {
         self.snapshot().to_report(
-            self.rejected.load(Ordering::Relaxed),
-            self.rejected_quota.load(Ordering::Relaxed),
-            self.rejected_shed.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed), // relaxed-ok: monotonic counter; staleness tolerated, terminal reads follow the drain
+            self.rejected_quota.load(Ordering::Relaxed), // relaxed-ok: monotonic counter; staleness tolerated, terminal reads follow the drain
+            self.rejected_shed.load(Ordering::Relaxed), // relaxed-ok: monotonic counter; staleness tolerated, terminal reads follow the drain
             backend,
             workers,
         )
@@ -457,8 +457,8 @@ impl SessionShared {
         if self.quota.max_inflight > 0 {
             let inflight = self
                 .submitted
-                .load(Ordering::Relaxed)
-                .saturating_sub(self.consumed.load(Ordering::Relaxed));
+                .load(Ordering::Relaxed) // relaxed-ok: monotonic counter; staleness tolerated, terminal reads follow the drain
+                .saturating_sub(self.consumed.load(Ordering::Relaxed)); // relaxed-ok: monotonic counter; staleness tolerated, terminal reads follow the drain
             if inflight >= self.quota.max_inflight as u64 {
                 return Err(QuotaDenied::InFlight);
             }
@@ -603,117 +603,11 @@ struct Registry {
     new_reasm: Vec<ReasmState>,
 }
 
-/// Per-worker hardware-health cell. The worker thread publishes its
-/// backend's degradation signal here on every wake (lock-free), the
-/// dispatcher reads it to route frames and to schedule recalibration
-/// windows, and [`Server::stats`] snapshots it into
-/// [`WorkerHealthStats`]. `health` and `recal_energy` hold `f64` bit
-/// patterns in `AtomicU64`s.
-struct HealthSlot {
-    /// Published health score in `[0, 1]` (`f64` bits; starts at 1.0 and
-    /// stays there for backends without a fault model).
-    health: AtomicU64,
-    /// [`WorkerMode`] discriminant — the recalibration state machine
-    /// (`Serving → Draining → Recalibrating → Serving`).
-    mode: AtomicU8,
-    /// Completed recalibration cycles (drain → pay → rejoin).
-    recals: AtomicU64,
-    /// Last published accuracy-at-risk flag.
-    at_risk: AtomicBool,
-    /// Frames this worker completed (health accounting mirror).
-    frames: AtomicU64,
-    /// Frames completed while the backend reported accuracy-at-risk.
-    at_risk_frames: AtomicU64,
-    /// Modeled recalibration energy paid so far (`f64` bits, joules).
-    recal_energy: AtomicU64,
-    /// Publish ticks — lets tests synchronize on "the worker has
-    /// (re)published its health" without sleeping.
-    updates: AtomicU64,
-}
-
-impl HealthSlot {
-    fn new() -> Self {
-        HealthSlot {
-            health: AtomicU64::new(1.0f64.to_bits()),
-            mode: AtomicU8::new(WorkerMode::Serving as u8),
-            recals: AtomicU64::new(0),
-            at_risk: AtomicBool::new(false),
-            frames: AtomicU64::new(0),
-            at_risk_frames: AtomicU64::new(0),
-            recal_energy: AtomicU64::new(0.0f64.to_bits()),
-            updates: AtomicU64::new(0),
-        }
-    }
-
-    fn health_value(&self) -> f64 {
-        f64::from_bits(self.health.load(Ordering::Relaxed))
-    }
-
-    fn mode(&self) -> WorkerMode {
-        match self.mode.load(Ordering::Relaxed) {
-            1 => WorkerMode::Draining,
-            2 => WorkerMode::Recalibrating,
-            3 => WorkerMode::Retiring,
-            4 => WorkerMode::Retired,
-            _ => WorkerMode::Serving,
-        }
-    }
-
-    /// Re-arm the slot for a fresh worker spawned into it after the
-    /// previous occupant retired (the retired occupant's final row lives
-    /// in `ServerCore::retired_health`, so nothing is lost). `updates`
-    /// keeps counting across occupants — tests synchronize on it being
-    /// monotone.
-    fn reset(&self) {
-        self.health.store(1.0f64.to_bits(), Ordering::Relaxed);
-        self.mode.store(WorkerMode::Serving as u8, Ordering::Relaxed);
-        self.recals.store(0, Ordering::Relaxed);
-        self.at_risk.store(false, Ordering::Relaxed);
-        self.frames.store(0, Ordering::Relaxed);
-        self.at_risk_frames.store(0, Ordering::Relaxed);
-        self.recal_energy.store(0.0f64.to_bits(), Ordering::Relaxed);
-    }
-
-    fn set_mode(&self, mode: WorkerMode) {
-        self.mode.store(mode as u8, Ordering::Relaxed);
-    }
-
-    fn recal_energy_j(&self) -> f64 {
-        f64::from_bits(self.recal_energy.load(Ordering::Relaxed))
-    }
-
-    /// CAS-add onto the `f64`-bits energy cell (writers: worker thread
-    /// only, but stats snapshots race the add, hence the loop).
-    fn add_recal_energy(&self, joules: f64) {
-        let mut cur = self.recal_energy.load(Ordering::Relaxed);
-        loop {
-            let next = (f64::from_bits(cur) + joules).to_bits();
-            match self.recal_energy.compare_exchange_weak(
-                cur,
-                next,
-                Ordering::Relaxed,
-                Ordering::Relaxed,
-            ) {
-                Ok(_) => return,
-                Err(actual) => cur = actual,
-            }
-        }
-    }
-
-    fn snapshot(&self, worker: usize, queue_depth: u64) -> WorkerHealthStats {
-        WorkerHealthStats {
-            worker,
-            health: self.health_value(),
-            mode: self.mode(),
-            at_risk: self.at_risk.load(Ordering::Relaxed),
-            recals: self.recals.load(Ordering::Relaxed),
-            recal_energy_j: self.recal_energy_j(),
-            at_risk_frames: self.at_risk_frames.load(Ordering::Relaxed),
-            updates: self.updates.load(Ordering::Relaxed),
-            queue_depth,
-        }
-    }
-}
+// The per-worker hardware-health cell lives in `super::health` (extracted
+// so its lock-free publication protocol sits behind the loom seam and is
+// model-checked in `rust/tests/loom_models.rs`); re-exported here because
+// it is part of the server's architecture.
+pub use super::health::HealthSlot;
 
 /// Why a scale operation was refused. Refusals are normal controller
 /// feedback — the autoscaler reacts to them (e.g. turns on shedding when
@@ -840,7 +734,7 @@ struct ServerCore {
 
 impl ServerCore {
     fn failure_msg(&self) -> Option<String> {
-        if !self.failed.load(Ordering::Relaxed) {
+        if !self.failed.load(Ordering::Relaxed) { // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
             return None;
         }
         recover(&self.failure).clone()
@@ -852,8 +746,8 @@ impl ServerCore {
             *f = Some(error.to_string());
         }
         drop(f);
-        self.failed.store(true, Ordering::Relaxed);
-        self.abort.store(true, Ordering::Relaxed);
+        self.failed.store(true, Ordering::Relaxed); // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
+        self.abort.store(true, Ordering::Relaxed); // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
         // Every blocked loop must observe the failure promptly.
         self.activity.notify();
     }
@@ -870,17 +764,17 @@ pub struct ServerWatch {
 impl ServerWatch {
     /// All workers warmed up; dispatch is live.
     pub fn ready(&self) -> bool {
-        self.core.ready.load(Ordering::Relaxed)
+        self.core.ready.load(Ordering::Relaxed) // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
     }
 
     /// The server failed (see [`ServerWatch::failure`]).
     pub fn failed(&self) -> bool {
-        self.core.failed.load(Ordering::Relaxed)
+        self.core.failed.load(Ordering::Relaxed) // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
     }
 
     /// Graceful shutdown has begun; new submissions are rejected.
     pub fn closing(&self) -> bool {
-        self.core.closing.load(Ordering::Relaxed)
+        self.core.closing.load(Ordering::Relaxed) // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
     }
 
     /// The first recorded failure, if any.
@@ -920,12 +814,12 @@ impl SessionSubmitter {
             if let Some(msg) = self.core.failure_msg() {
                 return Err(ServeError::Failed(msg));
             }
-            if self.core.closing.load(Ordering::Relaxed)
-                || self.shared.canceled.load(Ordering::Relaxed)
+            if self.core.closing.load(Ordering::Relaxed) // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
+                || self.shared.canceled.load(Ordering::Relaxed) // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
             {
                 return Err(ServeError::Closed);
             }
-            let shed = self.core.shed_below.load(Ordering::Relaxed);
+            let shed = self.core.shed_below.load(Ordering::Relaxed); // relaxed-ok: shed latch; submitters re-check on the activity event
             if shed > 0 && self.shared.weight < shed {
                 // Fleet overload shedding: block until the autoscaler
                 // clears it (`clear_shed` notifies). Blocking callers
@@ -944,14 +838,14 @@ impl SessionSubmitter {
                 }
             }
         }
-        self.shared.submitted.fetch_add(1, Ordering::Relaxed);
+        self.shared.submitted.fetch_add(1, Ordering::Relaxed); // relaxed-ok: monotonic counter; staleness tolerated, terminal reads follow the drain
         match tx.send((frame, self.core.clock.now())) {
             Ok(()) => {
                 self.core.activity.notify();
                 Ok(())
             }
             Err(_) => {
-                self.shared.submitted.fetch_sub(1, Ordering::Relaxed);
+                self.shared.submitted.fetch_sub(1, Ordering::Relaxed); // relaxed-ok: monotonic counter; staleness tolerated, terminal reads follow the drain
                 self.shared.refund_token();
                 match self.core.failure_msg() {
                     Some(msg) => Err(ServeError::Failed(msg)),
@@ -972,37 +866,37 @@ impl SessionSubmitter {
     /// `ServeReport::dropped_shed` — checked before the quota, so the
     /// fleet-level valve never burns per-session budget.
     pub fn try_submit(&self, frame: Frame) -> PushOutcome {
-        if self.core.closing.load(Ordering::Relaxed)
-            || self.core.failed.load(Ordering::Relaxed)
-            || self.shared.canceled.load(Ordering::Relaxed)
+        if self.core.closing.load(Ordering::Relaxed) // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
+            || self.core.failed.load(Ordering::Relaxed) // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
+            || self.shared.canceled.load(Ordering::Relaxed) // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
         {
             return PushOutcome::Closed;
         }
         let Some(tx) = &self.tx else { return PushOutcome::Closed };
-        let shed = self.core.shed_below.load(Ordering::Relaxed);
+        let shed = self.core.shed_below.load(Ordering::Relaxed); // relaxed-ok: shed latch; submitters re-check on the activity event
         if shed > 0 && self.shared.weight < shed {
-            self.shared.rejected_shed.fetch_add(1, Ordering::Relaxed);
+            self.shared.rejected_shed.fetch_add(1, Ordering::Relaxed); // relaxed-ok: monotonic counter; staleness tolerated, terminal reads follow the drain
             return PushOutcome::Shed;
         }
         if self.shared.admit_quota(&self.core.clock).is_err() {
-            self.shared.rejected_quota.fetch_add(1, Ordering::Relaxed);
+            self.shared.rejected_quota.fetch_add(1, Ordering::Relaxed); // relaxed-ok: monotonic counter; staleness tolerated, terminal reads follow the drain
             return PushOutcome::Quota;
         }
         // Pre-increment for the same shutdown-race reason as `submit`.
-        self.shared.submitted.fetch_add(1, Ordering::Relaxed);
+        self.shared.submitted.fetch_add(1, Ordering::Relaxed); // relaxed-ok: monotonic counter; staleness tolerated, terminal reads follow the drain
         match tx.try_send((frame, self.core.clock.now())) {
             Ok(()) => {
                 self.core.activity.notify();
                 PushOutcome::Queued
             }
             Err(TrySendError::Full(_)) => {
-                self.shared.submitted.fetch_sub(1, Ordering::Relaxed);
+                self.shared.submitted.fetch_sub(1, Ordering::Relaxed); // relaxed-ok: monotonic counter; staleness tolerated, terminal reads follow the drain
                 self.shared.refund_token();
-                self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+                self.shared.rejected.fetch_add(1, Ordering::Relaxed); // relaxed-ok: monotonic counter; staleness tolerated, terminal reads follow the drain
                 PushOutcome::Full
             }
             Err(TrySendError::Disconnected(_)) => {
-                self.shared.submitted.fetch_sub(1, Ordering::Relaxed);
+                self.shared.submitted.fetch_sub(1, Ordering::Relaxed); // relaxed-ok: monotonic counter; staleness tolerated, terminal reads follow the drain
                 self.shared.refund_token();
                 PushOutcome::Closed
             }
@@ -1046,7 +940,7 @@ impl SessionStream {
         loop {
             match self.rx.recv_timeout(Duration::from_millis(100)) {
                 Ok(r) => {
-                    self.shared.consumed.fetch_add(1, Ordering::Relaxed);
+                    self.shared.consumed.fetch_add(1, Ordering::Relaxed); // relaxed-ok: monotonic counter; staleness tolerated, terminal reads follow the drain
                     // A drain opens the dispatch window (and any in-flight
                     // quota): wake the dispatcher and blocked submitters.
                     self.core.activity.notify();
@@ -1058,7 +952,7 @@ impl SessionStream {
                 // and a session that raced server teardown can never
                 // block its consumer forever).
                 Err(RecvTimeoutError::Timeout) => {
-                    if !self.core.failed.load(Ordering::Relaxed) {
+                    if !self.core.failed.load(Ordering::Relaxed) { // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
                         continue;
                     }
                     return self.end_of_stream();
@@ -1091,7 +985,7 @@ impl SessionStream {
         }
         match self.rx.try_recv() {
             Ok(r) => {
-                self.shared.consumed.fetch_add(1, Ordering::Relaxed);
+                self.shared.consumed.fetch_add(1, Ordering::Relaxed); // relaxed-ok: monotonic counter; staleness tolerated, terminal reads follow the drain
                 self.core.activity.notify();
                 Some(Ok(r))
             }
@@ -1129,7 +1023,7 @@ impl Drop for SessionStream {
         // discards its remaining frames instead of serving a consumer that
         // is gone. A drained/complete session keeps its clean record.
         if !self.finished && !recover(&self.shared.accum).complete {
-            self.shared.canceled.store(true, Ordering::Relaxed);
+            self.shared.canceled.store(true, Ordering::Relaxed); // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
         }
         // Wake the dispatcher to sweep the canceled session promptly.
         self.core.activity.notify();
@@ -1351,11 +1245,11 @@ impl Server {
             let mut pool = recover(&core.pool);
             for wid in 0..n_workers {
                 let pin_core = core.cfg.pin_workers.then(|| lowest_free_core(&pool.claims));
-                pool.slots[wid] = Some(wid);
-                pool.claims[wid] = pin_core;
+                pool.slots[wid] = Some(wid); // lint-allow(panic): slot ids are allocated below pool capacity, the arrays' fixed length
+                pool.claims[wid] = pin_core; // lint-allow(panic): slot ids are allocated below pool capacity, the arrays' fixed length
                 pool.spawned += 1;
                 let (tx, handle) = spawner(wid, wid, pin_core);
-                worker_txs[wid] = Some(tx);
+                worker_txs[wid] = Some(tx); // lint-allow(panic): worker id drawn from these fixed pool-capacity arrays
                 handles.push(handle);
             }
         }
@@ -1378,7 +1272,7 @@ impl Server {
     /// closing server. Records a [`ScaleEvent`]; returns the live count
     /// including the new worker.
     pub fn scale_up(&self) -> std::result::Result<usize, ScaleError> {
-        if self.core.closing.load(Ordering::Relaxed) || self.core.failed.load(Ordering::Relaxed)
+        if self.core.closing.load(Ordering::Relaxed) || self.core.failed.load(Ordering::Relaxed) // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
         {
             return Err(ScaleError::Closed);
         }
@@ -1394,11 +1288,11 @@ impl Server {
             let wid = pool.spawned;
             pool.spawned += 1;
             let pin_core = self.core.cfg.pin_workers.then(|| lowest_free_core(&pool.claims));
-            pool.slots[slot] = Some(wid);
-            pool.claims[slot] = pin_core;
+            pool.slots[slot] = Some(wid); // lint-allow(panic): slot ids are allocated below pool capacity, the arrays' fixed length
+            pool.claims[slot] = pin_core; // lint-allow(panic): slot ids are allocated below pool capacity, the arrays' fixed length
             // Re-arm the slot's health cell for its fresh occupant (the
             // previous occupant's final row lives in `retired_health`).
-            self.core.health[slot].reset();
+            self.core.health[slot].reset(); // lint-allow(panic): worker id drawn from these fixed pool-capacity arrays
             let (tx, handle) = (self.spawner)(wid, slot, pin_core);
             pool.pending.push((slot, tx));
             recover(&self.scaled).push(handle);
@@ -1424,7 +1318,7 @@ impl Server {
     /// count). Records a [`ScaleEvent`]; returns the live count the pool
     /// is shrinking toward.
     pub fn scale_down(&self) -> std::result::Result<usize, ScaleError> {
-        if self.core.closing.load(Ordering::Relaxed) || self.core.failed.load(Ordering::Relaxed)
+        if self.core.closing.load(Ordering::Relaxed) || self.core.failed.load(Ordering::Relaxed) // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
         {
             return Err(ScaleError::Closed);
         }
@@ -1438,7 +1332,7 @@ impl Server {
                 .iter()
                 .enumerate()
                 .filter(|(slot, occ)| {
-                    occ.is_some() && self.core.health[*slot].mode() == WorkerMode::Serving
+                    occ.is_some() && self.core.health[*slot].mode() == WorkerMode::Serving // lint-allow(panic): worker id drawn from these fixed pool-capacity arrays
                 })
                 .map(|(slot, _)| slot);
             let (first, last) = (serving.next(), serving.last());
@@ -1447,7 +1341,7 @@ impl Server {
                 (_, None) | (None, _) => return Err(ScaleError::AtFloor),
                 (Some(_), Some(highest)) => highest,
             };
-            self.core.health[victim].set_mode(WorkerMode::Retiring);
+            self.core.health[victim].set_mode(WorkerMode::Retiring); // lint-allow(panic): worker id drawn from these fixed pool-capacity arrays
             (victim, pool.live() - 1)
         };
         self.record_scale(ScaleAction::Down, target, format!("slot {victim} retiring"));
@@ -1467,7 +1361,7 @@ impl Server {
         if below_weight == 0 {
             return self.clear_shed();
         }
-        let prev = self.core.shed_below.swap(below_weight, Ordering::Relaxed);
+        let prev = self.core.shed_below.swap(below_weight, Ordering::Relaxed); // relaxed-ok: shed latch; submitters re-check on the activity event
         if prev == below_weight {
             return false;
         }
@@ -1484,7 +1378,7 @@ impl Server {
     /// Disable admission shedding (blocked submitters re-admit). Records
     /// a [`ScaleEvent`] if shedding was on; returns whether it was.
     pub fn clear_shed(&self) -> bool {
-        let prev = self.core.shed_below.swap(0, Ordering::Relaxed);
+        let prev = self.core.shed_below.swap(0, Ordering::Relaxed); // relaxed-ok: shed latch; submitters re-check on the activity event
         if prev == 0 {
             return false;
         }
@@ -1496,7 +1390,7 @@ impl Server {
 
     /// Admission-shedding threshold in force (`0` = off).
     pub fn shed_below(&self) -> u32 {
-        self.core.shed_below.load(Ordering::Relaxed)
+        self.core.shed_below.load(Ordering::Relaxed) // relaxed-ok: shed latch; submitters re-check on the activity event
     }
 
     /// Workers currently holding a pool slot (their thread is running:
@@ -1522,10 +1416,10 @@ impl Server {
         if let Some(msg) = self.core.failure_msg() {
             return Err(ServeError::Failed(msg));
         }
-        if self.core.closing.load(Ordering::Relaxed) {
+        if self.core.closing.load(Ordering::Relaxed) { // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
             return Err(ServeError::Closed);
         }
-        let id = self.core.next_session.fetch_add(1, Ordering::Relaxed);
+        let id = self.core.next_session.fetch_add(1, Ordering::Relaxed); // relaxed-ok: unique-id allocator; atomicity suffices
         let requested = if opts.window > 0 { opts.window } else { self.core.default_window };
         let window = requested.max(1);
         let (tx, rx) = mpsc::sync_channel::<Submitted>(opts.queue_depth.max(1));
@@ -1607,7 +1501,7 @@ impl Server {
 
     /// All workers warmed up; dispatch is live.
     pub fn ready(&self) -> bool {
-        self.core.ready.load(Ordering::Relaxed)
+        self.core.ready.load(Ordering::Relaxed) // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
     }
 
     /// Block until every worker is warm (or the server fails / `timeout`
@@ -1646,9 +1540,9 @@ impl Server {
             // One snapshot per session: the row report and the aggregate
             // must agree even while the reassembler keeps accumulating.
             let a = s.snapshot();
-            let s_dropped = s.rejected.load(Ordering::Relaxed);
-            let s_dropped_quota = s.rejected_quota.load(Ordering::Relaxed);
-            let s_dropped_shed = s.rejected_shed.load(Ordering::Relaxed);
+            let s_dropped = s.rejected.load(Ordering::Relaxed); // relaxed-ok: monotonic counter; staleness tolerated, terminal reads follow the drain
+            let s_dropped_quota = s.rejected_quota.load(Ordering::Relaxed); // relaxed-ok: monotonic counter; staleness tolerated, terminal reads follow the drain
+            let s_dropped_shed = s.rejected_shed.load(Ordering::Relaxed); // relaxed-ok: monotonic counter; staleness tolerated, terminal reads follow the drain
             agg.frames += a.frames;
             agg.iou_sum += a.iou_sum;
             agg.correct += a.correct;
@@ -1671,12 +1565,12 @@ impl Server {
                 name: s.name.clone(),
                 weight: s.weight,
                 complete: a.complete,
-                canceled: s.canceled.load(Ordering::Relaxed),
-                submitted: s.submitted.load(Ordering::Relaxed),
+                canceled: s.canceled.load(Ordering::Relaxed), // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
+                submitted: s.submitted.load(Ordering::Relaxed), // relaxed-ok: monotonic counter; staleness tolerated, terminal reads follow the drain
                 inflight: s
                     .dispatched
-                    .load(Ordering::Relaxed)
-                    .saturating_sub(s.consumed.load(Ordering::Relaxed)),
+                    .load(Ordering::Relaxed) // relaxed-ok: monotonic counter; staleness tolerated, terminal reads follow the drain
+                    .saturating_sub(s.consumed.load(Ordering::Relaxed)), // relaxed-ok: monotonic counter; staleness tolerated, terminal reads follow the drain
                 report: a.to_report(
                     s_dropped,
                     s_dropped_quota,
@@ -1708,10 +1602,10 @@ impl Server {
                     // A slot whose occupant already flipped to `Retired`
                     // (but hasn't freed the slot yet) is reported by its
                     // archived row, not here — never both.
-                    occ.filter(|_| self.core.health[slot].mode() != WorkerMode::Retired).map(
+                    occ.filter(|_| self.core.health[slot].mode() != WorkerMode::Retired).map( // lint-allow(panic): worker id drawn from these fixed pool-capacity arrays
                         |wid| {
-                            self.core.health[slot]
-                                .snapshot(wid, self.core.inflight[slot].load(Ordering::Relaxed))
+                            self.core.health[slot] // lint-allow(panic): worker id drawn from these fixed pool-capacity arrays
+                                .snapshot(wid, self.core.inflight[slot].load(Ordering::Relaxed)) // lint-allow(panic): worker id drawn from these fixed pool-capacity arrays; relaxed-ok: load gauge; staleness only costs placement quality
                         },
                     )
                 })
@@ -1725,7 +1619,7 @@ impl Server {
             backend,
             workers: self.core.n_workers,
             live_workers,
-            shed_below: self.core.shed_below.load(Ordering::Relaxed),
+            shed_below: self.core.shed_below.load(Ordering::Relaxed), // relaxed-ok: shed latch; submitters re-check on the activity event
             aggregate,
             sessions: rows,
             worker_health,
@@ -1745,7 +1639,7 @@ impl Server {
     /// before — or concurrently with — calling this. Dropping the `Server`
     /// without `shutdown` aborts instead of draining.
     pub fn shutdown(mut self) -> Result<(ServeReport, StageMetrics)> {
-        self.core.closing.store(true, Ordering::Relaxed);
+        self.core.closing.store(true, Ordering::Relaxed); // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
         self.core.activity.notify();
         for h in self.handles.drain(..) {
             h.join().ok();
@@ -1769,8 +1663,8 @@ impl Drop for Server {
             return; // shut down already
         }
         // Dropped without shutdown: abort promptly rather than drain.
-        self.core.closing.store(true, Ordering::Relaxed);
-        self.core.abort.store(true, Ordering::Relaxed);
+        self.core.closing.store(true, Ordering::Relaxed); // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
+        self.core.abort.store(true, Ordering::Relaxed); // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
         self.core.activity.notify();
         for h in self.handles.drain(..) {
             h.join().ok();
@@ -1871,7 +1765,7 @@ impl WrrAdmission {
         let mut granted = 0u64;
         for k in 0..n {
             let i = (self.turn + k) % n;
-            for _ in 0..weights[i].max(1) {
+            for _ in 0..weights[i].max(1) { // lint-allow(panic): index from iterating this collection
                 if admit(i) {
                     granted += 1;
                 } else {
@@ -1920,7 +1814,7 @@ impl HealthWeightedWrr {
         }
         self.cursor %= healths.len();
         if self.credit == 0 {
-            self.credit = Self::credits(healths[self.cursor]);
+            self.credit = Self::credits(healths[self.cursor]); // lint-allow(panic): cursor reduced mod len above
         }
         self.credit -= 1;
         let pick = self.cursor;
@@ -1949,6 +1843,9 @@ enum Placed {
 /// workers last, ahead of the load criterion. Retiring/retired slots are
 /// never placed on, health-aware or not — retirement means the queue is
 /// closing for good, so there is no availability fallback onto them.
+// lint-allow(panic, fn): every worker index here is drawn from
+// `0..worker_txs.len()` and the parallel `alive`/`health`/`inflight`
+// arrays all have pool-capacity length fixed at construction.
 fn place_job(
     mut job: Job,
     worker_txs: &[Option<SyncSender<Job>>],
@@ -1964,7 +1861,7 @@ fn place_job(
         // Generation before the placement attempt: a pop during the
         // attempt ends the post-attempt wait immediately.
         let gen = core.activity.generation();
-        if core.abort.load(Ordering::Relaxed) {
+        if core.abort.load(Ordering::Relaxed) { // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
             return Placed::Aborted;
         }
         candidates.clear();
@@ -1996,8 +1893,8 @@ fn place_job(
         let rot = rr % n;
         candidates.sort_unstable_by_key(|&w| {
             (
-                aware && critical && core.health[w].at_risk.load(Ordering::Relaxed),
-                core.inflight[w].load(Ordering::Relaxed),
+                aware && critical && core.health[w].at_risk(),
+                core.inflight[w].load(Ordering::Relaxed), // relaxed-ok: load gauge; staleness only costs placement quality
                 (w + n - rot) % n,
             )
         });
@@ -2006,7 +1903,7 @@ fn place_job(
             let Some(tx) = worker_txs[w].as_ref() else { continue };
             match tx.try_send(j) {
                 Ok(()) => {
-                    core.inflight[w].fetch_add(1, Ordering::Relaxed);
+                    core.inflight[w].fetch_add(1, Ordering::Relaxed); // relaxed-ok: load gauge; staleness only costs placement quality
                     // Wake the worker blocked waiting for its queue.
                     core.activity.notify();
                     return Placed::Worker;
@@ -2055,9 +1952,9 @@ fn dispatcher_loop(
     // away) — warmup must not skew fairness toward the first session.
     loop {
         let gen = core.activity.generation();
-        if core.ready.load(Ordering::Relaxed)
-            || core.abort.load(Ordering::Relaxed)
-            || core.closing.load(Ordering::Relaxed)
+        if core.ready.load(Ordering::Relaxed) // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
+            || core.abort.load(Ordering::Relaxed) // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
+            || core.closing.load(Ordering::Relaxed) // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
         {
             break;
         }
@@ -2082,7 +1979,7 @@ fn dispatcher_loop(
         // it (submit, consume, close, …) ends the post-sweep wait
         // immediately instead of being missed.
         let sweep_gen = core.activity.generation();
-        if core.abort.load(Ordering::Relaxed) {
+        if core.abort.load(Ordering::Relaxed) { // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
             break;
         }
         {
@@ -2096,21 +1993,21 @@ fn dispatcher_loop(
         {
             let mut pool = recover(&core.pool);
             for (slot, tx) in pool.pending.drain(..) {
-                alive[slot] = true;
-                worker_txs[slot] = Some(tx);
+                alive[slot] = true; // lint-allow(panic): worker id drawn from these fixed pool-capacity arrays
+                worker_txs[slot] = Some(tx); // lint-allow(panic): worker id drawn from these fixed pool-capacity arrays
             }
         }
         for w in 0..n_workers {
-            if worker_txs[w].is_some()
-                && core.health[w].mode() == WorkerMode::Retiring
-                && core.inflight[w].load(Ordering::Relaxed) == 0
+            if worker_txs[w].is_some() // lint-allow(panic): worker id drawn from these fixed pool-capacity arrays
+                && core.health[w].mode() == WorkerMode::Retiring // lint-allow(panic): worker id drawn from these fixed pool-capacity arrays
+                && core.inflight[w].load(Ordering::Relaxed) == 0 // lint-allow(panic): worker id drawn from these fixed pool-capacity arrays; relaxed-ok: load gauge; staleness only costs placement quality
             {
-                worker_txs[w] = None;
-                alive[w] = false;
+                worker_txs[w] = None; // lint-allow(panic): worker id drawn from these fixed pool-capacity arrays
+                alive[w] = false; // lint-allow(panic): worker id drawn from these fixed pool-capacity arrays
                 core.activity.notify();
             }
         }
-        let closing = core.closing.load(Ordering::Relaxed);
+        let closing = core.closing.load(Ordering::Relaxed); // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
         // Health sweep before admission: flag any serving worker whose
         // published health fell below the recal threshold for draining —
         // but always keep at least one worker serving (availability over
@@ -2120,14 +2017,14 @@ fn dispatcher_loop(
                 .health
                 .iter()
                 .enumerate()
-                .filter(|&(w, s)| alive[w] && s.mode() == WorkerMode::Serving)
+                .filter(|&(w, s)| alive[w] && s.mode() == WorkerMode::Serving) // lint-allow(panic): worker id drawn from these fixed pool-capacity arrays
                 .count()
                 .saturating_sub(1);
             for (w, slot) in core.health.iter().enumerate() {
                 if spare == 0 {
                     break;
                 }
-                if alive[w]
+                if alive[w] // lint-allow(panic): worker id drawn from these fixed pool-capacity arrays
                     && slot.mode() == WorkerMode::Serving
                     && slot.health_value() < policy.recal_below
                 {
@@ -2166,7 +2063,7 @@ fn dispatcher_loop(
         edf_served.clear();
         edf_served.resize(entries.len(), false);
         for (i, entry) in entries.iter_mut().enumerate() {
-            if entry.done_sent || entry.shared.canceled.load(Ordering::Relaxed) {
+            if entry.done_sent || entry.shared.canceled.load(Ordering::Relaxed) { // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
                 continue;
             }
             if let Some(slo) = entry.shared.slo {
@@ -2177,14 +2074,14 @@ fn dispatcher_loop(
         }
         edf.sort_unstable();
         let mut admit = |i: usize| -> bool {
-            if fatal.is_some() || core.abort.load(Ordering::Relaxed) {
+            if fatal.is_some() || core.abort.load(Ordering::Relaxed) { // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
                 return false;
             }
-            let entry = &mut entries[i];
+            let entry = &mut entries[i]; // lint-allow(panic): index from iterating this collection
             if entry.done_sent {
                 return false;
             }
-            if entry.shared.canceled.load(Ordering::Relaxed) {
+            if entry.shared.canceled.load(Ordering::Relaxed) { // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
                 // Mid-flight teardown: discard whatever the dead session
                 // still has queued and finalize it at its dispatch count.
                 entry.peeked = None;
@@ -2195,7 +2092,7 @@ fn dispatcher_loop(
             }
             // Per-session dispatch window: a tenant that stops draining
             // its stream stalls only its own admission.
-            let consumed = entry.shared.consumed.load(Ordering::Relaxed);
+            let consumed = entry.shared.consumed.load(Ordering::Relaxed); // relaxed-ok: monotonic counter; staleness tolerated, terminal reads follow the drain
             if entry.dispatched.saturating_sub(consumed) >= entry.shared.window as u64 {
                 return false;
             }
@@ -2219,10 +2116,10 @@ fn dispatcher_loop(
                     };
                     match place_job(job, &worker_txs, &mut alive, core, &mut candidates, rot) {
                         Placed::Worker => {
-                            let entry = &mut entries[i];
+                            let entry = &mut entries[i]; // lint-allow(panic): index from iterating this collection
                             entry.dispatched += 1;
-                            entry.shared.dispatched.store(entry.dispatched, Ordering::Relaxed);
-                            core.total_dispatched.fetch_add(1, Ordering::Relaxed);
+                            entry.shared.dispatched.store(entry.dispatched, Ordering::Relaxed); // relaxed-ok: single-writer progress counter; terminal reads follow the channel
+                            core.total_dispatched.fetch_add(1, Ordering::Relaxed); // relaxed-ok: single-writer progress counter; terminal reads follow the channel
                             progressed = true;
                             true
                         }
@@ -2243,7 +2140,7 @@ fn dispatcher_loop(
                 // never lose an accepted frame.
                 Err(mpsc::TryRecvError::Empty) => {
                     if closing
-                        && entry.dispatched >= entry.shared.submitted.load(Ordering::Relaxed)
+                        && entry.dispatched >= entry.shared.submitted.load(Ordering::Relaxed) // relaxed-ok: single-writer progress counter; terminal reads follow the channel
                     {
                         finalize_entry(entry, &res_tx);
                     }
@@ -2261,15 +2158,15 @@ fn dispatcher_loop(
         // share), then the plain weighted round-robin over everyone the
         // pre-pass did not touch.
         for &(_, i) in &edf {
-            edf_served[i] = true;
-            for _ in 0..weights[i].max(1) {
+            edf_served[i] = true; // lint-allow(panic): index from iterating this collection
+            for _ in 0..weights[i].max(1) { // lint-allow(panic): index from iterating this collection
                 if !admit(i) {
                     break;
                 }
             }
         }
         wrr.sweep(&weights, |i| {
-            if edf_served[i] {
+            if edf_served[i] { // lint-allow(panic): index from iterating this collection
                 return false;
             }
             admit(i)
@@ -2334,15 +2231,18 @@ fn tighten(deadline: Instant, job_deadline: Option<Instant>) -> Instant {
 /// event so the dispatcher re-sweeps against it promptly; the `updates`
 /// tick always advances (tests synchronize on it).
 fn publish_health<W: FrameWorker>(slot: &HealthSlot, core: &ServerCore, w: &mut W) {
-    if let Some(h) = w.health() {
-        let bits = h.health.to_bits();
-        let old = slot.health.swap(bits, Ordering::Relaxed);
-        slot.at_risk.store(h.at_risk, Ordering::Relaxed);
-        if old != bits {
-            core.activity.notify();
+    match w.health() {
+        Some(h) => {
+            // Release/Acquire publication protocol lives in
+            // `HealthSlot::publish` (loom-checked).
+            if slot.publish(h.health, h.at_risk) {
+                core.activity.notify();
+            }
         }
+        // No health signal: still prove liveness for tests waiting on
+        // the updates tick.
+        None => slot.tick(),
     }
-    slot.updates.fetch_add(1, Ordering::Relaxed);
 }
 
 /// Advance this worker's recalibration state machine one step. The
@@ -2368,7 +2268,7 @@ fn drive_recal<W: FrameWorker>(
         // path archives its final stats. Nothing to drive here.
         WorkerMode::Retiring | WorkerMode::Retired => {}
         WorkerMode::Draining => {
-            if core.inflight[slot_idx].load(Ordering::Relaxed) == 0 {
+            if core.inflight[slot_idx].load(Ordering::Relaxed) == 0 { // lint-allow(panic): worker id drawn from these fixed pool-capacity arrays; relaxed-ok: load gauge; staleness only costs placement quality
                 match w.recalibrate() {
                     Some(cost) => {
                         slot.add_recal_energy(cost.energy_j);
@@ -2385,7 +2285,7 @@ fn drive_recal<W: FrameWorker>(
             // iteration) degrades to an immediate rejoin.
             if recal_due.map(|due| clock.now() >= due).unwrap_or(true) {
                 *recal_due = None;
-                slot.recals.fetch_add(1, Ordering::Relaxed);
+                slot.complete_recal();
                 slot.set_mode(WorkerMode::Serving);
                 core.activity.notify();
             }
@@ -2432,7 +2332,7 @@ fn worker_loop<W, F>(
         let max_batch = batch_policy.max_batch.max(1);
         let mut tags: Vec<(u64, u64, Instant)> = Vec::with_capacity(max_batch);
         let mut group: Vec<Frame> = Vec::with_capacity(max_batch);
-        let slot = &core.health[slot_idx];
+        let slot = &core.health[slot_idx]; // lint-allow(panic): worker id drawn from these fixed pool-capacity arrays
         let mut recal_due: Option<Instant> = None;
         let mut closed = false;
         while !closed {
@@ -2496,7 +2396,7 @@ fn worker_loop<W, F>(
             let t0 = clock.now();
             let out = w.process_batch(&group);
             busy += clock.now().saturating_duration_since(t0);
-            core.inflight[slot_idx].fetch_sub(group.len() as u64, Ordering::Relaxed);
+            core.inflight[slot_idx].fetch_sub(group.len() as u64, Ordering::Relaxed); // lint-allow(panic): worker id drawn from these fixed pool-capacity arrays; relaxed-ok: load gauge; staleness only costs placement quality
             // The pool has headroom again: wake blocked placement.
             core.activity.notify();
             let rs = out.map_err(|e| {
@@ -2518,11 +2418,8 @@ fn worker_loop<W, F>(
             // health: degradation accrued while serving these frames is
             // exactly what put their accuracy at risk.
             publish_health(slot, core, &mut w);
-            let at_risk = slot.at_risk.load(Ordering::Relaxed);
-            slot.frames.fetch_add(rs.len() as u64, Ordering::Relaxed);
-            if at_risk {
-                slot.at_risk_frames.fetch_add(rs.len() as u64, Ordering::Relaxed);
-            }
+            let at_risk = slot.at_risk();
+            slot.record_frames(rs.len() as u64, at_risk);
             for ((&(session, seq, accepted_at), r), (gt, &label)) in
                 tags.iter().zip(rs).zip(gts.iter().zip(&labels))
             {
@@ -2565,8 +2462,8 @@ fn worker_loop<W, F>(
                 utilization: if active_s > 0.0 { (busy_s / active_s).min(1.0) } else { 0.0 },
                 core: pinned_core,
                 health: slot.health_value(),
-                recals: slot.recals.load(Ordering::Relaxed),
-                at_risk_frames: slot.at_risk_frames.load(Ordering::Relaxed),
+                recals: slot.recals(),
+                at_risk_frames: slot.at_risk_frames(),
                 queue_depth: 0,
                 retired,
             },
@@ -2578,8 +2475,8 @@ fn worker_loop<W, F>(
     // path — the next scale_up may reuse both.
     {
         let mut pool = recover(&core.pool);
-        pool.slots[slot_idx] = None;
-        pool.claims[slot_idx] = None;
+        pool.slots[slot_idx] = None; // lint-allow(panic): slot ids are allocated below pool capacity, the arrays' fixed length
+        pool.claims[slot_idx] = None; // lint-allow(panic): slot ids are allocated below pool capacity, the arrays' fixed length
     }
     core.activity.notify();
     match outcome {
@@ -2655,7 +2552,7 @@ fn emit(
         // session rather than block every other tenant.
         if tx.try_send(result).is_err() {
             state.out = None;
-            state.shared.canceled.store(true, Ordering::Relaxed);
+            state.shared.canceled.store(true, Ordering::Relaxed); // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
         }
     }
 }
@@ -2666,7 +2563,7 @@ fn emit(
 /// submitted frame was emitted" would be a lie.
 fn try_finalize_session(state: &mut ReasmState) -> bool {
     if state.expected.is_some_and(|e| state.emitted >= e) {
-        if !state.shared.canceled.load(Ordering::Relaxed) {
+        if !state.shared.canceled.load(Ordering::Relaxed) { // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
             recover(&state.shared.accum).complete = true;
         }
         state.out = None; // dropping the sender ends the stream cleanly
@@ -2739,11 +2636,11 @@ fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
                 ready_count += 1;
                 // Scaled-up workers send `Ready` too: only the initial
                 // pool gates dispatch, and readiness latches once.
-                if !core.ready.load(Ordering::Relaxed) && ready_count >= n_workers {
+                if !core.ready.load(Ordering::Relaxed) && ready_count >= n_workers { // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
                     let now = clock.now();
                     t_ready = Some(now);
                     *recover(&core.t_ready) = Some(now);
-                    core.ready.store(true, Ordering::Relaxed);
+                    core.ready.store(true, Ordering::Relaxed); // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
                     // Wake wait_ready callers, the dispatcher's warmup
                     // hold, and idling sensors.
                     core.activity.notify();
@@ -2791,7 +2688,11 @@ fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
                 }
             }
             Ok(Msg::SessionDone { session, dispatched }) => {
-                last_progress = Instant::now();
+                // Serving clock, like every other arm — a raw
+                // `Instant::now()` here once silently disarmed the stall
+                // detector under a manual clock (caught by the clock-seam
+                // lint rule).
+                last_progress = clock.now();
                 if !states.contains_key(&session) {
                     adopt_new_sessions(core, &mut states);
                 }
@@ -2833,7 +2734,7 @@ fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
                     );
                     fail_server(core, msg, &mut failure, &mut states);
                 }
-                let dispatched = core.total_dispatched.load(Ordering::Relaxed);
+                let dispatched = core.total_dispatched.load(Ordering::Relaxed); // relaxed-ok: single-writer progress counter; terminal reads follow the channel
                 if t_ready.is_some()
                     && failure.is_none()
                     && dispatched > agg.emitted
@@ -2852,7 +2753,7 @@ fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
             Err(RecvTimeoutError::Disconnected) => {
                 // Every sender (dispatcher + workers) is gone.
                 if failure.is_none()
-                    && !(core.closing.load(Ordering::Relaxed)
+                    && !(core.closing.load(Ordering::Relaxed) // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
                         && dispatcher_exited
                         && worker_exits >= recover(&core.pool).spawned)
                 {
@@ -2866,7 +2767,7 @@ fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
         // the pool is closed, so the count cannot race a late scale_up.
         if dispatcher_exited
             && worker_exits >= recover(&core.pool).spawned
-            && (core.closing.load(Ordering::Relaxed) || failure.is_some())
+            && (core.closing.load(Ordering::Relaxed) || failure.is_some()) // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
         {
             break;
         }
@@ -2890,9 +2791,9 @@ fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
     let mut queueing_sum = 0.0f64;
     let mut session_latency = LatencyHistogram::new();
     for s in recover(&core.sessions).iter() {
-        dropped += s.rejected.load(Ordering::Relaxed);
-        dropped_quota += s.rejected_quota.load(Ordering::Relaxed);
-        dropped_shed += s.rejected_shed.load(Ordering::Relaxed);
+        dropped += s.rejected.load(Ordering::Relaxed); // relaxed-ok: monotonic counter; staleness tolerated, terminal reads follow the drain
+        dropped_quota += s.rejected_quota.load(Ordering::Relaxed); // relaxed-ok: monotonic counter; staleness tolerated, terminal reads follow the drain
+        dropped_shed += s.rejected_shed.load(Ordering::Relaxed); // relaxed-ok: monotonic counter; staleness tolerated, terminal reads follow the drain
         let a = recover(&s.accum);
         slo_miss += a.slo_miss;
         accuracy_at_risk += a.accuracy_at_risk;

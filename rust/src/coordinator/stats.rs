@@ -24,14 +24,11 @@ impl StageMetrics {
         Self::default()
     }
 
-    /// Mark the start of the serving run (for wall-clock throughput).
-    pub fn start_run(&mut self) {
-        self.start_run_at(Instant::now());
-    }
-
-    /// Clock-parameterized [`StageMetrics::start_run`]: callers holding a
-    /// [`super::clock::Clock`] pass `clock.now()` so run timing lives on
-    /// the same timeline as every serving deadline.
+    /// Mark the start of the serving run (for run-relative throughput).
+    /// Callers holding a [`super::clock::Clock`] pass `clock.now()` so run
+    /// timing lives on the same timeline as every serving deadline —
+    /// there is deliberately no zero-argument variant reading the wall
+    /// clock (the invariant linter's clock-seam rule would reject one).
     pub fn start_run_at(&mut self, now: Instant) {
         self.start = Some(now);
     }
@@ -73,23 +70,13 @@ impl StageMetrics {
         self.frames
     }
 
-    /// Wall-clock seconds since `start_run` (0.0 if never started).
-    pub fn run_elapsed_s(&self) -> f64 {
-        self.run_elapsed_s_at(Instant::now())
-    }
-
-    /// [`StageMetrics::run_elapsed_s`] against a caller-supplied `now`
-    /// (the clock seam: pass `clock.now()`).
+    /// Seconds since `start_run_at` against a caller-supplied `now` (the
+    /// clock seam: pass `clock.now()`; 0.0 if never started).
     pub fn run_elapsed_s_at(&self, now: Instant) -> f64 {
         self.start.map(|t| now.saturating_duration_since(t).as_secs_f64()).unwrap_or(0.0)
     }
 
-    /// Wall-clock frames/s since `start_run`.
-    pub fn wall_fps(&self) -> f64 {
-        self.wall_fps_at(Instant::now())
-    }
-
-    /// [`StageMetrics::wall_fps`] against a caller-supplied `now` (the
+    /// Frames/s since `start_run_at` against a caller-supplied `now` (the
     /// clock seam: pass `clock.now()`).
     pub fn wall_fps_at(&self, now: Instant) -> f64 {
         let elapsed = self.run_elapsed_s_at(now);

@@ -177,9 +177,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     }
     let artifact_dir = args.get_or("artifacts", "artifacts").to_string();
     // `BackendKind::from_str` is the single source of truth for the
-    // choice set (its error already lists the choices).
+    // choice set (its error already lists the choices). Real inference is
+    // the default when the pjrt substrate is compiled in; otherwise the
+    // modeled photonic substrate serves without artifacts.
+    let default_backend = if cfg!(feature = "pjrt") { "pjrt" } else { "sim" };
     let kind: BackendKind =
-        args.get_or("backend", "pjrt").parse().map_err(anyhow::Error::msg)?;
+        args.get_or("backend", default_backend).parse().map_err(anyhow::Error::msg)?;
     let mut cfg = PipelineConfig::tiny_96();
     cfg.use_mask = !args.get_bool("no-mask");
     let mut factory = AnyFactory::new(kind, artifact_dir);
@@ -350,10 +353,13 @@ fn cmd_serve_cameras(
             let server = &server;
             let stop = &stop;
             scope.spawn(move || {
-                let mut scaler = AutoScaler::new(policy, Clock::system());
+                let clock = Clock::system();
+                let mut scaler = AutoScaler::new(policy, clock.clone());
+                // relaxed-ok: standalone stop latch; the scope join is the
+                // happens-before edge.
                 while !stop.load(std::sync::atomic::Ordering::Relaxed) {
                     let _ = scaler.tick(server);
-                    std::thread::sleep(std::time::Duration::from_millis(200));
+                    clock.sleep(std::time::Duration::from_millis(200));
                 }
             });
         }
@@ -381,6 +387,7 @@ fn cmd_serve_cameras(
             }
             Ok(())
         })();
+        // relaxed-ok: standalone stop latch (see the ticker loop above).
         stop.store(true, std::sync::atomic::Ordering::Relaxed);
         joined
     })?;
@@ -573,8 +580,19 @@ fn cmd_resolution(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_info(args: &Args) -> anyhow::Result<()> {
     let artifact_dir = args.get_or("artifacts", "artifacts").to_string();
-    let rt = optovit::runtime::PjrtBackend::new(&artifact_dir)?;
-    let names = rt.available();
+    // Listing artifacts is a directory scan — no PJRT client needed, so
+    // `info` works whether or not the `pjrt` feature is compiled in.
+    let mut names = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(&artifact_dir) {
+        for e in rd.flatten() {
+            if let Some(name) = e.path().file_name().and_then(|s| s.to_str()) {
+                if let Some(stem) = name.strip_suffix(".hlo.txt") {
+                    names.push(stem.to_string());
+                }
+            }
+        }
+    }
+    names.sort();
     if names.is_empty() {
         println!("no artifacts in '{artifact_dir}' — run `make artifacts`");
         println!("(serving without artifacts: `optovit serve --backend host|sim`)");

@@ -7,7 +7,7 @@
 //!
 //! | backend | type | numerics | latency | needs artifacts |
 //! |---|---|---|---|---|
-//! | `pjrt` | [`PjrtBackend`] | compiled HLO on the CPU PJRT client | host wall-clock | yes (`make artifacts`) |
+//! | `pjrt` | `PjrtBackend` (behind the `pjrt` cargo feature) | compiled HLO on the CPU PJRT client | host wall-clock | yes (`make artifacts`) |
 //! | `host` | [`HostBackend`] | pure-Rust reference ViT/MGNet (quantized, seeded) | host wall-clock | no |
 //! | `sim`  | [`SimBackend`] | host reference numerics | modeled photonic-core delay ([`crate::arch`]/[`crate::energy`]), plus queueing under load when a [`QueueingPlan`] arms the [`crate::cosim`] replay | no |
 //!
@@ -33,6 +33,12 @@
 //! thread through a [`BackendFactory`] — see [`crate::coordinator::engine`].
 
 pub mod host;
+// The PJRT substrate links the vendored `xla` crate, which most build
+// environments don't carry — the whole module sits behind the `pjrt`
+// cargo feature (off by default). `BackendKind::Pjrt` stays visible
+// either way so CLIs can parse `--backend pjrt` and report a clear
+// "rebuild with --features pjrt" error instead of a parse failure.
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod sim;
 
@@ -42,6 +48,7 @@ use std::str::FromStr;
 use anyhow::{bail, Result};
 
 pub use host::{parse_artifact, ArtifactSpec, HostBackend, HostConfig};
+#[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 pub use sim::SimBackend;
 
@@ -390,17 +397,20 @@ pub struct QueueingPlan {
 }
 
 /// Factory for [`PjrtBackend`]s over one artifact directory.
+#[cfg(feature = "pjrt")]
 #[derive(Debug, Clone)]
 pub struct PjrtFactory {
     pub artifact_dir: String,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtFactory {
     pub fn new(artifact_dir: impl Into<String>) -> Self {
         PjrtFactory { artifact_dir: artifact_dir.into() }
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl BackendFactory for PjrtFactory {
     type Backend = PjrtBackend;
 
@@ -436,6 +446,7 @@ impl BackendFactory for SimFactory {
 /// Statically-dispatched "any of the three" backend, for call sites that
 /// pick the substrate at runtime (CLI, examples, the scaling bench).
 pub enum AnyBackend {
+    #[cfg(feature = "pjrt")]
     Pjrt(PjrtBackend),
     Host(HostBackend),
     Sim(SimBackend),
@@ -444,6 +455,7 @@ pub enum AnyBackend {
 impl Backend for AnyBackend {
     fn name(&self) -> &'static str {
         match self {
+            #[cfg(feature = "pjrt")]
             AnyBackend::Pjrt(b) => b.name(),
             AnyBackend::Host(b) => b.name(),
             AnyBackend::Sim(b) => b.name(),
@@ -452,6 +464,7 @@ impl Backend for AnyBackend {
 
     fn needs_artifacts(&self) -> bool {
         match self {
+            #[cfg(feature = "pjrt")]
             AnyBackend::Pjrt(b) => b.needs_artifacts(),
             AnyBackend::Host(b) => b.needs_artifacts(),
             AnyBackend::Sim(b) => b.needs_artifacts(),
@@ -460,6 +473,7 @@ impl Backend for AnyBackend {
 
     fn load(&mut self, artifact: &str) -> Result<()> {
         match self {
+            #[cfg(feature = "pjrt")]
             AnyBackend::Pjrt(b) => Backend::load(b, artifact),
             AnyBackend::Host(b) => b.load(artifact),
             AnyBackend::Sim(b) => b.load(artifact),
@@ -468,6 +482,7 @@ impl Backend for AnyBackend {
 
     fn is_loaded(&self, artifact: &str) -> bool {
         match self {
+            #[cfg(feature = "pjrt")]
             AnyBackend::Pjrt(b) => Backend::is_loaded(b, artifact),
             AnyBackend::Host(b) => b.is_loaded(artifact),
             AnyBackend::Sim(b) => b.is_loaded(artifact),
@@ -476,6 +491,7 @@ impl Backend for AnyBackend {
 
     fn execute(&mut self, artifact: &str, inputs: &[TensorRef<'_>]) -> Result<Vec<Vec<f32>>> {
         match self {
+            #[cfg(feature = "pjrt")]
             AnyBackend::Pjrt(b) => Backend::execute(b, artifact, inputs),
             AnyBackend::Host(b) => b.execute(artifact, inputs),
             AnyBackend::Sim(b) => b.execute(artifact, inputs),
@@ -488,6 +504,7 @@ impl Backend for AnyBackend {
         batch: &[&[TensorRef<'_>]],
     ) -> Result<Vec<Vec<Vec<f32>>>> {
         match self {
+            #[cfg(feature = "pjrt")]
             AnyBackend::Pjrt(b) => Backend::execute_batch(b, artifact, batch),
             AnyBackend::Host(b) => b.execute_batch(artifact, batch),
             AnyBackend::Sim(b) => b.execute_batch(artifact, batch),
@@ -501,6 +518,7 @@ impl Backend for AnyBackend {
         first_in_batch: bool,
     ) -> Option<ModeledStages> {
         match self {
+            #[cfg(feature = "pjrt")]
             AnyBackend::Pjrt(b) => b.modeled_stages_s(kept_patches, use_mask, first_in_batch),
             AnyBackend::Host(b) => b.modeled_stages_s(kept_patches, use_mask, first_in_batch),
             AnyBackend::Sim(b) => b.modeled_stages_s(kept_patches, use_mask, first_in_batch),
@@ -509,6 +527,7 @@ impl Backend for AnyBackend {
 
     fn modeled_queueing_s(&mut self, kept_patches: usize, use_mask: bool) -> f64 {
         match self {
+            #[cfg(feature = "pjrt")]
             AnyBackend::Pjrt(b) => b.modeled_queueing_s(kept_patches, use_mask),
             AnyBackend::Host(b) => b.modeled_queueing_s(kept_patches, use_mask),
             AnyBackend::Sim(b) => b.modeled_queueing_s(kept_patches, use_mask),
@@ -517,6 +536,7 @@ impl Backend for AnyBackend {
 
     fn health(&mut self) -> Option<BackendHealth> {
         match self {
+            #[cfg(feature = "pjrt")]
             AnyBackend::Pjrt(b) => b.health(),
             AnyBackend::Host(b) => b.health(),
             AnyBackend::Sim(b) => b.health(),
@@ -525,6 +545,7 @@ impl Backend for AnyBackend {
 
     fn recalibrate(&mut self) -> Option<RecalCost> {
         match self {
+            #[cfg(feature = "pjrt")]
             AnyBackend::Pjrt(b) => b.recalibrate(),
             AnyBackend::Host(b) => b.recalibrate(),
             AnyBackend::Sim(b) => b.recalibrate(),
@@ -577,7 +598,13 @@ impl BackendFactory for AnyFactory {
 
     fn create(&self, worker: usize) -> Result<AnyBackend> {
         Ok(match self.kind {
+            #[cfg(feature = "pjrt")]
             BackendKind::Pjrt => AnyBackend::Pjrt(PjrtBackend::new(&self.artifact_dir)?),
+            #[cfg(not(feature = "pjrt"))]
+            BackendKind::Pjrt => bail!(
+                "backend 'pjrt' was compiled out — rebuild with `--features pjrt` \
+                 (needs the vendored xla crate), or serve with `--backend host|sim`"
+            ),
             BackendKind::Host => AnyBackend::Host(HostBackend::new(self.host)),
             BackendKind::Sim => {
                 let mut b = SimBackend::new(self.host);
@@ -646,13 +673,35 @@ mod tests {
     #[test]
     fn any_factory_builds_the_requested_kind() {
         let host = HostConfig { depth_limit: Some(1), ..HostConfig::default() };
-        for (kind, name) in
-            [(BackendKind::Pjrt, "pjrt"), (BackendKind::Host, "host"), (BackendKind::Sim, "sim")]
-        {
-            let f = AnyFactory { kind, artifact_dir: "/nonexistent".into(), host, faults: None };
+        for (kind, name) in [(BackendKind::Host, "host"), (BackendKind::Sim, "sim")] {
+            let f = AnyFactory {
+                kind,
+                artifact_dir: "/nonexistent".into(),
+                host,
+                faults: None,
+                queueing: None,
+            };
             let b = f.create(0).expect("factory");
             assert_eq!(b.name(), name);
-            assert_eq!(b.needs_artifacts(), kind == BackendKind::Pjrt);
+            assert!(!b.needs_artifacts());
+        }
+        let f = AnyFactory {
+            kind: BackendKind::Pjrt,
+            artifact_dir: "/nonexistent".into(),
+            host,
+            faults: None,
+            queueing: None,
+        };
+        #[cfg(feature = "pjrt")]
+        {
+            let b = f.create(0).expect("pjrt factory");
+            assert_eq!(b.name(), "pjrt");
+            assert!(b.needs_artifacts());
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let err = f.create(0).unwrap_err().to_string();
+            assert!(err.contains("--features pjrt"), "{err}");
         }
     }
 
@@ -701,8 +750,13 @@ mod tests {
     fn any_backend_batch_matches_sequential() {
         const PD: usize = 16 * 16 * 3;
         let host = HostConfig { depth_limit: Some(1), ..HostConfig::default() };
-        let factory =
-            AnyFactory { kind: BackendKind::Host, artifact_dir: String::new(), host, faults: None };
+        let factory = AnyFactory {
+            kind: BackendKind::Host,
+            artifact_dir: String::new(),
+            host,
+            faults: None,
+            queueing: None,
+        };
         let mut any = factory.create(0).expect("any factory");
         let xa: Vec<f32> = (0..4 * PD).map(|i| (i % 7) as f32 / 7.0).collect();
         let xb: Vec<f32> = (0..4 * PD).map(|i| (i % 11) as f32 / 11.0).collect();
@@ -727,10 +781,15 @@ mod tests {
         assert_eq!(scores.len(), 4);
         assert!(b.is_loaded("mgnet_32"));
         // The same call through `AnyBackend` gives identical numerics.
-        let mut any =
-            AnyFactory { kind: BackendKind::Host, artifact_dir: String::new(), host, faults: None }
-                .create(0)
-                .expect("any factory");
+        let mut any = AnyFactory {
+            kind: BackendKind::Host,
+            artifact_dir: String::new(),
+            host,
+            faults: None,
+            queueing: None,
+        }
+        .create(0)
+        .expect("any factory");
         let scores_any = any.execute1("mgnet_32", &[TensorRef::new(&x, &dims)]).expect("exec");
         assert_eq!(scores, scores_any);
     }

@@ -27,6 +27,8 @@ pub struct CountingAlloc;
 
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        // relaxed-ok: process-wide event counter on the allocator hot
+        // path; exactness is only claimed for single-threaded runs.
         ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
         System.alloc(layout)
     }
@@ -36,11 +38,13 @@ unsafe impl GlobalAlloc for CountingAlloc {
     }
 
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        // relaxed-ok: same counter as `alloc`.
         ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
         System.alloc_zeroed(layout)
     }
 
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // relaxed-ok: same counter as `alloc`.
         ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
         System.realloc(ptr, layout, new_size)
     }
@@ -49,6 +53,8 @@ unsafe impl GlobalAlloc for CountingAlloc {
 /// Heap allocations since process start (0 unless [`CountingAlloc`] is the
 /// installed global allocator).
 pub fn alloc_count() -> u64 {
+    // relaxed-ok: same counter as `alloc`; callers difference two reads
+    // on one thread.
     ALLOC_COUNT.load(Ordering::Relaxed)
 }
 
@@ -94,6 +100,8 @@ pub fn time_fn<T>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T)
     }
     let mut times = Vec::with_capacity(iters as usize);
     for _ in 0..iters {
+        // lint-allow(clock): benchmark timing measures the real wall
+        // clock by definition; it never feeds serving deadlines.
         let t0 = Instant::now();
         std::hint::black_box(f());
         times.push(t0.elapsed().as_secs_f64());

@@ -5,4 +5,5 @@
 pub mod bench;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod table;

@@ -1,0 +1,19 @@
+//! Atomic primitives behind the loom seam.
+//!
+//! Code whose interleavings are model-checked (the lock-free
+//! [`crate::coordinator::health::HealthSlot`] publication protocol)
+//! imports its atomics from here instead of `std::sync::atomic`. Under a
+//! normal build this re-exports `std` types with zero cost; under
+//! `RUSTFLAGS="--cfg loom"` (the CI model-checking lane, see
+//! `rust/tests/loom_models.rs`) the same names resolve to loom's
+//! instrumented shims, so the exact production types and orderings are
+//! what the model checker explores — the same seam tokio uses.
+//!
+//! Only types actually used by model-checked modules are re-exported;
+//! add more as more protocols come under the model checker.
+
+#[cfg(loom)]
+pub use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+
+#[cfg(not(loom))]
+pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};

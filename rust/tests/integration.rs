@@ -6,6 +6,11 @@
 //! body: `PjRtClient` is not `Send`, and artifact compilation (~30 s per
 //! backbone bucket) is the dominant cost, so one sequential flow exercises
 //! the full pipeline.
+//!
+//! The whole file is gated on the `pjrt` cargo feature (the backend it
+//! exercises is compiled out by default); without it the test target
+//! compiles empty.
+#![cfg(feature = "pjrt")]
 
 use optovit::coordinator::pipeline::{serve, Pipeline, PipelineConfig, ServeOptions};
 use optovit::runtime::{PjrtBackend, Tensor};

@@ -1,0 +1,884 @@
+//! Source-level invariant linter for the Opto-ViT serving stack.
+//!
+//! The serving stack rests on invariants that `rustc` cannot see: all
+//! timing flows through the pluggable `coordinator::clock::Clock`, the
+//! serving hot path never panics, every `Ordering::Relaxed` atomic is a
+//! deliberate decision, and every `ServeReport` counter composes from
+//! per-session accumulators into the aggregate sum. This crate enforces
+//! them as a CI step (`cargo run -p invariant-lint`) so they are
+//! machine-checked on every PR instead of review-checked.
+//!
+//! # Rules
+//!
+//! 1. **clock-seam** (`clock`): no `Instant::now()`, `SystemTime::now()`,
+//!    or `thread::sleep` anywhere in `rust/src` outside
+//!    `coordinator/clock.rs` (the one place allowed to touch the wall
+//!    clock) and `#[cfg(test)]` code. Violations either route through the
+//!    owning `Clock` or carry a `lint-allow(clock)` justification.
+//! 2. **no-panic** (`panic`): no `.unwrap()`, `.expect(`, `panic!`,
+//!    `unreachable!`, `todo!`, `unimplemented!`, or slice-index
+//!    expressions in the production code of the five serving hot-path
+//!    modules (`coordinator/{server,pipeline,engine,batcher,autoscale}.rs`)
+//!    unless tagged `lint-allow(panic)`. Plain `assert!` is deliberately
+//!    not flagged: an assert is a declared invariant, not an accidental
+//!    panic path.
+//! 3. **relaxed-audit** (`relaxed`): every `Ordering::Relaxed` in
+//!    production code needs a `relaxed-ok:` justification or an upgrade
+//!    to `Acquire`/`Release`. The loom models in
+//!    `rust/tests/loom_models.rs` verify the upgrades this audit forced
+//!    (the `HealthSlot` publication pair and the clock `Event`
+//!    generation counter) against real interleavings.
+//! 4. **accounting** (`accounting`): every `u64` counter field of
+//!    `ServeReport` (plus the summed `modeled_queueing_s`) must appear in
+//!    both the per-session accumulator path (`SessionAccum::to_report`)
+//!    and the terminal aggregate path (`reassembler_loop`) in
+//!    `coordinator/server.rs` — the "aggregate = exact per-session sum"
+//!    convention every serving PR asserts.
+//!
+//! # Justification grammar
+//!
+//! A justification is a comment with a mandatory reason:
+//!
+//! ```text
+//! // lint-allow(clock): <reason>        line/statement scope
+//! // lint-allow(panic): <reason>
+//! // lint-allow(panic, fn): <reason>    whole next fn item
+//! // relaxed-ok: <reason>               shorthand for lint-allow(relaxed)
+//! // relaxed-ok(fn): <reason>           fn-scoped shorthand
+//! ```
+//!
+//! Scope: a tag on the same line as the finding covers that line. A tag
+//! on a comment line of its own covers the statement that starts on the
+//! next code line (tracked through multi-line calls by bracket depth; a
+//! block opener `{` ends coverage at the header line so a tag can never
+//! silently allow a whole block body).
+//! The `fn` form, placed directly above a `fn` item (attributes in
+//! between are fine), covers the whole function body — use it where one
+//! reason genuinely applies to every site in the function, not to switch
+//! a rule off wholesale. Reasons are mandatory; an empty reason is itself
+//! a violation.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// The serving hot-path files the no-panic rule covers, matched as path
+/// suffixes under the scanned root.
+pub const PANIC_FREE_FILES: [&str; 5] = [
+    "coordinator/server.rs",
+    "coordinator/pipeline.rs",
+    "coordinator/engine.rs",
+    "coordinator/batcher.rs",
+    "coordinator/autoscale.rs",
+];
+
+/// The one file allowed to read the wall clock.
+pub const CLOCK_SEAM_FILE: &str = "coordinator/clock.rs";
+
+/// Where `ServeReport` is defined (accounting rule anchor).
+pub const REPORT_FILE: &str = "coordinator/pipeline.rs";
+
+/// Where both accounting paths live (per-session + aggregate).
+pub const ACCOUNTING_FILE: &str = "coordinator/server.rs";
+
+/// Summed-`f64` fields held to the same per-session-sum convention as the
+/// `u64` counters.
+pub const SUMMED_F64_FIELDS: [&str; 1] = ["modeled_queueing_s"];
+
+/// Which rule a violation belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    Clock,
+    Panic,
+    Relaxed,
+    Accounting,
+}
+
+impl Rule {
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::Clock => "clock",
+            Rule::Panic => "panic",
+            Rule::Relaxed => "relaxed",
+            Rule::Accounting => "accounting",
+        }
+    }
+
+    fn from_tag(tag: &str) -> Option<Rule> {
+        match tag {
+            "clock" => Some(Rule::Clock),
+            "panic" => Some(Rule::Panic),
+            "relaxed" => Some(Rule::Relaxed),
+            "accounting" => Some(Rule::Accounting),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Path relative to the scanned root.
+    pub file: PathBuf,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file.display(), self.line, self.rule, self.message)
+    }
+}
+
+/// Outcome of a full scan.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub violations: Vec<Violation>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn count(&self, rule: Rule) -> usize {
+        self.violations.iter().filter(|v| v.rule == rule).count()
+    }
+}
+
+/// One source line split into its code and comment parts (string-literal
+/// contents are blanked out of the code part, so patterns inside error
+/// messages never trigger a rule).
+#[derive(Debug, Default, Clone)]
+struct LineView {
+    code: String,
+    comment: String,
+}
+
+/// Lexer state carried across lines.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Lex {
+    Normal,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+}
+
+/// Split a file into per-line code/comment views. Handles line and
+/// (nested) block comments, string/char literals, raw strings, and
+/// lifetimes. This is a lexer, not a parser: it only needs to be exact
+/// about *where code is*, not what it means.
+fn split_lines(src: &str) -> Vec<LineView> {
+    let mut out = Vec::new();
+    let mut state = Lex::Normal;
+    for raw in src.lines() {
+        let mut view = LineView::default();
+        let chars: Vec<char> = raw.chars().collect();
+        let mut i = 0usize;
+        // A line comment never carries over, but block comments and
+        // (raw) strings do.
+        while i < chars.len() {
+            let c = chars[i];
+            let next = chars.get(i + 1).copied();
+            match state {
+                Lex::Normal => match c {
+                    '/' if next == Some('/') => {
+                        view.comment.push_str(&raw[byte_at(raw, i)..]);
+                        i = chars.len();
+                    }
+                    '/' if next == Some('*') => {
+                        state = Lex::BlockComment(1);
+                        i += 2;
+                    }
+                    '"' => {
+                        // Keep the delimiter so `""` stays visibly a
+                        // string in the code view.
+                        view.code.push('"');
+                        state = Lex::Str;
+                        i += 1;
+                    }
+                    'r' | 'b' if is_raw_string_start(&chars, i) => {
+                        let (hashes, consumed) = raw_string_open(&chars, i);
+                        view.code.push('"');
+                        state = Lex::RawStr(hashes);
+                        i += consumed;
+                    }
+                    '\'' => {
+                        // Char literal vs lifetime: a literal closes with
+                        // a quote within a few chars (escapes included);
+                        // a lifetime never closes.
+                        if let Some(len) = char_literal_len(&chars, i) {
+                            view.code.push('\'');
+                            view.code.push('\'');
+                            i += len;
+                        } else {
+                            view.code.push('\'');
+                            i += 1;
+                        }
+                    }
+                    _ => {
+                        view.code.push(c);
+                        i += 1;
+                    }
+                },
+                Lex::BlockComment(depth) => {
+                    if c == '*' && next == Some('/') {
+                        state = if depth == 1 {
+                            Lex::Normal
+                        } else {
+                            Lex::BlockComment(depth - 1)
+                        };
+                        i += 2;
+                    } else if c == '/' && next == Some('*') {
+                        state = Lex::BlockComment(depth + 1);
+                        i += 2;
+                    } else {
+                        view.comment.push(c);
+                        i += 1;
+                    }
+                }
+                Lex::Str => match c {
+                    '\\' => i += 2,
+                    '"' => {
+                        view.code.push('"');
+                        state = Lex::Normal;
+                        i += 1;
+                    }
+                    _ => i += 1,
+                },
+                Lex::RawStr(hashes) => {
+                    if c == '"' && closes_raw_string(&chars, i, hashes) {
+                        view.code.push('"');
+                        state = Lex::Normal;
+                        i += 1 + hashes as usize;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+        }
+        out.push(view);
+    }
+    out
+}
+
+/// Byte offset of the `i`-th char in `s` (lines are short; linear is fine).
+fn byte_at(s: &str, i: usize) -> usize {
+    s.char_indices().nth(i).map(|(b, _)| b).unwrap_or(s.len())
+}
+
+/// Is `chars[i]` the start of a raw (possibly byte) string: `r"`, `r#`,
+/// `br"`, `br#` — and not just an identifier containing `r`?
+fn is_raw_string_start(chars: &[char], i: usize) -> bool {
+    if i > 0 {
+        let p = chars[i - 1];
+        if p.is_alphanumeric() || p == '_' {
+            return false;
+        }
+    }
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return false;
+    }
+    j += 1;
+    while chars.get(j) == Some(&'#') {
+        j += 1;
+    }
+    chars.get(j) == Some(&'"')
+}
+
+/// Number of `#`s and chars consumed by a raw-string opener at `i`.
+fn raw_string_open(chars: &[char], i: usize) -> (u32, usize) {
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+    }
+    j += 1; // the `r`
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    j += 1; // the opening quote
+    (hashes, j - i)
+}
+
+fn closes_raw_string(chars: &[char], i: usize, hashes: u32) -> bool {
+    (1..=hashes as usize).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+/// If `chars[i]` (a `'`) opens a char literal, its total length in chars;
+/// `None` for a lifetime.
+fn char_literal_len(chars: &[char], i: usize) -> Option<usize> {
+    match chars.get(i + 1) {
+        Some('\\') => {
+            // Escaped: find the closing quote within a small window
+            // (`'\n'`, `'\x7f'`, `'\u{1F600}'`).
+            for j in i + 3..(i + 12).min(chars.len()) {
+                if chars[j] == '\'' {
+                    return Some(j - i + 1);
+                }
+            }
+            None
+        }
+        Some(_) if chars.get(i + 2) == Some(&'\'') => Some(3),
+        _ => None,
+    }
+}
+
+/// Lines covered by `#[cfg(test)]` items (the attribute, the item
+/// header, and the item body through its closing brace).
+fn test_regions(lines: &[LineView]) -> Vec<bool> {
+    let mut test = vec![false; lines.len()];
+    let mut i = 0usize;
+    while i < lines.len() {
+        if lines[i].code.contains("#[cfg(test)]") {
+            let end = item_end(lines, i);
+            for t in test.iter_mut().take(end + 1).skip(i) {
+                *t = true;
+            }
+            i = end + 1;
+        } else {
+            i += 1;
+        }
+    }
+    test
+}
+
+/// Last line of the item starting at (or just after) `start`: either a
+/// braceless item ending in `;`, or the line closing the item's brace
+/// block. Falls back to `start` at end of file.
+fn item_end(lines: &[LineView], start: usize) -> usize {
+    let mut depth = 0i64;
+    let mut opened = false;
+    for (j, line) in lines.iter().enumerate().skip(start) {
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => depth -= 1,
+                ';' if !opened && depth == 0 => return j,
+                _ => {}
+            }
+        }
+        if opened && depth <= 0 {
+            return j;
+        }
+    }
+    lines.len() - 1
+}
+
+/// A parsed justification tag.
+#[derive(Debug, Clone, Copy)]
+struct Allow {
+    rule: Rule,
+    fn_scope: bool,
+}
+
+/// Parse every justification tag in a comment. Tags with a missing or
+/// empty reason are returned as violations instead of allowances.
+fn parse_allows(comment: &str) -> (Vec<Allow>, Vec<&'static str>) {
+    let mut allows = Vec::new();
+    let mut errors = Vec::new();
+    for (needle, implied_rule) in
+        [("lint-allow(", None), ("relaxed-ok", Some(Rule::Relaxed))]
+    {
+        let mut rest = comment;
+        while let Some(pos) = rest.find(needle) {
+            let after = &rest[pos + needle.len()..];
+            let (rule, fn_scope, tail) = match implied_rule {
+                // lint-allow(<rule>[, fn]): ...
+                None => {
+                    let Some(close) = after.find(')') else {
+                        errors.push("malformed lint-allow tag: missing ')'");
+                        break;
+                    };
+                    let inside = &after[..close];
+                    let mut parts = inside.split(',').map(str::trim);
+                    let rule_name = parts.next().unwrap_or("");
+                    let fn_scope = parts.any(|p| p == "fn");
+                    match Rule::from_tag(rule_name) {
+                        Some(r) => (r, fn_scope, &after[close + 1..]),
+                        None => {
+                            errors.push("unknown rule in lint-allow tag");
+                            rest = &after[close + 1..];
+                            continue;
+                        }
+                    }
+                }
+                // relaxed-ok[(fn)]: ...
+                Some(r) => {
+                    let (fn_scope, tail) = if let Some(t) = after.strip_prefix("(fn)") {
+                        (true, t)
+                    } else {
+                        (false, after)
+                    };
+                    // Without the colon this is a prose mention of the
+                    // grammar, not a tag; it grants nothing, and any
+                    // Relaxed it was meant to cover still gets flagged —
+                    // self-correcting, so no error.
+                    if !tail.starts_with(':') {
+                        rest = tail;
+                        continue;
+                    }
+                    (r, fn_scope, tail)
+                }
+            };
+            let reason_ok = tail
+                .strip_prefix(':')
+                .map(|r| r.trim().len() >= 3)
+                .unwrap_or(false);
+            if reason_ok {
+                allows.push(Allow { rule, fn_scope });
+            } else {
+                errors.push("justification tag without a reason (`: <why>` is mandatory)");
+            }
+            rest = tail;
+        }
+    }
+    (allows, errors)
+}
+
+/// Per-line allowance map for each rule, built from the justification
+/// comments. Malformed tags are reported as violations of the rule they
+/// tried to allow (or `accounting` as a catch-all for unknown rules —
+/// they still fail the build, which is the point).
+fn allowance_map(
+    lines: &[LineView],
+    rel: &Path,
+    violations: &mut Vec<Violation>,
+) -> Vec<Vec<Rule>> {
+    let mut allowed: Vec<Vec<Rule>> = vec![Vec::new(); lines.len()];
+    for i in 0..lines.len() {
+        if lines[i].comment.is_empty() {
+            continue;
+        }
+        let (allows, errors) = parse_allows(&lines[i].comment);
+        for e in errors {
+            violations.push(Violation {
+                file: rel.to_path_buf(),
+                line: i + 1,
+                rule: Rule::Accounting,
+                message: e.to_string(),
+            });
+        }
+        if allows.is_empty() {
+            continue;
+        }
+        let own_code = !lines[i].code.trim().is_empty();
+        for a in allows {
+            if a.fn_scope {
+                // Covers the next `fn` item (attributes in between are
+                // fine) through its closing brace.
+                let mut j = i;
+                while j < lines.len() && !lines[j].code.contains("fn ") {
+                    j += 1;
+                }
+                if j < lines.len() {
+                    let end = item_end(lines, j);
+                    for line_rules in allowed.iter_mut().take(end + 1).skip(i) {
+                        line_rules.push(a.rule);
+                    }
+                }
+            } else if own_code {
+                allowed[i].push(a.rule);
+            } else {
+                // Comment-only line: cover the statement starting on the
+                // next code line, tracked through multi-line calls by
+                // bracket depth.
+                let mut depth = 0i64;
+                for j in i + 1..lines.len() {
+                    allowed[j].push(a.rule);
+                    let code = lines[j].code.trim();
+                    if code.is_empty() {
+                        continue;
+                    }
+                    for c in code.chars() {
+                        match c {
+                            '(' | '[' | '{' => depth += 1,
+                            ')' | ']' | '}' => depth -= 1,
+                            _ => {}
+                        }
+                    }
+                    let last = code.chars().last().unwrap_or(' ');
+                    // A block opener ends coverage at the header line —
+                    // a tag must never silently allow a whole block body.
+                    if last == '{' {
+                        break;
+                    }
+                    if depth <= 0 && matches!(last, ';' | '}' | ',') {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    allowed
+}
+
+fn is_allowed(allowed: &[Vec<Rule>], line: usize, rule: Rule) -> bool {
+    allowed.get(line).map(|rs| rs.contains(&rule)).unwrap_or(false)
+}
+
+/// Slice-index positions in a code line: a `[` whose previous
+/// non-whitespace char ends an indexable expression (identifier, `)`,
+/// `]`, or `?`). Attribute (`#[`), macro (`vec![`), type (`: [u64; 4]`
+/// and `&mut [bool]`), and slice-pattern (`&[..]`) brackets all have
+/// other predecessors — a keyword directly before the `[` (`mut`, `dyn`,
+/// `in`, …) means a type or literal position, not an index.
+fn has_slice_index(code: &str) -> bool {
+    let chars: Vec<char> = code.chars().collect();
+    for (i, &c) in chars.iter().enumerate() {
+        if c != '[' {
+            continue;
+        }
+        let Some(mut j) = chars[..i].iter().rposition(|c| !c.is_whitespace()) else {
+            continue;
+        };
+        let p = chars[j];
+        if !(p.is_alphanumeric() || p == '_' || p == ')' || p == ']' || p == '?') {
+            continue;
+        }
+        if p.is_alphanumeric() || p == '_' {
+            let end = j + 1;
+            while j > 0 && (chars[j - 1].is_alphanumeric() || chars[j - 1] == '_') {
+                j -= 1;
+            }
+            let word: String = chars[j..end].iter().collect();
+            if matches!(
+                word.as_str(),
+                "mut" | "dyn" | "in" | "return" | "else" | "box" | "const" | "as"
+            ) {
+                continue;
+            }
+        }
+        return true;
+    }
+    false
+}
+
+fn path_matches(rel: &Path, suffix: &str) -> bool {
+    let rel = rel.to_string_lossy().replace('\\', "/");
+    rel == suffix || rel.ends_with(&format!("/{suffix}"))
+}
+
+/// Whether `ident` occurs with identifier boundaries in `haystack`.
+fn contains_word(haystack: &str, ident: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = haystack[start..].find(ident) {
+        let abs = start + pos;
+        let before = haystack[..abs].chars().next_back();
+        let after = haystack[abs + ident.len()..].chars().next();
+        let boundary = |c: Option<char>| {
+            c.map(|c| !(c.is_alphanumeric() || c == '_')).unwrap_or(true)
+        };
+        if boundary(before) && boundary(after) {
+            return true;
+        }
+        start = abs + ident.len();
+    }
+    false
+}
+
+/// Scan one already-lexed file with the line-local rules (1–3).
+fn scan_file(rel: &Path, lines: &[LineView], violations: &mut Vec<Violation>) {
+    let test = test_regions(lines);
+    let allowed = allowance_map(lines, rel, violations);
+    let clock_exempt = path_matches(rel, CLOCK_SEAM_FILE);
+    let panic_free = PANIC_FREE_FILES.iter().any(|f| path_matches(rel, f));
+
+    for (i, line) in lines.iter().enumerate() {
+        if test[i] || line.code.trim().is_empty() {
+            continue;
+        }
+        let code = &line.code;
+
+        // Rule 1: clock-seam.
+        if !clock_exempt && !is_allowed(&allowed, i, Rule::Clock) {
+            for pat in ["Instant::now", "SystemTime::now", "thread::sleep"] {
+                if code.contains(pat) {
+                    violations.push(Violation {
+                        file: rel.to_path_buf(),
+                        line: i + 1,
+                        rule: Rule::Clock,
+                        message: format!(
+                            "`{pat}` outside coordinator/clock.rs — route through the \
+                             owning `Clock` (or tag `lint-allow(clock): <reason>`)"
+                        ),
+                    });
+                }
+            }
+        }
+
+        // Rule 2: no-panic serving path.
+        if panic_free && !is_allowed(&allowed, i, Rule::Panic) {
+            let panics = [
+                (".unwrap()", "unwrap"),
+                (".expect(", "expect"),
+                ("panic!", "panic!"),
+                ("unreachable!", "unreachable!"),
+                ("todo!", "todo!"),
+                ("unimplemented!", "unimplemented!"),
+            ];
+            for (pat, what) in panics {
+                if code.contains(pat) {
+                    violations.push(Violation {
+                        file: rel.to_path_buf(),
+                        line: i + 1,
+                        rule: Rule::Panic,
+                        message: format!(
+                            "`{what}` on the serving path — convert to `ServeError` via \
+                             `guard`/`recover` (or tag `lint-allow(panic): <reason>`)"
+                        ),
+                    });
+                }
+            }
+            if has_slice_index(code) {
+                violations.push(Violation {
+                    file: rel.to_path_buf(),
+                    line: i + 1,
+                    rule: Rule::Panic,
+                    message: "slice-index on the serving path — use `.get()` or tag \
+                              `lint-allow(panic): <reason>` stating the bounds invariant"
+                        .to_string(),
+                });
+            }
+        }
+
+        // Rule 3: relaxed-ordering audit.
+        if code.contains("Ordering::Relaxed") && !is_allowed(&allowed, i, Rule::Relaxed) {
+            violations.push(Violation {
+                file: rel.to_path_buf(),
+                line: i + 1,
+                rule: Rule::Relaxed,
+                message: "`Ordering::Relaxed` without a `relaxed-ok: <reason>` \
+                          justification — upgrade to Acquire/Release on publish sites \
+                          (see tests/loom_models.rs) or justify"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// `u64` fields of `pub struct ServeReport` in the lexed report file.
+fn serve_report_counters(lines: &[LineView]) -> Option<(usize, Vec<String>)> {
+    let start = lines
+        .iter()
+        .position(|l| l.code.contains("pub struct ServeReport"))?;
+    let end = item_end(lines, start);
+    let mut fields = Vec::new();
+    for line in lines.iter().take(end + 1).skip(start + 1) {
+        let code = line.code.trim();
+        if let Some(rest) = code.strip_prefix("pub ") {
+            if let Some((name, ty)) = rest.split_once(':') {
+                let ty = ty.trim().trim_end_matches(',');
+                let name = name.trim();
+                if ty == "u64" || SUMMED_F64_FIELDS.contains(&name) {
+                    fields.push(name.to_string());
+                }
+            }
+        }
+    }
+    Some((start, fields))
+}
+
+/// Body line range of the first `fn <name>` in the lexed file.
+fn fn_body(lines: &[LineView], name: &str) -> Option<(usize, usize)> {
+    let pat = format!("fn {name}");
+    let start = lines.iter().position(|l| {
+        l.code.contains(&pat)
+            && l.code[l.code.find(&pat).unwrap() + pat.len()..]
+                .chars()
+                .next()
+                .map(|c| c == '(' || c == '<' || c.is_whitespace())
+                .unwrap_or(true)
+    })?;
+    Some((start, item_end(lines, start)))
+}
+
+/// Rule 4: accounting convention over the whole tree.
+fn scan_accounting(
+    files: &BTreeMap<PathBuf, Vec<LineView>>,
+    violations: &mut Vec<Violation>,
+) {
+    let report = files.iter().find(|(p, _)| path_matches(p, REPORT_FILE));
+    let server = files.iter().find(|(p, _)| path_matches(p, ACCOUNTING_FILE));
+    let (Some((report_path, report_lines)), Some((server_path, server_lines))) =
+        (report, server)
+    else {
+        // A partial tree (fixtures) without both anchors has nothing to
+        // check — rule 4 only fires on trees that define ServeReport.
+        return;
+    };
+    let Some((struct_line, counters)) = serve_report_counters(report_lines) else {
+        violations.push(Violation {
+            file: report_path.clone(),
+            line: 1,
+            rule: Rule::Accounting,
+            message: "`pub struct ServeReport` not found — the accounting rule lost its \
+                      anchor; update invariant-lint if the struct moved"
+                .to_string(),
+        });
+        return;
+    };
+    let anchors = [
+        ("to_report", "per-session accumulator path (SessionAccum::to_report)"),
+        ("reassembler_loop", "terminal aggregate path (reassembler_loop)"),
+    ];
+    for (fn_name, describe) in anchors {
+        let Some((body_start, body_end)) = fn_body(server_lines, fn_name) else {
+            violations.push(Violation {
+                file: server_path.clone(),
+                line: 1,
+                rule: Rule::Accounting,
+                message: format!(
+                    "`fn {fn_name}` not found — the accounting rule lost its anchor; \
+                     update invariant-lint if the function was renamed"
+                ),
+            });
+            continue;
+        };
+        for counter in &counters {
+            let present = server_lines[body_start..=body_end]
+                .iter()
+                .any(|l| contains_word(&l.code, counter));
+            if !present {
+                violations.push(Violation {
+                    file: report_path.clone(),
+                    line: struct_line + 1,
+                    rule: Rule::Accounting,
+                    message: format!(
+                        "ServeReport counter `{counter}` missing from the {describe} — \
+                         every counter must flow through both the per-session and \
+                         aggregate-sum paths"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+fn collect_rs_files(root: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<_> =
+        fs::read_dir(root)?.collect::<std::io::Result<Vec<_>>>()?;
+    entries.sort_by_key(|e| e.path());
+    for entry in entries {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Scan every `.rs` file under `root` with all four rules.
+pub fn scan_root(root: &Path) -> std::io::Result<Report> {
+    let mut paths = Vec::new();
+    collect_rs_files(root, &mut paths)?;
+    let mut violations = Vec::new();
+    let mut lexed: BTreeMap<PathBuf, Vec<LineView>> = BTreeMap::new();
+    for path in &paths {
+        let src = fs::read_to_string(path)?;
+        let rel = path.strip_prefix(root).unwrap_or(path).to_path_buf();
+        lexed.insert(rel, split_lines(&src));
+    }
+    for (rel, lines) in &lexed {
+        scan_file(rel, lines, &mut violations);
+    }
+    scan_accounting(&lexed, &mut violations);
+    violations.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(Report { violations, files_scanned: paths.len() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lex(src: &str) -> Vec<LineView> {
+        split_lines(src)
+    }
+
+    #[test]
+    fn lexer_strips_strings_and_comments() {
+        let lines = lex("let x = \"Instant::now()\"; // Instant::now()\n");
+        assert!(!lines[0].code.contains("Instant::now"));
+        assert!(lines[0].comment.contains("Instant::now"));
+    }
+
+    #[test]
+    fn lexer_handles_raw_strings_and_chars() {
+        let lines = lex("let s = r#\"a \"quoted\" panic!()\"#; let c = '\"'; s.len()[0];");
+        assert!(!lines[0].code.contains("panic!"));
+        assert!(lines[0].code.contains("len()[0]"));
+    }
+
+    #[test]
+    fn lexer_tracks_block_comments_across_lines() {
+        let lines = lex("/* start\n Instant::now()\n */ let x = 1;");
+        assert!(lines[1].code.is_empty());
+        assert!(lines[1].comment.contains("Instant::now"));
+        assert!(lines[2].code.contains("let x = 1;"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let lines = lex("fn f<'a>(x: &'a str) -> &'a str { x }");
+        assert!(lines[0].code.contains("fn f<'a>"));
+    }
+
+    #[test]
+    fn slice_index_detection() {
+        assert!(has_slice_index("let x = v[i];"));
+        assert!(has_slice_index("foo()[0]"));
+        assert!(has_slice_index("&self.buf[..n]"));
+        assert!(!has_slice_index("#[derive(Debug)]"));
+        assert!(!has_slice_index("let v = vec![1, 2];"));
+        assert!(!has_slice_index("counts: [u64; 4],"));
+        assert!(!has_slice_index("fn f(x: &[u32]) {}"));
+        assert!(!has_slice_index("alive: &mut [bool],"));
+        assert!(!has_slice_index("for x in [1, 2] {}"));
+    }
+
+    #[test]
+    fn test_region_tracking_covers_mod_tests() {
+        let src = "fn a() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n    fn b() { y.unwrap(); }\n}\n";
+        let lines = lex(src);
+        let t = test_regions(&lines);
+        assert_eq!(t, vec![false, true, true, true, true]);
+    }
+
+    #[test]
+    fn allow_tags_require_reasons() {
+        let (allows, errors) = parse_allows(" relaxed-ok: single-writer counter");
+        assert_eq!(allows.len(), 1);
+        assert!(errors.is_empty());
+        let (allows, errors) = parse_allows(" relaxed-ok:");
+        assert!(allows.is_empty());
+        assert_eq!(errors.len(), 1);
+        // A colon-less mention is prose, not a tag: no allow, no error.
+        let (allows, errors) = parse_allows(" each carries a relaxed-ok justification");
+        assert!(allows.is_empty() && errors.is_empty());
+        let (allows, _) = parse_allows(" lint-allow(panic, fn): slot ids pool-validated");
+        assert!(allows[0].fn_scope);
+        assert_eq!(allows[0].rule, Rule::Panic);
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(contains_word("dropped += s.rejected;", "dropped"));
+        assert!(!contains_word("dropped_quota += 1;", "dropped"));
+    }
+}

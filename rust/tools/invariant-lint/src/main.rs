@@ -1,0 +1,40 @@
+//! CLI entry point: `cargo run -p invariant-lint [path-to-src]`.
+//!
+//! Scans `rust/src` (or the given root) with all four rules and exits
+//! non-zero if any violation is found. Output is one `file:line: [rule]
+//! message` per violation, sorted, so CI diffs are stable.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let root = std::env::args().nth(1).map(PathBuf::from).unwrap_or_else(|| {
+        // tools/invariant-lint -> rust/src
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../../src")
+    });
+    let report = match invariant_lint::scan_root(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("invariant-lint: failed to scan {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    for v in &report.violations {
+        println!("{v}");
+    }
+    let n = report.violations.len();
+    if n == 0 {
+        println!(
+            "invariant-lint: {} files clean (clock-seam, no-panic, relaxed-audit, accounting)",
+            report.files_scanned
+        );
+        ExitCode::SUCCESS
+    } else {
+        println!(
+            "invariant-lint: {n} violation(s) across {} files — see docs/coordinator \
+             module map for the justification grammar",
+            report.files_scanned
+        );
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,48 @@
+//! Fixture: a miniature frame pipeline seeded with invariant violations
+//! the linter must find (and test-only code it must ignore).
+
+use std::time::Instant;
+
+/// Terminal per-run report — the accounting-rule anchor. `slo_miss` is
+/// deliberately dropped from the per-session path in `server.rs`.
+pub struct ServeReport {
+    pub frames: u64,
+    pub slo_miss: u64,
+    pub mean_batch: f64,
+}
+
+impl Default for ServeReport {
+    fn default() -> Self {
+        ServeReport { frames: 0, slo_miss: 0, mean_batch: 0.0 }
+    }
+}
+
+/// Clock-seam escape: reads the wall clock outside `coordinator/clock.rs`.
+pub fn stamp() -> Instant {
+    Instant::now()
+}
+
+/// Untagged slice index on the serving path.
+pub fn first_frame(frames: &[u64]) -> u64 {
+    frames[0]
+}
+
+/// Untagged unwrap on the serving path.
+pub fn decode(v: Option<u64>) -> u64 {
+    v.unwrap()
+}
+
+/// "Instant::now() would be a violation here" — patterns inside string
+/// literals and comments must not trigger (the lexer blanks them).
+pub fn describe() -> &'static str {
+    "call Instant::now() and .unwrap() at your peril"
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn wall_clock_and_panics_are_fine_in_tests() {
+        let t = std::time::Instant::now();
+        assert!(Some(t).map(|x| x.elapsed()).unwrap().as_secs() < 3600);
+    }
+}

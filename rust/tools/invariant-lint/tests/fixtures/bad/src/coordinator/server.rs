@@ -1,0 +1,49 @@
+//! Fixture: the session-server half — accounting paths plus atomics with
+//! missing and malformed justifications.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::pipeline::ServeReport;
+
+pub struct SessionCore {
+    frames: AtomicU64,
+    slo_miss: AtomicU64,
+}
+
+impl SessionCore {
+    /// Untagged Relaxed: needs a `relaxed-ok` justification or an
+    /// Acquire/Release upgrade.
+    pub fn bump(&self) {
+        self.frames.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Malformed tag (reason too short) — the tag itself is a finding,
+    /// and it grants nothing, so the Relaxed below stays flagged too.
+    pub fn miss(&self) {
+        // relaxed-ok: no
+        self.slo_miss.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Properly tagged panic site: not a finding.
+    pub fn lane(&self, lanes: &[u64], idx: usize) -> u64 {
+        lanes[idx] // lint-allow(panic): idx is produced by enumerate() over this slice
+    }
+
+    /// Per-session accounting path — `slo_miss` is missing (the seeded
+    /// accounting violation).
+    fn to_report(&self) -> ServeReport {
+        ServeReport { frames: self.frames.load(Ordering::Acquire), ..Default::default() }
+    }
+}
+
+/// Aggregate accounting path: sums every counter (correct).
+fn reassembler_loop(sessions: &[SessionCore]) -> ServeReport {
+    let mut total = ServeReport::default();
+    for s in sessions.iter() {
+        total.frames += s.frames.load(Ordering::Acquire);
+        total.slo_miss += s.slo_miss.load(Ordering::Acquire);
+    }
+    // Clock-seam escape: a raw sleep on the serving path.
+    std::thread::sleep(std::time::Duration::from_millis(1));
+    total
+}

@@ -1,0 +1,46 @@
+//! Fixture: the session-server half with complete accounting and
+//! justified atomics — zero findings expected.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::pipeline::ServeReport;
+
+pub struct SessionCore {
+    frames: AtomicU64,
+    slo_miss: AtomicU64,
+}
+
+impl SessionCore {
+    pub fn bump(&self) {
+        // relaxed-ok: single-writer statistics counter; readers tolerate
+        // a stale count.
+        self.frames.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn miss(&self) {
+        self.slo_miss.fetch_add(1, Ordering::Release);
+    }
+
+    pub fn lane(&self, lanes: &[u64], idx: usize) -> u64 {
+        lanes[idx] // lint-allow(panic): idx is produced by enumerate() over this slice
+    }
+
+    /// Per-session accounting path: every `ServeReport` counter appears.
+    fn to_report(&self) -> ServeReport {
+        ServeReport {
+            frames: self.frames.load(Ordering::Acquire),
+            slo_miss: self.slo_miss.load(Ordering::Acquire),
+            mean_batch: 0.0,
+        }
+    }
+}
+
+/// Aggregate accounting path: sums every counter.
+fn reassembler_loop(sessions: &[SessionCore]) -> ServeReport {
+    let mut total = ServeReport::default();
+    for s in sessions.iter() {
+        total.frames += s.frames.load(Ordering::Acquire);
+        total.slo_miss += s.slo_miss.load(Ordering::Acquire);
+    }
+    total
+}

@@ -1,0 +1,88 @@
+//! End-to-end rule tests over the seeded fixture trees.
+//!
+//! `fixtures/bad` plants one of everything — a clock-seam escape, an
+//! untagged unwrap + slice index, untagged and mis-tagged `Relaxed`
+//! sites, and a `ServeReport` counter dropped from the per-session
+//! accounting path — and this test pins the scanner to the **exact**
+//! finding set (file, line, rule), so both false negatives (a seeded
+//! violation slips through) and false positives (the count grows) fail.
+//! `fixtures/clean` is the repaired twin and must scan to zero, the same
+//! bar `cargo run -p invariant-lint` holds the real tree to in CI.
+
+use std::path::{Path, PathBuf};
+
+use invariant_lint::{scan_root, Rule};
+
+fn fixture(tree: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(tree).join("src")
+}
+
+#[test]
+fn bad_tree_yields_exactly_the_seeded_findings() {
+    let report = scan_root(&fixture("bad")).expect("scan bad fixture");
+    assert_eq!(report.files_scanned, 2);
+
+    let got: Vec<(String, usize, Rule)> = report
+        .violations
+        .iter()
+        .map(|v| (v.file.to_string_lossy().replace('\\', "/"), v.line, v.rule))
+        .collect();
+    let expected: Vec<(String, usize, Rule)> = [
+        ("coordinator/pipeline.rs", 8, Rule::Accounting), // slo_miss off the per-session path
+        ("coordinator/pipeline.rs", 22, Rule::Clock),     // Instant::now()
+        ("coordinator/pipeline.rs", 27, Rule::Panic),     // frames[0]
+        ("coordinator/pipeline.rs", 32, Rule::Panic),     // v.unwrap()
+        ("coordinator/server.rs", 17, Rule::Relaxed),     // untagged fetch_add
+        ("coordinator/server.rs", 23, Rule::Accounting),  // reason-less relaxed-ok tag
+        ("coordinator/server.rs", 24, Rule::Relaxed),     // the tag granted nothing
+        ("coordinator/server.rs", 47, Rule::Clock),       // thread::sleep
+    ]
+    .into_iter()
+    .map(|(f, l, r)| (f.to_string(), l, r))
+    .collect();
+    assert_eq!(got, expected, "finding set drifted from the seeded violations");
+
+    // Per-rule totals, as a readable summary of the same pin.
+    assert_eq!(report.count(Rule::Clock), 2);
+    assert_eq!(report.count(Rule::Panic), 2);
+    assert_eq!(report.count(Rule::Relaxed), 2);
+    assert_eq!(report.count(Rule::Accounting), 2);
+}
+
+#[test]
+fn bad_tree_messages_name_the_offense() {
+    let report = scan_root(&fixture("bad")).expect("scan bad fixture");
+    let messages: Vec<String> = report.violations.iter().map(|v| v.message.clone()).collect();
+    assert!(messages.iter().any(|m| m.contains("Instant::now")), "{messages:?}");
+    assert!(messages.iter().any(|m| m.contains("thread::sleep")), "{messages:?}");
+    assert!(messages.iter().any(|m| m.contains("slo_miss")), "{messages:?}");
+    assert!(messages.iter().any(|m| m.contains("Ordering::Relaxed")), "{messages:?}");
+}
+
+#[test]
+fn clean_tree_scans_to_zero() {
+    let report = scan_root(&fixture("clean")).expect("scan clean fixture");
+    assert_eq!(report.files_scanned, 2);
+    assert!(
+        report.violations.is_empty(),
+        "clean fixture must lint clean, got: {:#?}",
+        report.violations
+    );
+}
+
+/// The fixture trees exercise the tagged-and-ignored paths too: the
+/// well-formed `lint-allow(panic)` on the slice index and the `relaxed-ok`
+/// with a real reason appear in *both* trees and are never findings.
+#[test]
+fn well_formed_tags_suppress_in_both_trees() {
+    for tree in ["bad", "clean"] {
+        let report = scan_root(&fixture(tree)).expect("scan fixture");
+        assert!(
+            !report
+                .violations
+                .iter()
+                .any(|v| v.rule == Rule::Panic && v.file.to_string_lossy().contains("server")),
+            "{tree}: the tagged lane() slice index must not be a finding"
+        );
+    }
+}
