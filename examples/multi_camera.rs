@@ -20,6 +20,14 @@
 //! by an admission quota (token bucket) whose rejections land in the
 //! distinct `q-drop` column instead of `dropped`.
 //!
+//! Precision is a per-tenant serving contract too: the SLO tenant pins
+//! INT8 (full operating-point fidelity), the bulk tenant pins INT4 (its
+//! frames ride the cheap converter scale — watch its share of the
+//! `tiers` column and the lower aggregate energy/frame), and every other
+//! camera serves [`PrecisionPolicy::Auto`], letting MGNet's ROI density
+//! pick INT8 or INT4 frame by frame. Micro-batch groups stay tier-pure:
+//! an INT4 frame never rides an INT8 group's weight programming.
+//!
 //! On the `sim` backend the fleet additionally runs on **degrading
 //! optics**: a seeded fault schedule accumulates MR thermal drift fast
 //! enough to push workers accuracy-at-risk within the run, so the
@@ -52,6 +60,7 @@ use optovit::coordinator::clock::Clock;
 use optovit::coordinator::engine::EngineConfig;
 use optovit::coordinator::pipeline::{Pipeline, PipelineConfig, ServeOptions};
 use optovit::coordinator::server::{spawn_synthetic_sensor, Quota, Server, SessionOptions};
+use optovit::quant::{PrecisionPolicy, PrecisionTier};
 use optovit::runtime::{AnyFactory, BackendFactory, BackendKind, FaultPlan};
 use optovit::util::table::{si_energy, si_time, Table};
 
@@ -112,11 +121,19 @@ fn main() -> anyhow::Result<()> {
         let weight = if cam == 0 { 2 } else { 1 };
         let mut sopts = SessionOptions::named(format!("camera-{cam}")).with_weight(weight);
         if cam == 0 {
-            sopts = sopts.with_slo(Duration::from_millis(50));
+            sopts = sopts
+                .with_slo(Duration::from_millis(50))
+                .with_precision(PrecisionPolicy::Fixed(PrecisionTier::Int8));
         } else if cam == cameras - 1 {
-            // Bulk tenant: at most ~200 admissions/s sustained, burst 8;
-            // quota rejections count `q-drop`, never `dropped`.
-            sopts = sopts.with_quota(Quota::rate(200.0, 8));
+            // Bulk tenant: at most ~200 admissions/s sustained, burst 8
+            // (quota rejections count `q-drop`, never `dropped`), served
+            // entirely at the cheap INT4 operating point.
+            sopts = sopts
+                .with_quota(Quota::rate(200.0, 8))
+                .with_precision(PrecisionPolicy::Fixed(PrecisionTier::Int4));
+        } else {
+            // Mid-fleet cameras let ROI density pick the tier per frame.
+            sopts = sopts.with_precision(PrecisionPolicy::Auto);
         }
         let session = server.session(sopts)?;
         let (submitter, stream) = session.split();
@@ -134,8 +151,8 @@ fn main() -> anyhow::Result<()> {
     }
 
     let mut t = Table::new(vec![
-        "camera", "weight", "frames", "dropped", "q-drop", "shed", "slo miss", "at-risk", "fps",
-        "latency", "p99", "mean batch", "IoU",
+        "camera", "weight", "frames", "tiers 4/8/32", "dropped", "q-drop", "shed", "slo miss",
+        "at-risk", "fps", "latency", "p99", "mean batch", "IoU",
     ]);
     // While the fleet drains its start-up burst, an autoscaler ticks
     // against the live server on the serving clock: the whole-fleet
@@ -164,6 +181,10 @@ fn main() -> anyhow::Result<()> {
                     format!("camera-{cam}"),
                     weight.to_string(),
                     report.frames.to_string(),
+                    format!(
+                        "{}/{}/{}",
+                        report.tier_frames[0], report.tier_frames[1], report.tier_frames[2]
+                    ),
                     report.dropped.to_string(),
                     report.dropped_quota.to_string(),
                     report.dropped_shed.to_string(),
@@ -210,6 +231,10 @@ fn main() -> anyhow::Result<()> {
     println!("mean micro-batch   {:.2} frames/dispatch (cross-session amortization)", agg.mean_batch);
     println!("mean latency       {}", si_time(agg.mean_latency_s));
     println!("modeled energy     {}/frame", si_energy(agg.mean_energy_j));
+    println!(
+        "precision tiers    {} int4 / {} int8 / {} fp32 frames",
+        agg.tier_frames[0], agg.tier_frames[1], agg.tier_frames[2]
+    );
     println!("frames dropped     {}", agg.dropped);
     println!("quota rejections   {} (bulk tenant's rate cap)", agg.dropped_quota);
     println!("SLO misses         {} (camera 0's 50 ms SLO)", agg.slo_miss);

@@ -1,0 +1,182 @@
+//! Mixed-precision serving sweep over the modeled photonic substrate.
+//!
+//! Sweeps `--policies int8,int4,auto` × `--batch 1` (defaults) through
+//! `coordinator::engine`, and emits a machine-readable
+//! `BENCH_precision.json` (per-tier frame counts, modeled energy/frame,
+//! modeled KFPS/W, fp32 top-1 agreement, and the energy saving vs. the
+//! uniform-int8 row at the same batch size) so the tentpole claim —
+//! ROI-driven `auto` serves strictly cheaper than uniform int8 without
+//! leaving the int8 agreement envelope — is trackable across PRs.
+//!
+//! ```bash
+//! cargo bench --bench precision_sweep -- \
+//!     [--policies int8,int4,auto,fp32] [--batch 1,4] [--batch-wait-us 500] \
+//!     [--frames 240] [--workers 1] [--backend sim|host] \
+//!     [--agreement true|false] [--out BENCH_precision.json] [--seed 42]
+//! ```
+//!
+//! (declared `harness = false`: this bench carries its own `main`.)
+//!
+//! The default backend is `sim`: tier economics are *modeled* (per-tier
+//! DAC/ADC/VCSEL energy and MR weight-programming in
+//! `energy::AcceleratorModel`), so the sweep needs no compiled artifacts
+//! and its energy column is deterministic. `--agreement true` (default)
+//! arms the pipeline's fp32 electronic-reference probe; probe compute is
+//! never charged to the frames, so the energy column is unaffected.
+
+use anyhow::Result;
+use optovit::cli::Args;
+use optovit::coordinator::batcher::BatchPolicy;
+use optovit::coordinator::engine::serve_sharded;
+use optovit::coordinator::pipeline::{PipelineConfig, ServeOptions, ServeReport};
+use optovit::quant::{PrecisionPolicy, PrecisionTier};
+use optovit::runtime::{AnyFactory, BackendKind, HostConfig};
+use optovit::util::table::{si_energy, Table};
+
+struct Row {
+    policy: PrecisionPolicy,
+    batch: usize,
+    report: ServeReport,
+}
+
+/// The savings denominator: the uniform-int8 row at the same batch size
+/// (`None` when the sweep never ran one, e.g. `--policies int4`).
+fn int8_energy(rows: &[Row], batch: usize) -> Option<f64> {
+    rows.iter()
+        .find(|r| r.batch == batch && r.policy == PrecisionPolicy::Fixed(PrecisionTier::Int8))
+        .map(|r| r.report.mean_energy_j)
+}
+
+fn agreement_field(report: &ServeReport, tier: PrecisionTier) -> String {
+    match report.tier_agreement(tier) {
+        Some(a) => format!("{a:.4}"),
+        None => "null".to_string(),
+    }
+}
+
+fn fmt_json(frames: u64, backend: &str, rows: &[Row]) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"precision_sweep\",\n");
+    out.push_str(&format!("  \"backend\": \"{backend}\",\n"));
+    out.push_str(&format!("  \"frames\": {frames},\n"));
+    out.push_str("  \"sweep\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let saving = int8_energy(rows, r.batch)
+            .filter(|&base| base > 0.0)
+            .map(|base| 1.0 - r.report.mean_energy_j / base);
+        out.push_str(&format!(
+            "    {{\"policy\": \"{}\", \"batch\": {}, \"tier_frames\": [{}, {}, {}], \
+             \"wall_fps\": {:.3}, \"mean_energy_j\": {:.6e}, \
+             \"modeled_kfps_per_watt\": {:.3}, \"agreement_int4\": {}, \
+             \"agreement_int8\": {}, \"energy_saving_vs_int8\": {}}}{}\n",
+            r.policy,
+            r.batch,
+            r.report.tier_frames[0],
+            r.report.tier_frames[1],
+            r.report.tier_frames[2],
+            r.report.wall_fps,
+            r.report.mean_energy_j,
+            r.report.modeled_kfps_per_watt,
+            agreement_field(&r.report, PrecisionTier::Int4),
+            agreement_field(&r.report, PrecisionTier::Int8),
+            saving.map(|s| format!("{s:.4}")).unwrap_or_else(|| "null".to_string()),
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
+    let policy_list = args.get_or("policies", "int8,int4,auto").to_string();
+    let batch_sizes = args.get_usize_list("batch", &[1]).map_err(anyhow::Error::msg)?;
+    let batch_wait = args.get_duration_us("batch-wait-us", 500).map_err(anyhow::Error::msg)?;
+    let frames = args.get_u64("frames", 240).map_err(anyhow::Error::msg)?;
+    let workers = args.get_usize("workers", 1).map_err(anyhow::Error::msg)?.max(1);
+    let out_path = args.get_or("out", "BENCH_precision.json").to_string();
+    let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
+    let agreement = args.get_or("agreement", "true") == "true";
+    let backend_arg =
+        args.get_choice("backend", &["sim", "host"], "sim").map_err(anyhow::Error::msg)?;
+    let kind = match backend_arg.as_str() {
+        "host" => BackendKind::Host,
+        _ => BackendKind::Sim,
+    };
+
+    let policies: Vec<PrecisionPolicy> = policy_list
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.trim().parse::<PrecisionPolicy>())
+        .collect::<std::result::Result<_, _>>()
+        .map_err(anyhow::Error::msg)?;
+
+    let mut cfg = PipelineConfig::tiny_96();
+    cfg.fp32_reference = agreement;
+    let mut factory = AnyFactory::new(kind, "artifacts".to_string());
+    factory.host = HostConfig { num_classes: cfg.num_classes, ..HostConfig::default() };
+
+    println!(
+        "== precision_sweep: {frames} frames/point, policies [{policy_list}], \
+         batch {batch_sizes:?}, backend {kind}, agreement {agreement} ==\n"
+    );
+
+    let mut rows = Vec::new();
+    for &b in &batch_sizes {
+        for &policy in &policies {
+            let opts = ServeOptions {
+                sensor_seed: seed,
+                batch: BatchPolicy::batched(b, batch_wait),
+                precision: policy,
+                ..ServeOptions::frames(frames)
+            };
+            let (report, _metrics) = serve_sharded(&cfg, &factory, workers, &opts)?;
+            println!(
+                "policy {policy}, batch {b}: tiers [{}, {}, {}], {}/frame, {:.1} KFPS/W",
+                report.tier_frames[0],
+                report.tier_frames[1],
+                report.tier_frames[2],
+                si_energy(report.mean_energy_j),
+                report.modeled_kfps_per_watt,
+            );
+            rows.push(Row { policy, batch: b, report });
+        }
+    }
+
+    println!("\n== precision summary ==");
+    let mut t = Table::new(vec![
+        "policy", "batch", "int4", "int8", "fp32", "energy/frame", "KFPS/W", "agree-4", "agree-8",
+        "saving",
+    ]);
+    for r in &rows {
+        let saving = int8_energy(&rows, r.batch)
+            .filter(|&base| base > 0.0)
+            .map(|base| format!("{:+.1}%", (1.0 - r.report.mean_energy_j / base) * 100.0))
+            .unwrap_or_else(|| "-".to_string());
+        let agree = |tier| {
+            r.report
+                .tier_agreement(tier)
+                .map(|a| format!("{a:.3}"))
+                .unwrap_or_else(|| "-".to_string())
+        };
+        t.row(vec![
+            r.policy.to_string(),
+            r.batch.to_string(),
+            r.report.tier_frames[0].to_string(),
+            r.report.tier_frames[1].to_string(),
+            r.report.tier_frames[2].to_string(),
+            si_energy(r.report.mean_energy_j),
+            format!("{:.1}", r.report.modeled_kfps_per_watt),
+            agree(PrecisionTier::Int4),
+            agree(PrecisionTier::Int8),
+            saving,
+        ]);
+    }
+    print!("{}", t.render());
+
+    let json = fmt_json(frames, kind.as_str(), &rows);
+    std::fs::write(&out_path, &json)?;
+    println!("\nwrote {out_path}");
+    Ok(())
+}

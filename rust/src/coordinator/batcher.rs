@@ -14,6 +14,7 @@
 //! a lane fills (`max_batch`) or its oldest frame has waited `max_wait`
 //! (the deadline that bounds tail latency under light load).
 
+use crate::quant::PrecisionTier;
 use crate::sensor::{Frame, VideoSource};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
@@ -101,10 +102,15 @@ impl Default for BatchPolicy {
     }
 }
 
-/// One per-bucket accumulation lane.
+/// One per-(bucket, tier) accumulation lane.
 #[derive(Debug)]
 struct Lane<T> {
     bucket: usize,
+    /// Execution precision of every resident frame. A flushed group runs
+    /// as one `execute_batch_tiered` call at one tier, so a 4-bit frame
+    /// must never ride an 8-bit group's weight programming — lanes are
+    /// bucket×tier-major.
+    tier: PrecisionTier,
     items: Vec<T>,
     /// When the oldest resident item arrived (`None` = empty lane).
     since: Option<Instant>,
@@ -114,9 +120,11 @@ struct Lane<T> {
     deadline: Option<Instant>,
 }
 
-/// Bucket-major micro-batcher: accumulates routed frames per bucket and
-/// hands back `(bucket, group)` flushes under a
-/// `max_batch`/`max_wait` deadline policy ([`BatchPolicy`]).
+/// Bucket×tier-major micro-batcher: accumulates routed frames per
+/// (bucket, precision-tier) lane and hands back `(bucket, group)` flushes
+/// under a `max_batch`/`max_wait` deadline policy ([`BatchPolicy`]). Every
+/// group is single-tier by construction; callers that batch mixed
+/// precisions read the group's tier off its frames.
 ///
 /// The batcher is deliberately clock-free: callers pass `now` into
 /// [`MicroBatcher::push`]/[`MicroBatcher::poll`], which keeps the deadline
@@ -129,14 +137,24 @@ pub struct MicroBatcher<T> {
 }
 
 impl<T> MicroBatcher<T> {
-    /// One lane per bucket of the (validated) ladder.
+    /// One lane per (bucket, tier) pair of the (validated) ladder — three
+    /// tier lanes per bucket, so mixed-precision tenants can never share a
+    /// flushed group.
     pub fn new(buckets: &[usize], policy: BatchPolicy) -> Self {
         assert!(!buckets.is_empty(), "need at least one bucket lane");
         MicroBatcher {
             policy,
             lanes: buckets
                 .iter()
-                .map(|&b| Lane { bucket: b, items: Vec::new(), since: None, deadline: None })
+                .flat_map(|&b| {
+                    PrecisionTier::ALL.iter().map(move |&tier| Lane {
+                        bucket: b,
+                        tier,
+                        items: Vec::new(),
+                        since: None,
+                        deadline: None,
+                    })
+                })
                 .collect(),
         }
     }
@@ -171,6 +189,17 @@ impl<T> MicroBatcher<T> {
         self.push_with_deadline(bucket, item, now, None)
     }
 
+    /// [`MicroBatcher::push`] into an explicit precision-tier lane.
+    pub fn push_tiered(
+        &mut self,
+        bucket: usize,
+        tier: PrecisionTier,
+        item: T,
+        now: Instant,
+    ) -> Option<(usize, Vec<T>)> {
+        self.push_with_deadline_tiered(bucket, tier, item, now, None)
+    }
+
     /// [`MicroBatcher::push`] for a frame carrying its own completion
     /// deadline (an SLO session's `accepted_at + slo`): the lane then
     /// matures at `min(oldest + max_wait, earliest item deadline)`, so a
@@ -191,14 +220,29 @@ impl<T> MicroBatcher<T> {
         now: Instant,
         deadline: Option<Instant>,
     ) -> Option<(usize, Vec<T>)> {
+        // The tierless entry is the INT8 lane — the fixed default tier, so
+        // pre-mixed-precision callers keep their exact grouping behaviour.
+        self.push_with_deadline_tiered(bucket, PrecisionTier::Int8, item, now, deadline)
+    }
+
+    /// [`MicroBatcher::push_with_deadline`] into an explicit tier lane.
+    pub fn push_with_deadline_tiered(
+        &mut self,
+        bucket: usize,
+        tier: PrecisionTier,
+        item: T,
+        now: Instant,
+        deadline: Option<Instant>,
+    ) -> Option<(usize, Vec<T>)> {
         let max = self.policy.max_batch.max(1);
         let lane = self
             .lanes
             .iter_mut()
-            .find(|l| l.bucket == bucket)
+            .find(|l| l.bucket == bucket && l.tier == tier)
             // lint-allow(panic): `bucket` comes from `route()` over this
-            // batcher's own ladder, so the lane always exists; a miss is a
-            // routing-table corruption worth crashing on.
+            // batcher's own ladder and every bucket has a lane per tier,
+            // so the lane always exists; a miss is a routing-table
+            // corruption worth crashing on.
             .expect("routed bucket must be in the batcher's ladder");
         lane.items.push(item);
         lane.since.get_or_insert(now);
@@ -512,6 +556,29 @@ mod tests {
         let (bucket, group) = b.push(9, 7u8, t0).expect("degenerate flush");
         assert_eq!((bucket, group), (9, vec![7u8]));
         assert!(b.is_empty());
+    }
+
+    #[test]
+    fn lanes_are_bucket_and_tier_major() {
+        use crate::quant::PrecisionTier::{Int4, Int8};
+        let t0 = Instant::now();
+        let mut b = MicroBatcher::new(&[9], BatchPolicy::batched(2, Duration::from_secs(1)));
+        assert!(b.push_tiered(9, Int8, 'a', t0).is_none());
+        assert!(
+            b.push_tiered(9, Int4, 'x', t0).is_none(),
+            "a 4-bit frame must not join the 8-bit lane"
+        );
+        let (bucket, group) = b.push_tiered(9, Int8, 'b', t0).expect("int8 lane fills alone");
+        assert_eq!((bucket, group), (9, vec!['a', 'b']));
+        assert_eq!(b.pending(), 1, "the int4 frame still waits in its own lane");
+        let (bucket, group) = b.push_tiered(9, Int4, 'y', t0).expect("int4 lane fills alone");
+        assert_eq!((bucket, group), (9, vec!['x', 'y']));
+        assert!(b.is_empty());
+        // The tierless entries are the INT8 lane: a legacy push completes
+        // a group started with push_tiered(Int8).
+        assert!(b.push_tiered(9, Int8, 'c', t0).is_none());
+        let (_, group) = b.push(9, 'd', t0).expect("legacy push lands in the int8 lane");
+        assert_eq!(group, vec!['c', 'd']);
     }
 
     #[test]

@@ -31,6 +31,7 @@ use super::clock::Clock;
 use super::pipeline::{FrameResult, Pipeline, PipelineConfig, ServeOptions, ServeReport};
 use super::server::{spawn_synthetic_sensor, ServeError, Server, SessionOptions};
 use super::stats::StageMetrics;
+use crate::quant::PrecisionPolicy;
 use crate::runtime::{Backend, BackendFactory};
 use crate::sensor::Frame;
 
@@ -181,6 +182,11 @@ pub struct EngineConfig {
     /// [`HealthPolicy::aware`] `= false` for the health-blind control
     /// behavior (exactly the pre-fault dispatcher).
     pub health: HealthPolicy,
+    /// Precision policy stamped on the one-session wrapper's frames
+    /// ([`ServeOptions::precision`] / `--precision`). Multi-tenant callers
+    /// set this per session via
+    /// [`SessionOptions::with_precision`] instead.
+    pub precision: PrecisionPolicy,
 }
 
 /// Dispatcher policy for degraded workers (see `coordinator::server`):
@@ -228,6 +234,7 @@ impl EngineConfig {
             pin_workers: false,
             clock: Clock::system(),
             health: HealthPolicy::default(),
+            precision: PrecisionPolicy::default(),
         }
     }
 
@@ -245,6 +252,7 @@ impl EngineConfig {
         cfg.sensor_seed = opts.sensor_seed;
         cfg.batch = opts.batch;
         cfg.pin_workers = opts.pin_workers;
+        cfg.precision = opts.precision;
         // One window knob across both serving paths: `--window` bounds the
         // single-pipeline stream and the per-session reassembler alike.
         cfg.reassembly_window = opts.window.max(1);
@@ -295,7 +303,8 @@ where
     let session = server.session(
         SessionOptions::named("sensor")
             .with_queue_depth(cfg.sensor_queue_depth.max(1))
-            .with_window(cfg.effective_window()),
+            .with_window(cfg.effective_window())
+            .with_precision(cfg.precision),
     )?;
     let (submitter, mut stream) = session.split();
     let sensor = spawn_synthetic_sensor(

@@ -40,6 +40,7 @@ use crate::coordinator::pipeline::FrameResult;
 use crate::coordinator::server::{Server, Session, SessionOptions};
 use crate::coordinator::stats::{StageMetrics, WorkerMode};
 use crate::coordinator::BucketRouter;
+use crate::quant::{PrecisionPolicy, PrecisionTier};
 use crate::sensor::{Frame, VideoSource};
 use crate::util::rng::Rng;
 
@@ -183,6 +184,16 @@ impl PacedWorker {
     }
 }
 
+/// The load model has no MGNet stage, so `Auto` has no ROI density to
+/// read: a fixed session tier is honored for tier accounting, `Auto`
+/// degrades to the int8 default (same rule as a mask-less pipeline).
+fn modeled_tier(frame: &Frame) -> PrecisionTier {
+    match frame.precision {
+        PrecisionPolicy::Fixed(tier) => tier,
+        PrecisionPolicy::Auto => PrecisionTier::Int8,
+    }
+}
+
 impl FrameWorker for PacedWorker {
     fn process(&mut self, frame: &Frame) -> Result<FrameResult> {
         if !self.service.is_zero() {
@@ -206,6 +217,8 @@ impl FrameWorker for PacedWorker {
             latency_s: service_s,
             modeled_queueing_s: 0.0,
             batch_size: 1,
+            tier: modeled_tier(frame),
+            fp32_agreement: None,
         })
     }
 
@@ -238,6 +251,8 @@ impl FrameWorker for PacedWorker {
                     latency_s: service_s,
                     modeled_queueing_s: 0.0,
                     batch_size: n,
+                    tier: modeled_tier(frame),
+                    fp32_agreement: None,
                 })
             })
             .collect()

@@ -48,6 +48,7 @@ use super::batcher::{recv_frame, BatchPolicy, BucketRouter, FrameQueue, MicroBat
 use super::clock::Clock;
 use super::stats::{StageMetrics, WorkerStats};
 use crate::energy::AcceleratorModel;
+use crate::quant::{PrecisionPolicy, PrecisionTier, AUTO_ROI_THRESHOLD};
 use crate::roi::PatchMask;
 use crate::runtime::{Backend, TensorRef};
 use crate::sensor::Frame;
@@ -67,6 +68,13 @@ pub struct PipelineConfig {
     pub region_threshold: f32,
     /// Disable to run the unmasked baseline (all patches).
     pub use_mask: bool,
+    /// Score integer-tier output agreement against an fp32 electronic
+    /// reference: every non-fp32 frame additionally runs the backbone at
+    /// [`PrecisionTier::Fp32`] and records whether the argmax matched.
+    /// The probe is a measurement instrument — its modeled energy and
+    /// latency are never charged to the frame. Off by default (it doubles
+    /// backbone compute).
+    pub fp32_reference: bool,
 }
 
 impl PipelineConfig {
@@ -79,6 +87,7 @@ impl PipelineConfig {
             buckets: vec![9, 18, 27, 36],
             region_threshold: 0.5,
             use_mask: true,
+            fp32_reference: false,
         }
     }
 
@@ -154,18 +163,28 @@ pub struct FrameResult {
     /// per-frame path). Lets per-session accounting report the mean
     /// micro-batch size without access to the worker's [`StageMetrics`].
     pub batch_size: usize,
+    /// Precision tier the backbone actually executed at (resolved from the
+    /// frame's [`PrecisionPolicy`] — `Auto` resolves against the staged
+    /// ROI mask at route time).
+    pub tier: PrecisionTier,
+    /// Whether this frame's argmax agreed with the fp32 electronic
+    /// reference. `Some` only when the pipeline's
+    /// [`PipelineConfig::fp32_reference`] probe is on and the frame itself
+    /// ran at an integer tier; `None` otherwise.
+    pub fp32_agreement: Option<bool>,
+}
+
+/// Argmax over a logit slice. `total_cmp` gives NaN a defined order, so a
+/// NaN logit can never panic the serving loop; an empty slice maps to
+/// class 0.
+fn argmax(logits: &[f32]) -> usize {
+    logits.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).map(|(i, _)| i).unwrap_or(0)
 }
 
 impl FrameResult {
-    /// Argmax over the logits. `total_cmp` gives NaN a defined order, so a
-    /// NaN logit can never panic the serving loop.
+    /// Argmax over the logits (NaN-safe — see [`argmax`]).
     pub fn predicted_class(&self) -> usize {
-        self.logits
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.total_cmp(b.1))
-            .map(|(i, _)| i)
-            .unwrap_or(0)
+        argmax(&self.logits)
     }
 }
 
@@ -187,6 +206,11 @@ pub struct RoutedFrame {
     pub bucket: usize,
     /// Kept patches after masking (≥ 1).
     pub kept_count: usize,
+    /// Precision tier resolved at route time. Micro-batch lanes are
+    /// bucket×tier-major: a 4-bit frame must never ride an 8-bit group's
+    /// weight programming, so [`Pipeline::complete_batch`] rejects
+    /// mixed-tier groups outright.
+    pub tier: PrecisionTier,
     /// The thresholded keep mask (moved into the final [`FrameResult`]).
     pub mask: PatchMask,
     /// Staged `(bucket, patch_dim)` backbone input.
@@ -484,6 +508,31 @@ impl<B: Backend> Pipeline<B> {
         Ok(bucket)
     }
 
+    /// Resolve a frame's precision policy to a concrete execution tier.
+    /// `Fixed` is taken as-is. `Auto` derives the tier from the ROI mask
+    /// staged by [`Pipeline::stage_front`] for this very frame: a frame
+    /// keeping at least [`AUTO_ROI_THRESHOLD`] of its patches is
+    /// importance-heavy and runs at INT8; below that it is
+    /// background-heavy and drops to INT4. Unmasked baselines carry no
+    /// ROI signal, so `Auto` degrades to the INT8 operating point there.
+    fn resolve_tier(&self, policy: PrecisionPolicy) -> PrecisionTier {
+        match policy {
+            PrecisionPolicy::Fixed(tier) => tier,
+            PrecisionPolicy::Auto => {
+                if !self.cfg.use_mask {
+                    return PrecisionTier::Int8;
+                }
+                let kept_frac =
+                    self.scratch.kept.len() as f64 / self.vit_cfg.num_patches() as f64;
+                if kept_frac >= AUTO_ROI_THRESHOLD {
+                    PrecisionTier::Int8
+                } else {
+                    PrecisionTier::Int4
+                }
+            }
+        }
+    }
+
     /// Degraded optics cost extra modeled energy (drift compensation and
     /// re-tune retries): up to `+FAULT_ENERGY_PENALTY` at health 0.
     /// Exactly 1.0 on substrates without a fault model.
@@ -502,22 +551,31 @@ impl<B: Backend> Pipeline<B> {
     /// ([`AcceleratorModel::weight_program_energy_j`]): modeled
     /// energy/frame *drops* as batch size grows. The MGNet share is never
     /// discounted — MGNet executes per frame at route time, interleaved
-    /// with other buckets' batches, so its banks are reprogrammed anyway.
+    /// with other buckets' batches, so its banks are reprogrammed anyway
+    /// (and it always runs at INT8, whatever the backbone tier).
     /// Degraded optics inflate the figure by [`Pipeline::energy_factor`].
-    fn modeled_energy_j(&mut self, kept_count: usize, first_in_batch: bool) -> f64 {
+    fn modeled_energy_j(
+        &mut self,
+        kept_count: usize,
+        first_in_batch: bool,
+        tier: PrecisionTier,
+    ) -> f64 {
         let (full, backbone_kept) = if self.cfg.use_mask {
             (
-                self.model.masked_energy(&self.vit_cfg, &self.mgnet_cfg, kept_count).total_j(),
+                self.model
+                    .masked_energy_tiered(&self.vit_cfg, &self.mgnet_cfg, kept_count, tier)
+                    .total_j(),
                 kept_count,
             )
         } else {
             let n = self.vit_cfg.num_patches();
-            (self.model.frame_energy(&self.vit_cfg, n, true).total_j(), n)
+            (self.model.frame_energy_tiered(&self.vit_cfg, n, true, tier).total_j(), n)
         };
         let ideal = if first_in_batch {
             full
         } else {
-            let saved = self.model.weight_program_energy_j(&self.vit_cfg, backbone_kept, true);
+            let saved =
+                self.model.weight_program_energy_j_tiered(&self.vit_cfg, backbone_kept, true, tier);
             (full - saved).max(0.0)
         };
         ideal * self.energy_factor()
@@ -538,9 +596,14 @@ impl<B: Backend> Pipeline<B> {
         &mut self,
         kept_count: usize,
         first_in_batch: bool,
+        tier: PrecisionTier,
     ) -> Option<crate::runtime::ModeledStages> {
-        let mut stages =
-            self.backend.modeled_stages_s(kept_count, self.cfg.use_mask, first_in_batch)?;
+        let mut stages = self.backend.modeled_stages_s_tiered(
+            kept_count,
+            self.cfg.use_mask,
+            first_in_batch,
+            tier,
+        )?;
         stages.queueing_s = self.backend.modeled_queueing_s(kept_count, self.cfg.use_mask);
         if self.cfg.use_mask {
             self.metrics.record_stage("modeled_mgnet", stages.mgnet_s);
@@ -560,6 +623,7 @@ impl<B: Backend> Pipeline<B> {
         let patch_dim = self.vit_cfg.patch_dim();
         let bucket = self.stage_front(frame)?;
         let kept_count = self.scratch.kept.len();
+        let tier = self.resolve_tier(frame.precision);
 
         // Backbone on the pruned sequence.
         let t0 = self.clock.now();
@@ -574,27 +638,61 @@ impl<B: Backend> Pipeline<B> {
         // lint-allow(panic): staged-view slices use the bucket returned by
         // `stage_route` for this very frame (see `FrameScratch` bounds
         // invariant).
-        let logits = self
-            .backend
-            .execute1(
-                artifact,
-                &[
-                    TensorRef::new(&self.scratch.bucket_patches[..bucket * patch_dim], &bdims),
-                    TensorRef::new(&self.scratch.pos_idx[..bucket], &vdims),
-                    TensorRef::new(&self.scratch.valid[..bucket], &vdims),
-                ],
-            )
-            .context("backbone stage")?;
+        let holders = [
+            TensorRef::new(&self.scratch.bucket_patches[..bucket * patch_dim], &bdims),
+            TensorRef::new(&self.scratch.pos_idx[..bucket], &vdims),
+            TensorRef::new(&self.scratch.valid[..bucket], &vdims),
+        ];
+        let logits = if tier == PrecisionTier::Int8 {
+            // The INT8 operating point stays on `execute1` — the exact
+            // pre-tier hot path, allocation profile included.
+            self.backend.execute1(artifact, &holders).context("backbone stage")?
+        } else {
+            let one: [&[TensorRef<'_>]; 1] = [&holders];
+            let mut outs = self
+                .backend
+                .execute_batch_tiered(artifact, &one, tier)
+                .context("backbone stage")?;
+            let mut out = outs
+                .pop()
+                .ok_or_else(|| anyhow!("backend returned no result sets for a batch of 1"))?;
+            ensure!(
+                out.len() == 1,
+                "artifact '{artifact}' returned {} outputs, expected 1",
+                out.len()
+            );
+            out.pop().ok_or_else(|| anyhow!("backend returned an empty output set"))?
+        };
         self.metrics.record_stage("backbone", self.clock.seconds_since(t0));
+        // Snapshot frame wall time before the optional probe below, so
+        // agreement accounting never inflates reported latency.
+        let wall_s = self.clock.seconds_since(t_start);
 
-        let energy_j = self.modeled_energy_j(kept_count, true);
+        // Optional fp32 electronic-reference probe for output-agreement
+        // accounting. Its modeled energy/latency are never charged — the
+        // probe is a measurement instrument, not a served inference.
+        let fp32_agreement = if self.cfg.fp32_reference && tier != PrecisionTier::Fp32 {
+            let one: [&[TensorRef<'_>]; 1] = [&holders];
+            let probe = self
+                .backend
+                .execute_batch_tiered(artifact, &one, PrecisionTier::Fp32)
+                .context("fp32 agreement reference")?;
+            probe
+                .into_iter()
+                .next()
+                .and_then(|mut out| out.pop())
+                .map(|ref_logits| argmax(&ref_logits) == argmax(&logits))
+        } else {
+            None
+        };
+
+        let energy_j = self.modeled_energy_j(kept_count, true, tier);
         // "total" is always host wall-clock (it feeds busy-time and
         // utilization accounting); a simulating backend additionally
         // charges its modeled frame latency under "modeled", which then
         // becomes the reported per-frame latency.
-        let wall_s = self.clock.seconds_since(t_start);
         self.metrics.record_stage("total", wall_s);
-        let modeled = self.record_modeled(kept_count, true);
+        let modeled = self.record_modeled(kept_count, true, tier);
         self.metrics.record_frame(energy_j, kept_count);
         self.metrics.record_batch_size(1);
 
@@ -607,6 +705,8 @@ impl<B: Backend> Pipeline<B> {
             latency_s: modeled.map(|s| s.total_s()).unwrap_or(wall_s),
             modeled_queueing_s: modeled.map_or(0.0, |s| s.queueing_s),
             batch_size: 1,
+            tier,
+            fp32_agreement,
         })
     }
 
@@ -625,6 +725,7 @@ impl<B: Backend> Pipeline<B> {
             label: frame.label,
             bucket,
             kept_count: self.scratch.kept.len(),
+            tier: self.resolve_tier(frame.precision),
             mask: self.scratch.mask.clone(),
             patches: self.scratch.bucket_patches[..bucket * patch_dim].to_vec(),
             pos_idx: self.scratch.pos_idx[..bucket].to_vec(),
@@ -634,21 +735,29 @@ impl<B: Backend> Pipeline<B> {
         })
     }
 
-    /// Complete a single-bucket group of routed frames with **one**
-    /// [`Backend::execute_batch`] call, returning results in group order.
+    /// Complete a single-bucket, single-tier group of routed frames with
+    /// **one** [`Backend::execute_batch_tiered`] call, returning results
+    /// in group order.
     ///
     /// The group's first frame pays the full modeled cost; followers
     /// amortize the weight-programming share (energy here, latency via
     /// the backend's batch-aware model), so modeled energy/frame drops as
-    /// dispatch amortizes. The measured `"backbone"` wall time is split
-    /// evenly across the batch.
+    /// dispatch amortizes. That amortization is exactly why the group must
+    /// be tier-pure: a 4-bit frame riding an 8-bit group would reuse
+    /// weight banks programmed at the wrong grid. The measured
+    /// `"backbone"` wall time is split evenly across the batch.
     pub fn complete_batch(&mut self, batch: Vec<RoutedFrame>) -> Result<Vec<FrameResult>> {
         ensure!(!batch.is_empty(), "complete_batch needs at least one routed frame");
         // lint-allow(panic): non-emptiness ensured on the line above.
-        let bucket = batch[0].bucket;
+        let (bucket, tier) = (batch[0].bucket, batch[0].tier);
         ensure!(
             batch.iter().all(|rf| rf.bucket == bucket),
             "complete_batch requires a single-bucket (bucket-major) group"
+        );
+        ensure!(
+            batch.iter().all(|rf| rf.tier == tier),
+            "complete_batch requires a single-tier group — a {tier} frame must not \
+             ride another tier's weight programming"
         );
         let n = batch.len();
         let patch_dim = self.vit_cfg.patch_dim();
@@ -677,16 +786,33 @@ impl<B: Backend> Pipeline<B> {
         let inputs: Vec<&[TensorRef<'_>]> = holders.iter().map(|h| &h[..]).collect();
         let outs = self
             .backend
-            .execute_batch(artifact, &inputs)
+            .execute_batch_tiered(artifact, &inputs, tier)
             .context("batched backbone stage")?;
-        drop(inputs);
-        drop(holders);
         ensure!(
             outs.len() == n,
             "backend returned {} result sets for a batch of {n}",
             outs.len()
         );
+        // The measured share and completion stamp are taken before the
+        // optional probe below, so agreement accounting never inflates
+        // reported wall latency.
         let backbone_share = self.clock.seconds_since(t0) / n as f64;
+        let completed_at = self.clock.now();
+
+        // Optional fp32 electronic-reference probe (see
+        // [`PipelineConfig::fp32_reference`]): one extra batched call whose
+        // modeled energy/latency are never charged to the frames.
+        let ref_outs = if self.cfg.fp32_reference && tier != PrecisionTier::Fp32 {
+            Some(
+                self.backend
+                    .execute_batch_tiered(artifact, &inputs, PrecisionTier::Fp32)
+                    .context("fp32 agreement reference")?,
+            )
+        } else {
+            None
+        };
+        drop(inputs);
+        drop(holders);
 
         let mut results = Vec::with_capacity(n);
         for (i, (rf, mut out)) in batch.into_iter().zip(outs).enumerate() {
@@ -698,9 +824,14 @@ impl<B: Backend> Pipeline<B> {
             );
             let logits =
                 out.pop().ok_or_else(|| anyhow!("backend returned an empty output set"))?;
+            let fp32_agreement = ref_outs
+                .as_ref()
+                .and_then(|r| r.get(i))
+                .and_then(|out| out.first())
+                .map(|ref_logits| argmax(ref_logits) == argmax(&logits));
             let first = i == 0;
             self.metrics.record_stage("backbone", backbone_share);
-            let energy_j = self.modeled_energy_j(rf.kept_count, first);
+            let energy_j = self.modeled_energy_j(rf.kept_count, first, tier);
             // "total" stays compute-only (front half + this frame's share
             // of the batched call) — it feeds busy-time/utilization.
             // "latency" is what the frame actually experienced: front half
@@ -708,9 +839,10 @@ impl<B: Backend> Pipeline<B> {
             // wait** — so a `--batch`/`--batch-wait-us` sweep reports the
             // real latency cost of batching, not just its throughput win.
             self.metrics.record_stage("total", rf.front_s + backbone_share);
-            let latency_wall_s = rf.front_s + self.clock.seconds_since(rf.staged_at);
+            let latency_wall_s =
+                rf.front_s + completed_at.saturating_duration_since(rf.staged_at).as_secs_f64();
             self.metrics.record_stage("latency", latency_wall_s);
-            let modeled = self.record_modeled(rf.kept_count, first);
+            let modeled = self.record_modeled(rf.kept_count, first, tier);
             self.metrics.record_frame(energy_j, rf.kept_count);
             self.metrics.record_batch_size(n);
             results.push(FrameResult {
@@ -722,15 +854,19 @@ impl<B: Backend> Pipeline<B> {
                 latency_s: modeled.map(|s| s.total_s()).unwrap_or(latency_wall_s),
                 modeled_queueing_s: modeled.map_or(0.0, |s| s.queueing_s),
                 batch_size: n,
+                tier,
+                fp32_agreement,
             });
         }
         Ok(results)
     }
 
-    /// Process a slice of frames bucket-major: route every frame, group by
-    /// bucket (in ladder order), complete each group with one batched
-    /// backend call, and return results in **input order**. A slice of one
-    /// falls through to the allocation-free [`Pipeline::process_frame`].
+    /// Process a slice of frames bucket×tier-major: route every frame,
+    /// group by (bucket, tier) — bucket in ladder order, tier in
+    /// [`PrecisionTier::index`] order — complete each group with one
+    /// batched backend call, and return results in **input order**. A
+    /// slice of one falls through to the allocation-free
+    /// [`Pipeline::process_frame`].
     pub fn process_batch(&mut self, frames: &[Frame]) -> Result<Vec<FrameResult>> {
         if frames.len() <= 1 {
             return frames.iter().map(|f| self.process_frame(f)).collect();
@@ -742,29 +878,33 @@ impl<B: Backend> Pipeline<B> {
         let mut results: Vec<Option<FrameResult>> = (0..frames.len()).map(|_| None).collect();
         let ladder: Vec<usize> = self.router.buckets().to_vec();
         for bucket in ladder {
-            let idxs: Vec<usize> = routed
-                .iter()
-                .enumerate()
-                .filter(|(_, r)| r.as_ref().is_some_and(|rf| rf.bucket == bucket))
-                .map(|(i, _)| i)
-                .collect();
-            if idxs.is_empty() {
-                continue;
-            }
-            let mut group: Vec<RoutedFrame> = Vec::with_capacity(idxs.len());
-            for &i in &idxs {
-                group.push(
-                    // lint-allow(panic): `idxs` was collected from
-                    // `enumerate()` over `routed` above.
-                    routed[i]
-                        .take()
-                        .ok_or_else(|| anyhow!("frame {i} was claimed by two bucket groups"))?,
-                );
-            }
-            let group_results = self.complete_batch(group)?;
-            for (i, r) in idxs.into_iter().zip(group_results) {
-                // lint-allow(panic): same `enumerate()`-derived indices.
-                results[i] = Some(r);
+            for tier in PrecisionTier::ALL {
+                let idxs: Vec<usize> = routed
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, r)| {
+                        r.as_ref().is_some_and(|rf| rf.bucket == bucket && rf.tier == tier)
+                    })
+                    .map(|(i, _)| i)
+                    .collect();
+                if idxs.is_empty() {
+                    continue;
+                }
+                let mut group: Vec<RoutedFrame> = Vec::with_capacity(idxs.len());
+                for &i in &idxs {
+                    group.push(
+                        // lint-allow(panic): `idxs` was collected from
+                        // `enumerate()` over `routed` above.
+                        routed[i].take().ok_or_else(|| {
+                            anyhow!("frame {i} was claimed by two bucket groups")
+                        })?,
+                    );
+                }
+                let group_results = self.complete_batch(group)?;
+                for (i, r) in idxs.into_iter().zip(group_results) {
+                    // lint-allow(panic): same `enumerate()`-derived indices.
+                    results[i] = Some(r);
+                }
             }
         }
         results
@@ -812,6 +952,20 @@ pub struct ServeReport {
     /// terminal aggregate is exactly the per-session sum. Always 0 on
     /// substrates without a fault model.
     pub accuracy_at_risk: u64,
+    /// Frames served at each precision tier, indexed by
+    /// [`PrecisionTier::index`] (`[int4, int8, fp32]`). Sums to `frames`;
+    /// per session in session reports, and the terminal aggregate is
+    /// exactly the per-session sum.
+    pub tier_frames: [u64; 3],
+    /// Frames that additionally ran the fp32 electronic-reference
+    /// agreement probe, per tier — all zero unless the pipeline's
+    /// `fp32_reference` output-agreement accounting is on. The terminal
+    /// aggregate is exactly the per-session sum.
+    pub tier_ref_frames: [u64; 3],
+    /// Probed frames whose tier-quantized argmax agreed with the fp32
+    /// reference, per tier (`tier_agree[i] <= tier_ref_frames[i]`). The
+    /// terminal aggregate is exactly the per-session sum.
+    pub tier_agree: [u64; 3],
     /// p99 of submit→emit latency (seconds) across the report's sessions,
     /// from a log-scale histogram (`LatencyHistogram`, ~15% bucket
     /// resolution, quantiles reported as bucket lower bounds — never
@@ -850,6 +1004,21 @@ pub struct ServeReport {
     pub per_worker: Vec<WorkerStats>,
 }
 
+impl ServeReport {
+    /// Fraction of fp32-probed frames at `tier` whose argmax agreed with
+    /// the electronic reference, or `None` when the tier ran no probes.
+    pub fn tier_agreement(&self, tier: PrecisionTier) -> Option<f64> {
+        // lint-allow(panic): `PrecisionTier::index()` < 3 by construction —
+        // the counter arrays are sized to the tier set.
+        let i = tier.index();
+        if self.tier_ref_frames[i] == 0 {
+            None
+        } else {
+            Some(self.tier_agree[i] as f64 / self.tier_ref_frames[i] as f64)
+        }
+    }
+}
+
 /// Knobs of a serving run — shared by the streaming [`serve`] and the
 /// sharded `serve_sharded`.
 #[derive(Debug, Clone, Copy)]
@@ -873,6 +1042,9 @@ pub struct ServeOptions {
     /// sharded `serve_sharded` path; the in-thread [`serve`] path has no
     /// worker threads to pin and ignores it.
     pub pin_workers: bool,
+    /// Precision policy stamped onto every frame the stream serves: one
+    /// fixed tier, or ROI-driven [`PrecisionPolicy::Auto`].
+    pub precision: PrecisionPolicy,
 }
 
 impl ServeOptions {
@@ -887,6 +1059,7 @@ impl ServeOptions {
             batch: BatchPolicy::per_frame(),
             window: 64,
             pin_workers: false,
+            precision: PrecisionPolicy::default(),
         }
     }
 }
@@ -943,6 +1116,13 @@ pub struct FrameStream<'p, B: Backend> {
     pending: BTreeMap<u64, PendingResult>,
     iou_sum: f64,
     correct: u64,
+    /// Per-tier frame counters, indexed by [`PrecisionTier::index`],
+    /// accumulated at emission (like `iou_sum`/`correct`).
+    tier_frames: [u64; 3],
+    tier_ref_frames: [u64; 3],
+    tier_agree: [u64; 3],
+    /// Precision policy stamped onto every sensor frame before routing.
+    precision: PrecisionPolicy,
     failed: bool,
     patch_px: usize,
 }
@@ -997,6 +1177,10 @@ impl<'p, B: Backend> FrameStream<'p, B> {
             pending: BTreeMap::new(),
             iou_sum: 0.0,
             correct: 0,
+            tier_frames: [0; 3],
+            tier_ref_frames: [0; 3],
+            tier_agree: [0; 3],
+            precision: opts.precision,
             failed: false,
             patch_px,
         })
@@ -1072,7 +1256,11 @@ impl<'p, B: Backend> FrameStream<'p, B> {
             .unwrap_or(SENSOR_IDLE_TIMEOUT)
             .min(SENSOR_IDLE_TIMEOUT);
         match recv_frame(&self.rx, timeout) {
-            Some(frame) => {
+            Some(mut frame) => {
+                // The synthetic sensor stamps the default policy; the
+                // stream's tenant-level policy overrides it here, before
+                // routing resolves `Auto` against the frame's ROI mask.
+                frame.precision = self.precision;
                 let gt = frame.gt_mask(self.patch_px);
                 // Degenerate per-frame policy (the default): keep the
                 // allocation-free `process_frame` fast path — every push
@@ -1092,7 +1280,7 @@ impl<'p, B: Backend> FrameStream<'p, B> {
                 }
                 let rf = self.pipeline.route_frame(&frame)?;
                 let iou = rf.mask.iou(&gt);
-                let bucket = rf.bucket;
+                let (bucket, tier) = (rf.bucket, rf.tier);
                 let item = StreamItem { seq: self.routed, iou, rf };
                 self.routed += 1;
                 if self.routed >= self.target {
@@ -1103,7 +1291,7 @@ impl<'p, B: Backend> FrameStream<'p, B> {
                     self.stop.store(true, Ordering::Relaxed);
                 }
                 if let Some((_bucket, group)) =
-                    self.batcher.push(bucket, item, self.pipeline.clock.now())
+                    self.batcher.push_tiered(bucket, tier, item, self.pipeline.clock.now())
                 {
                     return self.complete(group);
                 }
@@ -1129,6 +1317,15 @@ impl<'p, B: Backend> FrameStream<'p, B> {
                 self.emitted += 1;
                 self.iou_sum += p.iou;
                 self.correct += p.correct as u64;
+                // lint-allow(panic): `PrecisionTier::index()` < 3 by
+                // construction — the counter arrays are sized to the tier
+                // set.
+                let ti = p.result.tier.index();
+                self.tier_frames[ti] += 1;
+                if let Some(agree) = p.result.fp32_agreement {
+                    self.tier_ref_frames[ti] += 1;
+                    self.tier_agree[ti] += agree as u64;
+                }
                 return Some(Ok(p.result));
             }
             if self.failed {
@@ -1173,6 +1370,9 @@ impl<'p, B: Backend> FrameStream<'p, B> {
             dropped_shed: 0,
             slo_miss: 0,
             accuracy_at_risk: 0,
+            tier_frames: self.tier_frames,
+            tier_ref_frames: self.tier_ref_frames,
+            tier_agree: self.tier_agree,
             p99_latency_s: 0.0,
             wall_fps: m.wall_fps_at(now),
             mean_latency_s: m.frame_latency_mean_s(),
@@ -1318,6 +1518,8 @@ mod tests {
             latency_s: 0.01,
             modeled_queueing_s: 0.0,
             batch_size: 1,
+            tier: PrecisionTier::Int8,
+            fp32_agreement: None,
         };
         assert_eq!(r.predicted_class(), 1);
     }
@@ -1333,6 +1535,8 @@ mod tests {
             latency_s: 0.01,
             modeled_queueing_s: 0.0,
             batch_size: 1,
+            tier: PrecisionTier::Int8,
+            fp32_agreement: None,
         };
         // Must not panic; any in-range index is acceptable.
         assert!(r.predicted_class() < 3);
@@ -1378,18 +1582,18 @@ mod tests {
 
     #[test]
     fn follower_energy_discount_is_strict_but_bounded() {
-        let p = Pipeline::with_backend(PipelineConfig::tiny_96(), host()).unwrap();
+        let mut p = Pipeline::with_backend(PipelineConfig::tiny_96(), host()).unwrap();
         for kept in [1usize, 12, 36] {
-            let first = p.modeled_energy_j(kept, true);
-            let follow = p.modeled_energy_j(kept, false);
+            let first = p.modeled_energy_j(kept, true, PrecisionTier::Int8);
+            let follow = p.modeled_energy_j(kept, false, PrecisionTier::Int8);
             assert!(follow > 0.0, "kept {kept}: follower energy must stay positive");
             assert!(follow < first, "kept {kept}: follower must model less energy");
         }
         let mut cfg = PipelineConfig::tiny_96();
         cfg.use_mask = false;
-        let pf = Pipeline::with_backend(cfg, host()).unwrap();
-        let first = pf.modeled_energy_j(36, true);
-        let follow = pf.modeled_energy_j(36, false);
+        let mut pf = Pipeline::with_backend(cfg, host()).unwrap();
+        let first = pf.modeled_energy_j(36, true, PrecisionTier::Int8);
+        let follow = pf.modeled_energy_j(36, false, PrecisionTier::Int8);
         assert!(follow > 0.0 && follow < first, "unmasked runs amortize too");
     }
 
@@ -1402,6 +1606,7 @@ mod tests {
             label: 0,
             bucket,
             kept_count: 1,
+            tier: PrecisionTier::Int8,
             mask: PatchMask::full(6),
             patches: vec![0.0; bucket * 768],
             pos_idx: vec![0.0; bucket],
@@ -1482,6 +1687,126 @@ mod tests {
         let bucket = scratch.stage_route(&router, 768);
         assert_eq!(scratch.kept(), &[17]);
         assert_eq!(bucket, 9);
+    }
+
+    #[test]
+    fn auto_policy_resolves_tier_from_roi_density() {
+        let auto_frame = || {
+            let mut src = VideoSource::new(96, 2, 42);
+            let mut f = src.next_frame();
+            f.precision = PrecisionPolicy::Auto;
+            f
+        };
+        // t_reg = 0.0: sigmoid scores always clear the threshold → every
+        // patch kept → importance-heavy → INT8.
+        let mut cfg = PipelineConfig::tiny_96();
+        cfg.region_threshold = 0.0;
+        let mut p = Pipeline::with_backend(cfg, host()).unwrap();
+        let r = p.process_frame(&auto_frame()).unwrap();
+        assert_eq!(r.tier, PrecisionTier::Int8);
+        assert_eq!(r.fp32_agreement, None, "the agreement probe is off by default");
+        // t_reg = 1.0: sigmoid never reaches it → empty mask → best-patch
+        // fallback keeps 1/36 → background-heavy → INT4.
+        let mut cfg = PipelineConfig::tiny_96();
+        cfg.region_threshold = 1.0;
+        let mut p = Pipeline::with_backend(cfg, host()).unwrap();
+        let r = p.process_frame(&auto_frame()).unwrap();
+        assert_eq!(r.tier, PrecisionTier::Int4);
+        // Unmasked baselines carry no ROI signal: Auto degrades to INT8.
+        let mut cfg = PipelineConfig::tiny_96();
+        cfg.use_mask = false;
+        let mut p = Pipeline::with_backend(cfg, host()).unwrap();
+        let r = p.process_frame(&auto_frame()).unwrap();
+        assert_eq!(r.tier, PrecisionTier::Int8);
+    }
+
+    #[test]
+    fn fixed_tiers_order_modeled_energy() {
+        let mut energy = Vec::new();
+        for tier in PrecisionTier::ALL {
+            let mut src = VideoSource::new(96, 2, 42);
+            let mut frame = src.next_frame();
+            frame.precision = PrecisionPolicy::Fixed(tier);
+            let mut p = Pipeline::with_backend(PipelineConfig::tiny_96(), host()).unwrap();
+            let r = p.process_frame(&frame).unwrap();
+            assert_eq!(r.tier, tier);
+            energy.push(r.modeled_energy_j);
+        }
+        assert!(energy[0] < energy[1], "int4 must model less energy than int8");
+        assert!(energy[1] < energy[2], "the fp32 reference is the most expensive tier");
+    }
+
+    #[test]
+    fn fp32_reference_probe_scores_agreement_without_energy_charge() {
+        let frame_at = |tier| {
+            let mut src = VideoSource::new(96, 2, 42);
+            let mut f = src.next_frame();
+            f.precision = PrecisionPolicy::Fixed(tier);
+            f
+        };
+        let mut cfg = PipelineConfig::tiny_96();
+        cfg.fp32_reference = true;
+        let mut probed = Pipeline::with_backend(cfg, host()).unwrap();
+        let mut plain = Pipeline::with_backend(PipelineConfig::tiny_96(), host()).unwrap();
+        let frame = frame_at(PrecisionTier::Int4);
+        let r = probed.process_frame(&frame).unwrap();
+        assert!(r.fp32_agreement.is_some(), "probe must score agreement on the per-frame path");
+        let r_plain = plain.process_frame(&frame).unwrap();
+        assert_eq!(r_plain.fp32_agreement, None);
+        assert_eq!(
+            r.modeled_energy_j, r_plain.modeled_energy_j,
+            "the fp32 probe is a measurement instrument — its energy is never charged"
+        );
+        assert_eq!(r.logits, r_plain.logits);
+        // The batched path carries the probe too.
+        let a = probed.route_frame(&frame).unwrap();
+        let b = probed.route_frame(&frame).unwrap();
+        let rs = probed.complete_batch(vec![a, b]).unwrap();
+        assert!(rs.iter().all(|r| r.fp32_agreement.is_some()));
+        // An fp32-tier frame needs no probe against itself.
+        let r = probed.process_frame(&frame_at(PrecisionTier::Fp32)).unwrap();
+        assert_eq!(r.fp32_agreement, None);
+    }
+
+    #[test]
+    fn complete_batch_rejects_mixed_tier_groups() {
+        let mut p = Pipeline::with_backend(PipelineConfig::tiny_96(), host()).unwrap();
+        let mut src = VideoSource::new(96, 2, 42);
+        let mut frame = src.next_frame();
+        frame.precision = PrecisionPolicy::Fixed(PrecisionTier::Int8);
+        let a = p.route_frame(&frame).unwrap();
+        frame.precision = PrecisionPolicy::Fixed(PrecisionTier::Int4);
+        let b = p.route_frame(&frame).unwrap();
+        assert_eq!(a.bucket, b.bucket, "same frame, same bucket — only the tier differs");
+        let err = p.complete_batch(vec![a, b]).unwrap_err();
+        assert!(err.to_string().contains("single-tier"), "{err}");
+    }
+
+    #[test]
+    fn process_batch_groups_by_bucket_and_tier() {
+        let mut src = VideoSource::new(96, 2, 21);
+        let mut frames: Vec<_> = (0..4).map(|_| src.next_frame()).collect();
+        frames[1].precision = PrecisionPolicy::Fixed(PrecisionTier::Int4);
+        frames[3].precision = PrecisionPolicy::Fixed(PrecisionTier::Int4);
+        let mut p = Pipeline::with_backend(PipelineConfig::tiny_96(), host()).unwrap();
+        let rs = p.process_batch(&frames).unwrap();
+        assert_eq!(rs.len(), frames.len());
+        for (f, r) in frames.iter().zip(&rs) {
+            assert_eq!(r.frame_index, f.index, "results must come back in input order");
+            let want = match f.precision {
+                PrecisionPolicy::Fixed(t) => t,
+                PrecisionPolicy::Auto => unreachable!("test uses fixed policies only"),
+            };
+            assert_eq!(r.tier, want);
+            // Groups are tier-pure, so a frame's reported batch size counts
+            // exactly its same-(bucket, tier) peers.
+            let peers = frames
+                .iter()
+                .zip(&rs)
+                .filter(|(pf, pr)| pr.bucket == r.bucket && pf.precision == f.precision)
+                .count();
+            assert_eq!(r.batch_size, peers);
+        }
     }
 
     #[test]

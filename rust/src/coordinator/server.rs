@@ -119,6 +119,7 @@ use super::clock::{Clock, Event};
 use super::engine::{EngineConfig, FrameWorker};
 use super::pipeline::{FrameResult, ServeReport};
 use super::stats::{LatencyHistogram, StageMetrics, WorkerHealthStats, WorkerMode, WorkerStats};
+use crate::quant::PrecisionPolicy;
 use crate::sensor::{Frame, VideoSource};
 
 // Wait caps for the event-driven loops. Every admission-relevant
@@ -277,6 +278,11 @@ pub struct SessionOptions {
     /// return [`PushOutcome::Quota`] and count `dropped_quota`; blocking
     /// `submit` waits for the quota to admit.
     pub quota: Quota,
+    /// Serving precision policy ([`PrecisionPolicy`]): a fixed
+    /// [`crate::quant::PrecisionTier`] for every frame, or `Auto` to pick
+    /// the tier per frame from MGNet ROI density. Stamped onto each
+    /// submitted frame; the worker pipeline resolves and serves it.
+    pub precision: PrecisionPolicy,
 }
 
 impl Default for SessionOptions {
@@ -288,6 +294,7 @@ impl Default for SessionOptions {
             window: 0,
             slo: None,
             quota: Quota::unlimited(),
+            precision: PrecisionPolicy::default(),
         }
     }
 }
@@ -324,6 +331,13 @@ impl SessionOptions {
         self.quota = quota;
         self
     }
+
+    /// Declare a serving precision policy (see
+    /// [`SessionOptions::precision`]).
+    pub fn with_precision(mut self, precision: PrecisionPolicy) -> Self {
+        self.precision = precision;
+        self
+    }
 }
 
 /// Per-session running totals, accumulated by the reassembler at emission
@@ -346,6 +360,16 @@ struct SessionAccum {
     /// Frames served by a worker whose backend reported accuracy-at-risk
     /// at completion time (0 without a fault model).
     accuracy_at_risk: u64,
+    /// Frames served per precision tier, indexed by
+    /// [`crate::quant::PrecisionTier::index`] (`[int4, int8, fp32]`).
+    /// Kept as exact counts so the server-wide aggregate is precisely
+    /// the per-session element-wise sum.
+    tier_frames: [u64; 3],
+    /// Frames per tier that also ran the fp32 electronic reference probe.
+    tier_ref_frames: [u64; 3],
+    /// Of the probed frames per tier, how many agreed with the fp32
+    /// reference top-1 class.
+    tier_agree: [u64; 3],
     /// Submit→emit latency distribution (p99 in the report).
     session_latency: LatencyHistogram,
     first_emit: Option<Instant>,
@@ -365,6 +389,9 @@ struct SessionShared {
     slo: Option<Duration>,
     /// Admission quota ([`SessionOptions::quota`]).
     quota: Quota,
+    /// Serving precision policy ([`SessionOptions::precision`]): stamped
+    /// onto every frame at submission so routing stays session-scoped.
+    precision: PrecisionPolicy,
     /// Frames accepted into the submission queue.
     submitted: AtomicU64,
     /// Frames handed to workers (dispatcher mirror).
@@ -414,6 +441,9 @@ impl SessionAccum {
             dropped_shed,
             slo_miss: self.slo_miss,
             accuracy_at_risk: self.accuracy_at_risk,
+            tier_frames: self.tier_frames,
+            tier_ref_frames: self.tier_ref_frames,
+            tier_agree: self.tier_agree,
             p99_latency_s: self.session_latency.quantile(0.99),
             wall_fps: if span > 0.0 { frames as f64 / span } else { 0.0 },
             mean_latency_s: div(self.latency_sum),
@@ -805,8 +835,11 @@ impl SessionSubmitter {
     /// shutdown finalizes a session only once `dispatched` has caught up
     /// with `submitted`, so a frame this method accepted can never be
     /// silently discarded by a racing shutdown sweep.
-    pub fn submit(&self, frame: Frame) -> std::result::Result<(), ServeError> {
+    pub fn submit(&self, mut frame: Frame) -> std::result::Result<(), ServeError> {
         let Some(tx) = &self.tx else { return Err(ServeError::Closed) };
+        // Session policy overrides whatever the sensor stamped: precision
+        // is a per-tenant serving contract, not a per-frame caller knob.
+        frame.precision = self.shared.precision;
         loop {
             // Generation before the predicate checks: a state change
             // between check and wait ends the wait immediately.
@@ -865,7 +898,8 @@ impl SessionSubmitter {
     /// [`PushOutcome::Shed`] — counted in the third distinct counter,
     /// `ServeReport::dropped_shed` — checked before the quota, so the
     /// fleet-level valve never burns per-session budget.
-    pub fn try_submit(&self, frame: Frame) -> PushOutcome {
+    pub fn try_submit(&self, mut frame: Frame) -> PushOutcome {
+        frame.precision = self.shared.precision;
         if self.core.closing.load(Ordering::Relaxed) // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
             || self.core.failed.load(Ordering::Relaxed) // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
             || self.shared.canceled.load(Ordering::Relaxed) // relaxed-ok: control latch; consumers re-check via the activity event, which carries the edge
@@ -1434,6 +1468,7 @@ impl Server {
             window,
             slo: opts.slo,
             quota: opts.quota,
+            precision: opts.precision,
             submitted: AtomicU64::new(0),
             dispatched: AtomicU64::new(0),
             consumed: AtomicU64::new(0),
@@ -1556,6 +1591,11 @@ impl Server {
             // merge exactly (bucket-wise addition).
             agg.slo_miss += a.slo_miss;
             agg.accuracy_at_risk += a.accuracy_at_risk;
+            for t in 0..3 {
+                agg.tier_frames[t] += a.tier_frames[t]; // lint-allow(panic): fixed-length tier arrays, index < 3
+                agg.tier_ref_frames[t] += a.tier_ref_frames[t]; // lint-allow(panic): fixed-length tier arrays, index < 3
+                agg.tier_agree[t] += a.tier_agree[t]; // lint-allow(panic): fixed-length tier arrays, index < 3
+            }
             agg.session_latency.merge(&a.session_latency);
             dropped += s_dropped;
             dropped_quota += s_dropped_quota;
@@ -2527,6 +2567,12 @@ fn emit(
         a.iou_sum += iou;
         a.correct += correct as u64;
         a.accuracy_at_risk += at_risk as u64;
+        let ti = result.tier.index();
+        a.tier_frames[ti] += 1; // lint-allow(panic): PrecisionTier::index is < 3 by construction
+        if let Some(agree) = result.fp32_agreement {
+            a.tier_ref_frames[ti] += 1; // lint-allow(panic): PrecisionTier::index is < 3 by construction
+            a.tier_agree[ti] += agree as u64; // lint-allow(panic): PrecisionTier::index is < 3 by construction
+        }
         a.energy_sum += result.modeled_energy_j;
         a.latency_sum += result.latency_s;
         a.queueing_sum += result.modeled_queueing_s;
@@ -2786,6 +2832,9 @@ fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
     let mut dropped_shed = 0u64;
     let mut slo_miss = 0u64;
     let mut accuracy_at_risk = 0u64;
+    let mut tier_frames = [0u64; 3];
+    let mut tier_ref_frames = [0u64; 3];
+    let mut tier_agree = [0u64; 3];
     // Summed from the per-session accums (not the merged worker metrics)
     // so the aggregate is *exactly* the per-session sum.
     let mut queueing_sum = 0.0f64;
@@ -2797,6 +2846,11 @@ fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
         let a = recover(&s.accum);
         slo_miss += a.slo_miss;
         accuracy_at_risk += a.accuracy_at_risk;
+        for t in 0..3 {
+            tier_frames[t] += a.tier_frames[t]; // lint-allow(panic): fixed-length tier arrays, index < 3
+            tier_ref_frames[t] += a.tier_ref_frames[t]; // lint-allow(panic): fixed-length tier arrays, index < 3
+            tier_agree[t] += a.tier_agree[t]; // lint-allow(panic): fixed-length tier arrays, index < 3
+        }
         queueing_sum += a.queueing_sum;
         session_latency.merge(&a.session_latency);
     }
@@ -2811,6 +2865,9 @@ fn reassembler_loop(core: &ServerCore, res_rx: Receiver<Msg>) {
                 dropped_shed,
                 slo_miss,
                 accuracy_at_risk,
+                tier_frames,
+                tier_ref_frames,
+                tier_agree,
                 p99_latency_s: session_latency.quantile(0.99),
                 wall_fps: if wall_s > 0.0 { agg.emitted as f64 / wall_s } else { 0.0 },
                 mean_latency_s: merged.frame_latency_mean_s(),
@@ -2874,6 +2931,8 @@ mod tests {
                 latency_s: 1e-4,
                 modeled_queueing_s: 0.0,
                 batch_size: 1,
+                tier: crate::quant::PrecisionTier::Int8,
+                fp32_agreement: None,
             })
         }
 
@@ -2921,13 +2980,20 @@ mod tests {
         assert_eq!(o.window, 5);
         assert_eq!(o.slo, None, "no SLO by default");
         assert_eq!(o.quota, Quota::unlimited(), "no quota by default");
+        assert_eq!(
+            o.precision,
+            PrecisionPolicy::default(),
+            "sessions default to the int8 fixed-precision policy"
+        );
         let o = o
             .with_slo(Duration::from_millis(4))
-            .with_quota(Quota::rate(30.0, 0).with_inflight(8));
+            .with_quota(Quota::rate(30.0, 0).with_inflight(8))
+            .with_precision(PrecisionPolicy::Auto);
         assert_eq!(o.slo, Some(Duration::from_millis(4)));
         assert_eq!(o.quota.max_inflight, 8);
         assert_eq!(o.quota.burst, 1, "rate burst clamps to >= 1");
         assert!(!o.quota.is_unlimited());
+        assert_eq!(o.precision, PrecisionPolicy::Auto);
     }
 
     /// Build the shared session state the quota unit tests poke directly.
@@ -2939,6 +3005,7 @@ mod tests {
             window: 4,
             slo: None,
             quota,
+            precision: PrecisionPolicy::default(),
             submitted: AtomicU64::new(0),
             dispatched: AtomicU64::new(0),
             consumed: AtomicU64::new(0),
@@ -3021,6 +3088,8 @@ mod tests {
         let report = session.report();
         assert_eq!(report.frames, 10);
         assert_eq!(report.backend, "custom");
+        assert_eq!(report.tier_frames, [0, 10, 0], "every frame served at the default int8 tier");
+        assert_eq!(report.tier_ref_frames, [0, 0, 0], "no fp32 reference probe configured");
         assert_eq!(report.slo_miss, 0, "no SLO declared, no misses");
         assert_eq!(report.dropped_quota, 0, "no quota declared, no policy drops");
         assert!(report.p99_latency_s >= 0.0);

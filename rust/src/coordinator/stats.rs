@@ -183,6 +183,15 @@ pub fn kfps_per_watt(mean_energy_j: f64) -> f64 {
 /// (each ~15.5% wide) up to ~100 s. Quantiles report the **lower bound**
 /// of the hit bucket, so the estimate never exaggerates a tail. Merging
 /// histograms (cross-session aggregate) is exact bucket-wise addition.
+///
+/// Both `bucket()` and `lower_bound()` derive from **one** precomputed
+/// edge table. They used to be computed independently (`log10` one way,
+/// `powf` the other), and the float round-trip is not monotone at bucket
+/// edges: a sample just above an edge could land in a bucket whose
+/// recomputed lower bound *exceeded* the sample, silently violating the
+/// conservative-quantile guarantee the `qos`/`storm` p99 assertions rely
+/// on. With a shared table, `lower_bound(bucket(x)) <= x` holds by
+/// construction for every `x`.
 #[derive(Debug, Clone, Copy)]
 pub struct LatencyHistogram {
     counts: [u64; Self::BUCKETS],
@@ -206,22 +215,38 @@ impl LatencyHistogram {
         LatencyHistogram { counts: [0; Self::BUCKETS], total: 0 }
     }
 
+    /// The shared bucket-edge table: `edges()[i]` is bucket `i`'s lower
+    /// bound, with `edges()[0] = 0.0` and `edges()[1] = FLOOR_S` (so
+    /// bucket 0 covers exactly the documented `[0, FLOOR_S)` range —
+    /// a sample of `FLOOR_S` itself belongs to bucket 1).
+    fn edges() -> &'static [f64; Self::BUCKETS] {
+        static EDGES: std::sync::OnceLock<[f64; LatencyHistogram::BUCKETS]> =
+            std::sync::OnceLock::new();
+        EDGES.get_or_init(|| {
+            let mut e = [0.0f64; Self::BUCKETS];
+            for (i, v) in e.iter_mut().enumerate().skip(1) {
+                *v = Self::FLOOR_S * 10f64.powf((i - 1) as f64 / Self::PER_DECADE);
+            }
+            e
+        })
+    }
+
     fn bucket(seconds: f64) -> usize {
-        // NaN / negative / sub-floor all land in bucket 0.
-        if seconds.is_nan() || seconds <= Self::FLOOR_S {
+        // NaN / negative / zero all land in bucket 0.
+        if seconds.is_nan() || seconds <= 0.0 {
             return 0;
         }
-        let b = 1 + ((seconds / Self::FLOOR_S).log10() * Self::PER_DECADE).floor() as usize;
+        // The edge table is sorted and `edges()[0] = 0.0 <= seconds`, so
+        // the partition point is at least 1 and `- 1` cannot underflow;
+        // clamping keeps the overflow tail in the last bucket.
+        let b = Self::edges().partition_point(|&edge| edge <= seconds) - 1;
         b.min(Self::BUCKETS - 1)
     }
 
-    /// Lower bound of a bucket (0.0 for bucket 0).
+    /// Lower bound of a bucket (0.0 for bucket 0) — read from the same
+    /// table `bucket()` searched, so the pair is monotone by construction.
     fn lower_bound(bucket: usize) -> f64 {
-        if bucket == 0 {
-            0.0
-        } else {
-            Self::FLOOR_S * 10f64.powf((bucket - 1) as f64 / Self::PER_DECADE)
-        }
+        Self::edges()[bucket.min(Self::BUCKETS - 1)]
     }
 
     /// Record one latency sample (seconds).
@@ -488,6 +513,47 @@ mod tests {
             assert_eq!(right.quantile(q), expect, "right-fold q={q}");
             assert_eq!(rotated.quantile(q), expect, "rotated q={q}");
         }
+    }
+
+    /// The monotonicity property the old log10/powf round-trip violated
+    /// at bucket edges: for *every* sample, the lower bound of its bucket
+    /// never exceeds it, and therefore no quantile estimate can exceed
+    /// the true sample maximum.
+    #[test]
+    fn latency_histogram_lower_bounds_never_exceed_samples() {
+        let mut rng = crate::util::rng::Rng::new(0x2507_07044);
+        let mut h = LatencyHistogram::new();
+        let mut max_sample = 0.0f64;
+        for i in 0..10_000 {
+            // Log-uniform across the histogram's whole dynamic range
+            // (~1e-8 .. ~1e2 s), plus exact bucket edges every few
+            // samples — the adversarial inputs for edge round-tripping.
+            let s = if i % 7 == 0 {
+                LatencyHistogram::lower_bound(rng.below(LatencyHistogram::BUCKETS))
+            } else {
+                10f64.powf(rng.uniform(-8.0, 2.0))
+            };
+            assert!(
+                LatencyHistogram::lower_bound(LatencyHistogram::bucket(s)) <= s,
+                "lower_bound(bucket({s:e})) exceeded the sample"
+            );
+            h.record(s);
+            max_sample = max_sample.max(s);
+        }
+        assert_eq!(h.count(), 10_000);
+        for q in [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 0.999, 1.0] {
+            let est = h.quantile(q);
+            assert!(est <= max_sample, "quantile({q}) = {est:e} > max {max_sample:e}");
+        }
+        // Edge self-consistency: every bucket's lower bound maps back to
+        // that bucket (exact, because both sides read one table).
+        for b in 0..LatencyHistogram::BUCKETS {
+            assert_eq!(LatencyHistogram::bucket(LatencyHistogram::lower_bound(b)), b);
+        }
+        // The documented bucket-0 range is [0, FLOOR_S): the floor itself
+        // belongs to bucket 1 (the old code put it in bucket 0).
+        assert_eq!(LatencyHistogram::bucket(LatencyHistogram::FLOOR_S), 1);
+        assert_eq!(LatencyHistogram::bucket(LatencyHistogram::FLOOR_S * 0.999), 0);
     }
 
     /// Merging an empty histogram is the identity, in either direction.

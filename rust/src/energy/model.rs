@@ -9,6 +9,7 @@ use super::components::ComponentModels;
 use crate::arch::core::{CoreParams, MatMulCost, OpticalCore};
 use crate::arch::scheduler::AttentionSchedule;
 use crate::arch::workload::Workload;
+use crate::quant::PrecisionTier;
 use crate::vit::{MgnetConfig, VitConfig};
 
 /// Per-component energy for one forward pass (joules).
@@ -145,22 +146,47 @@ impl Default for AcceleratorModel {
 impl AcceleratorModel {
     /// Energy of a raw cost bundle (workload already mapped to cores).
     pub fn energy_of_cost(&self, c: &MatMulCost, elementwise_elems: u64) -> EnergyBreakdown {
+        self.energy_of_cost_scaled(c, elementwise_elems, 1.0)
+    }
+
+    /// [`Self::energy_of_cost`] with the converter traffic scaled by a
+    /// precision tier (`converter_scale = bits / 8`): the component
+    /// figures are calibrated at 8 bits, and the bit-width-proportional
+    /// terms — DAC/ADC conversion energy, VCSEL symbol energy, MR
+    /// weight-programming (tuning-value DACs + retune), and the memory
+    /// bytes moved — all shrink (or grow, for the fp32 reference) with
+    /// the tier. BPD sampling, heater hold power, and EPU work are
+    /// bit-width-independent and stay fixed, so a lower tier's total is
+    /// strictly smaller but never collapses to zero. `scale = 1.0`
+    /// reproduces the unscaled figures exactly.
+    pub fn energy_of_cost_scaled(
+        &self,
+        c: &MatMulCost,
+        elementwise_elems: u64,
+        scale: f64,
+    ) -> EnergyBreakdown {
         let m = &self.components;
         let cycle_ns = self.cores.cycle_ns;
-        // Tuning: per-MR retune energy + hold power over the compute time.
+        // Tuning: per-MR retune energy (bit-width-scaled: fewer tuning
+        // levels to resolve) + hold power over the compute time (fixed).
         let hold_j = m.tuning.hold_uw_per_mr * 1e-6 // W per MR
             * (self.cores.mrs_per_bank() * self.cores.num_cores) as f64
             * (c.cycles as f64 * cycle_ns * 1e-9);
         let tuning_j =
-            c.weight_dac_conversions as f64 * m.tuning.energy_pj_per_mr * 1e-12 + hold_j;
-        // VCSEL symbols: mean activation drive over one cycle.
+            c.weight_dac_conversions as f64 * scale * m.tuning.energy_pj_per_mr * 1e-12 + hold_j;
+        // VCSEL symbols: mean activation drive over one cycle; drive
+        // energy scales with the symbol resolution.
         let vcsel_j =
-            c.vcsel_symbols as f64 * m.vcsel.mean_symbol_energy_pj(cycle_ns) * 1e-12;
+            c.vcsel_symbols as f64 * scale * m.vcsel.mean_symbol_energy_pj(cycle_ns) * 1e-12;
         let bpd_j = c.adc_conversions as f64 * m.bpd.sample_energy_pj * 1e-12;
-        let adc_j = c.adc_conversions as f64 * m.adc.energy_pj * 1e-12;
+        let adc_j = c.adc_conversions as f64 * scale * m.adc.energy_pj * 1e-12;
         // DACs: weight-side (tuning values) + input-side (VCSEL drive).
-        let dac_j = (c.weight_dac_conversions + c.vcsel_symbols) as f64 * m.dac.energy_pj * 1e-12;
-        let memory_j = (c.weight_bytes + c.input_bytes + c.output_bytes) as f64
+        let dac_j = (c.weight_dac_conversions as f64 + c.vcsel_symbols as f64)
+            * scale
+            * m.dac.energy_pj
+            * 1e-12;
+        let memory_j = (c.weight_bytes as f64 + c.input_bytes as f64 + c.output_bytes as f64)
+            * scale
             * m.memory.energy_pj_per_byte
             * 1e-12;
         let epu_j = elementwise_elems as f64 * m.epu.energy_pj_per_elem * 1e-12
@@ -170,9 +196,15 @@ impl AcceleratorModel {
 
     /// Energy breakdown for a [`Workload`] (Fig. 8 engine).
     pub fn energy(&self, w: &Workload) -> EnergyBreakdown {
+        self.energy_scaled(w, 1.0)
+    }
+
+    /// [`Self::energy`] at a converter-traffic scale (see
+    /// [`Self::energy_of_cost_scaled`]).
+    fn energy_scaled(&self, w: &Workload, scale: f64) -> EnergyBreakdown {
         let core = OpticalCore::new(self.cores);
         let cost = core.workload_cost(w);
-        self.energy_of_cost(&cost, w.elementwise.total())
+        self.energy_of_cost_scaled(&cost, w.elementwise.total(), scale)
     }
 
     /// Delay breakdown for a [`Workload`] (Fig. 9 engine).
@@ -238,9 +270,38 @@ impl AcceleratorModel {
         mgnet: &MgnetConfig,
         kept_patches: usize,
     ) -> EnergyBreakdown {
+        self.masked_energy_tiered(backbone, mgnet, kept_patches, PrecisionTier::Int8)
+    }
+
+    /// [`Self::frame_energy`] at a precision tier: the backbone's
+    /// converter traffic is scaled by the tier's bit width (see
+    /// [`Self::energy_of_cost_scaled`]). INT8 is exactly the unscaled
+    /// figure.
+    pub fn frame_energy_tiered(
+        &self,
+        cfg: &VitConfig,
+        kept_patches: usize,
+        decomposed: bool,
+        tier: PrecisionTier,
+    ) -> EnergyBreakdown {
+        let w = Workload::vit(cfg, kept_patches, decomposed);
+        self.energy_scaled(&w, tier.converter_scale())
+    }
+
+    /// [`Self::masked_energy`] at a precision tier. The MGNet front end
+    /// always runs at INT8 — it *decides* the tier, so it cannot itself
+    /// run below the fidelity the decision needs — and only the backbone
+    /// share is tier-scaled.
+    pub fn masked_energy_tiered(
+        &self,
+        backbone: &VitConfig,
+        mgnet: &MgnetConfig,
+        kept_patches: usize,
+        tier: PrecisionTier,
+    ) -> EnergyBreakdown {
         let mg_cfg = mgnet.as_vit();
         let mut e = self.frame_energy(&mg_cfg, mg_cfg.num_patches(), true);
-        e.add(&self.frame_energy(backbone, kept_patches, true));
+        e.add(&self.frame_energy_tiered(backbone, kept_patches, true, tier));
         e
     }
 
@@ -256,10 +317,27 @@ impl AcceleratorModel {
         kept_patches: usize,
         decomposed: bool,
     ) -> f64 {
+        self.weight_stream_delay_s_tiered(cfg, kept_patches, decomposed, PrecisionTier::Int8)
+    }
+
+    /// [`Self::weight_stream_delay_s`] at a precision tier: a 4-bit
+    /// weight set is half the bytes of the 8-bit baseline, so streaming
+    /// it into the MR banks takes proportionally less time (and the fp32
+    /// reference proportionally more). INT8 is exactly the unscaled
+    /// figure.
+    pub fn weight_stream_delay_s_tiered(
+        &self,
+        cfg: &VitConfig,
+        kept_patches: usize,
+        decomposed: bool,
+        tier: PrecisionTier,
+    ) -> f64 {
         let w = Workload::vit(cfg, kept_patches, decomposed);
         let core = OpticalCore::new(self.cores);
         let cost = core.workload_cost(&w);
-        cost.weight_bytes as f64 / self.components.memory.bandwidth_bytes_per_ns * 1e-9
+        cost.weight_bytes as f64 * tier.converter_scale()
+            / self.components.memory.bandwidth_bytes_per_ns
+            * 1e-9
     }
 
     /// The share of one forward's modeled **energy** that a bucket-major
@@ -273,12 +351,31 @@ impl AcceleratorModel {
         kept_patches: usize,
         decomposed: bool,
     ) -> f64 {
+        self.weight_program_energy_j_tiered(cfg, kept_patches, decomposed, PrecisionTier::Int8)
+    }
+
+    /// [`Self::weight_program_energy_j`] at a precision tier: the
+    /// weight-side DAC conversions, per-MR retune energy, and weight
+    /// memory traffic all carry the tier's bit width. Scales with the
+    /// same factor as the tiered frame energy's weight-programming share,
+    /// so a follower frame's discounted energy still can never go
+    /// negative at any tier.
+    pub fn weight_program_energy_j_tiered(
+        &self,
+        cfg: &VitConfig,
+        kept_patches: usize,
+        decomposed: bool,
+        tier: PrecisionTier,
+    ) -> f64 {
         let w = Workload::vit(cfg, kept_patches, decomposed);
         let core = OpticalCore::new(self.cores);
         let cost = core.workload_cost(&w);
         let m = &self.components;
-        cost.weight_dac_conversions as f64 * (m.tuning.energy_pj_per_mr + m.dac.energy_pj) * 1e-12
-            + cost.weight_bytes as f64 * m.memory.energy_pj_per_byte * 1e-12
+        tier.converter_scale()
+            * (cost.weight_dac_conversions as f64
+                * (m.tuning.energy_pj_per_mr + m.dac.energy_pj)
+                * 1e-12
+                + cost.weight_bytes as f64 * m.memory.energy_pj_per_byte * 1e-12)
     }
 
     /// Modeled cost `(time_s, energy_j)` of recalibrating a degraded
@@ -484,6 +581,65 @@ mod tests {
             assert!(e > m.weight_program_energy_j(&cfg, kept, true), "{v}-{res}: energy {e}");
             // Sanity: a recal window is sub-second at these bank sizes.
             assert!(t < 1.0, "{v}-{res}: recal time {t}s");
+        }
+    }
+
+    #[test]
+    fn tiered_energy_orders_int4_int8_fp32_and_int8_is_exact() {
+        let m = model();
+        let cfg = VitConfig::variant(VitVariant::Tiny, 96, 10);
+        let mg = MgnetConfig::classification(96);
+        for kept in [9, 18, 36] {
+            let e4 = m.frame_energy_tiered(&cfg, kept, true, PrecisionTier::Int4).total_j();
+            let e8 = m.frame_energy_tiered(&cfg, kept, true, PrecisionTier::Int8).total_j();
+            let e32 = m.frame_energy_tiered(&cfg, kept, true, PrecisionTier::Fp32).total_j();
+            assert!(e4 < e8 && e8 < e32, "kept {kept}: {e4} / {e8} / {e32}");
+            // INT8 is the calibration point: bit-identical to the
+            // untiered figure (the pre-tier serving path's energy).
+            assert_eq!(e8, m.frame_energy(&cfg, kept, true).total_j());
+            assert_eq!(
+                m.masked_energy_tiered(&cfg, &mg, kept, PrecisionTier::Int8).total_j(),
+                m.masked_energy(&cfg, &mg, kept).total_j()
+            );
+            // The bit-width-independent floor (BPD, hold, EPU) keeps the
+            // INT4 figure well above half of INT8.
+            assert!(e4 > e8 * 0.5, "kept {kept}: int4 {e4} vs int8/2 {}", e8 * 0.5);
+        }
+    }
+
+    #[test]
+    fn tiered_masked_energy_scales_only_the_backbone_share() {
+        // The MGNet front end always runs INT8, so the INT4 saving on the
+        // masked figure is exactly the backbone-only saving.
+        let m = model();
+        let cfg = VitConfig::variant(VitVariant::Tiny, 96, 10);
+        let mg = MgnetConfig::classification(96);
+        let kept = 18;
+        let saved_masked = m.masked_energy_tiered(&cfg, &mg, kept, PrecisionTier::Int8).total_j()
+            - m.masked_energy_tiered(&cfg, &mg, kept, PrecisionTier::Int4).total_j();
+        let saved_backbone = m.frame_energy_tiered(&cfg, kept, true, PrecisionTier::Int8).total_j()
+            - m.frame_energy_tiered(&cfg, kept, true, PrecisionTier::Int4).total_j();
+        assert!(saved_masked > 0.0);
+        assert!((saved_masked - saved_backbone).abs() < 1e-18, "{saved_masked} vs {saved_backbone}");
+    }
+
+    #[test]
+    fn tiered_weight_programming_scales_with_bit_width() {
+        let m = model();
+        let cfg = VitConfig::variant(VitVariant::Tiny, 96, 10);
+        let kept = 18;
+        let d8 = m.weight_stream_delay_s_tiered(&cfg, kept, true, PrecisionTier::Int8);
+        assert_eq!(d8, m.weight_stream_delay_s(&cfg, kept, true));
+        assert_eq!(m.weight_stream_delay_s_tiered(&cfg, kept, true, PrecisionTier::Int4), d8 * 0.5);
+        assert_eq!(m.weight_stream_delay_s_tiered(&cfg, kept, true, PrecisionTier::Fp32), d8 * 4.0);
+        let e8 = m.weight_program_energy_j_tiered(&cfg, kept, true, PrecisionTier::Int8);
+        assert_eq!(e8, m.weight_program_energy_j(&cfg, kept, true));
+        assert_eq!(m.weight_program_energy_j_tiered(&cfg, kept, true, PrecisionTier::Int4), e8 * 0.5);
+        // The follower discount stays a strict subset at every tier.
+        for tier in PrecisionTier::ALL {
+            let over = m.weight_program_energy_j_tiered(&cfg, kept, true, tier);
+            let full = m.frame_energy_tiered(&cfg, kept, true, tier).total_j();
+            assert!(over > 0.0 && over < full, "{tier}: {over} vs {full}");
         }
     }
 

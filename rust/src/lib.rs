@@ -86,6 +86,19 @@
 //! --test storm`, `cargo bench --bench serve_storm` →
 //! `BENCH_storm.json`.
 //!
+//! Precision is a **per-tenant serving contract**: every session (and
+//! `serve()` run) carries a [`quant::PrecisionPolicy`] — a fixed
+//! [`quant::PrecisionTier`] (int4 / int8 / fp32) or `Auto`, which
+//! resolves per frame from MGNet RoI density (dense scenes stay int8,
+//! sparse ones drop to int4). Tiers never mix inside a micro-batch
+//! (groups are bucket×tier-major), the energy model scales
+//! converter-bound terms (DAC/ADC/VCSEL/MR weight programming) by tier
+//! width, and `ServeReport` counts frames per tier plus an optional
+//! fp32 agreement probe (`PipelineConfig::fp32_reference`) that never
+//! pollutes latency or energy accounting. Knobs: `optovit serve --precision
+//! auto|int4|int8|fp32`; gate: `cargo test --test precision`; bench:
+//! `cargo bench --bench precision_sweep` → `BENCH_precision.json`.
+//!
 //! ## Module map
 //!
 //! | module | role |
@@ -95,11 +108,11 @@
 //! | [`arch`] | optical core cycle model, chunk mapping, 5-core scheduler, ViT workload inventory |
 //! | [`cosim`] | discrete-event queueing co-sim of the mapped scheduler: per-core FIFO queues under the real arrival process, load-dependent modeled latency, operating-point sweeps |
 //! | [`vit`] | ViT-T/S/B/L and MGNet configurations |
-//! | [`quant`] | int8 symmetric quantization |
+//! | [`quant`] | symmetric quantization + mixed-precision serving tiers (`PrecisionTier` int4/int8/fp32, per-tenant `PrecisionPolicy` incl. ROI-driven `Auto`) |
 //! | [`roi`] | patch masks and skip-ratio accounting |
 //! | [`sensor`] | synthetic CMOS sensor / video workload generator |
 //! | [`runtime`] | pluggable batch-first execution backends behind the `Backend` trait (`execute_batch` = N frames/call, natively in all three): `pjrt` (compiled HLO), `host` (pure-Rust reference), `sim` (host numerics + batch-aware modeled photonic timing), plus per-worker `BackendFactory` construction |
-//! | [`coordinator`] | the serving stack, generic over any backend: zero-allocation frame pipeline, bucket routing, deadline-aware bucket-major micro-batching (`MicroBatcher`), streaming `FrameStream` serve, the pluggable `Clock`/`Event` time seam, and the session-oriented `Server` (multi-tenant `Session`s over one dispatcher → N micro-batching, optionally core-pinned workers → per-session in-order reassembly, fair weighted admission, per-session QoS: latency SLOs + admission quotas, per-session + aggregate reports) — now elastic: `scale_up`/`scale_down`/`set_shed` on the live pool, the SLO-driven `autoscale::AutoScaler`, and the `loadgen` storm harness |
+//! | [`coordinator`] | the serving stack, generic over any backend: zero-allocation frame pipeline, bucket routing, deadline-aware bucket-major micro-batching (`MicroBatcher`), streaming `FrameStream` serve, the pluggable `Clock`/`Event` time seam, and the session-oriented `Server` (multi-tenant `Session`s over one dispatcher → N micro-batching, optionally core-pinned workers → per-session in-order reassembly, fair weighted admission, per-session QoS: latency SLOs + admission quotas, per-session + aggregate reports) — now elastic: `scale_up`/`scale_down`/`set_shed` on the live pool, the SLO-driven `autoscale::AutoScaler`, and the `loadgen` storm harness — with per-tenant mixed-precision: bucket×tier-major micro-batch groups, per-tier `tier_frames` accounting, and an optional fp32 agreement probe |
 //! | [`baselines`] | Table-IV competitor accelerator models + platform refs |
 //! | [`cli`] | dependency-free argument parsing |
 //! | [`util`] | PRNG, stats, table formatting, property-test helpers |

@@ -5,6 +5,7 @@
 //! optovit serve   [--backend pjrt|host|sim] [--frames N] [--workers W] [--queue D]
 //!                 [--batch B] [--batch-wait-us U] [--window W]
 //!                 [--cameras K] [--weights w0,w1,..] [--pin]
+//!                 [--precision auto|int4|int8|fp32]
 //!                 [--slo-ms F] [--quota N] [--rate F]
 //!                 [--autoscale] [--min-workers N] [--max-workers N]
 //!                 [--faults S] [--drift-rate R]
@@ -45,6 +46,13 @@
 //! `--workers`, never above 4x it); the report appends the scale-event
 //! log and flags retired workers in the per-worker table.
 //!
+//! `--precision` picks the serving precision policy: a fixed tier
+//! (`int4`, `int8`, `fp32`) for every frame, or `auto` for ROI-driven
+//! per-frame tier selection (importance-heavy frames at INT8,
+//! background-heavy at INT4). Passing the flag also arms the fp32
+//! electronic-reference probe, so the report gains a per-tier table with
+//! frame counts and top-1 agreement against the fp32 reference.
+//!
 //! `--faults S` (sim backend only) seeds a per-worker degraded-optics
 //! schedule (MR thermal drift, stuck cells, dead VCSEL lanes) on the
 //! serving clock; `--drift-rate R` sets the drift accumulation in nm/s
@@ -73,6 +81,7 @@ use optovit::coordinator::stats::StageMetrics;
 use optovit::energy::AcceleratorModel;
 use optovit::photonics::fpv::FpvModel;
 use optovit::photonics::MrGeometry;
+use optovit::quant::{PrecisionPolicy, PrecisionTier};
 use optovit::coordinator::clock::Clock;
 use optovit::runtime::{AnyFactory, BackendFactory, BackendKind, FaultPlan, QueueingPlan};
 use optovit::util::table::{si_energy, si_time, Table};
@@ -108,9 +117,9 @@ fn main() {
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     args.check_known(&[
         "frames", "seed", "objects", "workers", "queue", "batch", "batch-wait-us", "window",
-        "cameras", "weights", "pin", "slo-ms", "quota", "rate", "autoscale", "min-workers",
-        "max-workers", "faults", "drift-rate", "cores", "arrival-fps", "no-mask", "backend",
-        "artifacts",
+        "cameras", "weights", "pin", "precision", "slo-ms", "quota", "rate", "autoscale",
+        "min-workers", "max-workers", "faults", "drift-rate", "cores", "arrival-fps", "no-mask",
+        "backend", "artifacts",
     ])
     .map_err(anyhow::Error::msg)?;
     let frames = args.get_u64("frames", 50).map_err(anyhow::Error::msg)?;
@@ -123,6 +132,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let window = args.get_usize("window", 64).map_err(anyhow::Error::msg)?.max(1);
     let cameras = args.get_usize("cameras", 1).map_err(anyhow::Error::msg)?.max(1);
     let weights = args.get_usize_list("weights", &[]).map_err(anyhow::Error::msg)?;
+    // Mixed-precision serving: the policy rides every camera session; an
+    // explicit flag also arms the fp32 electronic-reference probe so the
+    // report can score integer-tier agreement.
+    let precision_explicit = args.get("precision").is_some();
+    let precision: PrecisionPolicy =
+        args.get_or("precision", "int8").parse().map_err(anyhow::Error::msg)?;
     // Per-session QoS knobs (applied to every camera session).
     let slo = args.get_opt_duration_ms("slo-ms").map_err(anyhow::Error::msg)?;
     let quota_inflight = args.get_usize("quota", 0).map_err(anyhow::Error::msg)?;
@@ -185,6 +200,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         args.get_or("backend", default_backend).parse().map_err(anyhow::Error::msg)?;
     let mut cfg = PipelineConfig::tiny_96();
     cfg.use_mask = !args.get_bool("no-mask");
+    cfg.fp32_reference = precision_explicit;
     let mut factory = AnyFactory::new(kind, artifact_dir);
     // The host/sim reference models build their classifier head from the
     // factory config; keep it in lockstep with the pipeline's head width.
@@ -253,6 +269,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         batch: BatchPolicy::batched(batch, batch_wait),
         window,
         pin_workers: args.get_bool("pin"),
+        precision,
     };
     match kind {
         BackendKind::Pjrt => println!("warming up (compiling artifacts)..."),
@@ -323,7 +340,8 @@ fn cmd_serve_cameras(
         let mut sopts = SessionOptions::named(format!("camera-{cam}"))
             .with_weight(weight)
             .with_queue_depth(opts.queue_depth)
-            .with_quota(quota);
+            .with_quota(quota)
+            .with_precision(opts.precision);
         if let Some(slo) = slo {
             sopts = sopts.with_slo(slo);
         }
@@ -341,8 +359,8 @@ fn cmd_serve_cameras(
         cams.push((cam, weight, sensor, drain));
     }
     let mut t = Table::new(vec![
-        "camera", "weight", "frames", "dropped", "q-drop", "shed", "slo miss", "at-risk", "fps",
-        "latency", "p99", "batch", "IoU",
+        "camera", "weight", "frames", "int4", "int8", "fp32", "dropped", "q-drop", "shed",
+        "slo miss", "at-risk", "fps", "latency", "p99", "batch", "IoU",
     ]);
     // Drain every camera with the autoscaler (if armed) ticking in a
     // scoped thread alongside; the stop flag is set before any early
@@ -373,6 +391,9 @@ fn cmd_serve_cameras(
                     format!("camera-{cam}"),
                     weight.to_string(),
                     report.frames.to_string(),
+                    report.tier_frames[0].to_string(),
+                    report.tier_frames[1].to_string(),
+                    report.tier_frames[2].to_string(),
                     report.dropped.to_string(),
                     report.dropped_quota.to_string(),
                     report.dropped_shed.to_string(),
@@ -449,6 +470,28 @@ fn print_serve_report(r: &ServeReport, metrics: &StageMetrics) {
     println!("mean kept patches    {:.1} / 36", r.mean_kept_patches);
     println!("mask IoU vs GT       {:.3}", r.mean_mask_iou);
     println!("top-1 vs synth label {:.3}", r.top1_accuracy);
+    // Shown whenever the run served anything off the default int8 tier
+    // or scored frames against the fp32 electronic reference.
+    let tiered = r.tier_frames[0] > 0
+        || r.tier_frames[2] > 0
+        || r.tier_ref_frames.iter().sum::<u64>() > 0;
+    if tiered {
+        println!("\nper-tier breakdown:");
+        let mut t = Table::new(vec!["tier", "frames", "fp32-checked", "agreement"]);
+        for tier in PrecisionTier::ALL {
+            let i = tier.index();
+            if r.tier_frames[i] == 0 {
+                continue;
+            }
+            t.row(vec![
+                tier.to_string(),
+                r.tier_frames[i].to_string(),
+                r.tier_ref_frames[i].to_string(),
+                r.tier_agreement(tier).map(|a| format!("{a:.3}")).unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        print!("{}", t.render());
+    }
     if r.workers > 1 {
         println!("\nper-worker utilization:");
         let mut t = Table::new(vec![

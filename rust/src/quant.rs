@@ -1,12 +1,165 @@
-//! 8-bit symmetric uniform quantization (§IV "Accuracy Analysis").
+//! Symmetric uniform quantization (§IV "Accuracy Analysis") and the
+//! serving precision tiers built on it.
 //!
 //! Mirrors `python/compile/quant.py`: symmetric uniform quantization with a
 //! dynamically chosen scale (max-abs calibration), matching the precision
-//! limits of the photonic weight banks and the 8-bit ADC/DAC interfaces.
-//! The rust side needs it to quantize sensor frames before they enter the
-//! HLO graph and to sanity-check artifact numerics.
+//! limits of the photonic weight banks and the ADC/DAC interfaces. The rust
+//! side needs it to quantize sensor frames before they enter the HLO graph
+//! and to sanity-check artifact numerics.
+//!
+//! Beyond the paper's uniform 8-bit scheme, serving supports token-aware
+//! **mixed precision** (TVA-style): every frame executes at a
+//! [`PrecisionTier`] — INT8 (the paper's QAT operating point), INT4 (half
+//! the DAC/ADC bits and VCSEL symbol energy for background-heavy frames),
+//! or FP32 (the electronic host reference used to *measure* the accuracy
+//! cost of the integer tiers, never a photonic operating point). Tenants
+//! pick a [`PrecisionPolicy`]: a fixed tier, or `Auto`, where the router
+//! derives the tier per frame from the MGNet ROI mask (high-importance
+//! frames → INT8, background-heavy frames → INT4).
 
-/// Symmetric int8 quantization parameters.
+use std::fmt;
+use std::str::FromStr;
+
+/// `Auto` precision routing: a frame whose ROI mask keeps at least this
+/// fraction of its patches is deemed importance-heavy and runs at INT8;
+/// below it the frame is background-heavy and drops to INT4.
+pub const AUTO_ROI_THRESHOLD: f64 = 0.5;
+
+/// An execution precision tier on the serving path.
+///
+/// `index()` is the canonical per-tier array slot used by the
+/// `ServeReport` tier counters (`[int4, int8, fp32]`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PrecisionTier {
+    /// 4-bit symmetric quantization: half the converter bits of INT8.
+    Int4,
+    /// 8-bit symmetric quantization — the paper's QAT operating point.
+    Int8,
+    /// Full-precision host reference (no fake-quantization). Models the
+    /// *electronic* fallback, not a photonic tier: 32 bits of converter
+    /// traffic make it strictly the most expensive tier, and serving uses
+    /// it only to score integer-tier output agreement.
+    Fp32,
+}
+
+impl PrecisionTier {
+    /// Every tier, in `index()` order.
+    pub const ALL: [PrecisionTier; 3] = [PrecisionTier::Int4, PrecisionTier::Int8, PrecisionTier::Fp32];
+
+    /// Canonical array slot for per-tier counters: int4 = 0, int8 = 1,
+    /// fp32 = 2.
+    pub fn index(self) -> usize {
+        match self {
+            PrecisionTier::Int4 => 0,
+            PrecisionTier::Int8 => 1,
+            PrecisionTier::Fp32 => 2,
+        }
+    }
+
+    /// Integer bits of the tier's fake-quantization grid. 32 is the
+    /// "unquantized" sentinel: the host reference skips fake-quantization
+    /// entirely (no 32-bit integer grid is ever materialized).
+    pub fn bits(self) -> u32 {
+        match self {
+            PrecisionTier::Int4 => 4,
+            PrecisionTier::Int8 => 8,
+            PrecisionTier::Fp32 => 32,
+        }
+    }
+
+    /// Converter-traffic scale relative to the 8-bit baseline the energy
+    /// model's component figures are calibrated at: DAC/ADC conversions,
+    /// VCSEL symbol energy, and MR weight-streaming bytes all scale with
+    /// the bit width (`bits / 8`).
+    pub fn converter_scale(self) -> f64 {
+        self.bits() as f64 / 8.0
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PrecisionTier::Int4 => "int4",
+            PrecisionTier::Int8 => "int8",
+            PrecisionTier::Fp32 => "fp32",
+        }
+    }
+}
+
+impl fmt::Display for PrecisionTier {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl FromStr for PrecisionTier {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "int4" => Ok(PrecisionTier::Int4),
+            "int8" => Ok(PrecisionTier::Int8),
+            "fp32" => Ok(PrecisionTier::Fp32),
+            other => Err(format!("unknown precision tier '{other}' (expected int4|int8|fp32)")),
+        }
+    }
+}
+
+/// A tenant's precision policy: one fixed tier for every frame, or
+/// ROI-driven per-frame tier selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PrecisionPolicy {
+    /// Every frame executes at this tier.
+    Fixed(PrecisionTier),
+    /// The router picks the tier per frame from the MGNet ROI mask:
+    /// kept-patch fraction ≥ [`AUTO_ROI_THRESHOLD`] → INT8, else INT4.
+    /// Unmasked pipelines (every patch kept) resolve to INT8.
+    Auto,
+}
+
+impl Default for PrecisionPolicy {
+    /// INT8 everywhere — bit-identical to the pre-tier serving path.
+    fn default() -> Self {
+        PrecisionPolicy::Fixed(PrecisionTier::Int8)
+    }
+}
+
+impl PrecisionPolicy {
+    /// The fixed tier, if the policy is not ROI-driven.
+    pub fn fixed_tier(self) -> Option<PrecisionTier> {
+        match self {
+            PrecisionPolicy::Fixed(t) => Some(t),
+            PrecisionPolicy::Auto => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PrecisionPolicy::Auto => "auto",
+            PrecisionPolicy::Fixed(t) => t.as_str(),
+        }
+    }
+}
+
+impl fmt::Display for PrecisionPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl FromStr for PrecisionPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "auto" => Ok(PrecisionPolicy::Auto),
+            other => other
+                .parse::<PrecisionTier>()
+                .map(PrecisionPolicy::Fixed)
+                .map_err(|_| format!("unknown precision policy '{other}' (expected auto|int4|int8|fp32)")),
+        }
+    }
+}
+
+/// Symmetric integer quantization parameters.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct QuantParams {
     /// Scale such that `real = scale * int`.
@@ -17,9 +170,41 @@ pub struct QuantParams {
 
 impl QuantParams {
     /// Max-abs calibration over a tensor: `scale = max|x| / (2^(b-1) - 1)`.
+    ///
+    /// Every input must be finite: a NaN or infinity would otherwise be
+    /// silently *laundered* — `f32::max` skips NaN, so calibration would
+    /// proceed from the remaining values, and `quantize(NaN)`'s saturating
+    /// cast would turn the poisoned value into a clean `0`. Debug builds
+    /// assert; release builds fall back to the documented clamp behaviour
+    /// (non-finite values are ignored for calibration, NaN quantizes to 0,
+    /// ±∞ saturates to the grid edge). Callers that cannot rule out
+    /// non-finite inputs (e.g. raw sensor data) should use
+    /// [`QuantParams::try_calibrate`] and handle the failure.
     pub fn calibrate(xs: &[f32], bits: u32) -> Self {
+        debug_assert!(
+            xs.iter().all(|x| x.is_finite()),
+            "calibrate: non-finite input (use try_calibrate for untrusted data)"
+        );
+        Self::calibrate_clamped(xs, bits)
+    }
+
+    /// Max-abs calibration that *reports* non-finite input instead of
+    /// asserting: `None` if any value is NaN or ±∞.
+    pub fn try_calibrate(xs: &[f32], bits: u32) -> Option<Self> {
+        if xs.iter().any(|x| !x.is_finite()) {
+            return None;
+        }
+        Some(Self::calibrate_clamped(xs, bits))
+    }
+
+    /// The shared calibration body; skips non-finite values by
+    /// construction (`f32::max` ignores NaN, and ±∞ is filtered).
+    fn calibrate_clamped(xs: &[f32], bits: u32) -> Self {
         assert!(bits >= 2 && bits <= 16);
-        let max_abs = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let max_abs = xs
+            .iter()
+            .filter(|x| x.is_finite())
+            .fold(0.0f32, |m, &x| m.max(x.abs()));
         let qmax = ((1i32 << (bits - 1)) - 1) as f32;
         let scale = if max_abs > 0.0 { max_abs / qmax } else { 1.0 };
         QuantParams { scale, bits }
@@ -33,7 +218,10 @@ impl QuantParams {
         -self.qmax()
     }
 
-    /// Quantize one value to the integer grid.
+    /// Quantize one value to the integer grid. NaN maps to 0 and ±∞
+    /// saturates to the grid edge (the `as i32` cast is saturating) —
+    /// acceptable only after calibration vouched for the tensor, which is
+    /// why [`QuantParams::calibrate`] rejects non-finite input.
     pub fn quantize(&self, x: f32) -> i32 {
         let q = (x / self.scale).round() as i32;
         q.clamp(self.qmin(), self.qmax())
@@ -65,8 +253,10 @@ impl QuantParams {
 
 /// Quantize a tensor with its own max-abs calibration; returns (ints, params).
 pub fn quantize_tensor(xs: &[f32], bits: u32) -> (Vec<i8>, QuantParams) {
-    let p = QuantParams::calibrate(xs, bits);
+    // Validate storage width *before* calibrating: calibration accepts up
+    // to 16 bits, so checking afterwards would do the work and then panic.
     assert!(bits <= 8, "i8 storage holds at most 8 bits");
+    let p = QuantParams::calibrate(xs, bits);
     (xs.iter().map(|&x| p.quantize(x) as i8).collect(), p)
 }
 
@@ -128,5 +318,82 @@ mod tests {
         let e8 = QuantParams::calibrate(&xs, 8).max_abs_error();
         let e4 = QuantParams::calibrate(&xs, 4).max_abs_error();
         assert!(e4 > e8 * 8.0);
+    }
+
+    // ---- NaN/Inf regressions (the silent-laundering bugfix) ----
+
+    #[test]
+    fn try_calibrate_reports_non_finite_input() {
+        assert_eq!(QuantParams::try_calibrate(&[0.5, f32::NAN, 1.0], 8), None);
+        assert_eq!(QuantParams::try_calibrate(&[f32::INFINITY], 8), None);
+        assert_eq!(QuantParams::try_calibrate(&[f32::NEG_INFINITY, 0.0], 8), None);
+        // Finite tensors calibrate identically through both entry points.
+        let xs = [0.5f32, -1.25, 2.0];
+        assert_eq!(QuantParams::try_calibrate(&xs, 8), Some(QuantParams::calibrate(&xs, 8)));
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "non-finite input")]
+    fn calibrate_asserts_on_nan_in_debug() {
+        let _ = QuantParams::calibrate(&[1.0, f32::NAN], 8);
+    }
+
+    #[test]
+    fn release_clamp_behaviour_is_documented_not_laundered() {
+        // The release-mode fallback path (calibrate_clamped) ignores
+        // non-finite values for scale selection, quantizes NaN to 0, and
+        // saturates ±∞ — the *documented* clamp, exercised directly so the
+        // behaviour is pinned in both build profiles.
+        let p = QuantParams::calibrate_clamped(&[0.5, f32::NAN, f32::INFINITY, -2.0], 8);
+        let clean = QuantParams::calibrate(&[0.5, -2.0], 8);
+        assert_eq!(p, clean, "non-finite values must not move the scale");
+        assert_eq!(p.quantize(f32::NAN), 0);
+        assert_eq!(p.quantize(f32::INFINITY), p.qmax());
+        assert_eq!(p.quantize(f32::NEG_INFINITY), p.qmin());
+    }
+
+    #[test]
+    #[should_panic(expected = "i8 storage")]
+    fn quantize_tensor_rejects_wide_bits_before_calibrating() {
+        // The old ordering calibrated first and asserted after; 9 bits
+        // must be rejected up front (calibrate accepts up to 16, so this
+        // panic is the *storage* check, not calibration's).
+        let _ = quantize_tensor(&[1.0, 2.0], 9);
+    }
+
+    // ---- Precision tiers ----
+
+    #[test]
+    fn tier_indices_bits_and_scales_are_canonical() {
+        for (i, t) in PrecisionTier::ALL.iter().enumerate() {
+            assert_eq!(t.index(), i);
+        }
+        assert_eq!(PrecisionTier::Int4.bits(), 4);
+        assert_eq!(PrecisionTier::Int8.bits(), 8);
+        assert_eq!(PrecisionTier::Fp32.bits(), 32);
+        assert_eq!(PrecisionTier::Int4.converter_scale(), 0.5);
+        assert_eq!(PrecisionTier::Int8.converter_scale(), 1.0);
+        assert_eq!(PrecisionTier::Fp32.converter_scale(), 4.0);
+    }
+
+    #[test]
+    fn tier_and_policy_round_trip_their_names() {
+        for t in PrecisionTier::ALL {
+            assert_eq!(t.as_str().parse::<PrecisionTier>(), Ok(t));
+            assert_eq!(t.to_string(), t.as_str());
+        }
+        assert_eq!("auto".parse::<PrecisionPolicy>(), Ok(PrecisionPolicy::Auto));
+        assert_eq!(
+            "int4".parse::<PrecisionPolicy>(),
+            Ok(PrecisionPolicy::Fixed(PrecisionTier::Int4))
+        );
+        assert!("int7".parse::<PrecisionPolicy>().is_err());
+        assert_eq!(PrecisionPolicy::default(), PrecisionPolicy::Fixed(PrecisionTier::Int8));
+        assert_eq!(PrecisionPolicy::Auto.fixed_tier(), None);
+        assert_eq!(
+            PrecisionPolicy::default().fixed_tier(),
+            Some(PrecisionTier::Int8)
+        );
     }
 }

@@ -113,12 +113,25 @@ impl PatchMask {
     /// Gather kept patches from a row-major patch tensor
     /// `(num_patches, patch_dim)` into a dense `(kept, patch_dim)` buffer.
     pub fn gather_patches(&self, patches: &[f32], patch_dim: usize) -> Vec<f32> {
-        assert_eq!(patches.len(), self.num_patches() * patch_dim);
         let mut out = Vec::with_capacity(self.kept() * patch_dim);
-        for idx in self.kept_indices() {
-            out.extend_from_slice(&patches[idx * patch_dim..(idx + 1) * patch_dim]);
-        }
+        self.gather_patches_into(patches, patch_dim, &mut out);
         out
+    }
+
+    /// [`PatchMask::gather_patches`] into a caller-owned buffer (cleared
+    /// first) — allocation-free once `out` has capacity for
+    /// `kept() * patch_dim` values. Iterates `keep` directly: the old
+    /// implementation routed through `kept_indices()`, allocating a fresh
+    /// index `Vec` on every call — a hidden per-frame heap hit on any
+    /// masked gather path.
+    pub fn gather_patches_into(&self, patches: &[f32], patch_dim: usize, out: &mut Vec<f32>) {
+        assert_eq!(patches.len(), self.num_patches() * patch_dim);
+        out.clear();
+        for (idx, &kept) in self.keep.iter().enumerate() {
+            if kept {
+                out.extend_from_slice(&patches[idx * patch_dim..(idx + 1) * patch_dim]);
+            }
+        }
     }
 }
 
@@ -234,6 +247,22 @@ mod tests {
         let patches: Vec<f32> = (0..8).map(|x| x as f32).collect(); // 4 patches × dim 2
         let g = m.gather_patches(&patches, 2);
         assert_eq!(g, vec![0.0, 1.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn gather_into_reuses_buffer_and_matches_gather() {
+        let mut rng = Rng::new(11);
+        let m = PatchMask::random(6, 0.4, &mut rng);
+        let dim = 3;
+        let patches: Vec<f32> = (0..m.num_patches() * dim).map(|x| x as f32).collect();
+        let mut out = Vec::with_capacity(m.num_patches() * dim);
+        m.gather_patches_into(&patches, dim, &mut out);
+        assert_eq!(out, m.gather_patches(&patches, dim));
+        // Re-gathering into the warmed buffer clears before appending —
+        // no duplicated rows, same result.
+        m.gather_patches_into(&patches, dim, &mut out);
+        assert_eq!(out.len(), m.kept() * dim);
+        assert_eq!(out, m.gather_patches(&patches, dim));
     }
 
     #[test]

@@ -28,7 +28,7 @@ use std::collections::HashMap;
 use anyhow::{bail, ensure, Context, Result};
 
 use super::{Backend, TensorRef};
-use crate::quant::QuantParams;
+use crate::quant::{PrecisionTier, QuantParams};
 use crate::util::rng::Rng;
 use crate::vit::{MgnetConfig, VitConfig, VitVariant};
 
@@ -129,7 +129,12 @@ fn artifact_seed(base: u64, name: &str) -> u64 {
 
 /// Fake-quantize a buffer in place on its own max-abs 8-bit (or `bits`)
 /// grid — the DAC boundary every operand crosses before an optical matmul.
+/// `bits >= 32` is the fp-reference sentinel ([`PrecisionTier::Fp32`]):
+/// no converter grid at all, the buffer passes through untouched.
 fn quantize_acts(buf: &mut [f32], bits: u32) {
+    if bits >= 32 {
+        return;
+    }
     QuantParams::calibrate(buf, bits).fake_quantize_slice(buf);
 }
 
@@ -418,11 +423,24 @@ impl HostVit {
     }
 }
 
+/// One loaded artifact with its per-tier reference modules, indexed by
+/// [`PrecisionTier::index`]. Every tier shares the same weight seed — the
+/// tiers are the *same* model seen through different converter grids, which
+/// is exactly what makes the per-tier output-agreement deltas meaningful.
+/// The INT8 slot materializes at [`Backend::load`] time (the untiered
+/// path); INT4 and the fp32 agreement reference build lazily on first
+/// tiered execution, so single-precision serving pays nothing for them.
+#[derive(Debug)]
+struct HostModule {
+    spec: ArtifactSpec,
+    tiers: [Option<HostVit>; 3],
+}
+
 /// Pure-Rust reference implementation of [`Backend`]. See the module docs.
 #[derive(Debug)]
 pub struct HostBackend {
     cfg: HostConfig,
-    modules: HashMap<String, (ArtifactSpec, HostVit)>,
+    modules: HashMap<String, HostModule>,
 }
 
 impl HostBackend {
@@ -434,22 +452,58 @@ impl HostBackend {
         &self.cfg
     }
 
-    fn build_module(&self, name: &str) -> Result<(ArtifactSpec, HostVit)> {
-        let spec = parse_artifact(name)?;
+    /// Converter bits a tier runs at: INT4 is 4, INT8 is the backend's
+    /// configured `bits` (so the tiered INT8 path stays bit-identical to
+    /// untiered execution even under a non-default `HostConfig::bits`),
+    /// and Fp32 is the ≥32 sentinel [`quantize_acts`] passes through.
+    fn tier_bits(&self, tier: PrecisionTier) -> u32 {
+        match tier {
+            PrecisionTier::Int4 => 4,
+            PrecisionTier::Int8 => self.cfg.bits,
+            PrecisionTier::Fp32 => 32,
+        }
+    }
+
+    fn build_vit(&self, name: &str, spec: ArtifactSpec, bits: u32) -> HostVit {
         let seed = artifact_seed(self.cfg.seed, name);
-        let vit = match spec {
+        match spec {
             ArtifactSpec::Mgnet { image_size } => {
                 // The MGNet is a one-block ViT whose head scores every
                 // patch of the full grid from the cls token.
                 let cfg = MgnetConfig::classification(image_size).as_vit();
-                HostVit::build(cfg, cfg.seq_len(), seed, self.cfg.depth_limit, self.cfg.bits)
+                HostVit::build(cfg, cfg.seq_len(), seed, self.cfg.depth_limit, bits)
             }
             ArtifactSpec::Backbone { variant, image_size, bucket } => {
                 let cfg = VitConfig::variant(variant, image_size, self.cfg.num_classes);
-                HostVit::build(cfg, bucket + 1, seed, self.cfg.depth_limit, self.cfg.bits)
+                HostVit::build(cfg, bucket + 1, seed, self.cfg.depth_limit, bits)
             }
-        };
-        Ok((spec, vit))
+        }
+    }
+
+    /// Make sure `artifact` has its `tier` module materialized.
+    fn ensure_tier(&mut self, artifact: &str, tier: PrecisionTier) -> Result<()> {
+        if !self.modules.contains_key(artifact) {
+            let spec = parse_artifact(artifact)?;
+            self.modules
+                .insert(artifact.to_string(), HostModule { spec, tiers: [None, None, None] });
+        }
+        let spec = self.modules[artifact].spec;
+        if self.modules[artifact].tiers[tier.index()].is_none() {
+            let vit = self.build_vit(artifact, spec, self.tier_bits(tier));
+            self.modules.get_mut(artifact).expect("just inserted").tiers[tier.index()] = Some(vit);
+        }
+        Ok(())
+    }
+
+    /// Resolve `(spec, vit)` for a tier, building it on first use.
+    fn module_mut(
+        &mut self,
+        artifact: &str,
+        tier: PrecisionTier,
+    ) -> Result<(ArtifactSpec, &mut HostVit)> {
+        self.ensure_tier(artifact, tier)?;
+        let m = self.modules.get_mut(artifact).expect("just ensured");
+        Ok((m.spec, m.tiers[tier.index()].as_mut().expect("just ensured")))
     }
 }
 
@@ -510,12 +564,7 @@ impl Backend for HostBackend {
     }
 
     fn load(&mut self, artifact: &str) -> Result<()> {
-        if self.modules.contains_key(artifact) {
-            return Ok(());
-        }
-        let module = self.build_module(artifact)?;
-        self.modules.insert(artifact.to_string(), module);
-        Ok(())
+        self.ensure_tier(artifact, PrecisionTier::Int8)
     }
 
     fn is_loaded(&self, artifact: &str) -> bool {
@@ -523,9 +572,8 @@ impl Backend for HostBackend {
     }
 
     fn execute(&mut self, artifact: &str, inputs: &[TensorRef<'_>]) -> Result<Vec<Vec<f32>>> {
-        self.load(artifact)?;
-        let (spec, vit) = self.modules.get_mut(artifact).expect("just loaded");
-        run_artifact(spec, vit, artifact, inputs)
+        let (spec, vit) = self.module_mut(artifact, PrecisionTier::Int8)?;
+        run_artifact(&spec, vit, artifact, inputs)
     }
 
     /// Native batched execution: the module (and its preallocated scratch)
@@ -539,9 +587,23 @@ impl Backend for HostBackend {
         artifact: &str,
         batch: &[&[TensorRef<'_>]],
     ) -> Result<Vec<Vec<Vec<f32>>>> {
-        self.load(artifact)?;
-        let (spec, vit) = self.modules.get_mut(artifact).expect("just loaded");
-        batch.iter().map(|inputs| run_artifact(spec, vit, artifact, inputs)).collect()
+        self.execute_batch_tiered(artifact, batch, PrecisionTier::Int8)
+    }
+
+    /// Tiered batched execution: same discipline as `execute_batch`, over
+    /// the tier's own quantized module (same weight seed, different
+    /// converter grid). INT8 is bitwise the untiered path; INT4 re-grids
+    /// weights and matmul-boundary activations to 4 bits; Fp32 bypasses
+    /// fake-quantization entirely (the electronic reference the agreement
+    /// deltas compare against).
+    fn execute_batch_tiered(
+        &mut self,
+        artifact: &str,
+        batch: &[&[TensorRef<'_>]],
+        tier: PrecisionTier,
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        let (spec, vit) = self.module_mut(artifact, tier)?;
+        batch.iter().map(|inputs| run_artifact(&spec, vit, artifact, inputs)).collect()
     }
 }
 
@@ -660,6 +722,61 @@ mod tests {
         let short = [TensorRef::new(&xa, &dims)];
         let bad: Vec<&[TensorRef<'_>]> = vec![&fa, &short];
         assert!(b.execute_batch("vit_tiny_32_n2", &bad).is_err());
+    }
+
+    #[test]
+    fn tiered_int8_is_bitwise_the_untiered_path() {
+        let x = patches(2, |i| (i % 13) as f32 / 13.0);
+        let dims = [2i64, PD as i64];
+        let vdims = [2i64];
+        let pos = [0.0f32, 3.0];
+        let valid = [1.0f32, 1.0];
+        let f =
+            [TensorRef::new(&x, &dims), TensorRef::new(&pos, &vdims), TensorRef::new(&valid, &vdims)];
+        let batch: Vec<&[TensorRef<'_>]> = vec![&f];
+        let mut b = HostBackend::new(cfg1());
+        let untiered = b.execute_batch("vit_tiny_32_n2", &batch).expect("untiered");
+        let tiered = b
+            .execute_batch_tiered("vit_tiny_32_n2", &batch, PrecisionTier::Int8)
+            .expect("tiered int8");
+        assert_eq!(untiered, tiered, "INT8 tier must be bitwise the untiered path");
+    }
+
+    #[test]
+    fn tiers_share_weights_but_differ_in_grid() {
+        let x = patches(2, |i| (i % 13) as f32 / 13.0);
+        let dims = [2i64, PD as i64];
+        let vdims = [2i64];
+        let pos = [0.0f32, 3.0];
+        let valid = [1.0f32, 1.0];
+        let f =
+            [TensorRef::new(&x, &dims), TensorRef::new(&pos, &vdims), TensorRef::new(&valid, &vdims)];
+        let batch: Vec<&[TensorRef<'_>]> = vec![&f];
+        let mut b = HostBackend::new(cfg1());
+        let mut by_tier = Vec::new();
+        for tier in PrecisionTier::ALL {
+            let out =
+                b.execute_batch_tiered("vit_tiny_32_n2", &batch, tier).expect("tiered exec");
+            assert_eq!(out[0][0].len(), cfg1().num_classes);
+            assert!(out[0][0].iter().all(|v| v.is_finite()), "{tier} logits must be finite");
+            // Tiered execution is pure, like everything else here.
+            let again =
+                b.execute_batch_tiered("vit_tiny_32_n2", &batch, tier).expect("tiered exec");
+            assert_eq!(out, again, "{tier} execution must be pure");
+            by_tier.push(out[0][0].clone());
+        }
+        assert_ne!(by_tier[0], by_tier[1], "4-bit grid must perturb the logits vs 8-bit");
+        assert_ne!(by_tier[1], by_tier[2], "fp32 reference must differ from the 8-bit grid");
+    }
+
+    #[test]
+    fn fp_sentinel_bypasses_activation_quantization() {
+        let mut q = [0.1f32, 0.33, -0.7];
+        let raw = q;
+        quantize_acts(&mut q, 32);
+        assert_eq!(q, raw, "bits >= 32 must leave the buffer untouched");
+        quantize_acts(&mut q, 4);
+        assert_ne!(q, raw, "a real converter grid must move off-grid values");
     }
 
     #[test]

@@ -52,6 +52,8 @@ pub use host::{parse_artifact, ArtifactSpec, HostBackend, HostConfig};
 pub use pjrt::PjrtBackend;
 pub use sim::SimBackend;
 
+use crate::quant::PrecisionTier;
+
 /// A host-side f32 tensor (row-major) with explicit dims.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
@@ -228,6 +230,24 @@ pub trait Backend {
         Ok(out)
     }
 
+    /// [`Backend::execute_batch`] at an explicit [`PrecisionTier`] — the
+    /// mixed-precision serving entry. The contract mirrors the batch one:
+    /// every frame in `batch` runs at `tier` (the micro-batcher groups
+    /// bucket×tier-major, so a 4-bit frame never rides an 8-bit group's
+    /// weight programming). The default ignores the tier and delegates to
+    /// [`Backend::execute_batch`] — correct for substrates with a single
+    /// physical precision (PJRT's compiled HLO, third-party backends);
+    /// the host and sim backends override it with per-tier quantized
+    /// reference modules.
+    fn execute_batch_tiered(
+        &mut self,
+        artifact: &str,
+        batch: &[&[TensorRef<'_>]],
+        _tier: PrecisionTier,
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        self.execute_batch(artifact, batch)
+    }
+
     /// Convenience: execute and return the single output.
     fn execute1(&mut self, artifact: &str, inputs: &[TensorRef<'_>]) -> Result<Vec<f32>> {
         let mut outs = self.execute(artifact, inputs)?;
@@ -252,6 +272,22 @@ pub trait Backend {
         _first_in_batch: bool,
     ) -> Option<ModeledStages> {
         None
+    }
+
+    /// [`Backend::modeled_stages_s`] at an explicit [`PrecisionTier`]:
+    /// lower-precision tiers stream fewer weight-programming bits into the
+    /// MR banks, so the batch-leader share of modeled latency shrinks with
+    /// the tier while follower frames are unchanged. The default ignores
+    /// the tier (single-precision substrates); the sim backend overrides
+    /// it with tier-scaled weight-streaming delay.
+    fn modeled_stages_s_tiered(
+        &mut self,
+        kept_patches: usize,
+        use_mask: bool,
+        first_in_batch: bool,
+        _tier: PrecisionTier,
+    ) -> Option<ModeledStages> {
+        self.modeled_stages_s(kept_patches, use_mask, first_in_batch)
     }
 
     /// Modeled end-to-end frame latency (seconds) at a kept-patch count —
@@ -511,6 +547,20 @@ impl Backend for AnyBackend {
         }
     }
 
+    fn execute_batch_tiered(
+        &mut self,
+        artifact: &str,
+        batch: &[&[TensorRef<'_>]],
+        tier: PrecisionTier,
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        match self {
+            #[cfg(feature = "pjrt")]
+            AnyBackend::Pjrt(b) => Backend::execute_batch_tiered(b, artifact, batch, tier),
+            AnyBackend::Host(b) => b.execute_batch_tiered(artifact, batch, tier),
+            AnyBackend::Sim(b) => b.execute_batch_tiered(artifact, batch, tier),
+        }
+    }
+
     fn modeled_stages_s(
         &mut self,
         kept_patches: usize,
@@ -522,6 +572,27 @@ impl Backend for AnyBackend {
             AnyBackend::Pjrt(b) => b.modeled_stages_s(kept_patches, use_mask, first_in_batch),
             AnyBackend::Host(b) => b.modeled_stages_s(kept_patches, use_mask, first_in_batch),
             AnyBackend::Sim(b) => b.modeled_stages_s(kept_patches, use_mask, first_in_batch),
+        }
+    }
+
+    fn modeled_stages_s_tiered(
+        &mut self,
+        kept_patches: usize,
+        use_mask: bool,
+        first_in_batch: bool,
+        tier: PrecisionTier,
+    ) -> Option<ModeledStages> {
+        match self {
+            #[cfg(feature = "pjrt")]
+            AnyBackend::Pjrt(b) => {
+                b.modeled_stages_s_tiered(kept_patches, use_mask, first_in_batch, tier)
+            }
+            AnyBackend::Host(b) => {
+                b.modeled_stages_s_tiered(kept_patches, use_mask, first_in_batch, tier)
+            }
+            AnyBackend::Sim(b) => {
+                b.modeled_stages_s_tiered(kept_patches, use_mask, first_in_batch, tier)
+            }
         }
     }
 
@@ -744,6 +815,24 @@ mod tests {
         // No simulated timing on the default hooks.
         assert_eq!(b.modeled_stages_s(4, true, true), None);
         assert_eq!(b.modeled_frame_latency_s(4, true), None);
+    }
+
+    /// The default tiered hooks ignore the tier and delegate, so a
+    /// single-precision third-party backend keeps working under the
+    /// mixed-precision coordinator unchanged.
+    #[test]
+    fn default_tiered_hooks_delegate_to_untiered() {
+        let mut b = EchoBackend { calls: 0 };
+        let x = [1.0f32, 2.0];
+        let dims = [2i64];
+        let fa = [TensorRef::new(&x, &dims)];
+        let batch: Vec<&[TensorRef<'_>]> = vec![&fa];
+        for tier in PrecisionTier::ALL {
+            let out = b.execute_batch_tiered("any", &batch, tier).expect("tiered batch");
+            assert_eq!(out, vec![vec![vec![1.0, 2.0]]]);
+            assert_eq!(b.modeled_stages_s_tiered(4, true, true, tier), None);
+        }
+        assert_eq!(b.calls, 3, "default tiered impl must loop execute per frame");
     }
 
     #[test]

@@ -49,6 +49,7 @@ use crate::coordinator::clock::Clock;
 use crate::cosim::QueueSim;
 use crate::energy::AcceleratorModel;
 use crate::photonics::{DegradationState, FaultSchedule};
+use crate::quant::PrecisionTier;
 use crate::util::rng::Rng;
 use crate::vit::{MgnetConfig, VitConfig, VitVariant};
 
@@ -129,12 +130,15 @@ pub struct SimBackend {
     /// Modeled MGNet front-end **service** latency (full grid; masked path
     /// only). Batch-independent: MGNet executes per frame at route time.
     mgnet_service: Option<f64>,
-    /// Modeled masked backbone **service** latency by kept-patch count
-    /// (index = kept). Service only — sound to cache; total latency adds
-    /// uncacheable queueing when the co-sim is armed.
-    masked_service: Vec<Option<StagePair>>,
-    /// Modeled unmasked full-grid **service** latency.
-    full_service: Option<StagePair>,
+    /// Modeled masked backbone **service** latency, one lane per
+    /// [`PrecisionTier`] (outer index = `tier.index()`), by kept-patch
+    /// count (inner index = kept). Service only — sound to cache; total
+    /// latency adds uncacheable queueing when the co-sim is armed. Tiers
+    /// differ only in the batch-leader weight-streaming share: fewer
+    /// converter bits stream fewer MR-programming bytes.
+    masked_service: [Vec<Option<StagePair>>; 3],
+    /// Modeled unmasked full-grid **service** latency, per tier.
+    full_service: [Option<StagePair>; 3],
     /// Degraded-optics simulation; `None` = ideal hardware (the default,
     /// and the mode every pre-existing modeled-latency equality holds in).
     faults: Option<WorkerFaultState>,
@@ -155,8 +159,8 @@ impl SimBackend {
             backbone: None,
             mgnet: None,
             mgnet_service: None,
-            masked_service: Vec::new(),
-            full_service: None,
+            masked_service: [Vec::new(), Vec::new(), Vec::new()],
+            full_service: [None; 3],
             faults: None,
             queueing: None,
         }
@@ -231,13 +235,22 @@ impl SimBackend {
         }
     }
 
-    /// Model one pass of `cfg` at `kept` patches: full latency for a
-    /// batch-first frame, and the follower latency with the weight-stream
-    /// share amortized away.
-    fn stage_pair(&self, cfg: &VitConfig, kept: usize) -> StagePair {
-        let first_s = self.model.frame_report("sim", cfg, kept, true).delay.total_s();
-        let follow_s = (first_s - self.model.weight_stream_delay_s(cfg, kept, true)).max(0.0);
-        StagePair { first_s, follow_s }
+    /// Model one pass of `cfg` at `kept` patches and `tier`: full latency
+    /// for a batch-first frame, and the follower latency with the
+    /// weight-stream share amortized away. The baseline delay schedule is
+    /// tier-independent (symbol rate is set by the optics, not the
+    /// converter width); only the leader's MR weight-streaming share
+    /// scales with the tier's bits. At INT8 the substitution
+    /// `base + (ws_tier - ws_int8)` adds exactly `0.0`, so the INT8 pair
+    /// is bit-identical to the historical untiered figures.
+    fn stage_pair(&self, cfg: &VitConfig, kept: usize, tier: PrecisionTier) -> StagePair {
+        let base_s = self.model.frame_report("sim", cfg, kept, true).delay.total_s();
+        let ws_int8 = self.model.weight_stream_delay_s(cfg, kept, true);
+        let ws_tier = self.model.weight_stream_delay_s_tiered(cfg, kept, true, tier);
+        StagePair {
+            first_s: (base_s + (ws_tier - ws_int8)).max(0.0),
+            follow_s: (base_s - ws_int8).max(0.0),
+        }
     }
 }
 
@@ -284,10 +297,22 @@ impl Backend for SimBackend {
         artifact: &str,
         batch: &[&[TensorRef<'_>]],
     ) -> Result<Vec<Vec<Vec<f32>>>> {
+        self.execute_batch_tiered(artifact, batch, PrecisionTier::Int8)
+    }
+
+    /// Tiered execution routes to the host backend's per-tier quantized
+    /// modules; fault perturbation applies on top regardless of tier (MR
+    /// drift afflicts the optics, not the converters).
+    fn execute_batch_tiered(
+        &mut self,
+        artifact: &str,
+        batch: &[&[TensorRef<'_>]],
+        tier: PrecisionTier,
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
         if !self.inner.is_loaded(artifact) {
             self.load(artifact)?;
         }
-        let mut out = self.inner.execute_batch(artifact, batch)?;
+        let mut out = self.inner.execute_batch_tiered(artifact, batch, tier)?;
         for frame in out.iter_mut() {
             self.perturb(frame);
         }
@@ -300,16 +325,27 @@ impl Backend for SimBackend {
         use_mask: bool,
         first_in_batch: bool,
     ) -> Option<ModeledStages> {
+        self.modeled_stages_s_tiered(kept_patches, use_mask, first_in_batch, PrecisionTier::Int8)
+    }
+
+    fn modeled_stages_s_tiered(
+        &mut self,
+        kept_patches: usize,
+        use_mask: bool,
+        first_in_batch: bool,
+        tier: PrecisionTier,
+    ) -> Option<ModeledStages> {
         let vit = self.backbone?;
         // Caches hold pristine-hardware figures; degradation inflates them
         // at return time so recalibration instantly restores the ideal
         // model (factor 1.0 when fault simulation is off).
         let k = self.latency_factor();
+        let ti = tier.index();
         if !use_mask {
-            if self.full_service.is_none() {
-                self.full_service = Some(self.stage_pair(&vit, vit.num_patches()));
+            if self.full_service[ti].is_none() {
+                self.full_service[ti] = Some(self.stage_pair(&vit, vit.num_patches(), tier));
             }
-            let full = self.full_service.unwrap();
+            let full = self.full_service[ti].unwrap();
             return Some(ModeledStages {
                 mgnet_s: 0.0,
                 backbone_s: full.pick(first_in_batch) * k,
@@ -318,18 +354,20 @@ impl Backend for SimBackend {
         }
         let mg = self.mgnet?;
         if self.mgnet_service.is_none() {
+            // The MGNet front end always runs at INT8 (mask quality gates
+            // everything downstream), so its service figure is tierless.
             let mg_vit = mg.as_vit();
             self.mgnet_service =
                 Some(self.model.frame_report("sim", &mg_vit, mg_vit.num_patches(), true).delay.total_s());
         }
         let kept = kept_patches.clamp(1, vit.num_patches());
-        if self.masked_service.len() <= kept {
-            self.masked_service.resize(kept + 1, None);
+        if self.masked_service[ti].len() <= kept {
+            self.masked_service[ti].resize(kept + 1, None);
         }
-        if self.masked_service[kept].is_none() {
-            self.masked_service[kept] = Some(self.stage_pair(&vit, kept));
+        if self.masked_service[ti][kept].is_none() {
+            self.masked_service[ti][kept] = Some(self.stage_pair(&vit, kept, tier));
         }
-        let backbone = self.masked_service[kept].unwrap();
+        let backbone = self.masked_service[ti][kept].unwrap();
         Some(ModeledStages {
             mgnet_s: self.mgnet_service.unwrap() * k,
             backbone_s: backbone.pick(first_in_batch) * k,
@@ -466,6 +504,40 @@ mod tests {
         let full_first = s.modeled_stages_s(4, false, true).unwrap();
         let full_follow = s.modeled_stages_s(4, false, false).unwrap();
         assert!(full_follow.backbone_s < full_first.backbone_s);
+    }
+
+    #[test]
+    fn tiered_latency_scales_only_the_leader_weight_streaming() {
+        let mut s = loaded_sim();
+        let model = AcceleratorModel::default();
+        let vit = VitConfig::variant(VitVariant::Tiny, 32, 10);
+        // INT8 tier is bit-identical to the untiered modeled figures.
+        let untiered = s.modeled_stages_s(2, true, true).expect("untiered");
+        let int8 = s.modeled_stages_s_tiered(2, true, true, PrecisionTier::Int8).expect("int8");
+        assert_eq!(untiered, int8, "INT8 tier must reuse the untiered figures bitwise");
+        // INT4 leaders stream half the MR-programming bytes; fp32 four
+        // times as many. Followers never pay weight streaming, so they
+        // are identical at every tier.
+        let int4 = s.modeled_stages_s_tiered(2, true, true, PrecisionTier::Int4).expect("int4");
+        let fp32 = s.modeled_stages_s_tiered(2, true, true, PrecisionTier::Fp32).expect("fp32");
+        assert!(int4.backbone_s < int8.backbone_s && int8.backbone_s < fp32.backbone_s);
+        assert_eq!(int4.mgnet_s, int8.mgnet_s, "MGNet stage is tierless (always INT8)");
+        let ws8 = model.weight_stream_delay_s(&vit, 2, true);
+        let ws4 = model.weight_stream_delay_s_tiered(&vit, 2, true, PrecisionTier::Int4);
+        let saving = int8.backbone_s - int4.backbone_s;
+        assert!(
+            (saving - (ws8 - ws4)).abs() <= ws8 * 1e-9,
+            "INT4 saving {saving} != weight-stream delta {}",
+            ws8 - ws4
+        );
+        for tier in PrecisionTier::ALL {
+            let follow = s.modeled_stages_s_tiered(2, true, false, tier).expect("follower");
+            assert_eq!(
+                follow.backbone_s,
+                s.modeled_stages_s(2, true, false).unwrap().backbone_s,
+                "followers must model identical latency at every tier"
+            );
+        }
     }
 
     #[test]

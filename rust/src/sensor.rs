@@ -83,6 +83,11 @@ pub struct Frame {
     pub label: usize,
     /// Monotone frame index within its sequence.
     pub index: u64,
+    /// Execution precision policy for this frame. Sensors emit the
+    /// default (fixed INT8); session submission re-stamps it with the
+    /// tenant's `SessionOptions::precision`, and `Auto` resolves to a
+    /// concrete tier in the pipeline once the ROI mask is known.
+    pub precision: crate::quant::PrecisionPolicy,
 }
 
 impl Frame {
@@ -229,7 +234,14 @@ impl VideoSource {
         let boxes = self.objects.iter().map(|o| o.bbox(size)).collect();
         let idx = self.frame_index;
         self.frame_index += 1;
-        Frame { pixels, size, boxes, label, index: idx }
+        Frame {
+            pixels,
+            size,
+            boxes,
+            label,
+            index: idx,
+            precision: crate::quant::PrecisionPolicy::default(),
+        }
     }
 }
 

@@ -12,8 +12,10 @@
 
 use optovit::coordinator::pipeline::FrameScratch;
 use optovit::coordinator::BucketRouter;
+use optovit::roi::PatchMask;
 use optovit::sensor::VideoSource;
 use optovit::util::bench::{count_allocations, CountingAlloc};
+use optovit::util::rng::Rng;
 
 #[global_allocator]
 static ALLOC: CountingAlloc = CountingAlloc;
@@ -36,6 +38,11 @@ fn steady_state_host_stages_do_not_allocate() {
     let clamped = BucketRouter::new(vec![9, 18]);
     let mut scratch = FrameScratch::new(36, PATCH_DIM, 36);
     let mut scores = vec![0.0f32; 36];
+    // The masked gather path (`gather_patches_into`) must also be
+    // alloc-free once its destination buffer is warm: the old
+    // implementation leaked a fresh index Vec per call.
+    let mask = PatchMask::random(6, 0.4, &mut Rng::new(7));
+    let mut gathered = Vec::new();
 
     // Warm-up frame: buffers reach steady-state capacity.
     let warm = src.next_frame();
@@ -45,6 +52,7 @@ fn steady_state_host_stages_do_not_allocate() {
     scratch.stage_route(&router, PATCH_DIM);
     scratch.stage_mask_full(6);
     scratch.stage_route(&clamped, PATCH_DIM);
+    mask.gather_patches_into(scratch.patches(), PATCH_DIM, &mut gathered);
 
     for _ in 0..5 {
         let frame = src.next_frame();
@@ -59,6 +67,9 @@ fn steady_state_host_stages_do_not_allocate() {
             scratch.stage_mask_full(6);
             let b2 = scratch.stage_route(&clamped, PATCH_DIM);
             std::hint::black_box(scratch.valid(b2).len());
+            // Masked gather into the warmed caller buffer.
+            mask.gather_patches_into(scratch.patches(), PATCH_DIM, &mut gathered);
+            std::hint::black_box(gathered.len());
         });
         assert_eq!(allocs, 0, "steady-state hot path touched the heap");
     }

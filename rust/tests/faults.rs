@@ -155,6 +155,8 @@ impl FaultableWorker {
             latency_s: 1e-4,
             modeled_queueing_s: 0.0,
             batch_size,
+            tier: optovit::quant::PrecisionTier::Int8,
+            fp32_agreement: None,
         }
     }
 }

@@ -1,0 +1,307 @@
+//! Deterministic mixed-precision serving gate — the tier semantics the
+//! precision tentpole promises, proven end-to-end with **exact** (not
+//! threshold-fuzzy) expectations:
+//!
+//! 1. fixed-tier tenants beside an `Auto` tenant on one manual-clock
+//!    server: every session's `tier_frames` is exactly its submission
+//!    count in exactly its tier's slot, the live (`stats()`) and terminal
+//!    (`shutdown()`) aggregates equal the element-wise per-session sums,
+//!    modeled energy/frame orders strictly `int4 < int8 < fp32` on
+//!    identical frame content, and fp32 agreement accounting stays inside
+//!    its bounds (`tier_agree[i] <= tier_ref_frames[i]`, ratio in 0..=1,
+//!    no probes charged to the fp32 tier itself);
+//! 2. `Auto` resolves from ROI density end-to-end through the streaming
+//!    `serve` path: an all-kept mask (`region_threshold` 0) serves every
+//!    frame at INT8, a best-patch-fallback mask (`region_threshold` 1)
+//!    serves every frame at INT4 — and that INT4 run is strictly cheaper
+//!    per frame than uniform INT8 over the same frames;
+//! 3. micro-batch groups are tier-separated: a worker group holding two
+//!    INT4 and two INT8 frames of identical content (same bucket) must
+//!    execute as two single-tier sub-batches of 2, never one mixed batch
+//!    of 4.
+
+use std::time::Duration;
+
+use optovit::coordinator::batcher::BatchPolicy;
+use optovit::coordinator::clock::Clock;
+use optovit::coordinator::engine::EngineConfig;
+use optovit::coordinator::pipeline::{serve, Pipeline, PipelineConfig, ServeOptions};
+use optovit::coordinator::server::{Server, SessionOptions};
+use optovit::quant::{PrecisionPolicy, PrecisionTier};
+use optovit::runtime::{HostBackend, HostConfig};
+use optovit::sensor::{Frame, VideoSource};
+
+const PATCH_PX: usize = 16;
+
+/// One encoder block keeps debug-mode host forwards cheap while
+/// exercising the full tiered dataflow (embed → attention → FFN → head
+/// per tier, plus the fp32 reference probe).
+fn host_cfg() -> HostConfig {
+    HostConfig { depth_limit: Some(1), ..HostConfig::default() }
+}
+
+/// One Pipeline-backed worker on a frozen manual clock: groups flush by
+/// count only, so tier accounting never depends on wall time. The
+/// pipeline workers (not echo mocks) are the point — tier resolution,
+/// tiered execution, and the fp32 probe all run for real.
+fn manual_pipeline_server(pipe_cfg: PipelineConfig, batch: BatchPolicy) -> Server {
+    let (clock, _manual) = Clock::manual();
+    let mut cfg = EngineConfig::new(1, PATCH_PX, 96);
+    cfg.clock = clock;
+    cfg.batch = batch;
+    // Manual time never advances in these tests; generous bounds keep
+    // the watchdogs out of the way.
+    cfg.warmup_timeout_s = 24.0 * 3600.0;
+    cfg.stall_timeout_s = 24.0 * 3600.0;
+    let server = Server::start(
+        move |_wid| Pipeline::with_backend(pipe_cfg.clone(), HostBackend::new(host_cfg())),
+        cfg,
+    )
+    .expect("server");
+    server.wait_ready(Duration::from_secs(3600)).expect("workers warm");
+    server
+}
+
+/// Identical frame content with distinct indices: every submission
+/// resolves the same mask and routes to the same bucket, so tier is the
+/// *only* thing that differs between tenants.
+fn frames(n: u64) -> Vec<Frame> {
+    let template = VideoSource::new(96, 2, 42).next_frame();
+    (0..n)
+        .map(|i| {
+            let mut f = template.clone();
+            f.index = i;
+            f
+        })
+        .collect()
+}
+
+fn fixed(tier: PrecisionTier) -> PrecisionPolicy {
+    PrecisionPolicy::Fixed(tier)
+}
+
+/// Gate 1: exact per-tier accounting across fixed-tier tenants and an
+/// `Auto` tenant, aggregate == element-wise session sum (live and
+/// terminal), strict per-frame energy ordering, and agreement bounds.
+#[test]
+fn fixed_and_auto_tenants_account_exactly_per_tier() {
+    let mut pipe_cfg = PipelineConfig::tiny_96();
+    // All patches kept → `Auto` sees kept_frac 1.0 and must resolve INT8
+    // for every frame: the Auto tenant's tier counts become exact.
+    pipe_cfg.region_threshold = 0.0;
+    pipe_cfg.fp32_reference = true;
+    let server = manual_pipeline_server(pipe_cfg, BatchPolicy::per_frame());
+
+    let counts: [u64; 4] = [3, 4, 2, 5];
+    let opts = [
+        ("int4", fixed(PrecisionTier::Int4)),
+        ("int8", fixed(PrecisionTier::Int8)),
+        ("fp32", fixed(PrecisionTier::Fp32)),
+        ("auto", PrecisionPolicy::Auto),
+    ];
+    let mut sessions = Vec::new();
+    for (i, (name, policy)) in opts.iter().enumerate() {
+        let mut s = server
+            .session(SessionOptions::named(name).with_queue_depth(8).with_precision(*policy))
+            .expect("session");
+        for f in frames(counts[i]) {
+            s.submit(f).expect("submit");
+        }
+        s.close();
+        sessions.push(s);
+    }
+
+    // Drain each tenant, recording the served tier and modeled energy of
+    // every result.
+    let mut energy = [f64::NAN; 4];
+    let expect_tier =
+        [PrecisionTier::Int4, PrecisionTier::Int8, PrecisionTier::Fp32, PrecisionTier::Int8];
+    for (i, s) in sessions.iter_mut().enumerate() {
+        let mut served = 0u64;
+        for item in &mut *s {
+            let r = item.expect("result");
+            assert_eq!(
+                r.tier, expect_tier[i],
+                "tenant {} must serve every frame at its resolved tier",
+                opts[i].0
+            );
+            // Identical frames at one tier and batch 1: identical energy.
+            if served == 0 {
+                energy[i] = r.modeled_energy_j;
+            } else {
+                assert!(
+                    (r.modeled_energy_j - energy[i]).abs() < 1e-18,
+                    "identical frames at one tier must charge identical energy"
+                );
+            }
+            served += 1;
+        }
+        assert_eq!(served, counts[i]);
+    }
+
+    // Strict tier economics on identical content: every conversion and
+    // weight-programming share scales with the tier, so the ordering has
+    // no ties.
+    assert!(
+        energy[0] < energy[1] && energy[1] < energy[2],
+        "modeled energy/frame must order strictly int4 < int8 < fp32, got {energy:?}"
+    );
+
+    // Exact per-session tier accounting, probes included: every integer-
+    // tier frame is probed (fp32_reference is on), the fp32 tenant never
+    // is (it *is* the reference).
+    let expect_frames =
+        [[counts[0], 0, 0], [0, counts[1], 0], [0, 0, counts[2]], [0, counts[3], 0]];
+    let expect_refs = [[counts[0], 0, 0], [0, counts[1], 0], [0, 0, 0], [0, counts[3], 0]];
+    for (i, s) in sessions.iter().enumerate() {
+        let report = s.report();
+        assert_eq!(report.tier_frames, expect_frames[i], "tenant {} tier_frames", opts[i].0);
+        assert_eq!(report.tier_ref_frames, expect_refs[i], "tenant {} tier_ref_frames", opts[i].0);
+        for t in 0..3 {
+            assert!(
+                report.tier_agree[t] <= report.tier_ref_frames[t],
+                "agreement can never exceed the probe count"
+            );
+        }
+        for tier in PrecisionTier::ALL {
+            if let Some(a) = report.tier_agreement(tier) {
+                assert!((0.0..=1.0).contains(&a), "agreement ratio out of bounds: {a}");
+            }
+        }
+        if report.tier_ref_frames == [0, 0, 0] {
+            assert_eq!(
+                report.tier_agreement(expect_tier[i]),
+                None,
+                "unprobed tiers must report no agreement, not a fake 0 or 1"
+            );
+        }
+    }
+
+    // Live aggregate == element-wise per-session sum.
+    let stats = server.stats().expect("stats");
+    assert_eq!(stats.sessions.len(), 4);
+    let mut sum_frames = [0u64; 3];
+    let mut sum_refs = [0u64; 3];
+    let mut sum_agree = [0u64; 3];
+    for s in &stats.sessions {
+        for t in 0..3 {
+            sum_frames[t] += s.report.tier_frames[t];
+            sum_refs[t] += s.report.tier_ref_frames[t];
+            sum_agree[t] += s.report.tier_agree[t];
+        }
+    }
+    assert_eq!(stats.aggregate.tier_frames, sum_frames, "aggregate tier_frames != session sum");
+    assert_eq!(stats.aggregate.tier_ref_frames, sum_refs);
+    assert_eq!(stats.aggregate.tier_agree, sum_agree);
+    assert_eq!(sum_frames, [counts[0], counts[1] + counts[3], counts[2]]);
+    assert_eq!(
+        sum_frames.iter().sum::<u64>(),
+        stats.aggregate.frames,
+        "tier_frames must partition the served frames"
+    );
+
+    // Terminal aggregate carries the same exact arrays.
+    drop(sessions);
+    let (agg, _metrics) = server.shutdown().expect("shutdown");
+    assert_eq!(agg.tier_frames, sum_frames);
+    assert_eq!(agg.tier_ref_frames, sum_refs);
+    assert_eq!(agg.tier_agree, sum_agree);
+}
+
+/// Gate 2: `Auto` follows ROI density through the streaming `serve`
+/// path, and the background-heavy INT4 resolution is strictly cheaper
+/// than uniform INT8 over the very same frames.
+#[test]
+fn auto_tier_follows_roi_density_and_beats_uniform_int8() {
+    const FRAMES: u64 = 6;
+    let run = |threshold: f32, policy: PrecisionPolicy| {
+        let mut cfg = PipelineConfig::tiny_96();
+        cfg.region_threshold = threshold;
+        let mut pipeline =
+            Pipeline::with_backend(cfg, HostBackend::new(host_cfg())).expect("pipeline");
+        let opts = ServeOptions { precision: policy, ..ServeOptions::frames(FRAMES) };
+        serve(&mut pipeline, &opts).expect("serve").finish().expect("finish")
+    };
+
+    // Threshold 0: every patch kept, kept_frac 1.0 ≥ AUTO_ROI_THRESHOLD
+    // → INT8 for every frame.
+    let dense = run(0.0, PrecisionPolicy::Auto);
+    assert_eq!(dense.tier_frames, [0, FRAMES, 0], "all-kept masks must serve INT8");
+
+    // Threshold 1: sigmoid scores never reach 1.0, so the mask is empty
+    // and the router's best-patch fallback keeps exactly one patch —
+    // kept_frac 1/36 < AUTO_ROI_THRESHOLD → INT4 for every frame.
+    let sparse = run(1.0, PrecisionPolicy::Auto);
+    assert_eq!(sparse.tier_frames, [FRAMES, 0, 0], "background-heavy masks must serve INT4");
+
+    // Same frames, same masks, uniform INT8 instead: `Auto` must be
+    // strictly cheaper per frame — that saving is the tentpole's claim.
+    let uniform = run(1.0, fixed(PrecisionTier::Int8));
+    assert_eq!(uniform.tier_frames, [0, FRAMES, 0]);
+    assert!(
+        sparse.mean_energy_j < uniform.mean_energy_j,
+        "auto (int4) must be strictly cheaper than uniform int8: {} vs {}",
+        sparse.mean_energy_j,
+        uniform.mean_energy_j
+    );
+}
+
+/// Gate 3: tier separation inside a micro-batch group. Two INT4 and two
+/// INT8 frames of identical content share one worker group of 4 (frozen
+/// clock, `max_batch` 4 — the group can only flush by count), and the
+/// pipeline must execute them as two single-tier sub-batches of 2.
+#[test]
+fn worker_groups_split_by_tier_into_single_tier_batches() {
+    let mut pipe_cfg = PipelineConfig::tiny_96();
+    pipe_cfg.region_threshold = 0.0;
+    let server =
+        manual_pipeline_server(pipe_cfg, BatchPolicy::batched(4, Duration::from_secs(3600)));
+
+    let mut int4 = server
+        .session(
+            SessionOptions::named("int4")
+                .with_queue_depth(8)
+                .with_precision(fixed(PrecisionTier::Int4)),
+        )
+        .expect("int4 session");
+    let mut int8 = server
+        .session(
+            SessionOptions::named("int8")
+                .with_queue_depth(8)
+                .with_precision(fixed(PrecisionTier::Int8)),
+        )
+        .expect("int8 session");
+
+    // All four frames land in one bucket; with the clock frozen the
+    // worker tops its group up to the full max_batch before executing.
+    for f in frames(2) {
+        int4.submit(f).expect("int4 submit");
+    }
+    for f in frames(2) {
+        int8.submit(f).expect("int8 submit");
+    }
+    int4.close();
+    int8.close();
+
+    for (sess, tier) in [(&mut int4, PrecisionTier::Int4), (&mut int8, PrecisionTier::Int8)] {
+        for item in &mut *sess {
+            let r = item.expect("result");
+            assert_eq!(r.tier, tier);
+            assert_eq!(
+                r.batch_size, 2,
+                "a mixed-tier group of 4 must execute as single-tier sub-batches of 2"
+            );
+        }
+    }
+    let report4 = int4.report();
+    let report8 = int8.report();
+    assert_eq!(report4.tier_frames, [2, 0, 0]);
+    assert_eq!(report8.tier_frames, [0, 2, 0]);
+    assert!((report4.mean_batch - 2.0).abs() < 1e-12, "int4 mean_batch must be exactly 2");
+    assert!((report8.mean_batch - 2.0).abs() < 1e-12, "int8 mean_batch must be exactly 2");
+
+    drop(int4);
+    drop(int8);
+    let (agg, _metrics) = server.shutdown().expect("shutdown");
+    assert_eq!(agg.tier_frames, [2, 2, 0]);
+}

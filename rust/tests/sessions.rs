@@ -88,6 +88,8 @@ impl FrameWorker for SlowWorker {
             latency_s: self.delay.as_secs_f64(),
             modeled_queueing_s: 0.0,
             batch_size: 1,
+            tier: optovit::quant::PrecisionTier::Int8,
+            fp32_agreement: None,
         })
     }
 
@@ -224,6 +226,8 @@ impl FrameWorker for GateWorker {
             latency_s: 1e-4,
             modeled_queueing_s: 0.0,
             batch_size: 1,
+            tier: optovit::quant::PrecisionTier::Int8,
+            fp32_agreement: None,
         };
         self.done.send(frame.index).ok();
         Ok(result)

@@ -105,6 +105,8 @@ impl FrameWorker for GatedEchoWorker {
             latency_s: 1e-4,
             modeled_queueing_s: 0.0,
             batch_size: 1,
+            tier: optovit::quant::PrecisionTier::Int8,
+            fp32_agreement: None,
         })
     }
 

@@ -29,11 +29,13 @@
 //!    (the `HealthSlot` publication pair and the clock `Event`
 //!    generation counter) against real interleavings.
 //! 4. **accounting** (`accounting`): every `u64` counter field of
-//!    `ServeReport` (plus the summed `modeled_queueing_s`) must appear in
-//!    both the per-session accumulator path (`SessionAccum::to_report`)
-//!    and the terminal aggregate path (`reassembler_loop`) in
-//!    `coordinator/server.rs` — the "aggregate = exact per-session sum"
-//!    convention every serving PR asserts.
+//!    `ServeReport` — scalar `u64` and fixed-size `[u64; N]` counter
+//!    arrays (the per-tier tallies) alike, plus the summed
+//!    `modeled_queueing_s` — must appear in both the per-session
+//!    accumulator path (`SessionAccum::to_report`) and the terminal
+//!    aggregate path (`reassembler_loop`) in `coordinator/server.rs` —
+//!    the "aggregate = exact per-session sum" convention every serving
+//!    PR asserts.
 //!
 //! # Justification grammar
 //!
@@ -671,7 +673,19 @@ fn scan_file(rel: &Path, lines: &[LineView], violations: &mut Vec<Violation>) {
     }
 }
 
-/// `u64` fields of `pub struct ServeReport` in the lexed report file.
+/// Is `ty` a fixed-size `[u64; N]` counter array? Per-tier tallies are
+/// held to the same convention as scalar counters: the aggregate is the
+/// element-wise per-session sum.
+fn is_u64_array(ty: &str) -> bool {
+    ty.strip_prefix('[')
+        .and_then(|t| t.strip_suffix(']'))
+        .and_then(|t| t.split_once(';'))
+        .map(|(elem, len)| elem.trim() == "u64" && len.trim().parse::<usize>().is_ok())
+        .unwrap_or(false)
+}
+
+/// `u64` (scalar or `[u64; N]` array) fields of `pub struct ServeReport`
+/// in the lexed report file.
 fn serve_report_counters(lines: &[LineView]) -> Option<(usize, Vec<String>)> {
     let start = lines
         .iter()
@@ -684,7 +698,7 @@ fn serve_report_counters(lines: &[LineView]) -> Option<(usize, Vec<String>)> {
             if let Some((name, ty)) = rest.split_once(':') {
                 let ty = ty.trim().trim_end_matches(',');
                 let name = name.trim();
-                if ty == "u64" || SUMMED_F64_FIELDS.contains(&name) {
+                if ty == "u64" || is_u64_array(ty) || SUMMED_F64_FIELDS.contains(&name) {
                     fields.push(name.to_string());
                 }
             }
@@ -874,6 +888,17 @@ mod tests {
         let (allows, _) = parse_allows(" lint-allow(panic, fn): slot ids pool-validated");
         assert!(allows[0].fn_scope);
         assert_eq!(allows[0].rule, Rule::Panic);
+    }
+
+    #[test]
+    fn u64_array_counter_types() {
+        assert!(is_u64_array("[u64; 3]"));
+        assert!(is_u64_array("[ u64 ; 16 ]"));
+        assert!(!is_u64_array("u64"));
+        assert!(!is_u64_array("[f64; 3]"));
+        assert!(!is_u64_array("[u64]"));
+        assert!(!is_u64_array("Vec<u64>"));
+        assert!(!is_u64_array("[u64; N]"));
     }
 
     #[test]

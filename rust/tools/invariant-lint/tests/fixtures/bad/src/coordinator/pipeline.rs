@@ -4,16 +4,18 @@
 use std::time::Instant;
 
 /// Terminal per-run report — the accounting-rule anchor. `slo_miss` is
-/// deliberately dropped from the per-session path in `server.rs`.
+/// deliberately dropped from the per-session path in `server.rs`, and
+/// the `tier_frames` counter array from the aggregate path.
 pub struct ServeReport {
     pub frames: u64,
     pub slo_miss: u64,
+    pub tier_frames: [u64; 3],
     pub mean_batch: f64,
 }
 
 impl Default for ServeReport {
     fn default() -> Self {
-        ServeReport { frames: 0, slo_miss: 0, mean_batch: 0.0 }
+        ServeReport { frames: 0, slo_miss: 0, tier_frames: [0; 3], mean_batch: 0.0 }
     }
 }
 

@@ -30,13 +30,19 @@ impl SessionCore {
     }
 
     /// Per-session accounting path — `slo_miss` is missing (the seeded
-    /// accounting violation).
+    /// accounting violation). The per-tier counter array *is* populated
+    /// here; its seeded violation is on the aggregate path below.
     fn to_report(&self) -> ServeReport {
-        ServeReport { frames: self.frames.load(Ordering::Acquire), ..Default::default() }
+        ServeReport {
+            frames: self.frames.load(Ordering::Acquire),
+            tier_frames: [0; 3],
+            ..Default::default()
+        }
     }
 }
 
-/// Aggregate accounting path: sums every counter (correct).
+/// Aggregate accounting path: sums every scalar counter but drops the
+/// `[u64; 3]` per-tier array (the seeded array-counter violation).
 fn reassembler_loop(sessions: &[SessionCore]) -> ServeReport {
     let mut total = ServeReport::default();
     for s in sessions.iter() {

@@ -1,17 +1,19 @@
 //! Fixture: the same miniature pipeline with every violation repaired —
 //! the linter must exit clean on this tree.
 
-/// Terminal per-run report — the accounting-rule anchor; both counters
-/// appear in both accounting paths in `server.rs`.
+/// Terminal per-run report — the accounting-rule anchor; every counter
+/// (scalar and the `[u64; 3]` per-tier array) appears in both accounting
+/// paths in `server.rs`.
 pub struct ServeReport {
     pub frames: u64,
     pub slo_miss: u64,
+    pub tier_frames: [u64; 3],
     pub mean_batch: f64,
 }
 
 impl Default for ServeReport {
     fn default() -> Self {
-        ServeReport { frames: 0, slo_miss: 0, mean_batch: 0.0 }
+        ServeReport { frames: 0, slo_miss: 0, tier_frames: [0; 3], mean_batch: 0.0 }
     }
 }
 

@@ -25,22 +25,29 @@ impl SessionCore {
         lanes[idx] // lint-allow(panic): idx is produced by enumerate() over this slice
     }
 
-    /// Per-session accounting path: every `ServeReport` counter appears.
+    /// Per-session accounting path: every `ServeReport` counter appears,
+    /// the per-tier array included.
     fn to_report(&self) -> ServeReport {
         ServeReport {
             frames: self.frames.load(Ordering::Acquire),
             slo_miss: self.slo_miss.load(Ordering::Acquire),
+            tier_frames: [0; 3],
             mean_batch: 0.0,
         }
     }
 }
 
-/// Aggregate accounting path: sums every counter.
+/// Aggregate accounting path: sums every counter, element-wise for the
+/// per-tier array.
 fn reassembler_loop(sessions: &[SessionCore]) -> ServeReport {
     let mut total = ServeReport::default();
     for s in sessions.iter() {
         total.frames += s.frames.load(Ordering::Acquire);
         total.slo_miss += s.slo_miss.load(Ordering::Acquire);
+        let tiers = s.to_report().tier_frames;
+        for (t, v) in total.tier_frames.iter_mut().zip(tiers) {
+            *t += v;
+        }
     }
     total
 }

@@ -2,8 +2,9 @@
 //!
 //! `fixtures/bad` plants one of everything — a clock-seam escape, an
 //! untagged unwrap + slice index, untagged and mis-tagged `Relaxed`
-//! sites, and a `ServeReport` counter dropped from the per-session
-//! accounting path — and this test pins the scanner to the **exact**
+//! sites, a scalar `ServeReport` counter dropped from the per-session
+//! accounting path, and a `[u64; 3]` per-tier counter array dropped
+//! from the aggregate path — and this test pins the scanner to the **exact**
 //! finding set (file, line, rule), so both false negatives (a seeded
 //! violation slips through) and false positives (the count grows) fail.
 //! `fixtures/clean` is the repaired twin and must scan to zero, the same
@@ -28,14 +29,15 @@ fn bad_tree_yields_exactly_the_seeded_findings() {
         .map(|v| (v.file.to_string_lossy().replace('\\', "/"), v.line, v.rule))
         .collect();
     let expected: Vec<(String, usize, Rule)> = [
-        ("coordinator/pipeline.rs", 8, Rule::Accounting), // slo_miss off the per-session path
-        ("coordinator/pipeline.rs", 22, Rule::Clock),     // Instant::now()
-        ("coordinator/pipeline.rs", 27, Rule::Panic),     // frames[0]
-        ("coordinator/pipeline.rs", 32, Rule::Panic),     // v.unwrap()
+        ("coordinator/pipeline.rs", 9, Rule::Accounting), // slo_miss off the per-session path
+        ("coordinator/pipeline.rs", 9, Rule::Accounting), // tier_frames array off the aggregate path
+        ("coordinator/pipeline.rs", 24, Rule::Clock),     // Instant::now()
+        ("coordinator/pipeline.rs", 29, Rule::Panic),     // frames[0]
+        ("coordinator/pipeline.rs", 34, Rule::Panic),     // v.unwrap()
         ("coordinator/server.rs", 17, Rule::Relaxed),     // untagged fetch_add
         ("coordinator/server.rs", 23, Rule::Accounting),  // reason-less relaxed-ok tag
         ("coordinator/server.rs", 24, Rule::Relaxed),     // the tag granted nothing
-        ("coordinator/server.rs", 47, Rule::Clock),       // thread::sleep
+        ("coordinator/server.rs", 53, Rule::Clock),       // thread::sleep
     ]
     .into_iter()
     .map(|(f, l, r)| (f.to_string(), l, r))
@@ -46,7 +48,7 @@ fn bad_tree_yields_exactly_the_seeded_findings() {
     assert_eq!(report.count(Rule::Clock), 2);
     assert_eq!(report.count(Rule::Panic), 2);
     assert_eq!(report.count(Rule::Relaxed), 2);
-    assert_eq!(report.count(Rule::Accounting), 2);
+    assert_eq!(report.count(Rule::Accounting), 3);
 }
 
 #[test]
@@ -56,6 +58,12 @@ fn bad_tree_messages_name_the_offense() {
     assert!(messages.iter().any(|m| m.contains("Instant::now")), "{messages:?}");
     assert!(messages.iter().any(|m| m.contains("thread::sleep")), "{messages:?}");
     assert!(messages.iter().any(|m| m.contains("slo_miss")), "{messages:?}");
+    // The `[u64; 3]` per-tier array is a counter too: dropping it from
+    // the aggregate path must be named in a finding.
+    assert!(
+        messages.iter().any(|m| m.contains("tier_frames") && m.contains("reassembler_loop")),
+        "{messages:?}"
+    );
     assert!(messages.iter().any(|m| m.contains("Ordering::Relaxed")), "{messages:?}");
 }
 
